@@ -1,0 +1,55 @@
+//! Analytic CTMC study (§3.3, Fig. 3 / Eq. 9) — simulation-free
+//! verification of Lemma 2 on the paper's system.
+//!
+//! Solves the balance equations exactly for several routing policies and
+//! compares the Eq.-9 throughput against (a) the Lemma-2 bound max X(S)
+//! and (b) the discrete-event simulation, per η.
+
+use hetsched::model::ctmc::{solve, BfRouting, CabRouting, JsqRouting, RandomRouting};
+use hetsched::policy::PolicyKind;
+use hetsched::report::Table;
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::workload;
+
+fn main() {
+    let mu = workload::paper_two_type_mu();
+    let mut t = Table::new(
+        "CTMC analysis (N = 12; exponential sizes)",
+        &["(N1,N2)", "X_max", "CAB ctmc", "BF ctmc", "JSQ ctmc", "RD ctmc", "RD sim", "ctmc-sim err"],
+    );
+    for eta in [0.25, 0.5, 0.75] {
+        let (n1, n2) = workload::split_populations(12, eta);
+        let cab = solve(&mu, n1, n2, &CabRouting::new(&mu, n1, n2).unwrap()).unwrap();
+        let bf = solve(&mu, n1, n2, &BfRouting::new(&mu)).unwrap();
+        let jsq = solve(&mu, n1, n2, &JsqRouting::new(&mu)).unwrap();
+        let rd = solve(&mu, n1, n2, &RandomRouting).unwrap();
+        // Lemma 2: analytic CAB == X_max; every routing ≤ X_max.
+        assert!((cab.throughput - cab.x_max).abs() < 1e-8);
+        assert!(bf.throughput <= cab.x_max + 1e-9);
+        assert!(jsq.throughput <= cab.x_max + 1e-9);
+        assert!(rd.throughput <= cab.x_max + 1e-9);
+        // Cross-check vs simulation on the irreducible RD chain
+        // (deterministic routings split into recurrent classes; see
+        // model::ctmc docs).
+        let mut cfg = SimConfig::paper_default(vec![n1, n2]);
+        cfg.dist = Distribution::Exponential;
+        cfg.measure = 50_000;
+        let net = ClosedNetwork::new(&mu, cfg).unwrap();
+        let sim = net.run(PolicyKind::Random.build().as_mut()).unwrap().throughput;
+        let err = (rd.throughput - sim).abs() / rd.throughput;
+        t.row(vec![
+            format!("({n1},{n2})"),
+            format!("{:.4}", cab.x_max),
+            format!("{:.4}", cab.throughput),
+            format!("{:.4}", bf.throughput),
+            format!("{:.4}", jsq.throughput),
+            format!("{:.4}", rd.throughput),
+            format!("{sim:.4}"),
+            format!("{:.2}%", 100.0 * err),
+        ]);
+        assert!(err < 0.03, "CTMC vs sim mismatch for RD: {err}");
+    }
+    t.print();
+    println!("ctmc_analysis: Lemma 2 verified analytically; CTMC matches simulation");
+}

@@ -1,0 +1,69 @@
+//! Figure 14 — algorithm runtime: GrIn vs SLSQP as the number of
+//! processor types grows (3 … 10).
+//!
+//! §6 methodology: only runs where both solvers land within 5% of each
+//! other's throughput are timed ("a more reliable runtime for both
+//! algorithms when they can deliver similar solutions"); 100 runs per
+//! size, averages reported.  Paper shape: GrIn up to 2× faster and
+//! flatter in the number of types.
+
+use std::time::Instant;
+
+use hetsched::cli::Args;
+use hetsched::policy::grin;
+use hetsched::report::Table;
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+use hetsched::solver::slsqp::Slsqp;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let runs: usize = args.get_parse("runs", 100).expect("--runs");
+    args.finish().expect("flags");
+
+    let mut t = Table::new(
+        format!("Fig 14: solver runtime (runs with ≤5% throughput gap, of {runs})"),
+        &["types (k=l)", "GrIn (µs)", "SLSQP (µs)", "speedup", "counted"],
+    );
+    let mut rng = Rng::new(0xF14);
+    for size in 3..=10usize {
+        let mut grin_ns = 0u128;
+        let mut slsqp_ns = 0u128;
+        let mut counted = 0u32;
+        for _ in 0..runs {
+            let mu = workload::random_mu(&mut rng, size, size, 0.5, 30.0).unwrap();
+            let pops = workload::random_populations(&mut rng, size, 8);
+
+            let t0 = Instant::now();
+            let g = grin::solve(&mu, &pops).unwrap();
+            let tg = t0.elapsed();
+            let t1 = Instant::now();
+            let s = Slsqp::default().solve(&mu, &pops).unwrap();
+            let ts = t1.elapsed();
+
+            // Paper's 5%-agreement filter.
+            let rel = (g.throughput - s.throughput).abs() / g.throughput.max(1e-9);
+            if rel <= 0.05 {
+                grin_ns += tg.as_nanos();
+                slsqp_ns += ts.as_nanos();
+                counted += 1;
+            }
+        }
+        if counted == 0 {
+            t.row(vec![format!("{size}x{size}"), "-".into(), "-".into(), "-".into(), "0".into()]);
+            continue;
+        }
+        let gu = grin_ns as f64 / counted as f64 / 1e3;
+        let su = slsqp_ns as f64 / counted as f64 / 1e3;
+        t.row(vec![
+            format!("{size}x{size}"),
+            format!("{gu:.1}"),
+            format!("{su:.1}"),
+            format!("{:.2}x", su / gu),
+            counted.to_string(),
+        ]);
+    }
+    t.print();
+    println!("fig14: paper shape — GrIn faster and more scalable in #types");
+}

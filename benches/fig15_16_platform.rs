@@ -1,0 +1,96 @@
+//! Figures 15–16 — experimental throughput of all five policies on the
+//! (emulated) CPU+GPU platform, plus the theoretical CAB line.
+//!
+//! §7 setup: N = 20 closed-loop benchmarks, FCFS device queues, η swept
+//! 0.1…0.9.  Fig. 15 is the P2-biased case (CAB = AF), Fig. 16 the
+//! general-symmetric case (CAB = BF).  Theory is Table-1's X_max computed
+//! from the *measured* rates, exactly as the paper overlays it.
+//!
+//! Flags: `--case p2_biased|general_symmetric` (default both),
+//! `--measure` completions per point (default 40), `--etas 0.2,0.5,0.8`.
+//! Requires `make artifacts`.
+
+use hetsched::cli::Args;
+use hetsched::model::throughput::x_max_theoretical;
+use hetsched::platform::bench_rig::{cases, run_platform, PlatformConfig};
+use hetsched::platform::{calibrate, measure_rates};
+use hetsched::policy::PolicyKind;
+use hetsched::report::Series;
+use hetsched::sim::workload;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let measure: u64 = args.get_parse("measure", 40).expect("--measure");
+    let only_case = args.get("case").map(str::to_string);
+    let etas: Vec<f64> = match args.get("etas") {
+        Some(list) => list.split(',').map(|s| s.parse().expect("--etas")).collect(),
+        None => vec![0.1, 0.3, 0.5, 0.7, 0.9],
+    };
+    args.finish().expect("flags");
+
+    let cal = match calibrate(5) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("fig15_16_platform: {e}\nrun `make artifacts` first");
+            std::process::exit(0);
+        }
+    };
+
+    let kinds = PolicyKind::five_two_type();
+    for (case_name, fig, devices) in [
+        ("p2_biased", "Fig 15", cases::p2_biased(&cal, 96)),
+        ("general_symmetric", "Fig 16", cases::general_symmetric(&cal, 96)),
+    ] {
+        if let Some(only) = &only_case {
+            if only != case_name {
+                continue;
+            }
+        }
+        eprintln!("{fig}: measuring rates ({case_name})...");
+        let rates = measure_rates(&devices, 3).expect("measurement");
+        let regime = rates.mu.classify().expect("regime");
+        let mut series: Vec<Series> =
+            kinds.iter().map(|k| Series::new(k.name())).collect();
+        let mut theory = Series::new("theory(CAB)");
+        for &eta in &etas {
+            let (n1, n2) = workload::split_populations(20, eta);
+            theory.push(eta, x_max_theoretical(&rates.mu, regime, n1, n2));
+            for (i, kind) in kinds.iter().enumerate() {
+                let cfg = PlatformConfig {
+                    devices: devices.clone(),
+                    populations: vec![n1, n2],
+                    warmup: 20,
+                    measure,
+                    seed: 0x156 + (eta * 10.0) as u64,
+                };
+                let mut p = kind.build();
+                let r = run_platform(&cfg, &rates, p.as_mut()).expect("platform run");
+                series[i].push(eta, r.throughput);
+                eprintln!(
+                    "  η={eta:.1} {}: {:.2} tasks/s",
+                    kind.name(),
+                    r.throughput
+                );
+            }
+        }
+        let mut all = series;
+        all.push(theory);
+        print!(
+            "{}",
+            Series::render_block(
+                &format!("{fig} ({case_name}, regime {}): experimental throughput", regime.name()),
+                "eta",
+                &all
+            )
+        );
+        // CAB vs LB improvement band (paper: 3.27–9.07× / 2.37–4.48×).
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for i in 0..all[0].points.len() {
+            let r = all[0].points[i].1 / all[4].points[i].1;
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        println!("{fig}: CAB vs LB improvement {lo:.2}x – {hi:.2}x\n");
+    }
+}

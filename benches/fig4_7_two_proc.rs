@@ -1,0 +1,85 @@
+//! Figures 4–7 — five policies × four metrics × nine η values, under the
+//! four task-size distributions (two-processor P1-biased system).
+//!
+//! Reproduces the §5 setup exactly: N = 20 programs, μ = [[20,15],[3,8]],
+//! PS processors, proportional power.  Prints one block per
+//! (distribution × metric): columns are policies, rows are η — the data
+//! behind each subplot.
+//!
+//! Flags: `--dist exp|pareto|uniform|const` to restrict (default: all),
+//! `--measure N` completions per point.
+
+use hetsched::cli::Args;
+use hetsched::policy::PolicyKind;
+use hetsched::report::Series;
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::workload;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let dists: Vec<Distribution> = match args.get("dist") {
+        Some(d) => vec![Distribution::parse(d).expect("--dist")],
+        None => Distribution::all().to_vec(),
+    };
+    let measure: u64 = args.get_parse("measure", 12_000).expect("--measure");
+    args.finish().expect("flags");
+
+    let mu = workload::paper_two_type_mu();
+    let kinds = PolicyKind::five_two_type();
+    let figure = |d: Distribution| match d {
+        Distribution::Exponential => "Fig 4",
+        Distribution::BoundedPareto { .. } => "Fig 5",
+        Distribution::Uniform => "Fig 6",
+        Distribution::Constant => "Fig 7",
+    };
+
+    for dist in dists {
+        // metric -> per-policy series
+        let mut x_s: Vec<Series> = kinds.iter().map(|k| Series::new(k.name())).collect();
+        let mut t_s = x_s.clone();
+        let mut edp_s = x_s.clone();
+        let mut little_s = x_s.clone();
+        for eta in workload::eta_grid() {
+            let (n1, n2) = workload::split_populations(20, eta);
+            for (i, kind) in kinds.iter().enumerate() {
+                let mut cfg = SimConfig::paper_default(vec![n1, n2]);
+                cfg.dist = dist;
+                cfg.measure = measure;
+                cfg.seed = 0xF1905 + (eta * 100.0) as u64;
+                let net = ClosedNetwork::new(&mu, cfg).unwrap();
+                let r = net.run(kind.build().as_mut()).unwrap();
+                x_s[i].push(eta, r.throughput);
+                t_s[i].push(eta, r.mean_response);
+                edp_s[i].push(eta, r.edp);
+                little_s[i].push(eta, r.little_product);
+            }
+        }
+        let f = figure(dist);
+        let d = dist.name();
+        print!("{}", Series::render_block(&format!("{f} ({d}): throughput X"), "eta", &x_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): mean response E[T]"), "eta", &t_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): EDP"), "eta", &edp_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): X·E[T] (≈N=20)"), "eta", &little_s));
+
+        // Paper-style summary: CAB improvement over LB across the sweep.
+        let (mut min_r, mut max_r) = (f64::INFINITY, 0.0f64);
+        for i in 0..x_s[0].points.len() {
+            let cab = x_s[0].points[i].1;
+            let lb = x_s[4].points[i].1;
+            let r = cab / lb;
+            min_r = min_r.min(r);
+            max_r = max_r.max(r);
+        }
+        println!("{f} ({d}): CAB vs LB throughput improvement: {min_r:.2}x – {max_r:.2}x");
+        let (mut min_e, mut max_e) = (f64::INFINITY, 0.0f64);
+        for i in 0..edp_s[0].points.len() {
+            let r = edp_s[4].points[i].1 / edp_s[0].points[i].1;
+            min_e = min_e.min(r);
+            max_e = max_e.max(r);
+        }
+        println!("{f} ({d}): CAB vs LB EDP improvement: {min_e:.2}x – {max_e:.2}x");
+        println!();
+    }
+}

@@ -1,0 +1,60 @@
+//! Figure 8 — theoretical vs simulated CAB throughput under the four
+//! task-size distributions.
+//!
+//! Theory is Eq. 16 (P1-biased S_max = (1, N2)); simulation is the closed
+//! network at N = 20 over the η grid.  The paper's claim: "almost
+//! identical", with visibly higher variance for bounded Pareto.
+
+use hetsched::cli::Args;
+use hetsched::model::affinity::Regime;
+use hetsched::model::throughput::x_max_theoretical;
+use hetsched::policy::PolicyKind;
+use hetsched::report::Series;
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::workload;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let measure: u64 = args.get_parse("measure", 20_000).expect("--measure");
+    args.finish().expect("flags");
+
+    let mu = workload::paper_two_type_mu();
+    let mut theory = Series::new("theory");
+    let mut sims: Vec<Series> = Distribution::all()
+        .iter()
+        .map(|d| Series::new(format!("sim-{}", d.name())))
+        .collect();
+    let mut worst = vec![0.0f64; 4];
+
+    for eta in workload::eta_grid() {
+        let (n1, n2) = workload::split_populations(20, eta);
+        let th = x_max_theoretical(&mu, Regime::P1Biased, n1, n2);
+        theory.push(eta, th);
+        for (i, dist) in Distribution::all().iter().enumerate() {
+            let mut cfg = SimConfig::paper_default(vec![n1, n2]);
+            cfg.dist = *dist;
+            cfg.measure = measure;
+            cfg.seed = 0xF18 + i as u64;
+            let net = ClosedNetwork::new(&mu, cfg).unwrap();
+            let r = net.run(PolicyKind::Cab.build().as_mut()).unwrap();
+            sims[i].push(eta, r.throughput);
+            worst[i] = worst[i].max((r.throughput - th).abs() / th);
+        }
+    }
+
+    let mut all = vec![theory];
+    all.extend(sims);
+    print!(
+        "{}",
+        Series::render_block("Fig 8: CAB theory vs simulation", "eta", &all)
+    );
+    for (i, dist) in Distribution::all().iter().enumerate() {
+        println!(
+            "fig8: {} worst relative deviation from theory: {:.2}%",
+            dist.name(),
+            100.0 * worst[i]
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! Figures 9–12 — six policies (GrIn, BF, RD, JSQ, LB, Opt) × four
+//! metrics over random 3×3 systems, under the four distributions.
+//!
+//! §6 setup: random μ entries and random N_i per sample; the paper shows
+//! 10 samples per figure and reports the 1000-run average GrIn-to-Opt gap
+//! of 1.6%.  `--samples` controls the displayed samples, `--gap-runs` the
+//! gap average (default 1000, the paper's number — solver-only, fast).
+
+use hetsched::cli::Args;
+use hetsched::policy::{grin, PolicyKind};
+use hetsched::report::Series;
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+use hetsched::solver::exhaustive::ExhaustiveSolver;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let samples: usize = args.get_parse("samples", 10).expect("--samples");
+    let gap_runs: usize = args.get_parse("gap-runs", 1000).expect("--gap-runs");
+    let measure: u64 = args.get_parse("measure", 8_000).expect("--measure");
+    let gap_only = args.switch("gap");
+    args.finish().expect("flags");
+
+    // ---- the 1.6% claim (solver-level, like the paper's average) ----
+    let mut rng = Rng::new(0x916);
+    let mut gap_sum = 0.0;
+    let mut gap_max = 0.0f64;
+    for _ in 0..gap_runs {
+        let mu = workload::random_mu(&mut rng, 3, 3, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, 3, 7);
+        let opt = ExhaustiveSolver.solve(&mu, &pops).unwrap();
+        let g = grin::solve(&mu, &pops).unwrap();
+        let gap = 1.0 - g.throughput / opt.throughput;
+        gap_sum += gap;
+        gap_max = gap_max.max(gap);
+    }
+    println!(
+        "fig9-12: GrIn-to-Opt gap over {gap_runs} random 3x3 systems: \
+         avg {:.2}% (paper: 1.6%), max {:.2}%",
+        100.0 * gap_sum / gap_runs as f64,
+        100.0 * gap_max
+    );
+    if gap_only {
+        return;
+    }
+
+    // ---- the figure blocks ----
+    let kinds = PolicyKind::six_multi_type();
+    let figure = |d: Distribution| match d {
+        Distribution::Exponential => "Fig 9",
+        Distribution::BoundedPareto { .. } => "Fig 10",
+        Distribution::Uniform => "Fig 11",
+        Distribution::Constant => "Fig 12",
+    };
+    // One random system per sample point (shared across distributions,
+    // like the paper's "10 random samples of a random μ matrix").
+    let mut rng = Rng::new(0x912);
+    let systems: Vec<_> = (0..samples)
+        .map(|_| {
+            let mu = workload::random_mu(&mut rng, 3, 3, 0.5, 30.0).unwrap();
+            let pops = workload::random_populations(&mut rng, 3, 7);
+            (mu, pops)
+        })
+        .collect();
+
+    for dist in Distribution::all() {
+        let mut x_s: Vec<Series> = kinds.iter().map(|k| Series::new(k.name())).collect();
+        let mut t_s = x_s.clone();
+        let mut edp_s = x_s.clone();
+        let mut little_s = x_s.clone();
+        for (sample, (mu, pops)) in systems.iter().enumerate() {
+            for (i, kind) in kinds.iter().enumerate() {
+                let mut cfg = SimConfig::paper_default(pops.clone());
+                cfg.dist = dist;
+                cfg.measure = measure;
+                cfg.seed = 0x1000 + sample as u64;
+                let net = ClosedNetwork::new(mu, cfg).unwrap();
+                let r = net.run(kind.build().as_mut()).unwrap();
+                let x = sample as f64;
+                x_s[i].push(x, r.throughput);
+                t_s[i].push(x, r.mean_response);
+                edp_s[i].push(x, r.edp);
+                little_s[i].push(x, r.little_product);
+            }
+        }
+        let f = figure(dist);
+        let d = dist.name();
+        print!("{}", Series::render_block(&format!("{f} ({d}): throughput X"), "sample", &x_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): mean response E[T]"), "sample", &t_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): EDP"), "sample", &edp_s));
+        print!("{}", Series::render_block(&format!("{f} ({d}): X·E[T] (≈N)"), "sample", &little_s));
+        println!();
+    }
+}

@@ -1,0 +1,153 @@
+//! §Perf — hot-path microbenchmarks feeding EXPERIMENTS.md §Perf.
+//!
+//! L3 targets (DESIGN.md §6): simulator ≥ 5M events/s; dispatch decisions
+//! O(l) and allocation-free; GrIn solve well under SLSQP at 10×10; the
+//! PJRT request path dominated by kernel time, not dispatch overhead.
+
+use std::time::Instant;
+
+use hetsched::model::throughput::x_of_state;
+use hetsched::policy::{grin, PolicyKind, SystemView};
+use hetsched::report::{Stopwatch, Table};
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+use hetsched::solver::slsqp::Slsqp;
+
+fn main() {
+    let mut t = Table::new("perf_hotpath", &["metric", "value"]);
+
+    // --- simulator event throughput -------------------------------------
+    let mu = workload::paper_two_type_mu();
+    let mut cfg = SimConfig::paper_default(vec![10, 10]);
+    cfg.dist = Distribution::Exponential;
+    cfg.warmup = 1_000;
+    cfg.measure = 400_000;
+    let net = ClosedNetwork::new(&mu, cfg).unwrap();
+    let t0 = Instant::now();
+    let r = net.run(PolicyKind::Cab.build().as_mut()).unwrap();
+    let secs = t0.elapsed().as_secs_f64();
+    let events_per_s = (r.completed as f64 + 1_000.0) / secs;
+    t.row(vec![
+        "sim events/s (CAB, 2 procs, N=20)".into(),
+        format!("{:.2}M", events_per_s / 1e6),
+    ]);
+
+    // --- dispatch decision latency ---------------------------------------
+    let pops = [10u32, 10];
+    let state = hetsched::model::state::StateMatrix::from_two_type(1, 10, 10, 10).unwrap();
+    let work = vec![1.0, 2.0];
+    let mut rng = Rng::new(1);
+    for kind in PolicyKind::five_two_type() {
+        let mut p = kind.build();
+        p.prepare(&mu, &pops).unwrap();
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &pops };
+        let n = 2_000_000u64;
+        let t0 = Instant::now();
+        let mut sink = 0usize;
+        for i in 0..n {
+            sink ^= p.dispatch((i & 1) as usize, &view, &mut rng);
+        }
+        std::hint::black_box(sink);
+        let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+        t.row(vec![format!("dispatch ns/op ({})", kind.name()), format!("{ns:.1}")]);
+    }
+
+    // --- objective evaluation --------------------------------------------
+    let mu9 = workload::random_mu(&mut rng, 8, 8, 0.5, 30.0).unwrap();
+    let pops9 = workload::random_populations(&mut rng, 8, 8);
+    let s9 = grin::solve(&mu9, &pops9).unwrap().state;
+    let n = 2_000_000u64;
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for _ in 0..n {
+        acc += x_of_state(std::hint::black_box(&mu9), std::hint::black_box(&s9));
+    }
+    std::hint::black_box(acc);
+    t.row(vec![
+        "x_of_state ns/op (8x8)".into(),
+        format!("{:.1}", t0.elapsed().as_nanos() as f64 / n as f64),
+    ]);
+
+    // --- solver latencies --------------------------------------------------
+    for size in [4usize, 8, 10] {
+        let mut sw_g = Stopwatch::new();
+        let mut sw_s = Stopwatch::new();
+        let mut rng2 = Rng::new(99);
+        for _ in 0..30 {
+            let m = workload::random_mu(&mut rng2, size, size, 0.5, 30.0).unwrap();
+            let p = workload::random_populations(&mut rng2, size, 8);
+            sw_g.time(|| grin::solve(&m, &p).unwrap());
+            sw_s.time(|| Slsqp::default().solve(&m, &p).unwrap());
+        }
+        t.row(vec![
+            format!("GrIn µs ({size}x{size})"),
+            format!("{:.1}", sw_g.mean_s() * 1e6),
+        ]);
+        t.row(vec![
+            format!("SLSQP µs ({size}x{size})"),
+            format!("{:.1}", sw_s.mean_s() * 1e6),
+        ]);
+    }
+
+    // --- PJRT request path (needs artifacts) -------------------------------
+    match hetsched::runtime::Engine::open_default() {
+        Ok(eng) => {
+            let x = vec![0.1f32; 8 * 256];
+            let w = vec![0.01f32; 256 * 256];
+            let b = vec![0.0f32; 256];
+            eng.nn_task("nn_small", &x, &w, &b).unwrap(); // compile
+            let mut sw = Stopwatch::new();
+            sw.run_n(200, || {
+                eng.nn_task("nn_small", &x, &w, &b).unwrap();
+            });
+            t.row(vec!["nn_small exec µs (warm)".into(), format!("{:.1}", sw.mean_s() * 1e6)]);
+            let rows = vec![0.5f32; 16 * 256];
+            eng.sort_task("sort_small", &rows).unwrap();
+            let mut sw = Stopwatch::new();
+            sw.run_n(50, || {
+                eng.sort_task("sort_small", &rows).unwrap();
+            });
+            t.row(vec!["sort_small exec µs (warm)".into(), format!("{:.1}", sw.mean_s() * 1e6)]);
+
+            // Batched exhaustive offload vs scalar.
+            let mu3 = workload::random_mu(&mut rng, 3, 3, 1.0, 20.0).unwrap();
+            let pops3 = vec![6u32, 6, 6];
+            let (kp, lp, bsz) = (16usize, 16usize, 4096usize);
+            let mut mu_p = vec![0f32; kp * lp];
+            for i in 0..3 {
+                for j in 0..3 {
+                    mu_p[i * lp + j] = mu3.rate(i, j) as f32;
+                }
+            }
+            let t0 = Instant::now();
+            let scalar = hetsched::solver::exhaustive::ExhaustiveSolver
+                .solve(&mu3, &pops3)
+                .unwrap();
+            let ts = t0.elapsed().as_secs_f64();
+            let t1 = Instant::now();
+            let batched = hetsched::solver::exhaustive::ExhaustiveSolver
+                .solve_batched(&mu3, &pops3, bsz, kp, lp, |buf| eng.throughput_batch(&mu_p, buf))
+                .unwrap();
+            let tb = t1.elapsed().as_secs_f64();
+            assert!((batched.throughput - scalar.throughput).abs() / scalar.throughput < 1e-4);
+            t.row(vec![
+                format!("exhaustive scalar ({} states)", scalar.evaluated),
+                format!("{:.1} ms", ts * 1e3),
+            ]);
+            t.row(vec![
+                "exhaustive PJRT-batched (same)".into(),
+                format!("{:.1} ms", tb * 1e3),
+            ]);
+        }
+        Err(e) => {
+            t.row(vec!["PJRT rows skipped".into(), e.to_string()]);
+        }
+    }
+
+    t.print();
+    if events_per_s < 5e6 {
+        println!("WARN: sim below the 5M events/s target ({events_per_s:.0}/s)");
+    }
+}

@@ -1,0 +1,65 @@
+//! Table 3 — measured kernel processing rates on both (emulated)
+//! processors, through the real PJRT engines.
+//!
+//! §7.2: "We run each kernel 1000 times and calculate the average
+//! execution time ω, and therefore, the processing rate μ = 1/ω."
+//! `--runs` controls sampling (default 10; the measurement is offline so
+//! the paper's 1000 is a precision choice, not a correctness one).
+//!
+//! Requires `make artifacts`.
+
+use hetsched::cli::Args;
+use hetsched::platform::bench_rig::cases;
+use hetsched::platform::{calibrate, measure_rates};
+use hetsched::report::Table;
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let runs: u32 = args.get_parse("runs", 10).expect("--runs");
+    let cap: u32 = args.get_parse("rep-cap", 96).expect("--rep-cap");
+    args.finish().expect("flags");
+
+    let cal = match calibrate(runs.min(20)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("table3_rates: {e}");
+            eprintln!("run `make artifacts` first");
+            std::process::exit(0); // bench suite stays green without artifacts
+        }
+    };
+
+    for (case, devices, bench_names) in [
+        (
+            "general-symmetric (§7.4)",
+            cases::general_symmetric(&cal, cap),
+            ["quicksort-500 (sort_small)", "NN-2000 (nn_small)"],
+        ),
+        (
+            "P2-biased (§7.3)",
+            cases::p2_biased(&cal, cap),
+            ["quicksort-1000 (sort_large)", "NN-2000 (nn_small)"],
+        ),
+    ] {
+        let rates = measure_rates(&devices, runs).expect("measurement");
+        let mut t = Table::new(
+            format!("Table 3 analog — measured rates, {case}"),
+            &["benchmark", "μ_CPU (1/s)", "μ_GPU (1/s)", "reps CPU", "reps GPU"],
+        );
+        for (i, name) in bench_names.iter().enumerate() {
+            t.row(vec![
+                name.to_string(),
+                format!("{:.2}", rates.mu.rate(i, 0)),
+                format!("{:.2}", rates.mu.rate(i, 1)),
+                devices[0].reps[i].to_string(),
+                devices[1].reps[i].to_string(),
+            ]);
+        }
+        t.print();
+        println!(
+            "classified regime: {} (paper: {})\n",
+            rates.mu.classify().map(|r| r.name()).unwrap_or("UNCLASSIFIED"),
+            if case.starts_with("general") { "general-symmetric" } else { "P2-biased" },
+        );
+    }
+}

@@ -1,0 +1,74 @@
+//! Many processor types: GrIn vs the field on randomized k×l systems —
+//! the §6 scenario as a library consumer would script it.
+//!
+//! ```bash
+//! cargo run --release --example multitype_sweep -- --types 4 --procs 5
+//! ```
+
+use hetsched::cli::Args;
+use hetsched::policy::{grin, PolicyKind};
+use hetsched::report::Table;
+use hetsched::sim::distribution::Distribution;
+use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+use hetsched::solver::exhaustive::ExhaustiveSolver;
+use hetsched::solver::slsqp::Slsqp;
+
+fn main() -> hetsched::Result<()> {
+    let args = Args::from_env()?;
+    let k: usize = args.get_parse("types", 3)?;
+    let l: usize = args.get_parse("procs", 3)?;
+    let seed: u64 = args.get_parse("seed", 42)?;
+    args.finish()?;
+
+    let mut rng = Rng::new(seed);
+    let mu = workload::random_mu(&mut rng, k, l, 0.5, 30.0)?;
+    let pops = workload::random_populations(&mut rng, k, 7);
+    println!("random {k}x{l} system, populations {pops:?}");
+
+    // Solver view: GrIn vs SLSQP vs (small systems) exhaustive.
+    let g = grin::solve(&mu, &pops)?;
+    println!("GrIn : X = {:.4} ({} moves)\n{}", g.throughput, g.moves, g.state);
+    let s = Slsqp::default().solve(&mu, &pops)?;
+    println!(
+        "SLSQP: X = {:.4} (continuous, {} iters, converged: {})",
+        s.throughput, s.iterations, s.converged
+    );
+    let states = ExhaustiveSolver::state_count(&pops, l);
+    if states <= 2_000_000 {
+        let o = ExhaustiveSolver.solve(&mu, &pops)?;
+        println!(
+            "Opt  : X = {:.4} over {} states — GrIn gap {:.2}%",
+            o.throughput,
+            o.evaluated,
+            100.0 * (1.0 - g.throughput / o.throughput)
+        );
+    } else {
+        println!("Opt  : skipped ({states} states)");
+    }
+
+    // Simulation view: all six policies on the same system.
+    let mut t = Table::new(
+        "simulated metrics (exponential sizes)",
+        &["policy", "X", "E[T]", "EDP"],
+    );
+    for kind in PolicyKind::six_multi_type() {
+        if kind == PolicyKind::Opt && states > 2_000_000 {
+            continue;
+        }
+        let mut cfg = SimConfig::paper_default(pops.clone());
+        cfg.dist = Distribution::Exponential;
+        cfg.measure = 10_000;
+        let net = ClosedNetwork::new(&mu, cfg)?;
+        let r = net.run(kind.build().as_mut())?;
+        t.row(vec![
+            kind.name().into(),
+            format!("{:.4}", r.throughput),
+            format!("{:.4}", r.mean_response),
+            format!("{:.4}", r.edp),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Quickstart: classify a system, solve for the optimal schedule, and
+//! simulate it against load balancing — in ~40 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use hetsched::prelude::*;
+
+fn main() -> Result<()> {
+    // A CPU+GPU system: task type 0 is CPU-affine, type 1 GPU-affine,
+    // but type-0 tasks are faster *everywhere* (the paper's P1-biased
+    // simulation matrix).
+    let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0)?;
+
+    // 1. CAB classifies the system from the μ orderings alone…
+    let regime = mu.classify()?;
+    println!("regime: {} -> CAB plays {}", regime.name(),
+             if regime.is_biased() { "Accelerate-the-Fastest" } else { "Best-Fit" });
+
+    // 2. …and GrIn solves the general integer program (identical to CAB
+    //    on two processor types).
+    let solution = policy::grin::solve(&mu, &[10, 10])?;
+    println!("optimal state (X = {:.3} tasks/s):\n{}", solution.throughput, solution.state);
+
+    // 3. Simulate the closed system (N = 20 programs, PS processors,
+    //    exponential task sizes) under CAB and under load balancing.
+    let cfg = SimConfig::paper_default(vec![10, 10]);
+    for kind in [PolicyKind::Cab, PolicyKind::LoadBalance] {
+        let net = ClosedNetwork::new(&mu, cfg.clone())?;
+        let r = net.run(kind.build().as_mut())?;
+        println!(
+            "{:<4} X = {:.3} tasks/s   E[T] = {:.3} s   EDP = {:.3}   X·E[T] = {:.2}",
+            kind.name(),
+            r.throughput,
+            r.mean_response,
+            r.edp,
+            r.little_product
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Serving demo: the coordinator (router + dynamic batcher + PJRT
+//! workers) under different placement policies.
+//!
+//! Shows the paper's policies driving a live, batched serving system:
+//! closed-loop clients issue sort- and NN-class requests; the router
+//! places them with CAB / JSQ / LB; NN requests coalesce into 8-row
+//! `nn_small` kernel launches.  Reports throughput and latency
+//! percentiles per policy.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving_router
+//! ```
+
+use hetsched::coordinator::{Coordinator, ServeConfig};
+use hetsched::policy::PolicyKind;
+use hetsched::report::Table;
+
+fn main() -> hetsched::Result<()> {
+    let mut t = Table::new(
+        "serving comparison (400 requests, 16 in flight, 50% sort / 50% NN)",
+        &["policy", "req/s", "sort p50 ms", "sort p99 ms", "nn p50 ms", "nn p99 ms", "batches", "fill"],
+    );
+    for kind in [PolicyKind::Cab, PolicyKind::Jsq, PolicyKind::LoadBalance] {
+        let cfg = ServeConfig {
+            policy: kind,
+            total: 400,
+            inflight: 16,
+            ..Default::default()
+        };
+        let r = Coordinator::run(&cfg)?;
+        t.row(vec![
+            kind.name().into(),
+            format!("{:.0}", r.rps),
+            format!("{:.2}", r.sort_latency.quantile_s(0.5) * 1e3),
+            format!("{:.2}", r.sort_latency.quantile_s(0.99) * 1e3),
+            format!("{:.2}", r.nn_latency.quantile_s(0.5) * 1e3),
+            format!("{:.2}", r.nn_latency.quantile_s(0.99) * 1e3),
+            r.batches.to_string(),
+            format!("{:.2}", r.batch_fill),
+        ]);
+    }
+    t.print();
+    println!("(batch fill = mean requests per nn_small launch / 8)");
+    Ok(())
+}

@@ -1,0 +1,120 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* + a manifest.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(``rust/src/runtime``) loads the text with ``HloModuleProto::from_text_file``,
+compiles on the PJRT CPU client, and executes.  Python is never on the
+request path.
+
+Interchange format is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the crate's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Every entry is lowered with ``return_tuple=True`` so the Rust side unwraps a
+tuple of a known arity.  ``artifacts/manifest.json`` records, per entry, the
+artifact file, the argument shapes/dtypes and the output arity; the Rust
+config substrate parses it with the in-repo JSON parser.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.throughput import K_PAD, L_PAD
+
+# ---------------------------------------------------------------------------
+# Entry-point registry.
+#
+# Shapes mirror the paper's benchmarks:
+#   nn2000     — the §7 "NN-2000" single-layer NN (input width 2000, padded
+#                to 2048 for MXU/lane alignment; DESIGN.md §4).
+#   nn_small   — serving-batch variant used by the coordinator's dynamic
+#                batcher (8-task batches).
+#   sort_large — quicksort-1000 stand-in (rows of 1024 keys).
+#   sort_small — quicksort-500 stand-in (rows of 256 keys).
+#   throughput_eval — Eq. 28 objective over a 4096-candidate batch, padded
+#                to (K_PAD, L_PAD); offload target of the exhaustive oracle.
+# ---------------------------------------------------------------------------
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+ENTRIES = {
+    "nn2000": (model.nn_task, [_spec(32, 2048), _spec(2048, 256), _spec(256)]),
+    "nn_small": (model.nn_task, [_spec(8, 256), _spec(256, 256), _spec(256)]),
+    "sort_large": (model.sort_task, [_spec(16, 1024)]),
+    "sort_small": (model.sort_task, [_spec(16, 256)]),
+    "throughput_eval": (
+        model.throughput_batch,
+        [_spec(K_PAD, L_PAD), _spec(4096, K_PAD, L_PAD)],
+    ),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(name: str):
+    fn, specs = ENTRIES[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_arity = len(jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs)))
+    return text, specs, out_arity
+
+
+def build(out_dir: str, only: list[str] | None = None) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "entries": {}}
+    names = only or list(ENTRIES)
+    for name in names:
+        text, specs, out_arity = lower_entry(name)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["entries"][name] = {
+            "file": fname,
+            "sha256_16": digest,
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "out_arity": out_arity,
+        }
+        print(f"  {name}: {len(text)} chars -> {fname} (outputs={out_arity})")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", help="subset of entries to build")
+    args = ap.parse_args()
+    print(f"AOT-lowering {len(args.only or ENTRIES)} entries -> {args.out}")
+    build(args.out, args.only)
+    print("done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

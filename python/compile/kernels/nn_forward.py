@@ -1,0 +1,115 @@
+"""L1 Pallas kernel: single-layer neural-network forward pass.
+
+This is the paper's GPU-type benchmark (§7, "single layer Neural Network
+(NN)", e.g. NN-2000 with input size 2000).  The OpenCL NDRange kernel of the
+paper maps to a Pallas kernel tiled for the TPU memory hierarchy:
+
+  * work-group tiling          ->  ``BlockSpec`` grid over (M, N, K) tiles
+  * per-thread MACs            ->  MXU-shaped ``jnp.dot`` on (bm, bk)x(bk, bn)
+  * __local staging            ->  VMEM blocks sized by the BlockSpec
+  * global memory walk         ->  HBM->VMEM schedule implied by index_map
+
+The kernel computes ``relu(x @ w + b)`` with f32 accumulation.  K is walked
+by the innermost grid dimension and partial products are accumulated into
+the output block; bias + ReLU are applied on the last K step only, so the
+epilogue is fused and the output block is written exactly once per (i, j).
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, and interpret mode lowers to plain HLO that both the
+pytest oracle check and the Rust runtime execute bit-identically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nn_kernel(x_ref, w_ref, b_ref, o_ref, *, n_k: int):
+    """One (i, j, k) grid step: accumulate x_blk @ w_blk into o_blk."""
+    k = pl.program_id(2)
+
+    # Zero the accumulator on the first K step.  The output block lives in
+    # VMEM across the K walk (same (i, j) index_map for every k), so this is
+    # the canonical Pallas accumulation idiom.
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+    o_ref[...] += acc
+
+    # Fused epilogue: bias + ReLU on the last K step.
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...], 0.0)
+
+
+def nn_forward(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 32,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    """``relu(x @ w + b)`` as a tiled Pallas kernel.
+
+    Args:
+      x: ``f32[M, K]`` activations (one batch of NN tasks).
+      w: ``f32[K, N]`` layer weights.
+      b: ``f32[N]`` bias.
+      block_m/n/k: VMEM tile sizes.  Defaults target MXU-friendly 128-wide
+        N tiles; M may be small (task batches are small in the closed
+        system, N programs ~ 20).
+      interpret: must stay True for CPU PJRT execution (see module doc).
+
+    Returns:
+      ``f32[M, N]`` activations.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape != (n,):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(
+            f"dims must divide blocks: ({m},{n},{k}) vs ({bm},{bn},{bk})"
+        )
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+    kernel = functools.partial(_nn_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Estimated VMEM working set of one grid step (f32).
+
+    x block + w block + bias block + output accumulator.  Used by the
+    DESIGN.md / EXPERIMENTS.md §Perf roofline estimate; interpret-mode
+    wallclock is *not* a TPU proxy, so we optimise this footprint and the
+    MXU tile alignment instead.
+    """
+    return 4 * (
+        block_m * block_k + block_k * block_n + block_n + block_m * block_n
+    )

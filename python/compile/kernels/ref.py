@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+These are the CORE correctness signal: pytest (python/tests) asserts
+``assert_allclose(kernel(...), ref(...))`` across hypothesis-swept shapes,
+and the Rust integration tests re-check the shipped artifacts against
+values precomputed from these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def nn_forward_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """relu(x @ w + b) with f32 accumulation."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    return jnp.maximum(y, 0.0)
+
+
+def throughput_ref(mu: jax.Array, n: jax.Array) -> jax.Array:
+    """Eq. 28: X_sys per candidate; zero columns contribute 0.
+
+    mu: f32[k, l]; n: f32[B, k, l] -> f32[B].
+    """
+    num = jnp.sum(mu[None, :, :] * n, axis=1)
+    den = jnp.sum(n, axis=1)
+    safe = jnp.where(den > 0.0, den, 1.0)
+    return jnp.sum(jnp.where(den > 0.0, num / safe, 0.0), axis=1)
+
+
+def sort_rows_ref(x: jax.Array) -> jax.Array:
+    """Ascending sort along the last axis."""
+    return jnp.sort(x, axis=-1)

@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: odd-even transposition sort network.
+
+Stand-in for the paper's *quicksort* OpenCL benchmark (§7, quicksort-500 /
+quicksort-1000): quicksort's data-dependent recursion cannot lower to HLO,
+so the platform's CPU-type workload is a sort *network* with a fixed
+compare-exchange schedule — the same memory-bound, low-arithmetic-intensity
+behaviour, and (like the paper's quicksort) strongly CPU-affine relative to
+the NN matmul task.  DESIGN.md §3 records the substitution.
+
+The network sorts each row of a ``[R, N]`` batch with N rounds of
+alternating even/odd compare-exchange phases.  One Pallas grid step owns a
+block of rows in VMEM and runs the full ``fori_loop`` schedule there — the
+HBM<->VMEM traffic is exactly one load + one store per row regardless of
+N, which is the TPU analog of the paper's in-local-memory OpenCL sort.
+
+Vectorised compare-exchange (no gathers): for phase parity p, element i is
+a *left* partner if ``i % 2 == p`` (and has a right neighbour), else a
+*right* partner.  Left partners take ``min(x[i], x[i+1])``, right partners
+take ``max(x[i-1], x[i])``; boundary elements keep their value.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phase(x: jax.Array, parity: jax.Array) -> jax.Array:
+    """One compare-exchange phase over the last axis."""
+    n = x.shape[-1]
+    idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, len(x.shape) - 1)
+    nxt = jnp.roll(x, -1, axis=-1)  # x[i+1] (wraps; masked below)
+    prv = jnp.roll(x, 1, axis=-1)  # x[i-1]
+    is_left = (idx % 2) == parity
+    has_right = idx < (n - 1)
+    has_left = idx > 0
+    lo = jnp.minimum(x, nxt)
+    hi = jnp.maximum(x, prv)
+    out = jnp.where(
+        is_left & has_right,
+        lo,
+        jnp.where(~is_left & has_left, hi, x),
+    )
+    return out
+
+
+def _sort_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    n = x.shape[-1]
+
+    def body(i, acc):
+        acc = _phase(acc, jnp.int32(0))
+        acc = _phase(acc, jnp.int32(1))
+        return acc
+
+    # n/2 (even, odd) super-rounds sort any input of length n.
+    o_ref[...] = jax.lax.fori_loop(0, (n + 1) // 2, body, x)
+
+
+def sort_rows(
+    x: jax.Array, *, block_r: int = 16, interpret: bool = True
+) -> jax.Array:
+    """Sort each row of ``f32[R, N]`` ascending via odd-even transposition.
+
+    Args:
+      x: batch of rows to sort.
+      block_r: rows per VMEM block / grid step.
+      interpret: must stay True for CPU PJRT execution.
+    """
+    r, n = x.shape
+    br = min(block_r, r)
+    if r % br:
+        raise ValueError(f"rows {r} must divide block {br}")
+    return pl.pallas_call(
+        _sort_kernel,
+        grid=(r // br,),
+        in_specs=[pl.BlockSpec((br, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, n), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: batched closed-network throughput objective (Eq. 28).
+
+The paper's optimisation problem is
+
+    maximise  X_sys(N) = sum_j ( sum_i mu_ij * N_ij ) / ( sum_i N_ij )
+
+over integer task-distribution matrices ``N`` (k task types x l processor
+types) with fixed row sums.  The exhaustive oracle (paper §6, "Opt") has to
+evaluate X_sys for *every* composition; this kernel evaluates a whole batch
+of candidate matrices in one PJRT call so the Rust solver can offload the
+objective sweep to XLA.
+
+Layout: candidates are padded to a fixed (K_PAD, L_PAD) tile so that one
+artifact serves every problem size up to the pad.  Padding columns are all
+zero, which would make the per-column denominator zero; the kernel guards
+with ``where(den > 0, num / den, 0)`` — a zero column contributes zero
+throughput, exactly matching the convention of the Rust implementation
+(`model::throughput`).
+
+The batch dimension is tiled by the Pallas grid; each grid step reduces a
+``(BB, K_PAD, L_PAD)`` block to ``(BB,)`` throughput values in VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Pad sizes baked into the shipped artifact (see aot.py).  The paper sweeps
+# processor-type counts 3..10 (Fig. 13/14), so 16 covers everything with
+# lane-aligned headroom.
+K_PAD = 16
+L_PAD = 16
+
+
+def _throughput_kernel(mu_ref, n_ref, o_ref):
+    """One grid step: X_sys for a block of candidate matrices.
+
+    mu_ref: f32[K, L]      — affinity matrix (same block every step).
+    n_ref:  f32[BB, K, L]  — candidate task-distribution matrices.
+    o_ref:  f32[BB]        — throughput per candidate.
+    """
+    mu = mu_ref[...]
+    n = n_ref[...]
+    num = jnp.sum(mu[None, :, :] * n, axis=1)  # [BB, L]
+    den = jnp.sum(n, axis=1)  # [BB, L]
+    per_col = jnp.where(den > 0.0, num / jnp.where(den > 0.0, den, 1.0), 0.0)
+    o_ref[...] = jnp.sum(per_col, axis=1)
+
+
+def throughput_batch(
+    mu: jax.Array,
+    n: jax.Array,
+    *,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """X_sys (Eq. 28) for a batch of candidate state matrices.
+
+    Args:
+      mu: ``f32[k, l]`` affinity matrix (zero-padded columns/rows allowed).
+      n:  ``f32[B, k, l]`` batch of candidate matrices.
+      block_b: batch tile per grid step.
+      interpret: must stay True for CPU PJRT execution.
+
+    Returns:
+      ``f32[B]`` throughput of each candidate.
+    """
+    b, k, l = n.shape
+    if mu.shape != (k, l):
+        raise ValueError(f"mu {mu.shape} incompatible with n {n.shape}")
+    bb = min(block_b, b)
+    if b % bb:
+        raise ValueError(f"batch {b} must divide block {bb}")
+    return pl.pallas_call(
+        _throughput_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((k, l), lambda i: (0, 0)),
+            pl.BlockSpec((bb, k, l), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(mu, n)

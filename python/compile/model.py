@@ -1,0 +1,52 @@
+"""L2: JAX compute graphs for the workloads and the solver offload.
+
+Each public function here is an AOT entry point: ``aot.py`` lowers it once
+to HLO text in ``artifacts/`` and the Rust runtime executes it on the PJRT
+CPU client.  Python never runs on the request path.
+
+Entry points
+------------
+``nn_task``          — the paper's GPU-type benchmark (single-layer NN,
+                       §7 "NN-2000"): fused Pallas matmul+bias+ReLU.
+``sort_task``        — the paper's CPU-type benchmark (quicksort stand-in):
+                       odd-even transposition sort network.
+``throughput_batch`` — Eq. 28 objective for a batch of candidate state
+                       matrices, plus the argmax, for the batched
+                       exhaustive search (paper §6 "Opt").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import nn_forward as _nn
+from compile.kernels import sort_net as _sort
+from compile.kernels import throughput as _tp
+
+
+def nn_task(x: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-layer NN forward (paper benchmark NN-2000).
+
+    Returns the activations and their checksum; the checksum gives the Rust
+    side a cheap end-to-end numeric probe per executed task.
+    """
+    y = _nn.nn_forward(x, w, b)
+    return y, jnp.sum(y, dtype=jnp.float32)
+
+
+def sort_task(x: jax.Array):
+    """Row-sort workload (quicksort stand-in). Returns rows + checksum."""
+    y = _sort.sort_rows(x)
+    return y, jnp.sum(y, dtype=jnp.float32)
+
+
+def throughput_batch(mu: jax.Array, n: jax.Array):
+    """X_sys per candidate (Eq. 28), best index and best value.
+
+    mu: f32[K_PAD, L_PAD]; n: f32[B, K_PAD, L_PAD].
+    Returns (x: f32[B], best_idx: i32[], best_x: f32[]).
+    """
+    x = _tp.throughput_batch(mu, n)
+    best = jnp.argmax(x)
+    return x, best.astype(jnp.int32), x[best]

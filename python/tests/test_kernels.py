@@ -1,0 +1,170 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and, where supported, dtypes/value regimes);
+every property asserts allclose against ``compile.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.nn_forward import nn_forward, vmem_bytes
+from compile.kernels.sort_net import sort_rows
+from compile.kernels.throughput import throughput_batch
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------------------
+# nn_forward
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([1, 2, 8, 32]),
+    n=st.sampled_from([128, 256]),
+    k=st.sampled_from([128, 512, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nn_forward_matches_ref(m, n, k, seed):
+    r = rng(seed)
+    x = r.standard_normal((m, k), dtype=np.float32)
+    w = r.standard_normal((k, n), dtype=np.float32)
+    b = r.standard_normal(n, dtype=np.float32)
+    got = nn_forward(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    want = ref.nn_forward_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (32, 128, 512), (16, 256, 256)])
+def test_nn_forward_block_shapes_equivalent(bm, bn, bk):
+    """Tiling must not change the numerics (accumulation order aside)."""
+    r = rng(7)
+    x = r.standard_normal((32, 512), dtype=np.float32)
+    w = r.standard_normal((512, 256), dtype=np.float32)
+    b = r.standard_normal(256, dtype=np.float32)
+    got = nn_forward(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(b),
+        block_m=bm, block_n=bn, block_k=bk,
+    )
+    want = ref.nn_forward_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_nn_forward_relu_clamps():
+    x = -jnp.ones((8, 128), jnp.float32)
+    w = jnp.eye(128, dtype=jnp.float32)
+    b = jnp.zeros(128, jnp.float32)
+    got = nn_forward(x, w, b)
+    assert float(jnp.min(got)) == 0.0
+
+
+def test_nn_forward_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        nn_forward(
+            jnp.zeros((4, 128)), jnp.zeros((64, 128)), jnp.zeros(128)
+        )
+
+
+def test_vmem_budget():
+    """The shipped nn2000 tiling must fit a conservative VMEM budget."""
+    assert vmem_bytes(32, 128, 512) <= 4 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# sort_rows
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    r_=st.sampled_from([1, 3, 4, 16]),
+    n=st.sampled_from([2, 7, 16, 33, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sort_matches_ref(r_, n, seed):
+    x = rng(seed).standard_normal((r_, n), dtype=np.float32)
+    got = sort_rows(jnp.asarray(x))
+    want = ref.sort_rows_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(**SETTINGS)
+@given(n=st.sampled_from([8, 32, 128]), seed=st.integers(0, 2**31 - 1))
+def test_sort_is_permutation(n, seed):
+    """Output must be a permutation of the input (no value invented/lost)."""
+    x = rng(seed).standard_normal((4, n), dtype=np.float32)
+    got = np.asarray(sort_rows(jnp.asarray(x)))
+    np.testing.assert_array_equal(np.sort(x, axis=-1), got)
+
+
+def test_sort_with_duplicates_and_extremes():
+    x = np.array(
+        [[3.0, 3.0, -np.inf, np.inf, 0.0, -0.0, 1e30, -1e30]], dtype=np.float32
+    )
+    got = np.asarray(sort_rows(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, axis=-1))
+
+
+def test_sort_already_sorted_fixed_point():
+    x = np.arange(64, dtype=np.float32)[None, :]
+    got = np.asarray(sort_rows(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, x)
+
+
+# ---------------------------------------------------------------------------
+# throughput_batch (Eq. 28)
+# ---------------------------------------------------------------------------
+
+
+def _random_candidates(r, b, k, l):
+    """Integer-valued candidate matrices incl. some all-zero columns."""
+    n = r.integers(0, 6, size=(b, k, l)).astype(np.float32)
+    n[:, :, -1] = 0.0  # force a zero column: exercises the 0/0 guard
+    return n
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.sampled_from([1, 32, 256]),
+    k=st.sampled_from([2, 3, 8]),
+    l=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_throughput_matches_ref(b, k, l, seed):
+    r = rng(seed)
+    mu = r.uniform(0.5, 30.0, size=(k, l)).astype(np.float32)
+    n = _random_candidates(r, b, k, l)
+    got = throughput_batch(jnp.asarray(mu), jnp.asarray(n))
+    want = ref.throughput_ref(jnp.asarray(mu), jnp.asarray(n))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_throughput_hand_example():
+    """Paper Eq. 4 sanity: mu=[[20,15],[3,8]], S=(1, N2) P1-biased case."""
+    mu = np.array([[20.0, 15.0], [3.0, 8.0]], dtype=np.float32)
+    # N1=10, N2=10, S_max=(1,10): N = [[1, 9], [0, 10]]
+    n = np.array([[[1.0, 9.0], [0.0, 10.0]]], dtype=np.float32)
+    x = float(throughput_batch(jnp.asarray(mu), jnp.asarray(n))[0])
+    # Eq. 16: X = (N1-1)/(N-1)*mu12 + N2/(N-1)*mu22 + mu11
+    want = 9.0 / 19.0 * 15.0 + 10.0 / 19.0 * 8.0 + 20.0
+    assert abs(x - want) < 1e-4
+
+
+def test_throughput_zero_batch_columns():
+    mu = np.ones((4, 4), dtype=np.float32)
+    n = np.zeros((8, 4, 4), dtype=np.float32)
+    x = np.asarray(throughput_batch(jnp.asarray(mu), jnp.asarray(n)))
+    np.testing.assert_array_equal(x, np.zeros(8, dtype=np.float32))

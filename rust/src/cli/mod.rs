@@ -1,0 +1,11 @@
+//! Command-line substrate (no `clap` available offline).
+//!
+//! [`parser`] implements a small, typed argument parser: positional
+//! subcommands, `--flag value`, `--flag=value`, boolean switches, typed
+//! getters with defaults and "unknown flag" diagnostics.  [`commands`]
+//! wires the `hetsched` launcher subcommands onto the library.
+
+pub mod commands;
+pub mod parser;
+
+pub use parser::Args;

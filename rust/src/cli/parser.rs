@@ -1,0 +1,168 @@
+//! Typed flag parser: `--key value`, `--key=value`, boolean switches and
+//! positionals, with unknown-flag detection at `finish()`.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed arguments.
+#[derive(Debug, Clone)]
+pub struct Args {
+    positionals: Vec<String>,
+    flags: HashMap<String, Vec<String>>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut positionals = Vec::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
+        let mut switches = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminator: everything after is positional.
+                    positionals.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.entry(rest.to_string()).or_default().push(v);
+                } else {
+                    switches.push(rest.to_string());
+                }
+            } else {
+                positionals.push(a);
+            }
+        }
+        Ok(Self {
+            positionals,
+            flags,
+            switches,
+            consumed: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional arguments.
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(|s| s.as_str())
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All values of a repeatable flag.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Typed flag with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse::<T>().map_err(|_| {
+                Error::Parse(format!("--{key}: cannot parse '{s}'"))
+            }),
+        }
+    }
+
+    /// Boolean switch (present without value).
+    pub fn switch(&self, key: &str) -> bool {
+        self.consumed.borrow_mut().push(key.to_string());
+        self.switches.iter().any(|s| s == key) || self.flags.contains_key(key)
+    }
+
+    /// Consume the flags the cargo bench/test harness injects
+    /// (`--bench`, `--exact`, `--nocapture`) so `finish()` accepts them.
+    pub fn ignore_harness_flags(&self) {
+        for f in ["bench", "exact", "nocapture", "test-threads"] {
+            let _ = self.switch(f);
+        }
+    }
+
+    /// Error on any flag that was never consumed (typo protection).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys().chain(self.switches.iter()) {
+            if !consumed.iter().any(|c| c == k) {
+                return Err(Error::Config(format!("unknown flag --{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        // Note: a bare switch must not be directly followed by a
+        // positional (`--verbose pos2` would read pos2 as its value) —
+        // the standard greedy-value convention.
+        let a = args("simulate pos2 --policy cab --eta=0.3 --verbose");
+        assert_eq!(a.subcommand(), Some("simulate"));
+        assert_eq!(a.get("policy"), Some("cab"));
+        assert_eq!(a.get_parse("eta", 0.0).unwrap(), 0.3);
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positionals(), &["simulate", "pos2"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn typed_defaults_and_errors() {
+        let a = args("run --n 20");
+        assert_eq!(a.get_parse("n", 5u32).unwrap(), 20);
+        assert_eq!(a.get_parse("seed", 7u64).unwrap(), 7);
+        let a = args("run --n abc");
+        assert!(a.get_parse("n", 5u32).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let a = args("run --good 1 --oops 2");
+        let _ = a.get("good");
+        assert!(a.finish().is_err());
+        let _ = a.get("oops");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn repeatable_and_double_dash() {
+        let a = args("x --mu 1 --mu 2 -- --not-a-flag");
+        assert_eq!(a.get_all("mu"), vec!["1", "2"]);
+        assert_eq!(a.positionals(), &["x", "--not-a-flag"]);
+        a.finish().unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! Configuration substrate (no `serde` available offline).
+//!
+//! * [`json`] — a strict, dependency-free JSON parser + writer used for
+//!   the artifact manifest (`artifacts/manifest.json`) and experiment
+//!   config files.
+//! * [`schema`] — typed experiment configuration (`ExperimentSpec`) with
+//!   validation, consumed by the CLI launcher.
+
+pub mod json;
+pub mod schema;

@@ -1,0 +1,178 @@
+//! Typed experiment configuration consumed by the CLI launcher.
+//!
+//! JSON shape (see `examples/configs/` for shipped specs):
+//!
+//! ```json
+//! {
+//!   "mu": [[20, 15], [3, 8]],
+//!   "populations": [10, 10],
+//!   "policy": "cab",
+//!   "distribution": "exp",
+//!   "discipline": "ps",
+//!   "power": {"scenario": "proportional", "coeff": 1.0},
+//!   "warmup": 2000,
+//!   "measure": 20000,
+//!   "seed": 7
+//! }
+//! ```
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::energy::PowerScenario;
+use crate::policy::PolicyKind;
+use crate::sim::distribution::Distribution;
+use crate::sim::engine::SimConfig;
+use crate::sim::processor::Discipline;
+
+use super::json::Json;
+
+/// One fully specified simulation experiment.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    /// Affinity matrix.
+    pub mu: AffinityMatrix,
+    /// Policy to run.
+    pub policy: PolicyKind,
+    /// Simulation parameters.
+    pub sim: SimConfig,
+}
+
+impl ExperimentSpec {
+    /// Parse and validate from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+
+        let mu_rows: Vec<Vec<f64>> = j
+            .req("mu")?
+            .as_arr()?
+            .iter()
+            .map(|row| row.as_arr()?.iter().map(Json::as_f64).collect())
+            .collect::<Result<_>>()?;
+        let mu = AffinityMatrix::from_rows(&mu_rows)?;
+
+        let populations: Vec<u32> = j
+            .req("populations")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_u64()? as u32))
+            .collect::<Result<_>>()?;
+
+        let policy = PolicyKind::parse(j.req("policy")?.as_str()?)?;
+        let dist = match j.get("distribution") {
+            Some(v) => Distribution::parse(v.as_str()?)?,
+            None => Distribution::Exponential,
+        };
+        let discipline = match j.get("discipline") {
+            Some(v) => Discipline::parse(v.as_str()?)?,
+            None => Discipline::Ps,
+        };
+        let (power, power_coeff) = match j.get("power") {
+            Some(p) => {
+                let coeff = match p.get("coeff") {
+                    Some(c) => c.as_f64()?,
+                    None => 1.0,
+                };
+                let scenario = match p.req("scenario")?.as_str()? {
+                    "constant" => PowerScenario::Constant,
+                    "proportional" => PowerScenario::Proportional,
+                    "exponent" => PowerScenario::Exponent(p.req("alpha")?.as_f64()?),
+                    other => {
+                        return Err(Error::Parse(format!(
+                            "unknown power scenario '{other}'"
+                        )))
+                    }
+                };
+                (scenario, coeff)
+            }
+            None => (PowerScenario::Proportional, 1.0),
+        };
+
+        let mut sim = SimConfig::paper_default(populations);
+        sim.dist = dist;
+        sim.discipline = discipline;
+        sim.power = power;
+        sim.power_coeff = power_coeff;
+        if let Some(v) = j.get("warmup") {
+            sim.warmup = v.as_u64()?;
+        }
+        if let Some(v) = j.get("measure") {
+            sim.measure = v.as_u64()?;
+        }
+        if let Some(v) = j.get("seed") {
+            sim.seed = v.as_u64()?;
+        }
+
+        if sim.populations.len() != mu.types() {
+            return Err(Error::Config(format!(
+                "{} populations but μ has {} task types",
+                sim.populations.len(),
+                mu.types()
+            )));
+        }
+        Ok(Self { mu, policy, sim })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &str = r#"{
+        "mu": [[20, 15], [3, 8]],
+        "populations": [10, 10],
+        "policy": "cab",
+        "distribution": "pareto",
+        "discipline": "fcfs",
+        "power": {"scenario": "constant", "coeff": 2.5},
+        "warmup": 100,
+        "measure": 1000,
+        "seed": 42
+    }"#;
+
+    #[test]
+    fn parses_full_spec() {
+        let s = ExperimentSpec::from_json(SPEC).unwrap();
+        assert_eq!(s.policy, PolicyKind::Cab);
+        assert_eq!(s.mu.rate(0, 0), 20.0);
+        assert_eq!(s.sim.populations, vec![10, 10]);
+        assert_eq!(s.sim.discipline, Discipline::Fcfs);
+        assert_eq!(s.sim.warmup, 100);
+        assert_eq!(s.sim.seed, 42);
+        assert_eq!(s.sim.power_coeff, 2.5);
+        assert_eq!(s.sim.power, PowerScenario::Constant);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let s = ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3,3], "policy": "grin"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.sim.dist, Distribution::Exponential);
+        assert_eq!(s.sim.discipline, Discipline::Ps);
+        assert_eq!(s.sim.power, PowerScenario::Proportional);
+    }
+
+    #[test]
+    fn rejects_arity_mismatch_and_bad_policy() {
+        assert!(ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3], "policy": "cab"}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3,3], "policy": "wat"}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3,3], "policy": "cab",
+                "power": {"scenario": "quadratic"}}"#
+        )
+        .is_err());
+    }
+}

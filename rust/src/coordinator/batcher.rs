@@ -1,0 +1,171 @@
+//! Dynamic batching of NN requests into PJRT-batch-sized launches.
+//!
+//! The `nn_small` artifact executes a fixed 8-row batch per call; single
+//! NN requests (one row each) are coalesced until either the batch fills
+//! or the oldest request exceeds the batching deadline — the classic
+//! serving throughput/latency knob (vLLM-style).  Unfilled slots are
+//! zero-padded (the kernel is shape-static).
+
+use std::time::{Duration, Instant};
+
+/// One pending request inside the batcher.
+#[derive(Debug, Clone)]
+pub struct Pending {
+    /// Request id.
+    pub id: u64,
+    /// One row of activations (length = row width).
+    pub row: Vec<f32>,
+    /// Arrival time.
+    pub arrived: Instant,
+}
+
+/// A flushed batch ready for kernel launch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// The requests filling the batch (≤ capacity).
+    pub requests: Vec<Pending>,
+    /// Row-major input tensor (capacity × width, zero-padded).
+    pub input: Vec<f32>,
+    /// Why the batch flushed.
+    pub reason: FlushReason,
+}
+
+/// What triggered a flush.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushReason {
+    /// The batch is full.
+    Full,
+    /// The oldest pending request hit the deadline.
+    Deadline,
+    /// Explicit drain (shutdown).
+    Drain,
+}
+
+/// Size/deadline-driven batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    capacity: usize,
+    width: usize,
+    deadline: Duration,
+    pending: Vec<Pending>,
+}
+
+impl DynamicBatcher {
+    /// `capacity` rows of `width` f32 each; flush after `deadline` at the
+    /// latest.
+    pub fn new(capacity: usize, width: usize, deadline: Duration) -> Self {
+        assert!(capacity >= 1 && width >= 1);
+        Self { capacity, width, deadline, pending: Vec::with_capacity(capacity) }
+    }
+
+    /// Number of pending requests.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True if nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Offer a request; returns a batch if this push filled it.
+    pub fn push(&mut self, p: Pending) -> Option<Batch> {
+        debug_assert_eq!(p.row.len(), self.width);
+        self.pending.push(p);
+        if self.pending.len() >= self.capacity {
+            Some(self.flush(FlushReason::Full))
+        } else {
+            None
+        }
+    }
+
+    /// Flush if the oldest pending request is past the deadline.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        match self.pending.first() {
+            Some(oldest) if now.duration_since(oldest.arrived) >= self.deadline => {
+                Some(self.flush(FlushReason::Deadline))
+            }
+            _ => None,
+        }
+    }
+
+    /// Time until the current oldest request hits the deadline.
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.pending.first().map(|p| {
+            self.deadline
+                .checked_sub(now.duration_since(p.arrived))
+                .unwrap_or(Duration::ZERO)
+        })
+    }
+
+    /// Drain whatever is pending (shutdown path).
+    pub fn drain(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.flush(FlushReason::Drain))
+        }
+    }
+
+    fn flush(&mut self, reason: FlushReason) -> Batch {
+        let requests: Vec<Pending> = self.pending.drain(..).collect();
+        let mut input = vec![0f32; self.capacity * self.width];
+        for (i, r) in requests.iter().enumerate() {
+            input[i * self.width..(i + 1) * self.width].copy_from_slice(&r.row);
+        }
+        Batch { requests, input, reason }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: u64, width: usize) -> Pending {
+        Pending { id, row: vec![id as f32; width], arrived: Instant::now() }
+    }
+
+    #[test]
+    fn fills_then_flushes() {
+        let mut b = DynamicBatcher::new(4, 8, Duration::from_millis(100));
+        assert!(b.push(pending(0, 8)).is_none());
+        assert!(b.push(pending(1, 8)).is_none());
+        assert!(b.push(pending(2, 8)).is_none());
+        let batch = b.push(pending(3, 8)).expect("full");
+        assert_eq!(batch.reason, FlushReason::Full);
+        assert_eq!(batch.requests.len(), 4);
+        assert!(b.is_empty());
+        // Row placement: request i occupies rows i.
+        assert_eq!(batch.input[0], 0.0);
+        assert_eq!(batch.input[8], 1.0);
+        assert_eq!(batch.input[3 * 8], 3.0);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_with_padding() {
+        let mut b = DynamicBatcher::new(4, 2, Duration::from_millis(0));
+        b.push(pending(7, 2));
+        let batch = b.poll(Instant::now()).expect("deadline hit");
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.input, vec![7.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn poll_respects_deadline() {
+        let mut b = DynamicBatcher::new(4, 2, Duration::from_secs(60));
+        b.push(pending(1, 2));
+        assert!(b.poll(Instant::now()).is_none());
+        assert!(b.time_to_deadline(Instant::now()).unwrap() > Duration::from_secs(59));
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut b = DynamicBatcher::new(4, 2, Duration::from_secs(60));
+        assert!(b.drain().is_none());
+        b.push(pending(1, 2));
+        let batch = b.drain().expect("drain");
+        assert_eq!(batch.reason, FlushReason::Drain);
+        assert!(b.is_empty());
+    }
+}

@@ -1,0 +1,331 @@
+//! The leader event loop: closed-loop clients → router → batcher →
+//! device workers → completion stream → stats.
+//!
+//! The leader keeps a fixed number of requests in flight (closed-loop
+//! load, the paper's N-programs model transplanted to serving), routes
+//! every request with the configured policy, coalesces NN requests into
+//! `nn_small` batches per device, and executes sort requests singly —
+//! all compute through per-device PJRT engines on worker threads.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::policy::PolicyKind;
+use crate::runtime::Engine;
+use crate::sim::rng::Rng;
+
+use super::batcher::{Batch, DynamicBatcher, FlushReason, Pending};
+use super::router::Router;
+use super::stats::LatencyHistogram;
+
+/// NN row width of the `nn_small` artifact.
+pub const NN_WIDTH: usize = 256;
+/// NN batch capacity of the `nn_small` artifact.
+pub const NN_BATCH: usize = 8;
+/// Sort row count × width of the `sort_small` artifact.
+const SORT_ELEMS: usize = 16 * 256;
+
+/// Serving experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Placement policy.
+    pub policy: PolicyKind,
+    /// Device count (each gets one worker thread + one PJRT engine).
+    pub devices: usize,
+    /// Closed-loop concurrency (requests kept in flight).
+    pub inflight: u32,
+    /// Fraction of requests that are sort-class (vs NN-class).
+    pub sort_fraction: f64,
+    /// Batching deadline for NN requests.
+    pub batch_deadline: Duration,
+    /// Total requests to serve.
+    pub total: u64,
+    /// Seed.
+    pub seed: u64,
+    /// Measured affinity matrix (class × device); defaults to Table-3
+    /// general-symmetric when `None`.
+    pub mu: Option<AffinityMatrix>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            policy: PolicyKind::Cab,
+            devices: 2,
+            inflight: 16,
+            sort_fraction: 0.5,
+            batch_deadline: Duration::from_millis(4),
+            total: 400,
+            seed: 0xC0FFEE,
+            mu: None,
+        }
+    }
+}
+
+/// Serving run report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Requests served.
+    pub served: u64,
+    /// Wall-clock seconds.
+    pub elapsed_s: f64,
+    /// Requests/second.
+    pub rps: f64,
+    /// Latency histogram, sort class.
+    pub sort_latency: LatencyHistogram,
+    /// Latency histogram, NN class.
+    pub nn_latency: LatencyHistogram,
+    /// NN batches launched.
+    pub batches: u64,
+    /// Mean NN batch fill (requests per launch / capacity).
+    pub batch_fill: f64,
+    /// Flush-reason counts (full, deadline, drain).
+    pub flushes: [u64; 3],
+}
+
+enum Work {
+    Sort { id: u64, class: usize, arrived: Instant },
+    Nn(Batch),
+}
+
+struct Done {
+    /// Request id (kept for tracing/debug symmetry with `Work::Sort`).
+    #[allow(dead_code)]
+    id: u64,
+    class: usize,
+    device: usize,
+    arrived: Instant,
+}
+
+/// The serving coordinator.
+pub struct Coordinator;
+
+impl Coordinator {
+    /// Run a closed-loop serving experiment.
+    pub fn run(cfg: &ServeConfig) -> Result<ServeReport> {
+        if cfg.devices < 1 || cfg.inflight == 0 || cfg.total == 0 {
+            return Err(Error::Config("devices, inflight, total must be ≥ 1".into()));
+        }
+        let mu = match &cfg.mu {
+            Some(m) => m.clone(),
+            None => crate::sim::workload::table3::general_symmetric(),
+        };
+        if mu.procs() != cfg.devices || mu.types() != 2 {
+            return Err(Error::Config(format!(
+                "μ is {}×{}, config wants 2×{}",
+                mu.types(),
+                mu.procs(),
+                cfg.devices
+            )));
+        }
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        // Expected in-flight split drives the policy's target solve.
+        let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
+            .clamp(1, cfg.inflight - 1);
+        let mut router = Router::new(
+            mu,
+            omega,
+            vec![n_sort, cfg.inflight - n_sort],
+            cfg.policy.build(),
+            cfg.seed,
+        )?;
+
+        // Device workers.
+        let (done_tx, done_rx): (Sender<Done>, Receiver<Done>) = channel();
+        let mut work_txs: Vec<Sender<Work>> = Vec::new();
+        let mut handles = Vec::new();
+        for d in 0..cfg.devices {
+            let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
+            work_txs.push(tx);
+            let done = done_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-dev{d}"))
+                    .spawn(move || -> Result<()> {
+                        let engine = Engine::open_default()?;
+                        let mut rng = Rng::new(0xD0 + d as u64);
+                        let sort_in: Vec<f32> = (0..SORT_ELEMS)
+                            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+                            .collect();
+                        let mut w = vec![0f32; NN_WIDTH * NN_WIDTH];
+                        for i in 0..NN_WIDTH {
+                            w[i * NN_WIDTH + i] = 0.5;
+                        }
+                        let b = vec![0.1f32; NN_WIDTH];
+                        while let Ok(work) = rx.recv() {
+                            match work {
+                                Work::Sort { id, class, arrived } => {
+                                    engine.sort_task("sort_small", &sort_in)?;
+                                    let _ = done.send(Done { id, class, device: d, arrived });
+                                }
+                                Work::Nn(batch) => {
+                                    engine.nn_task("nn_small", &batch.input, &w, &b)?;
+                                    for r in batch.requests {
+                                        let _ = done.send(Done {
+                                            id: r.id,
+                                            class: 1,
+                                            device: d,
+                                            arrived: r.arrived,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                    .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?,
+            );
+        }
+        drop(done_tx);
+
+        let mut batchers: Vec<DynamicBatcher> = (0..cfg.devices)
+            .map(|_| DynamicBatcher::new(NN_BATCH, NN_WIDTH, cfg.batch_deadline))
+            .collect();
+        let mut rng = Rng::new(cfg.seed ^ 0xF00D);
+        let mut next_id = 0u64;
+        let mut issued = 0u64;
+        let mut served = 0u64;
+        let mut batches = 0u64;
+        let mut batch_fill_sum = 0f64;
+        let mut flushes = [0u64; 3];
+        let mut sort_latency = LatencyHistogram::new();
+        let mut nn_latency = LatencyHistogram::new();
+
+        let submit_batch = |j: usize, batch: Batch,
+                                batches: &mut u64,
+                                fill: &mut f64,
+                                flushes: &mut [u64; 3]|
+         -> Result<()> {
+            *batches += 1;
+            *fill += batch.requests.len() as f64 / NN_BATCH as f64;
+            flushes[match batch.reason {
+                FlushReason::Full => 0,
+                FlushReason::Deadline => 1,
+                FlushReason::Drain => 2,
+            }] += 1;
+            work_txs[j]
+                .send(Work::Nn(batch))
+                .map_err(|_| Error::Runtime("device worker gone".into()))
+        };
+
+        let issue = |router: &mut Router,
+                         batchers: &mut Vec<DynamicBatcher>,
+                         rng: &mut Rng,
+                         next_id: &mut u64,
+                         batches: &mut u64,
+                         fill: &mut f64,
+                         flushes: &mut [u64; 3]|
+         -> Result<()> {
+            let class = usize::from(!rng.bool_with(cfg.sort_fraction));
+            let id = *next_id;
+            *next_id += 1;
+            let j = router.route(class);
+            if class == 0 {
+                work_txs[j]
+                    .send(Work::Sort { id, class, arrived: Instant::now() })
+                    .map_err(|_| Error::Runtime("device worker gone".into()))?;
+            } else {
+                let row: Vec<f32> =
+                    (0..NN_WIDTH).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+                let p = Pending { id, row, arrived: Instant::now() };
+                if let Some(batch) = batchers[j].push(p) {
+                    submit_batch(j, batch, batches, fill, flushes)?;
+                }
+            }
+            Ok(())
+        };
+
+        let t0 = Instant::now();
+        // Fill the pipe.
+        while issued < cfg.inflight as u64 && issued < cfg.total {
+            issue(
+                &mut router, &mut batchers, &mut rng, &mut next_id,
+                &mut batches, &mut batch_fill_sum, &mut flushes,
+            )?;
+            issued += 1;
+        }
+
+        while served < cfg.total {
+            // Poll deadline flushes.
+            let now = Instant::now();
+            for j in 0..cfg.devices {
+                if let Some(batch) = batchers[j].poll(now) {
+                    submit_batch(j, batch, &mut batches, &mut batch_fill_sum, &mut flushes)?;
+                }
+            }
+            let wait = batchers
+                .iter()
+                .filter_map(|b| b.time_to_deadline(now))
+                .min()
+                .unwrap_or(Duration::from_millis(50));
+            match done_rx.recv_timeout(wait.max(Duration::from_micros(100))) {
+                Ok(done) => {
+                    router.complete(done.class, done.device)?;
+                    let lat = done.arrived.elapsed().as_secs_f64();
+                    if done.class == 0 {
+                        sort_latency.record_s(lat);
+                    } else {
+                        nn_latency.record_s(lat);
+                    }
+                    served += 1;
+                    if issued < cfg.total {
+                        issue(
+                            &mut router, &mut batchers, &mut rng, &mut next_id,
+                            &mut batches, &mut batch_fill_sum, &mut flushes,
+                        )?;
+                        issued += 1;
+                    } else {
+                        // Tail: drain partial batches so stragglers finish.
+                        for j in 0..cfg.devices {
+                            if let Some(batch) = batchers[j].drain() {
+                                submit_batch(
+                                    j, batch, &mut batches, &mut batch_fill_sum, &mut flushes,
+                                )?;
+                            }
+                        }
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Runtime("all device workers exited".into()));
+                }
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        drop(work_txs);
+        for h in handles {
+            h.join().map_err(|_| Error::Runtime("worker panicked".into()))??;
+        }
+
+        Ok(ServeReport {
+            served,
+            elapsed_s: elapsed,
+            rps: served as f64 / elapsed,
+            sort_latency,
+            nn_latency,
+            batches,
+            batch_fill: if batches > 0 { batch_fill_sum / batches as f64 } else { 0.0 },
+            flushes,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = ServeConfig { total: 0, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        cfg.total = 10;
+        cfg.devices = 3; // μ is 2×2
+        assert!(Coordinator::run(&cfg).is_err());
+    }
+
+    // Full serving runs need artifacts: see `tests/serving_e2e.rs` and
+    // `examples/serving_router.rs`.
+}

@@ -1,0 +1,22 @@
+//! Serving-style coordinator: request router + dynamic batcher + leader.
+//!
+//! The paper's policies decide *where* work runs; this module embeds them
+//! in a live serving loop (the L3 mandate): open- or closed-loop clients
+//! submit requests of different classes (sort-type / NN-type), the
+//! [`router`] applies any [`crate::policy::Policy`] against live queue
+//! state, the [`batcher`] coalesces NN requests into PJRT-batch-sized
+//! kernel launches (`nn_small` executes 8 rows per call), and [`stats`]
+//! reports throughput + latency percentiles.
+//!
+//! Python never appears here: workers execute AOT artifacts through
+//! [`crate::runtime::Engine`].
+
+pub mod batcher;
+pub mod leader;
+pub mod router;
+pub mod stats;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use leader::{Coordinator, ServeConfig, ServeReport};
+pub use router::Router;
+pub use stats::LatencyHistogram;

@@ -1,0 +1,159 @@
+//! Request router: live queue-state tracking + policy-driven placement.
+//!
+//! The router owns the authoritative occupancy matrix (requests in flight
+//! per class × device) and per-device work estimates, hands a
+//! [`SystemView`] to the configured [`Policy`] for every request, and
+//! updates state on completion callbacks — the same contract the
+//! simulator and the platform rig use, so any policy drops in unchanged.
+
+use crate::error::Result;
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::policy::{Policy, SystemView};
+use crate::sim::rng::Rng;
+
+/// The router.
+pub struct Router {
+    mu: AffinityMatrix,
+    populations: Vec<u32>,
+    state: StateMatrix,
+    /// Mean service seconds per (class, device) — the work estimator.
+    omega: Vec<f64>,
+    work: Vec<f64>,
+    policy: Box<dyn Policy>,
+    rng: Rng,
+    routed: u64,
+}
+
+impl Router {
+    /// Build a router; `omega[i*l + j]` is the measured mean service time
+    /// of class i on device j (from [`crate::platform::measure`]).
+    pub fn new(
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        expected_inflight: Vec<u32>,
+        mut policy: Box<dyn Policy>,
+        seed: u64,
+    ) -> Result<Self> {
+        policy.prepare(&mu, &expected_inflight)?;
+        let (k, l) = (mu.types(), mu.procs());
+        Ok(Self {
+            state: StateMatrix::zeros(k, l),
+            work: vec![0.0; l],
+            mu,
+            populations: expected_inflight,
+            omega,
+            policy,
+            rng: Rng::new(seed),
+            routed: 0,
+        })
+    }
+
+    /// Route one request of `class`; returns the chosen device.
+    pub fn route(&mut self, class: usize) -> usize {
+        let l = self.mu.procs();
+        for j in 0..l {
+            self.work[j] = (0..self.mu.types())
+                .map(|i| self.state.get(i, j) as f64 * self.omega[i * l + j])
+                .sum();
+        }
+        let view = SystemView {
+            mu: &self.mu,
+            state: &self.state,
+            work: &self.work,
+            populations: &self.populations,
+        };
+        let j = self.policy.dispatch(class, &view, &mut self.rng);
+        self.state.inc(class, j);
+        self.routed += 1;
+        j
+    }
+
+    /// Completion callback.
+    pub fn complete(&mut self, class: usize, device: usize) -> Result<()> {
+        self.state.dec(class, device)
+    }
+
+    /// Requests currently in flight.
+    pub fn inflight(&self) -> u32 {
+        self.state.total()
+    }
+
+    /// Total requests routed.
+    pub fn routed(&self) -> u64 {
+        self.routed
+    }
+
+    /// Live occupancy matrix.
+    pub fn state(&self) -> &StateMatrix {
+        &self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policy::PolicyKind;
+    use crate::sim::workload;
+
+    fn router(kind: PolicyKind) -> Router {
+        let mu = workload::table3::p2_biased();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        Router::new(mu, omega, vec![10, 10], kind.build(), 7).unwrap()
+    }
+
+    #[test]
+    fn tracks_inflight_state() {
+        let mut r = router(PolicyKind::Cab);
+        let d0 = r.route(0);
+        let d1 = r.route(1);
+        assert_eq!(r.inflight(), 2);
+        assert_eq!(r.routed(), 2);
+        r.complete(0, d0).unwrap();
+        r.complete(1, d1).unwrap();
+        assert_eq!(r.inflight(), 0);
+        assert!(r.complete(0, 0).is_err()); // double-complete guarded
+    }
+
+    #[test]
+    fn cab_routes_p2_biased_like_af() {
+        // P2-biased AF target (N1, 1): all class-0 on the CPU, N2−1
+        // class-1 slots on the CPU, exactly one class-1 slot on the GPU.
+        let mut r = router(PolicyKind::Cab);
+        for _ in 0..10 {
+            assert_eq!(r.route(0), 0);
+        }
+        // Class-1: the CPU deficit (9) dominates until it fills …
+        let mut placements = Vec::new();
+        for _ in 0..10 {
+            placements.push(r.route(1));
+        }
+        assert_eq!(placements.iter().filter(|&&d| d == 0).count(), 9);
+        assert_eq!(placements.iter().filter(|&&d| d == 1).count(), 1);
+        // … and the full state is the AF target.
+        assert_eq!(r.state().get(0, 0), 10);
+        assert_eq!(r.state().get(1, 0), 9);
+        assert_eq!(r.state().get(1, 1), 1);
+    }
+
+    #[test]
+    fn lb_balances_work() {
+        // Near-symmetric service times so LB must alternate devices.
+        let mu = crate::model::affinity::AffinityMatrix::two_type(10.0, 9.0, 3.0, 8.0)
+            .unwrap();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        let mut r = Router::new(
+            mu,
+            omega,
+            vec![10, 10],
+            PolicyKind::LoadBalance.build(),
+            7,
+        )
+        .unwrap();
+        let mut counts = [0usize; 2];
+        for _ in 0..20 {
+            counts[r.route(0)] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0, "{counts:?}");
+    }
+}

@@ -1,0 +1,116 @@
+//! Serving statistics: lock-free-ish latency histogram + counters.
+//!
+//! Log-spaced buckets from 1µs to ~67s give <5% quantile error across the
+//! whole range — the standard serving-telemetry trade-off.
+
+/// Log-bucketed latency histogram (microsecond resolution floor).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket counts; bucket b covers [2^b, 2^(b+1)) µs.
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u128,
+    max_us: u64,
+}
+
+const NBUCKETS: usize = 27; // 2^26 µs ≈ 67 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self { buckets: vec![0; NBUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// Record one latency in seconds.
+    pub fn record_s(&mut self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(NBUCKETS - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us as u128;
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Mean latency in seconds.
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_us as f64 / self.count as f64 / 1e6
+    }
+
+    /// Approximate quantile (bucket upper edge), seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (b, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return (1u64 << (b + 1)) as f64 / 1e6;
+            }
+        }
+        self.max_us as f64 / 1e6
+    }
+
+    /// Merge another histogram in.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bracket_samples() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_s(i as f64 / 1000.0); // 1ms .. 1s
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        // Bucket edges are powers of two: p50 of U(1ms,1s) ≈ 0.5s → edge 0.524s.
+        assert!(p50 >= 0.25 && p50 <= 1.1, "p50 {p50}");
+        let p99 = h.quantile_s(0.99);
+        assert!(p99 >= p50);
+        assert!((h.mean_s() - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record_s(0.001);
+        b.record_s(1.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.quantile_s(1.0) >= 1.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_s(), 0.0);
+        assert_eq!(h.quantile_s(0.99), 0.0);
+    }
+}

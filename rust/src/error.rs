@@ -1,0 +1,44 @@
+//! Crate error type.
+
+use thiserror::Error;
+
+/// All errors produced by hetsched.
+#[derive(Debug, Error)]
+pub enum Error {
+    /// Dimension / shape mismatch in model math.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Invalid configuration or CLI arguments.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Parse failure (JSON/config/CLI).
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Solver failed to converge or was given an infeasible problem.
+    #[error("solver error: {0}")]
+    Solver(String),
+
+    /// Artifact missing / runtime failure around the PJRT layer.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Underlying XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate result alias.
+pub type Result<T> = std::result::Result<T, Error>;

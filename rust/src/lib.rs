@@ -1,0 +1,69 @@
+//! # hetsched
+//!
+//! Production reproduction of *"Task Scheduling for Heterogeneous Multicore
+//! Systems"* (Chen & Marculescu, 2017): optimal closed-system task
+//! scheduling for heterogeneous processors.
+//!
+//! The paper's contributions, all implemented here:
+//!
+//! * **Model** ([`model`]): the closed-batch-network throughput function
+//!   X(S) (Eq. 4 / Eq. 28), the affinity/power matrices and the six-regime
+//!   classification of Table 1, energy & EDP (Eqs. 19–23).
+//! * **CAB** ([`policy::cab`]): the analytically optimal
+//!   Choose-between-Accelerate-the-fastest-and-Best-fit policy for two
+//!   processor types (Lemma 4 / Table 1).
+//! * **GrIn** ([`policy::grin`]): the greedy-increase heuristic for any
+//!   number of processor types (Algorithms 1–2, Lemma 8), within 1.6% of
+//!   the exhaustive optimum.
+//! * **Baselines** ([`policy`]): Random, Best-Fit, Join-Shortest-Queue and
+//!   perfect-information Load-Balancing, exactly as simulated in §5.
+//! * **Solvers** ([`solver`]): the exhaustive integer oracle ("Opt") and an
+//!   in-repo SLSQP (the paper's comparator [32]) over the relaxed problem,
+//!   built on a dense-linalg + active-set-QP substrate.
+//! * **Simulator** ([`sim`]): discrete-event closed batch network with
+//!   PS / FCFS / LCFS disciplines and the four task-size distributions of
+//!   §5 (exponential, bounded Pareto, uniform, constant).
+//! * **Runtime** ([`runtime`]): PJRT CPU client executing the AOT-lowered
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) — the L1/L2 layers.
+//! * **Platform** ([`platform`]): the §7 CPU+GPU testbed emulation — worker
+//!   threads running *real* PJRT kernels with affinity-derived repetition
+//!   counts, FCFS device queues, rate measurement (Table 3).
+//! * **Coordinator** ([`coordinator`]): serving-style router + dynamic
+//!   batcher + leader loop, so the policy suite drives a live system.
+//!
+//! Offline-substrate modules (no external crates available in this build
+//! environment): [`cli`] (argument parsing), [`config`] (JSON/config
+//! parsing), [`report`] (bench tables/series), [`testkit`] (property
+//! testing), [`sim::rng`] (PCG64 + samplers).
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod model;
+pub mod platform;
+pub mod policy;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod testkit;
+
+pub use error::{Error, Result};
+
+/// Crate-wide prelude for examples and benches.
+pub mod prelude {
+    pub use crate::error::{Error, Result};
+    pub use crate::model::affinity::{AffinityMatrix, Regime};
+    pub use crate::model::energy::{EnergyModel, PowerScenario};
+    pub use crate::model::state::StateMatrix;
+    pub use crate::model::throughput;
+    pub use crate::policy::{self, Policy, PolicyKind};
+    pub use crate::sim::distribution::Distribution;
+    pub use crate::sim::engine::{ClosedNetwork, SimConfig};
+    pub use crate::sim::metrics::SimResult;
+    pub use crate::sim::processor::Discipline;
+    pub use crate::sim::rng::Rng;
+    pub use crate::solver::exhaustive::ExhaustiveSolver;
+    pub use crate::solver::slsqp::Slsqp;
+}

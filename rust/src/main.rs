@@ -1,0 +1,19 @@
+//! `hetsched` — the launcher binary.
+//!
+//! See `hetsched help` (cli::commands::USAGE) for the command surface.
+
+use hetsched::cli::{commands, Args};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = commands::run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,286 @@
+//! Affinity matrix μ (Def. 3) and the Table-1 regime classification.
+//!
+//! `μ[i][j]` is the processing rate of an i-type task on a j-type
+//! processor (work units / second when running alone).  For the two-type
+//! case the paper's affinity constraint (Eq. 2) is `μ11 > μ12` and
+//! `μ21 < μ22`; the *relative ordering* of the four entries — never their
+//! exact values — selects the optimal policy (Lemma 4).
+
+use crate::error::{Error, Result};
+
+/// Dense k×l affinity matrix, row = task type, column = processor type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AffinityMatrix {
+    k: usize,
+    l: usize,
+    mu: Vec<f64>,
+}
+
+impl AffinityMatrix {
+    /// Build from row-major data; all rates must be finite and positive.
+    pub fn new(k: usize, l: usize, mu: Vec<f64>) -> Result<Self> {
+        if k == 0 || l == 0 || mu.len() != k * l {
+            return Err(Error::Shape(format!(
+                "affinity matrix {}x{} with {} entries",
+                k,
+                l,
+                mu.len()
+            )));
+        }
+        if mu.iter().any(|&m| !m.is_finite() || m <= 0.0) {
+            return Err(Error::Shape(
+                "all processing rates must be finite and > 0".into(),
+            ));
+        }
+        Ok(Self { k, l, mu })
+    }
+
+    /// Build from rows (each row = one task type across processors).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Result<Self> {
+        let k = rows.len();
+        let l = rows.first().map(|r| r.len()).unwrap_or(0);
+        if rows.iter().any(|r| r.len() != l) {
+            return Err(Error::Shape("ragged affinity rows".into()));
+        }
+        Self::new(k, l, rows.concat())
+    }
+
+    /// The paper's running two-type example helper.
+    pub fn two_type(mu11: f64, mu12: f64, mu21: f64, mu22: f64) -> Result<Self> {
+        Self::new(2, 2, vec![mu11, mu12, mu21, mu22])
+    }
+
+    /// Number of task types (rows).
+    #[inline]
+    pub fn types(&self) -> usize {
+        self.k
+    }
+
+    /// Number of processor types (columns).
+    #[inline]
+    pub fn procs(&self) -> usize {
+        self.l
+    }
+
+    /// Rate of i-type task on processor j.
+    #[inline]
+    pub fn rate(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.k && j < self.l);
+        self.mu[i * self.l + j]
+    }
+
+    /// Row slice for task type `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.mu[i * self.l..(i + 1) * self.l]
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.mu
+    }
+
+    /// The processor on which task type `i` is fastest (Best-Fit target).
+    pub fn best_proc(&self, i: usize) -> usize {
+        let row = self.row(i);
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        best
+    }
+
+    /// Row index of the maximum rate in column `j` ("max j-col μ",
+    /// Algorithm 1).
+    pub fn max_col_row(&self, j: usize) -> usize {
+        let mut best = 0usize;
+        for i in 1..self.k {
+            if self.rate(i, j) > self.rate(best, j) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Does the matrix satisfy the two-type affinity constraint (Eq. 2)?
+    ///
+    /// Only meaningful for 2×2; general matrices use [`Self::best_proc`].
+    pub fn satisfies_two_type_affinity(&self) -> bool {
+        self.k == 2
+            && self.l == 2
+            && self.rate(0, 0) > self.rate(0, 1)
+            && self.rate(1, 0) < self.rate(1, 1)
+    }
+
+    /// Classify a 2×2 system into the Table-1 regime.
+    pub fn classify(&self) -> Result<Regime> {
+        if self.k != 2 || self.l != 2 {
+            return Err(Error::Shape(
+                "regime classification is defined for 2x2 systems".into(),
+            ));
+        }
+        let (m11, m12) = (self.rate(0, 0), self.rate(0, 1));
+        let (m21, m22) = (self.rate(1, 0), self.rate(1, 1));
+        let eq = |a: f64, b: f64| (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1.0);
+
+        // Non-affinity regimes first (rows of Table 1).
+        if eq(m11, m22) && eq(m11, m12) && eq(m11, m21) {
+            return Ok(Regime::Homogeneous);
+        }
+        if eq(m11, m21) && eq(m22, m12) && !eq(m11, m22) {
+            return Ok(Regime::BigLittleLike);
+        }
+        if eq(m11, m22) && eq(m12, m21) && m11 > m12 {
+            return Ok(Regime::Symmetric);
+        }
+        // Affinity regimes require Eq. 2.
+        if !(m11 > m12 && m21 < m22) {
+            return Err(Error::Shape(format!(
+                "matrix violates the affinity constraint (Eq. 2): \
+                 [[{m11},{m12}],[{m21},{m22}]]"
+            )));
+        }
+        // Vertical (within-column) orderings select the case.
+        let left_down = m11 > m21; // processor 1 prefers type-1 tasks
+        let right_down = m12 > m22; // processor 2 runs type-1 faster
+        match (left_down, right_down) {
+            (true, false) => Ok(Regime::GeneralSymmetric),
+            (true, true) => Ok(Regime::P1Biased),
+            (false, false) => Ok(Regime::P2Biased),
+            // Case b.4 of the proof: impossible under Eq. 2
+            // (μ21 > μ11 > μ12 > μ22 contradicts μ21 < μ22).
+            (false, true) => Err(Error::Shape(
+                "invalid affinity ordering (case b.4 of Lemma 4)".into(),
+            )),
+        }
+    }
+
+    /// Power matrix 𝒫_ij = c·μ_ij^α (Def. 4 + the §3.2 exponential
+    /// power/performance relation).
+    pub fn power_matrix(&self, coeff: f64, alpha: f64) -> Vec<f64> {
+        self.mu.iter().map(|&m| coeff * m.powf(alpha)).collect()
+    }
+}
+
+/// The six system regimes of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// μ11 = μ12 = μ21 = μ22: classic SMP; any non-empty split is optimal.
+    Homogeneous,
+    /// μ11 = μ21, μ12 = μ22, μ11 ≠ μ22: iso-ISA, speed-only heterogeneity.
+    BigLittleLike,
+    /// μ11 = μ22 ≜ μ1 > μ12 = μ21 ≜ μ2: the symmetric affinity system.
+    Symmetric,
+    /// μ11 > μ21 and μ22 > μ12: each processor is fastest on "its" task
+    /// type → Best-Fit is optimal, S_max = (N1, N2).
+    GeneralSymmetric,
+    /// μ11 > μ21 and μ12 > μ22: type-1 tasks are faster *everywhere* →
+    /// Accelerate-the-Fastest, S_max = (1, N2) (Eq. 16).
+    P1Biased,
+    /// μ21 > μ11 and μ22 > μ12: type-2 tasks are faster everywhere →
+    /// Accelerate-the-Fastest, S_max = (N1, 1) (Eq. 17).
+    P2Biased,
+}
+
+impl Regime {
+    /// Does CAB choose Accelerate-the-Fastest (vs Best-Fit) here?
+    pub fn is_biased(self) -> bool {
+        matches!(self, Regime::P1Biased | Regime::P2Biased)
+    }
+
+    /// Human-readable Table-1 row name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Regime::Homogeneous => "homogeneous",
+            Regime::BigLittleLike => "big.LITTLE-like",
+            Regime::Symmetric => "symmetric",
+            Regime::GeneralSymmetric => "general-symmetric",
+            Regime::P1Biased => "P1-biased",
+            Regime::P2Biased => "P2-biased",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(a: f64, b: f64, c: f64, d: f64) -> AffinityMatrix {
+        AffinityMatrix::two_type(a, b, c, d).unwrap()
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_rates() {
+        assert!(AffinityMatrix::new(2, 2, vec![1.0; 3]).is_err());
+        assert!(AffinityMatrix::new(0, 2, vec![]).is_err());
+        assert!(AffinityMatrix::new(1, 2, vec![1.0, -1.0]).is_err());
+        assert!(AffinityMatrix::new(1, 2, vec![1.0, f64::NAN]).is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        let a = m(20.0, 15.0, 3.0, 8.0);
+        assert_eq!(a.types(), 2);
+        assert_eq!(a.procs(), 2);
+        assert_eq!(a.rate(0, 1), 15.0);
+        assert_eq!(a.row(1), &[3.0, 8.0]);
+        assert_eq!(a.best_proc(0), 0);
+        assert_eq!(a.best_proc(1), 1);
+        assert_eq!(a.max_col_row(0), 0);
+        assert_eq!(a.max_col_row(1), 0); // 15 > 8
+    }
+
+    #[test]
+    fn classify_paper_cases() {
+        // The paper's P1-biased simulation matrix (§5).
+        assert_eq!(m(20.0, 15.0, 3.0, 8.0).classify().unwrap(), Regime::P1Biased);
+        // General-symmetric: quicksort-500 + NN-2000 (Table 3 rows 1 & 3).
+        assert_eq!(
+            m(928.0, 3.61, 587.0, 2398.0).classify().unwrap(),
+            Regime::GeneralSymmetric
+        );
+        // P2-biased: quicksort-1000 + NN-2000 (Table 3 rows 2 & 3).
+        assert_eq!(
+            m(253.0, 0.911, 587.0, 2398.0).classify().unwrap(),
+            Regime::P2Biased
+        );
+        assert_eq!(
+            m(5.0, 5.0, 5.0, 5.0).classify().unwrap(),
+            Regime::Homogeneous
+        );
+        assert_eq!(
+            m(5.0, 2.0, 5.0, 2.0).classify().unwrap(),
+            Regime::BigLittleLike
+        );
+        assert_eq!(m(5.0, 2.0, 2.0, 5.0).classify().unwrap(), Regime::Symmetric);
+    }
+
+    #[test]
+    fn classify_rejects_non_affinity_and_b4() {
+        // Violates Eq. 2 outright (μ11 < μ12).
+        assert!(m(2.0, 5.0, 3.0, 8.0).classify().is_err());
+        // Case b.4 cannot be constructed under Eq. 2: μ21 > μ11 and
+        // μ12 > μ22 forces μ21 > μ22. Verify the constructor path.
+        assert!(m(5.0, 4.0, 6.0, 3.0).classify().is_err());
+    }
+
+    #[test]
+    fn power_matrix_scenarios() {
+        let a = m(20.0, 15.0, 3.0, 8.0);
+        // Scenario 1: constant power (α = 0).
+        assert_eq!(a.power_matrix(2.0, 0.0), vec![2.0; 4]);
+        // Scenario 2: proportional power (α = 1).
+        assert_eq!(a.power_matrix(1.0, 1.0), vec![20.0, 15.0, 3.0, 8.0]);
+    }
+
+    #[test]
+    fn regime_helpers() {
+        assert!(Regime::P1Biased.is_biased());
+        assert!(Regime::P2Biased.is_biased());
+        assert!(!Regime::GeneralSymmetric.is_biased());
+        assert_eq!(Regime::Symmetric.name(), "symmetric");
+    }
+}

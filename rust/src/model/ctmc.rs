@@ -1,0 +1,391 @@
+//! The §3.3 Continuous-Time Markov Chain analysis (Fig. 3).
+//!
+//! Under exponential task sizes the two-type closed network is a CTMC
+//! over the (N_s = (N1+1)(N2+1)) states S = (N11, N22).  The paper's
+//! "general method" (§3.3): (i) write the balance equations for a given
+//! routing policy r, (ii) solve for the limiting probabilities p(S),
+//! (iii) X_sys = Σ p(S)·X(S) (Eq. 9), (iv) optimize over r.
+//!
+//! We implement (i)–(iii) exactly, for any *deterministic stationary*
+//! routing policy expressed as "where does the next i-type task go in
+//! state S".  This gives an analytic (simulation-free) throughput for
+//! every policy on small systems and verifies Lemma 2 numerically: the
+//! CAB routing concentrates all probability mass on S_max, and no policy
+//! exceeds max_S X(S).
+//!
+//! Transition structure (PS service, exponential sizes, mean 1): in
+//! state S a resident i-type task on processor j completes with rate
+//! μ_ij·N_ij/occ_j (Eq. 5 summed over the N_ij tasks).  The completed
+//! program immediately re-issues an i-type task, routed by the policy —
+//! so a completion of (i, j) moves the system to the state with that
+//! task at policy(i, S′).
+
+use super::affinity::AffinityMatrix;
+use super::state::StateMatrix;
+use super::throughput::x_of_state;
+use crate::error::{Error, Result};
+use crate::solver::linalg::Mat;
+
+/// A stationary routing rule: given the task type that just departed and
+/// the intermediate state (task removed), return the destination
+/// processor (deterministic) or a probability split (`route_probs`).
+///
+/// **Reducibility caveat** (a real phenomenon this module exposed in our
+/// own simulator): *deterministic* routings frequently make the closed
+/// chain reducible — several disjoint recurrent classes, each with its
+/// own long-run throughput, selected by the initial fill.  The Eq.-10
+/// bound X_sys ≤ max X(S) holds for every class, so Lemma-2 checks remain
+/// valid, but a DES cross-validation must either pin the initial state or
+/// use a probabilistic (irreducible) routing such as [`RandomRouting`].
+pub trait Routing {
+    /// Destination processor for the re-issued i-type task.
+    fn route(&self, ttype: usize, intermediate: &StateMatrix) -> usize;
+
+    /// Probability of each destination (defaults to the deterministic
+    /// choice).  `probs.len() == l`; must sum to 1.
+    fn route_probs(&self, ttype: usize, intermediate: &StateMatrix, probs: &mut [f64]) {
+        probs.iter_mut().for_each(|p| *p = 0.0);
+        probs[self.route(ttype, intermediate)] = 1.0;
+    }
+}
+
+impl<F: Fn(usize, &StateMatrix) -> usize> Routing for F {
+    fn route(&self, ttype: usize, intermediate: &StateMatrix) -> usize {
+        self(ttype, intermediate)
+    }
+}
+
+/// The §5 RD baseline: uniform random dispatch.  Probabilistic ⇒ the
+/// chain is irreducible and the stationary distribution unique, which
+/// makes RD the right routing for CTMC-vs-simulation cross-validation.
+pub struct RandomRouting;
+
+impl Routing for RandomRouting {
+    fn route(&self, _ttype: usize, _inter: &StateMatrix) -> usize {
+        0 // unused: route_probs overrides
+    }
+
+    fn route_probs(&self, _ttype: usize, _inter: &StateMatrix, probs: &mut [f64]) {
+        let p = 1.0 / probs.len() as f64;
+        probs.iter_mut().for_each(|v| *v = p);
+    }
+}
+
+/// CTMC analysis result.
+#[derive(Debug, Clone)]
+pub struct CtmcSolution {
+    /// Limiting probability of each (N11, N22) state, row-major over
+    /// N11-major order (index = n11·(N2+1) + n22).
+    pub p: Vec<f64>,
+    /// Analytic long-run throughput Σ p(S)·X(S) (Eq. 9).
+    pub throughput: f64,
+    /// max_S X(S) over the reachable chain (Lemma 2's bound).
+    pub x_max: f64,
+    /// Population parameters.
+    pub n1: u32,
+    /// Population parameters.
+    pub n2: u32,
+}
+
+/// Build and solve the CTMC for a 2×2 system under a routing policy.
+pub fn solve(
+    mu: &AffinityMatrix,
+    n1: u32,
+    n2: u32,
+    routing: &dyn Routing,
+) -> Result<CtmcSolution> {
+    if mu.types() != 2 || mu.procs() != 2 {
+        return Err(Error::Shape("CTMC analysis is for 2x2 systems".into()));
+    }
+    if n1 + n2 == 0 {
+        return Err(Error::Config("empty system".into()));
+    }
+    let dim = ((n1 + 1) * (n2 + 1)) as usize;
+    let idx = |a: u32, b: u32| -> usize { (a * (n2 + 1) + b) as usize };
+
+    // Generator matrix Q (row = from-state): Q[s][t] = rate s→t.
+    let mut q = Mat::zeros(dim, dim);
+    for a in 0..=n1 {
+        for b in 0..=n2 {
+            let s = StateMatrix::from_two_type(a, b, n1, n2)?;
+            let from = idx(a, b);
+            // Completion of an i-type task on processor j.
+            for i in 0..2usize {
+                for j in 0..2usize {
+                    let nij = s.get(i, j);
+                    if nij == 0 {
+                        continue;
+                    }
+                    let occ = s.col_sum(j);
+                    let rate = mu.rate(i, j) * nij as f64 / occ as f64;
+                    // Intermediate state: the task leaves cell (i, j).
+                    let mut inter = s.clone();
+                    inter.dec(i, j)?;
+                    // Policy re-issues the i-type task (possibly split
+                    // probabilistically across destinations).
+                    let mut probs = [0.0f64; 2];
+                    routing.route_probs(i, &inter, &mut probs);
+                    debug_assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+                    for (dest, &pr) in probs.iter().enumerate() {
+                        if pr == 0.0 {
+                            continue;
+                        }
+                        let mut next = inter.clone();
+                        next.inc(i, dest);
+                        let (na, nb) = (next.get(0, 0), next.get(1, 1));
+                        let to = idx(na, nb);
+                        if to != from {
+                            q[(from, to)] += rate * pr;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // Diagonal: Q[s][s] = −Σ_t≠s Q[s][t].
+    for s in 0..dim {
+        let row_sum: f64 = (0..dim).filter(|&t| t != s).map(|t| q[(s, t)]).sum();
+        q[(s, s)] = -row_sum;
+    }
+
+    // Solve πQ = 0, Σπ = 1 by uniformization + power iteration:
+    // P = I + Q/λ with λ > max |Q_ss| is a stochastic matrix with the
+    // same stationary vector.  Routing policies routinely make the chain
+    // *reducible* (CAB absorbs into S_max; deterministic rules leave
+    // unreachable/transient states), which breaks a direct linear solve;
+    // the power iteration started from uniform converges to the unique
+    // stationary distribution of the reachable recurrent class instead.
+    let lambda = (0..dim)
+        .map(|s| -q[(s, s)])
+        .fold(0.0f64, f64::max)
+        .max(1e-12)
+        * 1.05;
+    let mut p = vec![1.0 / dim as f64; dim];
+    let mut next = vec![0.0f64; dim];
+    let mut converged = false;
+    for _ in 0..200_000 {
+        // next = p · P = p + (p · Q)/λ.
+        next.copy_from_slice(&p);
+        for s in 0..dim {
+            let ps = p[s];
+            if ps == 0.0 {
+                continue;
+            }
+            for t in 0..dim {
+                let rate = q[(s, t)];
+                if rate != 0.0 {
+                    next[t] += ps * rate / lambda;
+                }
+            }
+        }
+        // Renormalize (guards numerical drift) and test convergence.
+        let total: f64 = next.iter().sum();
+        let mut delta = 0.0f64;
+        for t in 0..dim {
+            next[t] /= total;
+            delta = delta.max((next[t] - p[t]).abs());
+        }
+        std::mem::swap(&mut p, &mut next);
+        if delta < 1e-13 {
+            converged = true;
+            break;
+        }
+    }
+    if !converged {
+        return Err(Error::Solver("CTMC power iteration did not converge".into()));
+    }
+    for v in p.iter_mut() {
+        if v.abs() < 1e-12 {
+            *v = 0.0;
+        }
+    }
+
+    let mut throughput = 0.0;
+    let mut x_max = 0.0f64;
+    for a_ in 0..=n1 {
+        for b in 0..=n2 {
+            let s = StateMatrix::from_two_type(a_, b, n1, n2)?;
+            let x = x_of_state(mu, &s);
+            x_max = x_max.max(x);
+            throughput += p[idx(a_, b)].max(0.0) * x;
+        }
+    }
+    Ok(CtmcSolution { p, throughput, x_max, n1, n2 })
+}
+
+/// The CAB routing rule as a [`Routing`] (deficit steering to S_max).
+pub struct CabRouting {
+    target: StateMatrix,
+}
+
+impl CabRouting {
+    /// Build from the classified S_max for (n1, n2).
+    pub fn new(mu: &AffinityMatrix, n1: u32, n2: u32) -> Result<Self> {
+        let (_, target) = crate::policy::cab::Cab::target_state(mu, &[n1, n2])?;
+        Ok(Self { target })
+    }
+}
+
+impl Routing for CabRouting {
+    fn route(&self, ttype: usize, inter: &StateMatrix) -> usize {
+        // Largest deficit vs target (ties → processor 0 ordering is fine
+        // for the 2×2 chain).
+        let d0 = self.target.get(ttype, 0) as i64 - inter.get(ttype, 0) as i64;
+        let d1 = self.target.get(ttype, 1) as i64 - inter.get(ttype, 1) as i64;
+        usize::from(d1 > d0)
+    }
+}
+
+/// Best-Fit routing.
+pub struct BfRouting<'a> {
+    mu: &'a AffinityMatrix,
+}
+
+impl<'a> BfRouting<'a> {
+    /// Route every task to its fastest processor.
+    pub fn new(mu: &'a AffinityMatrix) -> Self {
+        Self { mu }
+    }
+}
+
+impl Routing for BfRouting<'_> {
+    fn route(&self, ttype: usize, _inter: &StateMatrix) -> usize {
+        self.mu.best_proc(ttype)
+    }
+}
+
+/// Join-the-shortest-queue routing, with the simulator's tie-break
+/// (equal occupancy → the task's faster processor).
+pub struct JsqRouting<'a> {
+    mu: &'a AffinityMatrix,
+}
+
+impl<'a> JsqRouting<'a> {
+    /// JSQ over a 2×2 system.
+    pub fn new(mu: &'a AffinityMatrix) -> Self {
+        Self { mu }
+    }
+}
+
+impl Routing for JsqRouting<'_> {
+    fn route(&self, ttype: usize, inter: &StateMatrix) -> usize {
+        let (o0, o1) = (inter.col_sum(0), inter.col_sum(1));
+        if o0 != o1 {
+            usize::from(o1 < o0)
+        } else {
+            usize::from(self.mu.rate(ttype, 1) > self.mu.rate(ttype, 0))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::Regime;
+    use crate::model::throughput::x_max_theoretical;
+    use crate::sim::workload;
+
+    #[test]
+    fn probabilities_sum_to_one() {
+        let mu = workload::paper_two_type_mu();
+        let sol = solve(&mu, 4, 4, &JsqRouting::new(&mu)).unwrap();
+        let total: f64 = sol.p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "Σp = {total}");
+    }
+
+    #[test]
+    fn cab_routing_concentrates_on_smax_lemma2() {
+        // Under CAB the chain is absorbed in S_max: p(S_max) = 1 and the
+        // analytic throughput equals the Eq. 16 optimum exactly.
+        let mu = workload::paper_two_type_mu();
+        let (n1, n2) = (5u32, 5);
+        let cab = CabRouting::new(&mu, n1, n2).unwrap();
+        let sol = solve(&mu, n1, n2, &cab).unwrap();
+        let want = x_max_theoretical(&mu, Regime::P1Biased, n1, n2);
+        assert!(
+            (sol.throughput - want).abs() < 1e-8,
+            "CTMC X = {} vs Eq.16 {want}",
+            sol.throughput
+        );
+        // All mass on (1, N2).
+        let idx = (1 * (n2 + 1) + n2) as usize;
+        assert!((sol.p[idx] - 1.0).abs() < 1e-8, "p(S_max) = {}", sol.p[idx]);
+        // And Lemma 2's bound holds with equality.
+        assert!((sol.x_max - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_routing_beats_xmax_eq9() {
+        // Eq. 10: Σ p(S)X(S) ≤ X_max for ANY routing.
+        let mu = workload::paper_two_type_mu();
+        for routing in [&JsqRouting::new(&mu) as &dyn Routing, &BfRouting::new(&mu)] {
+            let sol = solve(&mu, 4, 6, routing).unwrap();
+            assert!(
+                sol.throughput <= sol.x_max + 1e-9,
+                "routing beat X_max: {} > {}",
+                sol.throughput,
+                sol.x_max
+            );
+        }
+    }
+
+    #[test]
+    fn bf_routing_is_suboptimal_in_biased_regime() {
+        // The analytic counterpart of the §5 simulation finding.
+        let mu = workload::paper_two_type_mu();
+        let (n1, n2) = (5u32, 5);
+        let cab = solve(&mu, n1, n2, &CabRouting::new(&mu, n1, n2).unwrap()).unwrap();
+        let bf = solve(&mu, n1, n2, &BfRouting::new(&mu)).unwrap();
+        assert!(
+            cab.throughput > bf.throughput + 1e-6,
+            "CAB {} vs BF {}",
+            cab.throughput,
+            bf.throughput
+        );
+    }
+
+    #[test]
+    fn ctmc_matches_simulation_for_random_routing() {
+        // Cross-validation: analytic CTMC throughput ≈ simulated
+        // throughput under exponential sizes (the §3.3 assumption).
+        // RD is probabilistic ⇒ the chain is irreducible and the
+        // stationary distribution unique, so the DES must match it from
+        // any initial fill.  (Deterministic routings like JSQ split the
+        // chain into several recurrent classes — see the trait docs —
+        // making this comparison initial-state dependent.)
+        use crate::policy::PolicyKind;
+        use crate::sim::engine::{ClosedNetwork, SimConfig};
+        let mu = workload::paper_two_type_mu();
+        let (n1, n2) = (4u32, 4);
+        let analytic = solve(&mu, n1, n2, &RandomRouting).unwrap().throughput;
+        let mut cfg = SimConfig::paper_default(vec![n1, n2]);
+        cfg.warmup = 2_000;
+        cfg.measure = 60_000;
+        let net = ClosedNetwork::new(&mu, cfg).unwrap();
+        let sim = net.run(PolicyKind::Random.build().as_mut()).unwrap().throughput;
+        let rel = (analytic - sim).abs() / analytic;
+        assert!(rel < 0.03, "CTMC {analytic} vs sim {sim} ({rel:.3})");
+    }
+
+    #[test]
+    fn jsq_recurrent_class_stays_below_xmax() {
+        // JSQ's deterministic chain is reducible; whatever class the
+        // uniform-start power iteration mixes over, Eq. 10 bounds it.
+        let mu = workload::paper_two_type_mu();
+        let sol = solve(&mu, 4, 4, &JsqRouting::new(&mu)).unwrap();
+        assert!(sol.throughput <= sol.x_max + 1e-9);
+        assert!(sol.throughput > 0.0);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let mu3 = crate::model::affinity::AffinityMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+        ])
+        .unwrap();
+        assert!(solve(&mu3, 2, 2, &JsqRouting::new(&mu3)).is_err());
+        let mu = workload::paper_two_type_mu();
+        assert!(solve(&mu, 0, 0, &JsqRouting::new(&mu)).is_err());
+    }
+}

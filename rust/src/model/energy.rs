@@ -1,0 +1,221 @@
+//! Energy and Energy-Delay-Product model (§3.4).
+//!
+//! Expected energy per task (Eq. 19), delay per task via Little's Law
+//! (Eq. 20), EDP (Eq. 21), the Scenario-1/2 closed forms (Eqs. 22–23) and
+//! the Lemma-7 α-bounds.
+
+use super::affinity::AffinityMatrix;
+use super::state::StateMatrix;
+use super::throughput::x_of_state;
+use crate::error::{Error, Result};
+
+/// The two analyzed power scenarios (§3.2) plus the general exponent.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerScenario {
+    /// Scenario 1: 𝒫_ij = k (α = 0) — the strong/weak affinity boundary.
+    Constant,
+    /// Scenario 2: 𝒫_ij = k·μ_ij (α = 1) — power ∝ speed.
+    Proportional,
+    /// General regime: 𝒫_ij = k·μ_ij^α, α ≤ 1 (Lemma 7 bounds apply).
+    Exponent(f64),
+}
+
+impl PowerScenario {
+    /// The α exponent of this scenario.
+    pub fn alpha(self) -> f64 {
+        match self {
+            PowerScenario::Constant => 0.0,
+            PowerScenario::Proportional => 1.0,
+            PowerScenario::Exponent(a) => a,
+        }
+    }
+}
+
+/// Energy model bound to an affinity matrix: 𝒫_ij = coeff·μ_ij^α.
+#[derive(Debug, Clone)]
+pub struct EnergyModel {
+    power: Vec<f64>,
+    l: usize,
+    coeff: f64,
+    scenario: PowerScenario,
+}
+
+impl EnergyModel {
+    /// Build the power matrix for the scenario.
+    pub fn new(mu: &AffinityMatrix, coeff: f64, scenario: PowerScenario) -> Result<Self> {
+        if coeff <= 0.0 || !coeff.is_finite() {
+            return Err(Error::Config(format!("power coefficient {coeff}")));
+        }
+        let a = scenario.alpha();
+        if a > 1.0 {
+            return Err(Error::Config(format!(
+                "α = {a} > 1 is outside the paper's power model"
+            )));
+        }
+        Ok(Self {
+            power: mu.power_matrix(coeff, a),
+            l: mu.procs(),
+            coeff,
+            scenario,
+        })
+    }
+
+    /// 𝒫_ij.
+    #[inline]
+    pub fn power(&self, i: usize, j: usize) -> f64 {
+        self.power[i * self.l + j]
+    }
+
+    /// Expected energy per task (Eq. 19) at a given state.
+    ///
+    /// E[ℰ] = (1/X) Σ_j Σ_i (N_ij / occ_j) · 𝒫_ij, with empty processors
+    /// contributing nothing (they draw no dynamic task power).
+    pub fn energy_per_task(&self, mu: &AffinityMatrix, s: &StateMatrix) -> f64 {
+        let x = x_of_state(mu, s);
+        if x <= 0.0 {
+            return f64::INFINITY;
+        }
+        let mut acc = 0.0;
+        for j in 0..s.procs() {
+            let occ = s.col_sum(j);
+            if occ == 0 {
+                continue;
+            }
+            for i in 0..s.types() {
+                acc += s.get(i, j) as f64 / occ as f64 * self.power(i, j);
+            }
+        }
+        acc / x
+    }
+
+    /// Delay per task via Little's Law (Eq. 20): E[T] = N / X.
+    pub fn delay_per_task(&self, mu: &AffinityMatrix, s: &StateMatrix) -> f64 {
+        let x = x_of_state(mu, s);
+        if x <= 0.0 {
+            return f64::INFINITY;
+        }
+        s.total() as f64 / x
+    }
+
+    /// EDP (Eq. 21) = E[ℰ]·N/X.
+    pub fn edp(&self, mu: &AffinityMatrix, s: &StateMatrix) -> f64 {
+        self.energy_per_task(mu, s) * self.delay_per_task(mu, s)
+    }
+
+    /// Scenario closed forms (Eqs. 22–23) for an l=2 system with both
+    /// processors occupied; returns `(E[ℰ], EDP)` or None when the
+    /// closed form does not apply (general α).
+    pub fn closed_form(&self, x: f64, n_total: u32) -> Option<(f64, f64)> {
+        match self.scenario {
+            PowerScenario::Constant => {
+                let e = 2.0 * self.coeff / x;
+                Some((e, e * n_total as f64 / x))
+            }
+            PowerScenario::Proportional => {
+                let e = self.coeff;
+                Some((e, e * n_total as f64 / x))
+            }
+            PowerScenario::Exponent(_) => None,
+        }
+    }
+
+    /// Lemma-7 bounds on E[ℰ(α)] given throughput X: returns
+    /// `(lower, upper)`; `upper` may be +∞ only if X = 0.
+    pub fn lemma7_energy_bounds(&self, x: f64, n_procs_busy: usize) -> (f64, f64) {
+        let b = n_procs_busy as f64 * self.coeff / x; // Σ_busy k/X
+        match self.scenario.alpha() {
+            a if a <= 0.0 => (0.0, b),
+            _ => (b, self.coeff),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::Regime;
+    use crate::model::throughput::{x_max_theoretical, x_of_state};
+
+    fn setup() -> (AffinityMatrix, StateMatrix) {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        // S_max for P1-biased, N1 = N2 = 10.
+        let s = StateMatrix::from_two_type(1, 10, 10, 10).unwrap();
+        (mu, s)
+    }
+
+    #[test]
+    fn proportional_power_energy_is_constant_k() {
+        // Eq. 23: E[ℰ] = k under 𝒫 = k·μ (both processors busy).
+        let (mu, s) = setup();
+        let em = EnergyModel::new(&mu, 1.0, PowerScenario::Proportional).unwrap();
+        let e = em.energy_per_task(&mu, &s);
+        assert!((e - 1.0).abs() < 1e-12, "E[ℰ] = {e}");
+    }
+
+    #[test]
+    fn constant_power_energy_is_2k_over_x() {
+        // Eq. 22: E[ℰ] = 2k/X.
+        let (mu, s) = setup();
+        let em = EnergyModel::new(&mu, 3.0, PowerScenario::Constant).unwrap();
+        let x = x_of_state(&mu, &s);
+        let e = em.energy_per_task(&mu, &s);
+        assert!((e - 6.0 / x).abs() < 1e-12);
+        let (ec, edpc) = em.closed_form(x, s.total()).unwrap();
+        assert!((e - ec).abs() < 1e-12);
+        assert!((em.edp(&mu, &s) - edpc).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_throughput_minimizes_edp_scenarios() {
+        // Lemma 6: at S_max both energy and EDP are minimal among states.
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let em = EnergyModel::new(&mu, 1.0, PowerScenario::Constant).unwrap();
+        let (n1, n2) = (10u32, 10u32);
+        let s_opt = StateMatrix::from_two_type(1, n2, n1, n2).unwrap();
+        let best_edp = em.edp(&mu, &s_opt);
+        for n11 in 0..=n1 {
+            for n22 in 0..=n2 {
+                let s = StateMatrix::from_two_type(n11, n22, n1, n2).unwrap();
+                if x_of_state(&mu, &s) <= 0.0 {
+                    continue;
+                }
+                assert!(
+                    em.edp(&mu, &s) >= best_edp - 1e-9,
+                    "state ({n11},{n22}) beats S_max in EDP"
+                );
+            }
+        }
+        // And the optimum matches the Eq. 16 throughput.
+        let x = x_of_state(&mu, &s_opt);
+        let want = x_max_theoretical(&mu, Regime::P1Biased, n1, n2);
+        assert!((x - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lemma7_bounds_hold_for_intermediate_alpha() {
+        let (mu, s) = setup();
+        let x = x_of_state(&mu, &s);
+        for &alpha in &[-1.0, -0.5, 0.25, 0.5, 0.9] {
+            let em = EnergyModel::new(&mu, 1.0, PowerScenario::Exponent(alpha)).unwrap();
+            let e = em.energy_per_task(&mu, &s);
+            let (lo, hi) = em.lemma7_energy_bounds(x, 2);
+            assert!(e >= lo - 1e-9 && e <= hi + 1e-9, "α={alpha}: {lo} ≤ {e} ≤ {hi}");
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let (mu, _) = setup();
+        assert!(EnergyModel::new(&mu, 0.0, PowerScenario::Constant).is_err());
+        assert!(EnergyModel::new(&mu, 1.0, PowerScenario::Exponent(1.5)).is_err());
+    }
+
+    #[test]
+    fn empty_system_has_infinite_energy_and_delay() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let s = StateMatrix::zeros(2, 2);
+        let em = EnergyModel::new(&mu, 1.0, PowerScenario::Constant).unwrap();
+        assert!(em.energy_per_task(&mu, &s).is_infinite());
+        assert!(em.delay_per_task(&mu, &s).is_infinite());
+    }
+}

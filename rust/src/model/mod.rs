@@ -1,0 +1,19 @@
+//! Core mathematical model of the paper (§3–§4).
+//!
+//! * [`affinity`] — the k×l affinity matrix μ (Def. 3), the power matrix
+//!   𝒫 = kμ^α (Def. 4) and the six-regime classification of Table 1.
+//! * [`state`] — the system state matrix N (Def. 5) and its invariants.
+//! * [`throughput`] — X(S): Eq. 4 (two types), Eq. 28 (general), the
+//!   partial derivatives (Eqs. 11–12) and the move deltas X_df± used by
+//!   GrIn (Eqs. 34, 36).
+//! * [`energy`] — expected energy per task (Eq. 19), EDP (Eq. 21) and the
+//!   Scenario-1/2 closed forms (Eqs. 22–23) plus the Lemma-7 α-bounds.
+
+//! * [`ctmc`] — the §3.3 CTMC (Fig. 3): balance equations → limiting
+//!   probabilities → Eq. 9 throughput, for any stationary routing rule.
+
+pub mod affinity;
+pub mod ctmc;
+pub mod energy;
+pub mod state;
+pub mod throughput;

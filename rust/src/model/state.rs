@@ -1,0 +1,223 @@
+//! System state matrix N (Def. 5) — how many i-type tasks sit on each
+//! j-type processor — with the row-sum invariant of Eq. 3 / Eq. 29.
+
+use crate::error::{Error, Result};
+
+/// Dense k×l non-negative integer matrix; `n[i][j]` = number of i-type
+/// tasks on processor j.  Row sums are the per-type populations `N_i`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StateMatrix {
+    k: usize,
+    l: usize,
+    n: Vec<u32>,
+}
+
+impl StateMatrix {
+    /// All-zero state.
+    pub fn zeros(k: usize, l: usize) -> Self {
+        Self { k, l, n: vec![0; k * l] }
+    }
+
+    /// Build from row-major counts.
+    pub fn new(k: usize, l: usize, n: Vec<u32>) -> Result<Self> {
+        if k == 0 || l == 0 || n.len() != k * l {
+            return Err(Error::Shape(format!(
+                "state matrix {}x{} with {} entries",
+                k,
+                l,
+                n.len()
+            )));
+        }
+        Ok(Self { k, l, n })
+    }
+
+    /// The paper's two-type shorthand S = (N11, N22) with populations
+    /// (N1, N2): N12 = N1 − N11 and N21 = N2 − N22 (Eq. 3).
+    pub fn from_two_type(n11: u32, n22: u32, n1: u32, n2: u32) -> Result<Self> {
+        if n11 > n1 || n22 > n2 {
+            return Err(Error::Shape(format!(
+                "S=({n11},{n22}) outside populations ({n1},{n2})"
+            )));
+        }
+        Self::new(2, 2, vec![n11, n1 - n11, n2 - n22, n22])
+    }
+
+    /// Task-type count (rows).
+    #[inline]
+    pub fn types(&self) -> usize {
+        self.k
+    }
+
+    /// Processor-type count (columns).
+    #[inline]
+    pub fn procs(&self) -> usize {
+        self.l
+    }
+
+    /// Count of i-type tasks on processor j.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> u32 {
+        debug_assert!(i < self.k && j < self.l);
+        self.n[i * self.l + j]
+    }
+
+    /// Mutable access.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: u32) {
+        debug_assert!(i < self.k && j < self.l);
+        self.n[i * self.l + j] = v;
+    }
+
+    /// Increment (task arrival at processor j).
+    #[inline]
+    pub fn inc(&mut self, i: usize, j: usize) {
+        self.n[i * self.l + j] += 1;
+    }
+
+    /// Decrement (task departure); errors if the cell is empty.
+    pub fn dec(&mut self, i: usize, j: usize) -> Result<()> {
+        let c = &mut self.n[i * self.l + j];
+        if *c == 0 {
+            return Err(Error::Shape(format!(
+                "decrement of empty cell ({i},{j})"
+            )));
+        }
+        *c -= 1;
+        Ok(())
+    }
+
+    /// Move one i-type task from processor `from` to processor `to`
+    /// (a GrIn move; preserves row sums by construction).
+    pub fn move_task(&mut self, i: usize, from: usize, to: usize) -> Result<()> {
+        self.dec(i, from)?;
+        self.inc(i, to);
+        Ok(())
+    }
+
+    /// Population of task type i (row sum, the constraint of Eq. 29).
+    pub fn row_sum(&self, i: usize) -> u32 {
+        self.row(i).iter().sum()
+    }
+
+    /// Occupancy of processor j (column sum; the PS denominator, Eq. 25).
+    pub fn col_sum(&self, j: usize) -> u32 {
+        (0..self.k).map(|i| self.get(i, j)).sum()
+    }
+
+    /// Total tasks in the system (= N in the closed network).
+    pub fn total(&self) -> u32 {
+        self.n.iter().sum()
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.n[i * self.l..(i + 1) * self.l]
+    }
+
+    /// Raw row-major data.
+    #[inline]
+    pub fn data(&self) -> &[u32] {
+        &self.n
+    }
+
+    /// Check `row_sum(i) == populations[i]` for all rows (Eq. 29).
+    pub fn check_populations(&self, populations: &[u32]) -> Result<()> {
+        if populations.len() != self.k {
+            return Err(Error::Shape("population vector length".into()));
+        }
+        for (i, &ni) in populations.iter().enumerate() {
+            let got = self.row_sum(i);
+            if got != ni {
+                return Err(Error::Shape(format!(
+                    "row {i} sums to {got}, expected {ni}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// f32 copy padded to (k_pad, l_pad), row-major — the layout the
+    /// `throughput_eval` PJRT artifact expects.
+    pub fn to_padded_f32(&self, k_pad: usize, l_pad: usize) -> Result<Vec<f32>> {
+        if k_pad < self.k || l_pad < self.l {
+            return Err(Error::Shape(format!(
+                "pad ({k_pad},{l_pad}) smaller than ({},{})",
+                self.k, self.l
+            )));
+        }
+        let mut out = vec![0f32; k_pad * l_pad];
+        for i in 0..self.k {
+            for j in 0..self.l {
+                out[i * l_pad + j] = self.get(i, j) as f32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl std::fmt::Display for StateMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for i in 0..self.k {
+            write!(f, "[")?;
+            for j in 0..self.l {
+                if j > 0 {
+                    write!(f, " ")?;
+                }
+                write!(f, "{}", self.get(i, j))?;
+            }
+            writeln!(f, "]")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_type_shorthand_matches_eq3() {
+        let s = StateMatrix::from_two_type(1, 18, 2, 18).unwrap();
+        assert_eq!(s.get(0, 0), 1); // N11
+        assert_eq!(s.get(0, 1), 1); // N12 = N1 - N11
+        assert_eq!(s.get(1, 0), 0); // N21 = N2 - N22
+        assert_eq!(s.get(1, 1), 18); // N22
+        assert_eq!(s.total(), 20);
+        assert!(StateMatrix::from_two_type(3, 0, 2, 5).is_err());
+    }
+
+    #[test]
+    fn sums_and_moves() {
+        let mut s = StateMatrix::new(2, 3, vec![1, 2, 3, 4, 0, 6]).unwrap();
+        assert_eq!(s.row_sum(0), 6);
+        assert_eq!(s.col_sum(0), 5);
+        assert_eq!(s.col_sum(1), 2);
+        s.move_task(0, 2, 1).unwrap();
+        assert_eq!(s.get(0, 2), 2);
+        assert_eq!(s.get(0, 1), 3);
+        assert_eq!(s.row_sum(0), 6); // moves preserve populations
+        assert!(s.move_task(1, 1, 0).is_err()); // empty cell
+    }
+
+    #[test]
+    fn population_check() {
+        let s = StateMatrix::new(2, 2, vec![1, 1, 0, 18]).unwrap();
+        assert!(s.check_populations(&[2, 18]).is_ok());
+        assert!(s.check_populations(&[3, 17]).is_err());
+        assert!(s.check_populations(&[2]).is_err());
+    }
+
+    #[test]
+    fn padding_layout() {
+        let s = StateMatrix::new(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let p = s.to_padded_f32(3, 4).unwrap();
+        assert_eq!(p.len(), 12);
+        assert_eq!(p[0], 1.0);
+        assert_eq!(p[1], 2.0);
+        assert_eq!(p[4], 3.0);
+        assert_eq!(p[5], 4.0);
+        assert_eq!(p[2], 0.0);
+        assert!(s.to_padded_f32(1, 4).is_err());
+    }
+}

@@ -1,0 +1,243 @@
+//! The closed-network throughput function X(S) and its structure.
+//!
+//! * Eq. 28 (general k×l): `x_of_state`
+//! * Eq. 4  (two types, S = (N11, N22)): `x_two_type`
+//! * Eqs. 11–12 (partial derivatives): `grad_two_type`
+//! * Eqs. 34 / 36 (GrIn move deltas): `x_df_plus` / `x_df_minus`
+//! * Eqs. 16–18 (closed-form optima per regime): `x_max_theoretical`
+//!
+//! Convention: an empty processor contributes zero throughput (0/0 → 0),
+//! matching the Pallas `throughput_eval` kernel and the paper's
+//! work-conserving reading of Eq. 28.
+
+use super::affinity::{AffinityMatrix, Regime};
+use super::state::StateMatrix;
+use crate::error::{Error, Result};
+
+/// Per-processor throughput X_j = Σ_i μ_ij·N_ij / Σ_i N_ij (Eq. 26/27).
+pub fn x_of_proc(mu: &AffinityMatrix, n: &StateMatrix, j: usize) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0u32;
+    for i in 0..mu.types() {
+        let nij = n.get(i, j);
+        num += mu.rate(i, j) * nij as f64;
+        den += nij;
+    }
+    if den == 0 {
+        0.0
+    } else {
+        num / den as f64
+    }
+}
+
+/// System throughput X_sys (Eq. 28) for an arbitrary state matrix.
+pub fn x_of_state(mu: &AffinityMatrix, n: &StateMatrix) -> f64 {
+    debug_assert_eq!(mu.types(), n.types());
+    debug_assert_eq!(mu.procs(), n.procs());
+    (0..mu.procs()).map(|j| x_of_proc(mu, n, j)).sum()
+}
+
+/// Eq. 4: X(N11, N22) for the two-type system with populations (N1, N2).
+pub fn x_two_type(
+    mu: &AffinityMatrix,
+    n11: u32,
+    n22: u32,
+    n1: u32,
+    n2: u32,
+) -> Result<f64> {
+    if mu.types() != 2 || mu.procs() != 2 {
+        return Err(Error::Shape("x_two_type needs a 2x2 matrix".into()));
+    }
+    let s = StateMatrix::from_two_type(n11, n22, n1, n2)?;
+    Ok(x_of_state(mu, &s))
+}
+
+/// Eqs. 11–12: (∂X/∂N11, ∂X/∂N22) at a (relaxed, real-valued) state.
+pub fn grad_two_type(
+    mu: &AffinityMatrix,
+    n11: f64,
+    n22: f64,
+    n1: f64,
+    n2: f64,
+) -> (f64, f64) {
+    let (m11, m12) = (mu.rate(0, 0), mu.rate(0, 1));
+    let (m21, m22) = (mu.rate(1, 0), mu.rate(1, 1));
+    let d1 = n11 + n2 - n22; // occupancy of P1
+    let d2 = n22 + n1 - n11; // occupancy of P2
+    let g11 = (m11 - m21) * (n2 - n22) / (d1 * d1) + (m22 - m12) * n22 / (d2 * d2);
+    let g22 = (m11 - m21) * n11 / (d1 * d1) + (m22 - m12) * (n1 - n11) / (d2 * d2);
+    (g11, g22)
+}
+
+/// Eq. 34: throughput delta of *adding* one p-type task to processor j.
+#[inline]
+pub fn x_df_plus(mu: &AffinityMatrix, n: &StateMatrix, p: usize, j: usize) -> f64 {
+    let occ = n.col_sum(j) as f64;
+    let xj = x_of_proc(mu, n, j);
+    (mu.rate(p, j) - xj) / (occ + 1.0)
+}
+
+/// Eq. 36: throughput delta of *removing* one p-type task from processor j.
+///
+/// Defined only when `n[p][j] > 0`.  When the processor would become empty
+/// the delta is exactly −μ_pj (its whole contribution disappears).
+#[inline]
+pub fn x_df_minus(mu: &AffinityMatrix, n: &StateMatrix, p: usize, j: usize) -> f64 {
+    debug_assert!(n.get(p, j) > 0);
+    let occ = n.col_sum(j) as f64;
+    if occ <= 1.0 {
+        return -mu.rate(p, j);
+    }
+    let xj = x_of_proc(mu, n, j);
+    (xj - mu.rate(p, j)) / (occ - 1.0)
+}
+
+/// Closed-form maximum throughput for a classified two-type regime
+/// (Table 1 rows; Eqs. 16–18 and cases a.1–a.3).
+pub fn x_max_theoretical(
+    mu: &AffinityMatrix,
+    regime: Regime,
+    n1: u32,
+    n2: u32,
+) -> f64 {
+    let (m11, m12) = (mu.rate(0, 0), mu.rate(0, 1));
+    let (m21, m22) = (mu.rate(1, 0), mu.rate(1, 1));
+    let n = (n1 + n2) as f64;
+    match regime {
+        // a.1 homogeneous & a.2 big.LITTLE: X = μ11 + μ22 whenever both
+        // queues stay non-empty.
+        Regime::Homogeneous | Regime::BigLittleLike => m11 + m22,
+        // a.3 symmetric and b.3 general-symmetric: S_max = (N1, N2).
+        Regime::Symmetric | Regime::GeneralSymmetric => m11 + m22,
+        // b.1 (Eq. 16): S_max = (1, N2).
+        Regime::P1Biased => {
+            (n1 as f64 - 1.0) / (n - 1.0) * m12 + n2 as f64 / (n - 1.0) * m22 + m11
+        }
+        // b.2 (Eq. 17): S_max = (N1, 1).
+        Regime::P2Biased => {
+            (n2 as f64 - 1.0) / (n - 1.0) * m21 + n1 as f64 / (n - 1.0) * m11 + m22
+        }
+    }
+}
+
+/// The optimal target state S_max for a classified regime (Table 1).
+///
+/// For the non-affinity regimes any interior state is optimal; we return
+/// the balanced Best-Fit-style state as a canonical representative.
+pub fn s_max(regime: Regime, n1: u32, n2: u32) -> (u32, u32) {
+    match regime {
+        Regime::Homogeneous | Regime::BigLittleLike => {
+            // Any -N1 < N22-N11 < N2 works; split each type evenly.
+            (n1 / 2 + n1 % 2, n2 / 2 + n2 % 2)
+        }
+        Regime::Symmetric | Regime::GeneralSymmetric => (n1, n2),
+        Regime::P1Biased => (1.min(n1), n2),
+        Regime::P2Biased => (n1, 1.min(n2)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_mu() -> AffinityMatrix {
+        // §5 simulation matrix, P1-biased.
+        AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap()
+    }
+
+    #[test]
+    fn empty_processor_contributes_zero() {
+        let mu = paper_mu();
+        let s = StateMatrix::new(2, 2, vec![0, 5, 0, 5]).unwrap();
+        assert_eq!(x_of_proc(&mu, &s, 0), 0.0);
+        assert!(x_of_proc(&mu, &s, 1) > 0.0);
+    }
+
+    #[test]
+    fn eq4_matches_manual_computation() {
+        let mu = paper_mu();
+        // N1 = 10, N2 = 10, S = (1, 10): P1 holds {1×t1}, P2 holds {9×t1, 10×t2}.
+        let x = x_two_type(&mu, 1, 10, 10, 10).unwrap();
+        let manual = 20.0 + (15.0 * 9.0 + 8.0 * 10.0) / 19.0;
+        assert!((x - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq16_matches_x_of_state_at_smax() {
+        let mu = paper_mu();
+        for (n1, n2) in [(2u32, 18u32), (10, 10), (18, 2), (5, 15)] {
+            let theory = x_max_theoretical(&mu, Regime::P1Biased, n1, n2);
+            let x = x_two_type(&mu, 1, n2, n1, n2).unwrap();
+            assert!(
+                (theory - x).abs() < 1e-12,
+                "N1={n1} N2={n2}: theory {theory} vs eq4 {x}"
+            );
+        }
+    }
+
+    #[test]
+    fn eq17_matches_x_of_state_at_smax() {
+        // P2-biased: Table-3 derived matrix (quicksort-1000 + NN-2000).
+        let mu = AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).unwrap();
+        for (n1, n2) in [(4u32, 16u32), (10, 10), (16, 4)] {
+            let theory = x_max_theoretical(&mu, Regime::P2Biased, n1, n2);
+            let x = x_two_type(&mu, n1, 1, n1, n2).unwrap();
+            assert!((theory - x).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let mu = paper_mu();
+        let (n1, n2) = (12.0, 8.0);
+        let (n11, n22) = (4.0, 5.0);
+        let (g11, g22) = grad_two_type(&mu, n11, n22, n1, n2);
+        let h = 1e-6;
+        let x = |a: f64, b: f64| {
+            // Relaxed Eq. 4 evaluated on reals.
+            let d1 = a + n2 - b;
+            let d2 = b + n1 - a;
+            (20.0 * a + 3.0 * (n2 - b)) / d1 + (8.0 * b + 15.0 * (n1 - a)) / d2
+        };
+        let fd11 = (x(n11 + h, n22) - x(n11 - h, n22)) / (2.0 * h);
+        let fd22 = (x(n11, n22 + h) - x(n11, n22 - h)) / (2.0 * h);
+        assert!((g11 - fd11).abs() < 1e-5, "{g11} vs {fd11}");
+        assert!((g22 - fd22).abs() < 1e-5, "{g22} vs {fd22}");
+    }
+
+    #[test]
+    fn move_deltas_match_recomputation() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0],
+            vec![1.0, 8.0, 3.0],
+            vec![5.0, 5.0, 9.0],
+        ])
+        .unwrap();
+        let s = StateMatrix::new(3, 3, vec![3, 1, 0, 2, 4, 1, 0, 2, 5]).unwrap();
+        for p in 0..3 {
+            for j in 0..3 {
+                // X_df+ vs brute-force re-evaluation.
+                let mut s2 = s.clone();
+                s2.inc(p, j);
+                let want = x_of_proc(&mu, &s2, j) - x_of_proc(&mu, &s, j);
+                let got = x_df_plus(&mu, &s, p, j);
+                assert!((got - want).abs() < 1e-12, "plus p={p} j={j}");
+                // X_df- where defined.
+                if s.get(p, j) > 0 {
+                    let mut s3 = s.clone();
+                    s3.dec(p, j).unwrap();
+                    let want = x_of_proc(&mu, &s3, j) - x_of_proc(&mu, &s, j);
+                    let got = x_df_minus(&mu, &s, p, j);
+                    assert!((got - want).abs() < 1e-12, "minus p={p} j={j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn smax_targets_match_table1() {
+        assert_eq!(s_max(Regime::GeneralSymmetric, 7, 13), (7, 13));
+        assert_eq!(s_max(Regime::P1Biased, 7, 13), (1, 13));
+        assert_eq!(s_max(Regime::P2Biased, 7, 13), (7, 1));
+    }
+}

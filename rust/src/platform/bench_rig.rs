@@ -1,0 +1,286 @@
+//! Closed-loop platform driver — the Figs. 15–16 experiment harness.
+//!
+//! N programs run against the emulated devices exactly as in §7: whenever
+//! a program's task completes, its next task is immediately dispatched by
+//! the policy under test to some device's FCFS queue.  Throughput is
+//! tasks/second of wall-clock over the post-warm-up window.
+
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::model::state::StateMatrix;
+use crate::policy::{Policy, SystemView};
+use crate::sim::rng::Rng;
+
+use super::measure::MeasuredRates;
+use super::worker::{Completion, Device, DeviceSpec, PlatformTask};
+
+/// Platform experiment configuration.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Emulated devices (affinity columns).
+    pub devices: Vec<DeviceSpec>,
+    /// Programs per task type (N_i).
+    pub populations: Vec<u32>,
+    /// Completions to discard (system fill + cache warm).
+    pub warmup: u64,
+    /// Completions to measure.
+    pub measure: u64,
+    /// RNG seed (initial fill order).
+    pub seed: u64,
+}
+
+/// Result of one platform run.
+#[derive(Debug, Clone)]
+pub struct PlatformResult {
+    /// Measured throughput, tasks/second.
+    pub throughput: f64,
+    /// Mean response time, seconds.
+    pub mean_response_s: f64,
+    /// Mean service time, seconds.
+    pub mean_service_s: f64,
+    /// Completions measured.
+    pub completions: u64,
+    /// Σ|checksum| over measured tasks (numeric liveness probe; NaN-free).
+    pub checksum_abs_sum: f64,
+}
+
+/// Run one policy against the platform.
+pub fn run_platform(
+    cfg: &PlatformConfig,
+    rates: &MeasuredRates,
+    policy: &mut dyn Policy,
+) -> Result<PlatformResult> {
+    let k = cfg.populations.len();
+    let l = cfg.devices.len();
+    let mu = &rates.mu;
+    if mu.types() != k || mu.procs() != l {
+        return Err(Error::Shape("measured rates don't match config".into()));
+    }
+    policy.prepare(mu, &cfg.populations)?;
+
+    let (done_tx, done_rx) = channel::<Completion>();
+    let mut devices = Vec::with_capacity(l);
+    for (j, spec) in cfg.devices.iter().enumerate() {
+        devices.push(Device::spawn(j, spec.clone(), done_tx.clone())?);
+    }
+    drop(done_tx);
+
+    // Program table: type per program.
+    let mut ptypes = Vec::new();
+    for (t, &n) in cfg.populations.iter().enumerate() {
+        for _ in 0..n {
+            ptypes.push(t);
+        }
+    }
+    let mut rng = Rng::new(cfg.seed);
+    let mut order: Vec<usize> = (0..ptypes.len()).collect();
+    rng.shuffle(&mut order);
+
+    let mut state = StateMatrix::zeros(k, l);
+    let mut work = vec![0.0f64; l];
+    let mut next_id = 0u64;
+
+    let mut dispatch =
+        |prog: usize,
+         state: &mut StateMatrix,
+         work: &mut [f64],
+         rng: &mut Rng,
+         policy: &mut dyn Policy,
+         devices: &[Device]|
+         -> Result<()> {
+            let ttype = ptypes[prog];
+            // Perfect-information work estimate from measured ω.
+            for (j, w) in work.iter_mut().enumerate() {
+                *w = (0..k)
+                    .map(|i| state.get(i, j) as f64 * rates.omega[i * l + j])
+                    .sum();
+            }
+            let view = SystemView {
+                mu,
+                state,
+                work,
+                populations: &cfg.populations,
+            };
+            let j = policy.dispatch(ttype, &view, rng);
+            let task = PlatformTask {
+                id: next_id,
+                program: prog,
+                ttype,
+                enqueued: Instant::now(),
+            };
+            next_id += 1;
+            devices[j].submit(task)?;
+            state.inc(ttype, j);
+            Ok(())
+        };
+
+    // Initial fill.
+    for &p in &order {
+        dispatch(p, &mut state, &mut work, &mut rng, policy, &devices)?;
+    }
+
+    let total = cfg.warmup + cfg.measure;
+    let mut completions = 0u64;
+    let mut measured = 0u64;
+    let mut sum_resp = 0.0f64;
+    let mut sum_serv = 0.0f64;
+    let mut checksum = 0.0f64;
+    let mut window_start: Option<Instant> = None;
+    let mut last: Option<Instant> = None;
+
+    while completions < total {
+        let c = done_rx
+            .recv()
+            .map_err(|_| Error::Runtime("all devices died".into()))?;
+        completions += 1;
+        state.dec(c.task.ttype, c.device)?;
+        if completions > cfg.warmup {
+            if window_start.is_none() {
+                window_start = Some(Instant::now());
+            }
+            last = Some(Instant::now());
+            measured += 1;
+            sum_resp += c.response_s;
+            sum_serv += c.service_s;
+            if !c.checksum.is_finite() {
+                return Err(Error::Runtime(format!(
+                    "kernel produced non-finite checksum on device {}",
+                    c.device
+                )));
+            }
+            checksum += c.checksum.abs() as f64;
+        }
+        if completions < total {
+            dispatch(c.task.program, &mut state, &mut work, &mut rng, policy, &devices)?;
+        }
+    }
+
+    for d in devices {
+        d.shutdown()?;
+    }
+
+    let elapsed = match (window_start, last) {
+        (Some(s), Some(e)) => e.duration_since(s).as_secs_f64(),
+        _ => 0.0,
+    };
+    Ok(PlatformResult {
+        throughput: if elapsed > 0.0 { measured as f64 / elapsed } else { 0.0 },
+        mean_response_s: if measured > 0 { sum_resp / measured as f64 } else { 0.0 },
+        mean_service_s: if measured > 0 { sum_serv / measured as f64 } else { 0.0 },
+        completions: measured,
+        checksum_abs_sum: checksum,
+    })
+}
+
+/// The two §7 experiment cases as device sets.
+pub mod cases {
+    use super::super::measure::Calibration;
+    use super::super::worker::{DeviceSpec, KernelKind};
+
+    /// Repetition counts from target Table-3 rates, *weighted by each
+    /// kernel's calibrated baseline cost*: an (i, j) cell's emulated
+    /// service time should be ∝ 1/μ_ij, so
+    ///
+    ///   reps_ij = round( C / (μ_ij · t_i) ),  C = max_ij μ_ij·t_i
+    ///
+    /// which puts the fastest-draining cell at exactly 1 repetition.  The
+    /// `cap` compresses extreme ratios (the GPU sort is ~250× slower than
+    /// the CPU sort in Table 3) to keep wall-clock sane; *orderings* —
+    /// the only thing CAB consumes — survive as long as the cap exceeds
+    /// every non-capped cell, which [`super::super::measure_rates`]
+    /// re-verifies empirically after the fact.
+    fn reps_for(
+        mu_target: &[[f64; 2]; 2],
+        kinds: &[KernelKind; 2],
+        cal: &Calibration,
+        cap: u32,
+    ) -> [Vec<u32>; 2] {
+        let mut c = f64::MIN;
+        for (i, row) in mu_target.iter().enumerate() {
+            for &m in row {
+                c = c.max(m * cal.secs_of(kinds[i]));
+            }
+        }
+        let rep = |i: usize, j: usize| -> u32 {
+            let ideal = c / (mu_target[i][j] * cal.secs_of(kinds[i]));
+            (ideal.round() as u32).clamp(1, cap)
+        };
+        [vec![rep(0, 0), rep(1, 0)], vec![rep(0, 1), rep(1, 1)]]
+    }
+
+    fn devices(
+        sort: KernelKind,
+        mu_target: [[f64; 2]; 2],
+        cal: &Calibration,
+        cap: u32,
+    ) -> Vec<DeviceSpec> {
+        let kinds = [sort, KernelKind::NnSmall];
+        let [cpu, gpu] = reps_for(&mu_target, &kinds, cal, cap);
+        vec![
+            DeviceSpec { name: "CPU".into(), kernels: kinds.to_vec(), reps: cpu },
+            DeviceSpec { name: "GPU".into(), kernels: kinds.to_vec(), reps: gpu },
+        ]
+    }
+
+    /// §7.4 general-symmetric: quicksort-500 + NN-2000.
+    /// Table 3: μ_CPU = (928, 587), μ_GPU = (3.61, 2398).
+    pub fn general_symmetric(cal: &Calibration, cap: u32) -> Vec<DeviceSpec> {
+        devices(
+            KernelKind::SortSmall,
+            [[928.0, 3.61], [587.0, 2398.0]],
+            cal,
+            cap,
+        )
+    }
+
+    /// §7.3 P2-biased: quicksort-1000 + NN-2000.
+    /// Table 3: μ_CPU = (253, 587), μ_GPU = (0.911, 2398).
+    pub fn p2_biased(cal: &Calibration, cap: u32) -> Vec<DeviceSpec> {
+        devices(
+            KernelKind::SortLarge,
+            [[253.0, 0.911], [587.0, 2398.0]],
+            cal,
+            cap,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end platform runs live in `tests/platform_e2e.rs` (they need
+    // built artifacts and real threads); `cases` wiring is checked here.
+    use super::*;
+
+    #[test]
+    fn case_orderings_match_table3() {
+        use super::super::measure::Calibration;
+        // Synthetic calibration: sort kernels ~25× / ~100× the nn_small
+        // cost — the shape observed on the interpret-mode artifacts.
+        let cal = Calibration::synthetic(2.5e-3, 1.0e-2, 1.0e-2, 1.0e-4);
+        // Emulated rate of cell (i, j) given a spec set.
+        let rate = |specs: &[DeviceSpec], i: usize, j: usize| -> f64 {
+            let t = match specs[j].kernels[i] {
+                super::super::worker::KernelKind::SortSmall => 2.5e-3,
+                super::super::worker::KernelKind::SortLarge => 1.0e-2,
+                super::super::worker::KernelKind::Nn2000 => 1.0e-2,
+                super::super::worker::KernelKind::NnSmall => 1.0e-4,
+            };
+            1.0 / (specs[j].reps[i] as f64 * t)
+        };
+
+        let gs = cases::general_symmetric(&cal, 256);
+        // General-symmetric orderings: μ11 > μ21, μ22 > μ12, Eq. 2.
+        assert!(rate(&gs, 0, 0) > rate(&gs, 1, 0), "CPU prefers sort");
+        assert!(rate(&gs, 1, 1) > rate(&gs, 0, 1), "GPU prefers NN");
+        assert!(rate(&gs, 0, 0) > rate(&gs, 0, 1));
+        assert!(rate(&gs, 1, 0) < rate(&gs, 1, 1));
+
+        let p2 = cases::p2_biased(&cal, 256);
+        // P2-biased: NN faster than sort on *both* devices.
+        assert!(rate(&p2, 1, 0) > rate(&p2, 0, 0));
+        assert!(rate(&p2, 1, 1) > rate(&p2, 0, 1));
+        assert!(rate(&p2, 0, 0) > rate(&p2, 0, 1));
+    }
+}

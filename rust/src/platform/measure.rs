@@ -1,0 +1,170 @@
+//! Processing-rate measurement (§7.2, Table 3).
+//!
+//! "First, we need to measure the average processing rate of each kernel
+//! on each processor. We run each kernel 1000 times and calculate the
+//! average execution time ω, and therefore, the processing rate μ = 1/ω."
+//!
+//! We do exactly that through the PJRT engine, per emulated device spec
+//! (kernel kind + repetition count).  The measured matrix is what CAB /
+//! GrIn consume — the paper stresses only its *ordering* matters.
+
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::model::affinity::AffinityMatrix;
+use crate::runtime::Engine;
+use crate::sim::rng::Rng;
+
+use super::worker::{DeviceSpec, KernelKind};
+
+/// Baseline single-execution cost of each kernel, measured once before
+/// device specs are derived (repetition counts must account for the fact
+/// that e.g. the sort network is intrinsically ~25× slower per call than
+/// `nn_small`).
+#[derive(Debug, Clone)]
+pub struct Calibration {
+    secs: [f64; 4],
+}
+
+impl Calibration {
+    /// Mean seconds for one execution of `kind`.
+    pub fn secs_of(&self, kind: KernelKind) -> f64 {
+        self.secs[Self::idx(kind)]
+    }
+
+    fn idx(kind: KernelKind) -> usize {
+        match kind {
+            KernelKind::SortSmall => 0,
+            KernelKind::SortLarge => 1,
+            KernelKind::Nn2000 => 2,
+            KernelKind::NnSmall => 3,
+        }
+    }
+
+    /// A synthetic calibration (tests / dry-runs without PJRT).
+    pub fn synthetic(sort_small: f64, sort_large: f64, nn2000: f64, nn_small: f64) -> Self {
+        Self { secs: [sort_small, sort_large, nn2000, nn_small] }
+    }
+}
+
+/// Time one execution of every kernel kind (`runs` samples each).
+pub fn calibrate(runs: u32) -> Result<Calibration> {
+    assert!(runs >= 1);
+    let engine = Engine::open_default()?;
+    let mut rng = Rng::new(0xCA11);
+    let mut buf = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    };
+    let nn2000 = (buf(32 * 2048), buf(2048 * 256), buf(256));
+    let nn_small = (buf(8 * 256), buf(256 * 256), buf(256));
+    let sort_small = buf(16 * 256);
+    let sort_large = buf(16 * 1024);
+    let mut secs = [0.0f64; 4];
+    for kind in [
+        KernelKind::SortSmall,
+        KernelKind::SortLarge,
+        KernelKind::Nn2000,
+        KernelKind::NnSmall,
+    ] {
+        let once = || -> Result<()> {
+            match kind {
+                KernelKind::Nn2000 => {
+                    engine.nn_task("nn2000", &nn2000.0, &nn2000.1, &nn2000.2)?;
+                }
+                KernelKind::NnSmall => {
+                    engine.nn_task("nn_small", &nn_small.0, &nn_small.1, &nn_small.2)?;
+                }
+                KernelKind::SortSmall => {
+                    engine.sort_task("sort_small", &sort_small)?;
+                }
+                KernelKind::SortLarge => {
+                    engine.sort_task("sort_large", &sort_large)?;
+                }
+            }
+            Ok(())
+        };
+        once()?; // compile + warm
+        let t0 = Instant::now();
+        for _ in 0..runs {
+            once()?;
+        }
+        secs[Calibration::idx(kind)] = t0.elapsed().as_secs_f64() / runs as f64;
+    }
+    Ok(Calibration { secs })
+}
+
+/// Measured rates for a device set.
+#[derive(Debug, Clone)]
+pub struct MeasuredRates {
+    /// μ[i][j] in tasks/second (task = kernel × reps on that device).
+    pub mu: AffinityMatrix,
+    /// Mean execution time ω[i][j] in seconds (row-major).
+    pub omega: Vec<f64>,
+}
+
+/// Time each (task type, device) combination `runs` times.
+///
+/// Uses a fresh engine on the calling thread (measurement is offline:
+/// the paper measures once, before scheduling).
+pub fn measure_rates(devices: &[DeviceSpec], runs: u32) -> Result<MeasuredRates> {
+    assert!(runs >= 1);
+    let engine = Engine::open_default()?;
+    let k = devices
+        .first()
+        .map(|d| d.kernels.len())
+        .unwrap_or(0);
+    let l = devices.len();
+    let mut rng = Rng::new(0xBEEF);
+    let mut buf = |n: usize| -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+    };
+    // Canned inputs (shape-fixed per artifact).
+    let nn2000 = (buf(32 * 2048), buf(2048 * 256), buf(256));
+    let nn_small = (buf(8 * 256), buf(256 * 256), buf(256));
+    let sort_small = buf(16 * 256);
+    let sort_large = buf(16 * 1024);
+
+    let run_once = |kind: KernelKind| -> Result<()> {
+        match kind {
+            KernelKind::Nn2000 => {
+                engine.nn_task("nn2000", &nn2000.0, &nn2000.1, &nn2000.2)?;
+            }
+            KernelKind::NnSmall => {
+                engine.nn_task("nn_small", &nn_small.0, &nn_small.1, &nn_small.2)?;
+            }
+            KernelKind::SortSmall => {
+                engine.sort_task("sort_small", &sort_small)?;
+            }
+            KernelKind::SortLarge => {
+                engine.sort_task("sort_large", &sort_large)?;
+            }
+        }
+        Ok(())
+    };
+
+    let mut omega = vec![0.0f64; k * l];
+    let mut mu_rows = vec![vec![0.0f64; l]; k];
+    for (j, dev) in devices.iter().enumerate() {
+        for i in 0..k {
+            let kind = dev.kernels[i];
+            let reps = dev.reps[i];
+            run_once(kind)?; // warm the executable cache
+            let t0 = Instant::now();
+            for _ in 0..runs {
+                for _ in 0..reps {
+                    run_once(kind)?;
+                }
+            }
+            let w = t0.elapsed().as_secs_f64() / runs as f64;
+            omega[i * l + j] = w;
+            mu_rows[i][j] = 1.0 / w;
+        }
+    }
+    Ok(MeasuredRates { mu: AffinityMatrix::from_rows(&mu_rows)?, omega })
+}
+
+#[cfg(test)]
+mod tests {
+    // Measurement requires built artifacts + a PJRT client; exercised by
+    // `tests/platform_e2e.rs` and `benches/table3_rates.rs`.
+}

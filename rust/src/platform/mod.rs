@@ -1,0 +1,30 @@
+//! The §7 "real platform" — emulated CPU+GPU testbed running real kernels.
+//!
+//! The paper's testbed is an i7-4790 + GTX 760Ti driving OpenCL kernels
+//! (quicksort and a single-layer NN) under FCFS queues.  We reproduce the
+//! *system* on CPU-only hardware (DESIGN.md §3 records the substitution):
+//!
+//! * each processor type becomes a [`worker`] thread pool with its own
+//!   FCFS queue and its own PJRT [`crate::runtime::Engine`];
+//! * every task executes a *real* AOT-compiled kernel (NN forward or the
+//!   sort network) — real compute, real memory traffic, real timing
+//!   noise;
+//! * heterogeneity (the affinity matrix) is induced by the per-device
+//!   repetition count `R_ij ∝ 1/μ_ij`: an i-type task on device j runs
+//!   its kernel `R_ij` times, so *measured* rates reproduce μ's ordering
+//!   exactly — the only thing CAB needs (§3.3: "it is sufficient to know
+//!   their relative ordering");
+//! * [`measure`] re-derives Table 3 empirically by timing kernels through
+//!   the PJRT engines, 1000 runs per cell in the paper, configurable
+//!   here.
+//!
+//! [`bench_rig`] drives N closed-loop programs over the worker pools and
+//! reports experimental throughput — the Figs. 15–16 harness.
+
+pub mod bench_rig;
+pub mod measure;
+pub mod worker;
+
+pub use bench_rig::{PlatformConfig, PlatformResult, run_platform};
+pub use measure::{calibrate, measure_rates, Calibration, MeasuredRates};
+pub use worker::{Device, DeviceSpec, KernelKind};

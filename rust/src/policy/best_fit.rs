@@ -1,0 +1,40 @@
+//! BF: dispatch each task to its highest-affinity processor (§5 baseline 2).
+//!
+//! Optimal in the (general-)symmetric regimes (Table 1), suboptimal by up
+//! to the Eq.-16/17 gap in the biased regimes.
+
+use super::{Policy, SystemView};
+use crate::sim::rng::Rng;
+
+/// The Best-Fit baseline.
+#[derive(Debug, Default)]
+pub struct BestFit;
+
+impl Policy for BestFit {
+    fn name(&self) -> &'static str {
+        "BF"
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        view.mu.best_proc(ttype)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::AffinityMatrix;
+    use crate::model::state::StateMatrix;
+
+    #[test]
+    fn routes_by_affinity() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let state = StateMatrix::zeros(2, 2);
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[1, 1] };
+        let mut rng = Rng::new(1);
+        let mut p = BestFit;
+        assert_eq!(p.dispatch(0, &view, &mut rng), 0); // 20 > 15
+        assert_eq!(p.dispatch(1, &view, &mut rng), 1); // 8 > 3
+    }
+}

@@ -1,0 +1,175 @@
+//! CAB — Choose-between-Accelerate-the-fastest-and-Best-fit (Lemma 4).
+//!
+//! The analytically optimal policy for two processor types.  `prepare`
+//! classifies the affinity matrix into its Table-1 regime (only the
+//! element *ordering* matters, never the values) and fixes the target
+//! state S_max:
+//!
+//! * (general-)symmetric → **BF**: S_max = (N1, N2);
+//! * P1-biased → **AF**: S_max = (1, N2) — one lone program on the fast
+//!   processor, everyone else on the other (the counter-intuitive case);
+//! * P2-biased → **AF**: S_max = (N1, 1);
+//! * homogeneous / big.LITTLE-like → any interior state; we pick the
+//!   balanced split as canonical.
+//!
+//! Dispatch then just steers deficits toward S_max ([`super::target`]).
+
+use super::target::TargetSteering;
+use super::{Policy, SystemView};
+use crate::error::{Error, Result};
+use crate::model::affinity::{AffinityMatrix, Regime};
+use crate::model::state::StateMatrix;
+use crate::model::throughput::s_max;
+use crate::sim::rng::Rng;
+
+/// The CAB policy.
+#[derive(Debug, Default)]
+pub struct Cab {
+    steering: Option<TargetSteering>,
+    regime: Option<Regime>,
+}
+
+impl Cab {
+    /// New, unprepared CAB.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The regime classified at prepare time.
+    pub fn regime(&self) -> Option<Regime> {
+        self.regime
+    }
+
+    /// The S_max target solved at prepare time.
+    pub fn target(&self) -> Option<&StateMatrix> {
+        self.steering.as_ref().map(|s| s.target())
+    }
+
+    /// Compute the CAB target state for a classified system.
+    pub fn target_state(
+        mu: &AffinityMatrix,
+        populations: &[u32],
+    ) -> Result<(Regime, StateMatrix)> {
+        if populations.len() != 2 || mu.types() != 2 || mu.procs() != 2 {
+            return Err(Error::Shape(
+                "CAB is the two-type analytical policy; use GrIn for k,l > 2".into(),
+            ));
+        }
+        let (n1, n2) = (populations[0], populations[1]);
+        let regime = mu.classify()?;
+        let (t11, t22) = s_max(regime, n1, n2);
+        Ok((regime, StateMatrix::from_two_type(t11, t22, n1, n2)?))
+    }
+}
+
+impl Policy for Cab {
+    fn name(&self) -> &'static str {
+        "CAB"
+    }
+
+    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
+        let (regime, target) = Self::target_state(mu, populations)?;
+        self.regime = Some(regime);
+        self.steering = Some(TargetSteering::new(target));
+        Ok(())
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        self.steering
+            .as_ref()
+            .expect("CAB::prepare must be called before dispatch")
+            .dispatch(ttype, view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::throughput::{x_max_theoretical, x_of_state};
+
+    #[test]
+    fn p1_biased_targets_af() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let (regime, target) = Cab::target_state(&mu, &[10, 10]).unwrap();
+        assert_eq!(regime, Regime::P1Biased);
+        assert_eq!(target.get(0, 0), 1); // lone fast program
+        assert_eq!(target.get(0, 1), 9);
+        assert_eq!(target.get(1, 0), 0);
+        assert_eq!(target.get(1, 1), 10);
+        // And this target achieves exactly the Eq. 16 optimum.
+        let x = x_of_state(&mu, &target);
+        let want = x_max_theoretical(&mu, Regime::P1Biased, 10, 10);
+        assert!((x - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p2_biased_targets_af() {
+        let mu = AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).unwrap();
+        let (regime, target) = Cab::target_state(&mu, &[6, 14]).unwrap();
+        assert_eq!(regime, Regime::P2Biased);
+        assert_eq!(target.get(0, 0), 6);
+        assert_eq!(target.get(1, 1), 1);
+        assert_eq!(target.get(1, 0), 13);
+    }
+
+    #[test]
+    fn general_symmetric_targets_bf() {
+        let mu = AffinityMatrix::two_type(928.0, 3.61, 587.0, 2398.0).unwrap();
+        let (regime, target) = Cab::target_state(&mu, &[7, 13]).unwrap();
+        assert_eq!(regime, Regime::GeneralSymmetric);
+        assert_eq!(target.get(0, 0), 7);
+        assert_eq!(target.get(1, 1), 13);
+        assert_eq!(target.get(0, 1), 0);
+        assert_eq!(target.get(1, 0), 0);
+    }
+
+    #[test]
+    fn cab_target_beats_every_state_exhaustively() {
+        // Lemma 4: S_max really is argmax over the whole state grid.
+        for (mu, pops) in [
+            (AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap(), [6u32, 6u32]),
+            (AffinityMatrix::two_type(9.0, 2.0, 1.0, 7.0).unwrap(), [5, 7]),
+            (AffinityMatrix::two_type(3.0, 2.0, 8.0, 9.0).unwrap(), [4, 8]),
+        ] {
+            let (_, target) = Cab::target_state(&mu, &pops).unwrap();
+            let best = x_of_state(&mu, &target);
+            for n11 in 0..=pops[0] {
+                for n22 in 0..=pops[1] {
+                    let s =
+                        StateMatrix::from_two_type(n11, n22, pops[0], pops[1]).unwrap();
+                    assert!(
+                        x_of_state(&mu, &s) <= best + 1e-9,
+                        "state ({n11},{n22}) beats CAB for {mu:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_arity() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+        ])
+        .unwrap();
+        assert!(Cab::target_state(&mu, &[1, 2]).is_err());
+    }
+
+    #[test]
+    fn dispatch_without_prepare_panics() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+            let state = StateMatrix::zeros(2, 2);
+            let work = vec![0.0; 2];
+            let view = SystemView {
+                mu: &mu,
+                state: &state,
+                work: &work,
+                populations: &[1, 1],
+            };
+            Cab::new().dispatch(0, &view, &mut Rng::new(0))
+        }));
+        assert!(result.is_err());
+    }
+}

@@ -1,0 +1,316 @@
+//! GrIn — the Greedy-Increase heuristic (§4.2, Algorithms 1–2).
+//!
+//! Solves the integer program (Eqs. 28–29) for any k task types × l
+//! processor types in near-linear time per move:
+//!
+//! 1. **Init** (Algorithm 1): the "max j-col μ" seeding — each column's
+//!    fastest task type claims it; rows with several claimed columns
+//!    spread one task to each and dump the remainder on the slowest
+//!    claimed column; rows with none go to their best-fit column and are
+//!    immediately locally optimized.
+//! 2. **Greedy increase** (Algorithm 2 + Lemma 8): repeatedly move one
+//!    task of some type p from the processor where removal costs least
+//!    (max X_df−, Eq. 36) to the processor where insertion gains most
+//!    (max X_df+, Eq. 34); every accepted move strictly increases X_sys,
+//!    so the loop terminates at a local maximum (measured within 1.6% of
+//!    the exhaustive optimum over 1000 random systems — see
+//!    `benches/fig9_12_multitype.rs --gap`).
+
+use super::target::TargetSteering;
+use super::{Policy, SystemView};
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::model::throughput::{x_df_minus, x_df_plus, x_of_state};
+use crate::sim::rng::Rng;
+
+/// Outcome of a GrIn solve.
+#[derive(Debug, Clone)]
+pub struct GrInSolution {
+    /// The locally optimal task distribution.
+    pub state: StateMatrix,
+    /// X_sys at that state (Eq. 28).
+    pub throughput: f64,
+    /// Number of greedy moves performed after initialization.
+    pub moves: usize,
+}
+
+/// Strictly-positive gain threshold: guarantees termination (Lemma 8's
+/// monotone increase) in the presence of floating-point noise.
+const GAIN_EPS: f64 = 1e-12;
+
+/// Algorithm 1: initial task distribution.
+pub fn initialize(mu: &AffinityMatrix, populations: &[u32]) -> Result<StateMatrix> {
+    let (k, l) = (mu.types(), mu.procs());
+    if populations.len() != k {
+        return Err(Error::Shape(format!(
+            "{} populations for {k} task types",
+            populations.len()
+        )));
+    }
+    let mut n = StateMatrix::zeros(k, l);
+
+    // The 0-1 "max μ" matrix 𝔘: claimed[j] = row that owns column j.
+    let claimed: Vec<usize> = (0..l).map(|j| mu.max_col_row(j)).collect();
+
+    for row in 0..k {
+        let ni = populations[row];
+        let mut cols: Vec<usize> =
+            (0..l).filter(|&j| claimed[j] == row).collect();
+        match cols.len() {
+            0 => {
+                // No claimed column: best-fit, then local re-distribution
+                // (Algorithm 1 lines 18–21, iterated to a row-local max).
+                n.set(row, mu.best_proc(row), ni);
+                local_row_optimize(mu, &mut n, row);
+            }
+            1 => n.set(row, cols[0], ni),
+            _ => {
+                // Sort claimed columns by this row's rate, descending.
+                cols.sort_by(|&a, &b| {
+                    mu.rate(row, b).partial_cmp(&mu.rate(row, a)).unwrap()
+                });
+                let mut left = ni;
+                for &j in &cols {
+                    if left == 0 {
+                        break;
+                    }
+                    n.set(row, j, 1);
+                    left -= 1;
+                }
+                // Remainder goes to the slowest claimed column (line 13).
+                let last = *cols.last().unwrap();
+                n.set(row, last, n.get(row, last) + left);
+            }
+        }
+    }
+    Ok(n)
+}
+
+/// Re-distribute one row's tasks greedily until its local max (used by the
+/// Algorithm-1 zero-claim case).
+fn local_row_optimize(mu: &AffinityMatrix, n: &mut StateMatrix, row: usize) {
+    loop {
+        match best_move_for_row(mu, n, row) {
+            Some((from, to, gain)) if gain > GAIN_EPS => {
+                n.move_task(row, from, to).expect("move from counted cell");
+            }
+            _ => break,
+        }
+    }
+}
+
+/// The best single move for `row`: returns (from, to, exact ΔX).
+fn best_move_for_row(
+    mu: &AffinityMatrix,
+    n: &StateMatrix,
+    row: usize,
+) -> Option<(usize, usize, f64)> {
+    let l = mu.procs();
+    // Best insertion target (Eq. 34) and best removal source (Eq. 36).
+    let mut best: Option<(usize, usize, f64)> = None;
+    for from in 0..l {
+        if n.get(row, from) == 0 {
+            continue;
+        }
+        let dfm = x_df_minus(mu, n, row, from);
+        for to in 0..l {
+            if to == from {
+                continue;
+            }
+            // Columns are independent ⇒ the combined delta is exact.
+            let gain = dfm + x_df_plus(mu, n, row, to);
+            if best.map_or(true, |(_, _, g)| gain > g) {
+                best = Some((from, to, gain));
+            }
+        }
+    }
+    best
+}
+
+/// Algorithm 2: full GrIn solve.
+pub fn solve(mu: &AffinityMatrix, populations: &[u32]) -> Result<GrInSolution> {
+    let mut n = initialize(mu, populations)?;
+    let k = mu.types();
+    let mut moves = 0usize;
+    // Hard cap: each move strictly increases X_sys, but guard regardless.
+    let cap = 64 + (populations.iter().sum::<u32>() as usize) * mu.procs() * k * 4;
+    loop {
+        let mut improved = false;
+        for row in 0..k {
+            if let Some((from, to, gain)) = best_move_for_row(mu, &n, row) {
+                if gain > GAIN_EPS {
+                    n.move_task(row, from, to)?;
+                    moves += 1;
+                    improved = true;
+                }
+            }
+        }
+        if !improved || moves >= cap {
+            break;
+        }
+    }
+    let throughput = x_of_state(mu, &n);
+    n.check_populations(populations)?;
+    Ok(GrInSolution { state: n, throughput, moves })
+}
+
+/// GrIn as a dispatch policy: solve once, then deficit-steer to the
+/// solution state.
+#[derive(Debug, Default)]
+pub struct GrInPolicy {
+    steering: Option<TargetSteering>,
+    solution: Option<GrInSolution>,
+}
+
+impl GrInPolicy {
+    /// New, unprepared policy.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The solved target (after `prepare`).
+    pub fn solution(&self) -> Option<&GrInSolution> {
+        self.solution.as_ref()
+    }
+}
+
+impl Policy for GrInPolicy {
+    fn name(&self) -> &'static str {
+        "GrIn"
+    }
+
+    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
+        let sol = solve(mu, populations)?;
+        self.steering = Some(TargetSteering::new(sol.state.clone()));
+        self.solution = Some(sol);
+        Ok(())
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        self.steering
+            .as_ref()
+            .expect("GrInPolicy::prepare must be called before dispatch")
+            .dispatch(ttype, view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn init_satisfies_populations() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0],
+            vec![1.0, 8.0, 3.0],
+            vec![5.0, 5.0, 9.0],
+        ])
+        .unwrap();
+        let pops = [7u32, 5, 3];
+        let n = initialize(&mu, &pops).unwrap();
+        n.check_populations(&pops).unwrap();
+    }
+
+    #[test]
+    fn init_multi_claim_row_spreads_then_dumps() {
+        // Row 0 claims both columns (it is fastest on each).
+        let mu = AffinityMatrix::from_rows(&[vec![10.0, 9.0], vec![1.0, 2.0]]).unwrap();
+        let n = initialize(&mu, &[5, 3]).unwrap();
+        // One task to the fastest claimed column, remainder to the slowest.
+        assert_eq!(n.get(0, 0), 1);
+        assert_eq!(n.get(0, 1), 4);
+        n.check_populations(&[5, 3]).unwrap();
+    }
+
+    #[test]
+    fn solve_monotone_gain_lemma8() {
+        // Every accepted move must strictly increase X_sys: verify by
+        // replaying the solve move-by-move.
+        let mu = AffinityMatrix::from_rows(&[
+            vec![12.0, 3.0, 7.0],
+            vec![2.0, 9.0, 4.0],
+            vec![6.0, 6.0, 10.0],
+        ])
+        .unwrap();
+        let pops = [8u32, 6, 4];
+        let mut n = initialize(&mu, &pops).unwrap();
+        let mut x = x_of_state(&mu, &n);
+        for _ in 0..1000 {
+            let mut moved = false;
+            for row in 0..3 {
+                if let Some((from, to, gain)) = best_move_for_row(&mu, &n, row) {
+                    if gain > GAIN_EPS {
+                        n.move_task(row, from, to).unwrap();
+                        let x2 = x_of_state(&mu, &n);
+                        assert!(x2 > x, "move did not increase X: {x} -> {x2}");
+                        // The predicted gain is exact (column independence).
+                        assert!((x2 - x - gain).abs() < 1e-9);
+                        x = x2;
+                        moved = true;
+                    }
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn grin_equals_cab_on_two_types() {
+        // §7: "GrIn gives the same solution as CAB's analytical solution
+        // in systems with two processor types."
+        use crate::policy::cab::Cab;
+        for (mu, pops) in [
+            (AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap(), [10u32, 10u32]),
+            (AffinityMatrix::two_type(928.0, 3.61, 587.0, 2398.0).unwrap(), [6, 14]),
+            (AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).unwrap(), [12, 8]),
+        ] {
+            let (_, cab_target) = Cab::target_state(&mu, &pops).unwrap();
+            let grin = solve(&mu, &pops).unwrap();
+            let x_cab = x_of_state(&mu, &cab_target);
+            assert!(
+                (grin.throughput - x_cab).abs() < 1e-9,
+                "GrIn {} vs CAB {} for {mu:?}",
+                grin.throughput,
+                x_cab
+            );
+        }
+    }
+
+    #[test]
+    fn solve_respects_populations_and_improves_init() {
+        let mut rng = Rng::new(2024);
+        for _ in 0..50 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(10) as u32).collect();
+            let init = initialize(&mu, &pops).unwrap();
+            let sol = solve(&mu, &pops).unwrap();
+            sol.state.check_populations(&pops).unwrap();
+            assert!(sol.throughput >= x_of_state(&mu, &init) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn policy_wrapper_steers_to_solution() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let mut p = GrInPolicy::new();
+        p.prepare(&mu, &[4, 4]).unwrap();
+        let sol_state = p.solution().unwrap().state.clone();
+        // Remove one task and let the policy re-place it.
+        let mut state = sol_state.clone();
+        state.dec(1, 1).unwrap();
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[4, 4] };
+        let j = p.dispatch(1, &view, &mut Rng::new(0));
+        state.inc(1, j);
+        assert_eq!(state, sol_state);
+    }
+}

@@ -1,0 +1,93 @@
+//! LB: load balancing with perfect information (§5 baseline 3).
+//!
+//! The paper's definition, verbatim: "dispatch the task to balance the
+//! load of the processors, i.e., send it to the queue with the least
+//! amount of work.  Work is defined as the task total size in the queue"
+//! — with *true* task sizes (perfect information), which "will only give
+//! better results than using estimations".
+//!
+//! Deliberately, LB does **not** account for the arriving task's own
+//! prospective service time on the candidate processor — that is the
+//! whole reason it collapses in affinity systems (a queue-empty slow
+//! processor looks attractive), which the paper's 2.37×–9.07× platform
+//! gaps quantify.  Ties break toward the task's faster processor.
+
+use super::{Policy, SystemView};
+use crate::sim::rng::Rng;
+
+/// The perfect-information Load-Balancing baseline.
+#[derive(Debug, Default)]
+pub struct LoadBalance;
+
+impl Policy for LoadBalance {
+    fn name(&self) -> &'static str {
+        "LB"
+    }
+
+    fn needs_work_estimate(&self) -> bool {
+        true
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        let l = view.mu.procs();
+        let mut best = 0usize;
+        let mut best_load = f64::INFINITY;
+        let mut best_rate = f64::NEG_INFINITY;
+        for j in 0..l {
+            let load = view.work[j];
+            let rate = view.mu.rate(ttype, j);
+            if load < best_load - 1e-12
+                || ((load - best_load).abs() <= 1e-12 && rate > best_rate)
+            {
+                best = j;
+                best_load = load;
+                best_rate = rate;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::AffinityMatrix;
+    use crate::model::state::StateMatrix;
+
+    #[test]
+    fn balances_by_work_not_count() {
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let state = StateMatrix::new(2, 2, vec![1, 3, 0, 0]).unwrap();
+        // P1 has 1 huge task (10s), P2 has 3 tiny ones (0.3s total).
+        let work = vec![10.0, 0.3];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[4, 0] };
+        let mut p = LoadBalance;
+        let mut rng = Rng::new(0);
+        assert_eq!(p.dispatch(0, &view, &mut rng), 1);
+    }
+
+    #[test]
+    fn ignores_own_service_time_by_design() {
+        // The paper's LB: an empty queue wins even if this task is 100×
+        // slower there — the affinity-blindness the paper exploits.
+        let mu = AffinityMatrix::two_type(0.1, 10.0, 0.1, 10.0).unwrap();
+        let state = StateMatrix::zeros(2, 2);
+        let work = vec![0.0, 5.0];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[1, 1] };
+        let mut p = LoadBalance;
+        let mut rng = Rng::new(0);
+        assert_eq!(p.dispatch(0, &view, &mut rng), 0);
+    }
+
+    #[test]
+    fn ties_break_toward_affinity() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let state = StateMatrix::zeros(2, 2);
+        let work = vec![0.0, 0.0];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[1, 1] };
+        let mut p = LoadBalance;
+        let mut rng = Rng::new(0);
+        assert_eq!(p.dispatch(0, &view, &mut rng), 0); // 20 > 15
+        assert_eq!(p.dispatch(1, &view, &mut rng), 1); // 8 > 3
+    }
+}

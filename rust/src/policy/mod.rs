@@ -1,0 +1,185 @@
+//! Task scheduling policies (§3, §5).
+//!
+//! The policy answers one question on every task arrival: *which processor
+//! gets the next task of type i?*  The simulator, the platform emulator
+//! and the serving coordinator all drive the same [`Policy`] trait, so a
+//! policy validated in simulation runs unmodified on the live system —
+//! exactly the paper's methodology (§5 simulation → §7 platform).
+//!
+//! Implementations:
+//!
+//! * [`cab`] — the optimal two-type policy (Lemma 4 / Table 1).
+//! * [`grin`] — the GrIn heuristic (Algorithms 1–2) for any k×l.
+//! * [`best_fit`], [`random`], [`jsq`], [`load_balance`] — the §5
+//!   baselines.
+//! * [`opt`] — exhaustive-search oracle ("Opt" in Figs. 9–12).
+//! * [`target`] — shared deficit-steering machinery for all state-target
+//!   policies (CAB / GrIn / Opt).
+
+pub mod best_fit;
+pub mod cab;
+pub mod grin;
+pub mod jsq;
+pub mod myopic;
+pub mod load_balance;
+pub mod opt;
+pub mod random;
+pub mod target;
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::sim::rng::Rng;
+
+/// Snapshot of the system handed to a policy at dispatch time.
+#[derive(Debug)]
+pub struct SystemView<'a> {
+    /// Affinity matrix μ.
+    pub mu: &'a AffinityMatrix,
+    /// Current task distribution (the departing task already removed).
+    pub state: &'a StateMatrix,
+    /// Remaining work per processor in drain-time units (perfect
+    /// information, as granted to LB in §5).
+    pub work: &'a [f64],
+    /// Per-type populations N_i.
+    pub populations: &'a [u32],
+}
+
+/// A task-to-processor dispatch policy.
+pub trait Policy: Send {
+    /// Display name (figure legends).
+    fn name(&self) -> &'static str;
+
+    /// Called once before a run with the system parameters; state-target
+    /// policies solve for S_max here.
+    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
+        let _ = (mu, populations);
+        Ok(())
+    }
+
+    /// Does this policy read `SystemView::work`?  The engine skips the
+    /// O(N) remaining-work scan on every dispatch when it doesn't —
+    /// a §Perf optimization worth ~2× simulator throughput.
+    fn needs_work_estimate(&self) -> bool {
+        false
+    }
+
+    /// Choose the processor for an arriving task of type `ttype`.
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, rng: &mut Rng) -> usize;
+}
+
+/// The policy suite of the paper's figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyKind {
+    /// CAB (two-type optimal).
+    Cab,
+    /// GrIn (general near-optimal).
+    GrIn,
+    /// Best Fit.
+    BestFit,
+    /// Random.
+    Random,
+    /// Join-the-Shortest-Queue.
+    Jsq,
+    /// Load Balancing with perfect information.
+    LoadBalance,
+    /// Exhaustive-search oracle.
+    Opt,
+    /// Myopic one-step-lookahead (Ahn et al. [22]; ablation baseline).
+    Myopic,
+}
+
+impl PolicyKind {
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "cab" => Ok(PolicyKind::Cab),
+            "grin" => Ok(PolicyKind::GrIn),
+            "bf" | "best_fit" | "bestfit" => Ok(PolicyKind::BestFit),
+            "rd" | "random" => Ok(PolicyKind::Random),
+            "jsq" => Ok(PolicyKind::Jsq),
+            "lb" | "load_balance" => Ok(PolicyKind::LoadBalance),
+            "opt" | "exhaustive" => Ok(PolicyKind::Opt),
+            "myopic" => Ok(PolicyKind::Myopic),
+            other => Err(Error::Parse(format!(
+                "unknown policy '{other}' (cab|grin|bf|rd|jsq|lb|opt)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Cab => "CAB",
+            PolicyKind::GrIn => "GrIn",
+            PolicyKind::BestFit => "BF",
+            PolicyKind::Random => "RD",
+            PolicyKind::Jsq => "JSQ",
+            PolicyKind::LoadBalance => "LB",
+            PolicyKind::Opt => "Opt",
+            PolicyKind::Myopic => "Myopic",
+        }
+    }
+
+    /// Instantiate.
+    pub fn build(self) -> Box<dyn Policy> {
+        match self {
+            PolicyKind::Cab => Box::new(cab::Cab::new()),
+            PolicyKind::GrIn => Box::new(grin::GrInPolicy::new()),
+            PolicyKind::BestFit => Box::new(best_fit::BestFit),
+            PolicyKind::Random => Box::new(random::RandomPolicy),
+            PolicyKind::Jsq => Box::new(jsq::Jsq),
+            PolicyKind::LoadBalance => Box::new(load_balance::LoadBalance),
+            PolicyKind::Opt => Box::new(opt::OptPolicy::new()),
+            PolicyKind::Myopic => Box::new(myopic::Myopic),
+        }
+    }
+
+    /// The five §5 two-type policies (Figs. 4–7, 15–16).
+    pub fn five_two_type() -> [PolicyKind; 5] {
+        [
+            PolicyKind::Cab,
+            PolicyKind::BestFit,
+            PolicyKind::Random,
+            PolicyKind::Jsq,
+            PolicyKind::LoadBalance,
+        ]
+    }
+
+    /// The six §6 multi-type policies (Figs. 9–12).
+    pub fn six_multi_type() -> [PolicyKind; 6] {
+        [
+            PolicyKind::GrIn,
+            PolicyKind::BestFit,
+            PolicyKind::Random,
+            PolicyKind::Jsq,
+            PolicyKind::LoadBalance,
+            PolicyKind::Opt,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_build_all() {
+        for kind in [
+            PolicyKind::Cab,
+            PolicyKind::GrIn,
+            PolicyKind::BestFit,
+            PolicyKind::Random,
+            PolicyKind::Jsq,
+            PolicyKind::LoadBalance,
+            PolicyKind::Opt,
+            PolicyKind::Myopic,
+        ] {
+            let parsed = PolicyKind::parse(kind.name()).unwrap();
+            assert_eq!(parsed, kind);
+            let p = kind.build();
+            assert_eq!(p.name(), kind.name());
+        }
+        assert!(PolicyKind::parse("fifo").is_err());
+    }
+}

@@ -1,0 +1,80 @@
+//! Myopic one-step policy (Ahn et al. [22], discussed in §2).
+//!
+//! Dispatch each arriving task to the processor that maximizes the
+//! *instantaneous* post-placement throughput X(S⁺) — i.e. greedily
+//! maximize Eq. 28 one arrival at a time, with no look-ahead.  The paper
+//! cites this family as "optimal under certain conditions by assuming no
+//! further arrivals"; in the closed system it is a strong heuristic but
+//! not CAB: the ablation bench (`benches/ablation_myopic.rs`) quantifies
+//! the gap in the biased regimes, where greedy placement refuses the
+//! short-term sacrifice that the AF state requires.
+
+use crate::model::throughput::x_df_plus;
+use crate::sim::rng::Rng;
+
+use super::{Policy, SystemView};
+
+/// The myopic one-step-lookahead policy.
+#[derive(Debug, Default)]
+pub struct Myopic;
+
+impl Policy for Myopic {
+    fn name(&self) -> &'static str {
+        "Myopic"
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        // argmax_j ΔX of adding this task to processor j (Eq. 34); the
+        // column deltas are exact, so this maximizes X(S⁺).
+        let mut best = 0usize;
+        let mut best_gain = f64::NEG_INFINITY;
+        for j in 0..view.mu.procs() {
+            let gain = x_df_plus(view.mu, view.state, ttype, j);
+            if gain > best_gain {
+                best = j;
+                best_gain = gain;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::AffinityMatrix;
+    use crate::model::state::StateMatrix;
+    use crate::model::throughput::x_of_state;
+
+    #[test]
+    fn maximizes_post_placement_throughput() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let state = StateMatrix::new(2, 2, vec![2, 1, 1, 3]).unwrap();
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[4, 4] };
+        let mut p = Myopic;
+        let j = p.dispatch(0, &view, &mut Rng::new(0));
+        // Verify against brute force.
+        let mut best = (0usize, f64::MIN);
+        for cand in 0..2 {
+            let mut s2 = state.clone();
+            s2.inc(0, cand);
+            let x = x_of_state(&mu, &s2);
+            if x > best.1 {
+                best = (cand, x);
+            }
+        }
+        assert_eq!(j, best.0);
+    }
+
+    #[test]
+    fn empty_system_prefers_fastest_processor() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let state = StateMatrix::zeros(2, 2);
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[1, 1] };
+        let mut p = Myopic;
+        assert_eq!(p.dispatch(0, &view, &mut Rng::new(0)), 0); // μ11 = 20
+        assert_eq!(p.dispatch(1, &view, &mut Rng::new(0)), 1); // μ22 = 8
+    }
+}

@@ -1,0 +1,107 @@
+//! Opt: exhaustive-search oracle as a dispatch policy (Figs. 9–12).
+//!
+//! Solves the integer program exactly at `prepare` time (exponential — use
+//! only at oracle scale, as the paper does) and deficit-steers to the
+//! optimum thereafter.
+
+use super::target::TargetSteering;
+use super::{Policy, SystemView};
+use crate::error::Result;
+use crate::model::affinity::AffinityMatrix;
+use crate::sim::rng::Rng;
+use crate::solver::exhaustive::{ExhaustiveSolver, OptSolution};
+
+/// The exhaustive oracle policy.
+#[derive(Debug, Default)]
+pub struct OptPolicy {
+    steering: Option<TargetSteering>,
+    solution: Option<OptSolution>,
+}
+
+impl OptPolicy {
+    /// New, unprepared policy.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The exact optimum (after `prepare`).
+    pub fn solution(&self) -> Option<&OptSolution> {
+        self.solution.as_ref()
+    }
+}
+
+impl Policy for OptPolicy {
+    fn name(&self) -> &'static str {
+        "Opt"
+    }
+
+    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
+        let sol = ExhaustiveSolver.solve(mu, populations)?;
+        self.steering = Some(TargetSteering::new(sol.state.clone()));
+        self.solution = Some(sol);
+        Ok(())
+    }
+
+    fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
+        self.steering
+            .as_ref()
+            .expect("OptPolicy::prepare must be called before dispatch")
+            .dispatch(ttype, view)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::state::StateMatrix;
+    use crate::model::throughput::x_of_state;
+    use crate::policy::grin;
+
+    #[test]
+    fn opt_dominates_grin() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![4.0, 9.0, 2.0],
+            vec![8.0, 3.0, 7.0],
+            vec![1.0, 5.0, 6.0],
+        ])
+        .unwrap();
+        let pops = [4u32, 5, 3];
+        let mut p = OptPolicy::new();
+        p.prepare(&mu, &pops).unwrap();
+        let opt_x = p.solution().unwrap().throughput;
+        let grin_x = grin::solve(&mu, &pops).unwrap().throughput;
+        assert!(opt_x >= grin_x - 1e-12);
+    }
+
+    #[test]
+    fn steers_back_to_optimum() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let pops = [5u32, 5];
+        let mut p = OptPolicy::new();
+        p.prepare(&mu, &pops).unwrap();
+        let target = p.solution().unwrap().state.clone();
+        let mut state = target.clone();
+        state.dec(0, 0).unwrap();
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &pops };
+        let j = p.dispatch(0, &view, &mut Rng::new(0));
+        state.inc(0, j);
+        assert_eq!(x_of_state(&mu, &state), x_of_state(&mu, &target));
+        assert_eq!(state, target);
+    }
+
+    #[test]
+    fn optimum_is_truly_exhaustive_on_small_grid() {
+        let mu = AffinityMatrix::two_type(9.0, 5.0, 2.0, 7.0).unwrap();
+        let pops = [3u32, 3];
+        let mut p = OptPolicy::new();
+        p.prepare(&mu, &pops).unwrap();
+        let best = p.solution().unwrap().throughput;
+        for n11 in 0..=3 {
+            for n22 in 0..=3 {
+                let s = StateMatrix::from_two_type(n11, n22, 3, 3).unwrap();
+                assert!(x_of_state(&mu, &s) <= best + 1e-12);
+            }
+        }
+    }
+}

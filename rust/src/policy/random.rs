@@ -1,0 +1,42 @@
+//! RD: dispatch uniformly at random over processor types (§5 baseline 1).
+
+use super::{Policy, SystemView};
+use crate::sim::rng::Rng;
+
+/// The Random baseline.
+#[derive(Debug, Default)]
+pub struct RandomPolicy;
+
+impl Policy for RandomPolicy {
+    fn name(&self) -> &'static str {
+        "RD"
+    }
+
+    fn dispatch(&mut self, _ttype: usize, view: &SystemView<'_>, rng: &mut Rng) -> usize {
+        rng.index(view.mu.procs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::AffinityMatrix;
+    use crate::model::state::StateMatrix;
+
+    #[test]
+    fn covers_all_processors_uniformly() {
+        let mu = AffinityMatrix::from_rows(&[vec![1.0, 2.0, 3.0]]).unwrap();
+        let state = StateMatrix::zeros(1, 3);
+        let work = vec![0.0; 3];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[9] };
+        let mut rng = Rng::new(1);
+        let mut p = RandomPolicy;
+        let mut counts = [0usize; 3];
+        for _ in 0..3000 {
+            counts[p.dispatch(0, &view, &mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 1000.0).abs() < 150.0, "{counts:?}");
+        }
+    }
+}

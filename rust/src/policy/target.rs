@@ -1,0 +1,130 @@
+//! Deficit steering toward a target state S_max (Lemma 2: "always stay in
+//! the state that maximizes X(S)").
+//!
+//! CAB, GrIn and Opt all reduce to: solve for a target matrix N* once,
+//! then on every arrival send the i-type task to a processor whose i-row
+//! cell is *under* target.  In the closed system the per-type populations
+//! are conserved, so after the initial fill the deficit is always exactly
+//! the cell the departing task vacated — the system provably stays in
+//! S_max (see `tests/policy_invariants.rs` for the property test).
+
+use crate::model::state::StateMatrix;
+
+use super::SystemView;
+
+/// Steers arrivals toward a fixed target state.
+#[derive(Debug, Clone)]
+pub struct TargetSteering {
+    target: StateMatrix,
+}
+
+impl TargetSteering {
+    /// Steer toward `target`.
+    pub fn new(target: StateMatrix) -> Self {
+        Self { target }
+    }
+
+    /// The target matrix.
+    pub fn target(&self) -> &StateMatrix {
+        &self.target
+    }
+
+    /// Choose the processor for an arriving `ttype` task.
+    ///
+    /// Primary rule: the largest deficit `N*_ij − N_ij`.  If no cell of the
+    /// row is under target (possible transiently when the population mix
+    /// drifts from what the target was solved for), fall back to the
+    /// fastest processor for the type among the least-overfull cells.
+    pub fn dispatch(&self, ttype: usize, view: &SystemView<'_>) -> usize {
+        let l = self.target.procs();
+        debug_assert_eq!(view.state.procs(), l);
+        let mut best = 0usize;
+        let mut best_deficit = i64::MIN;
+        let mut best_rate = f64::NEG_INFINITY;
+        for j in 0..l {
+            let deficit =
+                self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64;
+            let rate = view.mu.rate(ttype, j);
+            if deficit > best_deficit || (deficit == best_deficit && rate > best_rate) {
+                best = j;
+                best_deficit = deficit;
+                best_rate = rate;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::AffinityMatrix;
+    use crate::sim::rng::Rng;
+
+    fn view<'a>(
+        mu: &'a AffinityMatrix,
+        state: &'a StateMatrix,
+        work: &'a [f64],
+        populations: &'a [u32],
+    ) -> SystemView<'a> {
+        SystemView { mu, state, work, populations }
+    }
+
+    #[test]
+    fn fills_deficit_cells_first() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        // P1-biased target (1, N2) with N1=2, N2=18: [[1,1],[0,18]].
+        let target = StateMatrix::from_two_type(1, 18, 2, 18).unwrap();
+        let steer = TargetSteering::new(target);
+        // Current state is the target minus the task that just left (0,0).
+        let state = StateMatrix::new(2, 2, vec![0, 1, 0, 18]).unwrap();
+        let work = vec![0.0; 2];
+        let v = view(&mu, &state, &work, &[2, 18]);
+        assert_eq!(steer.dispatch(0, &v), 0);
+        // And minus a type-2 task from P2 instead.
+        let state = StateMatrix::new(2, 2, vec![1, 1, 0, 17]).unwrap();
+        let v = view(&mu, &state, &work, &[2, 18]);
+        assert_eq!(steer.dispatch(1, &v), 1);
+    }
+
+    #[test]
+    fn overfull_falls_back_to_fastest() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let target = StateMatrix::new(2, 2, vec![1, 0, 0, 1]).unwrap();
+        let steer = TargetSteering::new(target);
+        // Row 0 already at/above target everywhere: equal deficits (0, -?)...
+        let state = StateMatrix::new(2, 2, vec![1, 0, 0, 1]).unwrap();
+        let work = vec![0.0; 2];
+        let v = view(&mu, &state, &work, &[1, 1]);
+        // deficit (0,0) = 0, (0,1) = 0: tie → faster rate wins (μ11=20).
+        assert_eq!(steer.dispatch(0, &v), 0);
+    }
+
+    #[test]
+    fn closed_loop_stays_at_target() {
+        // Simulate the dispatch/depart cycle: state must return to target
+        // after every (departure, arrival) pair, from any departure cell.
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let target = StateMatrix::from_two_type(1, 10, 10, 10).unwrap();
+        let steer = TargetSteering::new(target.clone());
+        let mut rng = Rng::new(42);
+        let mut state = target.clone();
+        let work = vec![0.0; 2];
+        for _ in 0..1000 {
+            // Random departure from a non-empty cell.
+            let (mut i, mut j);
+            loop {
+                i = rng.index(2);
+                j = rng.index(2);
+                if state.get(i, j) > 0 {
+                    break;
+                }
+            }
+            state.dec(i, j).unwrap();
+            let v = SystemView { mu: &mu, state: &state, work: &work, populations: &[10, 10] };
+            let dest = steer.dispatch(i, &v);
+            state.inc(i, dest);
+            assert_eq!(state, target, "drifted from S_max");
+        }
+    }
+}

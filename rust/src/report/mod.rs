@@ -1,0 +1,10 @@
+//! Reporting substrate for benches and the CLI (no `criterion`/plotting
+//! crates offline): aligned ASCII tables, figure-style series blocks and
+//! wall-clock timers.  Every paper figure/table bench prints through this
+//! module so `bench_output.txt` is uniform and diffable.
+
+pub mod table;
+pub mod timer;
+
+pub use table::{Series, Table};
+pub use timer::Stopwatch;

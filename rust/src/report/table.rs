@@ -1,0 +1,171 @@
+//! Aligned ASCII tables and figure-series blocks.
+
+/// A printable table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title and column headers.
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (cells stringified by the caller).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("## {}\n", self.title));
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&format!("{:>w$}", c, w = widths[i]));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// A named (x, y) series — one line of a paper figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label (e.g. "CAB").
+    pub label: String,
+    /// Points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// New empty series.
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), points: Vec::new() }
+    }
+
+    /// Append a point.
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    /// Render several series as a figure block: one row per x, one
+    /// column per series — exactly the data behind a paper subplot.
+    pub fn render_block(title: &str, x_label: &str, series: &[Series]) -> String {
+        let mut headers: Vec<&str> = vec![x_label];
+        for s in series {
+            headers.push(&s.label);
+        }
+        let mut t = Table::new(title, &headers);
+        if let Some(first) = series.first() {
+            for (i, &(x, _)) in first.points.iter().enumerate() {
+                let mut row = vec![format!("{x:.3}")];
+                for s in series {
+                    row.push(
+                        s.points
+                            .get(i)
+                            .map(|&(_, y)| format!("{y:.4}"))
+                            .unwrap_or_else(|| "-".into()),
+                    );
+                }
+                t.row(row);
+            }
+        }
+        t.render()
+    }
+}
+
+/// Compact f64 formatter for table cells.
+pub fn fmt(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 1000.0 || v.abs() < 0.01 {
+        format!("{v:.3e}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("Demo", &["name", "x"]);
+        t.row(vec!["CAB".into(), "31.32".into()]);
+        t.row(vec!["LB".into(), "14.0".into()]);
+        let s = t.render();
+        assert!(s.contains("## Demo"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 5);
+        // Columns right-aligned to equal width.
+        assert_eq!(lines[1].len(), lines[3].len());
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn series_block_pivots_series_to_columns() {
+        let mut a = Series::new("CAB");
+        let mut b = Series::new("LB");
+        for i in 0..3 {
+            a.push(i as f64 / 10.0, 20.0 + i as f64);
+            b.push(i as f64 / 10.0, 10.0 + i as f64);
+        }
+        let s = Series::render_block("Fig X", "eta", &[a, b]);
+        assert!(s.contains("CAB"));
+        assert!(s.contains("LB"));
+        assert!(s.contains("0.200"));
+        assert!(s.lines().count() == 6);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt(0.0), "0");
+        assert!(fmt(12345.0).contains('e'));
+        assert!(fmt(0.001).contains('e'));
+        assert_eq!(fmt(3.14159), "3.1416");
+    }
+}

@@ -1,0 +1,102 @@
+//! Wall-clock measurement for the bench harness (criterion stand-in):
+//! repeated timed runs with mean/min/max and ns-per-op helpers.
+
+use std::time::{Duration, Instant};
+
+/// Repeated-run stopwatch.
+#[derive(Debug, Clone, Default)]
+pub struct Stopwatch {
+    samples: Vec<Duration>,
+}
+
+impl Stopwatch {
+    /// New empty stopwatch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time one closure invocation and record it; returns its output.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.samples.push(t0.elapsed());
+        out
+    }
+
+    /// Run `f` `n` times, recording each.
+    pub fn run_n(&mut self, n: usize, mut f: impl FnMut()) {
+        for _ in 0..n {
+            self.time(&mut f);
+        }
+    }
+
+    /// Recorded sample count.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Mean seconds per run.
+    pub fn mean_s(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Minimum seconds (the usual bench headline: least noisy).
+    pub fn min_s(&self) -> f64 {
+        self.samples
+            .iter()
+            .map(|d| d.as_secs_f64())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Maximum seconds.
+    pub fn max_s(&self) -> f64 {
+        self.samples.iter().map(|d| d.as_secs_f64()).fold(0.0, f64::max)
+    }
+
+    /// Mean nanoseconds per operation given `ops` operations per run.
+    pub fn ns_per_op(&self, ops: u64) -> f64 {
+        self.mean_s() * 1e9 / ops.max(1) as f64
+    }
+
+    /// One-line summary.
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: mean {:.3} ms, min {:.3} ms, max {:.3} ms over {} runs",
+            self.mean_s() * 1e3,
+            self.min_s() * 1e3,
+            self.max_s() * 1e3,
+            self.count()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let mut sw = Stopwatch::new();
+        let mut acc = 0u64;
+        sw.run_n(5, || {
+            acc = (0..10_000u64).sum();
+        });
+        assert_eq!(acc, 49_995_000);
+        assert_eq!(sw.count(), 5);
+        assert!(sw.mean_s() > 0.0);
+        assert!(sw.min_s() <= sw.mean_s());
+        assert!(sw.mean_s() <= sw.max_s());
+        assert!(sw.ns_per_op(10_000) > 0.0);
+        assert!(sw.summary("x").contains("5 runs"));
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        let sw = Stopwatch::new();
+        assert_eq!(sw.mean_s(), 0.0);
+        assert_eq!(sw.count(), 0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact manifest: what `make artifacts` produced and where.
+//!
+//! `artifacts/manifest.json` is written by `python/compile/aot.py` and
+//! parsed here with the in-repo JSON substrate.  Each entry records the
+//! HLO-text file, the argument shapes/dtypes and the output tuple arity —
+//! enough for the engine to validate inputs before handing them to PJRT.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+
+/// Metadata for one AOT entry point.
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    /// Entry name (e.g. "nn2000").
+    pub name: String,
+    /// HLO text file (absolute).
+    pub path: PathBuf,
+    /// Argument shapes (row-major dims per argument).
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Argument dtypes (e.g. "float32").
+    pub arg_dtypes: Vec<String>,
+    /// Output tuple arity.
+    pub out_arity: usize,
+}
+
+impl EntryMeta {
+    /// Element count of argument `i`.
+    pub fn arg_elems(&self, i: usize) -> usize {
+        self.arg_shapes[i].iter().product()
+    }
+}
+
+/// A parsed artifact directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactDir {
+    /// Directory root.
+    pub root: PathBuf,
+    entries: Vec<EntryMeta>,
+}
+
+impl ArtifactDir {
+    /// The conventional location relative to the repo root, overridable
+    /// via `HETSCHED_ARTIFACTS`.
+    pub fn default_root() -> PathBuf {
+        if let Ok(p) = std::env::var("HETSCHED_ARTIFACTS") {
+            return PathBuf::from(p);
+        }
+        // Walk up from cwd looking for artifacts/manifest.json (works from
+        // the repo root, examples/, benches/ and `cargo test` cwds).
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.join("manifest.json").exists() {
+                return cand;
+            }
+            if !dir.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    }
+
+    /// Load and validate the manifest in `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let mpath = root.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} — run `make artifacts` first ({e})",
+                mpath.display()
+            ))
+        })?;
+        let j = Json::parse(&text)?;
+        let format = j.req("format")?.as_u64()?;
+        if format != 1 {
+            return Err(Error::Runtime(format!("unsupported manifest format {format}")));
+        }
+        let mut entries = Vec::new();
+        for (name, e) in j.req("entries")?.as_obj()? {
+            let file = e.req("file")?.as_str()?;
+            let path = root.join(file);
+            if !path.exists() {
+                return Err(Error::Runtime(format!(
+                    "artifact {} listed in manifest but missing on disk",
+                    path.display()
+                )));
+            }
+            let mut arg_shapes = Vec::new();
+            let mut arg_dtypes = Vec::new();
+            for a in e.req("args")?.as_arr()? {
+                let dims: Vec<usize> = a
+                    .req("shape")?
+                    .as_arr()?
+                    .iter()
+                    .map(|d| Ok(d.as_u64()? as usize))
+                    .collect::<Result<_>>()?;
+                arg_shapes.push(dims);
+                arg_dtypes.push(a.req("dtype")?.as_str()?.to_string());
+            }
+            entries.push(EntryMeta {
+                name: name.clone(),
+                path,
+                arg_shapes,
+                arg_dtypes,
+                out_arity: e.req("out_arity")?.as_u64()? as usize,
+            });
+        }
+        if entries.is_empty() {
+            return Err(Error::Runtime("manifest has no entries".into()));
+        }
+        Ok(Self { root, entries })
+    }
+
+    /// Open the default location.
+    pub fn open_default() -> Result<Self> {
+        Self::open(Self::default_root())
+    }
+
+    /// Look up an entry by name.
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| Error::Runtime(format!("no artifact entry '{name}'")))
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[EntryMeta] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path, with_file: bool) {
+        std::fs::create_dir_all(dir).unwrap();
+        if with_file {
+            std::fs::write(dir.join("toy.hlo.txt"), "HloModule toy").unwrap();
+        }
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format": 1, "entries": {"toy": {
+                "file": "toy.hlo.txt", "sha256_16": "x",
+                "args": [{"shape": [2, 3], "dtype": "float32"}],
+                "out_arity": 2}}}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join(format!("hetsched_art_{}", std::process::id()));
+        fake_manifest(&dir, true);
+        let art = ArtifactDir::open(&dir).unwrap();
+        let e = art.entry("toy").unwrap();
+        assert_eq!(e.arg_shapes, vec![vec![2, 3]]);
+        assert_eq!(e.arg_dtypes, vec!["float32"]);
+        assert_eq!(e.out_arity, 2);
+        assert_eq!(e.arg_elems(0), 6);
+        assert!(art.entry("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_artifact_file_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("hetsched_art2_{}", std::process::id()));
+        fake_manifest(&dir, false);
+        assert!(ArtifactDir::open(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactDir::open("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

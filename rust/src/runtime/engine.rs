@@ -1,0 +1,259 @@
+//! PJRT execution engine: one compiled executable per artifact entry.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables are compiled lazily on
+//! first use and cached for the lifetime of the engine (no retraces, no
+//! recompiles on the hot path).
+//!
+//! `xla::PjRtLoadedExecutable` is not `Sync`; the platform/coordinator
+//! layers therefore own one `Engine` per worker thread (engines share
+//! nothing and PJRT CPU clients are cheap).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+use super::artifacts::{ArtifactDir, EntryMeta};
+
+/// Result of one NN workload execution.
+#[derive(Debug, Clone, Copy)]
+pub struct NnTaskResult {
+    /// Checksum of the activations (numeric probe).
+    pub checksum: f32,
+    /// Elements produced.
+    pub elems: usize,
+}
+
+/// Result of one sort workload execution.
+#[derive(Debug, Clone)]
+pub struct SortTaskResult {
+    /// Sorted rows, row-major.
+    pub rows: Vec<f32>,
+    /// Checksum (must equal the input sum — sorting preserves it).
+    pub checksum: f32,
+}
+
+/// The PJRT engine.
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts: ArtifactDir,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifact directory.
+    pub fn new(artifacts: ArtifactDir) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create over the default artifact location.
+    pub fn open_default() -> Result<Self> {
+        Self::new(ArtifactDir::open_default()?)
+    }
+
+    /// PJRT platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Entry metadata.
+    pub fn entry(&self, name: &str) -> Result<EntryMeta> {
+        self.artifacts.entry(name).cloned()
+    }
+
+    /// Compile (or fetch from cache) an entry's executable.
+    fn compiled(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.artifacts.entry(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an entry with f32 inputs; returns the flattened f32 outputs
+    /// of the result tuple (non-f32 leaves are skipped by `want` index).
+    ///
+    /// Inputs are validated against the manifest shapes.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.artifacts.entry(name)?;
+        if inputs.len() != meta.arg_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs, manifest expects {}",
+                inputs.len(),
+                meta.arg_shapes.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != meta.arg_elems(i) {
+                return Err(Error::Runtime(format!(
+                    "{name}: arg {i} has {} elements, manifest expects {:?}",
+                    data.len(),
+                    meta.arg_shapes[i]
+                )));
+            }
+            let dims: Vec<i64> = meta.arg_shapes[i].iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        self.compiled(name)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != meta.out_arity {
+            return Err(Error::Runtime(format!(
+                "{name}: result tuple arity {} vs manifest {}",
+                tuple.len(),
+                meta.out_arity
+            )));
+        }
+        let mut outs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            // All shipped entries emit f32 leaves except throughput_eval's
+            // best-index (i32) — surface those as f32 via i32 read.
+            match lit.to_vec::<f32>() {
+                Ok(v) => outs.push(v),
+                Err(_) => {
+                    let v = lit.to_vec::<i32>().map_err(|e| {
+                        Error::Runtime(format!("{name}: unreadable output leaf: {e}"))
+                    })?;
+                    outs.push(v.into_iter().map(|x| x as f32).collect());
+                }
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Run the NN workload entry (`nn2000` / `nn_small`).
+    pub fn nn_task(&self, entry: &str, x: &[f32], w: &[f32], b: &[f32]) -> Result<NnTaskResult> {
+        let outs = self.run_f32(entry, &[x, w, b])?;
+        Ok(NnTaskResult { checksum: outs[1][0], elems: outs[0].len() })
+    }
+
+    /// Run the sort workload entry (`sort_small` / `sort_large`).
+    pub fn sort_task(&self, entry: &str, rows: &[f32]) -> Result<SortTaskResult> {
+        let outs = self.run_f32(entry, &[rows])?;
+        let mut it = outs.into_iter();
+        let rows = it.next().expect("arity checked");
+        let checksum = it.next().expect("arity checked")[0];
+        Ok(SortTaskResult { rows, checksum })
+    }
+
+    /// Evaluate the Eq.-28 objective for a padded candidate batch via the
+    /// `throughput_eval` artifact: returns X_sys per candidate.
+    ///
+    /// `mu_padded` is `K_PAD×L_PAD` row-major, `batch` is
+    /// `B×K_PAD×L_PAD`; B must match the artifact's baked batch size.
+    pub fn throughput_batch(&self, mu_padded: &[f32], batch: &[f32]) -> Result<Vec<f32>> {
+        let outs = self.run_f32("throughput_eval", &[mu_padded, batch])?;
+        Ok(outs.into_iter().next().expect("arity checked"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests need built artifacts; they self-skip when
+    //! `make artifacts` has not run (CI runs them via `make test`).
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        match ArtifactDir::open_default() {
+            Ok(a) => Some(Engine::new(a).expect("pjrt cpu client")),
+            Err(_) => {
+                eprintln!("skipping: artifacts not built");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn nn_small_executes_and_matches_oracle() {
+        let Some(eng) = engine() else { return };
+        // x = ones(8,256), w = I(256)*0.5, b = 0.25: y = relu(0.5+0.25).
+        let x = vec![1.0f32; 8 * 256];
+        let mut w = vec![0.0f32; 256 * 256];
+        for i in 0..256 {
+            w[i * 256 + i] = 0.5;
+        }
+        let b = vec![0.25f32; 256];
+        let r = eng.nn_task("nn_small", &x, &w, &b).unwrap();
+        assert_eq!(r.elems, 8 * 256);
+        let want = 0.75f32 * (8 * 256) as f32;
+        assert!((r.checksum - want).abs() < 0.5, "{} vs {want}", r.checksum);
+    }
+
+    #[test]
+    fn sort_small_sorts() {
+        let Some(eng) = engine() else { return };
+        let mut rows = vec![0.0f32; 16 * 256];
+        // Descending input per row.
+        for r in 0..16 {
+            for c in 0..256 {
+                rows[r * 256 + c] = (256 - c) as f32 + r as f32;
+            }
+        }
+        let input_sum: f32 = rows.iter().sum();
+        let out = eng.sort_task("sort_small", &rows).unwrap();
+        for r in 0..16 {
+            let row = &out.rows[r * 256..(r + 1) * 256];
+            assert!(row.windows(2).all(|w| w[0] <= w[1]), "row {r} unsorted");
+        }
+        assert!((out.checksum - input_sum).abs() / input_sum.abs() < 1e-5);
+    }
+
+    #[test]
+    fn throughput_eval_matches_rust_objective() {
+        let Some(eng) = engine() else { return };
+        use crate::model::affinity::AffinityMatrix;
+        use crate::model::state::StateMatrix;
+        use crate::model::throughput::x_of_state;
+        let (kp, lp, bsz) = (16usize, 16usize, 4096usize);
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let mut mu_p = vec![0f32; kp * lp];
+        for i in 0..2 {
+            for j in 0..2 {
+                mu_p[i * lp + j] = mu.rate(i, j) as f32;
+            }
+        }
+        let mut batch = vec![0f32; bsz * kp * lp];
+        let mut states = Vec::new();
+        let mut idx = 0;
+        for n11 in 0..=10u32 {
+            for n22 in 0..=10u32 {
+                let s = StateMatrix::from_two_type(n11, n22, 10, 10).unwrap();
+                let p = s.to_padded_f32(kp, lp).unwrap();
+                batch[idx * kp * lp..(idx + 1) * kp * lp].copy_from_slice(&p);
+                states.push(s);
+                idx += 1;
+            }
+        }
+        let xs = eng.throughput_batch(&mu_p, &batch).unwrap();
+        assert_eq!(xs.len(), bsz);
+        for (i, s) in states.iter().enumerate() {
+            let want = x_of_state(&mu, s) as f32;
+            assert!(
+                (xs[i] - want).abs() < 1e-3 * want.max(1.0),
+                "candidate {i}: pjrt {} vs rust {want}",
+                xs[i]
+            );
+        }
+        // Padding candidates evaluate to zero.
+        assert_eq!(xs[idx], 0.0);
+    }
+
+    #[test]
+    fn input_validation() {
+        let Some(eng) = engine() else { return };
+        assert!(eng.run_f32("nn_small", &[&[0.0]]).is_err()); // arity
+        let bad = vec![0.0f32; 7];
+        assert!(eng.run_f32("sort_small", &[&bad]).is_err()); // shape
+        assert!(eng.run_f32("missing_entry", &[]).is_err());
+    }
+}

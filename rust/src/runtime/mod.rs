@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers every L2 entry point to HLO *text*; this module
+//! loads the text with `HloModuleProto::from_text_file`, compiles it on
+//! the PJRT CPU client and keeps one cached executable per entry.  The L3
+//! hot paths (platform workers, the serving coordinator, the batched
+//! exhaustive solver) call through [`Engine`] — Python never runs at
+//! request time.
+//!
+//! * [`artifacts`] — manifest parsing + artifact path resolution.
+//! * [`engine`] — client, executable cache and typed entry points.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactDir, EntryMeta};
+pub use engine::{Engine, NnTaskResult, SortTaskResult};

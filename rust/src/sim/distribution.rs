@@ -1,0 +1,209 @@
+//! The four §5 task-size distributions, all normalized to mean 1.
+//!
+//! A task's *size* is its service requirement in work units; its service
+//! time on processor j is `size / μ_ij` when running alone.  Mean-1
+//! normalization makes μ directly the single-task completion rate, exactly
+//! the paper's convention (Def. 3).
+
+use super::rng::Rng;
+use crate::error::{Error, Result};
+
+/// Task-size distribution (mean 1 unless noted).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Distribution {
+    /// Exponential(1) — the Markovian case of §3.3.
+    Exponential,
+    /// Bounded Pareto with tail index `alpha` on [k, h], scaled to mean 1.
+    /// The §5 default is α = 1.5 with h/k = 10⁴ (heavy-tailed, the
+    /// process-lifetime shape of [12]).
+    BoundedPareto { alpha: f64, spread: f64 },
+    /// Uniform(0, 2) — mean 1.
+    Uniform,
+    /// Constant 1 — deterministic sizes.
+    Constant,
+}
+
+impl Distribution {
+    /// The §5 bounded-Pareto default.
+    pub fn default_pareto() -> Self {
+        Distribution::BoundedPareto { alpha: 1.5, spread: 1e4 }
+    }
+
+    /// Parse from a CLI/config name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "exp" | "exponential" => Ok(Distribution::Exponential),
+            "pareto" | "bounded_pareto" => Ok(Self::default_pareto()),
+            "uniform" => Ok(Distribution::Uniform),
+            "const" | "constant" => Ok(Distribution::Constant),
+            other => Err(Error::Parse(format!(
+                "unknown distribution '{other}' (exp|pareto|uniform|const)"
+            ))),
+        }
+    }
+
+    /// Canonical name (CLI round-trip).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Distribution::Exponential => "exp",
+            Distribution::BoundedPareto { .. } => "pareto",
+            Distribution::Uniform => "uniform",
+            Distribution::Constant => "const",
+        }
+    }
+
+    /// All four paper distributions (the Figs. 4–7 sweep).
+    pub fn all() -> [Distribution; 4] {
+        [
+            Distribution::Exponential,
+            Distribution::default_pareto(),
+            Distribution::Uniform,
+            Distribution::Constant,
+        ]
+    }
+
+    /// Draw one task size.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Distribution::Exponential => rng.exp(1.0),
+            Distribution::BoundedPareto { alpha, spread } => {
+                let k = pareto_lower(alpha, spread);
+                let h = k * spread;
+                // Inverse CDF of the bounded Pareto on [k, h].
+                let u = rng.f64();
+                let ka = k.powf(alpha);
+                let ha = h.powf(alpha);
+                let x = (1.0 - u * (1.0 - ka / ha)).powf(-1.0 / alpha) * k;
+                x.min(h)
+            }
+            Distribution::Uniform => rng.range_f64(0.0, 2.0),
+            Distribution::Constant => 1.0,
+        }
+    }
+
+    /// Analytic mean (should be 1 for all shipped parameterizations).
+    pub fn mean(&self) -> f64 {
+        match *self {
+            Distribution::Exponential | Distribution::Constant => 1.0,
+            Distribution::Uniform => 1.0,
+            Distribution::BoundedPareto { alpha, spread } => {
+                let k = pareto_lower(alpha, spread);
+                bounded_pareto_mean(alpha, k, k * spread)
+            }
+        }
+    }
+
+    /// Squared coefficient of variation (dispersion fingerprint; used by
+    /// tests to confirm the heavy tail survived normalization).
+    pub fn scv(&self) -> f64 {
+        match *self {
+            Distribution::Exponential => 1.0,
+            Distribution::Constant => 0.0,
+            Distribution::Uniform => 1.0 / 3.0,
+            Distribution::BoundedPareto { alpha, spread } => {
+                let k = pareto_lower(alpha, spread);
+                let h = k * spread;
+                let m1 = bounded_pareto_mean(alpha, k, h);
+                let m2 = bounded_pareto_moment2(alpha, k, h);
+                m2 / (m1 * m1) - 1.0
+            }
+        }
+    }
+}
+
+/// E[X] of bounded Pareto(α, k, h).
+fn bounded_pareto_mean(alpha: f64, k: f64, h: f64) -> f64 {
+    debug_assert!(alpha != 1.0);
+    let ka = k.powf(alpha);
+    let ha = h.powf(alpha);
+    ka / (1.0 - ka / ha) * alpha / (alpha - 1.0)
+        * (1.0 / k.powf(alpha - 1.0) - 1.0 / h.powf(alpha - 1.0))
+}
+
+/// E[X²] of bounded Pareto(α, k, h), α ≠ 2.
+fn bounded_pareto_moment2(alpha: f64, k: f64, h: f64) -> f64 {
+    let ka = k.powf(alpha);
+    let ha = h.powf(alpha);
+    ka / (1.0 - ka / ha) * alpha / (alpha - 2.0)
+        * (1.0 / k.powf(alpha - 2.0) - 1.0 / h.powf(alpha - 2.0))
+}
+
+/// Solve for the lower bound k that gives mean 1 at the given α and h/k
+/// spread (closed form via the mean expression's k-linearity).
+fn pareto_lower(alpha: f64, spread: f64) -> f64 {
+    // mean(α, k, s·k) = k · mean(α, 1, s)  — scale-family property.
+    1.0 / bounded_pareto_mean(alpha, 1.0, spread)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trip() {
+        for d in Distribution::all() {
+            assert_eq!(Distribution::parse(d.name()).unwrap(), d);
+        }
+        assert!(Distribution::parse("zipf").is_err());
+    }
+
+    #[test]
+    fn all_means_are_one_analytically() {
+        for d in Distribution::all() {
+            assert!((d.mean() - 1.0).abs() < 1e-9, "{d:?} mean {}", d.mean());
+        }
+    }
+
+    #[test]
+    fn empirical_means_are_one() {
+        let n = 400_000;
+        for d in Distribution::all() {
+            let mut rng = Rng::new(1234);
+            let s: f64 = (0..n).map(|_| d.sample(&mut rng)).sum();
+            let mean = s / n as f64;
+            // Pareto converges slowly (heavy tail) — wide but meaningful gate.
+            let tol = if matches!(d, Distribution::BoundedPareto { .. }) {
+                0.08
+            } else {
+                0.01
+            };
+            assert!((mean - 1.0).abs() < tol, "{d:?}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed() {
+        let d = Distribution::default_pareto();
+        assert!(d.scv() > 5.0, "scv {}", d.scv());
+        // And bounded: samples stay within [k, h].
+        let (k, h) = match d {
+            Distribution::BoundedPareto { alpha, spread } => {
+                let k = super::pareto_lower(alpha, spread);
+                (k, k * spread)
+            }
+            _ => unreachable!(),
+        };
+        let mut rng = Rng::new(99);
+        for _ in 0..50_000 {
+            let x = d.sample(&mut rng);
+            assert!(x >= k * 0.999 && x <= h * 1.001);
+        }
+    }
+
+    #[test]
+    fn uniform_support() {
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let x = Distribution::Uniform.sample(&mut rng);
+            assert!((0.0..2.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            assert_eq!(Distribution::Constant.sample(&mut rng), 1.0);
+        }
+    }
+}

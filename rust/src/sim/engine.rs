@@ -1,0 +1,331 @@
+//! The closed batch network engine (Fig. 2).
+//!
+//! N programs, each with exactly one task in flight.  On every completion
+//! the owning program immediately emits its next task, the policy picks a
+//! processor, and the task joins that processor's queue — no arrival
+//! process exists, exactly the paper's closed-system model (§3.1).
+//!
+//! The event loop is a classic next-completion discrete-event simulation:
+//! the only events are task completions, so the loop is
+//! `argmin_j next_completion(j)` → advance → record → re-dispatch.
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::energy::{EnergyModel, PowerScenario};
+use crate::model::state::StateMatrix;
+use crate::policy::{Policy, SystemView};
+
+use super::distribution::Distribution;
+use super::metrics::{Metrics, SimResult};
+use super::processor::{Discipline, Processor};
+use super::rng::Rng;
+use super::task::Program;
+
+/// Configuration of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Per-type program populations N_i (Σ = N).
+    pub populations: Vec<u32>,
+    /// Service discipline for every processor (§5 uses PS, §7 FCFS).
+    pub discipline: Discipline,
+    /// Task-size distribution (mean 1).
+    pub dist: Distribution,
+    /// Power model coefficient k.
+    pub power_coeff: f64,
+    /// Power scenario (α).
+    pub power: PowerScenario,
+    /// Completions to discard before measuring.
+    pub warmup: u64,
+    /// Completions to measure.
+    pub measure: u64,
+    /// RNG seed (figures regenerate bit-identically per seed).
+    pub seed: u64,
+}
+
+impl SimConfig {
+    /// The §5 defaults: N = 20 programs, PS, proportional power,
+    /// 2k warm-up and 20k measured completions.
+    pub fn paper_default(populations: Vec<u32>) -> Self {
+        Self {
+            populations,
+            discipline: Discipline::Ps,
+            dist: Distribution::Exponential,
+            power_coeff: 1.0,
+            power: PowerScenario::Proportional,
+            warmup: 2_000,
+            measure: 20_000,
+            seed: 0xC_A_B,
+        }
+    }
+
+    /// Total programs N.
+    pub fn n_programs(&self) -> u32 {
+        self.populations.iter().sum()
+    }
+}
+
+/// The closed batch network simulator.
+pub struct ClosedNetwork<'a> {
+    mu: &'a AffinityMatrix,
+    cfg: SimConfig,
+}
+
+impl<'a> ClosedNetwork<'a> {
+    /// Bind a network to an affinity matrix and a run configuration.
+    pub fn new(mu: &'a AffinityMatrix, cfg: SimConfig) -> Result<Self> {
+        if cfg.populations.len() != mu.types() {
+            return Err(Error::Shape(format!(
+                "{} populations for {} task types",
+                cfg.populations.len(),
+                mu.types()
+            )));
+        }
+        if cfg.n_programs() == 0 {
+            return Err(Error::Config("empty system (N = 0)".into()));
+        }
+        Ok(Self { mu, cfg })
+    }
+
+    /// Run one simulation under `policy` and return the §5 metrics.
+    pub fn run(&self, policy: &mut dyn Policy) -> Result<SimResult> {
+        let mu = self.mu;
+        let cfg = &self.cfg;
+        let (k, l) = (mu.types(), mu.procs());
+        let energy = EnergyModel::new(mu, cfg.power_coeff, cfg.power)?;
+        policy.prepare(mu, &cfg.populations)?;
+
+        let needs_work = policy.needs_work_estimate();
+        let mut rng = Rng::new(cfg.seed);
+        let mut procs: Vec<Processor> =
+            (0..l).map(|j| Processor::new(j, cfg.discipline)).collect();
+        let mut state = StateMatrix::zeros(k, l);
+        let mut programs: Vec<Program> = Vec::with_capacity(cfg.n_programs() as usize);
+        for (ttype, &ni) in cfg.populations.iter().enumerate() {
+            for _ in 0..ni {
+                programs.push(Program::new(programs.len(), ttype));
+            }
+        }
+        // Shuffle initial dispatch order so no policy sees a sorted fill.
+        let mut order: Vec<usize> = (0..programs.len()).collect();
+        rng.shuffle(&mut order);
+
+        let mut next_id = 0u64;
+        let mut work = vec![0.0f64; l];
+        // Initial fill at t = 0.
+        for &p in &order {
+            let ttype = programs[p].ttype;
+            let size = cfg.dist.sample(&mut rng);
+            let task = programs[p].emit(next_id, 0.0, size);
+            next_id += 1;
+            if needs_work {
+                for (j, pr) in procs.iter().enumerate() {
+                    work[j] = pr.remaining_work_time();
+                }
+            }
+            let view = SystemView {
+                mu,
+                state: &state,
+                work: &work,
+                populations: &cfg.populations,
+            };
+            let j = policy.dispatch(ttype, &view, &mut rng);
+            debug_assert!(j < l, "policy dispatched to invalid processor {j}");
+            procs[j].advance(0.0);
+            procs[j].push(task, mu.rate(ttype, j), 0.0);
+            state.inc(ttype, j);
+        }
+
+        let total = cfg.warmup + cfg.measure;
+        let mut metrics = Metrics::new(k, l, 0.0);
+        let mut measuring = false;
+        let mut now = 0.0f64;
+        let mut completions = 0u64;
+
+        while completions < total {
+            // Next completion across processors.
+            let (j, t) = procs
+                .iter()
+                .enumerate()
+                .filter_map(|(j, p)| p.next_completion().map(|t| (j, t)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .ok_or_else(|| Error::Solver("deadlock: no runnable task".into()))?;
+            debug_assert!(t >= now - 1e-9);
+            now = t;
+            procs[j].advance(now);
+            let done = procs[j].pop_completed(now)?;
+            state.dec(done.ttype, j)?;
+            completions += 1;
+
+            if !measuring && completions > cfg.warmup {
+                measuring = true;
+                metrics = Metrics::new(k, l, now);
+            }
+            if measuring {
+                let omega = done.size / mu.rate(done.ttype, j);
+                let e = energy.power(done.ttype, j) * omega;
+                metrics.record(now, now - done.arrive, e, done.ttype, j);
+            }
+
+            // The program immediately emits its successor task (closed
+            // system: one task per program, always).
+            let prog = done.program;
+            let ttype = programs[prog].ttype;
+            let size = cfg.dist.sample(&mut rng);
+            let task = programs[prog].emit(next_id, now, size);
+            next_id += 1;
+            if needs_work {
+                for (jj, pr) in procs.iter().enumerate() {
+                    work[jj] = pr.remaining_work_time();
+                }
+            }
+            let view = SystemView {
+                mu,
+                state: &state,
+                work: &work,
+                populations: &cfg.populations,
+            };
+            let dest = policy.dispatch(ttype, &view, &mut rng);
+            debug_assert!(dest < l);
+            procs[dest].advance(now);
+            procs[dest].push(task, mu.rate(ttype, dest), now);
+            state.inc(ttype, dest);
+
+            // Invariant: the closed system always holds exactly N tasks.
+            debug_assert_eq!(state.total(), cfg.n_programs());
+        }
+
+        Ok(metrics.finalize(cfg.n_programs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::Regime;
+    use crate::model::throughput::x_max_theoretical;
+    use crate::policy::PolicyKind;
+
+    fn paper_mu() -> AffinityMatrix {
+        AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap()
+    }
+
+    fn quick_cfg(populations: Vec<u32>) -> SimConfig {
+        let mut cfg = SimConfig::paper_default(populations);
+        cfg.warmup = 500;
+        cfg.measure = 6_000;
+        cfg
+    }
+
+    #[test]
+    fn littles_law_holds_for_every_policy() {
+        // X·E[T] = N (Eq. 1) — the bottom-right subplot of Figs. 4–7.
+        let mu = paper_mu();
+        for kind in PolicyKind::five_two_type() {
+            let mut p = kind.build();
+            let net = ClosedNetwork::new(&mu, quick_cfg(vec![10, 10])).unwrap();
+            let r = net.run(p.as_mut()).unwrap();
+            assert!(
+                r.little_residual() < 0.05,
+                "{}: X·E[T] = {} vs N = 20",
+                kind.name(),
+                r.little_product
+            );
+        }
+    }
+
+    #[test]
+    fn cab_matches_theory_exponential() {
+        // Fig. 8: simulated CAB ≈ Eq. 16 theory.
+        let mu = paper_mu();
+        let (n1, n2) = (10u32, 10u32);
+        let theory = x_max_theoretical(&mu, Regime::P1Biased, n1, n2);
+        let mut cab = PolicyKind::Cab.build();
+        let net = ClosedNetwork::new(&mu, quick_cfg(vec![n1, n2])).unwrap();
+        let r = net.run(cab.as_mut()).unwrap();
+        let err = (r.throughput - theory).abs() / theory;
+        assert!(err < 0.05, "sim {} vs theory {theory}", r.throughput);
+    }
+
+    #[test]
+    fn cab_beats_baselines() {
+        let mu = paper_mu();
+        let net = ClosedNetwork::new(&mu, quick_cfg(vec![10, 10])).unwrap();
+        let mut results = Vec::new();
+        for kind in PolicyKind::five_two_type() {
+            let mut p = kind.build();
+            results.push((kind, net.run(p.as_mut()).unwrap().throughput));
+        }
+        let cab_x = results[0].1;
+        for (kind, x) in &results[1..] {
+            assert!(
+                cab_x >= *x * 0.999,
+                "{} ({x}) beat CAB ({cab_x})",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn proportional_power_energy_is_k() {
+        // Eq. 23: E[ℰ] = k·E[size] — exact up to the sample mean of the
+        // mean-1 size distribution, for any policy.
+        let mu = paper_mu();
+        let mut p = PolicyKind::Random.build();
+        let net = ClosedNetwork::new(&mu, quick_cfg(vec![10, 10])).unwrap();
+        let r = net.run(p.as_mut()).unwrap();
+        assert!((r.mean_energy - 1.0).abs() < 0.05, "E[ℰ] = {}", r.mean_energy);
+        // And exactly 1 under constant sizes (no sampling noise).
+        let mut cfg = quick_cfg(vec![10, 10]);
+        cfg.dist = Distribution::Constant;
+        let net = ClosedNetwork::new(&mu, cfg).unwrap();
+        let r = net.run(PolicyKind::Random.build().as_mut()).unwrap();
+        assert!((r.mean_energy - 1.0).abs() < 1e-9, "E[ℰ] = {}", r.mean_energy);
+    }
+
+    #[test]
+    fn discipline_independence_of_cab_throughput() {
+        // Lemma 3 (discipline independence) is exact when CAB's target
+        // keeps each queue type-pure — the general-symmetric regime, where
+        // BF sends every type to its own processor.  PS/FCFS/LCFS must
+        // then agree up to simulation noise.
+        let mu = crate::sim::workload::table3::general_symmetric();
+        let mut xs = Vec::new();
+        for d in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut cfg = quick_cfg(vec![10, 10]);
+            cfg.discipline = d;
+            let mut p = PolicyKind::Cab.build();
+            let net = ClosedNetwork::new(&mu, cfg).unwrap();
+            xs.push(net.run(p.as_mut()).unwrap().throughput);
+        }
+        for w in xs.windows(2) {
+            let rel = (w[0] - w[1]).abs() / w[0];
+            assert!(rel < 0.03, "discipline changed X: {xs:?}");
+        }
+    }
+
+    #[test]
+    fn fcfs_vs_ps_gap_on_mixed_queues_is_bounded() {
+        // On mixed queues (the P1-biased AF state) FCFS trends toward the
+        // harmonic mean of the service rates while PS gives the
+        // arithmetic mix (Eq. 5) — a real, bounded discipline effect the
+        // paper's §7 FCFS experiments absorb into the measured rates.
+        let mu = paper_mu();
+        let mut xs = Vec::new();
+        for d in [Discipline::Ps, Discipline::Fcfs] {
+            let mut cfg = quick_cfg(vec![10, 10]);
+            cfg.discipline = d;
+            let mut p = PolicyKind::Cab.build();
+            let net = ClosedNetwork::new(&mu, cfg).unwrap();
+            xs.push(net.run(p.as_mut()).unwrap().throughput);
+        }
+        let rel = (xs[0] - xs[1]).abs() / xs[0];
+        assert!(rel < 0.08, "PS vs FCFS gap too large: {xs:?}");
+    }
+
+    #[test]
+    fn rejects_bad_config() {
+        let mu = paper_mu();
+        assert!(ClosedNetwork::new(&mu, quick_cfg(vec![10])).is_err());
+        assert!(ClosedNetwork::new(&mu, quick_cfg(vec![0, 0])).is_err());
+    }
+}

@@ -1,0 +1,172 @@
+//! Measurement methodology of §5: warm-up discard, then count completions.
+//!
+//! X_sim      = completed / elapsed
+//! E[T_sim]   = mean response (entry → completion)
+//! E[ℰ_sim]   = mean of 𝒫_ij · ω, ω = size/μ_ij (execution, not response)
+//! EDP_sim    = E[ℰ_sim] · E[T_sim]
+//! X·E[T]     ≈ N (Little's-Law self-check, bottom-right subplots).
+
+/// Online accumulator for one simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Completions counted (post-warm-up).
+    pub completed: u64,
+    /// Sum of response times.
+    sum_response: f64,
+    /// Sum of per-task energies.
+    sum_energy: f64,
+    /// Measurement window start.
+    t_start: f64,
+    /// Last completion time seen.
+    t_last: f64,
+    /// Per-(type, proc) completion counts, row-major k×l.
+    pub completions_by_cell: Vec<u64>,
+    k: usize,
+    l: usize,
+}
+
+impl Metrics {
+    /// New accumulator opening its window at `t_start`.
+    pub fn new(k: usize, l: usize, t_start: f64) -> Self {
+        Self {
+            completed: 0,
+            sum_response: 0.0,
+            sum_energy: 0.0,
+            t_start,
+            t_last: t_start,
+            completions_by_cell: vec![0; k * l],
+            k,
+            l,
+        }
+    }
+
+    /// Record a completed task.
+    ///
+    /// `response` = now − arrive; `energy` = 𝒫_ij·size/μ_ij.
+    pub fn record(&mut self, now: f64, response: f64, energy: f64, ttype: usize, proc: usize) {
+        debug_assert!(response >= 0.0);
+        self.completed += 1;
+        self.sum_response += response;
+        self.sum_energy += energy;
+        self.t_last = now;
+        self.completions_by_cell[ttype * self.l + proc] += 1;
+    }
+
+    /// Elapsed measurement time.
+    pub fn elapsed(&self) -> f64 {
+        self.t_last - self.t_start
+    }
+
+    /// Finalize into a result summary.
+    pub fn finalize(&self, n_programs: u32) -> SimResult {
+        let el = self.elapsed();
+        let x = if el > 0.0 { self.completed as f64 / el } else { 0.0 };
+        let mean_t = if self.completed > 0 {
+            self.sum_response / self.completed as f64
+        } else {
+            0.0
+        };
+        let mean_e = if self.completed > 0 {
+            self.sum_energy / self.completed as f64
+        } else {
+            0.0
+        };
+        SimResult {
+            throughput: x,
+            mean_response: mean_t,
+            mean_energy: mean_e,
+            edp: mean_e * mean_t,
+            little_product: x * mean_t,
+            n_programs,
+            completed: self.completed,
+            completions_by_cell: self.completions_by_cell.clone(),
+            k: self.k,
+            l: self.l,
+        }
+    }
+}
+
+/// Summary of one simulation run (one point of a paper figure).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// X_sim.
+    pub throughput: f64,
+    /// E[T_sim].
+    pub mean_response: f64,
+    /// E[ℰ_sim].
+    pub mean_energy: f64,
+    /// EDP_sim = E[ℰ]·E[T].
+    pub edp: f64,
+    /// X·E[T] — must ≈ N (Little's Law).
+    pub little_product: f64,
+    /// N.
+    pub n_programs: u32,
+    /// Completions measured.
+    pub completed: u64,
+    /// Per-(type, proc) completion counts (row-major k×l) — the observed
+    /// ρ_ij routing fractions.
+    pub completions_by_cell: Vec<u64>,
+    k: usize,
+    l: usize,
+}
+
+impl SimResult {
+    /// Fraction of completions of type `i` that ran on processor `j`
+    /// (ρ_ij of §3.4 restricted to type i).
+    pub fn routing_fraction(&self, i: usize, j: usize) -> f64 {
+        let row: u64 = (0..self.l).map(|jj| self.completions_by_cell[i * self.l + jj]).sum();
+        if row == 0 {
+            return 0.0;
+        }
+        self.completions_by_cell[i * self.l + j] as f64 / row as f64
+    }
+
+    /// Little's-Law residual |X·E[T] − N| / N.
+    pub fn little_residual(&self) -> f64 {
+        (self.little_product - self.n_programs as f64).abs() / self.n_programs as f64
+    }
+
+    /// Task-type count.
+    pub fn types(&self) -> usize {
+        self.k
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_finalizes() {
+        let mut m = Metrics::new(2, 2, 10.0);
+        m.record(12.0, 2.0, 0.5, 0, 0);
+        m.record(14.0, 4.0, 1.5, 1, 1);
+        let r = m.finalize(20);
+        assert_eq!(r.completed, 2);
+        assert!((r.throughput - 0.5).abs() < 1e-12); // 2 tasks / 4 s
+        assert!((r.mean_response - 3.0).abs() < 1e-12);
+        assert!((r.mean_energy - 1.0).abs() < 1e-12);
+        assert!((r.edp - 3.0).abs() < 1e-12);
+        assert!((r.little_product - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn routing_fractions() {
+        let mut m = Metrics::new(2, 2, 0.0);
+        m.record(1.0, 1.0, 0.0, 0, 0);
+        m.record(2.0, 1.0, 0.0, 0, 0);
+        m.record(3.0, 1.0, 0.0, 0, 1);
+        m.record(4.0, 1.0, 0.0, 1, 1);
+        let r = m.finalize(4);
+        assert!((r.routing_fraction(0, 0) - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.routing_fraction(1, 1) - 1.0).abs() < 1e-12);
+        assert_eq!(r.routing_fraction(1, 0), 0.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let r = Metrics::new(1, 1, 0.0).finalize(5);
+        assert_eq!(r.throughput, 0.0);
+        assert_eq!(r.completed, 0);
+    }
+}

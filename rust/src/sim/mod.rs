@@ -1,0 +1,24 @@
+//! Discrete-event simulation of the closed batch network (Fig. 2).
+//!
+//! * [`rng`] — PCG64 + SplitMix64 seeding (no `rand` crate offline).
+//! * [`distribution`] — the four §5 task-size distributions, mean-1
+//!   normalized: exponential, bounded Pareto, uniform, constant.
+//! * [`task`] / [`processor`] — tasks and the PS / FCFS / LCFS service
+//!   disciplines (all work-conserving, per Lemma 3).
+//! * [`engine`] — the closed network: N programs, one task in flight per
+//!   program, policy-driven dispatch on every completion.
+//! * [`metrics`] — throughput, response time, energy, EDP estimators with
+//!   warm-up discard (the §5 measurement methodology).
+//! * [`workload`] — scenario builders for the paper's sweeps.
+
+//! * [`dynamic`] — piece-wise closed systems (§3.1) with per-phase
+//!   policy re-solve (§4.1's "on the fly" GrIn use case).
+
+pub mod distribution;
+pub mod dynamic;
+pub mod engine;
+pub mod metrics;
+pub mod processor;
+pub mod rng;
+pub mod task;
+pub mod workload;

@@ -1,0 +1,320 @@
+//! Processors with work-conserving service disciplines (Lemma 3).
+//!
+//! * **PS** — processor sharing: all resident tasks served at μ_ij/n
+//!   (Eq. 5), the §5 simulation discipline.
+//! * **FCFS** — head-of-line served at full rate, the §7 platform
+//!   discipline.
+//! * **LCFS** — preemptive-resume last-come-first-serve; included to
+//!   demonstrate the Lemma-3 discipline independence.
+//!
+//! Between events the active-rate profile is constant, so the processor
+//! advances remaining work lazily: `advance(now)` then mutate.
+
+use super::task::Task;
+use crate::error::{Error, Result};
+
+/// Service discipline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Discipline {
+    /// Processor sharing (time slicing), Eq. 5.
+    Ps,
+    /// First-come-first-serve.
+    Fcfs,
+    /// Preemptive-resume last-come-first-serve.
+    Lcfs,
+}
+
+impl Discipline {
+    /// Parse a CLI name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "ps" => Ok(Discipline::Ps),
+            "fcfs" => Ok(Discipline::Fcfs),
+            "lcfs" => Ok(Discipline::Lcfs),
+            other => Err(Error::Parse(format!(
+                "unknown discipline '{other}' (ps|fcfs|lcfs)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Discipline::Ps => "ps",
+            Discipline::Fcfs => "fcfs",
+            Discipline::Lcfs => "lcfs",
+        }
+    }
+}
+
+/// A task resident on a processor.
+#[derive(Debug, Clone)]
+struct Resident {
+    task: Task,
+    /// Full-speed service rate μ_ij for this task on this processor.
+    rate: f64,
+    /// Remaining work units.
+    remaining: f64,
+    /// Arrival order stamp (discipline ordering).
+    seq: u64,
+}
+
+/// One processor (or cluster thereof) with a service discipline.
+#[derive(Debug, Clone)]
+pub struct Processor {
+    /// Column index in the affinity matrix.
+    pub id: usize,
+    discipline: Discipline,
+    residents: Vec<Resident>,
+    last_update: f64,
+    seq: u64,
+}
+
+impl Processor {
+    /// Empty processor.
+    pub fn new(id: usize, discipline: Discipline) -> Self {
+        Self { id, discipline, residents: Vec::new(), last_update: 0.0, seq: 0 }
+    }
+
+    /// Number of resident tasks.
+    #[inline]
+    pub fn occupancy(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Remaining work in *time* units at full speed — the perfect-info
+    /// load-balancing metric of §5 ("task total size in the queue",
+    /// measured in drain time).
+    pub fn remaining_work_time(&self) -> f64 {
+        self.residents.iter().map(|r| r.remaining / r.rate).sum()
+    }
+
+    /// Share of the processor each resident currently receives, by index.
+    fn share(&self, idx: usize) -> f64 {
+        let n = self.residents.len();
+        match self.discipline {
+            Discipline::Ps => 1.0 / n as f64,
+            Discipline::Fcfs => {
+                // Oldest seq is served.
+                let head = self
+                    .residents
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|(_, r)| r.seq)
+                    .map(|(i, _)| i);
+                if head == Some(idx) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Discipline::Lcfs => {
+                let top = self
+                    .residents
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, r)| r.seq)
+                    .map(|(i, _)| i);
+                if top == Some(idx) {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Progress all active residents to time `now`.
+    pub fn advance(&mut self, now: f64) {
+        let dt = now - self.last_update;
+        debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
+        if dt > 0.0 && !self.residents.is_empty() {
+            for idx in 0..self.residents.len() {
+                let sh = self.share(idx);
+                if sh > 0.0 {
+                    let r = &mut self.residents[idx];
+                    r.remaining -= dt * sh * r.rate;
+                    if r.remaining < 0.0 {
+                        // Numerical dust only; completions are popped at
+                        // their exact event time.
+                        debug_assert!(r.remaining > -1e-6, "{}", r.remaining);
+                        r.remaining = 0.0;
+                    }
+                }
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Admit a task with its full-speed rate; caller must have advanced
+    /// the processor to `now` first.
+    pub fn push(&mut self, task: Task, rate: f64, now: f64) {
+        debug_assert!(rate > 0.0);
+        debug_assert!((now - self.last_update).abs() < 1e-9);
+        let seq = self.seq;
+        self.seq += 1;
+        self.residents.push(Resident { task, rate, remaining: f64::NAN, seq });
+        let r = self.residents.last_mut().unwrap();
+        r.remaining = r.task.size;
+    }
+
+    /// Absolute time of the next completion if no further events occur.
+    pub fn next_completion(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for idx in 0..self.residents.len() {
+            let sh = self.share(idx);
+            if sh > 0.0 {
+                let r = &self.residents[idx];
+                let t = self.last_update + r.remaining / (sh * r.rate);
+                best = Some(match best {
+                    Some(b) => b.min(t),
+                    None => t,
+                });
+            }
+        }
+        best
+    }
+
+    /// Remove and return the resident completing at `now` (the active one
+    /// with the least residual).  Caller must `advance(now)` first.
+    pub fn pop_completed(&mut self, now: f64) -> Result<Task> {
+        debug_assert!((now - self.last_update).abs() < 1e-9);
+        let mut best: Option<(usize, f64)> = None;
+        for idx in 0..self.residents.len() {
+            if self.share(idx) > 0.0 {
+                let rem = self.residents[idx].remaining;
+                if best.map_or(true, |(_, b)| rem < b) {
+                    best = Some((idx, rem));
+                }
+            }
+        }
+        let (idx, rem) = best.ok_or_else(|| {
+            Error::Shape(format!("pop_completed on idle processor {}", self.id))
+        })?;
+        if rem > 1e-6 {
+            return Err(Error::Shape(format!(
+                "no task completing now on processor {} (residual {rem})",
+                self.id
+            )));
+        }
+        Ok(self.residents.swap_remove(idx).task)
+    }
+
+    /// Tasks of each type currently resident (for invariant checks).
+    pub fn count_type(&self, ttype: usize) -> u32 {
+        self.residents.iter().filter(|r| r.task.ttype == ttype).count() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64, ttype: usize, size: f64) -> Task {
+        Task { id, program: id as usize, ttype, size, arrive: 0.0 }
+    }
+
+    #[test]
+    fn fcfs_serves_in_arrival_order() {
+        let mut p = Processor::new(0, Discipline::Fcfs);
+        p.push(task(1, 0, 2.0), 1.0, 0.0);
+        p.push(task(2, 0, 1.0), 1.0, 0.0);
+        // Head (task 1) completes at t=2 despite task 2 being shorter.
+        let t = p.next_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-12);
+        p.advance(t);
+        assert_eq!(p.pop_completed(t).unwrap().id, 1);
+        // Then task 2 completes 1s later.
+        let t2 = p.next_completion().unwrap();
+        assert!((t2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ps_shares_capacity_equally() {
+        let mut p = Processor::new(0, Discipline::Ps);
+        p.push(task(1, 0, 1.0), 1.0, 0.0);
+        p.push(task(2, 0, 1.0), 1.0, 0.0);
+        // Two equal tasks sharing: both complete at t=2.
+        let t = p.next_completion().unwrap();
+        assert!((t - 2.0).abs() < 1e-12);
+        p.advance(t);
+        let first = p.pop_completed(t).unwrap();
+        assert!(first.id == 1 || first.id == 2);
+        // Remaining one is already done too.
+        let t2 = p.next_completion().unwrap();
+        assert!((t2 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ps_rates_differ_by_task_type() {
+        let mut p = Processor::new(0, Discipline::Ps);
+        p.push(task(1, 0, 1.0), 4.0, 0.0); // fast type
+        p.push(task(2, 1, 1.0), 1.0, 0.0); // slow type
+        // Shares are 1/2 each: fast completes at 1/(4·0.5)=0.5.
+        let t = p.next_completion().unwrap();
+        assert!((t - 0.5).abs() < 1e-12);
+        p.advance(t);
+        assert_eq!(p.pop_completed(t).unwrap().id, 1);
+        // Slow task did 0.5·0.5·1.0 = 0.25 work; 0.75 left at full rate 1.
+        let t2 = p.next_completion().unwrap();
+        assert!((t2 - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lcfs_preempts() {
+        let mut p = Processor::new(0, Discipline::Lcfs);
+        p.push(task(1, 0, 1.0), 1.0, 0.0);
+        p.advance(0.5);
+        p.push(task(2, 0, 0.2), 1.0, 0.5);
+        // Newcomer runs first: completes at 0.7.
+        let t = p.next_completion().unwrap();
+        assert!((t - 0.7).abs() < 1e-12);
+        p.advance(t);
+        assert_eq!(p.pop_completed(t).unwrap().id, 2);
+        // Task 1 resumes with 0.5 work left: completes at 1.2.
+        let t2 = p.next_completion().unwrap();
+        assert!((t2 - 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn work_conservation_across_disciplines() {
+        // Same task multiset ⇒ same drain time for any discipline (Lemma 3).
+        let sizes = [1.5, 0.3, 2.2, 0.7];
+        let mut drains = Vec::new();
+        for d in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut p = Processor::new(0, d);
+            for (i, &s) in sizes.iter().enumerate() {
+                p.push(task(i as u64, 0, s), 2.0, 0.0);
+            }
+            let mut now = 0.0;
+            for _ in 0..sizes.len() {
+                now = p.next_completion().unwrap();
+                p.advance(now);
+                p.pop_completed(now).unwrap();
+            }
+            drains.push(now);
+        }
+        let total: f64 = sizes.iter().sum::<f64>() / 2.0;
+        for d in &drains {
+            assert!((d - total).abs() < 1e-9, "{drains:?}");
+        }
+    }
+
+    #[test]
+    fn remaining_work_time_tracks_load() {
+        let mut p = Processor::new(0, Discipline::Fcfs);
+        assert_eq!(p.remaining_work_time(), 0.0);
+        p.push(task(1, 0, 2.0), 2.0, 0.0);
+        p.push(task(2, 0, 3.0), 1.0, 0.0);
+        assert!((p.remaining_work_time() - 4.0).abs() < 1e-12);
+        assert_eq!(p.occupancy(), 2);
+        assert_eq!(p.count_type(0), 2);
+    }
+
+    #[test]
+    fn pop_on_idle_errors() {
+        let mut p = Processor::new(0, Discipline::Ps);
+        assert!(p.pop_completed(0.0).is_err());
+        assert!(p.next_completion().is_none());
+    }
+}

@@ -1,0 +1,62 @@
+//! Tasks and programs of the closed batch network (Fig. 1).
+//!
+//! A *program* is an endless sequence of tasks executed strictly in order
+//! (data dependencies); exactly one task per program is in the system at
+//! any time, so N programs ⇒ N tasks resident (§3.1).
+
+/// One task instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Task {
+    /// Globally unique id (monotone).
+    pub id: u64,
+    /// Owning program index.
+    pub program: usize,
+    /// Task type (row of the affinity matrix).
+    pub ttype: usize,
+    /// Service requirement in work units (mean-1 distribution draw).
+    pub size: f64,
+    /// Simulation time at which the task entered the system.
+    pub arrive: f64,
+}
+
+/// A program: fixed task type (the §5 closed-system setup keeps the
+/// per-type populations N_i constant) plus its task counter.
+#[derive(Debug, Clone)]
+pub struct Program {
+    /// Program index.
+    pub id: usize,
+    /// Task type this program emits.
+    pub ttype: usize,
+    /// Number of tasks emitted so far.
+    pub emitted: u64,
+}
+
+impl Program {
+    /// New program of the given type.
+    pub fn new(id: usize, ttype: usize) -> Self {
+        Self { id, ttype, emitted: 0 }
+    }
+
+    /// Emit the next task at time `now` with the given drawn size.
+    pub fn emit(&mut self, next_id: u64, now: f64, size: f64) -> Task {
+        self.emitted += 1;
+        Task { id: next_id, program: self.id, ttype: self.ttype, size, arrive: now }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn programs_emit_sequentially() {
+        let mut p = Program::new(3, 1);
+        let t1 = p.emit(10, 0.0, 1.5);
+        let t2 = p.emit(11, 2.5, 0.5);
+        assert_eq!(p.emitted, 2);
+        assert_eq!(t1.program, 3);
+        assert_eq!(t1.ttype, 1);
+        assert_eq!(t2.arrive, 2.5);
+        assert_ne!(t1.id, t2.id);
+    }
+}

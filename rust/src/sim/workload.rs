@@ -1,0 +1,101 @@
+//! Scenario builders for the paper's sweeps.
+//!
+//! * η-sweeps of the two-type system (Figs. 4–8, 15–16): N = 20 programs,
+//!   N1 = η·N of type 1.
+//! * random k×l systems (Figs. 9–14): μ entries uniform, random
+//!   populations — the paper randomizes both "to show the generality of
+//!   GrIn for widely varying task affinities".
+
+use crate::error::Result;
+use crate::model::affinity::AffinityMatrix;
+
+use super::rng::Rng;
+
+/// The paper's η grid: 0.1, 0.2, …, 0.9 (§5).
+pub fn eta_grid() -> [f64; 9] {
+    [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+}
+
+/// Split N programs into (N1, N2) with N1 = round(η·N), clamped so both
+/// types stay populated (the paper's η ∈ [0.1, 0.9] guarantees this).
+pub fn split_populations(n: u32, eta: f64) -> (u32, u32) {
+    let n1 = ((n as f64 * eta).round() as u32).clamp(1, n - 1);
+    (n1, n - n1)
+}
+
+/// The §5 simulation affinity matrix (P1-biased): μ = [[20, 15], [3, 8]].
+pub fn paper_two_type_mu() -> AffinityMatrix {
+    AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).expect("static matrix")
+}
+
+/// Table-3 derived matrices for the §7 platform cases.
+pub mod table3 {
+    use super::*;
+
+    /// quicksort-500 + NN-2000 → general-symmetric (§7.4).
+    pub fn general_symmetric() -> AffinityMatrix {
+        AffinityMatrix::two_type(928.0, 3.61, 587.0, 2398.0).expect("static matrix")
+    }
+
+    /// quicksort-1000 + NN-2000 → P2-biased (§7.3).
+    pub fn p2_biased() -> AffinityMatrix {
+        AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).expect("static matrix")
+    }
+}
+
+/// A random k×l system: μ entries uniform in [lo, hi).
+pub fn random_mu(rng: &mut Rng, k: usize, l: usize, lo: f64, hi: f64) -> Result<AffinityMatrix> {
+    let rows: Vec<Vec<f64>> = (0..k)
+        .map(|_| (0..l).map(|_| rng.range_f64(lo, hi)).collect())
+        .collect();
+    AffinityMatrix::from_rows(&rows)
+}
+
+/// Random populations: each N_i uniform in [1, max_per_type].
+pub fn random_populations(rng: &mut Rng, k: usize, max_per_type: u32) -> Vec<u32> {
+    (0..k).map(|_| 1 + rng.below(max_per_type as u64) as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::affinity::Regime;
+
+    #[test]
+    fn eta_split_covers_paper_grid() {
+        for eta in eta_grid() {
+            let (n1, n2) = split_populations(20, eta);
+            assert_eq!(n1 + n2, 20);
+            assert!(n1 >= 1 && n2 >= 1);
+            assert_eq!(n1, (20.0 * eta).round() as u32);
+        }
+    }
+
+    #[test]
+    fn split_clamps_extremes() {
+        assert_eq!(split_populations(10, 0.0), (1, 9));
+        assert_eq!(split_populations(10, 1.0), (9, 1));
+    }
+
+    #[test]
+    fn canned_matrices_classify_as_documented() {
+        assert_eq!(paper_two_type_mu().classify().unwrap(), Regime::P1Biased);
+        assert_eq!(
+            table3::general_symmetric().classify().unwrap(),
+            Regime::GeneralSymmetric
+        );
+        assert_eq!(table3::p2_biased().classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
+    fn random_systems_are_valid() {
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let mu = random_mu(&mut rng, 3, 4, 0.5, 30.0).unwrap();
+            assert_eq!(mu.types(), 3);
+            assert_eq!(mu.procs(), 4);
+            let pops = random_populations(&mut rng, 3, 8);
+            assert!(pops.iter().all(|&p| (1..=8).contains(&p)));
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! Dense f64 linear-algebra substrate (no external crates offline).
+//!
+//! Just enough for the SQP stack: matrix arithmetic, LU factorization with
+//! partial pivoting, and linear solves — sizes here are tiny (the KKT
+//! system of a k·l-variable QP), so simplicity beats blocking.
+
+use crate::error::{Error, Result};
+
+/// Dense row-major f64 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "{}x{} matrix from {} values",
+                rows,
+                cols,
+                data.len()
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Raw data slice.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.cols {
+            return Err(Error::Shape("matvec dimension".into()));
+        }
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            y[i] = dot(row, x);
+        }
+        Ok(y)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Matrix product.
+    pub fn matmul(&self, other: &Mat) -> Result<Mat> {
+        if self.cols != other.rows {
+            return Err(Error::Shape("matmul dimension".into()));
+        }
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self[(i, kk)];
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..other.cols {
+                    out[(i, j)] += a * other[(kk, j)];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Solve `A x = b` by LU with partial pivoting (A square, consumed as
+    /// a copy).  Errors on (numerical) singularity.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if self.rows != self.cols || b.len() != self.rows {
+            return Err(Error::Shape("solve needs square A and matching b".into()));
+        }
+        let n = self.rows;
+        let mut a = self.data.clone();
+        let mut x: Vec<f64> = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+
+        for col in 0..n {
+            // Partial pivot.
+            let mut p = col;
+            let mut pmax = a[piv[col] * n + col].abs();
+            for r in (col + 1)..n {
+                let v = a[piv[r] * n + col].abs();
+                if v > pmax {
+                    p = r;
+                    pmax = v;
+                }
+            }
+            if pmax < 1e-14 {
+                return Err(Error::Solver(format!(
+                    "singular matrix at column {col} (pivot {pmax:.3e})"
+                )));
+            }
+            piv.swap(col, p);
+            let prow = piv[col];
+            let d = a[prow * n + col];
+            for r in (col + 1)..n {
+                let rr = piv[r];
+                let f = a[rr * n + col] / d;
+                if f == 0.0 {
+                    continue;
+                }
+                a[rr * n + col] = 0.0;
+                for c in (col + 1)..n {
+                    a[rr * n + c] -= f * a[prow * n + c];
+                }
+                x[rr] -= f * x[prow];
+            }
+        }
+        // Back substitution.
+        let mut out = vec![0.0; n];
+        for col in (0..n).rev() {
+            let prow = piv[col];
+            let mut v = x[prow];
+            for c in (col + 1)..n {
+                v -= a[prow * n + c] * out[c];
+            }
+            out[col] = v / a[prow * n + col];
+        }
+        Ok(out)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lu_solve_known_system() {
+        let a = Mat::from_vec(3, 3, vec![2.0, 1.0, 1.0, 1.0, 3.0, 2.0, 1.0, 0.0, 0.0])
+            .unwrap();
+        let b = [4.0, 5.0, 6.0];
+        let x = a.solve(&b).unwrap();
+        let ax = a.matvec(&x).unwrap();
+        for (got, want) in ax.iter().zip(b) {
+            assert!((got - want).abs() < 1e-10);
+        }
+        // Unique solution: x = (6, 15, -23).
+        assert!((x[0] - 6.0).abs() < 1e-10);
+        assert!((x[1] - 15.0).abs() < 1e-10);
+        assert!((x[2] + 23.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn lu_needs_pivoting() {
+        // Zero leading pivot: fails without partial pivoting.
+        let a = Mat::from_vec(2, 2, vec![0.0, 1.0, 1.0, 0.0]).unwrap();
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn singular_detected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 4.0]).unwrap();
+        assert!(a.solve(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn matmul_and_transpose() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let at = a.transpose();
+        let aat = a.matmul(&at).unwrap();
+        assert_eq!(aat.rows, 2);
+        assert_eq!(aat.cols, 2);
+        assert!((aat[(0, 0)] - 14.0).abs() < 1e-12);
+        assert!((aat[(0, 1)] - 32.0).abs() < 1e-12);
+        assert!((aat[(1, 1)] - 77.0).abs() < 1e-12);
+        assert_eq!(aat[(0, 1)], aat[(1, 0)]);
+    }
+
+    #[test]
+    fn random_solve_round_trip() {
+        use crate::sim::rng::Rng;
+        let mut rng = Rng::new(17);
+        for n in [1usize, 2, 5, 10, 20] {
+            let data: Vec<f64> = (0..n * n).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            // Diagonal dominance ⇒ well-conditioned.
+            let mut a = Mat::from_vec(n, n, data).unwrap();
+            for i in 0..n {
+                a[(i, i)] += 4.0 * n as f64;
+            }
+            let xt: Vec<f64> = (0..n).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            let b = a.matvec(&xt).unwrap();
+            let x = a.solve(&b).unwrap();
+            for (got, want) in x.iter().zip(&xt) {
+                assert!((got - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn blas_helpers() {
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, 2.0], &mut y);
+        assert_eq!(y, vec![3.0, 5.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Solvers for the integer program of Eqs. 28–29.
+//!
+//! * [`exhaustive`] — the "Opt" oracle of Figs. 9–12: enumerate every
+//!   integer composition of the populations over the processors, evaluate
+//!   X_sys, keep the argmax.  Supports batched offload of the objective
+//!   (the PJRT `throughput_eval` artifact).
+//! * [`linalg`] — dense f64 matrix substrate (LU with partial pivoting).
+//! * [`qp`] — equality-constrained quadratic programs via KKT systems,
+//!   with an active-set outer loop for bound constraints.
+//! * [`slsqp`] — Sequential Least-SQuares Programming over the relaxed
+//!   (continuous) problem: the paper's comparator [32] for Figs. 13–14.
+
+pub mod exhaustive;
+pub mod linalg;
+pub mod qp;
+pub mod slsqp;

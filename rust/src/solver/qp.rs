@@ -1,0 +1,240 @@
+//! Convex quadratic programming with linear equalities and lower bounds.
+//!
+//! ```text
+//! min ½ dᵀB d + gᵀd   s.t.  A d = c,   d_i ≥ lb_i (i ∈ bounded)
+//! ```
+//!
+//! Solved by the textbook primal active-set method: equality-constrained
+//! subproblems via the KKT system
+//!
+//! ```text
+//! [ B  Aᵀ ] [d]   [−g]
+//! [ A  0  ] [λ] = [ c ]
+//! ```
+//!
+//! with bound constraints activated/deactivated by multiplier signs.
+//! This is the QP engine inside [`super::slsqp`]; problem sizes are k·l
+//! variables (≤ a few hundred), so dense LU is the right tool.
+
+use crate::error::{Error, Result};
+
+use super::linalg::{dot, Mat};
+
+/// A QP instance.  `lb[i] = f64::NEG_INFINITY` means unbounded below.
+#[derive(Debug, Clone)]
+pub struct Qp<'a> {
+    /// Hessian (symmetric positive definite) — n×n.
+    pub b: &'a Mat,
+    /// Linear term — length n.
+    pub g: &'a [f64],
+    /// Equality matrix — m×n (full row rank).
+    pub a: &'a Mat,
+    /// Equality right-hand side — length m.
+    pub c: &'a [f64],
+    /// Lower bounds — length n.
+    pub lb: &'a [f64],
+}
+
+/// Result of a QP solve.
+#[derive(Debug, Clone)]
+pub struct QpSolution {
+    /// Optimal step d.
+    pub d: Vec<f64>,
+    /// Equality multipliers.
+    pub lambda_eq: Vec<f64>,
+    /// Active-set iterations used.
+    pub iterations: usize,
+}
+
+/// Solve the QP starting from the feasible point `d0` (must satisfy
+/// `A d0 = c` and `d0 ≥ lb`).
+pub fn solve(qp: &Qp<'_>, d0: &[f64]) -> Result<QpSolution> {
+    let n = qp.g.len();
+    let m = qp.c.len();
+    if qp.b.rows != n || qp.b.cols != n || qp.a.rows != m || qp.a.cols != n
+        || qp.lb.len() != n || d0.len() != n
+    {
+        return Err(Error::Shape("QP dimension mismatch".into()));
+    }
+    let mut d = d0.to_vec();
+    // Active bound set.
+    let mut active: Vec<bool> = d
+        .iter()
+        .zip(qp.lb)
+        .map(|(&di, &li)| li.is_finite() && (di - li).abs() < 1e-12)
+        .collect();
+
+    let max_iter = 25 * (n + 1);
+    for it in 0..max_iter {
+        // Equality-constrained subproblem at current point: step p with
+        //   B p = -(g + B d),  A p = 0,  p_i = 0 for active i.
+        let n_act = active.iter().filter(|&&a| a).count();
+        let dim = n + m + n_act;
+        let mut kkt = Mat::zeros(dim, dim);
+        let mut rhs = vec![0.0; dim];
+        // Gradient at d: g + B d.
+        let bd = qp.b.matvec(&d)?;
+        for i in 0..n {
+            for j in 0..n {
+                kkt[(i, j)] = qp.b[(i, j)];
+            }
+            rhs[i] = -(qp.g[i] + bd[i]);
+        }
+        for r in 0..m {
+            for j in 0..n {
+                kkt[(n + r, j)] = qp.a[(r, j)];
+                kkt[(j, n + r)] = qp.a[(r, j)];
+            }
+            rhs[n + r] = 0.0; // d is feasible ⇒ A p = 0
+        }
+        let mut row = n + m;
+        let mut act_idx = Vec::with_capacity(n_act);
+        for i in 0..n {
+            if active[i] {
+                kkt[(row, i)] = 1.0;
+                kkt[(i, row)] = 1.0;
+                rhs[row] = 0.0;
+                act_idx.push(i);
+                row += 1;
+            }
+        }
+        let sol = kkt.solve(&rhs)?;
+        let p = &sol[..n];
+        let lambda_eq = sol[n..n + m].to_vec();
+        let mu_bounds = &sol[n + m..];
+
+        let p_norm = p.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if p_norm < 1e-11 {
+            // Stationary on the working set: check bound multipliers.
+            // KKT convention: ∇f(d) = −Aᵀλ − Σ μ_i e_i, and the canonical
+            // multiplier of d_i ≥ lb_i is ν_i = −μ_i ≥ 0.  A *positive* μ
+            // (ν < 0) means releasing the bound decreases the objective,
+            // so drop the most positive one.
+            let mut worst: Option<(usize, f64)> = None;
+            for (t, &i) in act_idx.iter().enumerate() {
+                let mu = mu_bounds[t];
+                if mu > 1e-10 && worst.map_or(true, |(_, w)| mu > w) {
+                    worst = Some((i, mu));
+                }
+            }
+            match worst {
+                Some((i, _)) => {
+                    active[i] = false;
+                    continue;
+                }
+                None => {
+                    return Ok(QpSolution { d, lambda_eq, iterations: it + 1 });
+                }
+            }
+        }
+
+        // Ratio test: largest step α ∈ (0, 1] keeping d + αp ≥ lb.
+        let mut alpha = 1.0f64;
+        let mut blocking: Option<usize> = None;
+        for i in 0..n {
+            if !active[i] && qp.lb[i].is_finite() && p[i] < -1e-14 {
+                let a_i = (qp.lb[i] - d[i]) / p[i];
+                if a_i < alpha {
+                    alpha = a_i.max(0.0);
+                    blocking = Some(i);
+                }
+            }
+        }
+        for i in 0..n {
+            d[i] += alpha * p[i];
+        }
+        if let Some(i) = blocking {
+            d[i] = qp.lb[i]; // exact landing
+            active[i] = true;
+        }
+    }
+    Err(Error::Solver(format!(
+        "active-set QP did not converge in {max_iter} iterations"
+    )))
+}
+
+/// Objective value ½dᵀBd + gᵀd (for tests and merit functions).
+pub fn objective(b: &Mat, g: &[f64], d: &[f64]) -> f64 {
+    0.5 * dot(&b.matvec(d).expect("dim"), d) + dot(g, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unconstrained_quadratic() {
+        // min ½dᵀId + gᵀd with A empty ⇒ d = −g.
+        let b = Mat::eye(3);
+        let g = [1.0, -2.0, 0.5];
+        let a = Mat::zeros(0, 3);
+        let c: [f64; 0] = [];
+        let lb = [f64::NEG_INFINITY; 3];
+        let qp = Qp { b: &b, g: &g, a: &a, c: &c, lb: &lb };
+        let sol = solve(&qp, &[0.0; 3]).unwrap();
+        for (di, gi) in sol.d.iter().zip(g) {
+            assert!((di + gi).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn equality_constraint_projects() {
+        // min ½‖d‖² s.t. d1 + d2 = 2 ⇒ d = (1, 1).
+        let b = Mat::eye(2);
+        let g = [0.0, 0.0];
+        let a = Mat::from_vec(1, 2, vec![1.0, 1.0]).unwrap();
+        let c = [2.0];
+        let lb = [f64::NEG_INFINITY; 2];
+        let qp = Qp { b: &b, g: &g, a: &a, c: &c, lb: &lb };
+        // Start feasible at (2, 0).
+        let sol = solve(&qp, &[2.0, 0.0]).unwrap();
+        assert!((sol.d[0] - 1.0).abs() < 1e-9);
+        assert!((sol.d[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn active_bound_binds() {
+        // min ½‖d − (−1, 2)‖² s.t. d ≥ 0 ⇒ d = (0, 2).
+        // Rewrite: ½dᵀd + gᵀd with g = (1, −2).
+        let b = Mat::eye(2);
+        let g = [1.0, -2.0];
+        let a = Mat::zeros(0, 2);
+        let c: [f64; 0] = [];
+        let lb = [0.0, 0.0];
+        let qp = Qp { b: &b, g: &g, a: &a, c: &c, lb: &lb };
+        let sol = solve(&qp, &[0.5, 0.5]).unwrap();
+        assert!(sol.d[0].abs() < 1e-9, "{:?}", sol.d);
+        assert!((sol.d[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bound_releases_when_beneficial() {
+        // Start with the bound active although the optimum is interior:
+        // min ½(d−1)² s.t. d ≥ 0, start at d = 0 (active) ⇒ d* = 1.
+        let b = Mat::eye(1);
+        let g = [-1.0];
+        let a = Mat::zeros(0, 1);
+        let c: [f64; 0] = [];
+        let lb = [0.0];
+        let qp = Qp { b: &b, g: &g, a: &a, c: &c, lb: &lb };
+        let sol = solve(&qp, &[0.0]).unwrap();
+        assert!((sol.d[0] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simplex_like_projection() {
+        // min ½‖d − t‖² s.t. Σd = 1, d ≥ 0 with t = (0.9, 0.9, −0.8):
+        // the Euclidean projection of t onto the simplex = (0.5, 0.5, 0).
+        let b = Mat::eye(3);
+        let t = [0.9, 0.9, -0.8];
+        let g: Vec<f64> = t.iter().map(|v| -v).collect();
+        let a = Mat::from_vec(1, 3, vec![1.0, 1.0, 1.0]).unwrap();
+        let c = [1.0];
+        let lb = [0.0; 3];
+        let qp = Qp { b: &b, g: &g, a: &a, c: &c, lb: &lb };
+        let sol = solve(&qp, &[1.0 / 3.0; 3]).unwrap();
+        assert!((sol.d[0] - 0.5).abs() < 1e-8, "{:?}", sol.d);
+        assert!((sol.d[1] - 0.5).abs() < 1e-8);
+        assert!(sol.d[2].abs() < 1e-8);
+    }
+}

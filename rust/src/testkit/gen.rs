@@ -1,0 +1,115 @@
+//! Seeded random generators for property tests.
+
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::sim::rng::Rng;
+
+/// A generation context bound to one RNG stream.
+pub struct Gen<'a> {
+    /// Underlying RNG (public so properties can draw ad-hoc values).
+    pub rng: &'a mut Rng,
+}
+
+impl<'a> Gen<'a> {
+    /// Wrap an RNG.
+    pub fn new(rng: &'a mut Rng) -> Self {
+        Self { rng }
+    }
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.index(hi - lo + 1)
+    }
+
+    /// Uniform u32 in [lo, hi].
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.rng.below((hi - lo + 1) as u64) as u32
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// Random affinity matrix with k×l in the given ranges and rates in
+    /// [0.5, 30).
+    pub fn affinity(&mut self, k: (usize, usize), l: (usize, usize)) -> AffinityMatrix {
+        let k = self.usize_in(k.0, k.1);
+        let l = self.usize_in(l.0, l.1);
+        let rows: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..l).map(|_| self.f64_in(0.5, 30.0)).collect())
+            .collect();
+        AffinityMatrix::from_rows(&rows).expect("generated rates are valid")
+    }
+
+    /// Random 2×2 matrix satisfying the Eq.-2 affinity constraint.
+    pub fn affinity_two_type(&mut self) -> AffinityMatrix {
+        loop {
+            let m12 = self.f64_in(0.5, 20.0);
+            let m11 = m12 + self.f64_in(0.1, 20.0); // μ11 > μ12
+            let m21 = self.f64_in(0.5, 20.0);
+            let m22 = m21 + self.f64_in(0.1, 20.0); // μ22 > μ21
+            let m = AffinityMatrix::two_type(m11, m12, m21, m22).expect("valid");
+            // Skip the measure-zero b.4 boundary produced by ties.
+            if m.classify().is_ok() {
+                return m;
+            }
+        }
+    }
+
+    /// Random populations, each in [1, max_per_type].
+    pub fn populations(&mut self, k: usize, max_per_type: u32) -> Vec<u32> {
+        (0..k).map(|_| self.u32_in(1, max_per_type)).collect()
+    }
+
+    /// Random feasible state for the populations.
+    pub fn state(&mut self, populations: &[u32], l: usize) -> StateMatrix {
+        let k = populations.len();
+        let mut s = StateMatrix::zeros(k, l);
+        for (i, &ni) in populations.iter().enumerate() {
+            for _ in 0..ni {
+                let j = self.usize_in(0, l - 1);
+                s.inc(i, j);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generated_structures_satisfy_invariants() {
+        let mut rng = Rng::new(3);
+        let mut g = Gen::new(&mut rng);
+        for _ in 0..50 {
+            let mu = g.affinity((1, 4), (1, 5));
+            assert!(mu.types() >= 1 && mu.types() <= 4);
+            assert!(mu.procs() >= 1 && mu.procs() <= 5);
+            let two = g.affinity_two_type();
+            assert!(two.satisfies_two_type_affinity());
+            let pops = g.populations(3, 9);
+            let s = g.state(&pops, 4);
+            s.check_populations(&pops).unwrap();
+        }
+    }
+
+    #[test]
+    fn ranges_are_inclusive() {
+        let mut rng = Rng::new(4);
+        let mut g = Gen::new(&mut rng);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..200 {
+            match g.usize_in(1, 3) {
+                1 => seen_lo = true,
+                3 => seen_hi = true,
+                2 => {}
+                _ => panic!("out of range"),
+            }
+        }
+        assert!(seen_lo && seen_hi);
+    }
+}

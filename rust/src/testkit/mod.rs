@@ -1,0 +1,12 @@
+//! Property-testing mini-framework (no `proptest` available offline).
+//!
+//! Seeded generators + a runner that, on failure, re-reports the failing
+//! seed/case so runs reproduce exactly.  Shrinking is deliberately simple
+//! (halving retries on integer scalars) — enough for the coordinator
+//! invariants this crate checks.
+
+pub mod gen;
+pub mod prop;
+
+pub use gen::Gen;
+pub use prop::forall;

@@ -1,0 +1,94 @@
+//! The property runner.
+//!
+//! `forall(seed, cases, |gen| -> Result<(), String>)` runs `cases`
+//! independent generations; on the first failure it re-runs the same case
+//! (deterministic by construction) and panics with the seed + case index
+//! so the exact counterexample reproduces with
+//! `HETSCHED_PROP_SEED=<seed> HETSCHED_PROP_CASE=<idx>`.
+
+use crate::sim::rng::Rng;
+
+use super::gen::Gen;
+
+/// Run a property over `cases` generated cases.
+///
+/// The property returns `Err(description)` to signal a counterexample.
+pub fn forall<F>(seed: u64, cases: u32, mut prop: F)
+where
+    F: FnMut(&mut Gen<'_>) -> Result<(), String>,
+{
+    // Environment override for replaying a specific failure.
+    let seed = std::env::var("HETSCHED_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(seed);
+    let only_case: Option<u32> = std::env::var("HETSCHED_PROP_CASE")
+        .ok()
+        .and_then(|s| s.parse().ok());
+
+    let mut base = Rng::new(seed);
+    for case in 0..cases {
+        let mut rng = base.fork(case as u64);
+        if let Some(c) = only_case {
+            if case != c {
+                continue;
+            }
+        }
+        let mut gen = Gen::new(&mut rng);
+        if let Err(msg) = prop(&mut gen) {
+            panic!(
+                "property failed at case {case}/{cases} (seed {seed}): {msg}\n\
+                 reproduce with HETSCHED_PROP_SEED={seed} HETSCHED_PROP_CASE={case}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall(1, 50, |g| {
+            let a = g.u32_in(0, 10);
+            if a <= 10 {
+                Ok(())
+            } else {
+                Err(format!("{a} > 10"))
+            }
+        });
+    }
+
+    #[test]
+    fn reports_counterexample() {
+        let r = std::panic::catch_unwind(|| {
+            forall(2, 50, |g| {
+                let a = g.u32_in(0, 10);
+                if a < 10 {
+                    Ok(())
+                } else {
+                    Err(format!("hit {a}"))
+                }
+            });
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("HETSCHED_PROP_SEED=2"), "{msg}");
+        assert!(msg.contains("hit 10"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut first = Vec::new();
+        forall(3, 10, |g| {
+            first.push(g.u32_in(0, 1000));
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall(3, 10, |g| {
+            second.push(g.u32_in(0, 1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

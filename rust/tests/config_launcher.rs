@@ -1,0 +1,48 @@
+//! Launcher-level integration: the shipped example configs parse,
+//! validate, and drive full simulations through the same path as
+//! `hetsched simulate --config <file>`.
+
+use hetsched::config::schema::ExperimentSpec;
+use hetsched::sim::engine::ClosedNetwork;
+
+fn repo_path(rel: &str) -> String {
+    // Tests run from the package root.
+    format!("{}/{rel}", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn shipped_configs_parse_and_run() {
+    for cfg in [
+        "examples/configs/p1_biased_cab.json",
+        "examples/configs/table3_p2_biased_grin.json",
+        "examples/configs/multitype_jsq.json",
+    ] {
+        let mut spec = ExperimentSpec::from_file(&repo_path(cfg))
+            .unwrap_or_else(|e| panic!("{cfg}: {e}"));
+        // Keep the integration run quick.
+        spec.sim.warmup = 200;
+        spec.sim.measure = 2_000;
+        let net = ClosedNetwork::new(&spec.mu, spec.sim.clone()).unwrap();
+        let r = net.run(spec.policy.build().as_mut()).unwrap();
+        assert!(r.throughput > 0.0, "{cfg}");
+        assert!(r.little_residual() < 0.15, "{cfg}: Little's law violated");
+    }
+}
+
+#[test]
+fn config_spec_round_trips_through_launcher_flags() {
+    // The same experiment expressed via CLI flags must behave like the
+    // JSON spec (same seed ⇒ same throughput).
+    use hetsched::policy::PolicyKind;
+    let spec =
+        ExperimentSpec::from_file(&repo_path("examples/configs/p1_biased_cab.json")).unwrap();
+    assert_eq!(spec.policy, PolicyKind::Cab);
+    let mut a = spec.sim.clone();
+    a.measure = 3_000;
+    a.warmup = 300;
+    let net = ClosedNetwork::new(&spec.mu, a.clone()).unwrap();
+    let r1 = net.run(spec.policy.build().as_mut()).unwrap();
+    let net = ClosedNetwork::new(&spec.mu, a).unwrap();
+    let r2 = net.run(spec.policy.build().as_mut()).unwrap();
+    assert_eq!(r1.throughput, r2.throughput, "determinism per seed");
+}

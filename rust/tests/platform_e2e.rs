@@ -1,0 +1,94 @@
+//! Platform-rig end-to-end: real PJRT kernels on worker threads, measured
+//! rates, CAB vs LB — a miniature of Figs. 15–16 (full runs in the bench).
+//!
+//! Self-skips without built artifacts.
+
+use hetsched::model::affinity::Regime;
+use hetsched::platform::bench_rig::{cases, run_platform, PlatformConfig};
+use hetsched::platform::{calibrate, measure_rates, Calibration};
+use hetsched::policy::PolicyKind;
+use hetsched::runtime::ArtifactDir;
+
+fn have_artifacts() -> bool {
+    match ArtifactDir::open_default() {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping platform e2e: {e}");
+            false
+        }
+    }
+}
+
+fn cal() -> Calibration {
+    calibrate(3).expect("kernel calibration")
+}
+
+#[test]
+fn measured_rates_reproduce_the_intended_regime() {
+    if !have_artifacts() {
+        return;
+    }
+    // The cap must exceed every non-capped ideal rep count (~40 at the
+    // observed sort/nn cost ratio); 96 keeps wall-clock small.
+    let devices = cases::p2_biased(&cal(), 96);
+    let rates = measure_rates(&devices, 2).unwrap();
+    // P2-biased: NN faster than sort on both devices, NN fastest on GPU.
+    assert_eq!(
+        rates.mu.classify().unwrap(),
+        Regime::P2Biased,
+        "measured μ = {:?}",
+        rates.mu
+    );
+}
+
+#[test]
+fn cab_beats_lb_on_the_platform() {
+    if !have_artifacts() {
+        return;
+    }
+    let devices = cases::p2_biased(&cal(), 96);
+    let rates = measure_rates(&devices, 2).unwrap();
+    let cfg = PlatformConfig {
+        devices: devices.clone(),
+        populations: vec![6, 6],
+        warmup: 12,
+        measure: 36,
+        seed: 77,
+    };
+    let run = |kind: PolicyKind| {
+        let mut p = kind.build();
+        run_platform(&cfg, &rates, p.as_mut()).unwrap()
+    };
+    let cab = run(PolicyKind::Cab);
+    let lb = run(PolicyKind::LoadBalance);
+    assert_eq!(cab.completions, 36);
+    assert!(cab.checksum_abs_sum.is_finite() && cab.checksum_abs_sum > 0.0);
+    assert!(
+        cab.throughput > lb.throughput,
+        "CAB {} vs LB {} tasks/s — paper reports 3.27×–9.07×",
+        cab.throughput,
+        lb.throughput
+    );
+}
+
+#[test]
+fn general_symmetric_case_runs_and_cab_picks_bf() {
+    if !have_artifacts() {
+        return;
+    }
+    let devices = cases::general_symmetric(&cal(), 96);
+    let rates = measure_rates(&devices, 2).unwrap();
+    assert_eq!(rates.mu.classify().unwrap(), Regime::GeneralSymmetric);
+    let cfg = PlatformConfig {
+        devices,
+        populations: vec![5, 5],
+        warmup: 10,
+        measure: 20,
+        seed: 78,
+    };
+    let mut cab = PolicyKind::Cab.build();
+    let r = run_platform(&cfg, &rates, cab.as_mut()).unwrap();
+    assert_eq!(r.completions, 20);
+    assert!(r.throughput > 0.0);
+    assert!(r.mean_response_s > 0.0);
+}

@@ -1,0 +1,171 @@
+//! Property tests over the policy/solver layer (in-repo testkit).
+//!
+//! These are the coordinator invariants the paper's correctness rests on:
+//! population conservation (Eq. 29), Lemma-8 monotonicity, CAB ≡ GrIn ≡
+//! Opt on two types, and deficit steering keeping the system in S_max.
+
+use hetsched::model::state::StateMatrix;
+use hetsched::model::throughput::{x_of_state, x_two_type};
+use hetsched::policy::cab::Cab;
+use hetsched::policy::target::TargetSteering;
+use hetsched::policy::{grin, SystemView};
+use hetsched::solver::exhaustive::ExhaustiveSolver;
+use hetsched::testkit::forall;
+
+#[test]
+fn prop_grin_conserves_populations() {
+    forall(101, 200, |g| {
+        let mu = g.affinity((1, 5), (1, 5));
+        let pops = g.populations(mu.types(), 12);
+        let sol = grin::solve(&mu, &pops).map_err(|e| e.to_string())?;
+        sol.state
+            .check_populations(&pops)
+            .map_err(|e| format!("row sums broken: {e}"))
+    });
+}
+
+#[test]
+fn prop_grin_never_below_init_and_never_above_opt() {
+    forall(102, 60, |g| {
+        let mu = g.affinity((2, 3), (2, 3));
+        let pops = g.populations(mu.types(), 6);
+        let init = grin::initialize(&mu, &pops).map_err(|e| e.to_string())?;
+        let sol = grin::solve(&mu, &pops).map_err(|e| e.to_string())?;
+        let opt = ExhaustiveSolver.solve(&mu, &pops).map_err(|e| e.to_string())?;
+        let xi = x_of_state(&mu, &init);
+        if sol.throughput < xi - 1e-9 {
+            return Err(format!("GrIn {} below init {xi}", sol.throughput));
+        }
+        if sol.throughput > opt.throughput + 1e-9 {
+            return Err(format!(
+                "GrIn {} above exhaustive optimum {}",
+                sol.throughput, opt.throughput
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cab_equals_grin_equals_opt_on_two_types() {
+    // Lemma 4 (CAB optimal) + §7's "GrIn gives the same solution as CAB".
+    forall(103, 120, |g| {
+        let mu = g.affinity_two_type();
+        let pops = vec![g.u32_in(1, 12), g.u32_in(1, 12)];
+        let (_, cab) = Cab::target_state(&mu, &pops).map_err(|e| e.to_string())?;
+        let x_cab = x_of_state(&mu, &cab);
+        let x_grin = grin::solve(&mu, &pops).map_err(|e| e.to_string())?.throughput;
+        let x_opt = ExhaustiveSolver
+            .solve(&mu, &pops)
+            .map_err(|e| e.to_string())?
+            .throughput;
+        if (x_cab - x_opt).abs() > 1e-9 {
+            return Err(format!("CAB {x_cab} != Opt {x_opt} for {mu:?} {pops:?}"));
+        }
+        if (x_grin - x_opt).abs() > 1e-9 {
+            return Err(format!("GrIn {x_grin} != Opt {x_opt} for {mu:?} {pops:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cab_smax_dominates_entire_state_grid() {
+    // Exhaustive re-verification of Table 1 on random affinity systems.
+    forall(104, 60, |g| {
+        let mu = g.affinity_two_type();
+        let (n1, n2) = (g.u32_in(1, 9), g.u32_in(1, 9));
+        let (_, target) = Cab::target_state(&mu, &[n1, n2]).map_err(|e| e.to_string())?;
+        let best = x_of_state(&mu, &target);
+        for n11 in 0..=n1 {
+            for n22 in 0..=n2 {
+                let x = x_two_type(&mu, n11, n22, n1, n2).map_err(|e| e.to_string())?;
+                if x > best + 1e-9 {
+                    return Err(format!(
+                        "state ({n11},{n22}) gives {x} > CAB {best} for {mu:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deficit_steering_is_a_fixed_point() {
+    // From the target state, any single departure followed by a policy
+    // dispatch of the same type returns exactly to the target.
+    forall(105, 150, |g| {
+        let mu = g.affinity((2, 4), (2, 4));
+        let pops = g.populations(mu.types(), 8);
+        let sol = grin::solve(&mu, &pops).map_err(|e| e.to_string())?;
+        let steer = TargetSteering::new(sol.state.clone());
+        let work = vec![0.0; mu.procs()];
+        let mut state = sol.state.clone();
+        for _ in 0..40 {
+            // Random occupied cell departs.
+            let (mut i, mut j);
+            loop {
+                i = g.usize_in(0, mu.types() - 1);
+                j = g.usize_in(0, mu.procs() - 1);
+                if state.get(i, j) > 0 {
+                    break;
+                }
+            }
+            state.dec(i, j).map_err(|e| e.to_string())?;
+            let view = SystemView {
+                mu: &mu,
+                state: &state,
+                work: &work,
+                populations: &pops,
+            };
+            let dest = steer.dispatch(i, &view);
+            state.inc(i, dest);
+            if state != sol.state {
+                return Err(format!(
+                    "steering drifted after departure ({i},{j}):\n{state}vs target\n{}",
+                    sol.state
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_x_of_state_zero_iff_all_queues_empty() {
+    forall(106, 100, |g| {
+        let mu = g.affinity((1, 4), (1, 4));
+        let pops = g.populations(mu.types(), 6);
+        let s = g.state(&pops, mu.procs());
+        let x = x_of_state(&mu, &s);
+        let total: u32 = pops.iter().sum();
+        if total > 0 && x <= 0.0 {
+            return Err(format!("non-empty system with X = {x}"));
+        }
+        let empty = StateMatrix::zeros(mu.types(), mu.procs());
+        if x_of_state(&mu, &empty) != 0.0 {
+            return Err("empty system with X != 0".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grin_moves_bounded_and_deterministic() {
+    forall(107, 80, |g| {
+        let mu = g.affinity((2, 4), (2, 4));
+        let pops = g.populations(mu.types(), 10);
+        let a = grin::solve(&mu, &pops).map_err(|e| e.to_string())?;
+        let b = grin::solve(&mu, &pops).map_err(|e| e.to_string())?;
+        if a.state != b.state {
+            return Err("GrIn is nondeterministic".into());
+        }
+        let n_total: u32 = pops.iter().sum();
+        let cap = 64 + (n_total as usize) * mu.procs() * mu.types() * 4;
+        if a.moves >= cap {
+            return Err(format!("GrIn hit its move cap ({} moves)", a.moves));
+        }
+        Ok(())
+    });
+}

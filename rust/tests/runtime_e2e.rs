@@ -1,0 +1,163 @@
+//! Runtime layer end-to-end: every shipped artifact loads, compiles and
+//! produces numbers that match the Rust-side oracles.
+//!
+//! These tests self-skip when `make artifacts` has not run; `make test`
+//! always builds artifacts first.
+
+use hetsched::model::affinity::AffinityMatrix;
+use hetsched::model::state::StateMatrix;
+use hetsched::model::throughput::x_of_state;
+use hetsched::runtime::{ArtifactDir, Engine};
+use hetsched::sim::rng::Rng;
+
+fn engine() -> Option<Engine> {
+    match ArtifactDir::open_default() {
+        Ok(a) => Some(Engine::new(a).expect("pjrt cpu client")),
+        Err(e) => {
+            eprintln!("skipping runtime e2e: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_manifest_entry_compiles() {
+    let Some(eng) = engine() else { return };
+    let art = ArtifactDir::open_default().unwrap();
+    assert!(art.entries().len() >= 5, "expected the 5 shipped entries");
+    for e in art.entries() {
+        // Compiling happens lazily on first run; probe with zero inputs.
+        let zero_args: Vec<Vec<f32>> =
+            (0..e.arg_shapes.len()).map(|i| vec![0f32; e.arg_elems(i)]).collect();
+        let refs: Vec<&[f32]> = zero_args.iter().map(|v| v.as_slice()).collect();
+        let outs = eng.run_f32(&e.name, &refs).unwrap_or_else(|err| {
+            panic!("entry {} failed: {err}", e.name);
+        });
+        assert_eq!(outs.len(), e.out_arity, "{}", e.name);
+    }
+}
+
+#[test]
+fn nn2000_matches_rust_matmul_oracle() {
+    let Some(eng) = engine() else { return };
+    // Small structured case: w = columnwise constant, so
+    // y[r, c] = relu(sum(x[r,:])·w_c + b_c) is easy to compute exactly.
+    let (m, k, n) = (32usize, 2048usize, 256usize);
+    let mut rng = Rng::new(404);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-0.01, 0.01) as f32).collect();
+    let mut w = vec![0f32; k * n];
+    for kk in 0..k {
+        for c in 0..n {
+            w[kk * n + c] = (c as f32 - 128.0) * 1e-3;
+        }
+    }
+    let b = vec![0.05f32; n];
+    let r = eng.nn_task("nn2000", &x, &w, &b).unwrap();
+    // Oracle checksum.
+    let mut want = 0f64;
+    for row in 0..m {
+        let s: f64 = x[row * k..(row + 1) * k].iter().map(|&v| v as f64).sum();
+        for c in 0..n {
+            let y = s * ((c as f64 - 128.0) * 1e-3) + 0.05;
+            if y > 0.0 {
+                want += y;
+            }
+        }
+    }
+    let got = r.checksum as f64;
+    assert!(
+        (got - want).abs() / want.abs().max(1.0) < 1e-3,
+        "checksum {got} vs oracle {want}"
+    );
+}
+
+#[test]
+fn sort_large_sorts_random_rows() {
+    let Some(eng) = engine() else { return };
+    let mut rng = Rng::new(505);
+    let rows: Vec<f32> = (0..16 * 1024).map(|_| rng.range_f64(-100.0, 100.0) as f32).collect();
+    let out = eng.sort_task("sort_large", &rows).unwrap();
+    for r in 0..16 {
+        let row = &out.rows[r * 1024..(r + 1) * 1024];
+        assert!(row.windows(2).all(|w| w[0] <= w[1]), "row {r} unsorted");
+        // Same multiset as the input row.
+        let mut want: Vec<f32> = rows[r * 1024..(r + 1) * 1024].to_vec();
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(row, &want[..], "row {r} is not a permutation");
+    }
+}
+
+#[test]
+fn batched_exhaustive_via_pjrt_matches_scalar() {
+    // The L1 `throughput_eval` kernel driving the L3 exhaustive solver:
+    // the full three-layer integration in one assert.
+    let Some(eng) = engine() else { return };
+    let mu = AffinityMatrix::from_rows(&[
+        vec![10.0, 2.0, 4.0],
+        vec![1.0, 8.0, 3.0],
+        vec![6.0, 6.0, 9.0],
+    ])
+    .unwrap();
+    let pops = [4u32, 3, 3];
+    let (kp, lp, bsz) = (16usize, 16usize, 4096usize);
+    let mut mu_p = vec![0f32; kp * lp];
+    for i in 0..3 {
+        for j in 0..3 {
+            mu_p[i * lp + j] = mu.rate(i, j) as f32;
+        }
+    }
+    let scalar = hetsched::solver::exhaustive::ExhaustiveSolver
+        .solve(&mu, &pops)
+        .unwrap();
+    let batched = hetsched::solver::exhaustive::ExhaustiveSolver
+        .solve_batched(&mu, &pops, bsz, kp, lp, |buf| {
+            eng.throughput_batch(&mu_p, buf)
+        })
+        .unwrap();
+    assert_eq!(batched.evaluated, scalar.evaluated);
+    let rel = (batched.throughput - scalar.throughput).abs() / scalar.throughput;
+    assert!(rel < 1e-4, "pjrt {} vs rust {}", batched.throughput, scalar.throughput);
+    // The argmax states agree in throughput (ties possible in state).
+    assert!(
+        (x_of_state(&mu, &batched.state) - scalar.throughput).abs() / scalar.throughput
+            < 1e-4
+    );
+}
+
+#[test]
+fn executable_cache_no_recompile() {
+    let Some(eng) = engine() else { return };
+    let x = vec![0f32; 8 * 256];
+    let w = vec![0f32; 256 * 256];
+    let b = vec![0f32; 256];
+    // First call compiles…
+    let t0 = std::time::Instant::now();
+    eng.nn_task("nn_small", &x, &w, &b).unwrap();
+    let cold = t0.elapsed();
+    // …subsequent calls must be much faster than compile.
+    let t1 = std::time::Instant::now();
+    for _ in 0..5 {
+        eng.nn_task("nn_small", &x, &w, &b).unwrap();
+    }
+    let warm = t1.elapsed() / 5;
+    assert!(
+        warm < cold,
+        "warm call ({warm:?}) not faster than cold compile+run ({cold:?})"
+    );
+}
+
+#[test]
+fn zero_state_padding_evaluates_to_zero_throughput() {
+    let Some(eng) = engine() else { return };
+    let (kp, lp, bsz) = (16usize, 16usize, 4096usize);
+    let mu_p = vec![1f32; kp * lp];
+    let batch = vec![0f32; bsz * kp * lp];
+    let xs = eng.throughput_batch(&mu_p, &batch).unwrap();
+    assert!(xs.iter().all(|&x| x == 0.0));
+    // And a known state evaluates exactly.
+    let mut batch = vec![0f32; bsz * kp * lp];
+    let s = StateMatrix::new(2, 2, vec![1, 0, 0, 1]).unwrap();
+    batch[..kp * lp].copy_from_slice(&s.to_padded_f32(kp, lp).unwrap());
+    let xs = eng.throughput_batch(&mu_p, &batch).unwrap();
+    assert!((xs[0] - 2.0).abs() < 1e-5); // two singleton queues at rate 1
+}

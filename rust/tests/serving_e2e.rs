@@ -1,0 +1,80 @@
+//! Serving coordinator end-to-end: closed-loop clients through router +
+//! batcher + PJRT workers.  Self-skips without built artifacts.
+
+use hetsched::coordinator::{Coordinator, ServeConfig};
+use hetsched::policy::PolicyKind;
+use hetsched::runtime::ArtifactDir;
+
+fn have_artifacts() -> bool {
+    match ArtifactDir::open_default() {
+        Ok(_) => true,
+        Err(e) => {
+            eprintln!("skipping serving e2e: {e}");
+            false
+        }
+    }
+}
+
+#[test]
+fn serves_all_requests_and_reports_sane_stats() {
+    if !have_artifacts() {
+        return;
+    }
+    let cfg = ServeConfig {
+        policy: PolicyKind::Cab,
+        total: 200,
+        inflight: 16,
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 200);
+    assert!(r.rps > 0.0);
+    assert!(r.elapsed_s > 0.0);
+    // Both classes saw traffic at sort_fraction = 0.5.
+    assert!(r.sort_latency.count() > 20);
+    assert!(r.nn_latency.count() > 20);
+    assert_eq!(r.sort_latency.count() + r.nn_latency.count(), 200);
+    // Latency percentiles are ordered.
+    assert!(r.nn_latency.quantile_s(0.99) >= r.nn_latency.quantile_s(0.5));
+    // Batching actually batched.
+    assert!(r.batches >= 1);
+    assert!(r.batch_fill > 0.0 && r.batch_fill <= 1.0);
+    let flush_total: u64 = r.flushes.iter().sum();
+    assert_eq!(flush_total, r.batches);
+}
+
+#[test]
+fn batching_deadline_bounds_nn_latency() {
+    if !have_artifacts() {
+        return;
+    }
+    // With a tiny deadline the batcher must flush partial batches rather
+    // than starve: all requests still complete.
+    let cfg = ServeConfig {
+        policy: PolicyKind::BestFit,
+        total: 100,
+        inflight: 4, // rarely fills an 8-slot batch
+        batch_deadline: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 100);
+    // Deadline (or drain) flushes must dominate at this concurrency.
+    assert!(
+        r.flushes[1] + r.flushes[2] > 0,
+        "expected deadline flushes, got {:?}",
+        r.flushes
+    );
+}
+
+#[test]
+fn all_policies_drive_the_server() {
+    if !have_artifacts() {
+        return;
+    }
+    for kind in [PolicyKind::Cab, PolicyKind::GrIn, PolicyKind::Jsq, PolicyKind::LoadBalance] {
+        let cfg = ServeConfig { policy: kind, total: 60, inflight: 8, ..Default::default() };
+        let r = Coordinator::run(&cfg).unwrap();
+        assert_eq!(r.served, 60, "{}", kind.name());
+    }
+}

@@ -1,0 +1,122 @@
+//! Solver-layer integration: GrIn vs SLSQP vs exhaustive (Figs. 13–14
+//! claims at test scale).
+
+use hetsched::policy::grin;
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+use hetsched::solver::exhaustive::{CompositionIter, ExhaustiveSolver};
+use hetsched::solver::slsqp::{x_continuous, Slsqp};
+
+#[test]
+fn grin_average_gap_to_opt_is_small() {
+    // §4.2 / §6: GrIn within 1.6% of the exhaustive optimum on average
+    // over random 3×3 systems.  At test scale we allow a slightly wider
+    // budget (fewer samples); the bench reproduces the full 1000-run
+    // figure.
+    let mut rng = Rng::new(1313);
+    let mut gap_sum = 0.0;
+    let runs = 60;
+    for _ in 0..runs {
+        let mu = workload::random_mu(&mut rng, 3, 3, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, 3, 6);
+        let opt = ExhaustiveSolver.solve(&mu, &pops).unwrap();
+        let g = grin::solve(&mu, &pops).unwrap();
+        gap_sum += 1.0 - g.throughput / opt.throughput;
+    }
+    let avg_gap = gap_sum / runs as f64;
+    assert!(avg_gap < 0.03, "average GrIn gap {avg_gap:.4} (paper: 0.016)");
+}
+
+#[test]
+fn grin_beats_or_matches_slsqp_on_average() {
+    // Fig. 13: GrIn's integer solution beats SLSQP's continuous one on
+    // average (SLSQP is a local method on a discontinuous objective).
+    let mut rng = Rng::new(1414);
+    let mut improvements = Vec::new();
+    for _ in 0..40 {
+        let mu = workload::random_mu(&mut rng, 4, 4, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, 4, 8);
+        let g = grin::solve(&mu, &pops).unwrap();
+        let s = Slsqp::default().solve(&mu, &pops).unwrap();
+        improvements.push(g.throughput / s.throughput - 1.0);
+    }
+    let avg = improvements.iter().sum::<f64>() / improvements.len() as f64;
+    assert!(
+        avg > -0.02,
+        "GrIn should be ≥ SLSQP on average, got {avg:.4}"
+    );
+}
+
+#[test]
+fn slsqp_solution_is_feasible_and_stationary_ish() {
+    let mut rng = Rng::new(1515);
+    for _ in 0..20 {
+        let mu = workload::random_mu(&mut rng, 3, 4, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, 3, 9);
+        let sol = Slsqp::default().solve(&mu, &pops).unwrap();
+        // Feasibility.
+        let l = mu.procs();
+        for (i, &ni) in pops.iter().enumerate() {
+            let row: f64 = (0..l).map(|j| sol.n[i * l + j]).sum();
+            assert!((row - ni as f64).abs() < 1e-6);
+        }
+        assert!(sol.n.iter().all(|&v| v >= -1e-9));
+        // Objective consistency.
+        assert!((x_continuous(&mu, &sol.n) - sol.throughput).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn composition_counts_match_formula() {
+    for (total, parts) in [(0u32, 1usize), (5, 1), (4, 3), (10, 4), (20, 2)] {
+        let n = CompositionIter::new(total, parts).count() as u128;
+        assert_eq!(n, CompositionIter::count(total, parts), "{total} into {parts}");
+    }
+    // Π over rows.
+    assert_eq!(
+        ExhaustiveSolver::state_count(&[4, 4], 3),
+        CompositionIter::count(4, 3) * CompositionIter::count(4, 3)
+    );
+}
+
+#[test]
+fn exhaustive_is_invariant_to_row_order() {
+    let mu_a = workload::random_mu(&mut Rng::new(7), 3, 3, 1.0, 20.0).unwrap();
+    // Permute rows (types) — optimum throughput must be identical.
+    let rows: Vec<Vec<f64>> = (0..3).map(|i| mu_a.row(i).to_vec()).collect();
+    let mu_b = hetsched::model::affinity::AffinityMatrix::from_rows(&[
+        rows[2].clone(),
+        rows[0].clone(),
+        rows[1].clone(),
+    ])
+    .unwrap();
+    let a = ExhaustiveSolver.solve(&mu_a, &[3, 4, 5]).unwrap();
+    let b = ExhaustiveSolver.solve(&mu_b, &[5, 3, 4]).unwrap();
+    assert!((a.throughput - b.throughput).abs() < 1e-9);
+}
+
+#[test]
+fn solver_runtime_ordering_grin_faster_than_slsqp() {
+    // Fig. 14's *shape* at test scale: GrIn per-solve wall-clock should
+    // not exceed SLSQP's on larger systems (GrIn is O(k·l) per move).
+    use std::time::Instant;
+    let mut rng = Rng::new(1616);
+    let mut grin_total = 0.0;
+    let mut slsqp_total = 0.0;
+    for _ in 0..15 {
+        let mu = workload::random_mu(&mut rng, 8, 8, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, 8, 8);
+        let t0 = Instant::now();
+        let g = grin::solve(&mu, &pops).unwrap();
+        grin_total += t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let s = Slsqp::default().solve(&mu, &pops).unwrap();
+        slsqp_total += t1.elapsed().as_secs_f64();
+        // Keep the comparison honest: both must produce real solutions.
+        assert!(g.throughput > 0.0 && s.throughput > 0.0);
+    }
+    assert!(
+        grin_total < slsqp_total,
+        "GrIn ({grin_total:.4}s) should be faster than SLSQP ({slsqp_total:.4}s) at 8×8"
+    );
+}
