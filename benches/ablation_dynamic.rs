@@ -49,18 +49,16 @@ impl Policy for FrozenCab {
 fn main() {
     let mu = workload::paper_two_type_mu();
     let phases = vec![
-        Phase { populations: vec![10, 10], warmup: 500, completions: 8_000 },
-        Phase { populations: vec![2, 18], warmup: 500, completions: 8_000 },
-        Phase { populations: vec![18, 2], warmup: 500, completions: 8_000 },
-        Phase { populations: vec![5, 15], warmup: 500, completions: 8_000 },
-        Phase { populations: vec![15, 5], warmup: 500, completions: 8_000 },
+        Phase::new(vec![10, 10], 500, 8_000),
+        Phase::new(vec![2, 18], 500, 8_000),
+        Phase::new(vec![18, 2], 500, 8_000),
+        Phase::new(vec![5, 15], 500, 8_000),
+        Phase::new(vec![15, 5], 500, 8_000),
     ];
-    let cfg = DynamicConfig {
-        phases: phases.clone(),
-        discipline: Discipline::Ps,
-        dist: Distribution::Exponential,
-        seed: 0xD1,
-    };
+    let mut cfg = DynamicConfig::new(phases.clone());
+    cfg.discipline = Discipline::Ps;
+    cfg.dist = Distribution::Exponential;
+    cfg.seed = 0xD1;
 
     let mut resolving = PolicyKind::Cab.build();
     let rs_resolve = run_dynamic(&mu, &cfg, resolving.as_mut()).unwrap();

@@ -2,11 +2,19 @@
 //!
 //! L3 targets (DESIGN.md §6): simulator ≥ 5M events/s; dispatch decisions
 //! O(l) and allocation-free; GrIn solve well under SLSQP at 10×10; the
-//! PJRT request path dominated by kernel time, not dispatch overhead.
+//! incremental X(S) evaluator a large constant factor under the full
+//! Eq.-28 evaluation; the engine request path dominated by kernel time,
+//! not dispatch overhead.
+//!
+//! Flags: `--quick` shrinks every loop for CI smoke runs; `--json PATH`
+//! writes the measured values as a `BENCH_*.json`-style document for the
+//! perf trajectory.
 
 use std::time::Instant;
 
-use hetsched::model::throughput::x_of_state;
+use hetsched::cli::Args;
+use hetsched::config::json::Json;
+use hetsched::model::throughput::{x_of_state, IncrementalX};
 use hetsched::policy::{grin, PolicyKind, SystemView};
 use hetsched::report::{Stopwatch, Table};
 use hetsched::sim::distribution::Distribution;
@@ -16,14 +24,23 @@ use hetsched::sim::workload;
 use hetsched::solver::slsqp::Slsqp;
 
 fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let quick = args.switch("quick");
+    let json_path = args.get("json").map(str::to_string);
+    args.finish().expect("flags");
+
+    let scale = |full: u64, quick_n: u64| if quick { quick_n } else { full };
     let mut t = Table::new("perf_hotpath", &["metric", "value"]);
+    // (key, value) pairs mirrored into the JSON artifact.
+    let mut metrics: Vec<(String, f64)> = Vec::new();
 
     // --- simulator event throughput -------------------------------------
     let mu = workload::paper_two_type_mu();
     let mut cfg = SimConfig::paper_default(vec![10, 10]);
     cfg.dist = Distribution::Exponential;
     cfg.warmup = 1_000;
-    cfg.measure = 400_000;
+    cfg.measure = scale(400_000, 50_000);
     let net = ClosedNetwork::new(&mu, cfg).unwrap();
     let t0 = Instant::now();
     let r = net.run(PolicyKind::Cab.build().as_mut()).unwrap();
@@ -33,6 +50,7 @@ fn main() {
         "sim events/s (CAB, 2 procs, N=20)".into(),
         format!("{:.2}M", events_per_s / 1e6),
     ]);
+    metrics.push(("sim_events_per_s".into(), events_per_s));
 
     // --- dispatch decision latency ---------------------------------------
     let pops = [10u32, 10];
@@ -43,7 +61,7 @@ fn main() {
         let mut p = kind.build();
         p.prepare(&mu, &pops).unwrap();
         let view = SystemView { mu: &mu, state: &state, work: &work, populations: &pops };
-        let n = 2_000_000u64;
+        let n = scale(2_000_000, 200_000);
         let t0 = Instant::now();
         let mut sink = 0usize;
         for i in 0..n {
@@ -52,30 +70,50 @@ fn main() {
         std::hint::black_box(sink);
         let ns = t0.elapsed().as_nanos() as f64 / n as f64;
         t.row(vec![format!("dispatch ns/op ({})", kind.name()), format!("{ns:.1}")]);
+        metrics.push((format!("dispatch_ns_{}", kind.name()), ns));
     }
 
-    // --- objective evaluation --------------------------------------------
+    // --- objective evaluation: full vs incremental -----------------------
     let mu9 = workload::random_mu(&mut rng, 8, 8, 0.5, 30.0).unwrap();
     let pops9 = workload::random_populations(&mut rng, 8, 8);
     let s9 = grin::solve(&mu9, &pops9).unwrap().state;
-    let n = 2_000_000u64;
+    let n = scale(2_000_000, 200_000);
     let t0 = Instant::now();
     let mut acc = 0.0;
     for _ in 0..n {
         acc += x_of_state(std::hint::black_box(&mu9), std::hint::black_box(&s9));
     }
     std::hint::black_box(acc);
+    let full_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    t.row(vec!["x_of_state ns/op (8x8, full)".into(), format!("{full_ns:.1}")]);
+    metrics.push(("x_of_state_full_ns".into(), full_ns));
+
+    // The GrIn hot path: O(1) move-delta probes on cached column sums.
+    let inc = IncrementalX::new(&mu9, &s9);
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    for i in 0..n {
+        let p = (i & 7) as usize;
+        let j = ((i >> 3) & 7) as usize;
+        acc += std::hint::black_box(&inc).delta_plus(&mu9, p, j);
+    }
+    std::hint::black_box(acc);
+    let inc_ns = t0.elapsed().as_nanos() as f64 / n as f64;
+    t.row(vec!["move-delta ns/op (8x8, incremental)".into(), format!("{inc_ns:.1}")]);
+    metrics.push(("move_delta_incremental_ns".into(), inc_ns));
     t.row(vec![
-        "x_of_state ns/op (8x8)".into(),
-        format!("{:.1}", t0.elapsed().as_nanos() as f64 / n as f64),
+        "incremental speedup vs full eval".into(),
+        format!("{:.1}x", full_ns / inc_ns.max(1e-9)),
     ]);
+    metrics.push(("incremental_speedup".into(), full_ns / inc_ns.max(1e-9)));
 
     // --- solver latencies --------------------------------------------------
     for size in [4usize, 8, 10] {
         let mut sw_g = Stopwatch::new();
         let mut sw_s = Stopwatch::new();
         let mut rng2 = Rng::new(99);
-        for _ in 0..30 {
+        let runs = scale(30, 6) as usize;
+        for _ in 0..runs {
             let m = workload::random_mu(&mut rng2, size, size, 0.5, 30.0).unwrap();
             let p = workload::random_populations(&mut rng2, size, 8);
             sw_g.time(|| grin::solve(&m, &p).unwrap());
@@ -85,31 +123,35 @@ fn main() {
             format!("GrIn µs ({size}x{size})"),
             format!("{:.1}", sw_g.mean_s() * 1e6),
         ]);
+        metrics.push((format!("grin_us_{size}x{size}"), sw_g.mean_s() * 1e6));
         t.row(vec![
             format!("SLSQP µs ({size}x{size})"),
             format!("{:.1}", sw_s.mean_s() * 1e6),
         ]);
+        metrics.push((format!("slsqp_us_{size}x{size}"), sw_s.mean_s() * 1e6));
     }
 
-    // --- PJRT request path (needs artifacts) -------------------------------
+    // --- engine request path (native kernels / PJRT with --features pjrt)
     match hetsched::runtime::Engine::open_default() {
         Ok(eng) => {
             let x = vec![0.1f32; 8 * 256];
             let w = vec![0.01f32; 256 * 256];
             let b = vec![0.0f32; 256];
-            eng.nn_task("nn_small", &x, &w, &b).unwrap(); // compile
+            eng.nn_task("nn_small", &x, &w, &b).unwrap(); // compile/warm
             let mut sw = Stopwatch::new();
-            sw.run_n(200, || {
+            sw.run_n(scale(200, 20) as usize, || {
                 eng.nn_task("nn_small", &x, &w, &b).unwrap();
             });
             t.row(vec!["nn_small exec µs (warm)".into(), format!("{:.1}", sw.mean_s() * 1e6)]);
+            metrics.push(("nn_small_exec_us".into(), sw.mean_s() * 1e6));
             let rows = vec![0.5f32; 16 * 256];
             eng.sort_task("sort_small", &rows).unwrap();
             let mut sw = Stopwatch::new();
-            sw.run_n(50, || {
+            sw.run_n(scale(50, 10) as usize, || {
                 eng.sort_task("sort_small", &rows).unwrap();
             });
             t.row(vec!["sort_small exec µs (warm)".into(), format!("{:.1}", sw.mean_s() * 1e6)]);
+            metrics.push(("sort_small_exec_us".into(), sw.mean_s() * 1e6));
 
             // Batched exhaustive offload vs scalar.
             let mu3 = workload::random_mu(&mut rng, 3, 3, 1.0, 20.0).unwrap();
@@ -136,18 +178,38 @@ fn main() {
                 format!("exhaustive scalar ({} states)", scalar.evaluated),
                 format!("{:.1} ms", ts * 1e3),
             ]);
+            metrics.push(("exhaustive_scalar_ms".into(), ts * 1e3));
             t.row(vec![
-                "exhaustive PJRT-batched (same)".into(),
+                "exhaustive engine-batched (same)".into(),
                 format!("{:.1} ms", tb * 1e3),
             ]);
+            metrics.push(("exhaustive_batched_ms".into(), tb * 1e3));
         }
         Err(e) => {
-            t.row(vec!["PJRT rows skipped".into(), e.to_string()]);
+            t.row(vec!["engine rows skipped".into(), e.to_string()]);
         }
     }
 
     t.print();
-    if events_per_s < 5e6 {
+    if !quick && events_per_s < 5e6 {
         println!("WARN: sim below the 5M events/s target ({events_per_s:.0}/s)");
+    }
+
+    if let Some(path) = json_path {
+        let doc = Json::Obj(vec![
+            ("bench".to_string(), Json::Str("perf_hotpath".to_string())),
+            ("quick".to_string(), Json::Bool(quick)),
+            (
+                "metrics".to_string(),
+                Json::Obj(
+                    metrics
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string_compact()).expect("write --json output");
+        println!("wrote {path}");
     }
 }

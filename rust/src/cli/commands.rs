@@ -4,12 +4,13 @@
 //! hetsched simulate  --config spec.json | --policy cab --eta 0.5 ...
 //! hetsched sweep     --dist exp --n 20 [--policies cab,bf,rd,jsq,lb]
 //! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
+//! hetsched scenario  --kind slow_drift --policy grin [--compare]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
-//! hetsched serve     --policy cab --inflight 16 --total 400
+//! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
-use crate::config::schema::ExperimentSpec;
+use crate::config::schema::{ExperimentSpec, ScenarioSpec};
 use crate::coordinator::{Coordinator, ServeConfig};
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -36,9 +37,12 @@ COMMANDS:
   simulate   run one closed-network simulation (JSON spec or flags)
   sweep      η-sweep of all policies (the Figs. 4–7 experiment)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
+  scenario   run a non-stationary scenario (phase_shift | burst |
+             slow_drift) under a resolve mode, or --compare all modes
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
-  serve      run the serving coordinator demo (needs `make artifacts`)
+  serve      run the serving coordinator demo (--adaptive for live
+             re-solve against estimated rates)
   help       show this text
 
 Run `hetsched <COMMAND> --help` for per-command flags.";
@@ -81,6 +85,7 @@ pub fn run(args: &Args) -> Result<()> {
         Some("simulate") => cmd_simulate(args),
         Some("sweep") => cmd_sweep(args),
         Some("solve") => cmd_solve(args),
+        Some("scenario") => cmd_scenario(args),
         Some("classify") => cmd_classify(args),
         Some("platform") => cmd_platform(args),
         Some("serve") => cmd_serve(args),
@@ -210,6 +215,118 @@ fn cmd_solve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_scenario(args: &Args) -> Result<()> {
+    use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode};
+    use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
+
+    let (mu, policy, kind, dynamic) = if let Some(path) = args.get("config") {
+        let spec = ScenarioSpec::from_file(path)?;
+        (spec.mu, spec.policy, spec.kind, spec.dynamic)
+    } else {
+        let mu = parse_mu(args.get("mu").unwrap_or("20,15;3,8"))?;
+        let policy = PolicyKind::parse(args.get("policy").unwrap_or("grin"))?;
+        let kind = ScenarioKind::parse(args.get("kind").unwrap_or("slow_drift"))?;
+        let d = ScenarioParams::default();
+        let drift_to = match args.get("drift-to") {
+            Some(list) => list
+                .split(',')
+                .map(|c| {
+                    c.trim().parse::<f64>().map_err(|_| {
+                        Error::Parse(format!("--drift-to: bad factor '{c}'"))
+                    })
+                })
+                .collect::<Result<_>>()?,
+            None => d.drift_to,
+        };
+        let p = ScenarioParams {
+            n: args.get_parse("n", d.n)?,
+            phases: args.get_parse("phases", d.phases)?,
+            completions: args.get_parse("completions", d.completions)?,
+            warmup: args.get_parse("warmup", d.warmup)?,
+            low_eta: args.get_parse("low-eta", d.low_eta)?,
+            high_eta: args.get_parse("high-eta", d.high_eta)?,
+            burst_factor: args.get_parse("burst-factor", d.burst_factor)?,
+            drift_to,
+        };
+        let mut dynamic = DynamicConfig::new(scenario_phases(kind, &p)?);
+        dynamic.resolve = ResolveMode::parse(args.get("resolve").unwrap_or("adaptive"))?;
+        dynamic.dist = Distribution::parse(args.get("dist").unwrap_or("exp"))?;
+        dynamic.seed = args.get_parse("seed", dynamic.seed)?;
+        dynamic.drift.threshold = args.get_parse("drift-threshold", dynamic.drift.threshold)?;
+        dynamic.drift.check_every = args.get_parse("check-every", dynamic.drift.check_every)?;
+        (mu, policy, kind, dynamic)
+    };
+    let compare = args.switch("compare");
+    args.finish()?;
+
+    let run_mode = |mode: ResolveMode| -> Result<(Vec<f64>, f64, u64)> {
+        let mut cfg = dynamic.clone();
+        cfg.resolve = mode;
+        let mut p = policy.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
+        let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
+        Ok((per_phase, report.mean_throughput(), report.resolves))
+    };
+
+    if compare {
+        let modes =
+            [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive];
+        let mut results = Vec::new();
+        for mode in modes {
+            results.push(run_mode(mode)?);
+        }
+        let mut t = Table::new(
+            format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
+            &["phase", "static", "every_phase", "adaptive"],
+        );
+        for i in 0..dynamic.phases.len() {
+            t.row(vec![
+                format!("{i}"),
+                format!("{:.4}", results[0].0[i]),
+                format!("{:.4}", results[1].0[i]),
+                format!("{:.4}", results[2].0[i]),
+            ]);
+        }
+        t.row(vec![
+            "mean".into(),
+            format!("{:.4}", results[0].1),
+            format!("{:.4}", results[1].1),
+            format!("{:.4}", results[2].1),
+        ]);
+        t.print();
+        println!(
+            "re-solves: static {} / every_phase {} / adaptive {}",
+            results[0].2, results[1].2, results[2].2
+        );
+        println!(
+            "adaptive vs static mean X: {:.2}x (oracle every_phase: {:.2}x)",
+            results[2].1 / results[0].1,
+            results[1].1 / results[0].1,
+        );
+    } else {
+        let (per_phase, mean, resolves) = run_mode(dynamic.resolve)?;
+        let mut t = Table::new(
+            format!(
+                "scenario {} ({}, resolve {})",
+                kind.name(),
+                policy.name(),
+                dynamic.resolve.name()
+            ),
+            &["phase", "populations", "X (tasks/s)"],
+        );
+        for (i, x) in per_phase.iter().enumerate() {
+            t.row(vec![
+                format!("{i}"),
+                format!("{:?}", dynamic.phases[i].populations),
+                format!("{x:.4}"),
+            ]);
+        }
+        t.print();
+        println!("mean X = {mean:.4} tasks/s, {resolves} re-solves");
+    }
+    Ok(())
+}
+
 fn cmd_classify(args: &Args) -> Result<()> {
     let mu = parse_mu(
         args.get("mu")
@@ -286,12 +403,18 @@ fn cmd_platform(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let mut cfg = ServeConfig::default();
-    cfg.policy = PolicyKind::parse(args.get("policy").unwrap_or("cab"))?;
-    cfg.inflight = args.get_parse("inflight", cfg.inflight)?;
-    cfg.total = args.get_parse("total", cfg.total)?;
-    cfg.sort_fraction = args.get_parse("sort-fraction", cfg.sort_fraction)?;
-    cfg.seed = args.get_parse("seed", cfg.seed)?;
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        policy: PolicyKind::parse(args.get("policy").unwrap_or("cab"))?,
+        inflight: args.get_parse("inflight", d.inflight)?,
+        total: args.get_parse("total", d.total)?,
+        sort_fraction: args.get_parse("sort-fraction", d.sort_fraction)?,
+        seed: args.get_parse("seed", d.seed)?,
+        adaptive: args.switch("adaptive"),
+        resolve_check: args.get_parse("resolve-check", d.resolve_check)?,
+        drift_threshold: args.get_parse("drift-threshold", d.drift_threshold)?,
+        ..d
+    };
     args.finish()?;
 
     let r = Coordinator::run(&cfg)?;
@@ -311,7 +434,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "flushes full/deadline/drain".into(),
         format!("{}/{}/{}", r.flushes[0], r.flushes[1], r.flushes[2]),
     ]);
+    if cfg.adaptive {
+        t.row(vec!["adaptive re-solves".into(), r.resolves.to_string()]);
+    }
     t.print();
+    if let Some(mu_hat) = &r.mu_hat {
+        println!(
+            "estimated μ̂: [[{:.1}, {:.1}], [{:.1}, {:.1}]] req/s",
+            mu_hat.rate(0, 0),
+            mu_hat.rate(0, 1),
+            mu_hat.rate(1, 0),
+            mu_hat.rate(1, 1)
+        );
+    }
     Ok(())
 }
 
@@ -332,6 +467,25 @@ mod tests {
     #[test]
     fn dispatches_unknown_command() {
         let args = Args::parse(["wat".to_string()]).unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn scenario_command_runs_all_kinds_quickly() {
+        for kind in ["phase_shift", "burst", "slow_drift"] {
+            let line = format!(
+                "scenario --kind {kind} --policy grin --phases 3 \
+                 --completions 150 --warmup 20 --resolve every_phase"
+            );
+            let args =
+                Args::parse(line.split_whitespace().map(String::from)).unwrap();
+            run(&args).unwrap();
+        }
+        // Unknown kind is rejected.
+        let args = Args::parse(
+            "scenario --kind steady".split_whitespace().map(String::from),
+        )
+        .unwrap();
         assert!(run(&args).is_err());
     }
 

@@ -21,8 +21,10 @@ use crate::model::affinity::AffinityMatrix;
 use crate::model::energy::PowerScenario;
 use crate::policy::PolicyKind;
 use crate::sim::distribution::Distribution;
+use crate::sim::dynamic::{DynamicConfig, ResolveMode};
 use crate::sim::engine::SimConfig;
 use crate::sim::processor::Discipline;
+use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
 
 use super::json::Json;
 
@@ -119,6 +121,124 @@ impl ExperimentSpec {
     }
 }
 
+/// One fully specified non-stationary scenario experiment
+/// (`hetsched scenario --config <file>`).
+///
+/// JSON shape:
+///
+/// ```json
+/// {
+///   "mu": [[20, 15], [3, 8]],
+///   "policy": "grin",
+///   "scenario": {
+///     "kind": "slow_drift",
+///     "n": 20, "phases": 6, "completions": 4000, "warmup": 400,
+///     "low_eta": 0.2, "high_eta": 0.8,
+///     "burst_factor": 2.0,
+///     "drift_to": [0.4, 0.2, 5.0, 2.5],
+///     "resolve": "adaptive",
+///     "drift_threshold": 0.2, "check_every": 250
+///   },
+///   "distribution": "exp", "discipline": "ps", "seed": 7
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Baseline affinity matrix (phases rescale it).
+    pub mu: AffinityMatrix,
+    /// Policy to run.
+    pub policy: PolicyKind,
+    /// Which canned regime generated the schedule.
+    pub kind: ScenarioKind,
+    /// Generator knobs (kept for reporting/round-trips).
+    pub params: ScenarioParams,
+    /// The fully built dynamic run configuration.
+    pub dynamic: DynamicConfig,
+}
+
+impl ScenarioSpec {
+    /// Parse and validate from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+
+        let mu_rows: Vec<Vec<f64>> = j
+            .req("mu")?
+            .as_arr()?
+            .iter()
+            .map(|row| row.as_arr()?.iter().map(Json::as_f64).collect())
+            .collect::<Result<_>>()?;
+        let mu = AffinityMatrix::from_rows(&mu_rows)?;
+        let policy = PolicyKind::parse(j.req("policy")?.as_str()?)?;
+
+        let s = j.req("scenario")?;
+        let kind = ScenarioKind::parse(s.req("kind")?.as_str()?)?;
+        let mut params = ScenarioParams::default();
+        if let Some(v) = s.get("n") {
+            params.n = v.as_u64()? as u32;
+        }
+        if let Some(v) = s.get("phases") {
+            params.phases = v.as_u64()? as usize;
+        }
+        if let Some(v) = s.get("completions") {
+            params.completions = v.as_u64()?;
+        }
+        if let Some(v) = s.get("warmup") {
+            params.warmup = v.as_u64()?;
+        }
+        if let Some(v) = s.get("low_eta") {
+            params.low_eta = v.as_f64()?;
+        }
+        if let Some(v) = s.get("high_eta") {
+            params.high_eta = v.as_f64()?;
+        }
+        if let Some(v) = s.get("burst_factor") {
+            params.burst_factor = v.as_f64()?;
+        }
+        if let Some(v) = s.get("drift_to") {
+            params.drift_to =
+                v.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?;
+        }
+
+        let mut dynamic = DynamicConfig::new(scenario_phases(kind, &params)?);
+        // Scenario surfaces (JSON and `hetsched scenario` flags) default
+        // to the adaptive mode — the subsystem under study; the oracle
+        // and frozen modes are explicit opt-ins.
+        dynamic.resolve = ResolveMode::Adaptive;
+        if let Some(v) = s.get("resolve") {
+            dynamic.resolve = ResolveMode::parse(v.as_str()?)?;
+        }
+        if let Some(v) = s.get("drift_threshold") {
+            dynamic.drift.threshold = v.as_f64()?;
+        }
+        if let Some(v) = s.get("check_every") {
+            dynamic.drift.check_every = v.as_u64()?;
+        }
+        if let Some(v) = j.get("distribution") {
+            dynamic.dist = Distribution::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("discipline") {
+            dynamic.discipline = Discipline::parse(v.as_str()?)?;
+        }
+        if let Some(v) = j.get("seed") {
+            dynamic.seed = v.as_u64()?;
+        }
+
+        if mu.types() != 2 {
+            return Err(Error::Config(format!(
+                "canned scenarios are two-type; μ has {} task types",
+                mu.types()
+            )));
+        }
+        Ok(Self { mu, policy, kind, params, dynamic })
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&text)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +277,105 @@ mod tests {
         assert_eq!(s.sim.dist, Distribution::Exponential);
         assert_eq!(s.sim.discipline, Discipline::Ps);
         assert_eq!(s.sim.power, PowerScenario::Proportional);
+    }
+
+    #[test]
+    fn scenario_spec_parses_all_three_kinds() {
+        use crate::sim::processor::Discipline;
+        // Phase-shift: full knob coverage.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {
+                "kind": "phase_shift",
+                "n": 12, "phases": 4, "completions": 500, "warmup": 50,
+                "low_eta": 0.25, "high_eta": 0.75,
+                "resolve": "adaptive",
+                "drift_threshold": 0.3, "check_every": 100
+            },
+            "distribution": "uniform", "discipline": "fcfs", "seed": 42
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::PhaseShift);
+        assert_eq!(s.policy, PolicyKind::GrIn);
+        assert_eq!(s.params.n, 12);
+        assert_eq!(s.dynamic.phases.len(), 4);
+        assert_eq!(s.dynamic.resolve, ResolveMode::Adaptive);
+        assert_eq!(s.dynamic.drift.check_every, 100);
+        assert!((s.dynamic.drift.threshold - 0.3).abs() < 1e-12);
+        assert_eq!(s.dynamic.dist, Distribution::Uniform);
+        assert_eq!(s.dynamic.discipline, Discipline::Fcfs);
+        assert_eq!(s.dynamic.seed, 42);
+        // The parsed schedule equals the builder's output.
+        let want = scenario_phases(s.kind, &s.params).unwrap();
+        for (a, b) in s.dynamic.phases.iter().zip(&want) {
+            assert_eq!(a.populations, b.populations);
+            assert_eq!(a.completions, b.completions);
+        }
+
+        // Burst: population surge phases present.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "cab",
+            "scenario": {"kind": "burst", "phases": 3, "burst_factor": 3.0}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::Burst);
+        // No "resolve" key: the scenario surface defaults to adaptive,
+        // matching the `hetsched scenario` flag default.
+        assert_eq!(s.dynamic.resolve, ResolveMode::Adaptive);
+        let totals: Vec<u32> = s
+            .dynamic
+            .phases
+            .iter()
+            .map(|p| p.populations.iter().sum())
+            .collect();
+        assert_eq!(totals, vec![20, 20, 60]);
+
+        // Slow drift: custom drift target threads through.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "slow_drift", "phases": 2,
+                         "drift_to": [0.5, 1.0], "resolve": "static"}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::SlowDrift);
+        assert_eq!(s.dynamic.resolve, ResolveMode::Static);
+        assert_eq!(s.dynamic.phases[1].mu_scale, vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn scenario_spec_rejects_bad_documents() {
+        // Unknown kind.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "cab",
+                "scenario": {"kind": "steady"}}"#
+        )
+        .is_err());
+        // Unknown resolve mode.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "cab",
+                "scenario": {"kind": "burst", "resolve": "sometimes"}}"#
+        )
+        .is_err());
+        // Missing scenario block.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "cab"}"#
+        )
+        .is_err());
+        // Non-two-type matrix.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2],[3,3]], "policy": "grin",
+                "scenario": {"kind": "burst"}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::sim::rng::Rng;
 
 use super::batcher::{Batch, DynamicBatcher, FlushReason, Pending};
 use super::router::Router;
-use super::stats::LatencyHistogram;
+use super::stats::{LatencyHistogram, RateEstimator};
 
 /// NN row width of the `nn_small` artifact.
 pub const NN_WIDTH: usize = 256;
@@ -47,6 +47,14 @@ pub struct ServeConfig {
     /// Measured affinity matrix (class × device); defaults to Table-3
     /// general-symmetric when `None`.
     pub mu: Option<AffinityMatrix>,
+    /// Adaptive mode: estimate live service rates ([`RateEstimator`]),
+    /// detect drift from the matrix the routing target was solved for,
+    /// and re-solve/swap the target without stopping traffic.
+    pub adaptive: bool,
+    /// Completions between drift checks in adaptive mode.
+    pub resolve_check: u64,
+    /// Relative rate drift that triggers a re-solve.
+    pub drift_threshold: f64,
 }
 
 impl Default for ServeConfig {
@@ -60,6 +68,9 @@ impl Default for ServeConfig {
             total: 400,
             seed: 0xC0FFEE,
             mu: None,
+            adaptive: false,
+            resolve_check: 64,
+            drift_threshold: 0.25,
         }
     }
 }
@@ -83,6 +94,10 @@ pub struct ServeReport {
     pub batch_fill: f64,
     /// Flush-reason counts (full, deadline, drain).
     pub flushes: [u64; 3],
+    /// Adaptive re-solves performed (target swaps).
+    pub resolves: u64,
+    /// Final estimated affinity matrix μ̂ (adaptive mode).
+    pub mu_hat: Option<AffinityMatrix>,
 }
 
 enum Work {
@@ -97,6 +112,9 @@ struct Done {
     class: usize,
     device: usize,
     arrived: Instant,
+    /// Kernel execution seconds attributed to this request (batch time
+    /// split evenly across batched requests) — the estimator's signal.
+    service_s: f64,
 }
 
 /// The serving coordinator.
@@ -107,6 +125,9 @@ impl Coordinator {
     pub fn run(cfg: &ServeConfig) -> Result<ServeReport> {
         if cfg.devices < 1 || cfg.inflight == 0 || cfg.total == 0 {
             return Err(Error::Config("devices, inflight, total must be ≥ 1".into()));
+        }
+        if cfg.adaptive && cfg.resolve_check == 0 {
+            return Err(Error::Config("adaptive mode needs resolve_check ≥ 1".into()));
         }
         let mu = match &cfg.mu {
             Some(m) => m.clone(),
@@ -121,6 +142,8 @@ impl Coordinator {
             )));
         }
         let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        // Streaming μ̂ estimator, seeded with the configured prior.
+        let mut estimator = RateEstimator::new(&mu, 0.1, 64, 8)?;
         // Expected in-flight split drives the policy's target solve.
         let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
             .clamp(1, cfg.inflight - 1);
@@ -157,17 +180,29 @@ impl Coordinator {
                         while let Ok(work) = rx.recv() {
                             match work {
                                 Work::Sort { id, class, arrived } => {
+                                    let t0 = Instant::now();
                                     engine.sort_task("sort_small", &sort_in)?;
-                                    let _ = done.send(Done { id, class, device: d, arrived });
+                                    let service_s = t0.elapsed().as_secs_f64();
+                                    let _ = done.send(Done {
+                                        id,
+                                        class,
+                                        device: d,
+                                        arrived,
+                                        service_s,
+                                    });
                                 }
                                 Work::Nn(batch) => {
+                                    let t0 = Instant::now();
                                     engine.nn_task("nn_small", &batch.input, &w, &b)?;
+                                    let service_s = t0.elapsed().as_secs_f64()
+                                        / batch.requests.len().max(1) as f64;
                                     for r in batch.requests {
                                         let _ = done.send(Done {
                                             id: r.id,
                                             class: 1,
                                             device: d,
                                             arrived: r.arrived,
+                                            service_s,
                                         });
                                     }
                                 }
@@ -192,6 +227,7 @@ impl Coordinator {
         let mut flushes = [0u64; 3];
         let mut sort_latency = LatencyHistogram::new();
         let mut nn_latency = LatencyHistogram::new();
+        let mut resolves = 0u64;
 
         let submit_batch = |j: usize, batch: Batch,
                                 batches: &mut u64,
@@ -263,6 +299,9 @@ impl Coordinator {
             match done_rx.recv_timeout(wait.max(Duration::from_micros(100))) {
                 Ok(done) => {
                     router.complete(done.class, done.device)?;
+                    if cfg.adaptive {
+                        estimator.observe(done.class, done.device, done.service_s);
+                    }
                     let lat = done.arrived.elapsed().as_secs_f64();
                     if done.class == 0 {
                         sort_latency.record_s(lat);
@@ -270,6 +309,25 @@ impl Coordinator {
                         nn_latency.record_s(lat);
                     }
                     served += 1;
+                    // Adaptive re-solve: when the live μ̂ has drifted from
+                    // the matrix the current target was solved for,
+                    // re-run the policy solve against μ̂ and swap the
+                    // routing target in place.
+                    if cfg.adaptive
+                        && served % cfg.resolve_check == 0
+                        && estimator.drift(router.mu()) > cfg.drift_threshold
+                    {
+                        let mu_hat = estimator.mu_hat()?;
+                        let omega_hat: Vec<f64> =
+                            mu_hat.data().iter().map(|&m| 1.0 / m).collect();
+                        // μ̂ may be momentarily unsolvable for the
+                        // configured policy (e.g. CAB's Eq.-2 regime
+                        // check on a noisy estimate): keep the old
+                        // target and retry at the next check.
+                        if router.retarget(mu_hat, omega_hat).is_ok() {
+                            resolves += 1;
+                        }
+                    }
                     if issued < cfg.total {
                         issue(
                             &mut router, &mut batchers, &mut rng, &mut next_id,
@@ -309,6 +367,8 @@ impl Coordinator {
             batches,
             batch_fill: if batches > 0 { batch_fill_sum / batches as f64 } else { 0.0 },
             flushes,
+            resolves,
+            mu_hat: if cfg.adaptive { estimator.mu_hat().ok() } else { None },
         })
     }
 }

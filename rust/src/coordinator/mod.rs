@@ -19,4 +19,4 @@ pub mod stats;
 pub use batcher::{Batch, DynamicBatcher};
 pub use leader::{Coordinator, ServeConfig, ServeReport};
 pub use router::Router;
-pub use stats::LatencyHistogram;
+pub use stats::{LatencyHistogram, RateEstimator};

@@ -6,7 +6,7 @@
 //! updates state on completion callbacks — the same contract the
 //! simulator and the platform rig use, so any policy drops in unchanged.
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
 use crate::policy::{Policy, SystemView};
@@ -74,6 +74,34 @@ impl Router {
         self.state.dec(class, device)
     }
 
+    /// Swap the routing target to a freshly estimated affinity matrix
+    /// without stopping traffic: the policy re-solves (`prepare`) against
+    /// μ̂, the work estimator picks up the matching ω̂, and in-flight
+    /// requests keep draining under the live occupancy state.
+    pub fn retarget(&mut self, mu: AffinityMatrix, omega: Vec<f64>) -> Result<()> {
+        if mu.types() != self.mu.types() || mu.procs() != self.mu.procs() {
+            return Err(Error::Shape(format!(
+                "retarget matrix is {}×{}, router runs {}×{}",
+                mu.types(),
+                mu.procs(),
+                self.mu.types(),
+                self.mu.procs()
+            )));
+        }
+        if omega.len() != mu.types() * mu.procs() {
+            return Err(Error::Shape("retarget ω arity".into()));
+        }
+        self.policy.prepare(&mu, &self.populations)?;
+        self.mu = mu;
+        self.omega = omega;
+        Ok(())
+    }
+
+    /// The affinity matrix the current routing target was solved for.
+    pub fn mu(&self) -> &AffinityMatrix {
+        &self.mu
+    }
+
     /// Requests currently in flight.
     pub fn inflight(&self) -> u32 {
         self.state.total()
@@ -134,6 +162,30 @@ mod tests {
         assert_eq!(r.state().get(0, 0), 10);
         assert_eq!(r.state().get(1, 0), 9);
         assert_eq!(r.state().get(1, 1), 1);
+    }
+
+    #[test]
+    fn retarget_swaps_policy_target_mid_stream() {
+        // Start in the P2-biased regime, then retarget to the
+        // general-symmetric matrix: CAB flips from AF (N1, 1) to BF.
+        let mut r = router(PolicyKind::Cab);
+        for _ in 0..4 {
+            assert_eq!(r.route(0), 0); // AF sends class-0 to the CPU
+        }
+        let mu2 = workload::table3::general_symmetric();
+        let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
+        r.retarget(mu2, omega2).unwrap();
+        // BF target: class-1 deficit now sits on the GPU.
+        assert_eq!(r.route(1), 1);
+        assert!((r.mu().rate(0, 0) - 928.0).abs() < 1e-12);
+        // Shape mismatches are rejected.
+        let bad = crate::model::affinity::AffinityMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+        ])
+        .unwrap();
+        let omega_bad = vec![1.0; 6];
+        assert!(r.retarget(bad, omega_bad).is_err());
     }
 
     #[test]

@@ -1,7 +1,155 @@
-//! Serving statistics: lock-free-ish latency histogram + counters.
+//! Serving statistics: latency histogram + streaming service-rate
+//! estimation for the adaptive leader.
 //!
-//! Log-spaced buckets from 1µs to ~67s give <5% quantile error across the
-//! whole range — the standard serving-telemetry trade-off.
+//! * [`LatencyHistogram`] — log-spaced buckets from 1µs to ~67s give <5%
+//!   quantile error across the whole range, the standard
+//!   serving-telemetry trade-off.
+//! * [`RateEstimator`] — per-(class, device) service-time tracking:
+//!   an EWMA for fast reaction plus a bounded sliding window for a
+//!   noise-robust level estimate.  `mu_hat()` turns the estimates into a
+//!   live affinity matrix μ̂ = 1/ω̂ that the leader re-solves GrIn
+//!   against; `drift()` quantifies how far μ̂ has moved from the matrix
+//!   the current routing target was solved for (non-stationary
+//!   workloads: phase shifts, bursts, thermal throttling).
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+
+/// Bounded sliding window of the most recent samples (ring buffer).
+#[derive(Debug, Clone)]
+struct Window {
+    buf: Vec<f64>,
+    head: usize,
+    filled: usize,
+}
+
+impl Window {
+    fn new(capacity: usize) -> Self {
+        Self { buf: vec![0.0; capacity.max(1)], head: 0, filled: 0 }
+    }
+
+    fn push(&mut self, v: f64) {
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.buf.len();
+        self.filled = (self.filled + 1).min(self.buf.len());
+    }
+
+    fn mean(&self) -> Option<f64> {
+        if self.filled == 0 {
+            return None;
+        }
+        Some(self.buf[..self.filled].iter().sum::<f64>() / self.filled as f64)
+    }
+}
+
+/// Streaming per-(class, device) service-rate estimator.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    k: usize,
+    l: usize,
+    alpha: f64,
+    min_obs: u64,
+    /// Prior mean service time per cell (1/μ_prior), used until a cell
+    /// has seen `min_obs` samples.
+    prior_omega: Vec<f64>,
+    /// EWMA of observed service seconds per cell.
+    ewma: Vec<f64>,
+    /// Sliding window per cell.
+    windows: Vec<Window>,
+    counts: Vec<u64>,
+}
+
+impl RateEstimator {
+    /// Estimator seeded from the prior affinity matrix (the rates the
+    /// scheduler believes before any observation).
+    pub fn new(prior: &AffinityMatrix, alpha: f64, window: usize, min_obs: u64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&alpha) || alpha == 0.0 {
+            return Err(Error::Config(format!("EWMA alpha {alpha} outside (0, 1]")));
+        }
+        let (k, l) = (prior.types(), prior.procs());
+        let prior_omega: Vec<f64> = prior.data().iter().map(|&m| 1.0 / m).collect();
+        Ok(Self {
+            k,
+            l,
+            alpha,
+            min_obs: min_obs.max(1),
+            ewma: prior_omega.clone(),
+            prior_omega,
+            windows: (0..k * l).map(|_| Window::new(window)).collect(),
+            counts: vec![0; k * l],
+        })
+    }
+
+    /// Record one observed service time (seconds of pure execution, not
+    /// queueing) for a `class` task on `device`.
+    pub fn observe(&mut self, class: usize, device: usize, service_s: f64) {
+        if !(service_s.is_finite() && service_s > 0.0) {
+            return; // ignore clock glitches rather than poisoning μ̂
+        }
+        let c = class * self.l + device;
+        self.ewma[c] = (1.0 - self.alpha) * self.ewma[c] + self.alpha * service_s;
+        self.windows[c].push(service_s);
+        self.counts[c] += 1;
+    }
+
+    /// Total observations across all cells.
+    pub fn observations(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Observations for one cell.
+    pub fn count(&self, class: usize, device: usize) -> u64 {
+        self.counts[class * self.l + device]
+    }
+
+    /// Current service-time estimate ω̂ for a cell: the window mean once
+    /// the cell has `min_obs` samples (EWMA before that), prior when the
+    /// cell has never been observed.
+    pub fn omega_hat(&self, class: usize, device: usize) -> f64 {
+        let c = class * self.l + device;
+        if self.counts[c] == 0 {
+            return self.prior_omega[c];
+        }
+        if self.counts[c] >= self.min_obs {
+            if let Some(m) = self.windows[c].mean() {
+                return m;
+            }
+        }
+        self.ewma[c]
+    }
+
+    /// Current rate estimate μ̂ = 1/ω̂ for a cell.
+    pub fn rate_hat(&self, class: usize, device: usize) -> f64 {
+        1.0 / self.omega_hat(class, device)
+    }
+
+    /// The live affinity matrix μ̂.
+    pub fn mu_hat(&self) -> Result<AffinityMatrix> {
+        let rows: Vec<Vec<f64>> = (0..self.k)
+            .map(|i| (0..self.l).map(|j| self.rate_hat(i, j)).collect())
+            .collect();
+        AffinityMatrix::from_rows(&rows)
+    }
+
+    /// Maximum relative rate deviation of μ̂ from `reference`, over the
+    /// cells with at least `min_obs` observations (unobserved cells
+    /// cannot signal drift).
+    pub fn drift(&self, reference: &AffinityMatrix) -> f64 {
+        debug_assert_eq!(reference.types(), self.k);
+        debug_assert_eq!(reference.procs(), self.l);
+        let mut worst = 0.0f64;
+        for i in 0..self.k {
+            for j in 0..self.l {
+                if self.count(i, j) < self.min_obs {
+                    continue;
+                }
+                let rf = reference.rate(i, j);
+                worst = worst.max((self.rate_hat(i, j) - rf).abs() / rf);
+            }
+        }
+        worst
+    }
+}
 
 /// Log-bucketed latency histogram (microsecond resolution floor).
 #[derive(Debug, Clone)]
@@ -112,5 +260,52 @@ mod tests {
         let h = LatencyHistogram::new();
         assert_eq!(h.mean_s(), 0.0);
         assert_eq!(h.quantile_s(0.99), 0.0);
+    }
+
+    #[test]
+    fn estimator_starts_at_prior_and_converges_to_observations() {
+        let prior = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let mut e = RateEstimator::new(&prior, 0.2, 16, 4).unwrap();
+        // No observations: μ̂ = prior exactly.
+        assert!((e.rate_hat(0, 0) - 20.0).abs() < 1e-12);
+        assert!((e.mu_hat().unwrap().rate(1, 1) - 8.0).abs() < 1e-12);
+        assert_eq!(e.drift(&prior), 0.0);
+        // Feed a 4× slower reality on cell (0, 0): ω = 1/5 s.
+        for _ in 0..64 {
+            e.observe(0, 0, 0.2);
+        }
+        let r = e.rate_hat(0, 0);
+        assert!((r - 5.0).abs() < 0.2, "μ̂(0,0) = {r}");
+        // Unobserved cells stay at the prior.
+        assert!((e.rate_hat(0, 1) - 15.0).abs() < 1e-12);
+        // Drift vs the prior reflects the (0, 0) slowdown only.
+        let d = e.drift(&prior);
+        assert!(d > 0.7 && d < 0.8, "drift = {d}");
+        assert_eq!(e.observations(), 64);
+        assert_eq!(e.count(0, 0), 64);
+    }
+
+    #[test]
+    fn estimator_window_dominates_after_min_obs() {
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let mut e = RateEstimator::new(&prior, 0.01, 8, 8).unwrap();
+        // Slow EWMA (α = 0.01) but a window of 8 with min_obs 8: after a
+        // level shift, the window-mean estimate tracks the new level even
+        // though the EWMA lags.
+        for _ in 0..8 {
+            e.observe(1, 1, 0.5);
+        }
+        assert!((e.omega_hat(1, 1) - 0.5).abs() < 1e-12);
+        // Non-finite and non-positive samples are ignored.
+        e.observe(1, 1, f64::NAN);
+        e.observe(1, 1, -1.0);
+        assert_eq!(e.count(1, 1), 8);
+    }
+
+    #[test]
+    fn estimator_rejects_bad_alpha() {
+        let prior = AffinityMatrix::two_type(1.0, 1.0, 1.0, 1.0).unwrap();
+        assert!(RateEstimator::new(&prior, 0.0, 8, 1).is_err());
+        assert!(RateEstimator::new(&prior, 1.5, 8, 1).is_err());
     }
 }

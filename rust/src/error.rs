@@ -1,39 +1,60 @@
-//! Crate error type.
-
-use thiserror::Error;
+//! Crate error type (hand-rolled: no `thiserror` available offline).
 
 /// All errors produced by hetsched.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension / shape mismatch in model math.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Invalid configuration or CLI arguments.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Parse failure (JSON/config/CLI).
-    #[error("parse error: {0}")]
     Parse(String),
 
     /// Solver failed to converge or was given an infeasible problem.
-    #[error("solver error: {0}")]
     Solver(String),
 
-    /// Artifact missing / runtime failure around the PJRT layer.
-    #[error("runtime error: {0}")]
+    /// Artifact missing / runtime failure around the execution layer.
     Runtime(String),
 
-    /// Underlying XLA/PJRT error.
-    #[error("xla error: {0}")]
+    /// Underlying XLA/PJRT error (only produced with `--features pjrt`).
     Xla(String),
 
     /// I/O.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Solver(m) => write!(f, "solver error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -42,3 +63,19 @@ impl From<xla::Error> for Error {
 
 /// Crate result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_carry_context() {
+        assert!(Error::Shape("2x2".into()).to_string().contains("shape"));
+        assert!(Error::Config("bad".into()).to_string().contains("bad"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(io.source().is_some());
+        assert!(Error::Parse("x".into()).source().is_none());
+    }
+}

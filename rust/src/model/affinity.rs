@@ -163,6 +163,37 @@ impl AffinityMatrix {
     pub fn power_matrix(&self, coeff: f64, alpha: f64) -> Vec<f64> {
         self.mu.iter().map(|&m| coeff * m.powf(alpha)).collect()
     }
+
+    /// Rescaled matrix for non-stationary scenarios:
+    ///
+    /// * `scale.len() == procs()` — per-processor multipliers (DVFS /
+    ///   thermal throttling: a whole column speeds up or slows down);
+    /// * `scale.len() == types()·procs()` — per-cell multipliers
+    ///   (contention, cache effects: affinities themselves drift).
+    ///
+    /// All factors must be finite and > 0.
+    pub fn scaled(&self, scale: &[f64]) -> Result<AffinityMatrix> {
+        if scale.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+            return Err(Error::Shape("scale factors must be finite and > 0".into()));
+        }
+        let data: Vec<f64> = if scale.len() == self.l {
+            self.mu
+                .iter()
+                .enumerate()
+                .map(|(c, &m)| m * scale[c % self.l])
+                .collect()
+        } else if scale.len() == self.k * self.l {
+            self.mu.iter().zip(scale).map(|(&m, &s)| m * s).collect()
+        } else {
+            return Err(Error::Shape(format!(
+                "scale has {} factors; need {} (per-processor) or {} (per-cell)",
+                scale.len(),
+                self.l,
+                self.k * self.l
+            )));
+        };
+        Self::new(self.k, self.l, data)
+    }
 }
 
 /// The six system regimes of Table 1.
@@ -274,6 +305,26 @@ mod tests {
         assert_eq!(a.power_matrix(2.0, 0.0), vec![2.0; 4]);
         // Scenario 2: proportional power (α = 1).
         assert_eq!(a.power_matrix(1.0, 1.0), vec![20.0, 15.0, 3.0, 8.0]);
+    }
+
+    #[test]
+    fn scaled_supports_column_and_cell_factors() {
+        let a = m(20.0, 15.0, 3.0, 8.0);
+        // Column scaling: processor 0 throttled to half speed.
+        let col = a.scaled(&[0.5, 1.0]).unwrap();
+        assert_eq!(col.rate(0, 0), 10.0);
+        assert_eq!(col.rate(1, 0), 1.5);
+        assert_eq!(col.rate(0, 1), 15.0);
+        assert_eq!(col.rate(1, 1), 8.0);
+        // Cell scaling: arbitrary per-cell drift.
+        let cell = a.scaled(&[1.0, 2.0, 3.0, 0.5]).unwrap();
+        assert_eq!(cell.rate(0, 1), 30.0);
+        assert_eq!(cell.rate(1, 0), 9.0);
+        assert_eq!(cell.rate(1, 1), 4.0);
+        // Bad arities / factors rejected.
+        assert!(a.scaled(&[1.0, 2.0, 3.0]).is_err());
+        assert!(a.scaled(&[0.0, 1.0]).is_err());
+        assert!(a.scaled(&[f64::NAN, 1.0]).is_err());
     }
 
     #[test]

@@ -92,6 +92,107 @@ pub fn x_df_minus(mu: &AffinityMatrix, n: &StateMatrix, p: usize, j: usize) -> f
     (xj - mu.rate(p, j)) / (occ - 1.0)
 }
 
+/// Incremental X(S) evaluator: caches the per-processor numerator
+/// Σ_i μ_ij·N_ij and occupancy Σ_i N_ij so that
+///
+/// * `x()` is O(l) (re-derived from the cached column sums, so it never
+///   accumulates drift across moves),
+/// * the GrIn move deltas (Eqs. 34/36) are **O(1)** per probe instead of
+///   the O(k) column scan of [`x_df_plus`]/[`x_df_minus`],
+/// * applying a move updates two columns in O(1).
+///
+/// This is the hot path of GrIn's greedy loop (`benches/perf_hotpath.rs`
+/// times it against the full evaluation) and of the leader's on-line
+/// re-solves: one greedy step probes O(l²) moves per row, each now a
+/// constant-time arithmetic expression.
+#[derive(Debug, Clone)]
+pub struct IncrementalX {
+    /// Per-column Σ_i μ_ij·N_ij.
+    num: Vec<f64>,
+    /// Per-column occupancy Σ_i N_ij.
+    occ: Vec<u32>,
+}
+
+impl IncrementalX {
+    /// Build the caches from a full state (O(k·l), once).
+    pub fn new(mu: &AffinityMatrix, n: &StateMatrix) -> Self {
+        debug_assert_eq!(mu.types(), n.types());
+        debug_assert_eq!(mu.procs(), n.procs());
+        let l = mu.procs();
+        let mut num = vec![0.0f64; l];
+        let mut occ = vec![0u32; l];
+        for j in 0..l {
+            for i in 0..mu.types() {
+                let nij = n.get(i, j);
+                num[j] += mu.rate(i, j) * nij as f64;
+                occ[j] += nij;
+            }
+        }
+        Self { num, occ }
+    }
+
+    /// Cached per-processor throughput X_j (Eq. 26/27).
+    #[inline]
+    pub fn x_of_proc(&self, j: usize) -> f64 {
+        if self.occ[j] == 0 {
+            0.0
+        } else {
+            self.num[j] / self.occ[j] as f64
+        }
+    }
+
+    /// System throughput X_sys (Eq. 28), re-derived from the column
+    /// caches in O(l).
+    pub fn x(&self) -> f64 {
+        (0..self.num.len()).map(|j| self.x_of_proc(j)).sum()
+    }
+
+    /// Eq. 34 in O(1): ΔX of adding one p-type task to processor j.
+    #[inline]
+    pub fn delta_plus(&self, mu: &AffinityMatrix, p: usize, j: usize) -> f64 {
+        (mu.rate(p, j) - self.x_of_proc(j)) / (self.occ[j] as f64 + 1.0)
+    }
+
+    /// Eq. 36 in O(1): ΔX of removing one p-type task from processor j.
+    /// Defined only when the cell is occupied (caller-checked, as with
+    /// [`x_df_minus`]).
+    #[inline]
+    pub fn delta_minus(&self, mu: &AffinityMatrix, p: usize, j: usize) -> f64 {
+        debug_assert!(self.occ[j] > 0);
+        if self.occ[j] <= 1 {
+            return -mu.rate(p, j);
+        }
+        (self.x_of_proc(j) - mu.rate(p, j)) / (self.occ[j] as f64 - 1.0)
+    }
+
+    /// Apply a task arrival at (p, j) to the caches.
+    #[inline]
+    pub fn apply_inc(&mut self, mu: &AffinityMatrix, p: usize, j: usize) {
+        self.num[j] += mu.rate(p, j);
+        self.occ[j] += 1;
+    }
+
+    /// Apply a task departure from (p, j) to the caches.
+    #[inline]
+    pub fn apply_dec(&mut self, mu: &AffinityMatrix, p: usize, j: usize) {
+        debug_assert!(self.occ[j] > 0);
+        self.num[j] -= mu.rate(p, j);
+        self.occ[j] -= 1;
+        if self.occ[j] == 0 {
+            // Cancel accumulated rounding dust on emptied columns so the
+            // caches stay exact across arbitrarily long move sequences.
+            self.num[j] = 0.0;
+        }
+    }
+
+    /// Apply a GrIn move (one p-type task from `from` to `to`).
+    #[inline]
+    pub fn apply_move(&mut self, mu: &AffinityMatrix, p: usize, from: usize, to: usize) {
+        self.apply_dec(mu, p, from);
+        self.apply_inc(mu, p, to);
+    }
+}
+
 /// Closed-form maximum throughput for a classified two-type regime
 /// (Table 1 rows; Eqs. 16–18 and cases a.1–a.3).
 pub fn x_max_theoretical(
@@ -232,6 +333,60 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn incremental_matches_full_evaluation_across_moves() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0],
+            vec![1.0, 8.0, 3.0],
+            vec![5.0, 5.0, 9.0],
+        ])
+        .unwrap();
+        let mut s = StateMatrix::new(3, 3, vec![3, 1, 0, 2, 4, 1, 0, 2, 5]).unwrap();
+        let mut inc = IncrementalX::new(&mu, &s);
+        assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
+        // O(1) deltas equal the O(k) reference deltas on every cell.
+        for p in 0..3 {
+            for j in 0..3 {
+                let want = x_df_plus(&mu, &s, p, j);
+                assert!((inc.delta_plus(&mu, p, j) - want).abs() < 1e-12);
+                if s.get(p, j) > 0 {
+                    let want = x_df_minus(&mu, &s, p, j);
+                    assert!((inc.delta_minus(&mu, p, j) - want).abs() < 1e-12);
+                }
+            }
+        }
+        // A deterministic move walk: caches track the full recomputation.
+        let moves = [(0usize, 0usize, 1usize), (1, 1, 2), (2, 2, 0), (0, 0, 2), (1, 2, 0)];
+        for &(p, from, to) in &moves {
+            if s.get(p, from) == 0 {
+                continue;
+            }
+            let predicted = inc.delta_minus(&mu, p, from) + inc.delta_plus(&mu, p, to);
+            let before = inc.x();
+            s.move_task(p, from, to).unwrap();
+            inc.apply_move(&mu, p, from, to);
+            assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-9);
+            assert!((inc.x() - before - predicted).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_handles_emptying_and_refilling_columns() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let mut s = StateMatrix::new(2, 2, vec![1, 0, 0, 1]).unwrap();
+        let mut inc = IncrementalX::new(&mu, &s);
+        assert!((inc.x() - 28.0).abs() < 1e-12); // 20 + 8
+        // Empty column 0 entirely.
+        s.move_task(0, 0, 1).unwrap();
+        inc.apply_move(&mu, 0, 0, 1);
+        assert_eq!(inc.x_of_proc(0), 0.0);
+        assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
+        // Refill it.
+        s.move_task(1, 1, 0).unwrap();
+        inc.apply_move(&mu, 1, 1, 0);
+        assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
     }
 
     #[test]

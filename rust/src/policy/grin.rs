@@ -21,7 +21,7 @@ use super::{Policy, SystemView};
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
-use crate::model::throughput::{x_df_minus, x_df_plus, x_of_state};
+use crate::model::throughput::{x_df_minus, x_df_plus, x_of_state, IncrementalX};
 use crate::sim::rng::Rng;
 
 /// Outcome of a GrIn solve.
@@ -128,19 +128,56 @@ fn best_move_for_row(
     best
 }
 
+/// The best single move for `row` against the cached column sums:
+/// O(l²) constant-time probes instead of the O(l²·k) scans of
+/// [`best_move_for_row`] — the §Perf win of [`IncrementalX`].
+fn best_move_for_row_inc(
+    mu: &AffinityMatrix,
+    inc: &IncrementalX,
+    n: &StateMatrix,
+    row: usize,
+) -> Option<(usize, usize, f64)> {
+    let l = mu.procs();
+    let mut best: Option<(usize, usize, f64)> = None;
+    for from in 0..l {
+        if n.get(row, from) == 0 {
+            continue;
+        }
+        let dfm = inc.delta_minus(mu, row, from);
+        for to in 0..l {
+            if to == from {
+                continue;
+            }
+            // Columns are independent ⇒ the combined delta is exact.
+            let gain = dfm + inc.delta_plus(mu, row, to);
+            if best.map_or(true, |(_, _, g)| gain > g) {
+                best = Some((from, to, gain));
+            }
+        }
+    }
+    best
+}
+
 /// Algorithm 2: full GrIn solve.
+///
+/// The greedy loop runs against the [`IncrementalX`] caches, so each
+/// accepted move costs O(state-delta) — two column updates — and each
+/// probe is O(1); the solution is identical to evaluating Eqs. 34/36 in
+/// full (`tests/adaptive_e2e.rs` property-checks the equivalence).
 pub fn solve(mu: &AffinityMatrix, populations: &[u32]) -> Result<GrInSolution> {
     let mut n = initialize(mu, populations)?;
     let k = mu.types();
+    let mut inc = IncrementalX::new(mu, &n);
     let mut moves = 0usize;
     // Hard cap: each move strictly increases X_sys, but guard regardless.
     let cap = 64 + (populations.iter().sum::<u32>() as usize) * mu.procs() * k * 4;
     loop {
         let mut improved = false;
         for row in 0..k {
-            if let Some((from, to, gain)) = best_move_for_row(mu, &n, row) {
+            if let Some((from, to, gain)) = best_move_for_row_inc(mu, &inc, &n, row) {
                 if gain > GAIN_EPS {
                     n.move_task(row, from, to)?;
+                    inc.apply_move(mu, row, from, to);
                     moves += 1;
                     improved = true;
                 }
@@ -295,6 +332,34 @@ mod tests {
             let sol = solve(&mu, &pops).unwrap();
             sol.state.check_populations(&pops).unwrap();
             assert!(sol.throughput >= x_of_state(&mu, &init) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn incremental_move_selection_matches_full_scan() {
+        let mut rng = Rng::new(77);
+        for _ in 0..40 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(8) as u32).collect();
+            let n = initialize(&mu, &pops).unwrap();
+            let inc = IncrementalX::new(&mu, &n);
+            for row in 0..k {
+                let full = best_move_for_row(&mu, &n, row);
+                let fast = best_move_for_row_inc(&mu, &inc, &n, row);
+                match (full, fast) {
+                    (None, None) => {}
+                    (Some((f1, t1, g1)), Some((f2, t2, g2))) => {
+                        assert_eq!((f1, t1), (f2, t2), "row {row}");
+                        assert!((g1 - g2).abs() < 1e-12, "row {row}: {g1} vs {g2}");
+                    }
+                    other => panic!("selection mismatch: {other:?}"),
+                }
+            }
         }
     }
 

@@ -1,17 +1,20 @@
-//! PJRT execution engine: one compiled executable per artifact entry.
+//! Execution engine: one compiled executable per artifact entry.
 //!
-//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`.  Executables are compiled lazily on
-//! first use and cached for the lifetime of the engine (no retraces, no
-//! recompiles on the hot path).
+//! Two interchangeable backends sit behind the same [`Engine`] API:
 //!
-//! `xla::PjRtLoadedExecutable` is not `Sync`; the platform/coordinator
-//! layers therefore own one `Engine` per worker thread (engines share
-//! nothing and PJRT CPU clients are cheap).
-
-use std::cell::RefCell;
-use std::collections::HashMap;
+//! * **PJRT** (`--features pjrt`, requires a vendored `xla` crate):
+//!   mirrors /opt/xla-example/load_hlo — `PjRtClient::cpu()` →
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`, with executables compiled lazily and
+//!   cached for the engine's lifetime.
+//! * **Native** (default): bit-faithful Rust implementations of the five
+//!   shipped kernels (NN forward, sort network, Eq.-28 batch evaluator),
+//!   so the platform rig, the serving coordinator and CI run without a
+//!   Python/XLA toolchain.  When an artifact manifest is present its
+//!   shapes are enforced exactly as the PJRT path would.
+//!
+//! Executables/engines are per worker thread in either mode
+//! (`xla::PjRtLoadedExecutable` is not `Sync`; engines share nothing).
 
 use crate::error::{Error, Result};
 
@@ -35,18 +38,197 @@ pub struct SortTaskResult {
     pub checksum: f32,
 }
 
-/// The PJRT engine.
+/// Argument shapes and output arity of the shipped entries, used by the
+/// native backend when no manifest is on disk.
+fn native_meta(name: &str) -> Result<(Vec<Vec<usize>>, usize)> {
+    match name {
+        "nn2000" => Ok((vec![vec![32, 2048], vec![2048, 256], vec![256]], 2)),
+        "nn_small" => Ok((vec![vec![8, 256], vec![256, 256], vec![256]], 2)),
+        "sort_small" => Ok((vec![vec![16, 256]], 2)),
+        "sort_large" => Ok((vec![vec![16, 1024]], 2)),
+        "throughput_eval" => Ok((vec![vec![16, 16], vec![4096, 16, 16]], 2)),
+        other => Err(Error::Runtime(format!("no native kernel entry '{other}'"))),
+    }
+}
+
+/// The native kernel implementations (oracle-exact counterparts of the
+/// AOT-lowered JAX/Pallas entries).
+mod native {
+    use super::{Error, Result};
+
+    /// y = relu(x·w + b); returns `[y, [Σy]]`.
+    pub fn nn_forward(x: &[f32], w: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<Vec<f32>> {
+        let mut y = vec![0f32; m * n];
+        let mut checksum = 0f64;
+        for r in 0..m {
+            let row = &x[r * k..(r + 1) * k];
+            for c in 0..n {
+                let mut acc = b[c] as f64;
+                for (t, &xv) in row.iter().enumerate() {
+                    acc += xv as f64 * w[t * n + c] as f64;
+                }
+                if acc > 0.0 {
+                    y[r * n + c] = acc as f32;
+                    checksum += acc;
+                }
+            }
+        }
+        vec![y, vec![checksum as f32]]
+    }
+
+    /// Per-row ascending sort; returns `[sorted, [Σ input]]`.
+    pub fn sort_rows(rows: &[f32], r: usize, w: usize) -> Vec<Vec<f32>> {
+        let checksum: f64 = rows.iter().map(|&v| v as f64).sum();
+        let mut out = rows.to_vec();
+        for i in 0..r {
+            out[i * w..(i + 1) * w].sort_by(f32::total_cmp);
+        }
+        vec![out, vec![checksum as f32]]
+    }
+
+    /// Eq. 28 over a padded candidate batch; returns `[X per candidate,
+    /// [argmax index]]` (0/0 → 0, matching the Pallas kernel).
+    pub fn throughput_eval(
+        mu: &[f32],
+        batch: &[f32],
+        kp: usize,
+        lp: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let cell = kp * lp;
+        if batch.len() % cell != 0 {
+            return Err(Error::Runtime("batch not a multiple of the cell size".into()));
+        }
+        let bsz = batch.len() / cell;
+        let mut xs = vec![0f32; bsz];
+        let mut best = 0usize;
+        let mut best_x = f32::NEG_INFINITY;
+        for (bi, x_out) in xs.iter_mut().enumerate() {
+            let s = &batch[bi * cell..(bi + 1) * cell];
+            let mut x = 0f64;
+            for j in 0..lp {
+                let mut num = 0f64;
+                let mut den = 0f64;
+                for i in 0..kp {
+                    let nij = s[i * lp + j] as f64;
+                    num += mu[i * lp + j] as f64 * nij;
+                    den += nij;
+                }
+                if den > 0.0 {
+                    x += num / den;
+                }
+            }
+            *x_out = x as f32;
+            if *x_out > best_x {
+                best_x = *x_out;
+                best = bi;
+            }
+        }
+        Ok(vec![xs, vec![best as f32]])
+    }
+}
+
+/// The execution engine (native backend; see the module docs for the
+/// `--features pjrt` variant).
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    artifacts: Option<ArtifactDir>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    /// Create an engine over an artifact directory (shapes validated
+    /// against its manifest).
+    pub fn new(artifacts: ArtifactDir) -> Result<Self> {
+        Ok(Self { artifacts: Some(artifacts) })
+    }
+
+    /// Create over the default artifact location; the native backend
+    /// also runs manifest-free (built-in shapes for the shipped entries).
+    pub fn open_default() -> Result<Self> {
+        Ok(Self { artifacts: ArtifactDir::open_default().ok() })
+    }
+
+    /// Backend platform name.
+    pub fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    /// Entry metadata (manifest when present, built-in table otherwise).
+    pub fn entry(&self, name: &str) -> Result<EntryMeta> {
+        if let Some(art) = &self.artifacts {
+            return art.entry(name).cloned();
+        }
+        let (arg_shapes, out_arity) = native_meta(name)?;
+        let arg_dtypes = vec!["float32".to_string(); arg_shapes.len()];
+        Ok(EntryMeta {
+            name: name.to_string(),
+            path: std::path::PathBuf::from(format!("native:{name}")),
+            arg_shapes,
+            arg_dtypes,
+            out_arity,
+        })
+    }
+
+    /// Execute an entry with f32 inputs; returns the flattened f32
+    /// outputs of the result tuple.  Inputs are validated against the
+    /// manifest (or built-in) shapes.
+    pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let meta = self.entry(name)?;
+        if inputs.len() != meta.arg_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs, manifest expects {}",
+                inputs.len(),
+                meta.arg_shapes.len()
+            )));
+        }
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != meta.arg_elems(i) {
+                return Err(Error::Runtime(format!(
+                    "{name}: arg {i} has {} elements, manifest expects {:?}",
+                    data.len(),
+                    meta.arg_shapes[i]
+                )));
+            }
+        }
+        match name {
+            "nn2000" | "nn_small" => {
+                let (m, k) = (meta.arg_shapes[0][0], meta.arg_shapes[0][1]);
+                let n = meta.arg_shapes[2][0];
+                Ok(native::nn_forward(inputs[0], inputs[1], inputs[2], m, k, n))
+            }
+            "sort_small" | "sort_large" => {
+                let (r, w) = (meta.arg_shapes[0][0], meta.arg_shapes[0][1]);
+                Ok(native::sort_rows(inputs[0], r, w))
+            }
+            "throughput_eval" => {
+                let (kp, lp) = (meta.arg_shapes[0][0], meta.arg_shapes[0][1]);
+                native::throughput_eval(inputs[0], inputs[1], kp, lp)
+            }
+            other => Err(Error::Runtime(format!(
+                "no native implementation for entry '{other}'"
+            ))),
+        }
+    }
+}
+
+/// The PJRT execution engine.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts: ArtifactDir,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: std::cell::RefCell<std::collections::HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Create a CPU engine over an artifact directory.
     pub fn new(artifacts: ArtifactDir) -> Result<Self> {
         let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, artifacts, cache: RefCell::new(HashMap::new()) })
+        Ok(Self {
+            client,
+            artifacts,
+            cache: std::cell::RefCell::new(std::collections::HashMap::new()),
+        })
     }
 
     /// Create over the default artifact location.
@@ -77,10 +259,8 @@ impl Engine {
         Ok(())
     }
 
-    /// Execute an entry with f32 inputs; returns the flattened f32 outputs
-    /// of the result tuple (non-f32 leaves are skipped by `want` index).
-    ///
-    /// Inputs are validated against the manifest shapes.
+    /// Execute an entry with f32 inputs; returns the flattened f32
+    /// outputs of the result tuple.
     pub fn run_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         let meta = self.artifacts.entry(name)?;
         if inputs.len() != meta.arg_shapes.len() {
@@ -130,7 +310,9 @@ impl Engine {
         }
         Ok(outs)
     }
+}
 
+impl Engine {
     /// Run the NN workload entry (`nn2000` / `nn_small`).
     pub fn nn_task(&self, entry: &str, x: &[f32], w: &[f32], b: &[f32]) -> Result<NnTaskResult> {
         let outs = self.run_f32(entry, &[x, w, b])?;
@@ -147,10 +329,11 @@ impl Engine {
     }
 
     /// Evaluate the Eq.-28 objective for a padded candidate batch via the
-    /// `throughput_eval` artifact: returns X_sys per candidate.
+    /// `throughput_eval` entry: returns X_sys per candidate.
     ///
     /// `mu_padded` is `K_PAD×L_PAD` row-major, `batch` is
-    /// `B×K_PAD×L_PAD`; B must match the artifact's baked batch size.
+    /// `B×K_PAD×L_PAD`; B must match the entry's baked batch size when a
+    /// manifest is enforced.
     pub fn throughput_batch(&self, mu_padded: &[f32], batch: &[f32]) -> Result<Vec<f32>> {
         let outs = self.run_f32("throughput_eval", &[mu_padded, batch])?;
         Ok(outs.into_iter().next().expect("arity checked"))
@@ -159,23 +342,11 @@ impl Engine {
 
 #[cfg(test)]
 mod tests {
-    //! Engine tests need built artifacts; they self-skip when
-    //! `make artifacts` has not run (CI runs them via `make test`).
     use super::*;
-
-    fn engine() -> Option<Engine> {
-        match ArtifactDir::open_default() {
-            Ok(a) => Some(Engine::new(a).expect("pjrt cpu client")),
-            Err(_) => {
-                eprintln!("skipping: artifacts not built");
-                None
-            }
-        }
-    }
 
     #[test]
     fn nn_small_executes_and_matches_oracle() {
-        let Some(eng) = engine() else { return };
+        let eng = Engine::open_default().expect("native engine always opens");
         // x = ones(8,256), w = I(256)*0.5, b = 0.25: y = relu(0.5+0.25).
         let x = vec![1.0f32; 8 * 256];
         let mut w = vec![0.0f32; 256 * 256];
@@ -191,7 +362,7 @@ mod tests {
 
     #[test]
     fn sort_small_sorts() {
-        let Some(eng) = engine() else { return };
+        let eng = Engine::open_default().unwrap();
         let mut rows = vec![0.0f32; 16 * 256];
         // Descending input per row.
         for r in 0..16 {
@@ -210,7 +381,7 @@ mod tests {
 
     #[test]
     fn throughput_eval_matches_rust_objective() {
-        let Some(eng) = engine() else { return };
+        let eng = Engine::open_default().unwrap();
         use crate::model::affinity::AffinityMatrix;
         use crate::model::state::StateMatrix;
         use crate::model::throughput::x_of_state;
@@ -240,7 +411,7 @@ mod tests {
             let want = x_of_state(&mu, s) as f32;
             assert!(
                 (xs[i] - want).abs() < 1e-3 * want.max(1.0),
-                "candidate {i}: pjrt {} vs rust {want}",
+                "candidate {i}: engine {} vs rust {want}",
                 xs[i]
             );
         }
@@ -250,7 +421,7 @@ mod tests {
 
     #[test]
     fn input_validation() {
-        let Some(eng) = engine() else { return };
+        let eng = Engine::open_default().unwrap();
         assert!(eng.run_f32("nn_small", &[&[0.0]]).is_err()); // arity
         let bad = vec![0.0f32; 7];
         assert!(eng.run_f32("sort_small", &[&bad]).is_err()); // shape

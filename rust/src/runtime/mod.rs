@@ -1,15 +1,18 @@
-//! PJRT runtime: load and execute the AOT-lowered JAX/Pallas artifacts.
+//! Kernel runtime: execute the workload kernels behind a uniform
+//! [`Engine`] API.
 //!
-//! The compile path (`python/compile/aot.py`, run once by `make
-//! artifacts`) lowers every L2 entry point to HLO *text*; this module
-//! loads the text with `HloModuleProto::from_text_file`, compiles it on
-//! the PJRT CPU client and keeps one cached executable per entry.  The L3
-//! hot paths (platform workers, the serving coordinator, the batched
-//! exhaustive solver) call through [`Engine`] — Python never runs at
-//! request time.
+//! With `--features pjrt` (requires a vendored `xla` crate) the engine
+//! loads the AOT-lowered JAX/Pallas artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`): HLO text →
+//! `HloModuleProto::from_text_file` → PJRT CPU client, one cached
+//! executable per entry.  The default build executes oracle-exact native
+//! Rust implementations of the same five entries instead, so the L3 hot
+//! paths (platform workers, the serving coordinator, the batched
+//! exhaustive solver) run — and CI passes — without a Python/XLA
+//! toolchain.  Python never runs at request time in either mode.
 //!
 //! * [`artifacts`] — manifest parsing + artifact path resolution.
-//! * [`engine`] — client, executable cache and typed entry points.
+//! * [`engine`] — backends, executable cache and typed entry points.
 
 pub mod artifacts;
 pub mod engine;

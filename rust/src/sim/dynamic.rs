@@ -1,18 +1,31 @@
-//! Piece-wise closed systems (§3.1) with on-line policy re-solve (§4.1).
+//! Piece-wise closed systems (§3.1) with on-line policy re-solve (§4.1),
+//! extended to non-stationary workloads.
 //!
 //! The paper's closed-system assumption "can be relaxed to include
 //! piece-wise closed systems … applications are not launched and
 //! terminated very frequently", and GrIn is motivated as fast enough to
 //! re-solve "on the fly … when the number of tasks changes".  This
-//! engine implements exactly that: the run is a sequence of *phases*,
-//! each with its own per-type populations; at every phase boundary
-//! programs are launched or retired and the policy's `prepare` runs
-//! again (CAB re-classifies, GrIn/Opt re-solve their target state).
+//! engine implements exactly that, plus the serving-reality extensions
+//! the ROADMAP asks for:
+//!
+//! * a run is a sequence of *phases*, each with its own per-type
+//!   populations, an optional task-size distribution override, and an
+//!   optional processing-rate rescale (`mu_scale`: DVFS/thermal
+//!   throttling or per-cell affinity drift);
+//! * three [`ResolveMode`]s compare scheduling regimes end-to-end:
+//!   **Static** (solve once on the initial matrix, never again),
+//!   **EveryPhase** (oracle re-solve with the true per-phase rates) and
+//!   **Adaptive** (a [`RateEstimator`] learns μ̂ from observed service
+//!   times and GrIn/CAB re-solve when drift exceeds a threshold — no
+//!   oracle knowledge).
 //!
 //! Retirement is graceful: a surplus program finishes its in-flight task
 //! and simply does not re-issue — no task is ever killed, matching how
-//! real programs terminate.
+//! real programs terminate.  Tasks in flight across a rate change keep
+//! the rate they started with (a real frequency switch drains in-flight
+//! work the same way).
 
+use crate::coordinator::stats::RateEstimator;
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
@@ -33,6 +46,91 @@ pub struct Phase {
     pub completions: u64,
     /// Completions discarded at the start of the phase.
     pub warmup: u64,
+    /// Processing-rate multipliers for this phase: empty = no change,
+    /// `procs()` factors = per-processor (throttling), `types()·procs()`
+    /// factors = per-cell (affinity drift).  See
+    /// [`AffinityMatrix::scaled`].
+    pub mu_scale: Vec<f64>,
+    /// Task-size distribution override for this phase (burst regimes).
+    pub dist: Option<Distribution>,
+}
+
+impl Phase {
+    /// A stationary phase (no rate change, run-level distribution).
+    pub fn new(populations: Vec<u32>, warmup: u64, completions: u64) -> Self {
+        Self { populations, completions, warmup, mu_scale: Vec::new(), dist: None }
+    }
+
+    /// Builder: attach a rate rescale.
+    pub fn with_mu_scale(mut self, scale: Vec<f64>) -> Self {
+        self.mu_scale = scale;
+        self
+    }
+
+    /// Builder: attach a distribution override.
+    pub fn with_dist(mut self, dist: Distribution) -> Self {
+        self.dist = Some(dist);
+        self
+    }
+}
+
+/// When does the policy re-solve its target?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolveMode {
+    /// Solve once against the initial matrix and populations; never
+    /// again (the frozen baseline).
+    Static,
+    /// Re-solve at every phase boundary with the *true* per-phase rates
+    /// (oracle knowledge; the paper's piece-wise closed reading).
+    EveryPhase,
+    /// Estimate μ̂ on line from observed service times and re-solve when
+    /// drift exceeds [`DriftConfig::threshold`] (plus at population
+    /// changes, which a real scheduler observes directly).
+    Adaptive,
+}
+
+impl ResolveMode {
+    /// Parse a CLI/config name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "static" => Ok(ResolveMode::Static),
+            "phase" | "every_phase" => Ok(ResolveMode::EveryPhase),
+            "adaptive" => Ok(ResolveMode::Adaptive),
+            other => Err(Error::Parse(format!(
+                "unknown resolve mode '{other}' (static|every_phase|adaptive)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ResolveMode::Static => "static",
+            ResolveMode::EveryPhase => "every_phase",
+            ResolveMode::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Adaptive-mode knobs (estimator + drift detector).
+#[derive(Debug, Clone)]
+pub struct DriftConfig {
+    /// Relative rate deviation that triggers a re-solve.
+    pub threshold: f64,
+    /// Completions between drift checks.
+    pub check_every: u64,
+    /// Estimator EWMA coefficient.
+    pub ewma_alpha: f64,
+    /// Estimator sliding-window length.
+    pub window: usize,
+    /// Observations before a cell's estimate is trusted.
+    pub min_obs: u64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        Self { threshold: 0.2, check_every: 250, ewma_alpha: 0.05, window: 64, min_obs: 8 }
+    }
 }
 
 /// Configuration of a dynamic run.
@@ -42,18 +140,78 @@ pub struct DynamicConfig {
     pub phases: Vec<Phase>,
     /// Service discipline.
     pub discipline: Discipline,
-    /// Task-size distribution.
+    /// Task-size distribution (phases may override).
     pub dist: Distribution,
     /// Seed.
     pub seed: u64,
+    /// Re-solve regime.
+    pub resolve: ResolveMode,
+    /// Adaptive-mode knobs.
+    pub drift: DriftConfig,
 }
 
-/// Per-phase results of a dynamic run.
+impl DynamicConfig {
+    /// Defaults: PS discipline, exponential sizes, oracle per-phase
+    /// re-solve (the original piece-wise closed behavior).
+    pub fn new(phases: Vec<Phase>) -> Self {
+        Self {
+            phases,
+            discipline: Discipline::Ps,
+            dist: Distribution::Exponential,
+            seed: 1,
+            resolve: ResolveMode::EveryPhase,
+            drift: DriftConfig::default(),
+        }
+    }
+}
+
+/// Outcome of a dynamic run.
+#[derive(Debug, Clone)]
+pub struct DynamicReport {
+    /// Per-phase measurements.
+    pub phases: Vec<SimResult>,
+    /// Re-solves performed (EveryPhase counts phase boundaries after the
+    /// first; Adaptive counts drift-triggered target swaps).
+    pub resolves: u64,
+}
+
+impl DynamicReport {
+    /// Completion-weighted mean throughput across phases (total measured
+    /// completions / total measured time).
+    pub fn mean_throughput(&self) -> f64 {
+        let mut completed = 0u64;
+        let mut time = 0.0f64;
+        for r in &self.phases {
+            if r.throughput > 0.0 {
+                completed += r.completed;
+                time += r.completed as f64 / r.throughput;
+            }
+        }
+        if time > 0.0 {
+            completed as f64 / time
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-phase results of a dynamic run (thin wrapper over
+/// [`run_dynamic_report`] for callers that only need the metrics).
 pub fn run_dynamic(
     mu: &AffinityMatrix,
     cfg: &DynamicConfig,
     policy: &mut dyn Policy,
 ) -> Result<Vec<SimResult>> {
+    run_dynamic_report(mu, cfg, policy).map(|r| r.phases)
+}
+
+/// Run the full dynamic schedule and report per-phase metrics plus the
+/// re-solve count.
+pub fn run_dynamic_report(
+    mu: &AffinityMatrix,
+    cfg: &DynamicConfig,
+    policy: &mut dyn Policy,
+) -> Result<DynamicReport> {
     let (k, l) = (mu.types(), mu.procs());
     if cfg.phases.is_empty() {
         return Err(Error::Config("at least one phase required".into()));
@@ -76,6 +234,26 @@ pub fn run_dynamic(
     let mut now = 0.0f64;
     let mut next_id = 0u64;
 
+    // What the scheduler believes the rates are (drives the policy and
+    // the SystemView); the per-phase `actual` drives the physics.
+    let mut believed = mu.clone();
+    let mut estimator = RateEstimator::new(
+        mu,
+        cfg.drift.ewma_alpha,
+        cfg.drift.window,
+        cfg.drift.min_obs,
+    )?;
+    let mut resolves = 0u64;
+    let mut since_check = 0u64;
+    let adaptive = cfg.resolve == ResolveMode::Adaptive;
+    // (task id, rate it was pushed at) for the ≤N in-flight tasks — so
+    // the estimator observes the service time the task really
+    // experienced, even when it straddles a phase boundary's rate
+    // change.  Only the estimator reads it, so non-adaptive runs skip
+    // the bookkeeping; entries are reclaimed at completion, keeping it
+    // O(in-flight), not O(completions).
+    let mut inflight_rates: Vec<(u64, f64)> = Vec::new();
+
     // Program table: alive[i] = ids of active programs per type.
     let mut programs: Vec<Program> = Vec::new();
     let mut retiring: Vec<bool> = Vec::new();
@@ -83,9 +261,35 @@ pub fn run_dynamic(
 
     let mut results = Vec::with_capacity(cfg.phases.len());
 
-    for (_phase_idx, phase) in cfg.phases.iter().enumerate() {
-        // --- phase boundary: adjust populations, re-prepare the policy ---
-        policy.prepare(mu, &phase.populations)?;
+    for (phase_idx, phase) in cfg.phases.iter().enumerate() {
+        // --- phase boundary: rates, populations, policy re-solve ---
+        let actual = if phase.mu_scale.is_empty() {
+            mu.clone()
+        } else {
+            mu.scaled(&phase.mu_scale)?
+        };
+        let dist = phase.dist.unwrap_or(cfg.dist);
+        match cfg.resolve {
+            ResolveMode::Static => {
+                if phase_idx == 0 {
+                    policy.prepare(&believed, &phase.populations)?;
+                }
+            }
+            ResolveMode::EveryPhase => {
+                believed = actual.clone();
+                policy.prepare(&believed, &phase.populations)?;
+                if phase_idx > 0 {
+                    resolves += 1;
+                }
+            }
+            ResolveMode::Adaptive => {
+                // Population changes are directly observable (programs
+                // launch/retire through the scheduler), so the policy
+                // re-solves for them — but only against the *believed*
+                // rates, never the oracle's.
+                policy.prepare(&believed, &phase.populations)?;
+            }
+        }
         for ttype in 0..k {
             let want = phase.populations[ttype] as usize;
             let have = alive_by_type[ttype].len();
@@ -96,7 +300,7 @@ pub fn run_dynamic(
                     retiring.push(false);
                     alive_by_type[ttype].push(pid);
                     // Launch its first task now.
-                    let size = cfg.dist.sample(&mut rng);
+                    let size = dist.sample(&mut rng);
                     let task = programs[pid].emit(next_id, now, size);
                     next_id += 1;
                     if needs_work {
@@ -105,14 +309,18 @@ pub fn run_dynamic(
                         }
                     }
                     let view = SystemView {
-                        mu,
+                        mu: &believed,
                         state: &state,
                         work: &work,
                         populations: &phase.populations,
                     };
                     let j = policy.dispatch(ttype, &view, &mut rng);
                     procs[j].advance(now);
-                    procs[j].push(task, mu.rate(ttype, j), now);
+                    let rate = actual.rate(ttype, j);
+                    if adaptive {
+                        inflight_rates.push((task.id, rate));
+                    }
+                    procs[j].push(task, rate, now);
                     state.inc(ttype, j);
                 }
             } else if want < have {
@@ -148,13 +356,38 @@ pub fn run_dynamic(
             if measuring {
                 metrics.record(now, now - done.arrive, 0.0, done.ttype, j);
             }
+            // The estimator sees what a real system would measure: the
+            // task's execution time at the rate it was actually pushed
+            // with (tasks straddling a rate change keep their old rate).
+            if adaptive {
+                let pos = inflight_rates
+                    .iter()
+                    .position(|&(id, _)| id == done.id)
+                    .expect("completed task has a recorded in-flight rate");
+                let (_, rate) = inflight_rates.swap_remove(pos);
+                estimator.observe(done.ttype, j, done.size / rate);
+                since_check += 1;
+            }
+            if adaptive && since_check >= cfg.drift.check_every {
+                since_check = 0;
+                if estimator.drift(&believed) > cfg.drift.threshold {
+                    let mu_hat = estimator.mu_hat()?;
+                    // A noisy μ̂ can be momentarily unsolvable (CAB's
+                    // Eq.-2 regime check): keep the old target and retry
+                    // at the next check.
+                    if policy.prepare(&mu_hat, &phase.populations).is_ok() {
+                        believed = mu_hat;
+                        resolves += 1;
+                    }
+                }
+            }
             let pid = done.program;
             if retiring[pid] {
                 // Graceful exit: no re-issue.
                 continue;
             }
             let ttype = programs[pid].ttype;
-            let size = cfg.dist.sample(&mut rng);
+            let size = dist.sample(&mut rng);
             let task = programs[pid].emit(next_id, now, size);
             next_id += 1;
             if needs_work {
@@ -163,21 +396,25 @@ pub fn run_dynamic(
                 }
             }
             let view = SystemView {
-                mu,
+                mu: &believed,
                 state: &state,
                 work: &work,
                 populations: &phase.populations,
             };
             let dest = policy.dispatch(ttype, &view, &mut rng);
             procs[dest].advance(now);
-            procs[dest].push(task, mu.rate(ttype, dest), now);
+            let rate = actual.rate(ttype, dest);
+            if adaptive {
+                inflight_rates.push((task.id, rate));
+            }
+            procs[dest].push(task, rate, now);
             state.inc(ttype, dest);
         }
         results.push(metrics.finalize(phase.populations.iter().sum()));
         // Retired programs that still hold an in-flight task will drain
         // during the next phase; the state matrix tracks them naturally.
     }
-    Ok(results)
+    Ok(DynamicReport { phases: results, resolves })
 }
 
 #[cfg(test)]
@@ -190,9 +427,9 @@ mod tests {
 
     fn phases() -> Vec<Phase> {
         vec![
-            Phase { populations: vec![10, 10], warmup: 500, completions: 5_000 },
-            Phase { populations: vec![2, 18], warmup: 500, completions: 5_000 },
-            Phase { populations: vec![15, 5], warmup: 500, completions: 5_000 },
+            Phase::new(vec![10, 10], 500, 5_000),
+            Phase::new(vec![2, 18], 500, 5_000),
+            Phase::new(vec![15, 5], 500, 5_000),
         ]
     }
 
@@ -201,12 +438,8 @@ mod tests {
         // Piece-wise closed: after each population change CAB re-solves
         // and the per-phase throughput matches the per-phase Eq. 16.
         let mu = workload::paper_two_type_mu();
-        let cfg = DynamicConfig {
-            phases: phases(),
-            discipline: Discipline::Ps,
-            dist: Distribution::Exponential,
-            seed: 9,
-        };
+        let mut cfg = DynamicConfig::new(phases());
+        cfg.seed = 9;
         let mut p = PolicyKind::Cab.build();
         let rs = run_dynamic(&mu, &cfg, p.as_mut()).unwrap();
         assert_eq!(rs.len(), 3);
@@ -225,16 +458,14 @@ mod tests {
     #[test]
     fn growing_and_shrinking_preserves_task_conservation() {
         let mu = workload::paper_two_type_mu();
-        let cfg = DynamicConfig {
-            phases: vec![
-                Phase { populations: vec![3, 3], warmup: 100, completions: 1_000 },
-                Phase { populations: vec![8, 1], warmup: 100, completions: 1_000 },
-                Phase { populations: vec![1, 8], warmup: 100, completions: 1_000 },
-            ],
-            discipline: Discipline::Fcfs,
-            dist: Distribution::Uniform,
-            seed: 5,
-        };
+        let mut cfg = DynamicConfig::new(vec![
+            Phase::new(vec![3, 3], 100, 1_000),
+            Phase::new(vec![8, 1], 100, 1_000),
+            Phase::new(vec![1, 8], 100, 1_000),
+        ]);
+        cfg.discipline = Discipline::Fcfs;
+        cfg.dist = Distribution::Uniform;
+        cfg.seed = 5;
         for kind in [PolicyKind::Cab, PolicyKind::GrIn, PolicyKind::Jsq] {
             let mut p = kind.build();
             let rs = run_dynamic(&mu, &cfg, p.as_mut()).unwrap();
@@ -255,20 +486,75 @@ mod tests {
     #[test]
     fn rejects_invalid_schedules() {
         let mu = workload::paper_two_type_mu();
-        let bad = DynamicConfig {
-            phases: vec![],
-            discipline: Discipline::Ps,
-            dist: Distribution::Constant,
-            seed: 1,
-        };
         let mut p = PolicyKind::Cab.build();
+        let bad = DynamicConfig::new(vec![]);
         assert!(run_dynamic(&mu, &bad, p.as_mut()).is_err());
-        let bad = DynamicConfig {
-            phases: vec![Phase { populations: vec![0, 0], warmup: 0, completions: 1 }],
-            discipline: Discipline::Ps,
-            dist: Distribution::Constant,
-            seed: 1,
+        let bad = DynamicConfig::new(vec![Phase::new(vec![0, 0], 0, 1)]);
+        assert!(run_dynamic(&mu, &bad, p.as_mut()).is_err());
+        // Bad mu_scale arity surfaces at the phase boundary.
+        let bad = DynamicConfig::new(vec![
+            Phase::new(vec![2, 2], 0, 10).with_mu_scale(vec![1.0, 2.0, 3.0]),
+        ]);
+        assert!(run_dynamic(&mu, &bad, p.as_mut()).is_err());
+    }
+
+    #[test]
+    fn resolve_mode_parsing_round_trips() {
+        for m in [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive] {
+            assert_eq!(ResolveMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(ResolveMode::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn mu_scale_changes_phase_physics() {
+        // Same schedule, but the second phase throttles processor 0 to
+        // 10%: the oracle re-solver's measured throughput must drop by
+        // roughly the optimal-throughput ratio.
+        let mu = workload::paper_two_type_mu();
+        let mk = |scale: Vec<f64>| {
+            let mut cfg = DynamicConfig::new(vec![
+                Phase::new(vec![10, 10], 300, 4_000),
+                Phase::new(vec![10, 10], 300, 4_000).with_mu_scale(scale),
+            ]);
+            cfg.seed = 21;
+            cfg
         };
-        assert!(run_dynamic(&mu, &bad, p.as_mut()).is_err());
+        let mut p = PolicyKind::GrIn.build();
+        let flat = run_dynamic(&mu, &mk(vec![1.0, 1.0]), p.as_mut()).unwrap();
+        let mut p = PolicyKind::GrIn.build();
+        let throttled = run_dynamic(&mu, &mk(vec![0.1, 1.0]), p.as_mut()).unwrap();
+        // Unthrottled phases agree; throttled phase is clearly slower.
+        let rel = (flat[0].throughput - throttled[0].throughput).abs() / flat[0].throughput;
+        assert!(rel < 0.05, "phase-0 runs should agree, rel {rel}");
+        assert!(
+            throttled[1].throughput < flat[1].throughput * 0.8,
+            "throttling had no effect: {} vs {}",
+            throttled[1].throughput,
+            flat[1].throughput
+        );
+    }
+
+    #[test]
+    fn adaptive_matches_oracle_on_stationary_workload() {
+        // On a stationary workload the adaptive mode must cost nothing:
+        // even if estimator noise triggers the odd re-solve, μ̂ ≈ μ so
+        // the re-solved target coincides with the optimum and measured
+        // throughput stays at the Eq.-16 theory level.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 300, 6_000)]);
+        cfg.resolve = ResolveMode::Adaptive;
+        cfg.drift.threshold = 0.5; // generous vs sampling noise
+        cfg.seed = 33;
+        let mut p = PolicyKind::GrIn.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(report.phases.len(), 1);
+        let theory = x_max_theoretical(&mu, Regime::P1Biased, 10, 10);
+        let err = (report.phases[0].throughput - theory).abs() / theory;
+        assert!(err < 0.08, "adaptive X {} vs theory {theory}", report.phases[0].throughput);
+        // Drift checks ran, and the target did not thrash on every one.
+        let checks = 6_300 / cfg.drift.check_every;
+        assert!(report.resolves < checks, "{} resolves", report.resolves);
+        assert!(report.mean_throughput() > 0.0);
     }
 }

@@ -1,14 +1,20 @@
-//! Scenario builders for the paper's sweeps.
+//! Scenario builders for the paper's sweeps and for the non-stationary
+//! extensions.
 //!
 //! * η-sweeps of the two-type system (Figs. 4–8, 15–16): N = 20 programs,
 //!   N1 = η·N of type 1.
 //! * random k×l systems (Figs. 9–14): μ entries uniform, random
 //!   populations — the paper randomizes both "to show the generality of
 //!   GrIn for widely varying task affinities".
+//! * non-stationary schedules ([`ScenarioKind`]): phase-shift, burst and
+//!   slow-drift regimes for the adaptive-scheduling experiments
+//!   (`hetsched scenario`, `tests/adaptive_e2e.rs`).
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 
+use super::distribution::Distribution;
+use super::dynamic::Phase;
 use super::rng::Rng;
 
 /// The paper's η grid: 0.1, 0.2, …, 0.9 (§5).
@@ -56,6 +62,164 @@ pub fn random_populations(rng: &mut Rng, k: usize, max_per_type: u32) -> Vec<u32
     (0..k).map(|_| 1 + rng.below(max_per_type as u64) as u32).collect()
 }
 
+/// The three canned non-stationary regimes for the two-type system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioKind {
+    /// The population mix flips between a low-η and a high-η phase —
+    /// abrupt workload composition changes.
+    PhaseShift,
+    /// Periodic load surges: every third phase multiplies the population
+    /// and switches to heavy-tailed (bounded-Pareto) task sizes.
+    Burst,
+    /// Gradual drift: η and the processing rates interpolate toward a
+    /// final regime across the schedule (thermal throttling / affinity
+    /// drift), the case where a frozen solve silently decays.
+    SlowDrift,
+}
+
+impl ScenarioKind {
+    /// Parse a CLI/config name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "phase_shift" | "shift" => Ok(ScenarioKind::PhaseShift),
+            "burst" => Ok(ScenarioKind::Burst),
+            "slow_drift" | "drift" => Ok(ScenarioKind::SlowDrift),
+            other => Err(Error::Parse(format!(
+                "unknown scenario '{other}' (phase_shift|burst|slow_drift)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScenarioKind::PhaseShift => "phase_shift",
+            ScenarioKind::Burst => "burst",
+            ScenarioKind::SlowDrift => "slow_drift",
+        }
+    }
+
+    /// All canned regimes.
+    pub fn all() -> [ScenarioKind; 3] {
+        [ScenarioKind::PhaseShift, ScenarioKind::Burst, ScenarioKind::SlowDrift]
+    }
+}
+
+/// Knobs shared by the canned scenarios (two-type systems).
+#[derive(Debug, Clone)]
+pub struct ScenarioParams {
+    /// Baseline total programs N.
+    pub n: u32,
+    /// Number of phases.
+    pub phases: usize,
+    /// Measured completions per phase.
+    pub completions: u64,
+    /// Warm-up completions per phase.
+    pub warmup: u64,
+    /// Lower η (phase-shift trough / drift start).
+    pub low_eta: f64,
+    /// Upper η (phase-shift crest / drift end).
+    pub high_eta: f64,
+    /// Population multiplier of burst phases.
+    pub burst_factor: f64,
+    /// Per-cell (or per-processor) rate factors reached by the final
+    /// slow-drift phase; earlier phases interpolate geometrically.  The
+    /// default drifts the paper's P1-biased matrix into a P2-biased one
+    /// — the regime flip a frozen solve cannot see.
+    pub drift_to: Vec<f64>,
+}
+
+impl Default for ScenarioParams {
+    fn default() -> Self {
+        Self {
+            n: 20,
+            phases: 6,
+            completions: 4_000,
+            warmup: 400,
+            low_eta: 0.2,
+            high_eta: 0.8,
+            burst_factor: 2.0,
+            drift_to: vec![0.4, 0.2, 5.0, 2.5],
+        }
+    }
+}
+
+/// Build the phase schedule of a canned non-stationary scenario.
+pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Phase>> {
+    if p.phases == 0 {
+        return Err(Error::Config("scenario needs ≥ 1 phase".into()));
+    }
+    if p.n < 2 {
+        return Err(Error::Config("scenario needs N ≥ 2".into()));
+    }
+    if !(0.0 < p.low_eta && p.low_eta <= p.high_eta && p.high_eta < 1.0) {
+        return Err(Error::Config(format!(
+            "need 0 < low_eta ≤ high_eta < 1, got ({}, {})",
+            p.low_eta, p.high_eta
+        )));
+    }
+    let phases = match kind {
+        ScenarioKind::PhaseShift => (0..p.phases)
+            .map(|i| {
+                let eta = if i % 2 == 0 { p.low_eta } else { p.high_eta };
+                let (n1, n2) = split_populations(p.n, eta);
+                Phase::new(vec![n1, n2], p.warmup, p.completions)
+            })
+            .collect(),
+        ScenarioKind::Burst => {
+            if p.burst_factor < 1.0 {
+                return Err(Error::Config(format!(
+                    "burst_factor must be ≥ 1, got {}",
+                    p.burst_factor
+                )));
+            }
+            if p.phases < 3 {
+                return Err(Error::Config(format!(
+                    "burst surges every third phase; {} phases contain none",
+                    p.phases
+                )));
+            }
+            (0..p.phases)
+                .map(|i| {
+                    if i % 3 == 2 {
+                        // Surge: more programs, heavy-tailed sizes.
+                        let n = ((p.n as f64 * p.burst_factor).round() as u32).max(2);
+                        let (n1, n2) = split_populations(n, 0.5);
+                        Phase::new(vec![n1, n2], p.warmup, p.completions)
+                            .with_dist(Distribution::default_pareto())
+                    } else {
+                        let (n1, n2) = split_populations(p.n, 0.5);
+                        Phase::new(vec![n1, n2], p.warmup, p.completions)
+                    }
+                })
+                .collect()
+        }
+        ScenarioKind::SlowDrift => {
+            if p.drift_to.is_empty() {
+                return Err(Error::Config("slow_drift needs drift_to factors".into()));
+            }
+            if p.drift_to.iter().any(|&f| !f.is_finite() || f <= 0.0) {
+                return Err(Error::Config("drift_to factors must be > 0".into()));
+            }
+            (0..p.phases)
+                .map(|i| {
+                    let t = if p.phases == 1 {
+                        1.0
+                    } else {
+                        i as f64 / (p.phases - 1) as f64
+                    };
+                    let eta = p.low_eta + (p.high_eta - p.low_eta) * t;
+                    let (n1, n2) = split_populations(p.n, eta);
+                    let scale: Vec<f64> =
+                        p.drift_to.iter().map(|&f| f.powf(t)).collect();
+                    Phase::new(vec![n1, n2], p.warmup, p.completions).with_mu_scale(scale)
+                })
+                .collect()
+        }
+    };
+    Ok(phases)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +249,86 @@ mod tests {
             Regime::GeneralSymmetric
         );
         assert_eq!(table3::p2_biased().classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
+    fn scenario_kinds_parse_round_trip() {
+        for kind in ScenarioKind::all() {
+            assert_eq!(ScenarioKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(ScenarioKind::parse("steady").is_err());
+    }
+
+    #[test]
+    fn phase_shift_alternates_population_mix() {
+        let p = ScenarioParams::default();
+        let phases = scenario_phases(ScenarioKind::PhaseShift, &p).unwrap();
+        assert_eq!(phases.len(), 6);
+        let (lo1, _) = split_populations(20, 0.2);
+        let (hi1, _) = split_populations(20, 0.8);
+        for (i, ph) in phases.iter().enumerate() {
+            let want = if i % 2 == 0 { lo1 } else { hi1 };
+            assert_eq!(ph.populations[0], want, "phase {i}");
+            assert_eq!(ph.populations.iter().sum::<u32>(), 20);
+            assert!(ph.mu_scale.is_empty() && ph.dist.is_none());
+        }
+    }
+
+    #[test]
+    fn burst_surges_population_and_sizes() {
+        let p = ScenarioParams { phases: 7, ..Default::default() };
+        let phases = scenario_phases(ScenarioKind::Burst, &p).unwrap();
+        for (i, ph) in phases.iter().enumerate() {
+            let total: u32 = ph.populations.iter().sum();
+            if i % 3 == 2 {
+                assert_eq!(total, 40, "burst phase {i}");
+                assert_eq!(ph.dist, Some(Distribution::default_pareto()));
+            } else {
+                assert_eq!(total, 20, "calm phase {i}");
+                assert!(ph.dist.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn slow_drift_interpolates_rates_and_mix() {
+        let p = ScenarioParams::default();
+        let phases = scenario_phases(ScenarioKind::SlowDrift, &p).unwrap();
+        // First phase: no drift yet (all factors 1); last: exactly drift_to.
+        for &f in &phases[0].mu_scale {
+            assert!((f - 1.0).abs() < 1e-12);
+        }
+        for (a, b) in phases.last().unwrap().mu_scale.iter().zip(&p.drift_to) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        // η climbs monotonically.
+        for w in phases.windows(2) {
+            assert!(w[1].populations[0] >= w[0].populations[0]);
+        }
+        // The final effective matrix really flips the paper regime.
+        let mu = paper_two_type_mu();
+        let last = mu.scaled(&phases.last().unwrap().mu_scale).unwrap();
+        assert_eq!(last.classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
+    fn scenario_validation_rejects_bad_params() {
+        let ok = ScenarioParams::default();
+        let cases: Vec<(ScenarioKind, ScenarioParams)> = vec![
+            (ScenarioKind::PhaseShift, ScenarioParams { phases: 0, ..ok.clone() }),
+            (ScenarioKind::PhaseShift, ScenarioParams { n: 1, ..ok.clone() }),
+            (
+                ScenarioKind::PhaseShift,
+                ScenarioParams { low_eta: 0.9, high_eta: 0.1, ..ok.clone() },
+            ),
+            (ScenarioKind::Burst, ScenarioParams { burst_factor: 0.5, ..ok.clone() }),
+            (ScenarioKind::Burst, ScenarioParams { phases: 2, ..ok.clone() }),
+            (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![], ..ok.clone() }),
+            (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![-1.0], ..ok }),
+        ];
+        for (kind, p) in cases {
+            assert!(scenario_phases(kind, &p).is_err(), "{kind:?} {p:?}");
+        }
     }
 
     #[test]

@@ -2,12 +2,13 @@
 //! validate, and drive full simulations through the same path as
 //! `hetsched simulate --config <file>`.
 
-use hetsched::config::schema::ExperimentSpec;
+use hetsched::config::schema::{ExperimentSpec, ScenarioSpec};
 use hetsched::sim::engine::ClosedNetwork;
 
 fn repo_path(rel: &str) -> String {
-    // Tests run from the package root.
-    format!("{}/{rel}", env!("CARGO_MANIFEST_DIR"))
+    // The package lives in rust/; the shipped configs sit beside the
+    // examples at the repository root.
+    format!("{}/../{rel}", env!("CARGO_MANIFEST_DIR"))
 }
 
 #[test]
@@ -27,6 +28,25 @@ fn shipped_configs_parse_and_run() {
         assert!(r.throughput > 0.0, "{cfg}");
         assert!(r.little_residual() < 0.15, "{cfg}: Little's law violated");
     }
+}
+
+#[test]
+fn shipped_scenario_config_parses_and_runs() {
+    use hetsched::sim::dynamic::{run_dynamic_report, ResolveMode};
+    let mut spec =
+        ScenarioSpec::from_file(&repo_path("examples/configs/slow_drift_adaptive.json"))
+            .unwrap();
+    assert_eq!(spec.dynamic.resolve, ResolveMode::Adaptive);
+    assert_eq!(spec.dynamic.phases.len(), 6);
+    // Shrink for test runtime, then drive the full adaptive path.
+    for ph in &mut spec.dynamic.phases {
+        ph.warmup = 50;
+        ph.completions = 400;
+    }
+    let mut p = spec.policy.build();
+    let report = run_dynamic_report(&spec.mu, &spec.dynamic, p.as_mut()).unwrap();
+    assert_eq!(report.phases.len(), 6);
+    assert!(report.mean_throughput() > 0.0);
 }
 
 #[test]

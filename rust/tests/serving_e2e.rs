@@ -1,5 +1,9 @@
 //! Serving coordinator end-to-end: closed-loop clients through router +
-//! batcher + PJRT workers.  Self-skips without built artifacts.
+//! batcher + engine workers.
+//!
+//! The artifact-shape tests self-skip without built artifacts; the
+//! native-backend tests always run (the default engine executes the
+//! kernels in-process).
 
 use hetsched::coordinator::{Coordinator, ServeConfig};
 use hetsched::policy::PolicyKind;
@@ -65,6 +69,53 @@ fn batching_deadline_bounds_nn_latency() {
         "expected deadline flushes, got {:?}",
         r.flushes
     );
+}
+
+#[test]
+fn native_engine_serves_without_artifacts() {
+    // The native kernel backend needs no manifest: the full coordinator
+    // path (router → batcher → workers → stats) must run anywhere.
+    let cfg = ServeConfig {
+        policy: PolicyKind::Jsq,
+        total: 80,
+        inflight: 8,
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 80);
+    assert!(r.rps > 0.0);
+    assert_eq!(r.sort_latency.count() + r.nn_latency.count(), 80);
+    assert_eq!(r.resolves, 0);
+    assert!(r.mu_hat.is_none());
+}
+
+#[test]
+fn adaptive_serving_estimates_and_reports_mu_hat() {
+    // Adaptive mode on the live coordinator: the Table-3 prior is wildly
+    // wrong for the native in-process kernels, so the estimator must
+    // drift-detect, re-solve at least once, and report a finite μ̂.
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        total: 200,
+        inflight: 12,
+        adaptive: true,
+        resolve_check: 32,
+        drift_threshold: 0.25,
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 200);
+    assert!(
+        r.resolves >= 1,
+        "prior μ is orders of magnitude off the native kernel rates; \
+         the adaptive loop should have re-solved"
+    );
+    let mu_hat = r.mu_hat.expect("adaptive run reports μ̂");
+    for i in 0..2 {
+        for j in 0..2 {
+            assert!(mu_hat.rate(i, j).is_finite() && mu_hat.rate(i, j) > 0.0);
+        }
+    }
 }
 
 #[test]
