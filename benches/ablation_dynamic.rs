@@ -16,6 +16,7 @@ use hetsched::report::Table;
 use hetsched::sim::distribution::Distribution;
 use hetsched::sim::dynamic::{run_dynamic, DynamicConfig, Phase};
 use hetsched::sim::processor::Discipline;
+use hetsched::sim::replicate::parallel_map;
 use hetsched::sim::rng::Rng;
 use hetsched::sim::workload;
 
@@ -60,10 +61,20 @@ fn main() {
     cfg.dist = Distribution::Exponential;
     cfg.seed = 0xD1;
 
-    let mut resolving = PolicyKind::Cab.build();
-    let rs_resolve = run_dynamic(&mu, &cfg, resolving.as_mut()).unwrap();
-    let mut frozen = FrozenCab { steering: None };
-    let rs_frozen = run_dynamic(&mu, &cfg, &mut frozen).unwrap();
+    // The two ablation arms are independent runs: fan them across cores
+    // through the replication runner's worker pool.
+    let arms = [true, false]; // re-solving CAB vs frozen CAB
+    let mut results = parallel_map(&arms, 0, |_, &resolve| {
+        let mut policy: Box<dyn Policy> = if resolve {
+            PolicyKind::Cab.build()
+        } else {
+            Box::new(FrozenCab { steering: None })
+        };
+        run_dynamic(&mu, &cfg, policy.as_mut()).unwrap()
+    })
+    .into_iter();
+    let rs_resolve = results.next().expect("resolve arm");
+    let rs_frozen = results.next().expect("frozen arm");
 
     let mut t = Table::new(
         "ablation: per-phase throughput, re-solving vs frozen CAB",

@@ -19,6 +19,7 @@ use hetsched::policy::{grin, PolicyKind, SystemView};
 use hetsched::report::{Stopwatch, Table};
 use hetsched::sim::distribution::Distribution;
 use hetsched::sim::engine::{ClosedNetwork, SimConfig};
+use hetsched::sim::replicate::{run_cells, ReplicationPlan, SimCell};
 use hetsched::sim::rng::Rng;
 use hetsched::sim::workload;
 use hetsched::solver::slsqp::Slsqp;
@@ -41,16 +42,65 @@ fn main() {
     cfg.dist = Distribution::Exponential;
     cfg.warmup = 1_000;
     cfg.measure = scale(400_000, 50_000);
+    // Every completion is one event, warm-up included: derive the event
+    // count from the config rather than hardcoding the warm-up constant.
+    let measured = cfg.measure;
+    let total_events = cfg.warmup + cfg.measure;
     let net = ClosedNetwork::new(&mu, cfg).unwrap();
-    let t0 = Instant::now();
-    let r = net.run(PolicyKind::Cab.build().as_mut()).unwrap();
-    let secs = t0.elapsed().as_secs_f64();
-    let events_per_s = (r.completed as f64 + 1_000.0) / secs;
+    // Best-of-3 through a warm arena: the CI regression gate compares
+    // this number across runs, so a single cold-cache sample won't do.
+    let mut arena = hetsched::sim::engine::SimArena::new();
+    let mut events_per_s = 0.0f64;
+    for _ in 0..3 {
+        let t0 = Instant::now();
+        let r = net
+            .run_in(PolicyKind::Cab.build().as_mut(), &mut arena)
+            .unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(r.completed, measured);
+        events_per_s = events_per_s.max(total_events as f64 / secs);
+    }
     t.row(vec![
         "sim events/s (CAB, 2 procs, N=20)".into(),
         format!("{:.2}M", events_per_s / 1e6),
     ]);
     metrics.push(("sim_events_per_s".into(), events_per_s));
+
+    // --- parallel replication runner scaling ------------------------------
+    // R seeded replications through per-thread arenas: 1 thread vs 4.
+    let sweep_cells: Vec<SimCell> = [0.2f64, 0.5, 0.8]
+        .iter()
+        .map(|&eta| {
+            let (n1, n2) = workload::split_populations(20, eta);
+            let mut sim = SimConfig::paper_default(vec![n1, n2]);
+            sim.warmup = 200;
+            sim.measure = scale(20_000, 4_000);
+            sim.seed = 99;
+            SimCell {
+                label: format!("eta={eta}"),
+                mu: mu.clone(),
+                sim,
+                policy: PolicyKind::Cab,
+            }
+        })
+        .collect();
+    let reps = scale(16, 8) as u32;
+    let mut sweep_secs = [0.0f64; 2];
+    for (slot, threads) in [(0usize, 1usize), (1, 4)] {
+        let plan = ReplicationPlan { reps, threads, base_seed: 99 };
+        let t0 = Instant::now();
+        let stats = run_cells(&sweep_cells, &plan).unwrap();
+        sweep_secs[slot] = t0.elapsed().as_secs_f64();
+        assert!(stats.iter().all(|s| s.mean_x > 0.0));
+        t.row(vec![
+            format!("sweep {}x{} reps, {} thread(s)", sweep_cells.len(), reps, threads),
+            format!("{:.3}s", sweep_secs[slot]),
+        ]);
+        metrics.push((format!("sweep_secs_{threads}t"), sweep_secs[slot]));
+    }
+    let speedup = sweep_secs[0] / sweep_secs[1].max(1e-9);
+    t.row(vec!["sweep speedup 4t vs 1t".into(), format!("{speedup:.2}x")]);
+    metrics.push(("sweep_speedup_4t".into(), speedup));
 
     // --- dispatch decision latency ---------------------------------------
     let pops = [10u32, 10];
@@ -88,14 +138,14 @@ fn main() {
     t.row(vec!["x_of_state ns/op (8x8, full)".into(), format!("{full_ns:.1}")]);
     metrics.push(("x_of_state_full_ns".into(), full_ns));
 
-    // The GrIn hot path: O(1) move-delta probes on cached column sums.
+    // The GrIn hot path: O(1) move-delta probes on the SoA column caches.
     let inc = IncrementalX::new(&mu9, &s9);
     let t0 = Instant::now();
     let mut acc = 0.0;
     for i in 0..n {
         let p = (i & 7) as usize;
         let j = ((i >> 3) & 7) as usize;
-        acc += std::hint::black_box(&inc).delta_plus(&mu9, p, j);
+        acc += std::hint::black_box(&inc).delta_plus(p, j);
     }
     std::hint::black_box(acc);
     let inc_ns = t0.elapsed().as_nanos() as f64 / n as f64;
@@ -106,6 +156,20 @@ fn main() {
         format!("{:.1}x", full_ns / inc_ns.max(1e-9)),
     ]);
     metrics.push(("incremental_speedup".into(), full_ns / inc_ns.max(1e-9)));
+
+    // Whole-row probe pass (the auto-vectorizing large-l path).
+    let mut dplus = vec![0.0f64; 8];
+    let t0 = Instant::now();
+    let mut acc = 0.0;
+    let rows = n / 8;
+    for i in 0..rows {
+        std::hint::black_box(&inc).delta_plus_row((i & 7) as usize, &mut dplus);
+        acc += dplus[(i & 7) as usize];
+    }
+    std::hint::black_box(acc);
+    let row_ns = t0.elapsed().as_nanos() as f64 / (rows * 8) as f64;
+    t.row(vec!["move-delta ns/op (8x8, row pass)".into(), format!("{row_ns:.2}")]);
+    metrics.push(("move_delta_row_ns".into(), row_ns));
 
     // --- solver latencies --------------------------------------------------
     for size in [4usize, 8, 10] {

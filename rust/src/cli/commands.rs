@@ -3,6 +3,7 @@
 //! ```text
 //! hetsched simulate  --config spec.json | --policy cab --eta 0.5 ...
 //! hetsched sweep     --dist exp --n 20 [--policies cab,bf,rd,jsq,lb]
+//!                    [--reps 16 --threads 0 --quick]
 //! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
 //! hetsched scenario  --kind slow_drift --policy grin [--compare]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
@@ -18,7 +19,7 @@ use crate::model::throughput::{x_max_theoretical, x_of_state};
 use crate::platform::bench_rig::{cases, run_platform, PlatformConfig};
 use crate::platform::measure_rates;
 use crate::policy::PolicyKind;
-use crate::report::{Series, Table};
+use crate::report::Table;
 use crate::sim::distribution::Distribution;
 use crate::sim::engine::{ClosedNetwork, SimConfig};
 use crate::sim::workload;
@@ -35,7 +36,9 @@ USAGE: hetsched <COMMAND> [FLAGS]
 
 COMMANDS:
   simulate   run one closed-network simulation (JSON spec or flags)
-  sweep      η-sweep of all policies (the Figs. 4–7 experiment)
+  sweep      η-sweep of all policies (the Figs. 4–7 experiment) with R
+             seeded replications per cell fanned across cores; reports
+             mean X ± 95% CI (--reps, --threads, --quick)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
              slow_drift) under a resolve mode, or --compare all modes
@@ -129,11 +132,18 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use crate::sim::replicate::{run_cells, ReplicationPlan, SimCell};
+
     let mu = parse_mu(args.get("mu").unwrap_or("20,15;3,8"))?;
     let n: u32 = args.get_parse("n", 20u32)?;
     let dist = Distribution::parse(args.get("dist").unwrap_or("exp"))?;
     let seed: u64 = args.get_parse("seed", 7u64)?;
-    let measure: u64 = args.get_parse("measure", 20_000u64)?;
+    let quick = args.switch("quick");
+    let default_measure: u64 = if quick { 2_000 } else { 20_000 };
+    let measure: u64 = args.get_parse("measure", default_measure)?;
+    let warmup: u64 = args.get_parse("warmup", if quick { 200 } else { 2_000 })?;
+    let reps: u32 = args.get_parse("reps", if quick { 4 } else { 16 })?;
+    let threads: usize = args.get_parse("threads", 0usize)?;
     let kinds: Vec<PolicyKind> = match args.get("policies") {
         Some(list) => list
             .split(',')
@@ -143,26 +153,58 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     args.finish()?;
 
-    let mut series: Vec<Series> = kinds.iter().map(|k| Series::new(k.name())).collect();
-    for eta in workload::eta_grid() {
+    let etas: Vec<f64> = if quick {
+        vec![0.2, 0.5, 0.8]
+    } else {
+        workload::eta_grid().to_vec()
+    };
+    let mut cells = Vec::with_capacity(etas.len() * kinds.len());
+    for &eta in &etas {
         let (n1, n2) = workload::split_populations(n, eta);
-        for (s, kind) in series.iter_mut().zip(&kinds) {
-            let mut cfg = SimConfig::paper_default(vec![n1, n2]);
-            cfg.dist = dist;
-            cfg.seed = seed;
-            cfg.measure = measure;
-            let net = ClosedNetwork::new(&mu, cfg)?;
-            let r = net.run(kind.build().as_mut())?;
-            s.push(eta, r.throughput);
+        for kind in &kinds {
+            let mut sim = SimConfig::paper_default(vec![n1, n2]);
+            sim.dist = dist;
+            sim.seed = seed;
+            sim.warmup = warmup;
+            sim.measure = measure;
+            cells.push(SimCell {
+                label: format!("eta={eta:.1} {}", kind.name()),
+                mu: mu.clone(),
+                sim,
+                policy: *kind,
+            });
         }
     }
-    print!(
-        "{}",
-        Series::render_block(
-            &format!("throughput sweep, dist={}, N={n}", dist.name()),
-            "eta",
-            &series
-        )
+    let plan = ReplicationPlan { reps, threads, base_seed: seed };
+    let t0 = std::time::Instant::now();
+    let stats = run_cells(&cells, &plan)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut headers: Vec<&str> = vec!["eta"];
+    let names: Vec<String> = kinds.iter().map(|k| k.name().to_string()).collect();
+    headers.extend(names.iter().map(|s| s.as_str()));
+    let mut t = Table::new(
+        format!("throughput sweep, dist={}, N={n}, R={reps} (mean ± 95% CI)", dist.name()),
+        &headers,
+    );
+    for (ei, eta) in etas.iter().enumerate() {
+        let mut row = vec![format!("{eta:.1}")];
+        for ki in 0..kinds.len() {
+            let s = &stats[ei * kinds.len() + ki];
+            row.push(format!("{:.3} ± {:.3}", s.mean_x, s.ci95_x));
+        }
+        t.row(row);
+    }
+    t.print();
+    let runs = cells.len() as u64 * reps as u64;
+    println!(
+        "{} cells × {} reps = {} replications on {} threads in {:.2}s ({:.1} runs/s)",
+        cells.len(),
+        reps,
+        runs,
+        plan.effective_threads(),
+        wall,
+        runs as f64 / wall.max(1e-9)
     );
     Ok(())
 }
@@ -271,10 +313,13 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     if compare {
         let modes =
             [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive];
-        let mut results = Vec::new();
-        for mode in modes {
-            results.push(run_mode(mode)?);
-        }
+        // The three resolve modes are independent runs: fan them across
+        // cores through the replication runner's worker pool.
+        let results = crate::sim::replicate::parallel_map(&modes, 0, |_, &mode| {
+            run_mode(mode)
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
         let mut t = Table::new(
             format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
             &["phase", "static", "every_phase", "adaptive"],
@@ -484,6 +529,23 @@ mod tests {
         // Unknown kind is rejected.
         let args = Args::parse(
             "scenario --kind steady".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn sweep_command_runs_replicated_quick_grid() {
+        let args = Args::parse(
+            "sweep --quick --reps 2 --measure 200 --warmup 20 --threads 2"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        run(&args).unwrap();
+        // Bad policy list is rejected.
+        let args = Args::parse(
+            "sweep --policies cab,fifo".split_whitespace().map(String::from),
         )
         .unwrap();
         assert!(run(&args).is_err());

@@ -106,15 +106,29 @@ impl Args {
         }
     }
 
-    /// Error on any flag that was never consumed (typo protection).
+    /// Error on flags that were never consumed (typo protection),
+    /// naming every offender at once so a multi-typo invocation is fixed
+    /// in one round trip.
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
-        for k in self.flags.keys().chain(self.switches.iter()) {
-            if !consumed.iter().any(|c| c == k) {
-                return Err(Error::Config(format!("unknown flag --{k}")));
-            }
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .chain(self.switches.iter())
+            .filter(|k| !consumed.iter().any(|c| &c == k))
+            .map(|k| k.as_str())
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
         }
-        Ok(())
+        unknown.sort_unstable();
+        unknown.dedup();
+        let list = unknown
+            .iter()
+            .map(|k| format!("--{k}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        Err(Error::Config(format!("unknown flag(s) {list}")))
     }
 }
 
@@ -156,6 +170,14 @@ mod tests {
         assert!(a.finish().is_err());
         let _ = a.get("oops");
         a.finish().unwrap();
+    }
+
+    #[test]
+    fn finish_names_every_unknown_flag() {
+        let a = args("run --good 1 --typo 2 --worse");
+        let _ = a.get("good");
+        let msg = a.finish().unwrap_err().to_string();
+        assert!(msg.contains("--typo") && msg.contains("--worse"), "{msg}");
     }
 
     #[test]

@@ -92,13 +92,19 @@ pub fn x_df_minus(mu: &AffinityMatrix, n: &StateMatrix, p: usize, j: usize) -> f
     (xj - mu.rate(p, j)) / (occ - 1.0)
 }
 
-/// Incremental X(S) evaluator: caches the per-processor numerator
-/// Σ_i μ_ij·N_ij and occupancy Σ_i N_ij so that
+/// Incremental X(S) evaluator in a flat struct-of-arrays layout: the
+/// rate matrix, the per-column numerators Σ_i μ_ij·N_ij, occupancies and
+/// cached per-column throughputs X_j all live in contiguous `Vec<f64>`s
+/// indexed by `j` — no nested indexing anywhere on the probe path, so
+/// the row-delta loops auto-vectorize at large l.
 ///
 /// * `x()` is O(l) (re-derived from the cached column sums, so it never
 ///   accumulates drift across moves),
 /// * the GrIn move deltas (Eqs. 34/36) are **O(1)** per probe instead of
-///   the O(k) column scan of [`x_df_plus`]/[`x_df_minus`],
+///   the O(k) column scan of [`x_df_plus`]/[`x_df_minus`], and
+///   [`delta_plus_row`](Self::delta_plus_row) /
+///   [`delta_minus_row`](Self::delta_minus_row) evaluate a whole row of
+///   probes in one SIMD-friendly pass,
 /// * applying a move updates two columns in O(1).
 ///
 /// This is the hot path of GrIn's greedy loop (`benches/perf_hotpath.rs`
@@ -107,10 +113,17 @@ pub fn x_df_minus(mu: &AffinityMatrix, n: &StateMatrix, p: usize, j: usize) -> f
 /// constant-time arithmetic expression.
 #[derive(Debug, Clone)]
 pub struct IncrementalX {
+    /// Processor count l (columns).
+    l: usize,
+    /// Row-major k×l copy of μ in one contiguous allocation.
+    rates: Vec<f64>,
     /// Per-column Σ_i μ_ij·N_ij.
     num: Vec<f64>,
-    /// Per-column occupancy Σ_i N_ij.
-    occ: Vec<u32>,
+    /// Per-column occupancy Σ_i N_ij (f64 to keep the probe arithmetic
+    /// conversion-free; exact for any feasible population).
+    occ: Vec<f64>,
+    /// Cached per-column throughput X_j = num/occ (0 when empty).
+    xj: Vec<f64>,
 }
 
 impl IncrementalX {
@@ -119,77 +132,124 @@ impl IncrementalX {
         debug_assert_eq!(mu.types(), n.types());
         debug_assert_eq!(mu.procs(), n.procs());
         let l = mu.procs();
+        let rates = mu.data().to_vec();
         let mut num = vec![0.0f64; l];
-        let mut occ = vec![0u32; l];
+        let mut occ = vec![0.0f64; l];
         for j in 0..l {
             for i in 0..mu.types() {
                 let nij = n.get(i, j);
                 num[j] += mu.rate(i, j) * nij as f64;
-                occ[j] += nij;
+                occ[j] += nij as f64;
             }
         }
-        Self { num, occ }
+        let xj = (0..l)
+            .map(|j| if occ[j] == 0.0 { 0.0 } else { num[j] / occ[j] })
+            .collect();
+        Self { l, rates, num, occ, xj }
+    }
+
+    /// Processor count l.
+    #[inline]
+    pub fn procs(&self) -> usize {
+        self.l
     }
 
     /// Cached per-processor throughput X_j (Eq. 26/27).
     #[inline]
     pub fn x_of_proc(&self, j: usize) -> f64 {
-        if self.occ[j] == 0 {
-            0.0
-        } else {
-            self.num[j] / self.occ[j] as f64
-        }
+        self.xj[j]
     }
 
-    /// System throughput X_sys (Eq. 28), re-derived from the column
-    /// caches in O(l).
+    /// System throughput X_sys (Eq. 28), summed over the column caches
+    /// in O(l).
     pub fn x(&self) -> f64 {
-        (0..self.num.len()).map(|j| self.x_of_proc(j)).sum()
+        self.xj.iter().sum()
     }
 
     /// Eq. 34 in O(1): ΔX of adding one p-type task to processor j.
     #[inline]
-    pub fn delta_plus(&self, mu: &AffinityMatrix, p: usize, j: usize) -> f64 {
-        (mu.rate(p, j) - self.x_of_proc(j)) / (self.occ[j] as f64 + 1.0)
+    pub fn delta_plus(&self, p: usize, j: usize) -> f64 {
+        (self.rates[p * self.l + j] - self.xj[j]) / (self.occ[j] + 1.0)
     }
 
     /// Eq. 36 in O(1): ΔX of removing one p-type task from processor j.
     /// Defined only when the cell is occupied (caller-checked, as with
     /// [`x_df_minus`]).
     #[inline]
-    pub fn delta_minus(&self, mu: &AffinityMatrix, p: usize, j: usize) -> f64 {
-        debug_assert!(self.occ[j] > 0);
-        if self.occ[j] <= 1 {
-            return -mu.rate(p, j);
+    pub fn delta_minus(&self, p: usize, j: usize) -> f64 {
+        debug_assert!(self.occ[j] > 0.0);
+        let rate = self.rates[p * self.l + j];
+        if self.occ[j] <= 1.0 {
+            return -rate;
         }
-        (self.x_of_proc(j) - mu.rate(p, j)) / (self.occ[j] as f64 - 1.0)
+        (self.xj[j] - rate) / (self.occ[j] - 1.0)
+    }
+
+    /// Eq. 34 for the whole row p in one contiguous pass:
+    /// `out[j] = ΔX of adding one p-type task to processor j`.  The loop
+    /// reads three parallel `f64` slices and writes one — the
+    /// SIMD-friendly layout the large-l GrIn probes want.
+    #[inline]
+    pub fn delta_plus_row(&self, p: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.l);
+        let row = &self.rates[p * self.l..(p + 1) * self.l];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = (row[j] - self.xj[j]) / (self.occ[j] + 1.0);
+        }
+    }
+
+    /// Eq. 36 for the whole row p in one contiguous pass.  Entries for
+    /// empty columns are filled with the occ≤1 closed form and are only
+    /// meaningful where the caller knows `n[p][j] > 0` (as with
+    /// [`delta_minus`](Self::delta_minus)).
+    #[inline]
+    pub fn delta_minus_row(&self, p: usize, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.l);
+        let row = &self.rates[p * self.l..(p + 1) * self.l];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = if self.occ[j] <= 1.0 {
+                -row[j]
+            } else {
+                (self.xj[j] - row[j]) / (self.occ[j] - 1.0)
+            };
+        }
+    }
+
+    /// Refresh the cached X_j for one column after a count change.
+    #[inline]
+    fn recache(&mut self, j: usize) {
+        self.xj[j] = if self.occ[j] == 0.0 {
+            // Cancel accumulated rounding dust on emptied columns so the
+            // caches stay exact across arbitrarily long move sequences.
+            self.num[j] = 0.0;
+            0.0
+        } else {
+            self.num[j] / self.occ[j]
+        };
     }
 
     /// Apply a task arrival at (p, j) to the caches.
     #[inline]
-    pub fn apply_inc(&mut self, mu: &AffinityMatrix, p: usize, j: usize) {
-        self.num[j] += mu.rate(p, j);
-        self.occ[j] += 1;
+    pub fn apply_inc(&mut self, p: usize, j: usize) {
+        self.num[j] += self.rates[p * self.l + j];
+        self.occ[j] += 1.0;
+        self.recache(j);
     }
 
     /// Apply a task departure from (p, j) to the caches.
     #[inline]
-    pub fn apply_dec(&mut self, mu: &AffinityMatrix, p: usize, j: usize) {
-        debug_assert!(self.occ[j] > 0);
-        self.num[j] -= mu.rate(p, j);
-        self.occ[j] -= 1;
-        if self.occ[j] == 0 {
-            // Cancel accumulated rounding dust on emptied columns so the
-            // caches stay exact across arbitrarily long move sequences.
-            self.num[j] = 0.0;
-        }
+    pub fn apply_dec(&mut self, p: usize, j: usize) {
+        debug_assert!(self.occ[j] > 0.0);
+        self.num[j] -= self.rates[p * self.l + j];
+        self.occ[j] -= 1.0;
+        self.recache(j);
     }
 
     /// Apply a GrIn move (one p-type task from `from` to `to`).
     #[inline]
-    pub fn apply_move(&mut self, mu: &AffinityMatrix, p: usize, from: usize, to: usize) {
-        self.apply_dec(mu, p, from);
-        self.apply_inc(mu, p, to);
+    pub fn apply_move(&mut self, p: usize, from: usize, to: usize) {
+        self.apply_dec(p, from);
+        self.apply_inc(p, to);
     }
 }
 
@@ -346,14 +406,21 @@ mod tests {
         let mut s = StateMatrix::new(3, 3, vec![3, 1, 0, 2, 4, 1, 0, 2, 5]).unwrap();
         let mut inc = IncrementalX::new(&mu, &s);
         assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
-        // O(1) deltas equal the O(k) reference deltas on every cell.
+        // O(1) deltas equal the O(k) reference deltas on every cell, and
+        // the row passes agree entry-for-entry with the scalar probes.
+        let mut dplus = vec![0.0f64; 3];
+        let mut dminus = vec![0.0f64; 3];
         for p in 0..3 {
+            inc.delta_plus_row(p, &mut dplus);
+            inc.delta_minus_row(p, &mut dminus);
             for j in 0..3 {
                 let want = x_df_plus(&mu, &s, p, j);
-                assert!((inc.delta_plus(&mu, p, j) - want).abs() < 1e-12);
+                assert!((inc.delta_plus(p, j) - want).abs() < 1e-12);
+                assert_eq!(dplus[j].to_bits(), inc.delta_plus(p, j).to_bits());
                 if s.get(p, j) > 0 {
                     let want = x_df_minus(&mu, &s, p, j);
-                    assert!((inc.delta_minus(&mu, p, j) - want).abs() < 1e-12);
+                    assert!((inc.delta_minus(p, j) - want).abs() < 1e-12);
+                    assert_eq!(dminus[j].to_bits(), inc.delta_minus(p, j).to_bits());
                 }
             }
         }
@@ -363,10 +430,10 @@ mod tests {
             if s.get(p, from) == 0 {
                 continue;
             }
-            let predicted = inc.delta_minus(&mu, p, from) + inc.delta_plus(&mu, p, to);
+            let predicted = inc.delta_minus(p, from) + inc.delta_plus(p, to);
             let before = inc.x();
             s.move_task(p, from, to).unwrap();
-            inc.apply_move(&mu, p, from, to);
+            inc.apply_move(p, from, to);
             assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-9);
             assert!((inc.x() - before - predicted).abs() < 1e-9);
         }
@@ -380,12 +447,12 @@ mod tests {
         assert!((inc.x() - 28.0).abs() < 1e-12); // 20 + 8
         // Empty column 0 entirely.
         s.move_task(0, 0, 1).unwrap();
-        inc.apply_move(&mu, 0, 0, 1);
+        inc.apply_move(0, 0, 1);
         assert_eq!(inc.x_of_proc(0), 0.0);
         assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
         // Refill it.
         s.move_task(1, 1, 0).unwrap();
-        inc.apply_move(&mu, 1, 1, 0);
+        inc.apply_move(1, 1, 0);
         assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
     }
 

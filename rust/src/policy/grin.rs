@@ -129,27 +129,33 @@ fn best_move_for_row(
 }
 
 /// The best single move for `row` against the cached column sums:
-/// O(l²) constant-time probes instead of the O(l²·k) scans of
-/// [`best_move_for_row`] — the §Perf win of [`IncrementalX`].
+/// two contiguous O(l) delta passes (SIMD-friendly, see
+/// [`IncrementalX::delta_plus_row`]) followed by an O(l²) combine over
+/// the precomputed buffers — instead of the O(l²·k) scans of
+/// [`best_move_for_row`].  `dplus`/`dminus` are caller-owned scratch so
+/// the greedy loop allocates nothing per move.
 fn best_move_for_row_inc(
-    mu: &AffinityMatrix,
     inc: &IncrementalX,
     n: &StateMatrix,
     row: usize,
+    dplus: &mut [f64],
+    dminus: &mut [f64],
 ) -> Option<(usize, usize, f64)> {
-    let l = mu.procs();
+    let l = inc.procs();
+    inc.delta_plus_row(row, dplus);
+    inc.delta_minus_row(row, dminus);
     let mut best: Option<(usize, usize, f64)> = None;
     for from in 0..l {
         if n.get(row, from) == 0 {
             continue;
         }
-        let dfm = inc.delta_minus(mu, row, from);
+        let dfm = dminus[from];
         for to in 0..l {
             if to == from {
                 continue;
             }
             // Columns are independent ⇒ the combined delta is exact.
-            let gain = dfm + inc.delta_plus(mu, row, to);
+            let gain = dfm + dplus[to];
             if best.map_or(true, |(_, _, g)| gain > g) {
                 best = Some((from, to, gain));
             }
@@ -166,18 +172,23 @@ fn best_move_for_row_inc(
 /// full (`tests/adaptive_e2e.rs` property-checks the equivalence).
 pub fn solve(mu: &AffinityMatrix, populations: &[u32]) -> Result<GrInSolution> {
     let mut n = initialize(mu, populations)?;
-    let k = mu.types();
+    let (k, l) = (mu.types(), mu.procs());
     let mut inc = IncrementalX::new(mu, &n);
+    // Scratch for the per-row delta passes, allocated once per solve.
+    let mut dplus = vec![0.0f64; l];
+    let mut dminus = vec![0.0f64; l];
     let mut moves = 0usize;
     // Hard cap: each move strictly increases X_sys, but guard regardless.
-    let cap = 64 + (populations.iter().sum::<u32>() as usize) * mu.procs() * k * 4;
+    let cap = 64 + (populations.iter().sum::<u32>() as usize) * l * k * 4;
     loop {
         let mut improved = false;
         for row in 0..k {
-            if let Some((from, to, gain)) = best_move_for_row_inc(mu, &inc, &n, row) {
+            if let Some((from, to, gain)) =
+                best_move_for_row_inc(&inc, &n, row, &mut dplus, &mut dminus)
+            {
                 if gain > GAIN_EPS {
                     n.move_task(row, from, to)?;
-                    inc.apply_move(mu, row, from, to);
+                    inc.apply_move(row, from, to);
                     moves += 1;
                     improved = true;
                 }
@@ -348,9 +359,11 @@ mod tests {
             let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(8) as u32).collect();
             let n = initialize(&mu, &pops).unwrap();
             let inc = IncrementalX::new(&mu, &n);
+            let mut dplus = vec![0.0f64; l];
+            let mut dminus = vec![0.0f64; l];
             for row in 0..k {
                 let full = best_move_for_row(&mu, &n, row);
-                let fast = best_move_for_row_inc(&mu, &inc, &n, row);
+                let fast = best_move_for_row_inc(&inc, &n, row, &mut dplus, &mut dminus);
                 match (full, fast) {
                     (None, None) => {}
                     (Some((f1, t1, g1)), Some((f2, t2, g2))) => {

@@ -32,6 +32,7 @@ use crate::model::state::StateMatrix;
 use crate::policy::{Policy, SystemView};
 
 use super::distribution::Distribution;
+use super::eventq::EventQueue;
 use super::metrics::{Metrics, SimResult};
 use super::processor::{Discipline, Processor};
 use super::rng::Rng;
@@ -229,6 +230,7 @@ pub fn run_dynamic_report(
     let mut rng = Rng::new(cfg.seed);
     let mut procs: Vec<Processor> =
         (0..l).map(|j| Processor::new(j, cfg.discipline)).collect();
+    let mut events = EventQueue::new(l);
     let mut state = StateMatrix::zeros(k, l);
     let mut work = vec![0.0f64; l];
     let mut now = 0.0f64;
@@ -333,20 +335,23 @@ pub fn run_dynamic_report(
         }
 
         // --- phase event loop ---
+        // Phase-boundary launches touched arbitrary processors: re-key
+        // every entry once (O(l)), then run incrementally.
+        for j in 0..l {
+            events.update(j, procs[j].next_completion());
+        }
         let total = phase.warmup + phase.completions;
         let mut metrics = Metrics::new(k, l, now);
         let mut measuring = phase.warmup == 0;
         let mut completions = 0u64;
         while completions < total {
-            let (j, t) = procs
-                .iter()
-                .enumerate()
-                .filter_map(|(j, p)| p.next_completion().map(|t| (j, t)))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            let (j, t) = events
+                .peek()
                 .ok_or_else(|| Error::Solver("dynamic system drained".into()))?;
             now = t;
             procs[j].advance(now);
             let done = procs[j].pop_completed(now)?;
+            events.update(j, procs[j].next_completion());
             state.dec(done.ttype, j)?;
             completions += 1;
             if !measuring && completions > phase.warmup {
@@ -408,6 +413,7 @@ pub fn run_dynamic_report(
                 inflight_rates.push((task.id, rate));
             }
             procs[dest].push(task, rate, now);
+            events.update(dest, procs[dest].next_completion());
             state.inc(ttype, dest);
         }
         results.push(metrics.finalize(phase.populations.iter().sum()));

@@ -5,9 +5,18 @@
 //! processor, and the task joins that processor's queue — no arrival
 //! process exists, exactly the paper's closed-system model (§3.1).
 //!
-//! The event loop is a classic next-completion discrete-event simulation:
-//! the only events are task completions, so the loop is
-//! `argmin_j next_completion(j)` → advance → record → re-dispatch.
+//! The event loop is a classic next-completion discrete-event simulation.
+//! The seed looped `argmin_j next_completion(j)` per event (O(l) scans of
+//! O(n) processors); this version keeps per-processor next-completion
+//! times in an indexed min-heap ([`EventQueue`]), so each event is a
+//! `peek` (O(1)) plus O(log l) re-keys of the one or two processors the
+//! event touched — the §Perf hot-path core.
+//!
+//! All run-lifetime allocations (processors, programs, the work buffer,
+//! the event heap, the metrics accumulator) live in a [`SimArena`] that
+//! `run_in` reuses across replications: after the first run, a
+//! replication performs no net heap allocation (`tests/arena_alloc.rs`
+//! gates this with a counting allocator).
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -16,6 +25,7 @@ use crate::model::state::StateMatrix;
 use crate::policy::{Policy, SystemView};
 
 use super::distribution::Distribution;
+use super::eventq::EventQueue;
 use super::metrics::{Metrics, SimResult};
 use super::processor::{Discipline, Processor};
 use super::rng::Rng;
@@ -64,6 +74,54 @@ impl SimConfig {
     }
 }
 
+/// One completion event, captured by [`ClosedNetwork::run_traced`] for
+/// the trace-equivalence property tests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Completion {
+    /// Completed task id.
+    pub id: u64,
+    /// Processor it completed on.
+    pub proc: usize,
+    /// Absolute completion time.
+    pub time: f64,
+}
+
+/// Reusable per-thread simulation state: every allocation the engine
+/// needs for a run, kept warm across replications (capacities persist
+/// through `reset`s, so a warmed arena allocates nothing per run).
+#[derive(Debug, Default)]
+pub struct SimArena {
+    procs: Vec<Processor>,
+    programs: Vec<Program>,
+    work: Vec<f64>,
+    order: Vec<usize>,
+    events: EventQueue,
+    metrics: Metrics,
+}
+
+impl SimArena {
+    /// Empty arena; capacities grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Prepare for a run over `l` processors of the given discipline.
+    fn reset(&mut self, l: usize, discipline: Discipline) {
+        self.procs.truncate(l);
+        for p in self.procs.iter_mut() {
+            p.reset(discipline);
+        }
+        while self.procs.len() < l {
+            self.procs.push(Processor::new(self.procs.len(), discipline));
+        }
+        self.programs.clear();
+        self.work.clear();
+        self.work.resize(l, 0.0);
+        self.order.clear();
+        self.events.reset(l);
+    }
+}
+
 /// The closed batch network simulator.
 pub struct ClosedNetwork<'a> {
     mu: &'a AffinityMatrix,
@@ -88,6 +146,34 @@ impl<'a> ClosedNetwork<'a> {
 
     /// Run one simulation under `policy` and return the §5 metrics.
     pub fn run(&self, policy: &mut dyn Policy) -> Result<SimResult> {
+        let mut arena = SimArena::new();
+        self.run_in(policy, &mut arena)
+    }
+
+    /// Like [`run`](Self::run), but with caller-provided reusable state —
+    /// the replication-runner hot path (zero net allocation per run once
+    /// the arena is warm).
+    pub fn run_in(&self, policy: &mut dyn Policy, arena: &mut SimArena) -> Result<SimResult> {
+        self.run_core(policy, arena, None)
+    }
+
+    /// Like [`run_in`](Self::run_in), additionally appending every
+    /// completion (including warm-up) to `trace`.
+    pub fn run_traced(
+        &self,
+        policy: &mut dyn Policy,
+        arena: &mut SimArena,
+        trace: &mut Vec<Completion>,
+    ) -> Result<SimResult> {
+        self.run_core(policy, arena, Some(trace))
+    }
+
+    fn run_core(
+        &self,
+        policy: &mut dyn Policy,
+        arena: &mut SimArena,
+        mut trace: Option<&mut Vec<Completion>>,
+    ) -> Result<SimResult> {
         let mu = self.mu;
         let cfg = &self.cfg;
         let (k, l) = (mu.types(), mu.procs());
@@ -96,105 +182,111 @@ impl<'a> ClosedNetwork<'a> {
 
         let needs_work = policy.needs_work_estimate();
         let mut rng = Rng::new(cfg.seed);
-        let mut procs: Vec<Processor> =
-            (0..l).map(|j| Processor::new(j, cfg.discipline)).collect();
+        arena.reset(l, cfg.discipline);
         let mut state = StateMatrix::zeros(k, l);
-        let mut programs: Vec<Program> = Vec::with_capacity(cfg.n_programs() as usize);
         for (ttype, &ni) in cfg.populations.iter().enumerate() {
             for _ in 0..ni {
-                programs.push(Program::new(programs.len(), ttype));
+                let id = arena.programs.len();
+                arena.programs.push(Program::new(id, ttype));
             }
         }
         // Shuffle initial dispatch order so no policy sees a sorted fill.
-        let mut order: Vec<usize> = (0..programs.len()).collect();
-        rng.shuffle(&mut order);
+        arena.order.extend(0..arena.programs.len());
+        rng.shuffle(&mut arena.order);
 
         let mut next_id = 0u64;
-        let mut work = vec![0.0f64; l];
         // Initial fill at t = 0.
-        for &p in &order {
-            let ttype = programs[p].ttype;
+        for &p in &arena.order {
+            let ttype = arena.programs[p].ttype;
             let size = cfg.dist.sample(&mut rng);
-            let task = programs[p].emit(next_id, 0.0, size);
+            let task = arena.programs[p].emit(next_id, 0.0, size);
             next_id += 1;
             if needs_work {
-                for (j, pr) in procs.iter().enumerate() {
-                    work[j] = pr.remaining_work_time();
+                for (j, pr) in arena.procs.iter().enumerate() {
+                    arena.work[j] = pr.remaining_work_time();
                 }
             }
             let view = SystemView {
                 mu,
                 state: &state,
-                work: &work,
+                work: &arena.work,
                 populations: &cfg.populations,
             };
             let j = policy.dispatch(ttype, &view, &mut rng);
             debug_assert!(j < l, "policy dispatched to invalid processor {j}");
-            procs[j].advance(0.0);
-            procs[j].push(task, mu.rate(ttype, j), 0.0);
+            arena.procs[j].advance(0.0);
+            arena.procs[j].push(task, mu.rate(ttype, j), 0.0);
             state.inc(ttype, j);
+        }
+        for j in 0..l {
+            arena.events.update(j, arena.procs[j].next_completion());
         }
 
         let total = cfg.warmup + cfg.measure;
-        let mut metrics = Metrics::new(k, l, 0.0);
+        arena.metrics.reset(k, l, 0.0);
         let mut measuring = false;
         let mut now = 0.0f64;
         let mut completions = 0u64;
 
         while completions < total {
-            // Next completion across processors.
-            let (j, t) = procs
-                .iter()
-                .enumerate()
-                .filter_map(|(j, p)| p.next_completion().map(|t| (j, t)))
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            // Next completion across processors: O(1) peek instead of the
+            // seed's linear argmin.
+            let (j, t) = arena
+                .events
+                .peek()
                 .ok_or_else(|| Error::Solver("deadlock: no runnable task".into()))?;
             debug_assert!(t >= now - 1e-9);
             now = t;
-            procs[j].advance(now);
-            let done = procs[j].pop_completed(now)?;
+            arena.procs[j].advance(now);
+            let done = arena.procs[j].pop_completed(now)?;
+            arena.events.update(j, arena.procs[j].next_completion());
             state.dec(done.ttype, j)?;
             completions += 1;
 
             if !measuring && completions > cfg.warmup {
                 measuring = true;
-                metrics = Metrics::new(k, l, now);
+                arena.metrics.reset(k, l, now);
             }
             if measuring {
                 let omega = done.size / mu.rate(done.ttype, j);
                 let e = energy.power(done.ttype, j) * omega;
-                metrics.record(now, now - done.arrive, e, done.ttype, j);
+                arena.metrics.record(now, now - done.arrive, e, done.ttype, j);
+            }
+            if let Some(tr) = trace.as_mut() {
+                tr.push(Completion { id: done.id, proc: j, time: now });
             }
 
             // The program immediately emits its successor task (closed
             // system: one task per program, always).
             let prog = done.program;
-            let ttype = programs[prog].ttype;
+            let ttype = arena.programs[prog].ttype;
             let size = cfg.dist.sample(&mut rng);
-            let task = programs[prog].emit(next_id, now, size);
+            let task = arena.programs[prog].emit(next_id, now, size);
             next_id += 1;
             if needs_work {
-                for (jj, pr) in procs.iter().enumerate() {
-                    work[jj] = pr.remaining_work_time();
+                for (jj, pr) in arena.procs.iter().enumerate() {
+                    arena.work[jj] = pr.remaining_work_time();
                 }
             }
             let view = SystemView {
                 mu,
                 state: &state,
-                work: &work,
+                work: &arena.work,
                 populations: &cfg.populations,
             };
             let dest = policy.dispatch(ttype, &view, &mut rng);
             debug_assert!(dest < l);
-            procs[dest].advance(now);
-            procs[dest].push(task, mu.rate(ttype, dest), now);
+            arena.procs[dest].advance(now);
+            arena.procs[dest].push(task, mu.rate(ttype, dest), now);
+            arena.events.update(dest, arena.procs[dest].next_completion());
             state.inc(ttype, dest);
 
-            // Invariant: the closed system always holds exactly N tasks.
+            // Invariant: the closed system always holds exactly N tasks
+            // (debug builds only; the O(k·l) scan vanishes in release).
             debug_assert_eq!(state.total(), cfg.n_programs());
         }
 
-        Ok(metrics.finalize(cfg.n_programs()))
+        Ok(arena.metrics.finalize(cfg.n_programs()))
     }
 }
 
@@ -320,6 +412,27 @@ mod tests {
         }
         let rel = (xs[0] - xs[1]).abs() / xs[0];
         assert!(rel < 0.08, "PS vs FCFS gap too large: {xs:?}");
+    }
+
+    #[test]
+    fn arena_reuse_is_deterministic() {
+        // The same seed through a warm arena reproduces the cold-arena
+        // run bit-for-bit, across disciplines.
+        let mu = paper_mu();
+        let mut arena = SimArena::new();
+        for d in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut cfg = quick_cfg(vec![10, 10]);
+            cfg.discipline = d;
+            cfg.measure = 2_000;
+            let net = ClosedNetwork::new(&mu, cfg).unwrap();
+            let cold = net.run(PolicyKind::Cab.build().as_mut()).unwrap();
+            let warm = net
+                .run_in(PolicyKind::Cab.build().as_mut(), &mut arena)
+                .unwrap();
+            assert_eq!(cold.throughput.to_bits(), warm.throughput.to_bits(), "{d:?}");
+            assert_eq!(cold.completed, warm.completed);
+            assert_eq!(cold.completions_by_cell, warm.completions_by_cell);
+        }
     }
 
     #[test]

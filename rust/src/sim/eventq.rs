@@ -1,0 +1,244 @@
+//! Indexed binary min-heap over per-processor next-completion times.
+//!
+//! The closed-network event loop needs one operation per event: *which
+//! processor completes next?*  The seed engine answered it with a linear
+//! argmin over all l processors per event; this queue answers it in O(1)
+//! (`peek`) with O(log l) re-keying of the one or two processors an event
+//! actually touches (`update`) — the classic indexed-heap
+//! decrease/increase-key structure.
+//!
+//! Ordering ties break toward the smaller processor index, so `peek`
+//! returns exactly what the seed's linear scan returned (Rust's
+//! `Iterator::min_by` keeps the *first* minimum), making the reworked
+//! engine event-for-event identical to the old one
+//! (`tests/hotpath_equiv.rs`).
+
+/// Sentinel for "processor not in the heap" (idle processor).
+const ABSENT: usize = usize::MAX;
+
+/// Indexed min-heap keyed by (time, processor id).
+#[derive(Debug, Clone, Default)]
+pub struct EventQueue {
+    /// Heap entries (key, processor id); `heap[0]` is the minimum.
+    heap: Vec<(f64, usize)>,
+    /// `pos[j]` = index of processor j's entry in `heap`, or [`ABSENT`].
+    pos: Vec<usize>,
+}
+
+impl EventQueue {
+    /// Empty queue sized for `l` processors.
+    pub fn new(l: usize) -> Self {
+        Self { heap: Vec::with_capacity(l), pos: vec![ABSENT; l] }
+    }
+
+    /// Clear and resize for `l` processors, keeping allocations.
+    pub fn reset(&mut self, l: usize) {
+        self.heap.clear();
+        self.pos.clear();
+        self.pos.resize(l, ABSENT);
+    }
+
+    /// Number of scheduled (non-idle) processors.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when no processor has a scheduled completion.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The earliest (processor, completion time), if any.
+    #[inline]
+    pub fn peek(&self) -> Option<(usize, f64)> {
+        self.heap.first().map(|&(t, j)| (j, t))
+    }
+
+    /// Re-key processor `j`: `Some(t)` schedules (or moves) its next
+    /// completion at `t`; `None` removes it (idle processor).
+    pub fn update(&mut self, j: usize, key: Option<f64>) {
+        debug_assert!(j < self.pos.len(), "processor {j} out of range");
+        match key {
+            Some(t) => {
+                debug_assert!(!t.is_nan(), "NaN completion time for {j}");
+                match self.pos[j] {
+                    ABSENT => {
+                        self.heap.push((t, j));
+                        let i = self.heap.len() - 1;
+                        self.pos[j] = i;
+                        self.sift_up(i);
+                    }
+                    i => {
+                        let old = self.heap[i].0;
+                        self.heap[i].0 = t;
+                        if t < old {
+                            self.sift_up(i);
+                        } else {
+                            self.sift_down(i);
+                        }
+                    }
+                }
+            }
+            None => {
+                let i = self.pos[j];
+                if i == ABSENT {
+                    return;
+                }
+                self.pos[j] = ABSENT;
+                let last = self.heap.len() - 1;
+                if i != last {
+                    self.heap.swap(i, last);
+                    self.heap.pop();
+                    let moved = self.heap[i].1;
+                    self.pos[moved] = i;
+                    // The swapped-in entry may need to move either way.
+                    self.sift_up(i);
+                    self.sift_down(self.pos[moved]);
+                } else {
+                    self.heap.pop();
+                }
+            }
+        }
+    }
+
+    /// Strict heap order: (t, j) lexicographic, smaller j first on ties.
+    #[inline]
+    fn less(a: (f64, usize), b: (f64, usize)) -> bool {
+        a.0 < b.0 || (a.0 == b.0 && a.1 < b.1)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::less(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                self.pos[self.heap[i].1] = i;
+                self.pos[self.heap[parent].1] = parent;
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (left, right) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if left < self.heap.len() && Self::less(self.heap[left], self.heap[smallest]) {
+                smallest = left;
+            }
+            if right < self.heap.len() && Self::less(self.heap[right], self.heap[smallest]) {
+                smallest = right;
+            }
+            if smallest == i {
+                break;
+            }
+            self.heap.swap(i, smallest);
+            self.pos[self.heap[i].1] = i;
+            self.pos[self.heap[smallest].1] = smallest;
+            i = smallest;
+        }
+    }
+
+    /// Debug-only structural invariant: heap order holds and `pos` is the
+    /// exact inverse of the heap's id column.
+    #[cfg(debug_assertions)]
+    pub fn check_invariants(&self) {
+        for i in 1..self.heap.len() {
+            let parent = (i - 1) / 2;
+            assert!(
+                !Self::less(self.heap[i], self.heap[parent]),
+                "heap order violated at {i}"
+            );
+        }
+        for (i, &(_, j)) in self.heap.iter().enumerate() {
+            assert_eq!(self.pos[j], i, "pos[{j}] desynced");
+        }
+        let present = self.pos.iter().filter(|&&p| p != ABSENT).count();
+        assert_eq!(present, self.heap.len(), "pos/heap cardinality");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Linear-argmin reference: first index with the minimal key.
+    fn argmin(keys: &[Option<f64>]) -> Option<(usize, f64)> {
+        keys.iter()
+            .enumerate()
+            .filter_map(|(j, k)| k.map(|t| (j, t)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+    }
+
+    #[test]
+    fn peek_matches_linear_argmin_on_random_streams() {
+        use crate::sim::rng::Rng;
+        let mut rng = Rng::new(0xE_4_E);
+        for l in [1usize, 2, 3, 8, 17] {
+            let mut q = EventQueue::new(l);
+            let mut mirror: Vec<Option<f64>> = vec![None; l];
+            for step in 0..2_000 {
+                let j = rng.index(l);
+                let key = if rng.bool_with(0.15) {
+                    None
+                } else {
+                    Some(rng.range_f64(0.0, 100.0))
+                };
+                q.update(j, key);
+                mirror[j] = key;
+                q.check_invariants();
+                let want = argmin(&mirror);
+                let got = q.peek();
+                match (want, got) {
+                    (None, None) => {}
+                    (Some((wj, wt)), Some((gj, gt))) => {
+                        assert_eq!(wj, gj, "l={l} step={step}");
+                        assert_eq!(wt, gt, "l={l} step={step}");
+                    }
+                    other => panic!("l={l} step={step}: {other:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ties_break_toward_smaller_index() {
+        let mut q = EventQueue::new(4);
+        q.update(3, Some(5.0));
+        q.update(1, Some(5.0));
+        q.update(2, Some(5.0));
+        assert_eq!(q.peek(), Some((1, 5.0)));
+        q.update(1, None);
+        assert_eq!(q.peek(), Some((2, 5.0)));
+    }
+
+    #[test]
+    fn rekey_moves_both_directions() {
+        let mut q = EventQueue::new(3);
+        q.update(0, Some(1.0));
+        q.update(1, Some(2.0));
+        q.update(2, Some(3.0));
+        q.update(0, Some(10.0)); // increase-key of the min
+        assert_eq!(q.peek(), Some((1, 2.0)));
+        q.update(2, Some(0.5)); // decrease-key of the max
+        assert_eq!(q.peek(), Some((2, 0.5)));
+        q.check_invariants();
+    }
+
+    #[test]
+    fn remove_absent_is_noop_and_reset_reuses() {
+        let mut q = EventQueue::new(2);
+        q.update(0, None);
+        assert!(q.is_empty());
+        q.update(1, Some(1.0));
+        assert_eq!(q.len(), 1);
+        q.reset(5);
+        assert!(q.is_empty());
+        q.update(4, Some(2.0));
+        assert_eq!(q.peek(), Some((4, 2.0)));
+    }
+}

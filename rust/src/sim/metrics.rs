@@ -28,16 +28,24 @@ pub struct Metrics {
 impl Metrics {
     /// New accumulator opening its window at `t_start`.
     pub fn new(k: usize, l: usize, t_start: f64) -> Self {
-        Self {
-            completed: 0,
-            sum_response: 0.0,
-            sum_energy: 0.0,
-            t_start,
-            t_last: t_start,
-            completions_by_cell: vec![0; k * l],
-            k,
-            l,
-        }
+        let mut m = Self::default();
+        m.reset(k, l, t_start);
+        m
+    }
+
+    /// Re-open the measurement window at `t_start`, zeroing all
+    /// accumulators while keeping the cell-count allocation — the
+    /// arena-reuse path (no per-replication allocation).
+    pub fn reset(&mut self, k: usize, l: usize, t_start: f64) {
+        self.completed = 0;
+        self.sum_response = 0.0;
+        self.sum_energy = 0.0;
+        self.t_start = t_start;
+        self.t_last = t_start;
+        self.completions_by_cell.clear();
+        self.completions_by_cell.resize(k * l, 0);
+        self.k = k;
+        self.l = l;
     }
 
     /// Record a completed task.
@@ -161,6 +169,19 @@ mod tests {
         assert!((r.routing_fraction(0, 0) - 2.0 / 3.0).abs() < 1e-12);
         assert!((r.routing_fraction(1, 1) - 1.0).abs() < 1e-12);
         assert_eq!(r.routing_fraction(1, 0), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_but_reuses() {
+        let mut m = Metrics::new(2, 2, 0.0);
+        m.record(1.0, 1.0, 0.5, 0, 0);
+        m.reset(2, 2, 5.0);
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.finalize(4).throughput, 0.0);
+        m.record(7.0, 2.0, 0.0, 1, 1);
+        let r = m.finalize(4);
+        assert!((r.throughput - 0.5).abs() < 1e-12); // 1 task / 2 s
+        assert_eq!(r.completions_by_cell, vec![0, 0, 0, 1]);
     }
 
     #[test]

@@ -4,21 +4,30 @@
 //! * [`distribution`] — the four §5 task-size distributions, mean-1
 //!   normalized: exponential, bounded Pareto, uniform, constant.
 //! * [`task`] / [`processor`] — tasks and the PS / FCFS / LCFS service
-//!   disciplines (all work-conserving, per Lemma 3).
+//!   disciplines (all work-conserving, per Lemma 3), maintained
+//!   incrementally: virtual-time PS, O(1) FCFS/LCFS, cached
+//!   remaining-work aggregates.
+//! * [`eventq`] — indexed binary min-heap over per-processor
+//!   next-completion times (O(1) peek, O(log l) re-key).
 //! * [`engine`] — the closed network: N programs, one task in flight per
-//!   program, policy-driven dispatch on every completion.
+//!   program, policy-driven dispatch on every completion; arena-reusable
+//!   via [`engine::SimArena`].
 //! * [`metrics`] — throughput, response time, energy, EDP estimators with
 //!   warm-up discard (the §5 measurement methodology).
 //! * [`workload`] — scenario builders for the paper's sweeps.
-
 //! * [`dynamic`] — piece-wise closed systems (§3.1) with per-phase
 //!   policy re-solve (§4.1's "on the fly" GrIn use case).
+//! * [`replicate`] — zero-dep `std::thread` replication runner: R seeded
+//!   replications × S scenarios fanned across cores with per-thread
+//!   reusable arenas, mean/95%-CI per cell.
 
 pub mod distribution;
 pub mod dynamic;
 pub mod engine;
+pub mod eventq;
 pub mod metrics;
 pub mod processor;
+pub mod replicate;
 pub mod rng;
 pub mod task;
 pub mod workload;

@@ -8,7 +8,29 @@
 //!   demonstrate the Lemma-3 discipline independence.
 //!
 //! Between events the active-rate profile is constant, so the processor
-//! advances remaining work lazily: `advance(now)` then mutate.
+//! advances lazily: `advance(now)` then mutate.  The seed implementation
+//! rescanned every resident on each call (O(n) `advance`, O(n)
+//! `next_completion`, O(n) share lookups ⇒ O(n²) event loops); this
+//! version maintains everything incrementally:
+//!
+//! * **PS runs on virtual time**: V advances at 1/n per unit real time,
+//!   and each resident's *virtual finish time* F = V(push) + size/rate is
+//!   a constant.  Residents sit in a binary min-heap on (F, seq), so
+//!   `next_completion` is O(1) (heap root) and arrivals/completions are
+//!   O(log n) heap operations — no per-resident work ever.
+//! * **FCFS is a ring, LCFS a stack**: only the served head/top is
+//!   advanced, so `advance`, `next_completion` and `pop_completed` are
+//!   O(1).
+//! * **`remaining_work_time` is an aggregate**: Σ remaining/rate is
+//!   maintained incrementally (add size/rate on push, subtract dt on
+//!   advance — every work-conserving discipline drains exactly one
+//!   drain-time unit per unit of busy time), so load-balance dispatch
+//!   reads it in O(1) instead of re-summing the queue.
+//!
+//! [`ScalarProcessor`] preserves the seed's rescan implementation as the
+//! reference for the trace-equivalence property tests
+//! (`tests/hotpath_equiv.rs`): both produce identical completion
+//! sequences on fixed seeds.
 
 use super::task::Task;
 use crate::error::{Error, Result};
@@ -53,49 +75,318 @@ struct Resident {
     task: Task,
     /// Full-speed service rate μ_ij for this task on this processor.
     rate: f64,
-    /// Remaining work units.
-    remaining: f64,
-    /// Arrival order stamp (discipline ordering).
+    /// Progress key.  PS: the *virtual finish time* F = V(push) +
+    /// size/rate, constant for the resident's lifetime.  FCFS/LCFS: the
+    /// remaining work; only the served head/top is ever decremented.
+    key: f64,
+    /// Arrival order stamp (discipline ordering, heap tie-break).
     seq: u64,
 }
 
 /// One processor (or cluster thereof) with a service discipline.
+///
+/// The backing store is a single `Vec` interpreted per discipline: a
+/// binary min-heap on (key, seq) for PS, a ring starting at `head` for
+/// FCFS, a stack for LCFS.  `reset` keeps the allocation, so arenas
+/// reuse processors across replications with zero heap churn.
 #[derive(Debug, Clone)]
 pub struct Processor {
     /// Column index in the affinity matrix.
     pub id: usize,
     discipline: Discipline,
-    residents: Vec<Resident>,
+    items: Vec<Resident>,
+    /// Ring head (FCFS only; 0 for PS/LCFS).
+    head: usize,
+    /// PS virtual time; advances at 1/n per unit real time while busy.
+    vtime: f64,
     last_update: f64,
+    /// Σ remaining/rate over residents, as of `last_update`.
+    work_time: f64,
     seq: u64,
 }
 
 impl Processor {
     /// Empty processor.
     pub fn new(id: usize, discipline: Discipline) -> Self {
-        Self { id, discipline, residents: Vec::new(), last_update: 0.0, seq: 0 }
+        Self {
+            id,
+            discipline,
+            items: Vec::new(),
+            head: 0,
+            vtime: 0.0,
+            last_update: 0.0,
+            work_time: 0.0,
+            seq: 0,
+        }
+    }
+
+    /// Clear all state (possibly under a new discipline) while keeping
+    /// the resident allocation — the arena-reuse path.
+    pub fn reset(&mut self, discipline: Discipline) {
+        self.discipline = discipline;
+        self.items.clear();
+        self.head = 0;
+        self.vtime = 0.0;
+        self.last_update = 0.0;
+        self.work_time = 0.0;
+        self.seq = 0;
     }
 
     /// Number of resident tasks.
     #[inline]
     pub fn occupancy(&self) -> usize {
-        self.residents.len()
+        self.items.len() - self.head
     }
 
     /// Remaining work in *time* units at full speed — the perfect-info
     /// load-balancing metric of §5 ("task total size in the queue",
-    /// measured in drain time).
+    /// measured in drain time), as of the last `advance`.
+    #[inline]
+    pub fn remaining_work_time(&self) -> f64 {
+        self.work_time
+    }
+
+    /// Progress all active residents to time `now` — O(1) for every
+    /// discipline (PS moves the virtual clock, FCFS/LCFS decrement only
+    /// the served resident).
+    pub fn advance(&mut self, now: f64) {
+        let dt = now - self.last_update;
+        debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
+        if dt > 0.0 {
+            let n = self.occupancy();
+            if n > 0 {
+                match self.discipline {
+                    Discipline::Ps => self.vtime += dt / n as f64,
+                    Discipline::Fcfs => {
+                        let r = &mut self.items[self.head];
+                        r.key -= dt * r.rate;
+                        if r.key < 0.0 {
+                            // Numerical dust only; completions are popped
+                            // at their exact event time.
+                            debug_assert!(r.key > -1e-6, "{}", r.key);
+                            r.key = 0.0;
+                        }
+                    }
+                    Discipline::Lcfs => {
+                        let r = self.items.last_mut().expect("occupancy > 0");
+                        r.key -= dt * r.rate;
+                        if r.key < 0.0 {
+                            debug_assert!(r.key > -1e-6, "{}", r.key);
+                            r.key = 0.0;
+                        }
+                    }
+                }
+                // Work conservation: any busy discipline drains exactly
+                // one drain-time unit per unit of real time.
+                self.work_time -= dt;
+                if self.work_time < 0.0 {
+                    self.work_time = 0.0;
+                }
+            }
+        }
+        self.last_update = now;
+    }
+
+    /// Admit a task with its full-speed rate; caller must have advanced
+    /// the processor to `now` first.
+    pub fn push(&mut self, task: Task, rate: f64, now: f64) {
+        debug_assert!(rate > 0.0);
+        debug_assert!((now - self.last_update).abs() < 1e-9);
+        let seq = self.seq;
+        self.seq += 1;
+        self.work_time += task.size / rate;
+        let key = match self.discipline {
+            Discipline::Ps => self.vtime + task.size / rate,
+            Discipline::Fcfs | Discipline::Lcfs => task.size,
+        };
+        self.items.push(Resident { task, rate, key, seq });
+        if self.discipline == Discipline::Ps {
+            self.sift_up(self.items.len() - 1);
+        }
+    }
+
+    /// Absolute time of the next completion if no further events occur —
+    /// O(1): the PS heap root / FCFS head / LCFS top.
+    pub fn next_completion(&self) -> Option<f64> {
+        let n = self.occupancy();
+        if n == 0 {
+            return None;
+        }
+        Some(match self.discipline {
+            Discipline::Ps => {
+                let r = &self.items[0];
+                // remaining = (F − V)·rate, served at rate/n.
+                self.last_update + (r.key - self.vtime) * n as f64
+            }
+            Discipline::Fcfs => {
+                let r = &self.items[self.head];
+                self.last_update + r.key / r.rate
+            }
+            Discipline::Lcfs => {
+                let r = self.items.last().expect("occupancy > 0");
+                self.last_update + r.key / r.rate
+            }
+        })
+    }
+
+    /// Remove and return the resident completing at `now`.  Caller must
+    /// `advance(now)` first.
+    pub fn pop_completed(&mut self, now: f64) -> Result<Task> {
+        debug_assert!((now - self.last_update).abs() < 1e-9);
+        if self.occupancy() == 0 {
+            return Err(Error::Shape(format!(
+                "pop_completed on idle processor {}",
+                self.id
+            )));
+        }
+        // Residual work of the completing resident (numerical dust).
+        let (rem, rate) = match self.discipline {
+            Discipline::Ps => {
+                let r = &self.items[0];
+                ((r.key - self.vtime) * r.rate, r.rate)
+            }
+            Discipline::Fcfs => {
+                let r = &self.items[self.head];
+                (r.key, r.rate)
+            }
+            Discipline::Lcfs => {
+                let r = self.items.last().expect("occupancy > 0");
+                (r.key, r.rate)
+            }
+        };
+        if rem > 1e-6 {
+            return Err(Error::Shape(format!(
+                "no task completing now on processor {} (residual {rem})",
+                self.id
+            )));
+        }
+        let resident = match self.discipline {
+            Discipline::Ps => self.pop_heap_root(),
+            Discipline::Fcfs => {
+                let r = self.items[self.head].clone();
+                self.head += 1;
+                // Amortized O(1) compaction of the consumed prefix.
+                if self.head * 2 >= self.items.len() {
+                    self.items.drain(..self.head);
+                    self.head = 0;
+                }
+                r
+            }
+            Discipline::Lcfs => self.items.pop().expect("occupancy > 0"),
+        };
+        self.work_time -= rem.max(0.0) / rate;
+        if self.occupancy() == 0 {
+            // Cancel accumulated dust whenever the queue empties, so the
+            // aggregates stay exact across arbitrarily long runs.
+            self.work_time = 0.0;
+            self.vtime = 0.0;
+            self.head = 0;
+        } else if self.work_time < 0.0 {
+            self.work_time = 0.0;
+        }
+        Ok(resident.task)
+    }
+
+    /// Tasks of each type currently resident (invariant checks; compiled
+    /// only with debug assertions so release builds pay nothing).
+    #[cfg(debug_assertions)]
+    pub fn count_type(&self, ttype: usize) -> u32 {
+        self.items[self.head..]
+            .iter()
+            .filter(|r| r.task.ttype == ttype)
+            .count() as u32
+    }
+
+    /// Min-heap order on (virtual finish, seq).  This sift logic is
+    /// intentionally kept separate from [`super::eventq::EventQueue`]'s:
+    /// that heap is *indexed* (maintains a position map for
+    /// decrease-key), this one is intrusive over [`Resident`]s with no
+    /// removal-by-id — unifying them generically would complicate both
+    /// hot paths.  Both are property-tested against linear references.
+    #[inline]
+    fn heap_less(a: &Resident, b: &Resident) -> bool {
+        a.key < b.key || (a.key == b.key && a.seq < b.seq)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if Self::heap_less(&self.items[i], &self.items[parent]) {
+                self.items.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn pop_heap_root(&mut self) -> Resident {
+        let root = self.items.swap_remove(0);
+        // Sift the swapped-in element down.
+        let len = self.items.len();
+        let mut i = 0;
+        loop {
+            let (left, right) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if left < len && Self::heap_less(&self.items[left], &self.items[smallest]) {
+                smallest = left;
+            }
+            if right < len && Self::heap_less(&self.items[right], &self.items[smallest]) {
+                smallest = right;
+            }
+            if smallest == i {
+                break;
+            }
+            self.items.swap(i, smallest);
+            i = smallest;
+        }
+        root
+    }
+}
+
+/// The seed's rescan-everything processor, preserved verbatim as the
+/// reference implementation for trace-equivalence property tests: the
+/// reworked [`Processor`] must produce event-for-event identical
+/// completion sequences on fixed seeds (`tests/hotpath_equiv.rs`).
+#[derive(Debug, Clone)]
+pub struct ScalarProcessor {
+    /// Column index in the affinity matrix.
+    pub id: usize,
+    discipline: Discipline,
+    residents: Vec<ScalarResident>,
+    last_update: f64,
+    seq: u64,
+}
+
+#[derive(Debug, Clone)]
+struct ScalarResident {
+    task: Task,
+    rate: f64,
+    remaining: f64,
+    seq: u64,
+}
+
+impl ScalarProcessor {
+    /// Empty processor.
+    pub fn new(id: usize, discipline: Discipline) -> Self {
+        Self { id, discipline, residents: Vec::new(), last_update: 0.0, seq: 0 }
+    }
+
+    /// Number of resident tasks.
+    pub fn occupancy(&self) -> usize {
+        self.residents.len()
+    }
+
+    /// Σ remaining/rate, recomputed by full scan.
     pub fn remaining_work_time(&self) -> f64 {
         self.residents.iter().map(|r| r.remaining / r.rate).sum()
     }
 
-    /// Share of the processor each resident currently receives, by index.
     fn share(&self, idx: usize) -> f64 {
         let n = self.residents.len();
         match self.discipline {
             Discipline::Ps => 1.0 / n as f64,
             Discipline::Fcfs => {
-                // Oldest seq is served.
                 let head = self
                     .residents
                     .iter()
@@ -124,7 +415,7 @@ impl Processor {
         }
     }
 
-    /// Progress all active residents to time `now`.
+    /// Progress all active residents to time `now` (O(n²) scan).
     pub fn advance(&mut self, now: f64) {
         let dt = now - self.last_update;
         debug_assert!(dt >= -1e-9, "time went backwards: {dt}");
@@ -135,8 +426,6 @@ impl Processor {
                     let r = &mut self.residents[idx];
                     r.remaining -= dt * sh * r.rate;
                     if r.remaining < 0.0 {
-                        // Numerical dust only; completions are popped at
-                        // their exact event time.
                         debug_assert!(r.remaining > -1e-6, "{}", r.remaining);
                         r.remaining = 0.0;
                     }
@@ -146,19 +435,17 @@ impl Processor {
         self.last_update = now;
     }
 
-    /// Admit a task with its full-speed rate; caller must have advanced
-    /// the processor to `now` first.
+    /// Admit a task (caller advanced to `now` first).
     pub fn push(&mut self, task: Task, rate: f64, now: f64) {
         debug_assert!(rate > 0.0);
         debug_assert!((now - self.last_update).abs() < 1e-9);
         let seq = self.seq;
         self.seq += 1;
-        self.residents.push(Resident { task, rate, remaining: f64::NAN, seq });
-        let r = self.residents.last_mut().unwrap();
-        r.remaining = r.task.size;
+        let remaining = task.size;
+        self.residents.push(ScalarResident { task, rate, remaining, seq });
     }
 
-    /// Absolute time of the next completion if no further events occur.
+    /// Absolute time of the next completion (O(n²) scan).
     pub fn next_completion(&self) -> Option<f64> {
         let mut best: Option<f64> = None;
         for idx in 0..self.residents.len() {
@@ -175,8 +462,7 @@ impl Processor {
         best
     }
 
-    /// Remove and return the resident completing at `now` (the active one
-    /// with the least residual).  Caller must `advance(now)` first.
+    /// Remove the resident completing at `now`.
     pub fn pop_completed(&mut self, now: f64) -> Result<Task> {
         debug_assert!((now - self.last_update).abs() < 1e-9);
         let mut best: Option<(usize, f64)> = None;
@@ -198,11 +484,6 @@ impl Processor {
             )));
         }
         Ok(self.residents.swap_remove(idx).task)
-    }
-
-    /// Tasks of each type currently resident (for invariant checks).
-    pub fn count_type(&self, ttype: usize) -> u32 {
-        self.residents.iter().filter(|r| r.task.ttype == ttype).count() as u32
     }
 }
 
@@ -308,7 +589,11 @@ mod tests {
         p.push(task(2, 0, 3.0), 1.0, 0.0);
         assert!((p.remaining_work_time() - 4.0).abs() < 1e-12);
         assert_eq!(p.occupancy(), 2);
+        #[cfg(debug_assertions)]
         assert_eq!(p.count_type(0), 2);
+        // The aggregate drains at exactly 1 per unit busy time.
+        p.advance(0.5);
+        assert!((p.remaining_work_time() - 3.5).abs() < 1e-12);
     }
 
     #[test]
@@ -316,5 +601,69 @@ mod tests {
         let mut p = Processor::new(0, Discipline::Ps);
         assert!(p.pop_completed(0.0).is_err());
         assert!(p.next_completion().is_none());
+    }
+
+    #[test]
+    fn reset_clears_state_for_reuse() {
+        let mut p = Processor::new(3, Discipline::Ps);
+        p.push(task(1, 0, 1.0), 1.0, 0.0);
+        p.advance(0.25);
+        p.reset(Discipline::Fcfs);
+        assert_eq!(p.occupancy(), 0);
+        assert_eq!(p.remaining_work_time(), 0.0);
+        assert!(p.next_completion().is_none());
+        // Fresh run after reset behaves like a new processor.
+        p.push(task(9, 0, 2.0), 1.0, 0.0);
+        assert!((p.next_completion().unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scalar_and_fast_agree_on_a_mixed_sequence() {
+        // Interleaved pushes/pops at uneven times, every discipline: the
+        // reworked processor tracks the seed reference exactly.
+        use crate::sim::rng::Rng;
+        for d in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut rng = Rng::new(0xBEEF + d as u64);
+            let mut fast = Processor::new(0, d);
+            let mut slow = ScalarProcessor::new(0, d);
+            let mut now = 0.0;
+            let mut next_id = 0u64;
+            for step in 0..400 {
+                let push = fast.occupancy() == 0 || rng.bool_with(0.45);
+                if push {
+                    // Arrive a bit after `now` — but never beyond the
+                    // pending completion: the engine contract is that
+                    // `advance` only ever moves to event times.
+                    let mut at = now + rng.range_f64(0.0, 0.3);
+                    if let Some(tc) = fast.next_completion() {
+                        at = at.min(tc);
+                    }
+                    let sz = rng.range_f64(0.1, 2.0);
+                    let rate = rng.range_f64(0.5, 4.0);
+                    let tk = task(next_id, (next_id % 2) as usize, sz);
+                    next_id += 1;
+                    fast.advance(at);
+                    slow.advance(at);
+                    fast.push(tk.clone(), rate, at);
+                    slow.push(tk, rate, at);
+                    now = at;
+                } else {
+                    let tf = fast.next_completion().unwrap();
+                    let ts = slow.next_completion().unwrap();
+                    assert!((tf - ts).abs() < 1e-9, "{d:?} step {step}: {tf} vs {ts}");
+                    fast.advance(tf);
+                    slow.advance(ts);
+                    let a = fast.pop_completed(tf).unwrap();
+                    let b = slow.pop_completed(ts).unwrap();
+                    assert_eq!(a.id, b.id, "{d:?} step {step}");
+                    now = tf;
+                }
+                assert_eq!(fast.occupancy(), slow.occupancy());
+                assert!(
+                    (fast.remaining_work_time() - slow.remaining_work_time()).abs() < 1e-6,
+                    "{d:?} step {step}"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,314 @@
+//! Parallel replication runner — the §5 methodology at fleet scale.
+//!
+//! Every figure in the paper is thousands of runs × tens of thousands of
+//! completions; the multi-processor-type scenarios of the follow-up work
+//! (arXiv:1711.06433, arXiv:1712.03246) need far more simulated
+//! configurations still.  This module fans R seeded replications × S
+//! scenario cells across cores with nothing but `std::thread`:
+//!
+//! * **work stealing by atomic counter** — workers pull the next job
+//!   index from a shared `AtomicUsize`, so imbalanced cells never idle a
+//!   core;
+//! * **per-thread arenas** — each worker owns one [`SimArena`];
+//!   processors, programs, work buffers and the event heap are allocated
+//!   once per thread and reset between runs (zero net allocation per
+//!   replication once warm, gated by `tests/arena_alloc.rs`);
+//! * **deterministic regardless of thread count** — replication seeds
+//!   are derived from (base seed, cell, rep) alone and every result is
+//!   written to its own pre-assigned slot, so a 16-thread sweep is
+//!   bit-identical to a single-threaded one.
+//!
+//! Each cell reports mean and a normal-approximation 95% confidence
+//! interval over its replications.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::policy::PolicyKind;
+
+use super::engine::{ClosedNetwork, SimArena, SimConfig};
+use super::rng::SplitMix64;
+
+/// How to fan out: replication count, worker threads, base seed.
+#[derive(Debug, Clone)]
+pub struct ReplicationPlan {
+    /// Seeded replications per cell (R).
+    pub reps: u32,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Base seed mixed into every replication seed.
+    pub base_seed: u64,
+}
+
+impl Default for ReplicationPlan {
+    fn default() -> Self {
+        Self { reps: 16, threads: 0, base_seed: 0x5EED }
+    }
+}
+
+impl ReplicationPlan {
+    /// The worker count actually used.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// One sweep cell: a (system, policy) configuration replicated R times.
+#[derive(Debug, Clone)]
+pub struct SimCell {
+    /// Display label ("eta=0.3 CAB", …).
+    pub label: String,
+    /// Affinity matrix of this cell.
+    pub mu: AffinityMatrix,
+    /// Run configuration; `seed` acts as a per-cell salt, the plan's
+    /// replication seeds are derived on top of it.
+    pub sim: SimConfig,
+    /// Policy under test (built fresh per replication).
+    pub policy: PolicyKind,
+}
+
+/// Aggregated replication statistics for one cell.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    /// The cell's label.
+    pub label: String,
+    /// Replications aggregated.
+    pub reps: u32,
+    /// Mean throughput X̄ across replications.
+    pub mean_x: f64,
+    /// Sample standard deviation of X.
+    pub sd_x: f64,
+    /// 95% CI half-width for X̄ (1.96·sd/√R, normal approximation).
+    pub ci95_x: f64,
+    /// Mean response time E[T] across replications.
+    pub mean_response: f64,
+    /// 95% CI half-width for E[T].
+    pub ci95_response: f64,
+}
+
+/// Deterministic replication seed: depends only on (base, cell salt,
+/// cell index, rep index) — never on thread scheduling.
+fn rep_seed(base: u64, cell_salt: u64, cell: usize, rep: u32) -> u64 {
+    let mut sm = SplitMix64::new(base ^ cell_salt.rotate_left(17));
+    let salt = sm.next() ^ (((cell as u64) << 32) | rep as u64);
+    SplitMix64::new(salt).next()
+}
+
+/// Run every cell × replication across the plan's worker threads and
+/// aggregate per-cell statistics (in cell order).
+pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellStats>> {
+    if cells.is_empty() || plan.reps == 0 {
+        return Err(Error::Config("replication sweep needs ≥1 cell and ≥1 rep".into()));
+    }
+    let reps = plan.reps as usize;
+    let jobs = cells.len() * reps;
+    let threads = plan.effective_threads().clamp(1, jobs);
+    let next = AtomicUsize::new(0);
+    // (throughput, mean response) per job, slot-addressed so aggregation
+    // order — and therefore every fp sum — is independent of scheduling.
+    let results: Mutex<Vec<Option<(f64, f64)>>> = Mutex::new(vec![None; jobs]);
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let mut arena = SimArena::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= jobs {
+                        break;
+                    }
+                    if failure.lock().expect("failure lock").is_some() {
+                        break;
+                    }
+                    let (c, r) = (i / reps, (i % reps) as u32);
+                    let cell = &cells[c];
+                    let mut cfg = cell.sim.clone();
+                    cfg.seed = rep_seed(plan.base_seed, cell.sim.seed, c, r);
+                    let run = ClosedNetwork::new(&cell.mu, cfg).and_then(|net| {
+                        let mut policy = cell.policy.build();
+                        net.run_in(policy.as_mut(), &mut arena)
+                    });
+                    match run {
+                        Ok(res) => {
+                            results.lock().expect("results lock")[i] =
+                                Some((res.throughput, res.mean_response));
+                        }
+                        Err(e) => {
+                            *failure.lock().expect("failure lock") = Some(e);
+                            break;
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(e) = failure.into_inner().expect("failure lock") {
+        return Err(e);
+    }
+    let results = results.into_inner().expect("results lock");
+    let mut out = Vec::with_capacity(cells.len());
+    for (c, cell) in cells.iter().enumerate() {
+        let slice = &results[c * reps..(c + 1) * reps];
+        let mut xs = Vec::with_capacity(reps);
+        let mut ts = Vec::with_capacity(reps);
+        for slot in slice {
+            let (x, t) = slot.ok_or_else(|| {
+                Error::Runtime(format!("cell '{}' missing a replication", cell.label))
+            })?;
+            xs.push(x);
+            ts.push(t);
+        }
+        let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
+        let (mean_response, _, ci95_response) = mean_sd_ci(&ts);
+        out.push(CellStats {
+            label: cell.label.clone(),
+            reps: plan.reps,
+            mean_x,
+            sd_x,
+            ci95_x,
+            mean_response,
+            ci95_response,
+        });
+    }
+    Ok(out)
+}
+
+/// Mean, sample sd and 95% CI half-width of a replication sample.
+fn mean_sd_ci(xs: &[f64]) -> (f64, f64, f64) {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    let sd = var.sqrt();
+    (mean, sd, 1.96 * sd / n.sqrt())
+}
+
+/// Fan an arbitrary job list across `threads` workers (0 = one per
+/// core), preserving item order in the result.  The generic sibling of
+/// [`run_cells`] for heterogeneous work — `hetsched scenario --compare`
+/// runs its three resolve modes through it, and the ablation benches
+/// their arms.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    if items.is_empty() {
+        return Vec::new();
+    }
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let threads = (if threads > 0 { threads } else { auto }).clamp(1, items.len());
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<R>>> = Mutex::new((0..items.len()).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                out.lock().expect("parallel_map lock")[i] = Some(r);
+            });
+        }
+    });
+    out.into_inner()
+        .expect("parallel_map lock")
+        .into_iter()
+        .map(|slot| slot.expect("worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload;
+
+    fn quick_cells() -> Vec<SimCell> {
+        let mu = workload::paper_two_type_mu();
+        [PolicyKind::Cab, PolicyKind::Jsq]
+            .into_iter()
+            .map(|policy| {
+                let mut sim = SimConfig::paper_default(vec![10, 10]);
+                sim.warmup = 100;
+                sim.measure = 1_200;
+                SimCell {
+                    label: policy.name().to_string(),
+                    mu: mu.clone(),
+                    sim,
+                    policy,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let cells = quick_cells();
+        let mk = |threads| ReplicationPlan { reps: 6, threads, base_seed: 42 };
+        let one = run_cells(&cells, &mk(1)).unwrap();
+        let four = run_cells(&cells, &mk(4)).unwrap();
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits(), "{}", a.label);
+            assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits(), "{}", a.label);
+        }
+    }
+
+    #[test]
+    fn stats_are_sane_and_cab_wins() {
+        let cells = quick_cells();
+        let plan = ReplicationPlan { reps: 8, threads: 0, base_seed: 7 };
+        let stats = run_cells(&cells, &plan).unwrap();
+        let (cab, jsq) = (&stats[0], &stats[1]);
+        assert_eq!(cab.reps, 8);
+        assert!(cab.mean_x > 0.0 && cab.ci95_x >= 0.0);
+        // Distinct seeds ⇒ genuine replication spread.
+        assert!(cab.sd_x > 0.0, "replications identical?");
+        assert!(cab.mean_x >= jsq.mean_x * 0.999, "CAB {} vs JSQ {}", cab.mean_x, jsq.mean_x);
+        // Smaller samples still aggregate cleanly.
+        let wide = run_cells(&cells, &ReplicationPlan { reps: 2, threads: 2, base_seed: 7 })
+            .unwrap();
+        assert!(wide[0].ci95_x.is_finite() && wide[0].ci95_x >= 0.0);
+    }
+
+    #[test]
+    fn rep_seeds_are_distinct() {
+        let mut seen = std::collections::HashSet::new();
+        for c in 0..8 {
+            for r in 0..16 {
+                assert!(seen.insert(rep_seed(1, 99, c, r)), "collision at ({c},{r})");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..37).collect();
+        let out = parallel_map(&items, 4, |i, &x| x * 2 + i as u64);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, items[i] * 2 + i as u64);
+        }
+        let empty: Vec<u64> = Vec::new();
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+    }
+
+    #[test]
+    fn rejects_empty_plans() {
+        assert!(run_cells(&[], &ReplicationPlan::default()).is_err());
+        let cells = quick_cells();
+        let plan = ReplicationPlan { reps: 0, threads: 1, base_seed: 0 };
+        assert!(run_cells(&cells, &plan).is_err());
+    }
+}

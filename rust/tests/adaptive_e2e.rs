@@ -29,7 +29,7 @@ fn prop_incremental_x_matches_full_evaluation_within_1e9() {
             let p = g.usize_in(0, k - 1);
             let j = g.usize_in(0, l - 1);
             let want_plus = x_df_plus(&mu, &s, p, j);
-            let got_plus = inc.delta_plus(&mu, p, j);
+            let got_plus = inc.delta_plus(p, j);
             if (want_plus - got_plus).abs() > 1e-9 {
                 return Err(format!(
                     "step {step}: Δ+ {got_plus} vs {want_plus} at ({p},{j})"
@@ -37,7 +37,7 @@ fn prop_incremental_x_matches_full_evaluation_within_1e9() {
             }
             if s.get(p, j) > 0 {
                 let want_minus = x_df_minus(&mu, &s, p, j);
-                let got_minus = inc.delta_minus(&mu, p, j);
+                let got_minus = inc.delta_minus(p, j);
                 if (want_minus - got_minus).abs() > 1e-9 {
                     return Err(format!(
                         "step {step}: Δ- {got_minus} vs {want_minus} at ({p},{j})"
@@ -67,7 +67,7 @@ fn prop_incremental_x_matches_full_evaluation_within_1e9() {
                 to = (to + 1) % l;
             }
             s.move_task(mi, mj, to).map_err(|e| e.to_string())?;
-            inc.apply_move(&mu, mi, mj, to);
+            inc.apply_move(mi, mj, to);
             let full = x_of_state(&mu, &s);
             if (inc.x() - full).abs() > 1e-9 {
                 return Err(format!(
