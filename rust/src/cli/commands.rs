@@ -3,11 +3,13 @@
 //! ```text
 //! hetsched simulate  --config spec.json | --policy cab --eta 0.5 ...
 //! hetsched sweep     --dist exp --n 20 [--policies cab,bf,rd,jsq,lb]
-//!                    [--reps 16 --threads 0 --quick]
+//!                    [--reps 16 --threads 0 --quick --json out.json]
 //! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
-//! hetsched scenario  --kind slow_drift --policy grin [--compare]
+//! hetsched scenario  --kind slow_drift --policy grin [--compare --reps 4]
+//!                    [--resolve sharded --shards N --sync-every M]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
+//!                    [--devices L --shards N --sync-every M]
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
@@ -38,14 +40,19 @@ COMMANDS:
   simulate   run one closed-network simulation (JSON spec or flags)
   sweep      η-sweep of all policies (the Figs. 4–7 experiment) with R
              seeded replications per cell fanned across cores; reports
-             mean X ± 95% CI (--reps, --threads, --quick)
+             mean X ± 95% CI (--reps, --threads, --quick, --json FILE
+             writes a bit-exact snapshot for the CI determinism gate)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
-             slow_drift) under a resolve mode, or --compare all modes
+             slow_drift) under a resolve mode (static | every_phase |
+             adaptive | sharded), or --compare all modes side by side
+             (--reps replicates each arm; --shards/--sync-every tune
+             the sharded control plane)
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
   serve      run the serving coordinator demo (--adaptive for live
-             re-solve against estimated rates)
+             re-solve against estimated rates; --devices L --shards N
+             for the sharded multi-leader plane)
   help       show this text
 
 Run `hetsched <COMMAND> --help` for per-command flags.";
@@ -144,6 +151,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let warmup: u64 = args.get_parse("warmup", if quick { 200 } else { 2_000 })?;
     let reps: u32 = args.get_parse("reps", if quick { 4 } else { 16 })?;
     let threads: usize = args.get_parse("threads", 0usize)?;
+    let json_path = args.get("json").map(str::to_string);
     let kinds: Vec<PolicyKind> = match args.get("policies") {
         Some(list) => list
             .split(',')
@@ -206,6 +214,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         wall,
         runs as f64 / wall.max(1e-9)
     );
+    if let Some(path) = json_path {
+        // Bit-exact per-cell snapshot for the CI determinism gate: the
+        // file must be byte-identical across thread counts (seeds derive
+        // from (base, cell, rep) alone and slots fix the fp sum order),
+        // so the recorded thread count is deliberately omitted.
+        use crate::config::json::Json;
+        let cell_docs: Vec<Json> = stats
+            .iter()
+            .map(|s| {
+                Json::Obj(vec![
+                    ("label".to_string(), Json::Str(s.label.clone())),
+                    ("mean_x".to_string(), Json::Num(s.mean_x)),
+                    ("mean_x_bits".to_string(), Json::Str(format!("{:016x}", s.mean_x.to_bits()))),
+                    ("ci95_x".to_string(), Json::Num(s.ci95_x)),
+                    ("ci95_x_bits".to_string(), Json::Str(format!("{:016x}", s.ci95_x.to_bits()))),
+                ])
+            })
+            .collect();
+        let doc = Json::Obj(vec![
+            (
+                "sweep".to_string(),
+                Json::Obj(vec![
+                    ("n".to_string(), Json::Num(f64::from(n))),
+                    ("reps".to_string(), Json::Num(f64::from(reps))),
+                    // u64 seeds can exceed f64's exact-integer range.
+                    ("seed".to_string(), Json::Str(seed.to_string())),
+                    ("dist".to_string(), Json::Str(dist.name().to_string())),
+                ]),
+            ),
+            ("cells".to_string(), Json::Arr(cell_docs)),
+        ]);
+        std::fs::write(&path, doc.to_string_compact())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -296,9 +338,20 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         dynamic.seed = args.get_parse("seed", dynamic.seed)?;
         dynamic.drift.threshold = args.get_parse("drift-threshold", dynamic.drift.threshold)?;
         dynamic.drift.check_every = args.get_parse("check-every", dynamic.drift.check_every)?;
+        // Sharded knobs only apply when a sharded arm runs (--resolve
+        // sharded or --compare); otherwise leave them unconsumed so
+        // `finish()` flags them instead of silently ignoring them.
+        if dynamic.resolve == ResolveMode::Sharded || args.switch("compare") {
+            dynamic.shard.shards = args.get_parse("shards", dynamic.shard.shards)?;
+            dynamic.shard.sync_every =
+                args.get_parse("sync-every", dynamic.shard.sync_every)?;
+        }
         (mu, policy, kind, dynamic)
     };
     let compare = args.switch("compare");
+    // Only meaningful with --compare: leaving it unconsumed otherwise
+    // lets `finish()` flag a stray `--reps` instead of ignoring it.
+    let reps: u32 = if compare { args.get_parse("reps", 4u32)? } else { 4 };
     args.finish()?;
 
     let run_mode = |mode: ResolveMode| -> Result<(Vec<f64>, f64, u64)> {
@@ -311,9 +364,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     };
 
     if compare {
-        let modes =
-            [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive];
-        // The three resolve modes are independent runs: fan them across
+        let modes = ResolveMode::all();
+        // The four resolve modes are independent runs: fan them across
         // cores through the replication runner's worker pool.
         let results = crate::sim::replicate::parallel_map(&modes, 0, |_, &mode| {
             run_mode(mode)
@@ -322,32 +374,59 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         .collect::<Result<Vec<_>>>()?;
         let mut t = Table::new(
             format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
-            &["phase", "static", "every_phase", "adaptive"],
+            &["phase", "static", "every_phase", "adaptive", "sharded"],
         );
         for i in 0..dynamic.phases.len() {
-            t.row(vec![
-                format!("{i}"),
-                format!("{:.4}", results[0].0[i]),
-                format!("{:.4}", results[1].0[i]),
-                format!("{:.4}", results[2].0[i]),
-            ]);
+            let mut row = vec![format!("{i}")];
+            row.extend(results.iter().map(|r| format!("{:.4}", r.0[i])));
+            t.row(row);
         }
-        t.row(vec![
-            "mean".into(),
-            format!("{:.4}", results[0].1),
-            format!("{:.4}", results[1].1),
-            format!("{:.4}", results[2].1),
-        ]);
+        let mut mean_row = vec!["mean".to_string()];
+        mean_row.extend(results.iter().map(|r| format!("{:.4}", r.1)));
+        t.row(mean_row);
         t.print();
         println!(
-            "re-solves: static {} / every_phase {} / adaptive {}",
-            results[0].2, results[1].2, results[2].2
+            "re-solves: static {} / every_phase {} / adaptive {} / sharded {}",
+            results[0].2, results[1].2, results[2].2, results[3].2
         );
         println!(
-            "adaptive vs static mean X: {:.2}x (oracle every_phase: {:.2}x)",
+            "vs static mean X: adaptive {:.2}x, sharded {:.2}x (oracle every_phase: {:.2}x)",
             results[2].1 / results[0].1,
+            results[3].1 / results[0].1,
             results[1].1 / results[0].1,
         );
+        if reps > 1 {
+            // Replicated A/B: R seeded replications per arm through the
+            // replication runner (thread-count-independent aggregates).
+            use crate::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+            let cells: Vec<DynCell> = modes
+                .iter()
+                .map(|&mode| {
+                    let mut cfg = dynamic.clone();
+                    cfg.resolve = mode;
+                    DynCell {
+                        label: mode.name().to_string(),
+                        mu: mu.clone(),
+                        cfg,
+                        policy,
+                    }
+                })
+                .collect();
+            let plan = ReplicationPlan { reps, threads: 0, base_seed: dynamic.seed };
+            let stats = run_dynamic_cells(&cells, &plan)?;
+            let mut t = Table::new(
+                format!("replicated comparison (R = {reps}, mean ± 95% CI)"),
+                &["mode", "mean X", "re-solves/run"],
+            );
+            for s in &stats {
+                t.row(vec![
+                    s.label.clone(),
+                    format!("{:.4} ± {:.4}", s.mean_x, s.ci95_x),
+                    format!("{:.1}", s.mean_resolves),
+                ]);
+            }
+            t.print();
+        }
     } else {
         let (per_phase, mean, resolves) = run_mode(dynamic.resolve)?;
         let mut t = Table::new(
@@ -449,8 +528,24 @@ fn cmd_platform(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let d = ServeConfig::default();
+    let shards: usize = args.get_parse("shards", d.shards)?;
+    let policy = match args.get("policy") {
+        Some(name) => PolicyKind::parse(name)?,
+        // Sharded serving always steers by batched GrIn (an explicit
+        // conflicting --policy is rejected by Coordinator::run).
+        None if shards > 1 => PolicyKind::GrIn,
+        None => PolicyKind::Cab,
+    };
+    if shards > 1 && args.get("resolve-check").is_some() {
+        return Err(Error::Config(
+            "sharded serving syncs every --sync-every completions; \
+             --resolve-check is the single-leader knob"
+                .into(),
+        ));
+    }
     let cfg = ServeConfig {
-        policy: PolicyKind::parse(args.get("policy").unwrap_or("cab"))?,
+        policy,
+        devices: args.get_parse("devices", d.devices)?,
         inflight: args.get_parse("inflight", d.inflight)?,
         total: args.get_parse("total", d.total)?,
         sort_fraction: args.get_parse("sort-fraction", d.sort_fraction)?,
@@ -458,13 +553,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         adaptive: args.switch("adaptive"),
         resolve_check: args.get_parse("resolve-check", d.resolve_check)?,
         drift_threshold: args.get_parse("drift-threshold", d.drift_threshold)?,
+        shards,
+        sync_every: args.get_parse("sync-every", d.sync_every)?,
         ..d
     };
     args.finish()?;
 
     let r = Coordinator::run(&cfg)?;
     let mut t = Table::new(
-        format!("serve: {} (inflight {})", cfg.policy.name(), cfg.inflight),
+        format!(
+            "serve: {} (inflight {}, {} devices{})",
+            cfg.policy.name(),
+            cfg.inflight,
+            cfg.devices,
+            if cfg.shards > 1 {
+                format!(", {} shards", cfg.shards)
+            } else {
+                String::new()
+            }
+        ),
         &["metric", "value"],
     );
     t.row(vec!["requests".into(), r.served.to_string()]);
@@ -479,18 +586,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "flushes full/deadline/drain".into(),
         format!("{}/{}/{}", r.flushes[0], r.flushes[1], r.flushes[2]),
     ]);
-    if cfg.adaptive {
+    if cfg.shards > 1 {
+        t.row(vec!["batched re-solves".into(), r.resolves.to_string()]);
+    } else if cfg.adaptive {
         t.row(vec!["adaptive re-solves".into(), r.resolves.to_string()]);
     }
     t.print();
     if let Some(mu_hat) = &r.mu_hat {
-        println!(
-            "estimated μ̂: [[{:.1}, {:.1}], [{:.1}, {:.1}]] req/s",
-            mu_hat.rate(0, 0),
-            mu_hat.rate(0, 1),
-            mu_hat.rate(1, 0),
-            mu_hat.rate(1, 1)
-        );
+        let rows: Vec<String> = (0..mu_hat.types())
+            .map(|i| {
+                let cells: Vec<String> = (0..mu_hat.procs())
+                    .map(|j| format!("{:.1}", mu_hat.rate(i, j)))
+                    .collect();
+                format!("[{}]", cells.join(", "))
+            })
+            .collect();
+        println!("estimated μ̂: [{}] req/s", rows.join(", "));
     }
     Ok(())
 }
@@ -532,6 +643,70 @@ mod tests {
         )
         .unwrap();
         assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn scenario_sharded_resolve_and_compare_run() {
+        // The sharded resolve mode drives a scenario end to end...
+        let line = "scenario --kind phase_shift --policy grin --phases 3 \
+                    --completions 150 --warmup 20 --resolve sharded --shards 2 \
+                    --sync-every 60";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // ...and --compare carries it as the fourth arm, with the
+        // replicated A/B summary on top.
+        let line = "scenario --kind slow_drift --policy grin --phases 3 \
+                    --completions 120 --warmup 20 --n 8 --compare --reps 2";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+    }
+
+    #[test]
+    fn serve_flag_conflicts_are_rejected() {
+        // --resolve-check is the single-leader cadence knob.
+        let args = Args::parse(
+            "serve --shards 2 --devices 4 --resolve-check 16"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+        // An explicit non-GrIn policy cannot drive the sharded plane.
+        let args = Args::parse(
+            "serve --shards 2 --devices 4 --policy cab --total 10"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn sweep_json_snapshot_is_thread_count_invariant() {
+        let dir = std::env::temp_dir();
+        // Pid-suffixed so concurrent test processes don't race on the files.
+        let pid = std::process::id();
+        let p1 = dir.join(format!("hetsched_sweep_t1_{pid}.json"));
+        let p4 = dir.join(format!("hetsched_sweep_t4_{pid}.json"));
+        for (threads, path) in [(1, &p1), (4, &p4)] {
+            let line = format!(
+                "sweep --quick --reps 2 --measure 200 --warmup 20 \
+                 --threads {threads} --json {}",
+                path.display()
+            );
+            let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+            run(&args).unwrap();
+        }
+        let a = std::fs::read_to_string(&p1).unwrap();
+        let b = std::fs::read_to_string(&p4).unwrap();
+        // The snapshot embeds per-cell f64 bit patterns and omits the
+        // thread count, so the CI determinism gate can compare files
+        // byte for byte.
+        assert_eq!(a, b, "sweep snapshot depends on thread count");
+        let doc = crate::config::json::Json::parse(&a).unwrap();
+        assert_eq!(doc.req("cells").unwrap().as_arr().unwrap().len(), 15);
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p4);
     }
 
     #[test]

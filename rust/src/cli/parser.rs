@@ -108,7 +108,9 @@ impl Args {
 
     /// Error on flags that were never consumed (typo protection),
     /// naming every offender at once so a multi-typo invocation is fixed
-    /// in one round trip.
+    /// in one round trip — and appending the flags the command *does*
+    /// accept (everything it looked up before finishing), so a typo like
+    /// `serve --shardz` is self-diagnosing.
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
         let mut unknown: Vec<&str> = self
@@ -128,7 +130,14 @@ impl Args {
             .map(|k| format!("--{k}"))
             .collect::<Vec<_>>()
             .join(", ");
-        Err(Error::Config(format!("unknown flag(s) {list}")))
+        let mut known: Vec<String> = consumed.iter().map(|k| format!("--{k}")).collect();
+        known.sort_unstable();
+        known.dedup();
+        let mut msg = format!("unknown flag(s) {list}");
+        if !known.is_empty() {
+            msg.push_str(&format!("; accepted flags: {}", known.join(", ")));
+        }
+        Err(Error::Config(msg))
     }
 }
 
@@ -178,6 +187,22 @@ mod tests {
         let _ = a.get("good");
         let msg = a.finish().unwrap_err().to_string();
         assert!(msg.contains("--typo") && msg.contains("--worse"), "{msg}");
+    }
+
+    #[test]
+    fn finish_lists_the_accepted_flag_set() {
+        // A typo'd flag name is self-diagnosing: the error carries the
+        // flags the command actually looked up.
+        let a = args("serve --shardz 3");
+        let _ = a.get("policy");
+        let _ = a.get_parse("shards", 1usize);
+        let msg = a.finish().unwrap_err().to_string();
+        assert!(msg.contains("unknown flag(s) --shardz"), "{msg}");
+        assert!(msg.contains("accepted flags: --policy, --shards"), "{msg}");
+        // With nothing consumed there is no accepted set to offer.
+        let a = args("run --oops 1");
+        let msg = a.finish().unwrap_err().to_string();
+        assert!(!msg.contains("accepted"), "{msg}");
     }
 
     #[test]

@@ -137,7 +137,8 @@ impl ExperimentSpec {
 ///     "burst_factor": 2.0,
 ///     "drift_to": [0.4, 0.2, 5.0, 2.5],
 ///     "resolve": "adaptive",
-///     "drift_threshold": 0.2, "check_every": 250
+///     "drift_threshold": 0.2, "check_every": 250,
+///     "shards": 2, "sync_every": 250
 ///   },
 ///   "distribution": "exp", "discipline": "ps", "seed": 7
 /// }
@@ -212,6 +213,12 @@ impl ScenarioSpec {
         }
         if let Some(v) = s.get("check_every") {
             dynamic.drift.check_every = v.as_u64()?;
+        }
+        if let Some(v) = s.get("shards") {
+            dynamic.shard.shards = v.as_u64()? as usize;
+        }
+        if let Some(v) = s.get("sync_every") {
+            dynamic.shard.sync_every = v.as_u64()?;
         }
         if let Some(v) = j.get("distribution") {
             dynamic.dist = Distribution::parse(v.as_str()?)?;

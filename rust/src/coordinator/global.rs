@@ -1,0 +1,379 @@
+//! Global coordination over shard leaders: gather → one batched GrIn
+//! re-solve over the assembled k×l view → epoch-versioned push-back.
+//!
+//! [`ShardedControl`] is the whole control plane in one deterministic
+//! object, shared by the live serving coordinator
+//! (`hetsched serve --shards N`) and the simulator's
+//! [`crate::sim::dynamic::ResolveMode::Sharded`] mode so the two can be
+//! A/B'd on identical logic:
+//!
+//! 1. **Route** (two-level deficit steering): pick the shard with the
+//!    largest class deficit against its installed target totals, then
+//!    let that [`ShardLeader`] pick the device — O(shards + shard size)
+//!    per arrival, no global lock in a real deployment because each
+//!    leader only reads its own slice.
+//! 2. **Complete**: the owning shard updates occupancy and feeds its
+//!    local estimator.
+//! 3. **Sync** (every `sync_every` completions): gather
+//!    [`ShardSnapshot`]s; if any shard reports drift, assemble the
+//!    global μ̂ and occupancy, project the occupancy onto the
+//!    configured populations, and run **one batched GrIn re-solve**
+//!    warm-started from that snapshot
+//!    ([`crate::policy::grin::solve_from_snapshot`] — reusing
+//!    `IncrementalX`, typically a handful of moves).  The solution is
+//!    split into per-shard slices and installed under a single
+//!    incremented epoch, so no arrival anywhere can observe a mix of
+//!    old and new targets.
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::policy::grin;
+use crate::policy::target::pick_by_deficit;
+use crate::sim::dynamic::DriftConfig;
+
+use super::shard::{mu_columns, partition_devices, ShardLeader, ShardSnapshot};
+
+/// The sharded multi-leader control plane.
+#[derive(Debug)]
+pub struct ShardedControl {
+    shards: Vec<ShardLeader>,
+    /// Global device index → owning shard.
+    dev_shard: Vec<usize>,
+    /// The global rates the installed targets were solved for.
+    believed: AffinityMatrix,
+    populations: Vec<u32>,
+    drift: DriftConfig,
+    sync_every: u64,
+    since_sync: u64,
+    epoch: u64,
+    resolves: u64,
+    batched_moves: u64,
+}
+
+impl ShardedControl {
+    /// Partition the `mu.procs()` devices into `shards` leaders
+    /// (0 = one shard per device), solve the initial global target and
+    /// install it as epoch 1.
+    pub fn new(
+        mu: &AffinityMatrix,
+        populations: &[u32],
+        shards: usize,
+        drift: &DriftConfig,
+        sync_every: u64,
+    ) -> Result<Self> {
+        if sync_every == 0 {
+            return Err(Error::Config("sharded sync_every must be ≥ 1".into()));
+        }
+        let l = mu.procs();
+        let count = if shards == 0 { l } else { shards };
+        let parts = partition_devices(l, count)?;
+        let mut leaders = Vec::with_capacity(parts.len());
+        for (s, devs) in parts.into_iter().enumerate() {
+            leaders.push(ShardLeader::new(s, devs, mu, drift)?);
+        }
+        let mut dev_shard = vec![0usize; l];
+        for leader in &leaders {
+            for &d in leader.devices() {
+                dev_shard[d] = leader.id();
+            }
+        }
+        let mut ctl = Self {
+            shards: leaders,
+            dev_shard,
+            believed: mu.clone(),
+            populations: populations.to_vec(),
+            drift: drift.clone(),
+            sync_every,
+            since_sync: 0,
+            epoch: 0,
+            resolves: 0,
+            batched_moves: 0,
+        };
+        let sol = grin::solve(mu, populations)?;
+        ctl.install_global(sol.state)?;
+        Ok(ctl)
+    }
+
+    /// Current target epoch (identical across all shards by
+    /// construction).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Drift-triggered batched re-solves performed.
+    pub fn resolves(&self) -> u64 {
+        self.resolves
+    }
+
+    /// Total greedy moves across all batched re-solves (the warm-start
+    /// cheapness metric).
+    pub fn batched_moves(&self) -> u64 {
+        self.batched_moves
+    }
+
+    /// The shard leaders.
+    pub fn shards(&self) -> &[ShardLeader] {
+        &self.shards
+    }
+
+    /// The global rates the installed targets were solved for.
+    pub fn believed(&self) -> &AffinityMatrix {
+        &self.believed
+    }
+
+    /// Assembled live global estimate μ̂ (prior-backed where cold).
+    pub fn mu_hat(&self) -> Result<AffinityMatrix> {
+        let snaps = self.gather()?;
+        Ok(assemble(&self.believed, &snaps)?.0)
+    }
+
+    /// Route one `class` arrival: shard with the largest class deficit
+    /// (ties to the shard offering the fastest solved rate, then the
+    /// lower shard id), then deficit steering inside that shard.
+    /// Returns the global device index.
+    pub fn route(&mut self, class: usize) -> usize {
+        let best = pick_by_deficit(
+            self.shards
+                .iter()
+                .map(|leader| (leader.class_deficit(class), leader.best_rate(class))),
+        );
+        self.shards[best].route(class)
+    }
+
+    /// Completion callback: updates the owning shard and, every
+    /// `sync_every` completions, runs the gather/re-solve sync.
+    /// Returns `true` when a batched re-solve swapped the targets.
+    pub fn on_complete(&mut self, class: usize, device: usize, service_s: f64) -> Result<bool> {
+        let s = *self.dev_shard.get(device).ok_or_else(|| {
+            Error::Config(format!("unknown device {device} in sharded fleet"))
+        })?;
+        self.shards[s].complete(class, device, service_s)?;
+        self.since_sync += 1;
+        if self.since_sync < self.sync_every {
+            return Ok(false);
+        }
+        self.since_sync = 0;
+        self.sync()
+    }
+
+    /// Gather snapshots and, if any shard has drifted, run the batched
+    /// GrIn re-solve and push new epoch targets to every shard.
+    pub fn sync(&mut self) -> Result<bool> {
+        let snaps = self.gather()?;
+        if !snaps.iter().any(|s| s.drifted) {
+            return Ok(false);
+        }
+        let (mu_hat, occupancy) = assemble(&self.believed, &snaps)?;
+        let start = project_to_populations(&mu_hat, &occupancy, &self.populations);
+        // μ̂ can be momentarily pathological on noisy estimates: keep
+        // the old targets and retry at the next sync.
+        let sol = match grin::solve_from_snapshot(&mu_hat, &self.populations, &start) {
+            Ok(sol) => sol,
+            Err(_) => return Ok(false),
+        };
+        self.batched_moves += sol.moves as u64;
+        self.believed = mu_hat;
+        self.install_global(sol.state)?;
+        self.resolves += 1;
+        Ok(true)
+    }
+
+    /// Population change (programs launched/retired through the
+    /// scheduler — directly observable, no estimation needed): re-solve
+    /// against the believed rates and push new targets.  A no-op when
+    /// the populations are unchanged, so phase boundaries that only
+    /// rescale rates cost nothing here (drift syncs handle those).
+    pub fn set_populations(&mut self, populations: &[u32]) -> Result<()> {
+        if populations.len() != self.believed.types() {
+            return Err(Error::Shape("population arity".into()));
+        }
+        if populations == self.populations.as_slice() {
+            return Ok(());
+        }
+        self.populations = populations.to_vec();
+        let sol = grin::solve(&self.believed, &self.populations)?;
+        self.install_global(sol.state)
+    }
+
+    fn gather(&self) -> Result<Vec<ShardSnapshot>> {
+        self.shards
+            .iter()
+            .map(|sh| sh.snapshot(self.drift.threshold))
+            .collect()
+    }
+
+    /// Split a global target into per-shard slices and install them all
+    /// under one incremented epoch (the atomic push-back).
+    fn install_global(&mut self, target: StateMatrix) -> Result<()> {
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let k = target.types();
+        for leader in &mut self.shards {
+            let devs = leader.devices().to_vec();
+            let mut local = StateMatrix::zeros(k, devs.len());
+            for i in 0..k {
+                for (lj, &j) in devs.iter().enumerate() {
+                    local.set(i, lj, target.get(i, j));
+                }
+            }
+            let solved = mu_columns(&self.believed, &devs)?;
+            leader.install(epoch, local, solved)?;
+        }
+        Ok(())
+    }
+}
+
+/// Stitch per-shard snapshots into the global k×l view: estimator-backed
+/// μ̂ columns (boot prior where cold) and the occupancy matrix.
+fn assemble(
+    believed: &AffinityMatrix,
+    snaps: &[ShardSnapshot],
+) -> Result<(AffinityMatrix, StateMatrix)> {
+    let (k, l) = (believed.types(), believed.procs());
+    let mut rows = vec![vec![0.0f64; l]; k];
+    let mut occ = StateMatrix::zeros(k, l);
+    for snap in snaps {
+        for (lj, &j) in snap.devices.iter().enumerate() {
+            for (i, row) in rows.iter_mut().enumerate() {
+                row[j] = snap.mu_hat.rate(i, lj);
+                occ.set(i, j, snap.occupancy.get(i, lj));
+            }
+        }
+    }
+    Ok((AffinityMatrix::from_rows(&rows)?, occ))
+}
+
+/// Project a gathered occupancy snapshot onto the configured populations
+/// so the warm start is feasible (in-flight counts skew a task or two
+/// from the closed-system populations at gather time): drain surpluses
+/// from the fullest cells, fill deficits on the fastest column.
+fn project_to_populations(
+    mu: &AffinityMatrix,
+    occ: &StateMatrix,
+    populations: &[u32],
+) -> StateMatrix {
+    let mut n = occ.clone();
+    for (i, &want) in populations.iter().enumerate() {
+        while n.row_sum(i) > want {
+            let j = (0..n.procs())
+                .max_by_key(|&j| n.get(i, j))
+                .expect("at least one processor");
+            n.dec(i, j).expect("fullest cell is non-empty");
+        }
+        while n.row_sum(i) < want {
+            n.inc(i, mu.best_proc(i));
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload;
+
+    fn control(shards: usize) -> ShardedControl {
+        let mu = workload::three_class_mu();
+        ShardedControl::new(&mu, &[8, 8, 8], shards, &DriftConfig::default(), 100)
+            .unwrap()
+    }
+
+    #[test]
+    fn boot_installs_one_epoch_everywhere() {
+        let ctl = control(3);
+        assert_eq!(ctl.shards().len(), 3);
+        assert_eq!(ctl.epoch(), 1);
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), 1, "torn epoch at boot");
+        }
+        // The split targets re-assemble to the configured populations.
+        let per_class: Vec<u32> = (0..3)
+            .map(|i| ctl.shards().iter().map(|s| s.target().row_sum(i)).sum())
+            .collect();
+        assert_eq!(per_class, vec![8, 8, 8]);
+        // shards = 0 means one per device.
+        assert_eq!(control(0).shards().len(), 3);
+    }
+
+    #[test]
+    fn routing_covers_the_fleet_and_completion_round_trips() {
+        let mut ctl = control(3);
+        let mut routed = vec![0u32; 3];
+        let mut placements = Vec::new();
+        for class in 0..3 {
+            for _ in 0..8 {
+                let j = ctl.route(class);
+                assert!(j < 3);
+                routed[j] += 1;
+                placements.push((class, j));
+            }
+        }
+        assert_eq!(routed.iter().sum::<u32>(), 24);
+        for &(class, j) in &placements {
+            ctl.on_complete(class, j, 0.1).unwrap();
+        }
+        // All occupancy drained.
+        for leader in ctl.shards() {
+            for i in 0..3 {
+                assert_eq!(leader.occupancy().row_sum(i), 0);
+            }
+        }
+        assert!(ctl.on_complete(0, 99, 0.1).is_err());
+    }
+
+    #[test]
+    fn sync_is_a_noop_without_drift_and_atomic_with_it() {
+        let mut ctl = control(3);
+        // No observations: no drift, no re-solve.
+        assert!(!ctl.sync().unwrap());
+        assert_eq!(ctl.resolves(), 0);
+        // Feed every cell service times matching the flipped matrix
+        // through the normal route/complete cycle until warm.
+        let flipped = workload::three_class_mu()
+            .scaled(&workload::three_class_flip_scale())
+            .unwrap();
+        for _ in 0..64 {
+            for class in 0..3 {
+                let j = ctl.route(class);
+                ctl.on_complete(class, j, 1.0 / flipped.rate(class, j)).unwrap();
+            }
+        }
+        // By now at least one sync ran (sync_every = 100 < 192
+        // completions) and the drifted cells forced a batched re-solve.
+        assert!(ctl.resolves() >= 1, "no batched re-solve under drift");
+        assert!(ctl.epoch() > 1);
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after sync");
+        }
+        assert!(ctl.batched_moves() > 0);
+    }
+
+    #[test]
+    fn population_swap_pushes_new_targets_under_new_epoch() {
+        let mut ctl = control(3);
+        let e0 = ctl.epoch();
+        ctl.set_populations(&[2, 2, 20]).unwrap();
+        assert_eq!(ctl.epoch(), e0 + 1);
+        let per_class: Vec<u32> = (0..3)
+            .map(|i| ctl.shards().iter().map(|s| s.target().row_sum(i)).sum())
+            .collect();
+        assert_eq!(per_class, vec![2, 2, 20]);
+        assert!(ctl.set_populations(&[1, 1]).is_err());
+    }
+
+    #[test]
+    fn projection_restores_populations() {
+        let mu = workload::three_class_mu();
+        let mut occ = StateMatrix::zeros(3, 3);
+        // Row 0 over by one, row 1 under by two, row 2 exact.
+        occ.set(0, 0, 5);
+        occ.set(0, 1, 4);
+        occ.set(1, 1, 6);
+        occ.set(2, 2, 8);
+        let n = project_to_populations(&mu, &occ, &[8, 8, 8]);
+        n.check_populations(&[8, 8, 8]).unwrap();
+        // Surplus drained from the fullest cell of row 0.
+        assert_eq!(n.get(0, 0), 4);
+    }
+}

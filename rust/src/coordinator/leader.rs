@@ -14,9 +14,11 @@ use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::policy::PolicyKind;
 use crate::runtime::Engine;
+use crate::sim::dynamic::DriftConfig;
 use crate::sim::rng::Rng;
 
 use super::batcher::{Batch, DynamicBatcher, FlushReason, Pending};
+use super::global::ShardedControl;
 use super::router::Router;
 use super::stats::{LatencyHistogram, RateEstimator};
 
@@ -55,6 +57,13 @@ pub struct ServeConfig {
     pub resolve_check: u64,
     /// Relative rate drift that triggers a re-solve.
     pub drift_threshold: f64,
+    /// Shard count: 1 = the single-leader path; ≥ 2 partitions the
+    /// devices into per-shard [`crate::coordinator::ShardLeader`]s under
+    /// a global batched-GrIn re-solve loop (implies adaptive estimation,
+    /// per shard and cold-started).
+    pub shards: usize,
+    /// Completions between global gather/re-solve syncs (sharded mode).
+    pub sync_every: u64,
 }
 
 impl Default for ServeConfig {
@@ -71,6 +80,8 @@ impl Default for ServeConfig {
             adaptive: false,
             resolve_check: 64,
             drift_threshold: 0.25,
+            shards: 1,
+            sync_every: 128,
         }
     }
 }
@@ -120,6 +131,21 @@ struct Done {
 /// The serving coordinator.
 pub struct Coordinator;
 
+/// Single-leader vs sharded routing plane.
+enum Steering {
+    Single(Router),
+    Sharded(ShardedControl),
+}
+
+impl Steering {
+    fn route(&mut self, class: usize) -> usize {
+        match self {
+            Steering::Single(router) => router.route(class),
+            Steering::Sharded(ctl) => ctl.route(class),
+        }
+    }
+}
+
 impl Coordinator {
     /// Run a closed-loop serving experiment.
     pub fn run(cfg: &ServeConfig) -> Result<ServeReport> {
@@ -129,9 +155,32 @@ impl Coordinator {
         if cfg.adaptive && cfg.resolve_check == 0 {
             return Err(Error::Config("adaptive mode needs resolve_check ≥ 1".into()));
         }
+        if cfg.shards == 0 || cfg.shards > cfg.devices {
+            return Err(Error::Config(format!(
+                "{} shards cannot cover {} devices",
+                cfg.shards, cfg.devices
+            )));
+        }
+        if cfg.adaptive && cfg.shards > 1 {
+            // Sharded mode always estimates (per shard, cold-started);
+            // silently ignoring --adaptive would hide that the single-
+            // leader estimator/re-solve path is not the one running.
+            return Err(Error::Config(
+                "sharded mode implies per-shard adaptive estimation; drop `adaptive`".into(),
+            ));
+        }
+        if cfg.shards > 1 && cfg.policy != PolicyKind::GrIn {
+            // Same honesty rule for the policy: the sharded plane's
+            // global re-solve is always batched GrIn.
+            return Err(Error::Config(format!(
+                "sharded serving steers by batched GrIn; policy {} would be ignored",
+                cfg.policy.name()
+            )));
+        }
         let mu = match &cfg.mu {
             Some(m) => m.clone(),
-            None => crate::sim::workload::table3::general_symmetric(),
+            None if cfg.devices == 2 => crate::sim::workload::table3::general_symmetric(),
+            None => crate::sim::workload::table3::general_symmetric_tiled(cfg.devices)?,
         };
         if mu.procs() != cfg.devices || mu.types() != 2 {
             return Err(Error::Config(format!(
@@ -147,13 +196,30 @@ impl Coordinator {
         // Expected in-flight split drives the policy's target solve.
         let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
             .clamp(1, cfg.inflight - 1);
-        let mut router = Router::new(
-            mu,
-            omega,
-            vec![n_sort, cfg.inflight - n_sort],
-            cfg.policy.build(),
-            cfg.seed,
-        )?;
+        let populations = vec![n_sort, cfg.inflight - n_sort];
+        let mut steering = if cfg.shards > 1 {
+            // check_every is the single-leader cadence knob; the sharded
+            // plane syncs on `sync_every` completions instead.
+            let drift = DriftConfig {
+                threshold: cfg.drift_threshold,
+                ..Default::default()
+            };
+            Steering::Sharded(ShardedControl::new(
+                &mu,
+                &populations,
+                cfg.shards,
+                &drift,
+                cfg.sync_every,
+            )?)
+        } else {
+            Steering::Single(Router::new(
+                mu,
+                omega,
+                populations,
+                cfg.policy.build(),
+                cfg.seed,
+            )?)
+        };
 
         // Device workers.
         let (done_tx, done_rx): (Sender<Done>, Receiver<Done>) = channel();
@@ -246,7 +312,7 @@ impl Coordinator {
                 .map_err(|_| Error::Runtime("device worker gone".into()))
         };
 
-        let issue = |router: &mut Router,
+        let issue = |steering: &mut Steering,
                          batchers: &mut Vec<DynamicBatcher>,
                          rng: &mut Rng,
                          next_id: &mut u64,
@@ -257,7 +323,7 @@ impl Coordinator {
             let class = usize::from(!rng.bool_with(cfg.sort_fraction));
             let id = *next_id;
             *next_id += 1;
-            let j = router.route(class);
+            let j = steering.route(class);
             if class == 0 {
                 work_txs[j]
                     .send(Work::Sort { id, class, arrived: Instant::now() })
@@ -277,7 +343,7 @@ impl Coordinator {
         // Fill the pipe.
         while issued < cfg.inflight as u64 && issued < cfg.total {
             issue(
-                &mut router, &mut batchers, &mut rng, &mut next_id,
+                &mut steering, &mut batchers, &mut rng, &mut next_id,
                 &mut batches, &mut batch_fill_sum, &mut flushes,
             )?;
             issued += 1;
@@ -298,9 +364,21 @@ impl Coordinator {
                 .unwrap_or(Duration::from_millis(50));
             match done_rx.recv_timeout(wait.max(Duration::from_micros(100))) {
                 Ok(done) => {
-                    router.complete(done.class, done.device)?;
-                    if cfg.adaptive {
-                        estimator.observe(done.class, done.device, done.service_s);
+                    match &mut steering {
+                        Steering::Single(router) => {
+                            router.complete(done.class, done.device)?;
+                            if cfg.adaptive {
+                                estimator.observe(done.class, done.device, done.service_s);
+                            }
+                        }
+                        // The sharded plane feeds its per-shard
+                        // estimators and syncs (gather + batched
+                        // re-solve) on its own cadence.
+                        Steering::Sharded(ctl) => {
+                            if ctl.on_complete(done.class, done.device, done.service_s)? {
+                                resolves += 1;
+                            }
+                        }
                     }
                     let lat = done.arrived.elapsed().as_secs_f64();
                     if done.class == 0 {
@@ -309,28 +387,29 @@ impl Coordinator {
                         nn_latency.record_s(lat);
                     }
                     served += 1;
-                    // Adaptive re-solve: when the live μ̂ has drifted from
-                    // the matrix the current target was solved for,
-                    // re-run the policy solve against μ̂ and swap the
-                    // routing target in place.
-                    if cfg.adaptive
-                        && served % cfg.resolve_check == 0
-                        && estimator.drift(router.mu()) > cfg.drift_threshold
-                    {
-                        let mu_hat = estimator.mu_hat()?;
-                        let omega_hat: Vec<f64> =
-                            mu_hat.data().iter().map(|&m| 1.0 / m).collect();
-                        // μ̂ may be momentarily unsolvable for the
-                        // configured policy (e.g. CAB's Eq.-2 regime
-                        // check on a noisy estimate): keep the old
-                        // target and retry at the next check.
-                        if router.retarget(mu_hat, omega_hat).is_ok() {
-                            resolves += 1;
+                    // Adaptive re-solve (single-leader): when the live μ̂
+                    // has drifted from the matrix the current target was
+                    // solved for, re-run the policy solve against μ̂ and
+                    // swap the routing target in place.
+                    if cfg.adaptive && served % cfg.resolve_check == 0 {
+                        if let Steering::Single(router) = &mut steering {
+                            if estimator.drift(router.mu()) > cfg.drift_threshold {
+                                let mu_hat = estimator.mu_hat()?;
+                                let omega_hat: Vec<f64> =
+                                    mu_hat.data().iter().map(|&m| 1.0 / m).collect();
+                                // μ̂ may be momentarily unsolvable for the
+                                // configured policy (e.g. CAB's Eq.-2 regime
+                                // check on a noisy estimate): keep the old
+                                // target and retry at the next check.
+                                if router.retarget(mu_hat, omega_hat).is_ok() {
+                                    resolves += 1;
+                                }
+                            }
                         }
                     }
                     if issued < cfg.total {
                         issue(
-                            &mut router, &mut batchers, &mut rng, &mut next_id,
+                            &mut steering, &mut batchers, &mut rng, &mut next_id,
                             &mut batches, &mut batch_fill_sum, &mut flushes,
                         )?;
                         issued += 1;
@@ -368,7 +447,11 @@ impl Coordinator {
             batch_fill: if batches > 0 { batch_fill_sum / batches as f64 } else { 0.0 },
             flushes,
             resolves,
-            mu_hat: if cfg.adaptive { estimator.mu_hat().ok() } else { None },
+            mu_hat: match &steering {
+                Steering::Sharded(ctl) => ctl.mu_hat().ok(),
+                Steering::Single(_) if cfg.adaptive => estimator.mu_hat().ok(),
+                Steering::Single(_) => None,
+            },
         })
     }
 }
@@ -382,7 +465,28 @@ mod tests {
         let mut cfg = ServeConfig { total: 0, ..Default::default() };
         assert!(Coordinator::run(&cfg).is_err());
         cfg.total = 10;
-        cfg.devices = 3; // μ is 2×2
+        cfg.devices = 3;
+        // An explicit 2×2 μ cannot drive 3 devices.
+        cfg.mu = Some(crate::sim::workload::table3::general_symmetric());
+        assert!(Coordinator::run(&cfg).is_err());
+        // Shard count must be ≥ 1 and cover the devices.
+        let cfg = ServeConfig { shards: 0, total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig { shards: 3, devices: 2, total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        // Sharded mode estimates per shard and steers by batched GrIn:
+        // the single-leader adaptive flag and any other policy are
+        // rejected, not ignored.
+        let cfg = ServeConfig {
+            shards: 2,
+            adaptive: true,
+            policy: PolicyKind::GrIn,
+            total: 10,
+            ..Default::default()
+        };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg =
+            ServeConfig { shards: 2, policy: PolicyKind::Cab, total: 10, ..Default::default() };
         assert!(Coordinator::run(&cfg).is_err());
     }
 

@@ -10,13 +10,24 @@
 //!
 //! Python never appears here: workers execute AOT artifacts through
 //! [`crate::runtime::Engine`].
+//!
+//! For fleets with more than two device classes the single leader
+//! shards: [`shard`] holds the per-device-class [`ShardLeader`]s (local
+//! routing, occupancy, cold-started estimation) and [`global`] the
+//! gather / batched-GrIn-re-solve / epoch-versioned push-back loop that
+//! steers them ([`ShardedControl`]), used by both `hetsched serve
+//! --shards N` and the simulator's `sharded` resolve mode.
 
 pub mod batcher;
+pub mod global;
 pub mod leader;
 pub mod router;
+pub mod shard;
 pub mod stats;
 
 pub use batcher::{Batch, DynamicBatcher};
+pub use global::ShardedControl;
 pub use leader::{Coordinator, ServeConfig, ServeReport};
 pub use router::Router;
+pub use shard::{ShardLeader, ShardSnapshot};
 pub use stats::{LatencyHistogram, RateEstimator};

@@ -1,0 +1,332 @@
+//! Shard leaders — the per-device-class control plane of the sharded
+//! serving subsystem.
+//!
+//! One [`ShardLeader`] owns a slice of the device fleet (a device class,
+//! or a cell of one): it routes arrivals within its slice by deficit
+//! steering against an **epoch-versioned** local target, tracks local
+//! occupancy, and runs its own [`RateEstimator`] (cold-started — cells
+//! below `min_obs` observations never signal drift, see
+//! `stats.rs`).  The global layer ([`super::global`]) periodically
+//! gathers [`ShardSnapshot`]s, runs one batched GrIn re-solve over the
+//! assembled k×l view, and pushes new targets back through
+//! [`ShardLeader::install`].
+//!
+//! **Epoch semantics:** a leader's `(epoch, target, solved_mu)` triple
+//! only ever changes together, in one `install` call.  A route issued
+//! before the install steers wholly by the old policy, one issued after
+//! wholly by the new — in-flight tasks never observe a torn (half-old,
+//! half-new) target.  Occupancy is keyed by (class, device) alone, so
+//! completions of tasks routed under an earlier epoch still decrement
+//! correctly after any number of swaps.
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::state::StateMatrix;
+use crate::policy::target::pick_by_deficit;
+use crate::sim::dynamic::DriftConfig;
+
+use super::stats::RateEstimator;
+
+/// Partition `l` devices into `shards` contiguous, near-equal slices
+/// (the first `l % shards` shards get the extra device).
+pub fn partition_devices(l: usize, shards: usize) -> Result<Vec<Vec<usize>>> {
+    if shards == 0 || shards > l {
+        return Err(Error::Config(format!(
+            "cannot split {l} devices into {shards} shards"
+        )));
+    }
+    let base = l / shards;
+    let extra = l % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut next = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < extra);
+        out.push((next..next + len).collect());
+        next += len;
+    }
+    Ok(out)
+}
+
+/// Extract the listed columns of `mu` into a shard-local matrix.
+pub fn mu_columns(mu: &AffinityMatrix, cols: &[usize]) -> Result<AffinityMatrix> {
+    let rows: Vec<Vec<f64>> = (0..mu.types())
+        .map(|i| cols.iter().map(|&j| mu.rate(i, j)).collect())
+        .collect();
+    AffinityMatrix::from_rows(&rows)
+}
+
+/// What a shard reports to the global coordinator at gather time.
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    /// The reporting shard.
+    pub shard: usize,
+    /// Epoch of the targets the shard is currently steering by.
+    pub epoch: u64,
+    /// Global device indices the shard owns (column order of the local
+    /// matrices below).
+    pub devices: Vec<usize>,
+    /// Live local rate estimate μ̂ (prior-backed where cold).
+    pub mu_hat: AffinityMatrix,
+    /// Local occupancy (class × local device).
+    pub occupancy: StateMatrix,
+    /// Has the local estimate drifted past the threshold from the rates
+    /// the current target was solved for?
+    pub drifted: bool,
+}
+
+/// One shard's leader: local routing, occupancy, estimation.
+#[derive(Debug)]
+pub struct ShardLeader {
+    id: usize,
+    /// Global device indices owned by this shard (defines local column
+    /// order).
+    devices: Vec<usize>,
+    /// The local columns of the rate matrix the current target was
+    /// solved for (drift reference + routing tie-break).
+    solved_mu: AffinityMatrix,
+    estimator: RateEstimator,
+    occupancy: StateMatrix,
+    target: StateMatrix,
+    epoch: u64,
+}
+
+impl ShardLeader {
+    /// A leader over `devices`, estimator seeded from the prior's local
+    /// columns, steering target empty until the first
+    /// [`install`](Self::install).
+    pub fn new(
+        id: usize,
+        devices: Vec<usize>,
+        prior: &AffinityMatrix,
+        drift: &DriftConfig,
+    ) -> Result<Self> {
+        if devices.is_empty() {
+            return Err(Error::Config(format!("shard {id} owns no devices")));
+        }
+        if devices.iter().any(|&d| d >= prior.procs()) {
+            return Err(Error::Config(format!(
+                "shard {id} device out of range (fleet has {})",
+                prior.procs()
+            )));
+        }
+        let local = mu_columns(prior, &devices)?;
+        let estimator =
+            RateEstimator::new(&local, drift.ewma_alpha, drift.window, drift.min_obs)?;
+        let (k, ll) = (prior.types(), devices.len());
+        Ok(Self {
+            id,
+            devices,
+            solved_mu: local,
+            estimator,
+            occupancy: StateMatrix::zeros(k, ll),
+            target: StateMatrix::zeros(k, ll),
+            epoch: 0,
+        })
+    }
+
+    /// Shard id.
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    /// Epoch of the installed target.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Global device indices owned by this shard.
+    pub fn devices(&self) -> &[usize] {
+        &self.devices
+    }
+
+    /// The shard's streaming estimator.
+    pub fn estimator(&self) -> &RateEstimator {
+        &self.estimator
+    }
+
+    /// Local occupancy (class × local device).
+    pub fn occupancy(&self) -> &StateMatrix {
+        &self.occupancy
+    }
+
+    /// The installed local target.
+    pub fn target(&self) -> &StateMatrix {
+        &self.target
+    }
+
+    /// Shard-level class deficit (target row total − occupancy row
+    /// total) — the global dispatch signal.
+    pub fn class_deficit(&self, class: usize) -> i64 {
+        self.target.row_sum(class) as i64 - self.occupancy.row_sum(class) as i64
+    }
+
+    /// Fastest solved rate the shard offers `class` (global tie-break).
+    pub fn best_rate(&self, class: usize) -> f64 {
+        self.solved_mu
+            .row(class)
+            .iter()
+            .fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+    }
+
+    /// Has the local estimate drifted past `threshold` from the rates
+    /// the current target was solved for?  Cold cells (below `min_obs`
+    /// observations) never contribute — a freshly booted shard reports
+    /// no drift until its windows warm up.
+    pub fn drifted(&self, threshold: f64) -> bool {
+        self.estimator.drift(&self.solved_mu) > threshold
+    }
+
+    /// Route one `class` arrival within the shard: largest local target
+    /// deficit, ties to the faster solved rate then the lower device
+    /// index.  Returns the chosen *global* device index.
+    pub fn route(&mut self, class: usize) -> usize {
+        let best = pick_by_deficit((0..self.devices.len()).map(|lj| {
+            (
+                self.target.get(class, lj) as i64 - self.occupancy.get(class, lj) as i64,
+                self.solved_mu.rate(class, lj),
+            )
+        }));
+        self.occupancy.inc(class, best);
+        self.devices[best]
+    }
+
+    /// Completion callback: `device` is the global index the task ran
+    /// on, `service_s` its pure execution time (the estimator's signal).
+    pub fn complete(&mut self, class: usize, device: usize, service_s: f64) -> Result<()> {
+        let lj = self.local_index(device)?;
+        self.occupancy.dec(class, lj)?;
+        self.estimator.observe(class, lj, service_s);
+        Ok(())
+    }
+
+    /// Atomically swap the shard's routing policy: the (epoch, target,
+    /// solved-rates) triple changes in one call.
+    pub fn install(
+        &mut self,
+        epoch: u64,
+        target: StateMatrix,
+        solved_mu: AffinityMatrix,
+    ) -> Result<()> {
+        let (k, ll) = (self.occupancy.types(), self.devices.len());
+        if target.types() != k || target.procs() != ll {
+            return Err(Error::Shape(format!(
+                "shard {} target is {}×{}, wants {k}×{ll}",
+                self.id,
+                target.types(),
+                target.procs()
+            )));
+        }
+        if solved_mu.types() != k || solved_mu.procs() != ll {
+            return Err(Error::Shape(format!(
+                "shard {} solved μ is {}×{}, wants {k}×{ll}",
+                self.id,
+                solved_mu.types(),
+                solved_mu.procs()
+            )));
+        }
+        self.target = target;
+        self.solved_mu = solved_mu;
+        self.epoch = epoch;
+        Ok(())
+    }
+
+    /// The shard's report to the global gather.
+    pub fn snapshot(&self, drift_threshold: f64) -> Result<ShardSnapshot> {
+        Ok(ShardSnapshot {
+            shard: self.id,
+            epoch: self.epoch,
+            devices: self.devices.clone(),
+            mu_hat: self.estimator.mu_hat()?,
+            occupancy: self.occupancy.clone(),
+            drifted: self.drifted(drift_threshold),
+        })
+    }
+
+    fn local_index(&self, device: usize) -> Result<usize> {
+        self.devices
+            .iter()
+            .position(|&d| d == device)
+            .ok_or_else(|| {
+                Error::Config(format!("device {device} not in shard {}", self.id))
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drift_cfg() -> DriftConfig {
+        DriftConfig { min_obs: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn partition_is_contiguous_and_covers_fleet() {
+        let parts = partition_devices(7, 3).unwrap();
+        assert_eq!(parts, vec![vec![0, 1, 2], vec![3, 4], vec![5, 6]]);
+        let flat: Vec<usize> = parts.into_iter().flatten().collect();
+        assert_eq!(flat, (0..7).collect::<Vec<_>>());
+        assert_eq!(partition_devices(3, 3).unwrap().len(), 3);
+        assert!(partition_devices(2, 3).is_err());
+        assert!(partition_devices(2, 0).is_err());
+    }
+
+    #[test]
+    fn routes_by_deficit_within_shard_and_tracks_occupancy() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0, 7.0],
+            vec![1.0, 8.0, 3.0, 2.0],
+        ])
+        .unwrap();
+        // Shard over global devices {2, 3}.
+        let mut leader = ShardLeader::new(1, vec![2, 3], &mu, &drift_cfg()).unwrap();
+        // Target: class 0 → one task on each local device.
+        let target = StateMatrix::new(2, 2, vec![1, 1, 0, 0]).unwrap();
+        leader.install(1, target, mu_columns(&mu, &[2, 3]).unwrap()).unwrap();
+        assert_eq!(leader.epoch(), 1);
+        // Equal deficits: the tie goes to the faster column (μ(0,3)=7).
+        assert_eq!(leader.route(0), 3);
+        // Now only local device 0 (global 2) is under target.
+        assert_eq!(leader.route(0), 2);
+        assert_eq!(leader.class_deficit(0), 0);
+        assert_eq!(leader.occupancy().get(0, 0), 1);
+        leader.complete(0, 2, 0.25).unwrap();
+        assert_eq!(leader.class_deficit(0), 1);
+        // Completions on devices the shard does not own are rejected.
+        assert!(leader.complete(0, 0, 0.25).is_err());
+    }
+
+    #[test]
+    fn cold_shard_never_signals_drift() {
+        // Satellite gate: a freshly booted shard's estimator windows are
+        // shorter than the trust span (min_obs) — it must not report
+        // drift no matter how far the few early samples sit from the
+        // prior it was seeded with.
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &drift_cfg()).unwrap();
+        assert!(!leader.drifted(0.01), "cold shard drifted");
+        // 7 samples, 10× slower than the prior: still below min_obs = 8.
+        for _ in 0..7 {
+            leader.occupancy.inc(0, 0);
+            leader.complete(0, 0, 1.0).unwrap();
+        }
+        assert!(!leader.drifted(0.01), "sub-min_obs window drifted");
+        assert!(!leader.snapshot(0.01).unwrap().drifted);
+        // The 8th observation warms the cell; the deviation now counts.
+        leader.occupancy.inc(0, 0);
+        leader.complete(0, 0, 1.0).unwrap();
+        assert!(leader.drifted(0.5));
+    }
+
+    #[test]
+    fn install_validates_shapes() {
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let mut leader = ShardLeader::new(0, vec![0], &mu, &drift_cfg()).unwrap();
+        let wide = StateMatrix::zeros(2, 2);
+        assert!(leader.install(1, wide, mu_columns(&mu, &[0]).unwrap()).is_err());
+        let ok_target = StateMatrix::zeros(2, 1);
+        assert!(leader.install(1, ok_target, mu.clone()).is_err());
+        let ok_target = StateMatrix::zeros(2, 1);
+        leader.install(1, ok_target, mu_columns(&mu, &[0]).unwrap()).unwrap();
+    }
+}

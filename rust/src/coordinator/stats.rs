@@ -102,6 +102,20 @@ impl RateEstimator {
         self.counts[class * self.l + device]
     }
 
+    /// Has this cell seen at least `min_obs` samples — i.e. is its
+    /// estimate trusted enough to contribute to [`drift`](Self::drift)?
+    /// Cold cells (shorter windows) never signal drift, which is what
+    /// lets sharded leaders boot cold without thrashing the global
+    /// re-solve loop.
+    pub fn is_warm(&self, class: usize, device: usize) -> bool {
+        self.counts[class * self.l + device] >= self.min_obs
+    }
+
+    /// Number of cells with at least `min_obs` observations.
+    pub fn warm_cells(&self) -> usize {
+        self.counts.iter().filter(|&&c| c >= self.min_obs).count()
+    }
+
     /// Current service-time estimate ω̂ for a cell: the window mean once
     /// the cell has `min_obs` samples (EWMA before that), prior when the
     /// cell has never been observed.
@@ -300,6 +314,31 @@ mod tests {
         e.observe(1, 1, f64::NAN);
         e.observe(1, 1, -1.0);
         assert_eq!(e.count(1, 1), 8);
+    }
+
+    #[test]
+    fn cold_start_windows_never_report_drift() {
+        // Guard for the sharded leaders, which each boot with empty
+        // windows: while a cell's window is shorter than the trust span
+        // (min_obs) it must not report drift, no matter how far the few
+        // early samples sit from the prior.
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let mut e = RateEstimator::new(&prior, 0.3, 32, 8).unwrap();
+        assert_eq!(e.warm_cells(), 0);
+        assert_eq!(e.drift(&prior), 0.0);
+        // 7 samples at 10× the prior's service time: still cold.
+        for _ in 0..7 {
+            e.observe(0, 0, 1.0);
+        }
+        assert!(!e.is_warm(0, 0));
+        assert_eq!(e.drift(&prior), 0.0, "sub-min_obs window signalled drift");
+        // The 8th sample warms the cell; the same deviation now counts.
+        e.observe(0, 0, 1.0);
+        assert!(e.is_warm(0, 0));
+        assert_eq!(e.warm_cells(), 1);
+        assert!(e.drift(&prior) > 0.5);
+        // Other cells remain cold and keep not contributing.
+        assert!(!e.is_warm(1, 1));
     }
 
     #[test]

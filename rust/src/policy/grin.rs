@@ -171,7 +171,47 @@ fn best_move_for_row_inc(
 /// probe is O(1); the solution is identical to evaluating Eqs. 34/36 in
 /// full (`tests/adaptive_e2e.rs` property-checks the equivalence).
 pub fn solve(mu: &AffinityMatrix, populations: &[u32]) -> Result<GrInSolution> {
-    let mut n = initialize(mu, populations)?;
+    let n = initialize(mu, populations)?;
+    greedy_increase(mu, n, populations)
+}
+
+/// Batched re-solve entry point for the sharded coordinator: run the
+/// greedy-increase loop from a gathered occupancy snapshot instead of
+/// the Algorithm-1 seeding.
+///
+/// The global coordinator assembles per-shard μ̂/occupancy snapshots
+/// into one k×l view and warm-starts GrIn from the fleet's *current*
+/// distribution — under mild drift the snapshot is already near the new
+/// local maximum, so the batched solve converges in a handful of moves
+/// (`GrInSolution::moves` is the metric) where a cold solve replays the
+/// whole seeding.  `start` must satisfy `populations`
+/// ([`crate::model::state::StateMatrix::check_populations`]); gather-time
+/// in-flight skew is the caller's to project out.
+pub fn solve_from_snapshot(
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    start: &StateMatrix,
+) -> Result<GrInSolution> {
+    if start.types() != mu.types() || start.procs() != mu.procs() {
+        return Err(Error::Shape(format!(
+            "snapshot is {}×{}, μ is {}×{}",
+            start.types(),
+            start.procs(),
+            mu.types(),
+            mu.procs()
+        )));
+    }
+    start.check_populations(populations)?;
+    greedy_increase(mu, start.clone(), populations)
+}
+
+/// The Algorithm-2 greedy loop from an arbitrary feasible start state
+/// (shared by [`solve`] and [`solve_from_snapshot`]).
+fn greedy_increase(
+    mu: &AffinityMatrix,
+    mut n: StateMatrix,
+    populations: &[u32],
+) -> Result<GrInSolution> {
     let (k, l) = (mu.types(), mu.procs());
     let mut inc = IncrementalX::new(mu, &n);
     // Scratch for the per-row delta passes, allocated once per solve.
@@ -374,6 +414,38 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn solve_from_snapshot_warm_starts_and_validates() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![12.0, 3.0, 7.0],
+            vec![2.0, 9.0, 4.0],
+            vec![6.0, 6.0, 10.0],
+        ])
+        .unwrap();
+        let pops = [8u32, 6, 4];
+        let cold = solve(&mu, &pops).unwrap();
+        // A local maximum is a fixed point of the warm start.
+        let again = solve_from_snapshot(&mu, &pops, &cold.state).unwrap();
+        assert_eq!(again.moves, 0);
+        assert!((again.throughput - cold.throughput).abs() < 1e-12);
+        // From a deliberately bad snapshot (everything on processor 0)
+        // the greedy loop climbs back to cold-solve quality.
+        let mut bad = StateMatrix::zeros(3, 3);
+        for (i, &p) in pops.iter().enumerate() {
+            bad.set(i, 0, p);
+        }
+        let warm = solve_from_snapshot(&mu, &pops, &bad).unwrap();
+        warm.state.check_populations(&pops).unwrap();
+        assert!(warm.moves > 0);
+        assert!(warm.throughput >= x_of_state(&mu, &bad));
+        assert!(warm.throughput >= cold.throughput * 0.9);
+        // Shape and population mismatches are rejected.
+        let narrow = StateMatrix::zeros(3, 2);
+        assert!(solve_from_snapshot(&mu, &pops, &narrow).is_err());
+        let short = StateMatrix::zeros(3, 3);
+        assert!(solve_from_snapshot(&mu, &pops, &short).is_err());
     }
 
     #[test]

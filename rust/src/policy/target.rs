@@ -12,6 +12,25 @@ use crate::model::state::StateMatrix;
 
 use super::SystemView;
 
+/// Argmax over (deficit, rate) pairs: largest deficit, ties to the
+/// faster rate, then the lower index — the one steering tie-break rule,
+/// shared by [`TargetSteering::dispatch`] and both levels of the
+/// sharded plane ([`crate::coordinator::ShardLeader`] device pick,
+/// [`crate::coordinator::ShardedControl`] shard pick).
+pub(crate) fn pick_by_deficit(pairs: impl Iterator<Item = (i64, f64)>) -> usize {
+    let mut best = 0usize;
+    let mut best_deficit = i64::MIN;
+    let mut best_rate = f64::NEG_INFINITY;
+    for (i, (deficit, rate)) in pairs.enumerate() {
+        if deficit > best_deficit || (deficit == best_deficit && rate > best_rate) {
+            best = i;
+            best_deficit = deficit;
+            best_rate = rate;
+        }
+    }
+    best
+}
+
 /// Steers arrivals toward a fixed target state.
 #[derive(Debug, Clone)]
 pub struct TargetSteering {
@@ -38,20 +57,12 @@ impl TargetSteering {
     pub fn dispatch(&self, ttype: usize, view: &SystemView<'_>) -> usize {
         let l = self.target.procs();
         debug_assert_eq!(view.state.procs(), l);
-        let mut best = 0usize;
-        let mut best_deficit = i64::MIN;
-        let mut best_rate = f64::NEG_INFINITY;
-        for j in 0..l {
-            let deficit =
-                self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64;
-            let rate = view.mu.rate(ttype, j);
-            if deficit > best_deficit || (deficit == best_deficit && rate > best_rate) {
-                best = j;
-                best_deficit = deficit;
-                best_rate = rate;
-            }
-        }
-        best
+        pick_by_deficit((0..l).map(|j| {
+            (
+                self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64,
+                view.mu.rate(ttype, j),
+            )
+        }))
     }
 }
 

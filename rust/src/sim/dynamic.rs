@@ -25,6 +25,7 @@
 //! the rate they started with (a real frequency switch drains in-flight
 //! work the same way).
 
+use crate::coordinator::global::ShardedControl;
 use crate::coordinator::stats::RateEstimator;
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -88,6 +89,14 @@ pub enum ResolveMode {
     /// drift exceeds [`DriftConfig::threshold`] (plus at population
     /// changes, which a real scheduler observes directly).
     Adaptive,
+    /// Multi-leader control plane ([`ShardedControl`]): the fleet is
+    /// partitioned into [`ShardConfig::shards`] shards, each with its
+    /// own cold-started estimator and local deficit steering; every
+    /// [`ShardConfig::sync_every`] completions the global layer gathers
+    /// per-shard snapshots and runs one batched GrIn re-solve, pushing
+    /// epoch-versioned targets back.  The `policy` argument is ignored
+    /// — the control plane always steers by batched GrIn.
+    Sharded,
 }
 
 impl ResolveMode {
@@ -97,8 +106,9 @@ impl ResolveMode {
             "static" => Ok(ResolveMode::Static),
             "phase" | "every_phase" => Ok(ResolveMode::EveryPhase),
             "adaptive" => Ok(ResolveMode::Adaptive),
+            "sharded" => Ok(ResolveMode::Sharded),
             other => Err(Error::Parse(format!(
-                "unknown resolve mode '{other}' (static|every_phase|adaptive)"
+                "unknown resolve mode '{other}' (static|every_phase|adaptive|sharded)"
             ))),
         }
     }
@@ -109,7 +119,18 @@ impl ResolveMode {
             ResolveMode::Static => "static",
             ResolveMode::EveryPhase => "every_phase",
             ResolveMode::Adaptive => "adaptive",
+            ResolveMode::Sharded => "sharded",
         }
+    }
+
+    /// Every mode, in comparison-table order.
+    pub fn all() -> [ResolveMode; 4] {
+        [
+            ResolveMode::Static,
+            ResolveMode::EveryPhase,
+            ResolveMode::Adaptive,
+            ResolveMode::Sharded,
+        ]
     }
 }
 
@@ -134,6 +155,21 @@ impl Default for DriftConfig {
     }
 }
 
+/// Sharded-mode knobs (the multi-leader control plane).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Shard count; 0 = one shard per processor (per device class).
+    pub shards: usize,
+    /// Completions between global gather / batched-re-solve syncs.
+    pub sync_every: u64,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        Self { shards: 0, sync_every: 250 }
+    }
+}
+
 /// Configuration of a dynamic run.
 #[derive(Debug, Clone)]
 pub struct DynamicConfig {
@@ -149,6 +185,8 @@ pub struct DynamicConfig {
     pub resolve: ResolveMode,
     /// Adaptive-mode knobs.
     pub drift: DriftConfig,
+    /// Sharded-mode knobs.
+    pub shard: ShardConfig,
 }
 
 impl DynamicConfig {
@@ -162,6 +200,7 @@ impl DynamicConfig {
             seed: 1,
             resolve: ResolveMode::EveryPhase,
             drift: DriftConfig::default(),
+            shard: ShardConfig::default(),
         }
     }
 }
@@ -248,6 +287,21 @@ pub fn run_dynamic_report(
     let mut resolves = 0u64;
     let mut since_check = 0u64;
     let adaptive = cfg.resolve == ResolveMode::Adaptive;
+    let sharded = cfg.resolve == ResolveMode::Sharded;
+    // Observed service times feed an estimator in both the single-leader
+    // adaptive mode and (per shard) the sharded mode.
+    let observes = adaptive || sharded;
+    let mut control: Option<ShardedControl> = if sharded {
+        Some(ShardedControl::new(
+            mu,
+            &cfg.phases[0].populations,
+            cfg.shard.shards,
+            &cfg.drift,
+            cfg.shard.sync_every,
+        )?)
+    } else {
+        None
+    };
     // (task id, rate it was pushed at) for the ≤N in-flight tasks — so
     // the estimator observes the service time the task really
     // experienced, even when it straddles a phase boundary's rate
@@ -291,6 +345,17 @@ pub fn run_dynamic_report(
                 // rates, never the oracle's.
                 policy.prepare(&believed, &phase.populations)?;
             }
+            ResolveMode::Sharded => {
+                // Same observability argument, through the control
+                // plane: batched re-solve against its believed rates,
+                // epoch-versioned push-back to every shard.
+                if phase_idx > 0 {
+                    control
+                        .as_mut()
+                        .expect("sharded mode constructs its control plane")
+                        .set_populations(&phase.populations)?;
+                }
+            }
         }
         for ttype in 0..k {
             let want = phase.populations[ttype] as usize;
@@ -305,21 +370,26 @@ pub fn run_dynamic_report(
                     let size = dist.sample(&mut rng);
                     let task = programs[pid].emit(next_id, now, size);
                     next_id += 1;
-                    if needs_work {
-                        for (j, pr) in procs.iter().enumerate() {
-                            work[j] = pr.remaining_work_time();
+                    let j = match control.as_mut() {
+                        Some(ctl) => ctl.route(ttype),
+                        None => {
+                            if needs_work {
+                                for (jj, pr) in procs.iter().enumerate() {
+                                    work[jj] = pr.remaining_work_time();
+                                }
+                            }
+                            let view = SystemView {
+                                mu: &believed,
+                                state: &state,
+                                work: &work,
+                                populations: &phase.populations,
+                            };
+                            policy.dispatch(ttype, &view, &mut rng)
                         }
-                    }
-                    let view = SystemView {
-                        mu: &believed,
-                        state: &state,
-                        work: &work,
-                        populations: &phase.populations,
                     };
-                    let j = policy.dispatch(ttype, &view, &mut rng);
                     procs[j].advance(now);
                     let rate = actual.rate(ttype, j);
-                    if adaptive {
+                    if observes {
                         inflight_rates.push((task.id, rate));
                     }
                     procs[j].push(task, rate, now);
@@ -364,14 +434,26 @@ pub fn run_dynamic_report(
             // The estimator sees what a real system would measure: the
             // task's execution time at the rate it was actually pushed
             // with (tasks straddling a rate change keep their old rate).
-            if adaptive {
+            if observes {
                 let pos = inflight_rates
                     .iter()
                     .position(|&(id, _)| id == done.id)
                     .expect("completed task has a recorded in-flight rate");
                 let (_, rate) = inflight_rates.swap_remove(pos);
-                estimator.observe(done.ttype, j, done.size / rate);
-                since_check += 1;
+                let service_s = done.size / rate;
+                match control.as_mut() {
+                    // The sharded plane syncs (gather + batched
+                    // re-solve) on its own cadence inside on_complete.
+                    Some(ctl) => {
+                        if ctl.on_complete(done.ttype, j, service_s)? {
+                            resolves += 1;
+                        }
+                    }
+                    None => {
+                        estimator.observe(done.ttype, j, service_s);
+                        since_check += 1;
+                    }
+                }
             }
             if adaptive && since_check >= cfg.drift.check_every {
                 since_check = 0;
@@ -395,21 +477,26 @@ pub fn run_dynamic_report(
             let size = dist.sample(&mut rng);
             let task = programs[pid].emit(next_id, now, size);
             next_id += 1;
-            if needs_work {
-                for (jj, pr) in procs.iter().enumerate() {
-                    work[jj] = pr.remaining_work_time();
+            let dest = match control.as_mut() {
+                Some(ctl) => ctl.route(ttype),
+                None => {
+                    if needs_work {
+                        for (jj, pr) in procs.iter().enumerate() {
+                            work[jj] = pr.remaining_work_time();
+                        }
+                    }
+                    let view = SystemView {
+                        mu: &believed,
+                        state: &state,
+                        work: &work,
+                        populations: &phase.populations,
+                    };
+                    policy.dispatch(ttype, &view, &mut rng)
                 }
-            }
-            let view = SystemView {
-                mu: &believed,
-                state: &state,
-                work: &work,
-                populations: &phase.populations,
             };
-            let dest = policy.dispatch(ttype, &view, &mut rng);
             procs[dest].advance(now);
             let rate = actual.rate(ttype, dest);
-            if adaptive {
+            if observes {
                 inflight_rates.push((task.id, rate));
             }
             procs[dest].push(task, rate, now);
@@ -506,10 +593,66 @@ mod tests {
 
     #[test]
     fn resolve_mode_parsing_round_trips() {
-        for m in [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive] {
+        for m in ResolveMode::all() {
             assert_eq!(ResolveMode::parse(m.name()).unwrap(), m);
         }
         assert!(ResolveMode::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn sharded_mode_matches_theory_on_stationary_two_type() {
+        // On a stationary workload the sharded control plane (one shard
+        // per processor here) must hold the same optimum as the
+        // single-leader solve: measured X at the Eq.-16 theory level.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 300, 6_000)]);
+        cfg.resolve = ResolveMode::Sharded;
+        cfg.seed = 41;
+        let mut p = PolicyKind::GrIn.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        let theory = x_max_theoretical(&mu, Regime::P1Biased, 10, 10);
+        let err = (report.phases[0].throughput - theory).abs() / theory;
+        assert!(err < 0.08, "sharded X {} vs theory {theory}", report.phases[0].throughput);
+    }
+
+    #[test]
+    fn sharded_mode_survives_population_changes() {
+        // Task conservation + positive throughput across grow/shrink
+        // phase boundaries under the sharded control plane.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![
+            Phase::new(vec![3, 3], 100, 1_000),
+            Phase::new(vec![8, 1], 100, 1_000),
+            Phase::new(vec![1, 8], 100, 1_000),
+        ]);
+        cfg.resolve = ResolveMode::Sharded;
+        cfg.shard.shards = 2;
+        cfg.seed = 13;
+        let mut p = PolicyKind::GrIn.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        for (i, r) in report.phases.iter().enumerate() {
+            assert!(r.throughput > 0.0, "phase {i}");
+            assert!(
+                r.little_residual() < 0.25,
+                "phase {i}: X·E[T] = {} vs N = {}",
+                r.little_product,
+                r.n_programs
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_mode_rejects_bad_shard_counts() {
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![2, 2], 0, 50)]);
+        cfg.resolve = ResolveMode::Sharded;
+        cfg.shard.shards = 3; // only 2 processors
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        cfg.shard.shards = 2;
+        cfg.shard.sync_every = 0;
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
     }
 
     #[test]

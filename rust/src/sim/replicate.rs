@@ -28,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::policy::PolicyKind;
 
+use super::dynamic::{run_dynamic_report, DynamicConfig};
 use super::engine::{ClosedNetwork, SimArena, SimConfig};
 use super::rng::SplitMix64;
 
@@ -181,6 +182,85 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
     Ok(out)
 }
 
+/// One dynamic-scenario cell: a (system, resolve-mode, policy)
+/// configuration replicated R times — the unit of work behind
+/// `hetsched scenario --compare`, where the single-leader and sharded
+/// arms are A/B'd over identical seeded replications.
+#[derive(Debug, Clone)]
+pub struct DynCell {
+    /// Display label ("adaptive", "sharded", …).
+    pub label: String,
+    /// Baseline affinity matrix (phases rescale it).
+    pub mu: AffinityMatrix,
+    /// Dynamic run configuration; its `seed` acts as the per-cell salt,
+    /// replication seeds are derived on top of it.
+    pub cfg: DynamicConfig,
+    /// Policy under test (built fresh per replication; ignored by the
+    /// sharded resolve mode, which always steers by batched GrIn).
+    pub policy: PolicyKind,
+}
+
+/// Aggregated replication statistics for one dynamic cell.
+#[derive(Debug, Clone)]
+pub struct DynCellStats {
+    /// The cell's label.
+    pub label: String,
+    /// Replications aggregated.
+    pub reps: u32,
+    /// Mean of the completion-weighted mean throughput across
+    /// replications.
+    pub mean_x: f64,
+    /// Sample standard deviation of that mean throughput.
+    pub sd_x: f64,
+    /// 95% CI half-width (1.96·sd/√R, normal approximation).
+    pub ci95_x: f64,
+    /// Mean re-solve count per replication.
+    pub mean_resolves: f64,
+}
+
+/// Fan R seeded replications of each dynamic cell across the worker
+/// pool.  Seeds derive from (base seed, cell salt, cell, rep) exactly
+/// as in [`run_cells`] and results land in pre-assigned slots, so the
+/// aggregate is thread-count independent bit for bit.
+pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Vec<DynCellStats>> {
+    if cells.is_empty() || plan.reps == 0 {
+        return Err(Error::Config("replication sweep needs ≥1 cell and ≥1 rep".into()));
+    }
+    let reps = plan.reps as usize;
+    let jobs: Vec<(usize, u32)> = (0..cells.len())
+        .flat_map(|c| (0..plan.reps).map(move |r| (c, r)))
+        .collect();
+    let runs: Vec<Result<(f64, u64)>> = parallel_map(&jobs, plan.threads, |_, &(c, r)| {
+        let cell = &cells[c];
+        let mut cfg = cell.cfg.clone();
+        cfg.seed = rep_seed(plan.base_seed, cell.cfg.seed, c, r);
+        let mut policy = cell.policy.build();
+        run_dynamic_report(&cell.mu, &cfg, policy.as_mut())
+            .map(|report| (report.mean_throughput(), report.resolves))
+    });
+    let mut it = runs.into_iter();
+    let mut out = Vec::with_capacity(cells.len());
+    for cell in cells {
+        let mut xs = Vec::with_capacity(reps);
+        let mut resolve_total = 0u64;
+        for _ in 0..reps {
+            let (x, resolves) = it.next().expect("one slot per job")?;
+            xs.push(x);
+            resolve_total += resolves;
+        }
+        let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
+        out.push(DynCellStats {
+            label: cell.label.clone(),
+            reps: plan.reps,
+            mean_x,
+            sd_x,
+            ci95_x,
+            mean_resolves: resolve_total as f64 / reps as f64,
+        });
+    }
+    Ok(out)
+}
+
 /// Mean, sample sd and 95% CI half-width of a replication sample.
 fn mean_sd_ci(xs: &[f64]) -> (f64, f64, f64) {
     let n = xs.len() as f64;
@@ -281,6 +361,40 @@ mod tests {
         let wide = run_cells(&cells, &ReplicationPlan { reps: 2, threads: 2, base_seed: 7 })
             .unwrap();
         assert!(wide[0].ci95_x.is_finite() && wide[0].ci95_x >= 0.0);
+    }
+
+    #[test]
+    fn dynamic_cells_replicate_and_are_thread_count_independent() {
+        use crate::sim::dynamic::{DynamicConfig, Phase, ResolveMode};
+        let mu = workload::paper_two_type_mu();
+        let cells: Vec<DynCell> = [ResolveMode::Adaptive, ResolveMode::Sharded]
+            .into_iter()
+            .map(|mode| {
+                let mut cfg = DynamicConfig::new(vec![
+                    Phase::new(vec![6, 6], 50, 600),
+                    Phase::new(vec![2, 10], 50, 600),
+                ]);
+                cfg.resolve = mode;
+                cfg.seed = 19;
+                DynCell {
+                    label: mode.name().to_string(),
+                    mu: mu.clone(),
+                    cfg,
+                    policy: PolicyKind::GrIn,
+                }
+            })
+            .collect();
+        let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 11 };
+        let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+        let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+        assert_eq!(one.len(), 2);
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits(), "{}", a.label);
+            assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits(), "{}", a.label);
+            assert!(a.mean_x > 0.0);
+        }
+        assert!(run_dynamic_cells(&[], &mk(1)).is_err());
     }
 
     #[test]

@@ -47,6 +47,37 @@ pub mod table3 {
     pub fn p2_biased() -> AffinityMatrix {
         AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).expect("static matrix")
     }
+
+    /// The general-symmetric rates tiled across `l` devices (device j
+    /// gets column j mod 2) — the default fleet for multi-device
+    /// serving runs (`hetsched serve --devices L`).
+    pub fn general_symmetric_tiled(l: usize) -> Result<AffinityMatrix> {
+        let base = general_symmetric();
+        let rows: Vec<Vec<f64>> = (0..2)
+            .map(|i| (0..l).map(|j| base.rate(i, j % 2)).collect())
+            .collect();
+        AffinityMatrix::from_rows(&rows)
+    }
+}
+
+/// Three device classes (big cores / little cores / accelerator) for
+/// the k>2 sharded-coordination experiments: each task type has a
+/// distinct preferred class.
+pub fn three_class_mu() -> AffinityMatrix {
+    AffinityMatrix::from_rows(&[
+        vec![20.0, 8.0, 2.0],
+        vec![5.0, 12.0, 3.0],
+        vec![2.0, 4.0, 18.0],
+    ])
+    .expect("static matrix")
+}
+
+/// Per-cell factors that rotate the class affinity of
+/// [`three_class_mu`]: type 0's fast class moves 0 → 2 and type 2's
+/// moves 2 → 0 (type 1 is untouched) — the three-class regime flip a
+/// frozen global solve cannot see.
+pub fn three_class_flip_scale() -> Vec<f64> {
+    vec![0.1, 1.0, 9.0, 1.0, 1.0, 1.0, 9.0, 1.0, 0.1]
 }
 
 /// A random k×l system: μ entries uniform in [lo, hi).
@@ -249,6 +280,35 @@ mod tests {
             Regime::GeneralSymmetric
         );
         assert_eq!(table3::p2_biased().classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
+    fn three_class_flip_rotates_preferred_classes() {
+        let base = three_class_mu();
+        assert_eq!(base.best_proc(0), 0);
+        assert_eq!(base.best_proc(1), 1);
+        assert_eq!(base.best_proc(2), 2);
+        let flipped = base.scaled(&three_class_flip_scale()).unwrap();
+        // Types 0 and 2 swap preferred classes; type 1 keeps its own.
+        assert_eq!(flipped.best_proc(0), 2);
+        assert_eq!(flipped.best_proc(1), 1);
+        assert_eq!(flipped.best_proc(2), 0);
+        // The flip is substantial: the frozen placements lose ≥ 2×.
+        assert!(flipped.rate(0, 0) * 2.0 < base.rate(0, 0));
+        assert!(flipped.rate(2, 2) * 2.0 < base.rate(2, 2));
+    }
+
+    #[test]
+    fn tiled_general_symmetric_repeats_columns() {
+        let t = table3::general_symmetric_tiled(5).unwrap();
+        assert_eq!(t.types(), 2);
+        assert_eq!(t.procs(), 5);
+        let base = table3::general_symmetric();
+        for i in 0..2 {
+            for j in 0..5 {
+                assert_eq!(t.rate(i, j), base.rate(i, j % 2));
+            }
+        }
     }
 
     #[test]

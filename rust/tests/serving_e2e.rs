@@ -119,6 +119,38 @@ fn adaptive_serving_estimates_and_reports_mu_hat() {
 }
 
 #[test]
+fn sharded_serving_covers_the_fleet_and_reports_mu_hat() {
+    // Four devices in two shards under the sharded multi-leader plane
+    // (native kernels, no artifacts needed): every request completes,
+    // the per-shard estimators assemble a finite global μ̂, and the
+    // batched re-solve loop engages — the Table-3 prior is wildly wrong
+    // for the in-process kernels, so once the cold-start windows warm
+    // the shards must report drift.
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        devices: 4,
+        shards: 2,
+        total: 240,
+        inflight: 12,
+        sync_every: 48,
+        drift_threshold: 0.25,
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 240);
+    assert!(r.rps > 0.0);
+    assert_eq!(r.sort_latency.count() + r.nn_latency.count(), 240);
+    let mu_hat = r.mu_hat.expect("sharded run reports the assembled μ̂");
+    assert_eq!(mu_hat.procs(), 4);
+    for i in 0..2 {
+        for j in 0..4 {
+            assert!(mu_hat.rate(i, j).is_finite() && mu_hat.rate(i, j) > 0.0);
+        }
+    }
+    assert!(r.resolves >= 1, "batched re-solve never engaged");
+}
+
+#[test]
 fn all_policies_drive_the_server() {
     if !have_artifacts() {
         return;
