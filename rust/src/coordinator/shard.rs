@@ -11,6 +11,16 @@
 //! assembled k×l view, and pushes new targets back through
 //! [`ShardLeader::install`].
 //!
+//! Change detection is per-shard and trigger-configurable
+//! ([`crate::sim::dynamic::Trigger`]): the PR-1 polled drift threshold,
+//! or the per-cell CUSUM detector that alarms within a bounded number
+//! of completions of an abrupt rate flip.  Either way the snapshot's
+//! `mu_hat` is **confidence-gated**: cells whose estimates went stale
+//! (no sample for `stale_after` completions) report the rates the
+//! current target was solved for instead of their frozen pre-flip
+//! estimates, so the batched re-solve and both deficit-steering levels
+//! never steer on dead data.
+//!
 //! **Epoch semantics:** a leader's `(epoch, target, solved_mu)` triple
 //! only ever changes together, in one `install` call.  A route issued
 //! before the install steers wholly by the old policy, one issued after
@@ -23,7 +33,7 @@ use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
 use crate::policy::target::pick_by_deficit;
-use crate::sim::dynamic::DriftConfig;
+use crate::sim::dynamic::{DriftConfig, Trigger};
 
 use super::stats::RateEstimator;
 
@@ -65,13 +75,17 @@ pub struct ShardSnapshot {
     /// Global device indices the shard owns (column order of the local
     /// matrices below).
     pub devices: Vec<usize>,
-    /// Live local rate estimate μ̂ (prior-backed where cold).
+    /// Live local rate estimate μ̂, confidence-gated: prior-backed where
+    /// cold, solved-rate-backed where stale.
     pub mu_hat: AffinityMatrix,
     /// Local occupancy (class × local device).
     pub occupancy: StateMatrix,
-    /// Has the local estimate drifted past the threshold from the rates
-    /// the current target was solved for?
+    /// Has the shard's change detector fired — threshold drift past the
+    /// configured level, or a pending CUSUM alarm, per the configured
+    /// [`crate::sim::dynamic::Trigger`]?
     pub drifted: bool,
+    /// Local cells currently demoted to stale (local column indices).
+    pub stale: Vec<(usize, usize)>,
 }
 
 /// One shard's leader: local routing, occupancy, estimation.
@@ -88,6 +102,8 @@ pub struct ShardLeader {
     occupancy: StateMatrix,
     target: StateMatrix,
     epoch: u64,
+    /// Change-detector configuration (trigger kind + knobs).
+    drift: DriftConfig,
 }
 
 impl ShardLeader {
@@ -110,8 +126,7 @@ impl ShardLeader {
             )));
         }
         let local = mu_columns(prior, &devices)?;
-        let estimator =
-            RateEstimator::new(&local, drift.ewma_alpha, drift.window, drift.min_obs)?;
+        let estimator = RateEstimator::from_drift(&local, drift)?;
         let (k, ll) = (prior.types(), devices.len());
         Ok(Self {
             id,
@@ -121,6 +136,7 @@ impl ShardLeader {
             occupancy: StateMatrix::zeros(k, ll),
             target: StateMatrix::zeros(k, ll),
             epoch: 0,
+            drift: drift.clone(),
         })
     }
 
@@ -168,12 +184,19 @@ impl ShardLeader {
             .fold(f64::NEG_INFINITY, |a, &b| a.max(b))
     }
 
-    /// Has the local estimate drifted past `threshold` from the rates
-    /// the current target was solved for?  Cold cells (below `min_obs`
-    /// observations) never contribute — a freshly booted shard reports
-    /// no drift until its windows warm up.
-    pub fn drifted(&self, threshold: f64) -> bool {
-        self.estimator.drift(&self.solved_mu) > threshold
+    /// Has the shard's change detector fired?  Under
+    /// [`Trigger::Threshold`] this is the polled drift metric against
+    /// the rates the current target was solved for; under
+    /// [`Trigger::Cusum`] it is a pending per-cell alarm.  Cold cells
+    /// (below `min_obs` observations) never contribute either way — a
+    /// freshly booted shard reports no change until its windows warm up.
+    pub fn drifted(&self) -> bool {
+        match self.drift.trigger {
+            Trigger::Threshold => {
+                self.estimator.drift(&self.solved_mu) > self.drift.threshold
+            }
+            Trigger::Cusum => self.estimator.alarm_pending(),
+        }
     }
 
     /// Route one `class` arrival within the shard: largest local target
@@ -224,21 +247,42 @@ impl ShardLeader {
                 solved_mu.procs()
             )));
         }
+        // The CUSUM residuals (and the stale-cell fallback) follow the
+        // newly installed belief; accumulated deviation from the *old*
+        // solved rates is consumed by the swap.  A swap that does not
+        // change the believed rates (population-only re-solves) keeps
+        // the accumulated evidence — wiping it would restart detection
+        // of a real flip that straddles population churn.
+        if solved_mu.data() != self.solved_mu.data() {
+            self.estimator.set_reference(&solved_mu)?;
+        }
         self.target = target;
         self.solved_mu = solved_mu;
         self.epoch = epoch;
         Ok(())
     }
 
-    /// The shard's report to the global gather.
-    pub fn snapshot(&self, drift_threshold: f64) -> Result<ShardSnapshot> {
+    /// Drain pending CUSUM alarms without installing a new target —
+    /// called by the global layer when a re-solve attempt failed, so
+    /// the detector must re-accumulate before re-firing (the same
+    /// back-off the single-leader paths get by draining before
+    /// solving).
+    pub fn reset_alarms(&mut self) {
+        self.estimator.take_alarms();
+    }
+
+    /// The shard's report to the global gather.  `mu_hat` is
+    /// confidence-gated: stale cells report the solved rates instead of
+    /// their frozen estimates.
+    pub fn snapshot(&self) -> Result<ShardSnapshot> {
         Ok(ShardSnapshot {
             shard: self.id,
             epoch: self.epoch,
             devices: self.devices.clone(),
-            mu_hat: self.estimator.mu_hat()?,
+            mu_hat: self.estimator.mu_hat_gated()?,
             occupancy: self.occupancy.clone(),
-            drifted: self.drifted(drift_threshold),
+            drifted: self.drifted(),
+            stale: self.estimator.stale_cells(),
         })
     }
 
@@ -303,19 +347,122 @@ mod tests {
         // drift no matter how far the few early samples sit from the
         // prior it was seeded with.
         let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
-        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &drift_cfg()).unwrap();
-        assert!(!leader.drifted(0.01), "cold shard drifted");
+        let tight = DriftConfig { threshold: 0.01, ..drift_cfg() };
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &tight).unwrap();
+        assert!(!leader.drifted(), "cold shard drifted");
         // 7 samples, 10× slower than the prior: still below min_obs = 8.
         for _ in 0..7 {
             leader.occupancy.inc(0, 0);
             leader.complete(0, 0, 1.0).unwrap();
         }
-        assert!(!leader.drifted(0.01), "sub-min_obs window drifted");
-        assert!(!leader.snapshot(0.01).unwrap().drifted);
+        assert!(!leader.drifted(), "sub-min_obs window drifted");
+        assert!(!leader.snapshot().unwrap().drifted);
         // The 8th observation warms the cell; the deviation now counts.
         leader.occupancy.inc(0, 0);
         leader.complete(0, 0, 1.0).unwrap();
-        assert!(leader.drifted(0.5));
+        assert!(leader.drifted());
+    }
+
+    #[test]
+    fn cusum_trigger_shard_alarms_and_install_resets() {
+        // Under the CUSUM trigger the shard reports change via pending
+        // per-cell alarms, and an install (new epoch/belief) consumes
+        // them.
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let cfg = DriftConfig {
+            min_obs: 4,
+            trigger: Trigger::Cusum,
+            cusum_delta: 0.25,
+            cusum_h: 2.0,
+            ..Default::default()
+        };
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &cfg).unwrap();
+        assert!(!leader.drifted());
+        // On-reference samples never alarm.
+        for _ in 0..32 {
+            leader.occupancy.inc(0, 0);
+            leader.complete(0, 0, 0.1).unwrap();
+        }
+        assert!(!leader.drifted(), "alarmed on zero residual");
+        // 2× slowdown: alarms within 3 mini-batches (12 completions).
+        for _ in 0..12 {
+            leader.occupancy.inc(0, 1);
+            leader.complete(0, 1, 0.2).unwrap();
+        }
+        assert!(leader.drifted());
+        assert!(leader.snapshot().unwrap().drifted);
+        // Installing the re-solved belief consumes the alarm.
+        let solved = AffinityMatrix::two_type(10.0, 5.0, 10.0, 10.0).unwrap();
+        let target = StateMatrix::zeros(2, 2);
+        leader.install(2, target, solved).unwrap();
+        assert!(!leader.drifted(), "install did not consume the alarm");
+        // The same service level now matches the belief: no re-alarm.
+        for _ in 0..16 {
+            leader.occupancy.inc(0, 1);
+            leader.complete(0, 1, 0.2).unwrap();
+        }
+        assert!(!leader.drifted());
+    }
+
+    #[test]
+    fn install_with_unchanged_rates_preserves_cusum_evidence() {
+        // A population-only re-solve installs new targets against the
+        // *unchanged* believed rates (the global layer's
+        // set_populations path): the per-cell CUSUM accumulators must
+        // survive it, or a real flip straddling population churn would
+        // restart detection from zero after every swap.
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let cfg = DriftConfig {
+            min_obs: 4,
+            trigger: Trigger::Cusum,
+            cusum_delta: 0.25,
+            cusum_h: 2.0,
+            ..Default::default()
+        };
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &cfg).unwrap();
+        // Two mini-batches of 2×-slowdown evidence: g⁺ = 1.5, just
+        // under h = 2.
+        for _ in 0..8 {
+            leader.occupancy.inc(0, 0);
+            leader.complete(0, 0, 0.2).unwrap();
+        }
+        assert!(!leader.drifted(), "alarmed early");
+        // Swap targets under the same solved rates.
+        let same = mu_columns(&mu, &[0, 1]).unwrap();
+        leader.install(2, StateMatrix::zeros(2, 2), same).unwrap();
+        // One more batch crosses the threshold — only if the earlier
+        // evidence survived the install.
+        for _ in 0..4 {
+            leader.occupancy.inc(0, 0);
+            leader.complete(0, 0, 0.2).unwrap();
+        }
+        assert!(leader.drifted(), "unchanged-rate install wiped CUSUM evidence");
+        // A swap that *does* change the rates still resets (covered in
+        // cusum_trigger_shard_alarms_and_install_resets).
+    }
+
+    #[test]
+    fn snapshot_gates_stale_cells_to_solved_rates() {
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let cfg = DriftConfig { min_obs: 4, stale_after: 30, ..Default::default() };
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &cfg).unwrap();
+        // Warm local cell (0, 0) at a 5× slower level.
+        for _ in 0..8 {
+            leader.occupancy.inc(0, 0);
+            leader.complete(0, 0, 0.5).unwrap();
+        }
+        let snap = leader.snapshot().unwrap();
+        assert!((snap.mu_hat.rate(0, 0) - 2.0).abs() < 0.01, "live estimate reported");
+        assert!(snap.stale.is_empty());
+        // Abandon the cell: 31 completions elsewhere demote it.
+        for _ in 0..31 {
+            leader.occupancy.inc(1, 1);
+            leader.complete(1, 1, 0.1).unwrap();
+        }
+        let snap = leader.snapshot().unwrap();
+        assert_eq!(snap.stale, vec![(0, 0)]);
+        // The gather sees the solved rate, not the frozen 2.0 estimate.
+        assert!((snap.mu_hat.rate(0, 0) - 10.0).abs() < 1e-9, "stale cell not gated");
     }
 
     #[test]

@@ -11,9 +11,30 @@
 //!   against; `drift()` quantifies how far μ̂ has moved from the matrix
 //!   the current routing target was solved for (non-stationary
 //!   workloads: phase shifts, bursts, thermal throttling).
+//!
+//! Change-point awareness (the PR-4 subsystem):
+//!
+//! * **Per-cell two-sided CUSUM** over service-time residuals against
+//!   the reference rates the current target was solved for
+//!   ([`RateEstimator::set_reference`]).  Residuals are accumulated per
+//!   mini-batch of `min_obs` samples (batch means tame the exponential
+//!   service-time noise that makes raw-sample CUSUM false-alarm), each
+//!   side discounts a drift allowance δ per batch, and a cell alarms
+//!   when either side crosses the threshold h — then auto-resets so a
+//!   single regime flip raises one alarm, not a storm.
+//! * **Per-cell confidence** ([`RateEstimator::confidence`]): how much
+//!   to trust a cell's estimate right now — observation count (up to the
+//!   `min_obs` trust span) × recency decay (half-life `stale_after`
+//!   estimator-wide completions).  A warm cell that stops being
+//!   exercised is *demoted* after `stale_after` completions without a
+//!   sample: it no longer signals drift ([`RateEstimator::is_warm`],
+//!   [`RateEstimator::stale_cells`]) and the gated accessors
+//!   ([`RateEstimator::mu_hat_gated`]) substitute the reference rate for
+//!   its frozen pre-flip estimate.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::sim::dynamic::DriftConfig;
 
 /// Bounded sliding window of the most recent samples (ring buffer).
 #[derive(Debug, Clone)]
@@ -42,7 +63,8 @@ impl Window {
     }
 }
 
-/// Streaming per-(class, device) service-rate estimator.
+/// Streaming per-(class, device) service-rate estimator with change-point
+/// detection (per-cell two-sided CUSUM) and per-cell confidence.
 #[derive(Debug, Clone)]
 pub struct RateEstimator {
     k: usize,
@@ -57,14 +79,74 @@ pub struct RateEstimator {
     /// Sliding window per cell.
     windows: Vec<Window>,
     counts: Vec<u64>,
+    /// Reference mean service times the CUSUM residuals are computed
+    /// against — the rates the current routing target was solved for.
+    /// Starts at the prior; updated via [`set_reference`](Self::set_reference).
+    ref_omega: Vec<f64>,
+    /// CUSUM slow-down side (service times running above reference).
+    g_plus: Vec<f64>,
+    /// CUSUM speed-up side (service times running below reference).
+    g_minus: Vec<f64>,
+    /// Partial mini-batch accumulator per cell (sum of relative residuals).
+    batch_sum: Vec<f64>,
+    /// Samples in the current mini-batch per cell.
+    batch_n: Vec<u64>,
+    /// CUSUM drift allowance δ per batch (relative residual units).
+    cusum_delta: f64,
+    /// CUSUM alarm threshold h.
+    cusum_h: f64,
+    /// Cells whose CUSUM crossed h since the last reference swap/drain.
+    alarmed: Vec<bool>,
+    alarm_pending: bool,
+    /// Total observations ever recorded (the staleness clock).
+    tick: u64,
+    /// Clock value of each cell's most recent sample.
+    last_obs: Vec<u64>,
+    /// Estimator-wide completions without a fresh sample before a warm
+    /// cell demotes to stale; 0 disables demotion.
+    stale_after: u64,
 }
 
 impl RateEstimator {
     /// Estimator seeded from the prior affinity matrix (the rates the
-    /// scheduler believes before any observation).
+    /// scheduler believes before any observation), with the default
+    /// change-detector knobs ([`DriftConfig::default`]).
     pub fn new(prior: &AffinityMatrix, alpha: f64, window: usize, min_obs: u64) -> Result<Self> {
+        let d = DriftConfig::default();
+        Self::build(prior, alpha, window, min_obs, d.cusum_delta, d.cusum_h, d.stale_after)
+    }
+
+    /// Estimator configured from a [`DriftConfig`] (the adaptive/sharded
+    /// construction path — one knob set shared by simulator and server).
+    pub fn from_drift(prior: &AffinityMatrix, drift: &DriftConfig) -> Result<Self> {
+        Self::build(
+            prior,
+            drift.ewma_alpha,
+            drift.window,
+            drift.min_obs,
+            drift.cusum_delta,
+            drift.cusum_h,
+            drift.stale_after,
+        )
+    }
+
+    fn build(
+        prior: &AffinityMatrix,
+        alpha: f64,
+        window: usize,
+        min_obs: u64,
+        cusum_delta: f64,
+        cusum_h: f64,
+        stale_after: u64,
+    ) -> Result<Self> {
         if !(0.0..=1.0).contains(&alpha) || alpha == 0.0 {
             return Err(Error::Config(format!("EWMA alpha {alpha} outside (0, 1]")));
+        }
+        if !(cusum_delta.is_finite() && cusum_delta >= 0.0) {
+            return Err(Error::Config(format!("CUSUM delta {cusum_delta} must be ≥ 0")));
+        }
+        if !(cusum_h.is_finite() && cusum_h > 0.0) {
+            return Err(Error::Config(format!("CUSUM h {cusum_h} must be > 0")));
         }
         let (k, l) = (prior.types(), prior.procs());
         let prior_omega: Vec<f64> = prior.data().iter().map(|&m| 1.0 / m).collect();
@@ -74,9 +156,21 @@ impl RateEstimator {
             alpha,
             min_obs: min_obs.max(1),
             ewma: prior_omega.clone(),
+            ref_omega: prior_omega.clone(),
             prior_omega,
             windows: (0..k * l).map(|_| Window::new(window)).collect(),
             counts: vec![0; k * l],
+            g_plus: vec![0.0; k * l],
+            g_minus: vec![0.0; k * l],
+            batch_sum: vec![0.0; k * l],
+            batch_n: vec![0; k * l],
+            cusum_delta,
+            cusum_h,
+            alarmed: vec![false; k * l],
+            alarm_pending: false,
+            tick: 0,
+            last_obs: vec![0; k * l],
+            stale_after,
         })
     }
 
@@ -90,6 +184,31 @@ impl RateEstimator {
         self.ewma[c] = (1.0 - self.alpha) * self.ewma[c] + self.alpha * service_s;
         self.windows[c].push(service_s);
         self.counts[c] += 1;
+        self.tick += 1;
+        self.last_obs[c] = self.tick;
+        // CUSUM over mini-batch means of the relative residual
+        // (s − ω_ref)/ω_ref.  The batch span is min_obs — the same trust
+        // span that gates cold cells — which tames exponential
+        // service-time noise (batch-mean sd ≈ 1/√min_obs relative)
+        // without blunting detection of real level shifts.
+        self.batch_sum[c] += (service_s - self.ref_omega[c]) / self.ref_omega[c];
+        self.batch_n[c] += 1;
+        if self.batch_n[c] >= self.min_obs {
+            let r = self.batch_sum[c] / self.batch_n[c] as f64;
+            self.batch_sum[c] = 0.0;
+            self.batch_n[c] = 0;
+            self.g_plus[c] = (self.g_plus[c] + r - self.cusum_delta).max(0.0);
+            self.g_minus[c] = (self.g_minus[c] - r - self.cusum_delta).max(0.0);
+            if self.g_plus[c] > self.cusum_h || self.g_minus[c] > self.cusum_h {
+                // Auto-reset on alarm: one regime flip raises one alarm,
+                // and the restarted accumulation measures the *new* level
+                // against whatever reference the re-solve installs.
+                self.g_plus[c] = 0.0;
+                self.g_minus[c] = 0.0;
+                self.alarmed[c] = true;
+                self.alarm_pending = true;
+            }
+        }
     }
 
     /// Total observations across all cells.
@@ -102,18 +221,128 @@ impl RateEstimator {
         self.counts[class * self.l + device]
     }
 
-    /// Has this cell seen at least `min_obs` samples — i.e. is its
-    /// estimate trusted enough to contribute to [`drift`](Self::drift)?
-    /// Cold cells (shorter windows) never signal drift, which is what
-    /// lets sharded leaders boot cold without thrashing the global
-    /// re-solve loop.
+    /// Is this cell's estimate trusted enough to contribute to
+    /// [`drift`](Self::drift)?  Two conditions: at least `min_obs`
+    /// samples (cold cells — shorter windows — never signal drift,
+    /// which is what lets sharded leaders boot cold without thrashing
+    /// the global re-solve loop) *and* a sample within the last
+    /// `stale_after` estimator-wide completions (a cell the routing flip
+    /// abandoned must not keep steering on its frozen pre-flip data).
     pub fn is_warm(&self, class: usize, device: usize) -> bool {
-        self.counts[class * self.l + device] >= self.min_obs
+        let c = class * self.l + device;
+        self.counts[c] >= self.min_obs && !self.cell_is_stale(c)
     }
 
-    /// Number of cells with at least `min_obs` observations.
+    /// Number of warm cells ([`is_warm`](Self::is_warm)): observed past
+    /// `min_obs` and not demoted for staleness.
     pub fn warm_cells(&self) -> usize {
-        self.counts.iter().filter(|&&c| c >= self.min_obs).count()
+        (0..self.k * self.l)
+            .filter(|&c| self.counts[c] >= self.min_obs && !self.cell_is_stale(c))
+            .count()
+    }
+
+    /// Estimator-wide completions since this cell last saw a sample
+    /// (0 for a never-observed cell — it is *cold*, not stale).
+    pub fn staleness(&self, class: usize, device: usize) -> u64 {
+        let c = class * self.l + device;
+        if self.counts[c] == 0 {
+            0
+        } else {
+            self.tick - self.last_obs[c]
+        }
+    }
+
+    fn cell_is_stale(&self, c: usize) -> bool {
+        self.stale_after > 0
+            && self.counts[c] > 0
+            && self.tick - self.last_obs[c] > self.stale_after
+    }
+
+    /// Has this once-observed cell gone `stale_after` estimator-wide
+    /// completions without a fresh sample?
+    pub fn is_stale(&self, class: usize, device: usize) -> bool {
+        self.cell_is_stale(class * self.l + device)
+    }
+
+    /// Every stale cell, in row-major (class, device) order.
+    pub fn stale_cells(&self) -> Vec<(usize, usize)> {
+        (0..self.k * self.l)
+            .filter(|&c| self.cell_is_stale(c))
+            .map(|c| (c / self.l, c % self.l))
+            .collect()
+    }
+
+    /// How much to trust this cell's estimate right now, in [0, 1]:
+    /// observation count relative to the `min_obs` trust span × recency
+    /// decay with half-life `stale_after` (a cell exactly `stale_after`
+    /// completions behind the clock has half the confidence of a live
+    /// one).  0 for a never-observed cell.
+    pub fn confidence(&self, class: usize, device: usize) -> f64 {
+        let c = class * self.l + device;
+        if self.counts[c] == 0 {
+            return 0.0;
+        }
+        let count_factor = (self.counts[c] as f64 / self.min_obs as f64).min(1.0);
+        let recency = if self.stale_after == 0 {
+            1.0
+        } else {
+            let staleness = (self.tick - self.last_obs[c]) as f64;
+            0.5f64.powf(staleness / self.stale_after as f64)
+        };
+        count_factor * recency
+    }
+
+    /// Install the reference rates the CUSUM residuals are measured
+    /// against — the matrix the (re-)solved routing target believes.
+    /// Resets every cell's CUSUM state, partial batches and pending
+    /// alarms: accumulated evidence describes deviation from the *old*
+    /// belief and must not leak into the new one.
+    ///
+    /// Errors on a k×l shape mismatch (a silently mis-indexed reference
+    /// would corrupt every residual).
+    pub fn set_reference(&mut self, reference: &AffinityMatrix) -> Result<()> {
+        if reference.types() != self.k || reference.procs() != self.l {
+            return Err(Error::Shape(format!(
+                "reference is {}×{}, estimator runs {}×{}",
+                reference.types(),
+                reference.procs(),
+                self.k,
+                self.l
+            )));
+        }
+        for (o, &m) in self.ref_omega.iter_mut().zip(reference.data()) {
+            *o = 1.0 / m;
+        }
+        self.g_plus.fill(0.0);
+        self.g_minus.fill(0.0);
+        self.batch_sum.fill(0.0);
+        self.batch_n.fill(0);
+        self.alarmed.fill(false);
+        self.alarm_pending = false;
+        Ok(())
+    }
+
+    /// Has any cell's CUSUM alarmed since the last reference swap /
+    /// [`take_alarms`](Self::take_alarms) drain?  O(1) — safe to poll on
+    /// every completion.
+    pub fn alarm_pending(&self) -> bool {
+        self.alarm_pending
+    }
+
+    /// Drain the alarmed cells (row-major order), clearing the pending
+    /// flag.  The caller re-solves against
+    /// [`mu_hat_gated`](Self::mu_hat_gated) and, on success, installs
+    /// the new belief via [`set_reference`](Self::set_reference); on a
+    /// momentarily unsolvable μ̂ the drained alarms act as a natural
+    /// back-off — the CUSUM must re-accumulate before re-alarming.
+    pub fn take_alarms(&mut self) -> Vec<(usize, usize)> {
+        let out: Vec<(usize, usize)> = (0..self.k * self.l)
+            .filter(|&c| self.alarmed[c])
+            .map(|c| (c / self.l, c % self.l))
+            .collect();
+        self.alarmed.fill(false);
+        self.alarm_pending = false;
+        out
     }
 
     /// Current service-time estimate ω̂ for a cell: the window mean once
@@ -137,7 +366,9 @@ impl RateEstimator {
         1.0 / self.omega_hat(class, device)
     }
 
-    /// The live affinity matrix μ̂.
+    /// The live affinity matrix μ̂ (raw: every cell reports its own
+    /// estimate, however stale — use
+    /// [`mu_hat_gated`](Self::mu_hat_gated) for anything that steers).
     pub fn mu_hat(&self) -> Result<AffinityMatrix> {
         let rows: Vec<Vec<f64>> = (0..self.k)
             .map(|i| (0..self.l).map(|j| self.rate_hat(i, j)).collect())
@@ -145,16 +376,62 @@ impl RateEstimator {
         AffinityMatrix::from_rows(&rows)
     }
 
+    /// Confidence-gated service-time estimate: a stale cell falls back
+    /// to the reference belief (its own estimate is frozen pre-flip
+    /// data — worse than no information for steering and re-solving).
+    pub fn omega_hat_gated(&self, class: usize, device: usize) -> f64 {
+        let c = class * self.l + device;
+        if self.cell_is_stale(c) {
+            self.ref_omega[c]
+        } else {
+            self.omega_hat(class, device)
+        }
+    }
+
+    /// Confidence-gated rate estimate μ̂ = 1/ω̂ for a cell.
+    pub fn rate_hat_gated(&self, class: usize, device: usize) -> f64 {
+        1.0 / self.omega_hat_gated(class, device)
+    }
+
+    /// The live affinity matrix μ̂ with stale cells replaced by the
+    /// reference belief — what adaptive re-solves and sharded snapshot
+    /// gathers consume, so a cell the previous target abandoned cannot
+    /// keep steering the fleet on pre-flip rates.
+    pub fn mu_hat_gated(&self) -> Result<AffinityMatrix> {
+        let rows: Vec<Vec<f64>> = (0..self.k)
+            .map(|i| (0..self.l).map(|j| self.rate_hat_gated(i, j)).collect())
+            .collect();
+        AffinityMatrix::from_rows(&rows)
+    }
+
     /// Maximum relative rate deviation of μ̂ from `reference`, over the
-    /// cells with at least `min_obs` observations (unobserved cells
-    /// cannot signal drift).
+    /// warm cells (unobserved cells cannot signal drift; stale cells
+    /// are demoted and stop signalling — see [`is_warm`](Self::is_warm)).
+    ///
+    /// # Panics
+    ///
+    /// Panics when `reference` is not k×l, in release builds too: a
+    /// shape mismatch would silently compare against the wrong cells,
+    /// and every caller holds a same-shape matrix by construction.
     pub fn drift(&self, reference: &AffinityMatrix) -> f64 {
-        debug_assert_eq!(reference.types(), self.k);
-        debug_assert_eq!(reference.procs(), self.l);
+        assert_eq!(
+            reference.types(),
+            self.k,
+            "drift reference has {} task types, estimator runs {}",
+            reference.types(),
+            self.k
+        );
+        assert_eq!(
+            reference.procs(),
+            self.l,
+            "drift reference has {} devices, estimator runs {}",
+            reference.procs(),
+            self.l
+        );
         let mut worst = 0.0f64;
         for i in 0..self.k {
             for j in 0..self.l {
-                if self.count(i, j) < self.min_obs {
+                if !self.is_warm(i, j) {
                     continue;
                 }
                 let rf = reference.rate(i, j);
@@ -346,5 +623,187 @@ mod tests {
         let prior = AffinityMatrix::two_type(1.0, 1.0, 1.0, 1.0).unwrap();
         assert!(RateEstimator::new(&prior, 0.0, 8, 1).is_err());
         assert!(RateEstimator::new(&prior, 1.5, 8, 1).is_err());
+    }
+
+    #[test]
+    fn estimator_rejects_bad_cusum_knobs() {
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(1.0, 1.0, 1.0, 1.0).unwrap();
+        let bad_h = DriftConfig { cusum_h: 0.0, ..Default::default() };
+        assert!(RateEstimator::from_drift(&prior, &bad_h).is_err());
+        let bad_delta = DriftConfig { cusum_delta: -0.1, ..Default::default() };
+        assert!(RateEstimator::from_drift(&prior, &bad_delta).is_err());
+    }
+
+    #[test]
+    fn cusum_alarms_on_slowdown_and_auto_resets() {
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig {
+            min_obs: 4,
+            cusum_delta: 0.25,
+            cusum_h: 2.0,
+            ..Default::default()
+        };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        assert!(!e.alarm_pending());
+        // Exact-reference samples: residual 0, never alarms.
+        for _ in 0..64 {
+            e.observe(0, 0, 0.1);
+        }
+        assert!(!e.alarm_pending(), "alarmed on zero residual");
+        // 2× slowdown on (0, 1): batch residual +1, accumulates 0.75 per
+        // 4-sample batch → crosses h = 2 on the 3rd batch (12 samples).
+        for _ in 0..12 {
+            e.observe(0, 1, 0.2);
+        }
+        assert!(e.alarm_pending());
+        let alarms = e.take_alarms();
+        assert_eq!(alarms, vec![(0, 1)]);
+        assert!(!e.alarm_pending(), "take_alarms did not drain");
+        // Auto-reset: the accumulated excursion was cleared at the alarm,
+        // so the very next batch cannot immediately re-alarm...
+        for _ in 0..4 {
+            e.observe(0, 1, 0.2);
+        }
+        assert!(!e.alarm_pending(), "no back-off after alarm reset");
+        // ...but sustained deviation alarms again.
+        for _ in 0..12 {
+            e.observe(0, 1, 0.2);
+        }
+        assert!(e.alarm_pending());
+    }
+
+    #[test]
+    fn cusum_alarms_on_speedup_via_minus_side() {
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig {
+            min_obs: 4,
+            cusum_delta: 0.1,
+            cusum_h: 1.0,
+            ..Default::default()
+        };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        // 2× speedup: residual −0.5 per batch, g⁻ grows 0.4 per batch →
+        // crosses h = 1 on the 3rd batch.
+        for _ in 0..12 {
+            e.observe(1, 0, 0.05);
+        }
+        assert_eq!(e.take_alarms(), vec![(1, 0)]);
+    }
+
+    #[test]
+    fn set_reference_resets_cusum_and_checks_shape() {
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig { min_obs: 4, cusum_h: 2.0, ..Default::default() };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        for _ in 0..12 {
+            e.observe(0, 0, 0.2); // 2× slower than the prior: alarms
+        }
+        assert!(e.alarm_pending());
+        // Installing the new belief (rates at the observed level) clears
+        // the alarm and the accumulators...
+        let flipped = AffinityMatrix::two_type(5.0, 10.0, 10.0, 10.0).unwrap();
+        e.set_reference(&flipped).unwrap();
+        assert!(!e.alarm_pending());
+        // ...and residuals are now measured against the new reference:
+        // the same samples no longer deviate.
+        for _ in 0..64 {
+            e.observe(0, 0, 0.2);
+        }
+        assert!(!e.alarm_pending(), "alarmed against the refreshed reference");
+        // Shape mismatches are a hard error, not a debug assert.
+        let wide = AffinityMatrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![3.0, 2.0, 1.0]])
+            .unwrap();
+        assert!(e.set_reference(&wide).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "drift reference")]
+    fn drift_panics_on_shape_mismatch_in_release_too() {
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let e = RateEstimator::new(&prior, 0.2, 8, 4).unwrap();
+        let wide = AffinityMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+        ])
+        .unwrap();
+        e.drift(&wide);
+    }
+
+    #[test]
+    fn flipped_away_cell_demotes_and_stops_signalling_drift() {
+        // Satellite regression gate: a cell that was warm before a
+        // regime flip, then never exercised again, must stop
+        // contributing its frozen pre-flip rate to drift()/warm_cells().
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig { min_obs: 8, stale_after: 50, ..Default::default() };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        // Cell (0, 0) warms at a 10× slower level: big drift.
+        for _ in 0..16 {
+            e.observe(0, 0, 1.0);
+        }
+        assert!(e.is_warm(0, 0));
+        assert_eq!(e.warm_cells(), 1);
+        assert!(e.drift(&prior) > 0.5);
+        let conf_live = e.confidence(0, 0);
+        assert!(conf_live > 0.9, "live warm cell confidence {conf_live}");
+        // The flip moves all traffic to (1, 1); (0, 0) goes quiet.
+        for _ in 0..51 {
+            e.observe(1, 1, 0.1);
+        }
+        assert!(e.is_stale(0, 0), "51 > stale_after completions without a sample");
+        assert!(!e.is_warm(0, 0), "stale cell still warm");
+        assert_eq!(e.stale_cells(), vec![(0, 0)]);
+        assert!(e.confidence(0, 0) < 0.5, "confidence did not decay");
+        assert!(conf_live > e.confidence(0, 0));
+        // Only (1, 1) is warm now, and it matches the prior: no drift.
+        assert!(e.drift(&prior) < 0.05, "stale cell kept signalling drift");
+        // warm_cells reflects the demotion: (1, 1) alone.
+        assert_eq!(e.warm_cells(), 1);
+        assert!(e.is_warm(1, 1));
+        // The gated matrix substitutes the reference for the stale cell
+        // while the live cell keeps its own estimate.
+        let gated = e.mu_hat_gated().unwrap();
+        assert!((gated.rate(0, 0) - 10.0).abs() < 1e-9, "stale cell not gated");
+        assert!((gated.rate(1, 1) - 10.0).abs() < 0.01);
+        // The raw matrix still reports the frozen estimate.
+        assert!((e.mu_hat().unwrap().rate(0, 0) - 1.0).abs() < 0.01);
+        // A fresh sample re-promotes the cell.
+        e.observe(0, 0, 1.0);
+        assert!(!e.is_stale(0, 0));
+        assert!(e.is_warm(0, 0));
+    }
+
+    #[test]
+    fn confidence_tracks_count_then_recency() {
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig { min_obs: 8, stale_after: 100, ..Default::default() };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        assert_eq!(e.confidence(0, 0), 0.0);
+        // Half the trust span observed → confidence 0.5.
+        for _ in 0..4 {
+            e.observe(0, 0, 0.1);
+        }
+        assert!((e.confidence(0, 0) - 0.5).abs() < 1e-12);
+        for _ in 0..4 {
+            e.observe(0, 0, 0.1);
+        }
+        assert!((e.confidence(0, 0) - 1.0).abs() < 1e-12);
+        assert_eq!(e.staleness(0, 0), 0);
+        // Exactly one half-life of other-cell completions → 0.5.
+        for _ in 0..100 {
+            e.observe(1, 1, 0.1);
+        }
+        assert_eq!(e.staleness(0, 0), 100);
+        assert!((e.confidence(0, 0) - 0.5).abs() < 1e-12);
+        // Not yet stale at exactly the half-life; one more tick demotes.
+        assert!(!e.is_stale(0, 0));
+        e.observe(1, 1, 0.1);
+        assert!(e.is_stale(0, 0));
     }
 }

@@ -17,6 +17,12 @@ use super::SystemView;
 /// shared by [`TargetSteering::dispatch`] and both levels of the
 /// sharded plane ([`crate::coordinator::ShardLeader`] device pick,
 /// [`crate::coordinator::ShardedControl`] shard pick).
+///
+/// The rate inputs at every call site are the *solved* rates of the
+/// installed target, which re-solves assemble from the
+/// confidence-gated μ̂
+/// ([`crate::coordinator::RateEstimator::mu_hat_gated`]) — so a stale
+/// cell's frozen pre-flip estimate can never win a steering tie.
 pub(crate) fn pick_by_deficit(pairs: impl Iterator<Item = (i64, f64)>) -> usize {
     let mut best = 0usize;
     let mut best_deficit = i64::MIN;

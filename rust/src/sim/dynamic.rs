@@ -86,8 +86,10 @@ pub enum ResolveMode {
     /// (oracle knowledge; the paper's piece-wise closed reading).
     EveryPhase,
     /// Estimate μ̂ on line from observed service times and re-solve when
-    /// drift exceeds [`DriftConfig::threshold`] (plus at population
-    /// changes, which a real scheduler observes directly).
+    /// the configured [`Trigger`] fires — polled drift past
+    /// [`DriftConfig::threshold`], or a per-cell CUSUM alarm
+    /// ([`Trigger::Cusum`]) — plus at population changes, which a real
+    /// scheduler observes directly.
     Adaptive,
     /// Multi-leader control plane ([`ShardedControl`]): the fleet is
     /// partitioned into [`ShardConfig::shards`] shards, each with its
@@ -134,12 +136,54 @@ impl ResolveMode {
     }
 }
 
-/// Adaptive-mode knobs (estimator + drift detector).
+/// What fires an adaptive re-solve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trigger {
+    /// Poll every [`DriftConfig::check_every`] completions and re-solve
+    /// when the maximum relative rate deviation of μ̂ from the believed
+    /// matrix exceeds [`DriftConfig::threshold`] (the PR-1 behavior).
+    Threshold,
+    /// Per-cell two-sided CUSUM over service-time residuals
+    /// ([`crate::coordinator::RateEstimator`]): re-solve the moment any
+    /// cell's cumulative deviation crosses [`DriftConfig::cusum_h`] —
+    /// fast on abrupt regime flips, and near-silent on stationary noise
+    /// that the global drift metric occasionally mistakes for change.
+    Cusum,
+}
+
+impl Trigger {
+    /// Parse a CLI/config name.
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "threshold" | "drift" => Ok(Trigger::Threshold),
+            "cusum" => Ok(Trigger::Cusum),
+            other => Err(Error::Parse(format!(
+                "unknown trigger '{other}' (threshold|cusum)"
+            ))),
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Trigger::Threshold => "threshold",
+            Trigger::Cusum => "cusum",
+        }
+    }
+
+    /// Both triggers, in comparison order.
+    pub fn all() -> [Trigger; 2] {
+        [Trigger::Threshold, Trigger::Cusum]
+    }
+}
+
+/// Adaptive-mode knobs (estimator + change detector).
 #[derive(Debug, Clone)]
 pub struct DriftConfig {
-    /// Relative rate deviation that triggers a re-solve.
+    /// Relative rate deviation that triggers a re-solve
+    /// ([`Trigger::Threshold`]).
     pub threshold: f64,
-    /// Completions between drift checks.
+    /// Completions between drift checks ([`Trigger::Threshold`]).
     pub check_every: u64,
     /// Estimator EWMA coefficient.
     pub ewma_alpha: f64,
@@ -147,11 +191,36 @@ pub struct DriftConfig {
     pub window: usize,
     /// Observations before a cell's estimate is trusted.
     pub min_obs: u64,
+    /// What fires a re-solve: polled threshold drift or per-cell CUSUM.
+    pub trigger: Trigger,
+    /// CUSUM drift allowance δ (relative service-time residual units):
+    /// deviations below δ per batch are absorbed, not accumulated.
+    pub cusum_delta: f64,
+    /// CUSUM alarm threshold h: a cell alarms when its cumulative
+    /// (δ-discounted) residual crosses h.  The default 4.0 detects a 2×
+    /// rate flip in ~6 mini-batches while keeping the stationary
+    /// false-alarm probability per cell near e⁻¹² under exponential
+    /// service-time noise.
+    pub cusum_h: f64,
+    /// Completions (estimator-wide) without a fresh sample before a warm
+    /// cell is demoted to stale: it stops signalling drift and its
+    /// estimate is replaced by the believed rate wherever μ̂ is consumed.
+    pub stale_after: u64,
 }
 
 impl Default for DriftConfig {
     fn default() -> Self {
-        Self { threshold: 0.2, check_every: 250, ewma_alpha: 0.05, window: 64, min_obs: 8 }
+        Self {
+            threshold: 0.2,
+            check_every: 250,
+            ewma_alpha: 0.05,
+            window: 64,
+            min_obs: 8,
+            trigger: Trigger::Threshold,
+            cusum_delta: 0.25,
+            cusum_h: 4.0,
+            stale_after: 1_000,
+        }
     }
 }
 
@@ -278,12 +347,7 @@ pub fn run_dynamic_report(
     // What the scheduler believes the rates are (drives the policy and
     // the SystemView); the per-phase `actual` drives the physics.
     let mut believed = mu.clone();
-    let mut estimator = RateEstimator::new(
-        mu,
-        cfg.drift.ewma_alpha,
-        cfg.drift.window,
-        cfg.drift.min_obs,
-    )?;
+    let mut estimator = RateEstimator::from_drift(mu, &cfg.drift)?;
     let mut resolves = 0u64;
     let mut since_check = 0u64;
     let adaptive = cfg.resolve == ResolveMode::Adaptive;
@@ -455,15 +519,38 @@ pub fn run_dynamic_report(
                     }
                 }
             }
-            if adaptive && since_check >= cfg.drift.check_every {
-                since_check = 0;
-                if estimator.drift(&believed) > cfg.drift.threshold {
-                    let mu_hat = estimator.mu_hat()?;
+            if adaptive {
+                let fire = match cfg.drift.trigger {
+                    // Polled: every check_every completions, compare the
+                    // worst-cell relative deviation to the threshold.
+                    Trigger::Threshold => {
+                        if since_check >= cfg.drift.check_every {
+                            since_check = 0;
+                            estimator.drift(&believed) > cfg.drift.threshold
+                        } else {
+                            false
+                        }
+                    }
+                    // Event-driven: the per-cell CUSUM alarm flag is
+                    // O(1), so it is polled on every completion and the
+                    // re-solve lands the moment a change is confirmed.
+                    Trigger::Cusum => estimator.alarm_pending(),
+                };
+                if fire {
+                    if cfg.drift.trigger == Trigger::Cusum {
+                        // Drain before solving: a failed re-solve then
+                        // backs off until the CUSUM re-accumulates.
+                        estimator.take_alarms();
+                    }
+                    // Gated μ̂: stale cells carry the believed rates
+                    // forward instead of frozen pre-flip estimates.
+                    let mu_hat = estimator.mu_hat_gated()?;
                     // A noisy μ̂ can be momentarily unsolvable (CAB's
                     // Eq.-2 regime check): keep the old target and retry
                     // at the next check.
                     if policy.prepare(&mu_hat, &phase.populations).is_ok() {
                         believed = mu_hat;
+                        estimator.set_reference(&believed)?;
                         resolves += 1;
                     }
                 }
@@ -597,6 +684,35 @@ mod tests {
             assert_eq!(ResolveMode::parse(m.name()).unwrap(), m);
         }
         assert!(ResolveMode::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn trigger_parsing_round_trips() {
+        for t in Trigger::all() {
+            assert_eq!(Trigger::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(Trigger::parse("drift").unwrap(), Trigger::Threshold);
+        assert!(Trigger::parse("vibes").is_err());
+    }
+
+    #[test]
+    fn cusum_trigger_is_quiet_on_stationary_load() {
+        // The headline false-alarm property: on a stationary workload
+        // the CUSUM trigger must keep throughput at the theory level
+        // while issuing (essentially) no re-solves — the batched
+        // mini-batch residuals absorb exponential service-time noise
+        // that the polled drift metric occasionally mistakes for change.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 300, 6_000)]);
+        cfg.resolve = ResolveMode::Adaptive;
+        cfg.drift.trigger = Trigger::Cusum;
+        cfg.seed = 33;
+        let mut p = PolicyKind::GrIn.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        let theory = x_max_theoretical(&mu, Regime::P1Biased, 10, 10);
+        let err = (report.phases[0].throughput - theory).abs() / theory;
+        assert!(err < 0.08, "cusum X {} vs theory {theory}", report.phases[0].throughput);
+        assert!(report.resolves <= 2, "{} stationary re-solves", report.resolves);
     }
 
     #[test]

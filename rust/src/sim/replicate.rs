@@ -18,8 +18,10 @@
 //!   written to its own pre-assigned slot, so a 16-thread sweep is
 //!   bit-identical to a single-threaded one.
 //!
-//! Each cell reports mean and a normal-approximation 95% confidence
-//! interval over its replications.
+//! Each cell reports mean and a 95% confidence interval over its
+//! replications, with Student-t critical values so small replication
+//! counts (`--reps 5`) get honestly wide intervals instead of the
+//! normal approximation's overconfident ±1.96·se.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
@@ -85,11 +87,12 @@ pub struct CellStats {
     pub mean_x: f64,
     /// Sample standard deviation of X.
     pub sd_x: f64,
-    /// 95% CI half-width for X̄ (1.96·sd/√R, normal approximation).
+    /// 95% CI half-width for X̄ (t·sd/√R, Student-t critical value for
+    /// R − 1 degrees of freedom; 1.96 beyond df = 30).
     pub ci95_x: f64,
     /// Mean response time E[T] across replications.
     pub mean_response: f64,
-    /// 95% CI half-width for E[T].
+    /// 95% CI half-width for E[T] (t-corrected like `ci95_x`).
     pub ci95_response: f64,
 }
 
@@ -212,7 +215,8 @@ pub struct DynCellStats {
     pub mean_x: f64,
     /// Sample standard deviation of that mean throughput.
     pub sd_x: f64,
-    /// 95% CI half-width (1.96·sd/√R, normal approximation).
+    /// 95% CI half-width (t·sd/√R, Student-t critical value for R − 1
+    /// degrees of freedom; 1.96 beyond df = 30).
     pub ci95_x: f64,
     /// Mean re-solve count per replication.
     pub mean_resolves: f64,
@@ -261,7 +265,29 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
     Ok(out)
 }
 
-/// Mean, sample sd and 95% CI half-width of a replication sample.
+/// Two-sided 95% Student-t critical values for df = 1..=30; beyond 30
+/// degrees of freedom the normal 1.96 is used (t(0.975, 31) ≈ 2.040,
+/// so the cut-over understates the half-width by ≤ 4%, shrinking as R
+/// grows).  Small replication counts (`--reps 5`) are the norm for
+/// quick sweeps, and the normal value there is badly overconfident
+/// (df = 4 needs 2.776, not 1.96 — a 42% wider interval).
+const T95: [f64; 30] = [
+    12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228, //
+    2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086, //
+    2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+];
+
+/// 95% critical value for a CI on the mean of `n` replications.
+fn t95(n: usize) -> f64 {
+    match n.saturating_sub(1) {
+        0 => 0.0,
+        df if df <= T95.len() => T95[df - 1],
+        _ => 1.96,
+    }
+}
+
+/// Mean, sample sd and 95% CI half-width (Student-t corrected for small
+/// samples) of a replication sample.
 fn mean_sd_ci(xs: &[f64]) -> (f64, f64, f64) {
     let n = xs.len() as f64;
     let mean = xs.iter().sum::<f64>() / n;
@@ -270,7 +296,7 @@ fn mean_sd_ci(xs: &[f64]) -> (f64, f64, f64) {
     }
     let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
     let sd = var.sqrt();
-    (mean, sd, 1.96 * sd / n.sqrt())
+    (mean, sd, t95(xs.len()) * sd / n.sqrt())
 }
 
 /// Fan an arbitrary job list across `threads` workers (0 = one per
@@ -356,11 +382,43 @@ mod tests {
         assert!(cab.mean_x > 0.0 && cab.ci95_x >= 0.0);
         // Distinct seeds ⇒ genuine replication spread.
         assert!(cab.sd_x > 0.0, "replications identical?");
+        // The CI is t-corrected: for R = 8 the half-width is exactly
+        // t(7)·sd/√8, wider than the normal approximation's 1.96·sd/√8.
+        let want = 2.365 * cab.sd_x / (8f64).sqrt();
+        assert!((cab.ci95_x - want).abs() < 1e-12, "CI {} vs t-corrected {want}", cab.ci95_x);
+        assert!(cab.ci95_x > 1.96 * cab.sd_x / (8f64).sqrt());
         assert!(cab.mean_x >= jsq.mean_x * 0.999, "CAB {} vs JSQ {}", cab.mean_x, jsq.mean_x);
-        // Smaller samples still aggregate cleanly.
+        // Smaller samples still aggregate cleanly — R = 2 runs on one
+        // degree of freedom, so the t correction (12.706 vs 1.96) is
+        // at its most material.
         let wide = run_cells(&cells, &ReplicationPlan { reps: 2, threads: 2, base_seed: 7 })
             .unwrap();
         assert!(wide[0].ci95_x.is_finite() && wide[0].ci95_x >= 0.0);
+        let want = 12.706 * wide[0].sd_x / (2f64).sqrt();
+        assert!((wide[0].ci95_x - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn t_critical_values_cover_small_samples_then_fall_back_to_normal() {
+        // n = 1: no CI.  n = 2..=31: the table (df = n − 1).  Beyond:
+        // the normal value.
+        assert_eq!(t95(0), 0.0);
+        assert_eq!(t95(1), 0.0);
+        assert_eq!(t95(2), 12.706);
+        assert_eq!(t95(5), 2.776);
+        assert_eq!(t95(31), 2.042);
+        assert_eq!(t95(32), 1.96);
+        assert_eq!(t95(1000), 1.96);
+        // Monotone decreasing toward the normal limit.
+        for n in 2..32 {
+            assert!(t95(n) > t95(n + 1) - 1e-12, "t95 not monotone at {n}");
+            assert!(t95(n) >= 1.96);
+        }
+        // mean_sd_ci applies it.
+        let (mean, sd, ci) = mean_sd_ci(&[1.0, 3.0]);
+        assert_eq!(mean, 2.0);
+        assert!((sd - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert!((ci - 12.706 * sd / std::f64::consts::SQRT_2).abs() < 1e-12);
     }
 
     #[test]

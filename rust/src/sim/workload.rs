@@ -6,9 +6,10 @@
 //! * random k×l systems (Figs. 9–14): μ entries uniform, random
 //!   populations — the paper randomizes both "to show the generality of
 //!   GrIn for widely varying task affinities".
-//! * non-stationary schedules ([`ScenarioKind`]): phase-shift, burst and
-//!   slow-drift regimes for the adaptive-scheduling experiments
-//!   (`hetsched scenario`, `tests/adaptive_e2e.rs`).
+//! * non-stationary schedules ([`ScenarioKind`]): phase-shift, burst,
+//!   slow-drift and abrupt-flip regimes for the adaptive-scheduling and
+//!   change-point-detection experiments (`hetsched scenario`,
+//!   `tests/adaptive_e2e.rs`, `tests/cusum_e2e.rs`).
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -93,7 +94,7 @@ pub fn random_populations(rng: &mut Rng, k: usize, max_per_type: u32) -> Vec<u32
     (0..k).map(|_| 1 + rng.below(max_per_type as u64) as u32).collect()
 }
 
-/// The three canned non-stationary regimes for the two-type system.
+/// The canned non-stationary regimes for the two-type system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScenarioKind {
     /// The population mix flips between a low-η and a high-η phase —
@@ -106,6 +107,12 @@ pub enum ScenarioKind {
     /// final regime across the schedule (thermal throttling / affinity
     /// drift), the case where a frozen solve silently decays.
     SlowDrift,
+    /// Abrupt change point: one clean phase at the baseline rates, then
+    /// the full `drift_to` factors from the second phase on, with the
+    /// population mix held fixed — the step change that detection-delay
+    /// and false-alarm measurements are made on (`slow_drift` is the
+    /// matched gradual control).
+    AbruptFlip,
 }
 
 impl ScenarioKind {
@@ -115,8 +122,9 @@ impl ScenarioKind {
             "phase_shift" | "shift" => Ok(ScenarioKind::PhaseShift),
             "burst" => Ok(ScenarioKind::Burst),
             "slow_drift" | "drift" => Ok(ScenarioKind::SlowDrift),
+            "abrupt_flip" | "flip" => Ok(ScenarioKind::AbruptFlip),
             other => Err(Error::Parse(format!(
-                "unknown scenario '{other}' (phase_shift|burst|slow_drift)"
+                "unknown scenario '{other}' (phase_shift|burst|slow_drift|abrupt_flip)"
             ))),
         }
     }
@@ -127,12 +135,18 @@ impl ScenarioKind {
             ScenarioKind::PhaseShift => "phase_shift",
             ScenarioKind::Burst => "burst",
             ScenarioKind::SlowDrift => "slow_drift",
+            ScenarioKind::AbruptFlip => "abrupt_flip",
         }
     }
 
     /// All canned regimes.
-    pub fn all() -> [ScenarioKind; 3] {
-        [ScenarioKind::PhaseShift, ScenarioKind::Burst, ScenarioKind::SlowDrift]
+    pub fn all() -> [ScenarioKind; 4] {
+        [
+            ScenarioKind::PhaseShift,
+            ScenarioKind::Burst,
+            ScenarioKind::SlowDrift,
+            ScenarioKind::AbruptFlip,
+        ]
     }
 }
 
@@ -221,6 +235,33 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
                     } else {
                         let (n1, n2) = split_populations(p.n, 0.5);
                         Phase::new(vec![n1, n2], p.warmup, p.completions)
+                    }
+                })
+                .collect()
+        }
+        ScenarioKind::AbruptFlip => {
+            if p.phases < 2 {
+                return Err(Error::Config(
+                    "abrupt_flip needs ≥ 2 phases (one clean, one flipped)".into(),
+                ));
+            }
+            if p.drift_to.is_empty() {
+                return Err(Error::Config("abrupt_flip needs drift_to factors".into()));
+            }
+            if p.drift_to.iter().any(|&f| !f.is_finite() || f <= 0.0) {
+                return Err(Error::Config("drift_to factors must be > 0".into()));
+            }
+            // Fixed populations: population changes are directly
+            // observable and would re-solve anyway, so holding the mix
+            // isolates the rate step the detector has to find.
+            let (n1, n2) = split_populations(p.n, 0.5);
+            (0..p.phases)
+                .map(|i| {
+                    let ph = Phase::new(vec![n1, n2], p.warmup, p.completions);
+                    if i == 0 {
+                        ph
+                    } else {
+                        ph.with_mu_scale(p.drift_to.clone())
                     }
                 })
                 .collect()
@@ -372,6 +413,29 @@ mod tests {
     }
 
     #[test]
+    fn abrupt_flip_steps_rates_once_and_holds_populations() {
+        let p = ScenarioParams::default();
+        let phases = scenario_phases(ScenarioKind::AbruptFlip, &p).unwrap();
+        assert_eq!(phases.len(), 6);
+        let (n1, n2) = split_populations(p.n, 0.5);
+        // Phase 0 is clean; every later phase carries the full flip.
+        assert!(phases[0].mu_scale.is_empty());
+        for ph in &phases[1..] {
+            assert_eq!(ph.mu_scale, p.drift_to);
+        }
+        for ph in &phases {
+            assert_eq!(ph.populations, vec![n1, n2]);
+            assert!(ph.dist.is_none());
+        }
+        // The default flip really lands in the other regime — the step
+        // the detection-delay gates in tests/cusum_e2e.rs are measured
+        // against.
+        let mu = paper_two_type_mu();
+        let flipped = mu.scaled(&p.drift_to).unwrap();
+        assert_eq!(flipped.classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
     fn scenario_validation_rejects_bad_params() {
         let ok = ScenarioParams::default();
         let cases: Vec<(ScenarioKind, ScenarioParams)> = vec![
@@ -384,7 +448,10 @@ mod tests {
             (ScenarioKind::Burst, ScenarioParams { burst_factor: 0.5, ..ok.clone() }),
             (ScenarioKind::Burst, ScenarioParams { phases: 2, ..ok.clone() }),
             (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![], ..ok.clone() }),
-            (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![-1.0], ..ok }),
+            (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![-1.0], ..ok.clone() }),
+            (ScenarioKind::AbruptFlip, ScenarioParams { phases: 1, ..ok.clone() }),
+            (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![], ..ok.clone() }),
+            (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![0.0], ..ok }),
         ];
         for (kind, p) in cases {
             assert!(scenario_phases(kind, &p).is_err(), "{kind:?} {p:?}");

@@ -1,0 +1,239 @@
+//! Change-point-aware estimation end-to-end — the PR acceptance gates:
+//!
+//! * **false-alarm gate**: on stationary exponential load the per-cell
+//!   CUSUM detector never alarms, across seeds (property test);
+//! * **detection-delay gate**: after a 2× rate flip a cell alarms
+//!   within a bounded number of its own completions (property test);
+//! * on the abrupt regime-flip scenario, CUSUM-triggered adaptive
+//!   re-solves at least match the threshold-drift trigger's throughput,
+//!   while issuing fewer false re-solves on stationary load;
+//! * the sharded control plane under the CUSUM trigger beats a frozen
+//!   global solve on the three-class regime flip.
+
+use hetsched::coordinator::RateEstimator;
+use hetsched::policy::PolicyKind;
+use hetsched::sim::dynamic::{DriftConfig, DynamicConfig, Phase, ResolveMode, Trigger};
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::workload::{
+    self, scenario_phases, three_class_flip_scale, three_class_mu, ScenarioKind,
+    ScenarioParams,
+};
+use hetsched::testkit::forall;
+
+fn cusum_drift() -> DriftConfig {
+    DriftConfig { trigger: Trigger::Cusum, ..Default::default() }
+}
+
+#[test]
+fn prop_cusum_never_alarms_on_stationary_load() {
+    // False-alarm gate: exponential service times at exactly the
+    // reference rates, many cells × many seeds — the mini-batched CUSUM
+    // must stay silent (with the default h = 4 the per-cell crossing
+    // probability is ~e⁻¹²; an alarm here is a real regression, not bad
+    // luck).
+    forall(1301, 30, |g| {
+        let mu = g.affinity((2, 3), (2, 3));
+        let (k, l) = (mu.types(), mu.procs());
+        let mut est = RateEstimator::from_drift(&mu, &cusum_drift())
+            .map_err(|e| e.to_string())?;
+        // Round-robin the cells so the staleness clock stays balanced.
+        for _ in 0..300 {
+            for i in 0..k {
+                for j in 0..l {
+                    est.observe(i, j, g.rng.exp(mu.rate(i, j)));
+                }
+            }
+        }
+        if est.alarm_pending() {
+            return Err(format!("false alarm at cells {:?}", est.take_alarms()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cusum_alarms_within_bounded_delay_after_2x_flip() {
+    // Detection-delay gate: after the cell's true rate halves, the
+    // batch residual mean is +1 and each mini-batch adds ~0.75 to g⁺ —
+    // crossing h = 4 needs ~6 batches (48 samples).  200 samples (25
+    // batches) is a >4σ noise-margin bound; exceeding it means
+    // detection broke, not that the dice came up cold.
+    forall(1723, 30, |g| {
+        let mu = g.affinity_two_type();
+        let mut est = RateEstimator::from_drift(&mu, &cusum_drift())
+            .map_err(|e| e.to_string())?;
+        // Warm stationary stretch first: no alarm.
+        for _ in 0..100 {
+            est.observe(0, 0, g.rng.exp(mu.rate(0, 0)));
+        }
+        if est.alarm_pending() {
+            return Err("alarmed before the flip".into());
+        }
+        // Flip: the cell runs 2× slower from here on.
+        let flipped = mu.rate(0, 0) / 2.0;
+        let mut delay = 0u64;
+        while !est.alarm_pending() {
+            est.observe(0, 0, g.rng.exp(flipped));
+            delay += 1;
+            if delay > 200 {
+                return Err(format!("no alarm {delay} samples after a 2× flip"));
+            }
+        }
+        let alarms = est.take_alarms();
+        if alarms != vec![(0, 0)] {
+            return Err(format!("alarmed wrong cells {alarms:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// The abrupt regime-flip schedule from the canned scenario builder:
+/// one clean phase, then the paper's P1-biased matrix flipped into a
+/// P2-biased one for the rest of the run.
+fn abrupt_flip_phases() -> Vec<Phase> {
+    let params = ScenarioParams {
+        phases: 5,
+        completions: 2_500,
+        warmup: 300,
+        ..Default::default()
+    };
+    scenario_phases(ScenarioKind::AbruptFlip, &params).unwrap()
+}
+
+fn adaptive_cell(trigger: Trigger, phases: Vec<Phase>, seed: u64) -> DynCell {
+    let mut cfg = DynamicConfig::new(phases);
+    cfg.resolve = ResolveMode::Adaptive;
+    cfg.drift.trigger = trigger;
+    cfg.seed = seed;
+    DynCell {
+        label: trigger.name().to_string(),
+        mu: workload::paper_two_type_mu(),
+        cfg,
+        policy: PolicyKind::GrIn,
+    }
+}
+
+#[test]
+fn cusum_trigger_matches_threshold_throughput_on_regime_flip() {
+    // Acceptance gate: on the abrupt flip the CUSUM trigger must at
+    // least match the polled-threshold trigger (it detects within ~200
+    // completions; the threshold poll waits for its check_every tick
+    // and a refreshed window), and both must clearly beat frozen.
+    let mut frozen_cfg = DynamicConfig::new(abrupt_flip_phases());
+    frozen_cfg.resolve = ResolveMode::Static;
+    frozen_cfg.seed = 4141;
+    let cells = vec![
+        adaptive_cell(Trigger::Threshold, abrupt_flip_phases(), 4141),
+        adaptive_cell(Trigger::Cusum, abrupt_flip_phases(), 4141),
+        DynCell {
+            label: "static".into(),
+            mu: workload::paper_two_type_mu(),
+            cfg: frozen_cfg,
+            policy: PolicyKind::GrIn,
+        },
+    ];
+    let plan = ReplicationPlan { reps: 4, threads: 0, base_seed: 23 };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    let (threshold, cusum, frozen) = (&stats[0], &stats[1], &stats[2]);
+    assert!(
+        cusum.mean_x >= threshold.mean_x * 0.97,
+        "cusum {} vs threshold {} — CUSUM lost throughput on the flip",
+        cusum.mean_x,
+        threshold.mean_x
+    );
+    assert!(
+        cusum.mean_x >= frozen.mean_x * 1.1,
+        "cusum {} vs frozen {} — no adaptation win",
+        cusum.mean_x,
+        frozen.mean_x
+    );
+    // The win came from actual CUSUM-triggered re-solves, and the
+    // frozen arm never re-solved.
+    assert!(cusum.mean_resolves >= 1.0, "{}", cusum.mean_resolves);
+    assert_eq!(frozen.mean_resolves, 0.0);
+}
+
+#[test]
+fn cusum_trigger_issues_fewer_false_resolves_on_stationary_load() {
+    // Acceptance gate: on stationary load (no change point anywhere)
+    // the CUSUM trigger must re-solve no more often than the threshold
+    // trigger — and essentially never — while holding throughput.
+    let stationary = vec![Phase::new(vec![10, 10], 300, 6_000)];
+    let cells = vec![
+        adaptive_cell(Trigger::Threshold, stationary.clone(), 808),
+        adaptive_cell(Trigger::Cusum, stationary, 808),
+    ];
+    let plan = ReplicationPlan { reps: 4, threads: 0, base_seed: 31 };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    let (threshold, cusum) = (&stats[0], &stats[1]);
+    assert!(
+        cusum.mean_resolves <= threshold.mean_resolves,
+        "cusum {} re-solves/run vs threshold {} on stationary load",
+        cusum.mean_resolves,
+        threshold.mean_resolves
+    );
+    assert!(
+        cusum.mean_resolves < 0.75,
+        "{} stationary CUSUM re-solves/run",
+        cusum.mean_resolves
+    );
+    // No throughput price for the silence.
+    assert!(
+        cusum.mean_x >= threshold.mean_x * 0.97,
+        "cusum {} vs threshold {} stationary throughput",
+        cusum.mean_x,
+        threshold.mean_x
+    );
+}
+
+#[test]
+fn sharded_cusum_beats_frozen_on_three_class_regime_flip() {
+    // The sharded plane's gather/re-solve loop under per-shard CUSUM
+    // detectors: on the three-device-class affinity rotation it must
+    // beat the frozen global solve by the same ≥1.1× margin the
+    // threshold-trigger sharded arm is held to in sharded_e2e.rs.
+    let scale = three_class_flip_scale();
+    let mut phases = vec![Phase::new(vec![8, 8, 8], 300, 2_500)];
+    for _ in 0..4 {
+        phases.push(Phase::new(vec![8, 8, 8], 300, 2_500).with_mu_scale(scale.clone()));
+    }
+    let cell = |mode: ResolveMode, trigger: Trigger| {
+        let mut cfg = DynamicConfig::new(phases.clone());
+        cfg.resolve = mode;
+        cfg.drift.trigger = trigger;
+        cfg.shard.shards = 3;
+        cfg.seed = 99;
+        DynCell {
+            label: format!("{}+{}", mode.name(), trigger.name()),
+            mu: three_class_mu(),
+            cfg,
+            policy: PolicyKind::GrIn,
+        }
+    };
+    let cells = vec![
+        cell(ResolveMode::Static, Trigger::Threshold),
+        cell(ResolveMode::Sharded, Trigger::Cusum),
+    ];
+    let plan = ReplicationPlan { reps: 3, threads: 0, base_seed: 17 };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    let (frozen, sharded) = (&stats[0], &stats[1]);
+    assert!(
+        sharded.mean_x >= frozen.mean_x * 1.1,
+        "sharded+cusum {} vs frozen {} — no ≥1.1× adaptation win",
+        sharded.mean_x,
+        frozen.mean_x
+    );
+    assert!(sharded.mean_resolves >= 1.0, "{}", sharded.mean_resolves);
+}
+
+#[test]
+fn cusum_replications_are_thread_count_independent() {
+    // The determinism claim extends to the CUSUM trigger: identical
+    // aggregates regardless of worker count.
+    let cells = vec![adaptive_cell(Trigger::Cusum, abrupt_flip_phases(), 55)];
+    let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 5 };
+    let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+    let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+    assert_eq!(one[0].mean_x.to_bits(), four[0].mean_x.to_bits());
+    assert_eq!(one[0].ci95_x.to_bits(), four[0].ci95_x.to_bits());
+}

@@ -119,6 +119,36 @@ fn adaptive_serving_estimates_and_reports_mu_hat() {
 }
 
 #[test]
+fn cusum_triggered_serving_resolves_on_the_live_change_point() {
+    // Same setup as the threshold test above, but the re-solve fires
+    // from the per-cell CUSUM detector: the native kernels' service
+    // times sit far from the Table-3 prior, so every exercised cell
+    // accumulates residual fast and the alarm-triggered re-solve lands
+    // without waiting for a polled drift check.
+    use hetsched::sim::dynamic::Trigger;
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        total: 200,
+        inflight: 12,
+        adaptive: true,
+        trigger: Trigger::Cusum,
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 200);
+    assert!(
+        r.resolves >= 1,
+        "the CUSUM detector should alarm on the prior-vs-native gap"
+    );
+    let mu_hat = r.mu_hat.expect("adaptive run reports μ̂");
+    for i in 0..2 {
+        for j in 0..2 {
+            assert!(mu_hat.rate(i, j).is_finite() && mu_hat.rate(i, j) > 0.0);
+        }
+    }
+}
+
+#[test]
 fn sharded_serving_covers_the_fleet_and_reports_mu_hat() {
     // Four devices in two shards under the sharded multi-leader plane
     // (native kernels, no artifacts needed): every request completes,
