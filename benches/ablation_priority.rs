@@ -1,0 +1,177 @@
+//! Ablation: priority-weighted vs unweighted scheduling on the
+//! contended-fast-device system.
+//!
+//! Two tables:
+//!
+//! 1. **Solve-level trade** (no simulation): the GrIn target, total X
+//!    and per-class X at both population mixes of the `priority_mix`
+//!    flip, unweighted vs 4:1 weighted — what the reservation costs in
+//!    total throughput and buys the high-priority class.
+//! 2. **End to end** (replicated): unweighted vs priority-aware arms
+//!    under the single-leader adaptive loop and the sharded plane on
+//!    the full flip scenario — priority-weighted mean X ± t-corrected
+//!    CI, per-class X, the priority-weighted objective Σ w_i·X_i, the
+//!    class-0 soft-deadline miss rate, and the class-0 p99 response.
+
+use hetsched::cli::Args;
+use hetsched::model::throughput::{x_of_state, WeightedIncrementalX};
+use hetsched::policy::grin;
+use hetsched::policy::PolicyKind;
+use hetsched::report::Table;
+use hetsched::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode};
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::workload::{self, scenario_phases, ScenarioKind, ScenarioParams};
+
+/// Per-class throughput contribution of a solved state:
+/// X_i = Σ_j μ_ij·N_ij / occ_j.
+fn class_x(
+    mu: &hetsched::model::affinity::AffinityMatrix,
+    n: &hetsched::model::state::StateMatrix,
+    class: usize,
+) -> f64 {
+    (0..mu.procs())
+        .map(|j| {
+            let occ = n.col_sum(j);
+            if occ == 0 {
+                0.0
+            } else {
+                mu.rate(class, j) * n.get(class, j) as f64 / occ as f64
+            }
+        })
+        .sum()
+}
+
+const PRIORITIES: [u32; 2] = [4, 1];
+
+fn scenario_cfg(resolve: ResolveMode, weighted: bool, quick: bool) -> DynamicConfig {
+    let params = ScenarioParams {
+        phases: 4,
+        completions: if quick { 800 } else { 3_000 },
+        warmup: if quick { 100 } else { 300 },
+        ..Default::default()
+    };
+    let mut cfg =
+        DynamicConfig::new(scenario_phases(ScenarioKind::PriorityMix, &params).unwrap());
+    cfg.resolve = resolve;
+    cfg.seed = 0xAB5;
+    cfg.drift.threshold = 0.4;
+    cfg.shard.shards = 2;
+    cfg.shard.sync_every = 250;
+    if weighted {
+        cfg.priorities = PRIORITIES.to_vec();
+    }
+    cfg.deadlines = vec![1.0, 0.0];
+    cfg
+}
+
+fn main() {
+    let args = Args::from_env().unwrap();
+    args.ignore_harness_flags();
+    let quick = args.switch("quick");
+    args.finish().unwrap();
+
+    let mu = workload::priority_mu();
+
+    // 1. The solve-level trade at both mixes of the flip.
+    let weights = grin::priority_weights(&PRIORITIES, &[1.0; 4], 2).unwrap();
+    let mut t = Table::new(
+        format!("GrIn target, unweighted vs {PRIORITIES:?}-weighted (μ = priority_mu)"),
+        &["populations", "arm", "target", "total X", "Xw(S)", "X(class 0)", "X(class 1)"],
+    );
+    for pops in [[4u32, 16], [16, 4]] {
+        let plain = grin::solve(&mu, &pops).unwrap();
+        let weighted = grin::solve_weighted(&mu, &pops, &weights).unwrap();
+        for (label, sol) in [("unweighted", &plain), ("priority", &weighted)] {
+            // The weighted objective each arm is (implicitly or
+            // explicitly) scored by — what the weighted greedy loop
+            // maximizes.
+            let xw = WeightedIncrementalX::new(&mu, &sol.state, &weights).unwrap().x();
+            t.row(vec![
+                format!("{pops:?}"),
+                label.to_string(),
+                format!("{:?}", sol.state.data()),
+                format!("{:.3}", x_of_state(&mu, &sol.state)),
+                format!("{xw:.3}"),
+                format!("{:.3}", class_x(&mu, &sol.state, 0)),
+                format!("{:.3}", class_x(&mu, &sol.state, 1)),
+            ]);
+        }
+    }
+    t.print();
+
+    // 2. End to end on the flip scenario, replicated.
+    let arms: [(ResolveMode, bool, &str); 4] = [
+        (ResolveMode::Adaptive, false, "adaptive unweighted"),
+        (ResolveMode::Adaptive, true, "adaptive priority"),
+        (ResolveMode::Sharded, false, "sharded unweighted"),
+        (ResolveMode::Sharded, true, "sharded priority"),
+    ];
+    let cells: Vec<DynCell> = arms
+        .iter()
+        .map(|&(mode, weighted, label)| DynCell {
+            label: label.to_string(),
+            mu: mu.clone(),
+            cfg: scenario_cfg(mode, weighted, quick),
+            policy: PolicyKind::GrIn,
+        })
+        .collect();
+    let plan = ReplicationPlan {
+        reps: if quick { 2 } else { 4 },
+        threads: 0,
+        base_seed: 0x9917,
+    };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    // Single seeded runs for the p99 column (the replication aggregates
+    // carry means, not percentiles).
+    let pri_mean = PRIORITIES.iter().map(|&p| p as f64).sum::<f64>() / 2.0;
+    let mut t = Table::new(
+        format!(
+            "priority ablation on priority_mix (R = {}, mean ± t-corrected 95% CI; \
+             deadline 1.0 s on class 0)",
+            plan.reps
+        ),
+        &[
+            "arm",
+            "mean X",
+            "X(class 0)",
+            "X(class 1)",
+            "Σ w·X (weighted)",
+            "miss(class 0)",
+            "p99(class 0)",
+        ],
+    );
+    for (s, &(mode, weighted, _)) in stats.iter().zip(&arms) {
+        let wx: f64 = s
+            .mean_class_x
+            .iter()
+            .zip(&PRIORITIES)
+            .map(|(&x, &p)| p as f64 / pri_mean * x)
+            .sum();
+        let mut policy = PolicyKind::GrIn.build();
+        let report =
+            run_dynamic_report(&mu, &scenario_cfg(mode, weighted, quick), policy.as_mut())
+                .unwrap();
+        let p99 = report
+            .phases
+            .iter()
+            .filter_map(|r| r.p99_by_class.first().copied())
+            .fold(0.0f64, f64::max);
+        t.row(vec![
+            s.label.clone(),
+            format!("{:.4} ± {:.4}", s.mean_x, s.ci95_x),
+            format!("{:.4}", s.mean_class_x[0]),
+            format!("{:.4}", s.mean_class_x[1]),
+            format!("{wx:.4}"),
+            format!("{:.1}%", s.mean_miss_rate[0] * 100.0),
+            format!("{p99:.3}s"),
+        ]);
+    }
+    t.print();
+    println!(
+        "ablation_priority: the 4:1 weighted solve reserves the contended fast \
+         device for the high-priority class — multiplying its throughput and \
+         cutting its deadline misses for a few percent of total X; the \
+         unweighted optimum crowds the majority class onto the fast device \
+         and starves the tier that matters"
+    );
+}

@@ -8,10 +8,12 @@
 //! hetsched scenario  --kind slow_drift --policy grin [--compare --reps 4]
 //!                    [--resolve sharded --shards N --sync-every M]
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
+//!                    [--priorities 4,1 --deadlines 1.0,0 --threads T]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //!                    [--devices L --shards N --sync-every M]
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
+//!                    [--priorities 4,1 --deadlines 0.05,0.1]
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
@@ -46,19 +48,24 @@ COMMANDS:
              writes a bit-exact snapshot for the CI determinism gate)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
-             slow_drift | abrupt_flip) under a resolve mode (static |
-             every_phase | adaptive | sharded), or --compare all modes
-             side by side plus a CUSUM-triggered adaptive arm
-             (--reps replicates each arm; --shards/--sync-every tune
-             the sharded control plane; --trigger threshold|cusum with
-             --cusum-h/--cusum-delta picks the change detector,
-             --stale-after tunes stale-cell demotion)
+             slow_drift | abrupt_flip | priority_mix) under a resolve
+             mode (static | every_phase | adaptive | sharded), or
+             --compare all modes side by side plus CUSUM-triggered and
+             priority-weighted adaptive arms
+             (--reps/--threads replicate each arm; --shards/--sync-every
+             tune the sharded control plane; --trigger threshold|cusum
+             with --cusum-h/--cusum-delta picks the change detector,
+             --stale-after tunes stale-cell demotion; --priorities a,b
+             weights the GrIn solve per class, --deadlines x,y adds
+             soft-deadline miss accounting, 0 = none)
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
   serve      run the serving coordinator demo (--adaptive for live
              re-solve against estimated rates, --trigger cusum for
              change-point-triggered re-solves; --devices L --shards N
-             for the sharded multi-leader plane)
+             for the sharded multi-leader plane; --priorities a,b for
+             priority-weighted GrIn serving, --deadlines x,y for
+             per-class latency-deadline miss rates)
   help       show this text
 
 Run `hetsched <COMMAND> --help` for per-command flags.";
@@ -87,6 +94,28 @@ pub fn parse_populations(text: &str) -> Result<Vec<u32>> {
             c.trim()
                 .parse::<u32>()
                 .map_err(|_| Error::Parse(format!("bad population '{c}'")))
+        })
+        .collect()
+}
+
+/// Parse "4,1" into per-class integer priorities.
+pub fn parse_priorities(text: &str) -> Result<Vec<u32>> {
+    text.split(',')
+        .map(|c| {
+            c.trim()
+                .parse::<u32>()
+                .map_err(|_| Error::Parse(format!("bad priority '{c}'")))
+        })
+        .collect()
+}
+
+/// Parse "1.0,0" into per-class soft deadlines (seconds; 0 = none).
+pub fn parse_deadlines(text: &str) -> Result<Vec<f64>> {
+    text.split(',')
+        .map(|c| {
+            c.trim()
+                .parse::<f64>()
+                .map_err(|_| Error::Parse(format!("bad deadline '{c}'")))
         })
         .collect()
 }
@@ -372,44 +401,99 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             dynamic.shard.sync_every =
                 args.get_parse("sync-every", dynamic.shard.sync_every)?;
         }
+        // --priorities needs a consumer of the weighted GrIn solve —
+        // the GrIn policy (directly, or via the --compare priority arm,
+        // which only exists under GrIn), or a non-compare sharded run
+        // (the sharded plane always steers by batched GrIn; under
+        // --compare the sharded arm is deliberately unweighted).
+        // Anywhere else the flag stays unconsumed so `finish()` flags
+        // it instead of silently ignoring it.  The priority_mix
+        // scenario defaults to the 4:1 split its canned schedule is
+        // designed around.
+        let weighted_capable = policy == PolicyKind::GrIn
+            || (dynamic.resolve == ResolveMode::Sharded && !args.switch("compare"));
+        if weighted_capable {
+            let default_pri = if kind == ScenarioKind::PriorityMix { "4,1" } else { "" };
+            let text = args.get("priorities").unwrap_or(default_pri);
+            if !text.is_empty() {
+                dynamic.priorities = parse_priorities(text)?;
+            }
+        }
+        // Deadlines are pure accounting and apply under every resolve
+        // mode/policy.
+        if let Some(text) = args.get("deadlines") {
+            dynamic.deadlines = parse_deadlines(text)?;
+        }
         (mu, policy, kind, dynamic)
     };
     let compare = args.switch("compare");
-    // Only meaningful with --compare: leaving it unconsumed otherwise
-    // lets `finish()` flag a stray `--reps` instead of ignoring it.
+    // Only meaningful with --compare: leaving them unconsumed otherwise
+    // lets `finish()` flag stray `--reps`/`--threads` instead of
+    // ignoring them.
     let reps: u32 = if compare { args.get_parse("reps", 4u32)? } else { 4 };
+    let threads: usize = if compare { args.get_parse("threads", 0usize)? } else { 0 };
     args.finish()?;
 
-    let run_arm = |mode: ResolveMode, trigger: Trigger| -> Result<(Vec<f64>, f64, u64)> {
-        let mut cfg = dynamic.clone();
-        cfg.resolve = mode;
-        cfg.drift.trigger = trigger;
-        let mut p = policy.build();
-        let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
-        let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
-        Ok((per_phase, report.mean_throughput(), report.resolves))
+    // The class whose throughput/miss lines are reported: the
+    // highest-priority one (first on ties), class 0 when no priorities
+    // are configured.
+    let hi_class = |pri: &[u32]| -> usize {
+        let top = pri.iter().copied().max().unwrap_or(0);
+        pri.iter().position(|&p| p == top).unwrap_or(0)
     };
+    // (per-phase X, mean X, re-solves, per-class X, per-class miss rate)
+    type ArmResult = (Vec<f64>, f64, u64, Vec<f64>, Vec<f64>);
+    let run_arm =
+        |mode: ResolveMode, trigger: Trigger, priorities: Vec<u32>| -> Result<ArmResult> {
+            let mut cfg = dynamic.clone();
+            cfg.resolve = mode;
+            cfg.drift.trigger = trigger;
+            cfg.priorities = priorities;
+            let mut p = policy.build();
+            let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
+            let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
+            let k = mu.types();
+            Ok((
+                per_phase,
+                report.mean_throughput(),
+                report.resolves,
+                (0..k).map(|i| report.class_throughput(i)).collect(),
+                (0..k).map(|i| report.deadline_miss_rate(i)).collect(),
+            ))
+        };
 
     if compare {
-        // Five arms: the four resolve modes (adaptive under the polled
-        // threshold trigger) plus the CUSUM-triggered adaptive arm; the
-        // sharded arm follows the configured --trigger.  Independent
-        // runs, fanned across cores through the replication runner's
-        // worker pool.
-        let arms: [(ResolveMode, Trigger, &str); 5] = [
-            (ResolveMode::Static, Trigger::Threshold, "static"),
-            (ResolveMode::EveryPhase, Trigger::Threshold, "every_phase"),
-            (ResolveMode::Adaptive, Trigger::Threshold, "adaptive"),
-            (ResolveMode::Adaptive, Trigger::Cusum, "cusum"),
-            (ResolveMode::Sharded, dynamic.drift.trigger, "sharded"),
+        // Six arms: the four resolve modes (adaptive under the polled
+        // threshold trigger), the CUSUM-triggered adaptive arm, and the
+        // priority-weighted adaptive arm (configured --priorities, or
+        // 4:1 by default); the sharded arm follows the configured
+        // --trigger.  Independent runs, fanned across cores through the
+        // replication runner's worker pool.
+        let arm_pri = if dynamic.priorities.is_empty() {
+            vec![4, 1]
+        } else {
+            dynamic.priorities.clone()
+        };
+        let mut arms: Vec<(ResolveMode, Trigger, bool, &str)> = vec![
+            (ResolveMode::Static, Trigger::Threshold, false, "static"),
+            (ResolveMode::EveryPhase, Trigger::Threshold, false, "every_phase"),
+            (ResolveMode::Adaptive, Trigger::Threshold, false, "adaptive"),
+            (ResolveMode::Adaptive, Trigger::Cusum, false, "cusum"),
+            (ResolveMode::Sharded, dynamic.drift.trigger, false, "sharded"),
         ];
-        let results = crate::sim::replicate::parallel_map(&arms, 0, |_, &(mode, trig, _)| {
-            run_arm(mode, trig)
-        })
-        .into_iter()
-        .collect::<Result<Vec<_>>>()?;
+        // The weighted solve is a GrIn extension: under any other
+        // --policy the comparison stays at the five unweighted arms.
+        if policy == PolicyKind::GrIn {
+            arms.push((ResolveMode::Adaptive, Trigger::Threshold, true, "priority"));
+        }
+        let results =
+            crate::sim::replicate::parallel_map(&arms, 0, |_, &(mode, trig, weighted, _)| {
+                run_arm(mode, trig, if weighted { arm_pri.clone() } else { Vec::new() })
+            })
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?;
         let mut headers: Vec<&str> = vec!["phase"];
-        headers.extend(arms.iter().map(|&(_, _, label)| label));
+        headers.extend(arms.iter().map(|&(_, _, _, label)| label));
         let mut t = Table::new(
             format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
             &headers,
@@ -426,27 +510,54 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         let resolve_list: Vec<String> = arms
             .iter()
             .zip(&results)
-            .map(|(&(_, _, label), r)| format!("{label} {}", r.2))
+            .map(|(&(_, _, _, label), r)| format!("{label} {}", r.2))
             .collect();
         println!("re-solves: {}", resolve_list.join(" / "));
-        println!(
-            "vs static mean X: adaptive {:.2}x, cusum {:.2}x, sharded {:.2}x \
-             (oracle every_phase: {:.2}x)",
+        let mut summary = format!(
+            "vs static mean X: adaptive {:.2}x, cusum {:.2}x, sharded {:.2}x",
             results[2].1 / results[0].1,
             results[3].1 / results[0].1,
             results[4].1 / results[0].1,
-            results[1].1 / results[0].1,
         );
+        if let Some(pri) = results.get(5) {
+            summary.push_str(&format!(", priority {:.2}x", pri.1 / results[0].1));
+        }
+        summary.push_str(&format!(
+            " (oracle every_phase: {:.2}x)",
+            results[1].1 / results[0].1
+        ));
+        println!("{summary}");
+        if let Some(pri) = results.get(5) {
+            let h = hi_class(&arm_pri);
+            let mut hi = format!(
+                "high-priority class (class {h}) X: priority {:.4} vs adaptive {:.4} \
+                 ({:.2}x at {:?})",
+                pri.3[h],
+                results[2].3[h],
+                pri.3[h] / results[2].3[h].max(1e-12),
+                arm_pri,
+            );
+            if !dynamic.deadlines.is_empty() {
+                hi.push_str(&format!(
+                    "; its deadline miss: priority {:.1}% vs adaptive {:.1}%",
+                    pri.4[h] * 100.0,
+                    results[2].4[h] * 100.0
+                ));
+            }
+            println!("{hi}");
+        }
         if reps > 1 {
             // Replicated A/B: R seeded replications per arm through the
             // replication runner (thread-count-independent aggregates).
             use crate::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
             let cells: Vec<DynCell> = arms
                 .iter()
-                .map(|&(mode, trig, label)| {
+                .map(|&(mode, trig, weighted, label)| {
                     let mut cfg = dynamic.clone();
                     cfg.resolve = mode;
                     cfg.drift.trigger = trig;
+                    cfg.priorities =
+                        if weighted { arm_pri.clone() } else { Vec::new() };
                     DynCell {
                         label: label.to_string(),
                         mu: mu.clone(),
@@ -455,23 +566,38 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     }
                 })
                 .collect();
-            let plan = ReplicationPlan { reps, threads: 0, base_seed: dynamic.seed };
+            let plan = ReplicationPlan { reps, threads, base_seed: dynamic.seed };
             let stats = run_dynamic_cells(&cells, &plan)?;
+            let h = hi_class(&arm_pri);
+            let with_miss = !dynamic.deadlines.is_empty();
+            let x_col = format!("X(class {h})");
+            let miss_col = format!("miss(class {h})");
+            let mut headers = vec!["mode", "mean X", x_col.as_str()];
+            if with_miss {
+                headers.push(miss_col.as_str());
+            }
+            headers.push("re-solves/run");
             let mut t = Table::new(
                 format!("replicated comparison (R = {reps}, mean ± t-corrected 95% CI)"),
-                &["mode", "mean X", "re-solves/run"],
+                &headers,
             );
             for s in &stats {
-                t.row(vec![
+                let mut row = vec![
                     s.label.clone(),
                     format!("{:.4} ± {:.4}", s.mean_x, s.ci95_x),
-                    format!("{:.1}", s.mean_resolves),
-                ]);
+                    format!("{:.4}", s.mean_class_x[h]),
+                ];
+                if with_miss {
+                    row.push(format!("{:.1}%", s.mean_miss_rate[h] * 100.0));
+                }
+                row.push(format!("{:.1}", s.mean_resolves));
+                t.row(row);
             }
             t.print();
         }
     } else {
-        let (per_phase, mean, resolves) = run_arm(dynamic.resolve, dynamic.drift.trigger)?;
+        let (per_phase, mean, resolves, class_x, class_miss) =
+            run_arm(dynamic.resolve, dynamic.drift.trigger, dynamic.priorities.clone())?;
         let mut t = Table::new(
             format!(
                 "scenario {} ({}, resolve {}, trigger {})",
@@ -491,6 +617,17 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         t.print();
         println!("mean X = {mean:.4} tasks/s, {resolves} re-solves");
+        if !dynamic.priorities.is_empty() || !dynamic.deadlines.is_empty() {
+            let h = hi_class(&dynamic.priorities);
+            let mut line = format!("class-{h} X = {:.4} tasks/s", class_x[h]);
+            if !dynamic.priorities.is_empty() {
+                line.push_str(&format!(" (priorities {:?})", dynamic.priorities));
+            }
+            if !dynamic.deadlines.is_empty() {
+                line.push_str(&format!(", deadline miss {:.1}%", class_miss[h] * 100.0));
+            }
+            println!("{line}");
+        }
     }
     Ok(())
 }
@@ -607,6 +744,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         (d.cusum_delta, d.cusum_h)
     };
+    // --priorities needs the weighted GrIn solve (GrIn policy or the
+    // sharded plane, which always steers by batched GrIn); elsewhere it
+    // stays unconsumed so `finish()` flags it instead of silently
+    // serving unweighted.  --deadlines is pure latency accounting and
+    // applies to every mode.
+    let priorities = if policy == PolicyKind::GrIn || shards > 1 {
+        match args.get("priorities") {
+            Some(text) => parse_priorities(text)?,
+            None => Vec::new(),
+        }
+    } else {
+        Vec::new()
+    };
+    let deadlines = match args.get("deadlines") {
+        Some(text) => parse_deadlines(text)?,
+        None => Vec::new(),
+    };
     let cfg = ServeConfig {
         policy,
         devices: args.get_parse("devices", d.devices)?,
@@ -623,6 +777,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stale_after,
         shards,
         sync_every: args.get_parse("sync-every", d.sync_every)?,
+        priorities,
+        deadlines,
         ..d
     };
     args.finish()?;
@@ -658,6 +814,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         t.row(vec!["batched re-solves".into(), r.resolves.to_string()]);
     } else if cfg.adaptive {
         t.row(vec!["adaptive re-solves".into(), r.resolves.to_string()]);
+    }
+    if !cfg.priorities.is_empty() {
+        t.row(vec!["priorities [sort, nn]".into(), format!("{:?}", cfg.priorities)]);
+    }
+    if !cfg.deadlines.is_empty() {
+        t.row(vec![
+            "deadline miss sort/nn".into(),
+            format!(
+                "{:.1}%/{:.1}%",
+                r.deadline_miss_rate(0) * 100.0,
+                r.deadline_miss_rate(1) * 100.0
+            ),
+        ]);
     }
     t.print();
     if let Some(mu_hat) = &r.mu_hat {
@@ -696,7 +865,7 @@ mod tests {
 
     #[test]
     fn scenario_command_runs_all_kinds_quickly() {
-        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip"] {
+        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip", "priority_mix"] {
             let line = format!(
                 "scenario --kind {kind} --policy grin --phases 3 \
                  --completions 150 --warmup 20 --resolve every_phase"
@@ -758,6 +927,53 @@ mod tests {
     }
 
     #[test]
+    fn scenario_priority_flags_gate_and_run() {
+        // priority_mix + explicit priorities/deadlines runs end to end
+        // under the adaptive resolve, reporting the class-0 line.
+        let line = "scenario --kind priority_mix --mu 30,3.5;31,16 --policy grin \
+                    --phases 2 --completions 150 --warmup 20 --resolve adaptive \
+                    --priorities 4,1 --deadlines 1.0,0";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // --priorities on a policy that cannot consume the weighted
+        // solve is flagged as unknown, not silently ignored.
+        let args = Args::parse(
+            "scenario --kind burst --policy cab --phases 3 --completions 100 \
+             --warmup 10 --resolve every_phase --priorities 4,1"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // Malformed values are parse errors.
+        let args = Args::parse(
+            "scenario --kind priority_mix --phases 2 --completions 50 --warmup 5 \
+             --priorities 4,x"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).unwrap_err().to_string().contains("bad priority"));
+        // --compare under a non-GrIn policy has no priority arm, so
+        // --priorities is flagged there too — never silently dropped.
+        let args = Args::parse(
+            "scenario --kind burst --policy cab --phases 3 --completions 100 \
+             --warmup 10 --compare --reps 1 --priorities 4,1"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // --deadlines applies under any policy (pure accounting).
+        let line = "scenario --kind burst --policy cab --phases 3 --completions 100 \
+                    --warmup 10 --resolve every_phase --deadlines 5.0,0";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+    }
+
+    #[test]
     fn serve_flag_conflicts_are_rejected() {
         // --resolve-check is the single-leader cadence knob.
         let args = Args::parse(
@@ -784,6 +1000,26 @@ mod tests {
         )
         .unwrap();
         assert!(run(&args).is_err());
+        // --priorities without a weighted-GrIn consumer (default policy
+        // is CAB) is flagged as unknown, not silently ignored.
+        let args = Args::parse(
+            "serve --total 10 --priorities 4,1"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // On the GrIn policy it is consumed: the error here is the
+        // total-0 validation, not an unknown flag.
+        let args = Args::parse(
+            "serve --policy grin --priorities 4,1 --deadlines 0.05,0.1 --total 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(!msg.contains("unknown flag"), "{msg}");
     }
 
     #[test]

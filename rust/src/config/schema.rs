@@ -140,7 +140,8 @@ impl ExperimentSpec {
 ///     "drift_threshold": 0.2, "check_every": 250,
 ///     "trigger": "cusum", "cusum_h": 2.5, "cusum_delta": 0.25,
 ///     "stale_after": 1000,
-///     "shards": 2, "sync_every": 250
+///     "shards": 2, "sync_every": 250,
+///     "priorities": [4, 1], "deadlines": [1.0, 0]
 ///   },
 ///   "distribution": "exp", "discipline": "ps", "seed": 7
 /// }
@@ -233,6 +234,17 @@ impl ScenarioSpec {
         }
         if let Some(v) = s.get("sync_every") {
             dynamic.shard.sync_every = v.as_u64()?;
+        }
+        if let Some(v) = s.get("priorities") {
+            dynamic.priorities = v
+                .as_arr()?
+                .iter()
+                .map(|x| Ok(x.as_u64()? as u32))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = s.get("deadlines") {
+            dynamic.deadlines =
+                v.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?;
         }
         if let Some(v) = j.get("distribution") {
             dynamic.dist = Distribution::parse(v.as_str()?)?;
@@ -392,6 +404,34 @@ mod tests {
         assert_eq!(s.dynamic.drift.stale_after, 400);
         assert!(s.dynamic.phases[0].mu_scale.is_empty());
         assert!(!s.dynamic.phases[2].mu_scale.is_empty());
+    }
+
+    #[test]
+    fn scenario_spec_parses_priority_mix_and_priority_keys() {
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[30, 3.5], [31, 16]],
+            "policy": "grin",
+            "scenario": {"kind": "priority_mix", "phases": 4,
+                         "priorities": [4, 1], "deadlines": [1.0, 0]}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::PriorityMix);
+        assert_eq!(s.dynamic.priorities, vec![4, 1]);
+        assert_eq!(s.dynamic.deadlines, vec![1.0, 0.0]);
+        assert_eq!(s.dynamic.phases.len(), 4);
+        // Offered load flips at the midpoint; rates never change.
+        assert_ne!(s.dynamic.phases[0].populations, s.dynamic.phases[3].populations);
+        assert!(s.dynamic.phases.iter().all(|p| p.mu_scale.is_empty()));
+        // Without the keys both axes default to off.
+        let s = ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst"}}"#,
+        )
+        .unwrap();
+        assert!(s.dynamic.priorities.is_empty());
+        assert!(s.dynamic.deadlines.is_empty());
     }
 
     #[test]

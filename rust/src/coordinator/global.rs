@@ -28,8 +28,8 @@
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
-use crate::policy::grin;
-use crate::policy::target::pick_by_deficit;
+use crate::policy::grin::{self, GrInSolution};
+use crate::policy::target::{pick_by_deficit, pick_by_weighted_deficit};
 use crate::sim::dynamic::DriftConfig;
 
 use super::shard::{mu_columns, partition_devices, ShardLeader, ShardSnapshot};
@@ -43,6 +43,19 @@ pub struct ShardedControl {
     /// The global rates the installed targets were solved for.
     believed: AffinityMatrix,
     populations: Vec<u32>,
+    /// Per-class integer priorities (empty = unweighted).  Only
+    /// [`set_priorities`](Self::set_priorities) may change this, and
+    /// every change re-solves and re-installs under one new epoch —
+    /// the weight-epoch consistency contract.
+    priorities: Vec<u32>,
+    /// Monotone counter of priority-vector changes.  Re-solves assemble
+    /// their weight vector *after* gather from the current priorities
+    /// and assert the counter has not moved before installing, so a
+    /// target computed under a stale weight vector can never be pushed
+    /// (`sync` documents the invariant; the interleaving is impossible
+    /// through the public API of this single-threaded object, and the
+    /// guard keeps it that way as the plane grows concurrency).
+    weight_epoch: u64,
     sync_every: u64,
     since_sync: u64,
     epoch: u64,
@@ -82,6 +95,8 @@ impl ShardedControl {
             dev_shard,
             believed: mu.clone(),
             populations: populations.to_vec(),
+            priorities: Vec::new(),
+            weight_epoch: 0,
             sync_every,
             since_sync: 0,
             epoch: 0,
@@ -127,16 +142,36 @@ impl ShardedControl {
         Ok(assemble(&self.believed, &snaps)?.0)
     }
 
+    /// The installed per-class priorities (empty = unweighted).
+    pub fn priorities(&self) -> &[u32] {
+        &self.priorities
+    }
+
+    /// Priority-vector changes performed so far (the weight epoch).
+    pub fn weight_epoch(&self) -> u64 {
+        self.weight_epoch
+    }
+
     /// Route one `class` arrival: shard with the largest class deficit
     /// (ties to the shard offering the fastest solved rate, then the
-    /// lower shard id), then deficit steering inside that shard.
+    /// lower shard id), then deficit steering inside that shard.  Under
+    /// priorities the shard pick uses the confidence-weighted deficits
+    /// ([`ShardLeader::weighted_class_deficit`]), so a shard whose
+    /// estimates for this class went quiet competes at a discount.
     /// Returns the global device index.
     pub fn route(&mut self, class: usize) -> usize {
-        let best = pick_by_deficit(
-            self.shards
-                .iter()
-                .map(|leader| (leader.class_deficit(class), leader.best_rate(class))),
-        );
+        let best = if grin::trivial_priorities(&self.priorities) {
+            pick_by_deficit(
+                self.shards
+                    .iter()
+                    .map(|leader| (leader.class_deficit(class), leader.best_rate(class))),
+            )
+        } else {
+            pick_by_weighted_deficit(self.shards.iter().map(|leader| {
+                (leader.weighted_class_deficit(class), leader.best_rate(class))
+            }))
+        }
+        .expect("control plane has at least one shard");
         self.shards[best].route(class)
     }
 
@@ -163,18 +198,32 @@ impl ShardedControl {
     /// cells contribute the currently believed rates — the re-solve
     /// cannot move placements on the word of dead estimates.
     pub fn sync(&mut self) -> Result<bool> {
+        // Weight-epoch guard: the weight vector below is assembled from
+        // `self.priorities` *after* the gather, and the priority vector
+        // cannot change between here and the install (set_priorities is
+        // the only writer and this object is single-threaded) — so the
+        // installed targets are always the solution of the current
+        // weights, never a stale vector's.
+        let weight_epoch = self.weight_epoch;
         let snaps = self.gather()?;
         if !snaps.iter().any(|s| s.drifted) {
             return Ok(false);
         }
-        let (mu_hat, occupancy) = assemble(&self.believed, &snaps)?;
+        let (mu_hat, occupancy, confidence) = assemble(&self.believed, &snaps)?;
         let start = project_to_populations(&mu_hat, &occupancy, &self.populations);
         // μ̂ can be momentarily pathological on noisy estimates: keep
         // the old targets and retry at the next sync.  Drain the shard
         // alarms first so a persistently bad μ̂ cannot re-run the full
         // batched solve on every sync — the CUSUM must re-accumulate,
         // the same back-off the single-leader paths get.
-        let sol = match grin::solve_from_snapshot(&mu_hat, &self.populations, &start) {
+        let warm = if grin::trivial_priorities(&self.priorities) {
+            grin::solve_from_snapshot(&mu_hat, &self.populations, &start)
+        } else {
+            grin::priority_weights(&self.priorities, &confidence, mu_hat.procs()).and_then(
+                |w| grin::solve_weighted_from_snapshot(&mu_hat, &self.populations, &w, &start),
+            )
+        };
+        let sol = match warm {
             Ok(sol) => sol,
             Err(_) => {
                 for leader in &mut self.shards {
@@ -183,6 +232,10 @@ impl ShardedControl {
                 return Ok(false);
             }
         };
+        debug_assert_eq!(
+            weight_epoch, self.weight_epoch,
+            "priority vector changed between gather and install"
+        );
         self.batched_moves += sol.moves as u64;
         self.believed = mu_hat;
         self.install_global(sol.state)?;
@@ -203,8 +256,54 @@ impl ShardedControl {
             return Ok(());
         }
         self.populations = populations.to_vec();
-        let sol = grin::solve(&self.believed, &self.populations)?;
+        let sol = self.resolve_full()?;
         self.install_global(sol.state)
+    }
+
+    /// Swap the per-class priority vector (empty clears weighting):
+    /// bumps the weight epoch, re-solves against the believed rates
+    /// under the new weights, and pushes the re-solved targets — with
+    /// the new priorities — to every shard under one incremented
+    /// epoch.  Targets solved under the old vector are replaced in the
+    /// same call, so no route anywhere can mix old weights with new
+    /// targets (regression-tested in this module and
+    /// `tests/priority_e2e.rs`).
+    pub fn set_priorities(&mut self, priorities: &[u32]) -> Result<()> {
+        if !priorities.is_empty() {
+            if priorities.len() != self.believed.types() {
+                return Err(Error::Shape(format!(
+                    "{} priorities for {} task classes",
+                    priorities.len(),
+                    self.believed.types()
+                )));
+            }
+            if priorities.iter().any(|&p| p == 0) {
+                return Err(Error::Config("class priorities must be ≥ 1".into()));
+            }
+        }
+        if priorities == self.priorities.as_slice() {
+            return Ok(());
+        }
+        self.priorities = priorities.to_vec();
+        self.weight_epoch += 1;
+        let sol = self.resolve_full()?;
+        self.install_global(sol.state)
+    }
+
+    /// Full (Algorithm-1-seeded) batched solve against the believed
+    /// rates under the current priority vector — the population/
+    /// priority-swap path.  Non-trivial vectors gather the live
+    /// confidence grid for the weights; trivial ones skip the gather
+    /// (and its per-shard snapshot clones) entirely.
+    fn resolve_full(&self) -> Result<GrInSolution> {
+        if grin::trivial_priorities(&self.priorities) {
+            return grin::solve(&self.believed, &self.populations);
+        }
+        let snaps = self.gather()?;
+        let confidence = assemble(&self.believed, &snaps)?.2;
+        let weights =
+            grin::priority_weights(&self.priorities, &confidence, self.believed.procs())?;
+        grin::solve_weighted(&self.believed, &self.populations, &weights)
     }
 
     fn gather(&self) -> Result<Vec<ShardSnapshot>> {
@@ -212,6 +311,7 @@ impl ShardedControl {
     }
 
     /// Split a global target into per-shard slices and install them all
+    /// — together with the priority vector they were solved under —
     /// under one incremented epoch (the atomic push-back).
     fn install_global(&mut self, target: StateMatrix) -> Result<()> {
         self.epoch += 1;
@@ -226,30 +326,34 @@ impl ShardedControl {
                 }
             }
             let solved = mu_columns(&self.believed, &devs)?;
-            leader.install(epoch, local, solved)?;
+            leader.install(epoch, local, solved, &self.priorities)?;
         }
         Ok(())
     }
 }
 
 /// Stitch per-shard snapshots into the global k×l view: estimator-backed
-/// μ̂ columns (boot prior where cold) and the occupancy matrix.
+/// μ̂ columns (boot prior where cold), the occupancy matrix, and the
+/// per-cell confidence grid (row-major k×l).
 fn assemble(
     believed: &AffinityMatrix,
     snaps: &[ShardSnapshot],
-) -> Result<(AffinityMatrix, StateMatrix)> {
+) -> Result<(AffinityMatrix, StateMatrix, Vec<f64>)> {
     let (k, l) = (believed.types(), believed.procs());
     let mut rows = vec![vec![0.0f64; l]; k];
     let mut occ = StateMatrix::zeros(k, l);
+    let mut conf = vec![0.0f64; k * l];
     for snap in snaps {
+        let ll = snap.devices.len();
         for (lj, &j) in snap.devices.iter().enumerate() {
             for (i, row) in rows.iter_mut().enumerate() {
                 row[j] = snap.mu_hat.rate(i, lj);
                 occ.set(i, j, snap.occupancy.get(i, lj));
+                conf[i * l + j] = snap.confidence[i * ll + lj];
             }
         }
     }
-    Ok((AffinityMatrix::from_rows(&rows)?, occ))
+    Ok((AffinityMatrix::from_rows(&rows)?, occ, conf))
 }
 
 /// Project a gathered occupancy snapshot onto the configured populations
@@ -388,6 +492,80 @@ mod tests {
         assert!(ctl.resolves() >= 1, "no CUSUM-triggered batched re-solve");
         for leader in ctl.shards() {
             assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after CUSUM sync");
+        }
+    }
+
+    #[test]
+    fn priority_flip_reinstalls_weighted_targets_atomically() {
+        // Weight-epoch consistency regression: flipping the priority
+        // vector must (1) bump the weight epoch, (2) re-solve under the
+        // *new* weights, and (3) push targets + priorities to every
+        // shard under one target epoch — never leaving a shard steering
+        // a new target by an old weight vector or vice versa.
+        let mu = crate::sim::workload::priority_mu();
+        let mut ctl =
+            ShardedControl::new(&mu, &[4, 16], 2, &DriftConfig::default(), 100).unwrap();
+        assert_eq!(ctl.weight_epoch(), 0);
+        let e0 = ctl.epoch();
+        ctl.set_priorities(&[4, 1]).unwrap();
+        assert_eq!(ctl.weight_epoch(), 1);
+        assert_eq!(ctl.epoch(), e0 + 1);
+        assert_eq!(ctl.priorities(), &[4, 1]);
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after priority flip");
+            // Normalized [1.6, 0.4] arrived with the target.
+            assert!((leader.norm_priorities()[0] - 1.6).abs() < 1e-12);
+        }
+        // The installed targets are the weighted solution: with no
+        // observations yet the confidence discount is uniform, so the
+        // global target must equal solve_weighted on the believed
+        // rates — class 0 owns its fast device P1 outright.
+        let target_p1_class0: u32 =
+            ctl.shards().iter().map(|s| s.target().get(0, 0)).take(1).sum();
+        assert_eq!(target_p1_class0, 4, "weighted re-solve did not run under new weights");
+        let target_p1_class1 = ctl.shards()[0].target().get(1, 0);
+        assert_eq!(target_p1_class1, 0, "low-priority class still on the reserved device");
+        // Re-installing the same vector is a no-op (no epoch churn)...
+        let e1 = ctl.epoch();
+        ctl.set_priorities(&[4, 1]).unwrap();
+        assert_eq!(ctl.epoch(), e1);
+        assert_eq!(ctl.weight_epoch(), 1);
+        // ...an empty vector clears weighting with a fresh unweighted
+        // solve, and bad vectors are rejected before anything moves.
+        assert!(ctl.set_priorities(&[1, 2, 3]).is_err());
+        assert!(ctl.set_priorities(&[0, 1]).is_err());
+        assert_eq!(ctl.weight_epoch(), 1, "rejected vector bumped the weight epoch");
+        ctl.set_priorities(&[]).unwrap();
+        assert_eq!(ctl.weight_epoch(), 2);
+        assert!(ctl.priorities().is_empty());
+        for leader in ctl.shards() {
+            assert!(leader.norm_priorities().is_empty());
+        }
+    }
+
+    #[test]
+    fn weighted_sync_resolves_with_current_priorities() {
+        // A drift-triggered batched re-solve after a priority flip must
+        // solve under the current (new) weight vector: the re-installed
+        // target keeps the high-priority reservation even though the
+        // drifted μ̂ differs from the boot belief.
+        let mu = crate::sim::workload::priority_mu();
+        let drift = DriftConfig { min_obs: 4, ..Default::default() };
+        let mut ctl = ShardedControl::new(&mu, &[4, 16], 2, &drift, 50).unwrap();
+        ctl.set_priorities(&[4, 1]).unwrap();
+        // Serve 1.5× slower than the belief everywhere: well past the
+        // polled drift threshold, no change in who is fastest.
+        for _ in 0..40 {
+            for class in 0..2 {
+                let j = ctl.route(class);
+                ctl.on_complete(class, j, 1.5 / mu.rate(class, j)).unwrap();
+            }
+        }
+        assert!(ctl.resolves() >= 1, "no drift-triggered batched re-solve");
+        assert_eq!(ctl.shards()[0].target().get(1, 0), 0, "sync dropped the reservation");
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after weighted sync");
+            assert!((leader.norm_priorities()[0] - 1.6).abs() < 1e-12);
         }
     }
 

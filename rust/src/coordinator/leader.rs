@@ -77,6 +77,16 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Completions between global gather/re-solve syncs (sharded mode).
     pub sync_every: u64,
+    /// Per-class integer priorities `[sort, nn]` (each ≥ 1; empty =
+    /// unweighted).  Non-uniform priorities run every solve through the
+    /// weighted objective — GrIn/sharded only, other policies are
+    /// rejected rather than silently scheduling unweighted.
+    pub priorities: Vec<u32>,
+    /// Per-class soft deadlines in seconds `[sort, nn]` (0 = no
+    /// deadline for that class; empty = no deadline accounting).
+    /// Misses are counted against request latency and reported in
+    /// [`ServeReport::deadline_misses`].
+    pub deadlines: Vec<f64>,
 }
 
 impl Default for ServeConfig {
@@ -99,6 +109,8 @@ impl Default for ServeConfig {
             stale_after: 1_000,
             shards: 1,
             sync_every: 128,
+            priorities: Vec::new(),
+            deadlines: Vec::new(),
         }
     }
 }
@@ -126,6 +138,23 @@ pub struct ServeReport {
     pub resolves: u64,
     /// Final estimated affinity matrix μ̂ (adaptive mode).
     pub mu_hat: Option<AffinityMatrix>,
+    /// Requests served per class `[sort, nn]`.
+    pub class_served: [u64; 2],
+    /// Soft-deadline misses per class `[sort, nn]` (all zero unless
+    /// [`ServeConfig::deadlines`] is set).
+    pub deadline_misses: [u64; 2],
+}
+
+impl ServeReport {
+    /// Fraction of class-`i` requests that missed the class's soft
+    /// deadline (0 when no deadline was configured or nothing served).
+    pub fn deadline_miss_rate(&self, class: usize) -> f64 {
+        if self.class_served[class] == 0 {
+            0.0
+        } else {
+            self.deadline_misses[class] as f64 / self.class_served[class] as f64
+        }
+    }
 }
 
 enum Work {
@@ -194,6 +223,41 @@ impl Coordinator {
                 cfg.policy.name()
             )));
         }
+        if !cfg.priorities.is_empty() {
+            if cfg.priorities.len() != 2 {
+                return Err(Error::Config(format!(
+                    "{} priorities for the 2 serving classes [sort, nn]",
+                    cfg.priorities.len()
+                )));
+            }
+            if cfg.priorities.iter().any(|&p| p == 0) {
+                return Err(Error::Config("class priorities must be ≥ 1".into()));
+            }
+            if cfg.shards == 1
+                && cfg.policy != PolicyKind::GrIn
+                && !crate::policy::grin::trivial_priorities(&cfg.priorities)
+            {
+                // Weighted solves are a GrIn extension; refusing beats
+                // silently serving unweighted under a priority config.
+                // (All-equal vectors reduce to the unweighted solve and
+                // run on any policy.)
+                return Err(Error::Config(format!(
+                    "priorities need the weighted GrIn solve; policy {} cannot honor them",
+                    cfg.policy.name()
+                )));
+            }
+        }
+        if !cfg.deadlines.is_empty() {
+            if cfg.deadlines.len() != 2 {
+                return Err(Error::Config(format!(
+                    "{} deadlines for the 2 serving classes [sort, nn]",
+                    cfg.deadlines.len()
+                )));
+            }
+            if cfg.deadlines.iter().any(|&d| !d.is_finite() || d < 0.0) {
+                return Err(Error::Config("deadlines must be finite and ≥ 0".into()));
+            }
+        }
         let mu = match &cfg.mu {
             Some(m) => m.clone(),
             None if cfg.devices == 2 => crate::sim::workload::table3::general_symmetric(),
@@ -237,20 +301,45 @@ impl Coordinator {
                 stale_after: cfg.stale_after,
                 ..Default::default()
             };
-            Steering::Sharded(ShardedControl::new(
+            let mut ctl = ShardedControl::new(
                 &mu,
                 &populations,
                 cfg.shards,
                 &drift,
                 cfg.sync_every,
-            )?)
-        } else {
+            )?;
+            if !cfg.priorities.is_empty() {
+                // Weighted batched re-solves + steering, installed with
+                // the boot target under one epoch.
+                ctl.set_priorities(&cfg.priorities)?;
+            }
+            Steering::Sharded(ctl)
+        } else if crate::policy::grin::trivial_priorities(&cfg.priorities) {
+            // Empty or all-equal priorities: the plain unweighted
+            // router, exactly.
             Steering::Single(Router::new(
                 mu,
                 omega,
                 populations,
                 cfg.policy.build(),
                 cfg.seed,
+            )?)
+        } else {
+            // The boot solve runs under the estimator's (cold, uniform)
+            // confidence; adaptive re-solves refresh the weights from
+            // the live grid.
+            let weights = crate::policy::grin::priority_weights(
+                &cfg.priorities,
+                &estimator.confidences(),
+                mu.procs(),
+            )?;
+            Steering::Single(Router::with_weights(
+                mu,
+                omega,
+                populations,
+                cfg.policy.build(),
+                cfg.seed,
+                weights,
             )?)
         };
 
@@ -327,6 +416,8 @@ impl Coordinator {
         let mut sort_latency = LatencyHistogram::new();
         let mut nn_latency = LatencyHistogram::new();
         let mut resolves = 0u64;
+        let mut class_served = [0u64; 2];
+        let mut deadline_misses = [0u64; 2];
 
         let submit_batch = |j: usize, batch: Batch,
                                 batches: &mut u64,
@@ -419,6 +510,12 @@ impl Coordinator {
                     } else {
                         nn_latency.record_s(lat);
                     }
+                    class_served[done.class] += 1;
+                    if let Some(&deadline) = cfg.deadlines.get(done.class) {
+                        if deadline > 0.0 && lat > deadline {
+                            deadline_misses[done.class] += 1;
+                        }
+                    }
                     served += 1;
                     // Adaptive re-solve (single-leader): when the change
                     // detector fires — polled threshold drift, or a
@@ -451,7 +548,25 @@ impl Coordinator {
                                 // configured policy (e.g. CAB's Eq.-2 regime
                                 // check on a noisy estimate): keep the old
                                 // target and retry at the next check.
-                                if router.retarget(mu_hat, omega_hat).is_ok() {
+                                let swapped = if crate::policy::grin::trivial_priorities(
+                                    &cfg.priorities,
+                                ) {
+                                    router.retarget(mu_hat, omega_hat).is_ok()
+                                } else {
+                                    // Weights refresh from the live
+                                    // confidence grid and swap with the
+                                    // target in one call.
+                                    crate::policy::grin::priority_weights(
+                                        &cfg.priorities,
+                                        &estimator.confidences(),
+                                        mu_hat.procs(),
+                                    )
+                                    .and_then(|w| {
+                                        router.retarget_weighted(mu_hat, omega_hat, w)
+                                    })
+                                    .is_ok()
+                                };
+                                if swapped {
                                     estimator.set_reference(router.mu())?;
                                     resolves += 1;
                                 }
@@ -503,6 +618,8 @@ impl Coordinator {
                 Steering::Single(_) if cfg.adaptive => estimator.mu_hat().ok(),
                 Steering::Single(_) => None,
             },
+            class_served,
+            deadline_misses,
         })
     }
 }
@@ -538,6 +655,29 @@ mod tests {
         assert!(Coordinator::run(&cfg).is_err());
         let cfg =
             ServeConfig { shards: 2, policy: PolicyKind::Cab, total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        // Priority/deadline validation: arity, zero priorities, and the
+        // GrIn-only rule for the single-leader weighted solve.
+        let cfg = ServeConfig { priorities: vec![4], total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig {
+            priorities: vec![0, 1],
+            policy: PolicyKind::GrIn,
+            total: 10,
+            ..Default::default()
+        };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig {
+            priorities: vec![4, 1],
+            policy: PolicyKind::Cab,
+            total: 10,
+            ..Default::default()
+        };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig { deadlines: vec![0.5], total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg =
+            ServeConfig { deadlines: vec![-0.5, 0.0], total: 10, ..Default::default() };
         assert!(Coordinator::run(&cfg).is_err());
     }
 

@@ -19,10 +19,29 @@ pub struct Router {
     state: StateMatrix,
     /// Mean service seconds per (class, device) — the work estimator.
     omega: Vec<f64>,
+    /// Per-cell priority weights the current target was solved under
+    /// (empty = unweighted); swapped together with the target in
+    /// [`retarget_weighted`](Self::retarget_weighted).
+    weights: Vec<f64>,
     work: Vec<f64>,
     policy: Box<dyn Policy>,
     rng: Rng,
     routed: u64,
+}
+
+/// Run the policy's solve: plain [`Policy::prepare`] without weights,
+/// [`Policy::prepare_weighted`] with them.
+fn prepare_policy(
+    policy: &mut dyn Policy,
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    weights: &[f64],
+) -> Result<()> {
+    if weights.is_empty() {
+        policy.prepare(mu, populations)
+    } else {
+        policy.prepare_weighted(mu, populations, weights)
+    }
 }
 
 impl Router {
@@ -32,10 +51,25 @@ impl Router {
         mu: AffinityMatrix,
         omega: Vec<f64>,
         expected_inflight: Vec<u32>,
-        mut policy: Box<dyn Policy>,
+        policy: Box<dyn Policy>,
         seed: u64,
     ) -> Result<Self> {
-        policy.prepare(&mu, &expected_inflight)?;
+        Self::with_weights(mu, omega, expected_inflight, policy, seed, Vec::new())
+    }
+
+    /// [`new`](Self::new) with per-cell priority weights (row-major k×l,
+    /// [`crate::policy::grin::priority_weights`]): the initial target is
+    /// solved through [`Policy::prepare_weighted`].  An empty vector is
+    /// the unweighted router.
+    pub fn with_weights(
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        expected_inflight: Vec<u32>,
+        mut policy: Box<dyn Policy>,
+        seed: u64,
+        weights: Vec<f64>,
+    ) -> Result<Self> {
+        prepare_policy(policy.as_mut(), &mu, &expected_inflight, &weights)?;
         let (k, l) = (mu.types(), mu.procs());
         Ok(Self {
             state: StateMatrix::zeros(k, l),
@@ -43,6 +77,7 @@ impl Router {
             mu,
             populations: expected_inflight,
             omega,
+            weights,
             policy,
             rng: Rng::new(seed),
             routed: 0,
@@ -76,9 +111,32 @@ impl Router {
 
     /// Swap the routing target to a freshly estimated affinity matrix
     /// without stopping traffic: the policy re-solves (`prepare`) against
-    /// μ̂, the work estimator picks up the matching ω̂, and in-flight
-    /// requests keep draining under the live occupancy state.
+    /// μ̂ under the router's current weight vector, the work estimator
+    /// picks up the matching ω̂, and in-flight requests keep draining
+    /// under the live occupancy state.
     pub fn retarget(&mut self, mu: AffinityMatrix, omega: Vec<f64>) -> Result<()> {
+        let weights = self.weights.clone();
+        self.retarget_inner(mu, omega, weights)
+    }
+
+    /// [`retarget`](Self::retarget) with a refreshed weight vector (the
+    /// adaptive loop recomputes priority × live confidence at every
+    /// re-solve); target and weights swap in the same call.
+    pub fn retarget_weighted(
+        &mut self,
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        weights: Vec<f64>,
+    ) -> Result<()> {
+        self.retarget_inner(mu, omega, weights)
+    }
+
+    fn retarget_inner(
+        &mut self,
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        weights: Vec<f64>,
+    ) -> Result<()> {
         if mu.types() != self.mu.types() || mu.procs() != self.mu.procs() {
             return Err(Error::Shape(format!(
                 "retarget matrix is {}×{}, router runs {}×{}",
@@ -91,9 +149,10 @@ impl Router {
         if omega.len() != mu.types() * mu.procs() {
             return Err(Error::Shape("retarget ω arity".into()));
         }
-        self.policy.prepare(&mu, &self.populations)?;
+        prepare_policy(self.policy.as_mut(), &mu, &self.populations, &weights)?;
         self.mu = mu;
         self.omega = omega;
+        self.weights = weights;
         Ok(())
     }
 
@@ -186,6 +245,49 @@ mod tests {
         .unwrap();
         let omega_bad = vec![1.0; 6];
         assert!(r.retarget(bad, omega_bad).is_err());
+    }
+
+    #[test]
+    fn weighted_router_reserves_fast_device_for_high_priority() {
+        let mu = workload::priority_mu();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        let w = crate::policy::grin::priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        let mut r = Router::with_weights(
+            mu.clone(),
+            omega.clone(),
+            vec![4, 16],
+            PolicyKind::GrIn.build(),
+            7,
+            w,
+        )
+        .unwrap();
+        // The 4:1 weighted target reserves device 0 for class 0: every
+        // high-priority arrival lands there, all low-priority traffic
+        // keeps off it.
+        for _ in 0..4 {
+            assert_eq!(r.route(0), 0);
+        }
+        for _ in 0..16 {
+            assert_eq!(r.route(1), 1);
+        }
+        // A plain retarget keeps the weight vector: the re-solved
+        // target still reserves device 0.
+        r.retarget(mu, omega).unwrap();
+        r.complete(0, 0).unwrap();
+        assert_eq!(r.route(0), 0);
+        // Non-uniform weights on a weight-blind policy are rejected.
+        let mu2 = workload::priority_mu();
+        let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
+        let w2 = crate::policy::grin::priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        assert!(Router::with_weights(
+            mu2,
+            omega2,
+            vec![4, 16],
+            PolicyKind::Cab.build(),
+            7,
+            w2
+        )
+        .is_err());
     }
 
     #[test]

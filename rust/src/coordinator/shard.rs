@@ -21,18 +21,22 @@
 //! estimates, so the batched re-solve and both deficit-steering levels
 //! never steer on dead data.
 //!
-//! **Epoch semantics:** a leader's `(epoch, target, solved_mu)` triple
-//! only ever changes together, in one `install` call.  A route issued
-//! before the install steers wholly by the old policy, one issued after
-//! wholly by the new — in-flight tasks never observe a torn (half-old,
-//! half-new) target.  Occupancy is keyed by (class, device) alone, so
-//! completions of tasks routed under an earlier epoch still decrement
-//! correctly after any number of swaps.
+//! **Epoch semantics:** a leader's `(epoch, target, solved_mu,
+//! priorities)` tuple only ever changes together, in one `install`
+//! call.  A route issued before the install steers wholly by the old
+//! policy, one issued after wholly by the new — in-flight tasks never
+//! observe a torn (half-old, half-new) target, and weighted steering
+//! never mixes an old priority vector with a new target (the
+//! weight-epoch consistency contract the global layer's
+//! [`super::global::ShardedControl::sync`] relies on).  Occupancy is
+//! keyed by (class, device) alone, so completions of tasks routed under
+//! an earlier epoch still decrement correctly after any number of
+//! swaps.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::state::StateMatrix;
-use crate::policy::target::pick_by_deficit;
+use crate::policy::target::{pick_by_deficit, pick_by_weighted_deficit, weighted_deficit};
 use crate::sim::dynamic::{DriftConfig, Trigger};
 
 use super::stats::RateEstimator;
@@ -86,6 +90,10 @@ pub struct ShardSnapshot {
     pub drifted: bool,
     /// Local cells currently demoted to stale (local column indices).
     pub stale: Vec<(usize, usize)>,
+    /// Per-cell estimate confidence (row-major class × local device,
+    /// [`RateEstimator::confidences`]) — the weight-assembly input for
+    /// the global layer's priority-weighted batched re-solve.
+    pub confidence: Vec<f64>,
 }
 
 /// One shard's leader: local routing, occupancy, estimation.
@@ -104,6 +112,11 @@ pub struct ShardLeader {
     epoch: u64,
     /// Change-detector configuration (trigger kind + knobs).
     drift: DriftConfig,
+    /// Mean-normalized class priorities the installed target was solved
+    /// under (empty = unweighted).  Swapped atomically with the target
+    /// in [`install`](Self::install), so weighted deficit steering and
+    /// the target always agree on the weight vector.
+    norm_pri: Vec<f64>,
 }
 
 impl ShardLeader {
@@ -137,6 +150,7 @@ impl ShardLeader {
             target: StateMatrix::zeros(k, ll),
             epoch: 0,
             drift: drift.clone(),
+            norm_pri: Vec::new(),
         })
     }
 
@@ -176,6 +190,33 @@ impl ShardLeader {
         self.target.row_sum(class) as i64 - self.occupancy.row_sum(class) as i64
     }
 
+    /// Priority/confidence-weighted shard-level class deficit
+    /// Σ_j w_ij·(N*_ij − N_ij), w_ij = normalized priority ×
+    /// confidence discount — the global dispatch signal when
+    /// priorities are installed: a deficit the shard's estimator barely
+    /// trusts counts for less than one it has fresh data on.  Equals
+    /// the plain [`class_deficit`](Self::class_deficit) (as f64) when
+    /// no priorities are installed and every cell is fully confident.
+    pub fn weighted_class_deficit(&self, class: usize) -> f64 {
+        let pri = self.norm_pri.get(class).copied().unwrap_or(1.0);
+        (0..self.devices.len())
+            .map(|lj| {
+                let w = pri * (1.0 + self.estimator.confidence(class, lj)) / 2.0;
+                let d = self.target.get(class, lj) as i64
+                    - self.occupancy.get(class, lj) as i64;
+                // Claims are discounted; overflow counts at full size
+                // (see `policy::target::weighted_deficit`).
+                weighted_deficit(w, d)
+            })
+            .sum()
+    }
+
+    /// The mean-normalized priorities installed with the current target
+    /// (empty = unweighted).
+    pub fn norm_priorities(&self) -> &[f64] {
+        &self.norm_pri
+    }
+
     /// Fastest solved rate the shard offers `class` (global tie-break).
     pub fn best_rate(&self, class: usize) -> f64 {
         self.solved_mu
@@ -201,14 +242,26 @@ impl ShardLeader {
 
     /// Route one `class` arrival within the shard: largest local target
     /// deficit, ties to the faster solved rate then the lower device
-    /// index.  Returns the chosen *global* device index.
+    /// index.  Under installed priorities both deficit and rate are
+    /// scaled by w_ij = normalized priority × confidence discount, so a
+    /// deficit on a cell whose estimate went quiet is discounted
+    /// against one the estimator actually trusts.  Returns the chosen
+    /// *global* device index.
     pub fn route(&mut self, class: usize) -> usize {
-        let best = pick_by_deficit((0..self.devices.len()).map(|lj| {
-            (
-                self.target.get(class, lj) as i64 - self.occupancy.get(class, lj) as i64,
-                self.solved_mu.rate(class, lj),
-            )
-        }));
+        let ll = self.devices.len();
+        let deficit = |lj: usize| {
+            self.target.get(class, lj) as i64 - self.occupancy.get(class, lj) as i64
+        };
+        let best = if self.norm_pri.is_empty() {
+            pick_by_deficit((0..ll).map(|lj| (deficit(lj), self.solved_mu.rate(class, lj))))
+        } else {
+            let pri = self.norm_pri[class];
+            pick_by_weighted_deficit((0..ll).map(|lj| {
+                let w = pri * (1.0 + self.estimator.confidence(class, lj)) / 2.0;
+                (weighted_deficit(w, deficit(lj)), w * self.solved_mu.rate(class, lj))
+            }))
+        }
+        .expect("shard owns at least one device");
         self.occupancy.inc(class, best);
         self.devices[best]
     }
@@ -223,14 +276,32 @@ impl ShardLeader {
     }
 
     /// Atomically swap the shard's routing policy: the (epoch, target,
-    /// solved-rates) triple changes in one call.
+    /// solved-rates, priorities) tuple changes in one call.
+    /// `priorities` is the class-priority vector the target was solved
+    /// under (empty = unweighted) — passing it here rather than through
+    /// a separate setter is what makes a weight flip and its re-solved
+    /// target indivisible: no route can ever steer a new target by an
+    /// old weight vector or vice versa.
     pub fn install(
         &mut self,
         epoch: u64,
         target: StateMatrix,
         solved_mu: AffinityMatrix,
+        priorities: &[u32],
     ) -> Result<()> {
         let (k, ll) = (self.occupancy.types(), self.devices.len());
+        if !priorities.is_empty() {
+            if priorities.len() != k {
+                return Err(Error::Shape(format!(
+                    "shard {} got {} priorities for {k} classes",
+                    self.id,
+                    priorities.len()
+                )));
+            }
+            if priorities.iter().any(|&p| p == 0) {
+                return Err(Error::Config("class priorities must be ≥ 1".into()));
+            }
+        }
         if target.types() != k || target.procs() != ll {
             return Err(Error::Shape(format!(
                 "shard {} target is {}×{}, wants {k}×{ll}",
@@ -258,6 +329,16 @@ impl ShardLeader {
         }
         self.target = target;
         self.solved_mu = solved_mu;
+        // A trivial (empty or all-equal) vector clears weighting: the
+        // equal-priorities ≡ unweighted contract extends to steering,
+        // which also keeps confidence jitter out of unprioritized runs.
+        self.norm_pri = if crate::policy::grin::trivial_priorities(priorities) {
+            Vec::new()
+        } else {
+            let mean =
+                priorities.iter().map(|&p| p as f64).sum::<f64>() / priorities.len() as f64;
+            priorities.iter().map(|&p| p as f64 / mean).collect()
+        };
         self.epoch = epoch;
         Ok(())
     }
@@ -283,6 +364,7 @@ impl ShardLeader {
             occupancy: self.occupancy.clone(),
             drifted: self.drifted(),
             stale: self.estimator.stale_cells(),
+            confidence: self.estimator.confidences(),
         })
     }
 
@@ -326,7 +408,7 @@ mod tests {
         let mut leader = ShardLeader::new(1, vec![2, 3], &mu, &drift_cfg()).unwrap();
         // Target: class 0 → one task on each local device.
         let target = StateMatrix::new(2, 2, vec![1, 1, 0, 0]).unwrap();
-        leader.install(1, target, mu_columns(&mu, &[2, 3]).unwrap()).unwrap();
+        leader.install(1, target, mu_columns(&mu, &[2, 3]).unwrap(), &[]).unwrap();
         assert_eq!(leader.epoch(), 1);
         // Equal deficits: the tie goes to the faster column (μ(0,3)=7).
         assert_eq!(leader.route(0), 3);
@@ -394,7 +476,7 @@ mod tests {
         // Installing the re-solved belief consumes the alarm.
         let solved = AffinityMatrix::two_type(10.0, 5.0, 10.0, 10.0).unwrap();
         let target = StateMatrix::zeros(2, 2);
-        leader.install(2, target, solved).unwrap();
+        leader.install(2, target, solved, &[]).unwrap();
         assert!(!leader.drifted(), "install did not consume the alarm");
         // The same service level now matches the belief: no re-alarm.
         for _ in 0..16 {
@@ -429,7 +511,7 @@ mod tests {
         assert!(!leader.drifted(), "alarmed early");
         // Swap targets under the same solved rates.
         let same = mu_columns(&mu, &[0, 1]).unwrap();
-        leader.install(2, StateMatrix::zeros(2, 2), same).unwrap();
+        leader.install(2, StateMatrix::zeros(2, 2), same, &[]).unwrap();
         // One more batch crosses the threshold — only if the earlier
         // evidence survived the install.
         for _ in 0..4 {
@@ -466,14 +548,65 @@ mod tests {
     }
 
     #[test]
+    fn install_swaps_priorities_atomically_with_target() {
+        // The weight-epoch contract: priorities only change through
+        // install, together with the target they were solved under.
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0, 7.0],
+            vec![1.0, 8.0, 3.0, 2.0],
+        ])
+        .unwrap();
+        let mut leader = ShardLeader::new(1, vec![2, 3], &mu, &drift_cfg()).unwrap();
+        assert!(leader.norm_priorities().is_empty());
+        let target = StateMatrix::new(2, 2, vec![1, 1, 0, 0]).unwrap();
+        let local = mu_columns(&mu, &[2, 3]).unwrap();
+        leader.install(1, target.clone(), local.clone(), &[3, 1]).unwrap();
+        // Normalized to mean 1: [1.5, 0.5].
+        assert!((leader.norm_priorities()[0] - 1.5).abs() < 1e-12);
+        assert!((leader.norm_priorities()[1] - 0.5).abs() < 1e-12);
+        // With uniform (cold) confidence the weighted tie-break agrees
+        // with the unweighted one: equal deficits → faster device (3).
+        assert_eq!(leader.route(0), 3);
+        // Weighted shard deficit scales by the class priority: one
+        // class-0 slot left, w = 1.5 × (1 + 0)/2.
+        assert!((leader.weighted_class_deficit(0) - 0.75).abs() < 1e-12);
+        // Bad priority vectors are rejected before anything swaps.
+        assert!(leader.install(2, target.clone(), local.clone(), &[1]).is_err());
+        assert!(leader.install(2, target.clone(), local.clone(), &[0, 1]).is_err());
+        // An empty vector clears weighting atomically with the swap.
+        leader.install(2, target, local, &[]).unwrap();
+        assert!(leader.norm_priorities().is_empty());
+    }
+
+    #[test]
+    fn weighted_route_discounts_low_confidence_cells() {
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let cfg = DriftConfig { min_obs: 4, stale_after: 100, ..drift_cfg() };
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &cfg).unwrap();
+        // Target: one class-0 slot on each device; equal rates.  The
+        // priority vector must be non-trivial, or install clears
+        // weighting entirely (equal priorities ≡ unweighted).
+        let target = StateMatrix::new(2, 2, vec![1, 1, 0, 0]).unwrap();
+        leader.install(1, target, mu_columns(&mu, &[0, 1]).unwrap(), &[2, 1]).unwrap();
+        // Warm only cell (0, 1): its confidence rises to 1 while (0, 0)
+        // stays cold at 0 — the weighted deficit now prefers device 1
+        // even though the unweighted tie-break would pick device 0.
+        for _ in 0..4 {
+            leader.occupancy.inc(0, 1);
+            leader.complete(0, 1, 0.1).unwrap();
+        }
+        assert_eq!(leader.route(0), 1, "weighted route ignored confidence");
+    }
+
+    #[test]
     fn install_validates_shapes() {
         let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
         let mut leader = ShardLeader::new(0, vec![0], &mu, &drift_cfg()).unwrap();
         let wide = StateMatrix::zeros(2, 2);
-        assert!(leader.install(1, wide, mu_columns(&mu, &[0]).unwrap()).is_err());
+        assert!(leader.install(1, wide, mu_columns(&mu, &[0]).unwrap(), &[]).is_err());
         let ok_target = StateMatrix::zeros(2, 1);
-        assert!(leader.install(1, ok_target, mu.clone()).is_err());
+        assert!(leader.install(1, ok_target, mu.clone(), &[]).is_err());
         let ok_target = StateMatrix::zeros(2, 1);
-        leader.install(1, ok_target, mu_columns(&mu, &[0]).unwrap()).unwrap();
+        leader.install(1, ok_target, mu_columns(&mu, &[0]).unwrap(), &[]).unwrap();
     }
 }

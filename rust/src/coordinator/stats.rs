@@ -225,8 +225,8 @@ impl RateEstimator {
     /// [`drift`](Self::drift)?  Two conditions: at least `min_obs`
     /// samples (cold cells — shorter windows — never signal drift,
     /// which is what lets sharded leaders boot cold without thrashing
-    /// the global re-solve loop) *and* a sample within the last
-    /// `stale_after` estimator-wide completions (a cell the routing flip
+    /// the global re-solve loop) *and* a sample fewer than `stale_after`
+    /// estimator-wide completions ago (a cell the routing flip
     /// abandoned must not keep steering on its frozen pre-flip data).
     pub fn is_warm(&self, class: usize, device: usize) -> bool {
         let c = class * self.l + device;
@@ -253,13 +253,19 @@ impl RateEstimator {
     }
 
     fn cell_is_stale(&self, c: usize) -> bool {
+        // ≥, not >: the module contract says a warm cell demotes *after
+        // `stale_after` completions without a sample*, so the demotion
+        // lands exactly when the staleness clock reaches the knob (the
+        // recency half-life), not one completion later.  The old `>`
+        // comparison put the boundary off by one against the docs.
         self.stale_after > 0
             && self.counts[c] > 0
-            && self.tick - self.last_obs[c] > self.stale_after
+            && self.tick - self.last_obs[c] >= self.stale_after
     }
 
     /// Has this once-observed cell gone `stale_after` estimator-wide
-    /// completions without a fresh sample?
+    /// completions without a fresh sample?  True exactly from the
+    /// `stale_after`-th sample-free completion on.
     pub fn is_stale(&self, class: usize, device: usize) -> bool {
         self.cell_is_stale(class * self.l + device)
     }
@@ -276,7 +282,8 @@ impl RateEstimator {
     /// observation count relative to the `min_obs` trust span × recency
     /// decay with half-life `stale_after` (a cell exactly `stale_after`
     /// completions behind the clock has half the confidence of a live
-    /// one).  0 for a never-observed cell.
+    /// one — and is demoted to stale at that same boundary, see
+    /// [`is_stale`](Self::is_stale)).  0 for a never-observed cell.
     pub fn confidence(&self, class: usize, device: usize) -> f64 {
         let c = class * self.l + device;
         if self.counts[c] == 0 {
@@ -290,6 +297,16 @@ impl RateEstimator {
             0.5f64.powf(staleness / self.stale_after as f64)
         };
         count_factor * recency
+    }
+
+    /// The full confidence grid in row-major (class, device) order —
+    /// the weight-assembly input of the priority subsystem
+    /// ([`crate::policy::grin::priority_weights`]).
+    pub fn confidences(&self) -> Vec<f64> {
+        (0..self.k)
+            .flat_map(|i| (0..self.l).map(move |j| (i, j)))
+            .map(|(i, j)| self.confidence(i, j))
+            .collect()
     }
 
     /// Install the reference rates the CUSUM residuals are measured
@@ -751,12 +768,22 @@ mod tests {
         assert!(e.drift(&prior) > 0.5);
         let conf_live = e.confidence(0, 0);
         assert!(conf_live > 0.9, "live warm cell confidence {conf_live}");
-        // The flip moves all traffic to (1, 1); (0, 0) goes quiet.
-        for _ in 0..51 {
+        // The flip moves all traffic to (1, 1); (0, 0) goes quiet.  One
+        // completion short of the boundary it is still warm...
+        for _ in 0..49 {
             e.observe(1, 1, 0.1);
         }
-        assert!(e.is_stale(0, 0), "51 > stale_after completions without a sample");
+        assert!(!e.is_stale(0, 0), "demoted a completion early");
+        assert!(e.is_warm(0, 0));
+        // ...and the 50th sample-free completion demotes it *exactly* at
+        // `stale_after`, per the module contract ("after `stale_after`
+        // completions") — the old `>` comparison was off by one here.
+        e.observe(1, 1, 0.1);
+        assert_eq!(e.staleness(0, 0), 50);
+        assert!(e.is_stale(0, 0), "not demoted at the exact boundary");
         assert!(!e.is_warm(0, 0), "stale cell still warm");
+        e.observe(1, 1, 0.1);
+        assert!(e.is_stale(0, 0), "51 ≥ stale_after completions without a sample");
         assert_eq!(e.stale_cells(), vec![(0, 0)]);
         assert!(e.confidence(0, 0) < 0.5, "confidence did not decay");
         assert!(conf_live > e.confidence(0, 0));
@@ -795,15 +822,22 @@ mod tests {
         }
         assert!((e.confidence(0, 0) - 1.0).abs() < 1e-12);
         assert_eq!(e.staleness(0, 0), 0);
-        // Exactly one half-life of other-cell completions → 0.5.
-        for _ in 0..100 {
+        // One completion short of the half-life: still live.
+        for _ in 0..99 {
             e.observe(1, 1, 0.1);
         }
+        assert!(!e.is_stale(0, 0));
+        // Exactly one half-life of other-cell completions → confidence
+        // 0.5, and the demotion boundary lands here too ("after
+        // `stale_after` completions without a sample").
+        e.observe(1, 1, 0.1);
         assert_eq!(e.staleness(0, 0), 100);
         assert!((e.confidence(0, 0) - 0.5).abs() < 1e-12);
-        // Not yet stale at exactly the half-life; one more tick demotes.
-        assert!(!e.is_stale(0, 0));
-        e.observe(1, 1, 0.1);
         assert!(e.is_stale(0, 0));
+        // The grid accessor mirrors the scalar one, row-major.
+        let grid = e.confidences();
+        assert_eq!(grid.len(), 4);
+        assert!((grid[0] - e.confidence(0, 0)).abs() < 1e-15);
+        assert!((grid[3] - e.confidence(1, 1)).abs() < 1e-15);
     }
 }

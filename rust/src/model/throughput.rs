@@ -253,6 +253,85 @@ impl IncrementalX {
     }
 }
 
+/// Priority-weighted system throughput Xw(S) = Σ_j Σ_i w_ij·μ_ij·N_ij / Σ_i N_ij
+/// — Eq. 28 with every cell's service rate discounted by a steering
+/// weight (priority × estimate confidence, see
+/// [`crate::policy::grin::priority_weights`]).  With all weights 1 this
+/// is exactly [`x_of_state`].
+pub fn weighted_x_of_state(mu: &AffinityMatrix, n: &StateMatrix, weights: &[f64]) -> Result<f64> {
+    let scaled = mu.scaled(weights)?;
+    Ok(x_of_state(&scaled, n))
+}
+
+/// [`IncrementalX`] over the priority-weighted objective Xw(S): every
+/// cell's rate is w_ij·μ_ij, so a high-priority class's tasks claim
+/// proportionally more of a processor's weighted throughput and a
+/// low-confidence estimate discounts a class's claim on a fast device.
+///
+/// Structurally this *is* an `IncrementalX` whose rate matrix is the
+/// element-wise product w ∘ μ — the GrIn greedy loop runs on it
+/// unchanged ([`crate::policy::grin::solve_weighted`]), and every
+/// complexity bound of the unweighted evaluator carries over.  With all
+/// weights equal to 1 the caches are bit-identical to
+/// [`IncrementalX::new`] on the raw matrix
+/// (`tests/priority_e2e.rs` property-checks the equivalence).
+#[derive(Debug, Clone)]
+pub struct WeightedIncrementalX {
+    inner: IncrementalX,
+}
+
+impl WeightedIncrementalX {
+    /// Build the weighted caches; `weights` is row-major k×l (or l
+    /// per-processor factors), every factor finite and > 0.
+    pub fn new(mu: &AffinityMatrix, n: &StateMatrix, weights: &[f64]) -> Result<Self> {
+        let scaled = mu.scaled(weights)?;
+        Ok(Self { inner: IncrementalX::new(&scaled, n) })
+    }
+
+    /// Processor count l.
+    #[inline]
+    pub fn procs(&self) -> usize {
+        self.inner.procs()
+    }
+
+    /// Weighted system throughput Xw(S), summed over the column caches.
+    pub fn x(&self) -> f64 {
+        self.inner.x()
+    }
+
+    /// Weighted Eq. 34 in O(1): ΔXw of adding one p-type task to j.
+    #[inline]
+    pub fn delta_plus(&self, p: usize, j: usize) -> f64 {
+        self.inner.delta_plus(p, j)
+    }
+
+    /// Weighted Eq. 36 in O(1): ΔXw of removing one p-type task from j
+    /// (defined only when the cell is occupied, as with
+    /// [`IncrementalX::delta_minus`]).
+    #[inline]
+    pub fn delta_minus(&self, p: usize, j: usize) -> f64 {
+        self.inner.delta_minus(p, j)
+    }
+
+    /// Weighted Eq. 34 for the whole row p in one contiguous pass.
+    #[inline]
+    pub fn delta_plus_row(&self, p: usize, out: &mut [f64]) {
+        self.inner.delta_plus_row(p, out);
+    }
+
+    /// Weighted Eq. 36 for the whole row p in one contiguous pass.
+    #[inline]
+    pub fn delta_minus_row(&self, p: usize, out: &mut [f64]) {
+        self.inner.delta_minus_row(p, out);
+    }
+
+    /// Apply a GrIn move (one p-type task from `from` to `to`).
+    #[inline]
+    pub fn apply_move(&mut self, p: usize, from: usize, to: usize) {
+        self.inner.apply_move(p, from, to);
+    }
+}
+
 /// Closed-form maximum throughput for a classified two-type regime
 /// (Table 1 rows; Eqs. 16–18 and cases a.1–a.3).
 pub fn x_max_theoretical(
@@ -454,6 +533,58 @@ mod tests {
         s.move_task(1, 1, 0).unwrap();
         inc.apply_move(1, 1, 0);
         assert!((inc.x() - x_of_state(&mu, &s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_incremental_with_unit_weights_matches_unweighted() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0],
+            vec![1.0, 8.0, 3.0],
+            vec![5.0, 5.0, 9.0],
+        ])
+        .unwrap();
+        let s = StateMatrix::new(3, 3, vec![3, 1, 0, 2, 4, 1, 0, 2, 5]).unwrap();
+        let ones = vec![1.0; 9];
+        let w = WeightedIncrementalX::new(&mu, &s, &ones).unwrap();
+        let inc = IncrementalX::new(&mu, &s);
+        assert_eq!(w.x().to_bits(), inc.x().to_bits());
+        for p in 0..3 {
+            for j in 0..3 {
+                assert_eq!(w.delta_plus(p, j).to_bits(), inc.delta_plus(p, j).to_bits());
+                if s.get(p, j) > 0 {
+                    assert_eq!(w.delta_minus(p, j).to_bits(), inc.delta_minus(p, j).to_bits());
+                }
+            }
+        }
+        assert!((weighted_x_of_state(&mu, &s, &ones).unwrap() - x_of_state(&mu, &s)).abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn weighted_incremental_tracks_scaled_matrix() {
+        // Xw on μ with weights w must equal X on the pre-scaled matrix
+        // w ∘ μ, across moves.
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let weights = vec![2.0, 2.0, 0.5, 0.5]; // class 0 twice the claim
+        let scaled = mu.scaled(&weights).unwrap();
+        let mut s = StateMatrix::new(2, 2, vec![2, 1, 1, 3]).unwrap();
+        let mut w = WeightedIncrementalX::new(&mu, &s, &weights).unwrap();
+        assert!((w.x() - x_of_state(&scaled, &s)).abs() < 1e-12);
+        let mut dplus = vec![0.0f64; 2];
+        w.delta_plus_row(0, &mut dplus);
+        for j in 0..2 {
+            assert!((dplus[j] - x_df_plus(&scaled, &s, 0, j)).abs() < 1e-12);
+        }
+        s.move_task(1, 1, 0).unwrap();
+        w.apply_move(1, 1, 0);
+        assert!((w.x() - x_of_state(&scaled, &s)).abs() < 1e-12);
+        assert!(
+            (weighted_x_of_state(&mu, &s, &weights).unwrap() - x_of_state(&scaled, &s)).abs()
+                < 1e-12
+        );
+        // Bad weights are rejected, not silently clamped.
+        assert!(WeightedIncrementalX::new(&mu, &s, &[1.0, -1.0, 1.0, 1.0]).is_err());
+        assert!(WeightedIncrementalX::new(&mu, &s, &[1.0; 3]).is_err());
     }
 
     #[test]

@@ -205,6 +205,97 @@ pub fn solve_from_snapshot(
     greedy_increase(mu, start.clone(), populations)
 }
 
+/// Is this priority vector trivial — empty or all-equal?  A trivial
+/// vector means every class has the same standing, so the whole
+/// weighted pipeline (solve *and* steering) reduces to the plain
+/// unweighted paths: that keeps the documented equal-priorities ≡
+/// unweighted contract exact end to end, avoids injecting
+/// estimator-confidence jitter into runs that asked for no
+/// prioritization, and keeps weight-blind policies usable under an
+/// all-equal vector.
+pub fn trivial_priorities(priorities: &[u32]) -> bool {
+    priorities.windows(2).all(|w| w[0] == w[1])
+}
+
+/// Assemble the per-cell steering/solve weights of the priority
+/// subsystem: normalized class priority × estimate-confidence discount.
+///
+/// * `priorities[i] ≥ 1` is the integer priority of class i, normalized
+///   to mean 1 across classes so that equal priorities — whatever their
+///   absolute value — produce the all-ones vector and the weighted
+///   solve degenerates to the unweighted one *exactly*.
+/// * `confidence[i·l + j] ∈ [0, 1]` is how much the estimator trusts
+///   cell (i, j) right now ([`crate::coordinator::RateEstimator::confidence`];
+///   pass 1.0 everywhere on oracle paths).  It is mapped to the discount
+///   (1 + c)/2 ∈ [½, 1], so a cold cell halves a class's claim on that
+///   device instead of zeroing it (a zero weight would make the solve
+///   degenerate).
+pub fn priority_weights(
+    priorities: &[u32],
+    confidence: &[f64],
+    procs: usize,
+) -> Result<Vec<f64>> {
+    let k = priorities.len();
+    if k == 0 {
+        return Err(Error::Config("priority_weights needs ≥ 1 class".into()));
+    }
+    if priorities.iter().any(|&p| p == 0) {
+        return Err(Error::Config("class priorities must be ≥ 1".into()));
+    }
+    if confidence.len() != k * procs {
+        return Err(Error::Shape(format!(
+            "{} confidence cells for a {k}×{procs} system",
+            confidence.len()
+        )));
+    }
+    if confidence.iter().any(|&c| !(0.0..=1.0).contains(&c)) {
+        return Err(Error::Config("confidence must lie in [0, 1]".into()));
+    }
+    let mean = priorities.iter().map(|&p| p as f64).sum::<f64>() / k as f64;
+    Ok((0..k)
+        .flat_map(|i| {
+            let pri = priorities[i] as f64 / mean;
+            (0..procs).map(move |j| pri * (1.0 + confidence[i * procs + j]) / 2.0)
+        })
+        .collect())
+}
+
+/// Priority-weighted GrIn solve: run Algorithms 1–2 against the
+/// weighted objective Xw(S)
+/// ([`crate::model::throughput::WeightedIncrementalX`] — structurally
+/// the unweighted greedy loop over the element-wise product w ∘ μ), so
+/// a high-priority class claims its fast devices even when that costs a
+/// little total throughput.  `GrInSolution::throughput` reports the
+/// *true* (unweighted) X at the solved state, so weighted and
+/// unweighted solves are directly comparable; with a uniform weight
+/// vector the result is identical to [`solve`].
+pub fn solve_weighted(
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    weights: &[f64],
+) -> Result<GrInSolution> {
+    let scaled = mu.scaled(weights)?;
+    let sol = solve(&scaled, populations)?;
+    let throughput = x_of_state(mu, &sol.state);
+    Ok(GrInSolution { state: sol.state, throughput, moves: sol.moves })
+}
+
+/// Weighted sibling of [`solve_from_snapshot`]: warm-start the weighted
+/// greedy loop from a gathered occupancy snapshot (the sharded plane's
+/// batched re-solve under priorities).  As with [`solve_weighted`], the
+/// reported throughput is the true X at the solved state.
+pub fn solve_weighted_from_snapshot(
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    weights: &[f64],
+    start: &StateMatrix,
+) -> Result<GrInSolution> {
+    let scaled = mu.scaled(weights)?;
+    let sol = solve_from_snapshot(&scaled, populations, start)?;
+    let throughput = x_of_state(mu, &sol.state);
+    Ok(GrInSolution { state: sol.state, throughput, moves: sol.moves })
+}
+
 /// The Algorithm-2 greedy loop from an arbitrary feasible start state
 /// (shared by [`solve`] and [`solve_from_snapshot`]).
 fn greedy_increase(
@@ -271,6 +362,22 @@ impl Policy for GrInPolicy {
     fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
         let sol = solve(mu, populations)?;
         self.steering = Some(TargetSteering::new(sol.state.clone()));
+        self.solution = Some(sol);
+        Ok(())
+    }
+
+    /// The weighted solve: target from [`solve_weighted`], steering with
+    /// the same per-cell weights so target and weight vector swap as one
+    /// unit.
+    fn prepare_weighted(
+        &mut self,
+        mu: &AffinityMatrix,
+        populations: &[u32],
+        weights: &[f64],
+    ) -> Result<()> {
+        let sol = solve_weighted(mu, populations, weights)?;
+        self.steering =
+            Some(TargetSteering::with_weights(sol.state.clone(), weights.to_vec()));
         self.solution = Some(sol);
         Ok(())
     }
@@ -446,6 +553,84 @@ mod tests {
         assert!(solve_from_snapshot(&mu, &pops, &narrow).is_err());
         let short = StateMatrix::zeros(3, 3);
         assert!(solve_from_snapshot(&mu, &pops, &short).is_err());
+    }
+
+    #[test]
+    fn trivial_priority_vectors_are_detected() {
+        assert!(trivial_priorities(&[]));
+        assert!(trivial_priorities(&[3]));
+        assert!(trivial_priorities(&[2, 2, 2]));
+        assert!(!trivial_priorities(&[2, 1]));
+        assert!(!trivial_priorities(&[1, 1, 2]));
+    }
+
+    #[test]
+    fn priority_weights_normalize_and_validate() {
+        // Equal priorities + full confidence ⇒ exactly all ones, any
+        // absolute priority level.
+        let w = priority_weights(&[3, 3], &[1.0; 4], 2).unwrap();
+        assert!(w.iter().all(|&x| x == 1.0), "{w:?}");
+        // Priority 4-vs-1 with mean 2.5: weights 1.6 / 0.4 at conf 1.
+        let w = priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        assert!((w[0] - 1.6).abs() < 1e-12 && (w[3] - 0.4).abs() < 1e-12);
+        // Zero confidence halves a cell's claim instead of zeroing it.
+        let w = priority_weights(&[2, 2], &[0.0, 1.0, 1.0, 1.0], 2).unwrap();
+        assert!((w[0] - 0.5).abs() < 1e-12 && (w[1] - 1.0).abs() < 1e-12);
+        assert!(priority_weights(&[], &[], 2).is_err());
+        assert!(priority_weights(&[0, 1], &[1.0; 4], 2).is_err());
+        assert!(priority_weights(&[1, 1], &[1.0; 3], 2).is_err());
+        assert!(priority_weights(&[1, 1], &[1.0, 1.0, 2.0, 1.0], 2).is_err());
+    }
+
+    #[test]
+    fn equal_priority_weighted_solve_matches_unweighted() {
+        let mut rng = Rng::new(404);
+        for _ in 0..30 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(8) as u32).collect();
+            let pri = vec![1 + rng.below(5) as u32; k]; // equal across classes
+            let w = priority_weights(&pri, &vec![1.0; k * l], l).unwrap();
+            let plain = solve(&mu, &pops).unwrap();
+            let weighted = solve_weighted(&mu, &pops, &w).unwrap();
+            assert!(
+                (plain.throughput - weighted.throughput).abs() < 1e-9,
+                "equal-priority weighted {} vs unweighted {}",
+                weighted.throughput,
+                plain.throughput
+            );
+            assert_eq!(plain.state, weighted.state);
+        }
+    }
+
+    #[test]
+    fn weighted_solve_reserves_fast_device_for_high_priority() {
+        // The contended-fast-device system of the priority_mix scenario:
+        // both classes prefer P1; unweighted GrIn crowds the
+        // low-priority majority onto it, the 4:1 weighted solve reserves
+        // it for the high-priority class.
+        let mu = crate::sim::workload::priority_mu();
+        let pops = [4u32, 16];
+        let plain = solve(&mu, &pops).unwrap();
+        // Unweighted: low-priority tasks share P1 with the entire
+        // high-priority class.
+        assert!(plain.state.get(1, 0) > 0, "unweighted keeps P1 exclusive? {}", plain.state);
+        let w = priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        let weighted = solve_weighted(&mu, &pops, &w).unwrap();
+        // Weighted: the high-priority class owns P1 outright.
+        assert_eq!(weighted.state.get(0, 0), 4, "{}", weighted.state);
+        assert_eq!(weighted.state.get(1, 0), 0, "{}", weighted.state);
+        weighted.state.check_populations(&pops).unwrap();
+        // The reservation costs a little total X — bounded, not free.
+        assert!(weighted.throughput <= plain.throughput + 1e-9);
+        assert!(weighted.throughput >= plain.throughput * 0.9);
+        // Warm-started weighted solve agrees from the unweighted state.
+        let warm = solve_weighted_from_snapshot(&mu, &pops, &w, &plain.state).unwrap();
+        assert_eq!(warm.state, weighted.state);
     }
 
     #[test]

@@ -57,6 +57,37 @@ pub trait Policy: Send {
         Ok(())
     }
 
+    /// Priority-aware [`prepare`](Self::prepare): solve under per-cell
+    /// steering weights (row-major k×l, priority × estimate confidence —
+    /// see [`grin::priority_weights`]).  The default accepts only a
+    /// *uniform* weight vector (it reduces to the unweighted solve) and
+    /// rejects anything else, so a priority-configured run on a policy
+    /// that cannot honor weights fails loudly instead of silently
+    /// scheduling unweighted.  GrIn overrides this with the real
+    /// weighted solve ([`grin::solve_weighted`]).
+    fn prepare_weighted(
+        &mut self,
+        mu: &AffinityMatrix,
+        populations: &[u32],
+        weights: &[f64],
+    ) -> Result<()> {
+        if weights.len() != mu.types() * mu.procs() {
+            return Err(Error::Shape(format!(
+                "{} weights for a {}×{} system",
+                weights.len(),
+                mu.types(),
+                mu.procs()
+            )));
+        }
+        if weights.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12) {
+            return self.prepare(mu, populations);
+        }
+        Err(Error::Config(format!(
+            "policy {} does not support priority weights (use grin)",
+            self.name()
+        )))
+    }
+
     /// Does this policy read `SystemView::work`?  The engine skips the
     /// O(N) remaining-work scan on every dispatch when it doesn't —
     /// a §Perf optimization worth ~2× simulator throughput.

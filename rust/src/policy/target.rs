@@ -18,35 +18,96 @@ use super::SystemView;
 /// sharded plane ([`crate::coordinator::ShardLeader`] device pick,
 /// [`crate::coordinator::ShardedControl`] shard pick).
 ///
-/// The rate inputs at every call site are the *solved* rates of the
+/// Returns `None` only for an empty iterator (no devices/shards to pick
+/// from) — every call site holds a non-empty fleet by construction and
+/// unwraps with a message, instead of the old silent index-0 fallback.
+/// The rate tie-break uses [`f64::total_cmp`], so a NaN rate orders
+/// deterministically (above +∞ in IEEE total order) rather than being
+/// silently unbeatable-yet-never-winning as with a `>` comparison; the
+/// rate inputs at every call site are the *solved* rates of the
 /// installed target, which re-solves assemble from the
 /// confidence-gated μ̂
 /// ([`crate::coordinator::RateEstimator::mu_hat_gated`]) — so a stale
 /// cell's frozen pre-flip estimate can never win a steering tie.
-pub(crate) fn pick_by_deficit(pairs: impl Iterator<Item = (i64, f64)>) -> usize {
-    let mut best = 0usize;
-    let mut best_deficit = i64::MIN;
-    let mut best_rate = f64::NEG_INFINITY;
+pub(crate) fn pick_by_deficit(pairs: impl Iterator<Item = (i64, f64)>) -> Option<usize> {
+    let mut best: Option<(usize, i64, f64)> = None;
     for (i, (deficit, rate)) in pairs.enumerate() {
-        if deficit > best_deficit || (deficit == best_deficit && rate > best_rate) {
-            best = i;
-            best_deficit = deficit;
-            best_rate = rate;
+        let better = match best {
+            None => true,
+            Some((_, bd, br)) => {
+                deficit > bd || (deficit == bd && rate.total_cmp(&br).is_gt())
+            }
+        };
+        if better {
+            best = Some((i, deficit, rate));
         }
     }
-    best
+    best.map(|(i, _, _)| i)
+}
+
+/// Confidence-weighted deficit score: a positive deficit (a claim on
+/// the cell) is discounted by the cell weight, while overflow (a
+/// negative deficit) is compared unweighted — scaling overflow by a
+/// small weight would make the *least-trusted, most-overfull* cell
+/// look least overfull and attract exactly the traffic it should
+/// repel.
+pub(crate) fn weighted_deficit(weight: f64, deficit: i64) -> f64 {
+    if deficit > 0 {
+        weight * deficit as f64
+    } else {
+        deficit as f64
+    }
+}
+
+/// [`pick_by_deficit`] over priority/confidence-weighted deficits:
+/// largest weighted deficit w_ij·(N*_ij − N_ij), ties (exact
+/// [`f64::total_cmp`] equality) to the larger weighted rate, then the
+/// lower index.  The weighted planes route through this so a deficit on
+/// a low-confidence cell is discounted against one the estimator
+/// actually trusts.
+pub(crate) fn pick_by_weighted_deficit(
+    pairs: impl Iterator<Item = (f64, f64)>,
+) -> Option<usize> {
+    let mut best: Option<(usize, f64, f64)> = None;
+    for (i, (deficit, rate)) in pairs.enumerate() {
+        let better = match best {
+            None => true,
+            Some((_, bd, br)) => match deficit.total_cmp(&bd) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Equal => rate.total_cmp(&br).is_gt(),
+                std::cmp::Ordering::Less => false,
+            },
+        };
+        if better {
+            best = Some((i, deficit, rate));
+        }
+    }
+    best.map(|(i, _, _)| i)
 }
 
 /// Steers arrivals toward a fixed target state.
 #[derive(Debug, Clone)]
 pub struct TargetSteering {
     target: StateMatrix,
+    /// Per-cell steering weights (row-major k×l; empty = unweighted).
+    /// Priority × estimate confidence from the weighted solve that
+    /// produced `target` — the weights and the target always swap
+    /// together, so steering never mixes an old weight vector with a
+    /// new target.
+    weights: Vec<f64>,
 }
 
 impl TargetSteering {
     /// Steer toward `target`.
     pub fn new(target: StateMatrix) -> Self {
-        Self { target }
+        Self { target, weights: Vec::new() }
+    }
+
+    /// Steer toward `target` under per-cell priority weights (row-major
+    /// k×l, as produced by [`crate::policy::grin::priority_weights`]).
+    pub fn with_weights(target: StateMatrix, weights: Vec<f64>) -> Self {
+        debug_assert_eq!(weights.len(), target.types() * target.procs());
+        Self { target, weights }
     }
 
     /// The target matrix.
@@ -56,19 +117,27 @@ impl TargetSteering {
 
     /// Choose the processor for an arriving `ttype` task.
     ///
-    /// Primary rule: the largest deficit `N*_ij − N_ij`.  If no cell of the
-    /// row is under target (possible transiently when the population mix
-    /// drifts from what the target was solved for), fall back to the
-    /// fastest processor for the type among the least-overfull cells.
+    /// Primary rule: the largest deficit `N*_ij − N_ij` (weighted by the
+    /// per-cell priority/confidence weights when present).  If no cell
+    /// of the row is under target (possible transiently when the
+    /// population mix drifts from what the target was solved for), fall
+    /// back to the fastest processor for the type among the
+    /// least-overfull cells.
     pub fn dispatch(&self, ttype: usize, view: &SystemView<'_>) -> usize {
         let l = self.target.procs();
         debug_assert_eq!(view.state.procs(), l);
-        pick_by_deficit((0..l).map(|j| {
-            (
-                self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64,
-                view.mu.rate(ttype, j),
-            )
-        }))
+        let deficit = |j: usize| {
+            self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64
+        };
+        if self.weights.is_empty() {
+            pick_by_deficit((0..l).map(|j| (deficit(j), view.mu.rate(ttype, j))))
+        } else {
+            pick_by_weighted_deficit((0..l).map(|j| {
+                let w = self.weights[ttype * l + j];
+                (weighted_deficit(w, deficit(j)), w * view.mu.rate(ttype, j))
+            }))
+        }
+        .expect("steering target has at least one processor")
     }
 }
 
@@ -85,6 +154,82 @@ mod tests {
         populations: &'a [u32],
     ) -> SystemView<'a> {
         SystemView { mu, state, work, populations }
+    }
+
+    #[test]
+    fn pick_by_deficit_empty_is_none_not_zero() {
+        // Regression: the old implementation returned index 0 for an
+        // empty iterator, a phantom device.
+        assert_eq!(pick_by_deficit(std::iter::empty()), None);
+        assert_eq!(pick_by_weighted_deficit(std::iter::empty()), None);
+    }
+
+    #[test]
+    fn pick_by_deficit_nan_rate_ties_are_deterministic() {
+        // Regression: with the old `rate > best_rate` tie-break a NaN
+        // rate could never win a tie (NaN fails every `>`), so a
+        // poisoned-rate leader silently lost every tie no matter its
+        // deficit standing.  Under total_cmp the comparison is a total
+        // order: +NaN sits above +∞, so the NaN entry wins its ties
+        // consistently in either iteration order.
+        let nan = f64::NAN;
+        assert_eq!(pick_by_deficit([(3, nan), (3, 10.0)].into_iter()), Some(0));
+        assert_eq!(pick_by_deficit([(3, 10.0), (3, nan)].into_iter()), Some(1));
+        // A larger deficit still dominates any rate, NaN included.
+        assert_eq!(pick_by_deficit([(4, 1.0), (3, nan)].into_iter()), Some(0));
+        assert_eq!(pick_by_weighted_deficit([(3.0, nan), (3.0, 10.0)].into_iter()), Some(0));
+        // NaN *deficits* order deterministically too (above every real).
+        assert_eq!(pick_by_weighted_deficit([(1.0, 5.0), (nan, 1.0)].into_iter()), Some(1));
+    }
+
+    #[test]
+    fn pick_by_deficit_all_ties_takes_lowest_index() {
+        assert_eq!(pick_by_deficit([(2, 7.0), (2, 7.0), (2, 7.0)].into_iter()), Some(0));
+        assert_eq!(
+            pick_by_weighted_deficit([(2.0, 7.0), (2.0, 7.0), (2.0, 7.0)].into_iter()),
+            Some(0)
+        );
+        // Equal deficits, distinct rates: the faster one wins.
+        assert_eq!(pick_by_deficit([(2, 7.0), (2, 9.0)].into_iter()), Some(1));
+    }
+
+    #[test]
+    fn weighted_dispatch_discounts_low_confidence_deficits() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        // Row-0 target has a deficit of 1 on both devices.
+        let target = StateMatrix::new(2, 2, vec![1, 1, 0, 2]).unwrap();
+        let state = StateMatrix::new(2, 2, vec![0, 0, 0, 2]).unwrap();
+        let work = vec![0.0; 2];
+        let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[2, 2] };
+        // Unweighted: equal deficits, tie to the faster device (0).
+        assert_eq!(TargetSteering::new(target.clone()).dispatch(0, &view), 0);
+        // Device 0's estimate has low confidence: its weighted deficit
+        // (0.5·1) loses to device 1's (1.0·1) despite the faster rate.
+        let weights = vec![0.5, 1.0, 1.0, 1.0];
+        let steer = TargetSteering::with_weights(target, weights);
+        assert_eq!(steer.dispatch(0, &view), 1);
+    }
+
+    #[test]
+    fn weighted_dispatch_never_prefers_more_overfull_low_confidence_cells() {
+        // Regression: scaling a *negative* deficit by a small weight
+        // used to make the least-trusted, most-overfull cell look
+        // least overfull — attracting exactly the traffic it should
+        // repel.  Overflow comparisons stay unweighted.
+        let mu = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let target = StateMatrix::new(2, 2, vec![0, 0, 1, 1]).unwrap();
+        // Row 0 overfull everywhere: device 0 (trusted, w = 1) by 2,
+        // device 1 (low confidence, w = 0.25) by 3.
+        let state = StateMatrix::new(2, 2, vec![2, 3, 1, 1]).unwrap();
+        let work = vec![0.0; 2];
+        let v = view(&mu, &state, &work, &[6, 2]);
+        let steer =
+            TargetSteering::with_weights(target, vec![1.0, 0.25, 1.0, 1.0]);
+        assert_eq!(steer.dispatch(0, &v), 0, "overflow comparison must stay unweighted");
+        // The scalar rule itself: claims scale, overflow does not.
+        assert_eq!(weighted_deficit(0.25, 4), 1.0);
+        assert_eq!(weighted_deficit(0.25, -4), -4.0);
+        assert_eq!(weighted_deficit(0.25, 0), 0.0);
     }
 
     #[test]

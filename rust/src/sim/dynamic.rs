@@ -256,6 +256,18 @@ pub struct DynamicConfig {
     pub drift: DriftConfig,
     /// Sharded-mode knobs.
     pub shard: ShardConfig,
+    /// Per-class integer priorities (each ≥ 1; empty = all classes
+    /// equal, the unweighted paths bit for bit).  Non-uniform
+    /// priorities steer every solve through the weighted objective
+    /// ([`crate::policy::grin::solve_weighted`]) with weights =
+    /// normalized priority × per-cell estimator confidence — GrIn only;
+    /// other policies reject them ([`Policy::prepare_weighted`]).
+    pub priorities: Vec<u32>,
+    /// Per-class soft deadlines in simulated seconds (0 = no deadline
+    /// for that class; empty = deadline accounting off).  Misses and
+    /// per-class p99 land in each phase's
+    /// [`SimResult`](crate::sim::metrics::SimResult).
+    pub deadlines: Vec<f64>,
 }
 
 impl DynamicConfig {
@@ -270,6 +282,8 @@ impl DynamicConfig {
             resolve: ResolveMode::EveryPhase,
             drift: DriftConfig::default(),
             shard: ShardConfig::default(),
+            priorities: Vec::new(),
+            deadlines: Vec::new(),
         }
     }
 }
@@ -302,6 +316,72 @@ impl DynamicReport {
             0.0
         }
     }
+
+    /// Completion-weighted mean class-`i` throughput across phases —
+    /// the per-tier aggregate the priority gates are measured on
+    /// (`tests/priority_e2e.rs`).
+    pub fn class_throughput(&self, i: usize) -> f64 {
+        let mut completed = 0u64;
+        let mut time = 0.0f64;
+        for r in &self.phases {
+            if r.throughput > 0.0 {
+                completed += r.class_completions(i);
+                time += r.completed as f64 / r.throughput;
+            }
+        }
+        if time > 0.0 {
+            completed as f64 / time
+        } else {
+            0.0
+        }
+    }
+
+    /// Run-wide class-`i` deadline-miss rate (misses / class
+    /// completions, over every measured phase); 0 when deadlines were
+    /// not configured.
+    pub fn deadline_miss_rate(&self, i: usize) -> f64 {
+        let mut miss = 0u64;
+        let mut total = 0u64;
+        for r in &self.phases {
+            if let Some(&m) = r.deadline_misses.get(i) {
+                miss += m;
+            }
+            total += r.class_completions(i);
+        }
+        if total > 0 {
+            miss as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run the configured prepare for `policy`: the plain solve when the
+/// priority vector is trivial (empty or all-equal — see
+/// [`crate::policy::grin::trivial_priorities`]), otherwise the
+/// weighted solve under weights = normalized priority × per-cell
+/// confidence ([`crate::policy::grin::priority_weights`]).
+/// `estimator` supplies the confidence grid on the adaptive path;
+/// `None` (oracle paths: static, every-phase, and population-only
+/// boundaries before any observation-driven re-solve) means full
+/// confidence everywhere.
+fn prepare_policy(
+    policy: &mut dyn Policy,
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    priorities: &[u32],
+    estimator: Option<&RateEstimator>,
+) -> Result<()> {
+    if crate::policy::grin::trivial_priorities(priorities) {
+        return policy.prepare(mu, populations);
+    }
+    let (k, l) = (mu.types(), mu.procs());
+    let confidence = match estimator {
+        Some(e) => e.confidences(),
+        None => vec![1.0; k * l],
+    };
+    let weights = crate::policy::grin::priority_weights(priorities, &confidence, l)?;
+    policy.prepare_weighted(mu, populations, &weights)
 }
 
 /// Per-phase results of a dynamic run (thin wrapper over
@@ -333,6 +413,28 @@ pub fn run_dynamic_report(
             return Err(Error::Config("empty phase".into()));
         }
     }
+    if !cfg.priorities.is_empty() {
+        if cfg.priorities.len() != k {
+            return Err(Error::Shape(format!(
+                "{} priorities for {k} task classes",
+                cfg.priorities.len()
+            )));
+        }
+        if cfg.priorities.iter().any(|&p| p == 0) {
+            return Err(Error::Config("class priorities must be ≥ 1".into()));
+        }
+    }
+    if !cfg.deadlines.is_empty() {
+        if cfg.deadlines.len() != k {
+            return Err(Error::Shape(format!(
+                "{} deadlines for {k} task classes",
+                cfg.deadlines.len()
+            )));
+        }
+        if cfg.deadlines.iter().any(|&d| !d.is_finite() || d < 0.0) {
+            return Err(Error::Config("deadlines must be finite and ≥ 0".into()));
+        }
+    }
 
     let needs_work = policy.needs_work_estimate();
     let mut rng = Rng::new(cfg.seed);
@@ -356,13 +458,19 @@ pub fn run_dynamic_report(
     // adaptive mode and (per shard) the sharded mode.
     let observes = adaptive || sharded;
     let mut control: Option<ShardedControl> = if sharded {
-        Some(ShardedControl::new(
+        let mut ctl = ShardedControl::new(
             mu,
             &cfg.phases[0].populations,
             cfg.shard.shards,
             &cfg.drift,
             cfg.shard.sync_every,
-        )?)
+        )?;
+        if !cfg.priorities.is_empty() {
+            // Swaps in priority-weighted batched re-solves and steering
+            // (one weighted re-install over the boot target).
+            ctl.set_priorities(&cfg.priorities)?;
+        }
+        Some(ctl)
     } else {
         None
     };
@@ -392,12 +500,12 @@ pub fn run_dynamic_report(
         match cfg.resolve {
             ResolveMode::Static => {
                 if phase_idx == 0 {
-                    policy.prepare(&believed, &phase.populations)?;
+                    prepare_policy(policy, &believed, &phase.populations, &cfg.priorities, None)?;
                 }
             }
             ResolveMode::EveryPhase => {
                 believed = actual.clone();
-                policy.prepare(&believed, &phase.populations)?;
+                prepare_policy(policy, &believed, &phase.populations, &cfg.priorities, None)?;
                 if phase_idx > 0 {
                     resolves += 1;
                 }
@@ -406,8 +514,15 @@ pub fn run_dynamic_report(
                 // Population changes are directly observable (programs
                 // launch/retire through the scheduler), so the policy
                 // re-solves for them — but only against the *believed*
-                // rates, never the oracle's.
-                policy.prepare(&believed, &phase.populations)?;
+                // rates, never the oracle's.  Priority weights carry the
+                // live per-cell confidence.
+                prepare_policy(
+                    policy,
+                    &believed,
+                    &phase.populations,
+                    &cfg.priorities,
+                    Some(&estimator),
+                )?;
             }
             ResolveMode::Sharded => {
                 // Same observability argument, through the control
@@ -475,7 +590,14 @@ pub fn run_dynamic_report(
             events.update(j, procs[j].next_completion());
         }
         let total = phase.warmup + phase.completions;
-        let mut metrics = Metrics::new(k, l, now);
+        let new_metrics = |t: f64| {
+            let mut m = Metrics::new(k, l, t);
+            if !cfg.deadlines.is_empty() {
+                m.track_deadlines(&cfg.deadlines);
+            }
+            m
+        };
+        let mut metrics = new_metrics(now);
         let mut measuring = phase.warmup == 0;
         let mut completions = 0u64;
         while completions < total {
@@ -490,7 +612,7 @@ pub fn run_dynamic_report(
             completions += 1;
             if !measuring && completions > phase.warmup {
                 measuring = true;
-                metrics = Metrics::new(k, l, now);
+                metrics = new_metrics(now);
             }
             if measuring {
                 metrics.record(now, now - done.arrive, 0.0, done.ttype, j);
@@ -548,7 +670,15 @@ pub fn run_dynamic_report(
                     // A noisy μ̂ can be momentarily unsolvable (CAB's
                     // Eq.-2 regime check): keep the old target and retry
                     // at the next check.
-                    if policy.prepare(&mu_hat, &phase.populations).is_ok() {
+                    if prepare_policy(
+                        policy,
+                        &mu_hat,
+                        &phase.populations,
+                        &cfg.priorities,
+                        Some(&estimator),
+                    )
+                    .is_ok()
+                    {
                         believed = mu_hat;
                         estimator.set_reference(&believed)?;
                         resolves += 1;
@@ -769,6 +899,74 @@ mod tests {
         cfg.shard.sync_every = 0;
         let mut p = PolicyKind::GrIn.build();
         assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+    }
+
+    #[test]
+    fn priority_and_deadline_configs_are_validated() {
+        let mu = workload::paper_two_type_mu();
+        let base = || DynamicConfig::new(vec![Phase::new(vec![4, 4], 10, 100)]);
+        // Arity and zero-priority rejections.
+        let mut cfg = base();
+        cfg.priorities = vec![1, 2, 3];
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        let mut cfg = base();
+        cfg.priorities = vec![0, 1];
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        let mut cfg = base();
+        cfg.deadlines = vec![1.0];
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        let mut cfg = base();
+        cfg.deadlines = vec![-1.0, 1.0];
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        // Non-uniform priorities need a weight-aware policy: CAB fails
+        // loudly instead of silently scheduling unweighted.
+        let mut cfg = base();
+        cfg.priorities = vec![4, 1];
+        let mut p = PolicyKind::Cab.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        // Equal priorities are trivial: they reduce to the plain
+        // unweighted prepare — which also means they run fine on
+        // weight-blind policies, even as estimator confidences diverge
+        // mid-run under the adaptive loop.
+        let mut cfg = base();
+        cfg.priorities = vec![2, 2];
+        let mut p = PolicyKind::GrIn.build();
+        run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        let mut cfg = base();
+        cfg.priorities = vec![2, 2];
+        cfg.resolve = ResolveMode::Adaptive;
+        let mut p = PolicyKind::Cab.build();
+        run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+    }
+
+    #[test]
+    fn deadline_tracking_reports_misses_and_class_throughput() {
+        // Every class-0 response is ≫ 1 ms, so a 1 ms deadline must
+        // report a ~100% miss rate; a deadline past any plausible
+        // response reports ~0.  Class 1 (deadline 0) is never counted.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 100, 2_000)]);
+        cfg.seed = 17;
+        cfg.deadlines = vec![0.001, 0.0];
+        let mut p = PolicyKind::GrIn.build();
+        let tight = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert!(tight.deadline_miss_rate(0) > 0.95, "{}", tight.deadline_miss_rate(0));
+        assert_eq!(tight.deadline_miss_rate(1), 0.0);
+        // Per-class throughputs partition the total.
+        let x0 = tight.class_throughput(0);
+        let x1 = tight.class_throughput(1);
+        assert!(x0 > 0.0 && x1 > 0.0);
+        assert!((x0 + x1 - tight.mean_throughput()).abs() < 1e-9);
+        // p99 recorded per phase while tracking.
+        assert_eq!(tight.phases[0].p99_by_class.len(), 2);
+        cfg.deadlines = vec![1e6, 0.0];
+        let mut p = PolicyKind::GrIn.build();
+        let loose = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(loose.deadline_miss_rate(0), 0.0);
     }
 
     #[test]

@@ -5,6 +5,13 @@
 //! E[ℰ_sim]   = mean of 𝒫_ij · ω, ω = size/μ_ij (execution, not response)
 //! EDP_sim    = E[ℰ_sim] · E[T_sim]
 //! X·E[T]     ≈ N (Little's-Law self-check, bottom-right subplots).
+//!
+//! Deadline accounting (the priority/deadline subsystem) is opt-in via
+//! [`Metrics::track_deadlines`]: per-class response histograms and
+//! soft-deadline miss counts, off the hot path — and allocation-free —
+//! unless a run configures deadlines.
+
+use crate::coordinator::stats::LatencyHistogram;
 
 /// Online accumulator for one simulation run.
 #[derive(Debug, Clone, Default)]
@@ -21,6 +28,15 @@ pub struct Metrics {
     t_last: f64,
     /// Per-(type, proc) completion counts, row-major k×l.
     pub completions_by_cell: Vec<u64>,
+    /// Per-class soft deadlines in simulated seconds (0 = the class has
+    /// no deadline); empty = deadline tracking off.
+    deadlines: Vec<f64>,
+    /// Per-class deadline misses (response > deadline); sized k only
+    /// while tracking.
+    misses_by_class: Vec<u64>,
+    /// Per-class response histograms (p99 reporting); sized k only
+    /// while tracking.
+    class_hist: Vec<LatencyHistogram>,
     k: usize,
     l: usize,
 }
@@ -44,8 +60,23 @@ impl Metrics {
         self.t_last = t_start;
         self.completions_by_cell.clear();
         self.completions_by_cell.resize(k * l, 0);
+        self.deadlines.clear();
+        self.misses_by_class.clear();
+        self.class_hist.clear();
         self.k = k;
         self.l = l;
+    }
+
+    /// Switch on per-class deadline/percentile accounting for this
+    /// window: `deadlines[i]` is class i's soft deadline in simulated
+    /// seconds (0 = no deadline for that class, responses still feed the
+    /// class histogram).  Call after [`new`](Self::new)/[`reset`](Self::reset);
+    /// runs that never call it pay nothing on the record path.
+    pub fn track_deadlines(&mut self, deadlines: &[f64]) {
+        debug_assert_eq!(deadlines.len(), self.k);
+        self.deadlines = deadlines.to_vec();
+        self.misses_by_class = vec![0; self.k];
+        self.class_hist = (0..self.k).map(|_| LatencyHistogram::new()).collect();
     }
 
     /// Record a completed task.
@@ -58,6 +89,13 @@ impl Metrics {
         self.sum_energy += energy;
         self.t_last = now;
         self.completions_by_cell[ttype * self.l + proc] += 1;
+        if !self.deadlines.is_empty() {
+            self.class_hist[ttype].record_s(response);
+            let deadline = self.deadlines[ttype];
+            if deadline > 0.0 && response > deadline {
+                self.misses_by_class[ttype] += 1;
+            }
+        }
     }
 
     /// Elapsed measurement time.
@@ -88,6 +126,12 @@ impl Metrics {
             n_programs,
             completed: self.completed,
             completions_by_cell: self.completions_by_cell.clone(),
+            deadline_misses: self.misses_by_class.clone(),
+            p99_by_class: self
+                .class_hist
+                .iter()
+                .map(|h| h.quantile_s(0.99))
+                .collect(),
             k: self.k,
             l: self.l,
         }
@@ -114,6 +158,13 @@ pub struct SimResult {
     /// Per-(type, proc) completion counts (row-major k×l) — the observed
     /// ρ_ij routing fractions.
     pub completions_by_cell: Vec<u64>,
+    /// Per-class soft-deadline misses (empty unless the run called
+    /// [`Metrics::track_deadlines`]).
+    pub deadline_misses: Vec<u64>,
+    /// Per-class p99 response time in seconds (empty unless deadline
+    /// tracking was on; bucket-edge resolution, see
+    /// [`crate::coordinator::LatencyHistogram::quantile_s`]).
+    pub p99_by_class: Vec<f64>,
     k: usize,
     l: usize,
 }
@@ -127,6 +178,32 @@ impl SimResult {
             return 0.0;
         }
         self.completions_by_cell[i * self.l + j] as f64 / row as f64
+    }
+
+    /// Measured completions of class `i` (row sum of the cell counts).
+    pub fn class_completions(&self, i: usize) -> u64 {
+        (0..self.l).map(|j| self.completions_by_cell[i * self.l + j]).sum()
+    }
+
+    /// Class-i throughput X_i = class completions / elapsed — the
+    /// per-tier signal the priority subsystem optimizes.  Derived as
+    /// X · (class share of completions), so it needs no extra state.
+    pub fn class_throughput(&self, i: usize) -> f64 {
+        if self.completed == 0 {
+            return 0.0;
+        }
+        self.throughput * self.class_completions(i) as f64 / self.completed as f64
+    }
+
+    /// Fraction of class-i completions that missed the class's soft
+    /// deadline; 0 when the class has no deadline, deadline tracking
+    /// was off, or nothing of the class completed.
+    pub fn deadline_miss_rate(&self, i: usize) -> f64 {
+        let total = self.class_completions(i);
+        match self.deadline_misses.get(i) {
+            Some(&m) if total > 0 => m as f64 / total as f64,
+            _ => 0.0,
+        }
     }
 
     /// Little's-Law residual |X·E[T] − N| / N.
@@ -189,5 +266,36 @@ mod tests {
         let r = Metrics::new(1, 1, 0.0).finalize(5);
         assert_eq!(r.throughput, 0.0);
         assert_eq!(r.completed, 0);
+        // Deadline accounting is opt-in: off by default.
+        assert!(r.deadline_misses.is_empty());
+        assert_eq!(r.deadline_miss_rate(0), 0.0);
+    }
+
+    #[test]
+    fn deadline_tracking_counts_misses_per_class() {
+        let mut m = Metrics::new(2, 2, 0.0);
+        // Class 0 deadline 1.0 s; class 1 has none (0 = untracked).
+        m.track_deadlines(&[1.0, 0.0]);
+        m.record(1.0, 0.5, 0.0, 0, 0); // hit
+        m.record(2.0, 1.5, 0.0, 0, 0); // miss
+        m.record(3.0, 2.5, 0.0, 0, 1); // miss
+        m.record(4.0, 9.0, 0.0, 1, 1); // class 1: never a miss
+        let r = m.finalize(4);
+        assert_eq!(r.deadline_misses, vec![2, 0]);
+        assert!((r.deadline_miss_rate(0) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(r.deadline_miss_rate(1), 0.0);
+        assert_eq!(r.class_completions(0), 3);
+        assert_eq!(r.class_completions(1), 1);
+        // Per-class X splits total X by completion share.
+        assert!((r.class_throughput(0) - r.throughput * 0.75).abs() < 1e-12);
+        // p99 histograms bracket the recorded responses (log buckets).
+        assert_eq!(r.p99_by_class.len(), 2);
+        assert!(r.p99_by_class[0] >= 2.5 && r.p99_by_class[0] <= 5.1);
+        // reset clears the tracking state back to off.
+        m.reset(2, 2, 0.0);
+        m.record(1.0, 3.0, 0.0, 0, 0);
+        let r = m.finalize(4);
+        assert!(r.deadline_misses.is_empty());
+        assert!(r.p99_by_class.is_empty());
     }
 }

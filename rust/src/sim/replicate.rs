@@ -220,6 +220,13 @@ pub struct DynCellStats {
     pub ci95_x: f64,
     /// Mean re-solve count per replication.
     pub mean_resolves: f64,
+    /// Mean per-class throughput across replications (completion-
+    /// weighted within each run, [`DynamicReport::class_throughput`]) —
+    /// the per-tier signal of the priority subsystem.
+    pub mean_class_x: Vec<f64>,
+    /// Mean per-class deadline-miss rate across replications (all zero
+    /// when the cell configures no deadlines).
+    pub mean_miss_rate: Vec<f64>,
 }
 
 /// Fan R seeded replications of each dynamic cell across the worker
@@ -234,23 +241,37 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
     let jobs: Vec<(usize, u32)> = (0..cells.len())
         .flat_map(|c| (0..plan.reps).map(move |r| (c, r)))
         .collect();
-    let runs: Vec<Result<(f64, u64)>> = parallel_map(&jobs, plan.threads, |_, &(c, r)| {
+    type RunStats = (f64, u64, Vec<f64>, Vec<f64>);
+    let runs: Vec<Result<RunStats>> = parallel_map(&jobs, plan.threads, |_, &(c, r)| {
         let cell = &cells[c];
         let mut cfg = cell.cfg.clone();
         cfg.seed = rep_seed(plan.base_seed, cell.cfg.seed, c, r);
         let mut policy = cell.policy.build();
-        run_dynamic_report(&cell.mu, &cfg, policy.as_mut())
-            .map(|report| (report.mean_throughput(), report.resolves))
+        run_dynamic_report(&cell.mu, &cfg, policy.as_mut()).map(|report| {
+            let k = cell.mu.types();
+            let class_x: Vec<f64> = (0..k).map(|i| report.class_throughput(i)).collect();
+            let miss: Vec<f64> = (0..k).map(|i| report.deadline_miss_rate(i)).collect();
+            (report.mean_throughput(), report.resolves, class_x, miss)
+        })
     });
     let mut it = runs.into_iter();
     let mut out = Vec::with_capacity(cells.len());
     for cell in cells {
+        let k = cell.mu.types();
         let mut xs = Vec::with_capacity(reps);
         let mut resolve_total = 0u64;
+        let mut class_x_sum = vec![0.0f64; k];
+        let mut miss_sum = vec![0.0f64; k];
         for _ in 0..reps {
-            let (x, resolves) = it.next().expect("one slot per job")?;
+            let (x, resolves, class_x, miss) = it.next().expect("one slot per job")?;
             xs.push(x);
             resolve_total += resolves;
+            for (acc, v) in class_x_sum.iter_mut().zip(&class_x) {
+                *acc += v;
+            }
+            for (acc, v) in miss_sum.iter_mut().zip(&miss) {
+                *acc += v;
+            }
         }
         let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
         out.push(DynCellStats {
@@ -260,6 +281,8 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
             sd_x,
             ci95_x,
             mean_resolves: resolve_total as f64 / reps as f64,
+            mean_class_x: class_x_sum.iter().map(|s| s / reps as f64).collect(),
+            mean_miss_rate: miss_sum.iter().map(|s| s / reps as f64).collect(),
         });
     }
     Ok(out)
@@ -451,6 +474,12 @@ mod tests {
             assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits(), "{}", a.label);
             assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits(), "{}", a.label);
             assert!(a.mean_x > 0.0);
+            // The per-class aggregates are slot-ordered too.
+            assert_eq!(a.mean_class_x.len(), 2);
+            for (ax, bx) in a.mean_class_x.iter().zip(&b.mean_class_x) {
+                assert_eq!(ax.to_bits(), bx.to_bits(), "{}", a.label);
+            }
+            assert!(a.mean_miss_rate.iter().all(|&m| m == 0.0));
         }
         assert!(run_dynamic_cells(&[], &mk(1)).is_err());
     }

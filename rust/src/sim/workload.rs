@@ -81,6 +81,18 @@ pub fn three_class_flip_scale() -> Vec<f64> {
     vec![0.1, 1.0, 9.0, 1.0, 1.0, 1.0, 9.0, 1.0, 0.1]
 }
 
+/// The contended-fast-device system of the priority experiments: both
+/// task classes are fastest on P1 (class 1 marginally faster, so the
+/// unweighted GrIn optimum crowds the low-priority majority onto it and
+/// dilutes class 0), while P2 is a reasonable home for class 1
+/// (μ = 16) but a terrible one for class 0 (μ = 3.5).  A 4:1
+/// priority-weighted solve reserves P1 for class 0 at a ~1–3% total-X
+/// cost — the trade `tests/priority_e2e.rs` and
+/// `benches/ablation_priority.rs` quantify.
+pub fn priority_mu() -> AffinityMatrix {
+    AffinityMatrix::two_type(30.0, 3.5, 31.0, 16.0).expect("static matrix")
+}
+
 /// A random k×l system: μ entries uniform in [lo, hi).
 pub fn random_mu(rng: &mut Rng, k: usize, l: usize, lo: f64, hi: f64) -> Result<AffinityMatrix> {
     let rows: Vec<Vec<f64>> = (0..k)
@@ -113,6 +125,13 @@ pub enum ScenarioKind {
     /// and false-alarm measurements are made on (`slow_drift` is the
     /// matched gradual control).
     AbruptFlip,
+    /// Two priority tiers whose offered load flips mid-run: the first
+    /// half of the schedule runs the high-priority class (class 0) at
+    /// the `low_eta` share of N, the second half at `high_eta` — the
+    /// canned workload of the priority/deadline experiments (rates held
+    /// fixed; pair with [`priority_mu`] and `DynamicConfig::priorities`
+    /// so the weighted solve has a fast device to reserve).
+    PriorityMix,
 }
 
 impl ScenarioKind {
@@ -123,8 +142,10 @@ impl ScenarioKind {
             "burst" => Ok(ScenarioKind::Burst),
             "slow_drift" | "drift" => Ok(ScenarioKind::SlowDrift),
             "abrupt_flip" | "flip" => Ok(ScenarioKind::AbruptFlip),
+            "priority_mix" | "priority" => Ok(ScenarioKind::PriorityMix),
             other => Err(Error::Parse(format!(
-                "unknown scenario '{other}' (phase_shift|burst|slow_drift|abrupt_flip)"
+                "unknown scenario '{other}' \
+                 (phase_shift|burst|slow_drift|abrupt_flip|priority_mix)"
             ))),
         }
     }
@@ -136,16 +157,18 @@ impl ScenarioKind {
             ScenarioKind::Burst => "burst",
             ScenarioKind::SlowDrift => "slow_drift",
             ScenarioKind::AbruptFlip => "abrupt_flip",
+            ScenarioKind::PriorityMix => "priority_mix",
         }
     }
 
     /// All canned regimes.
-    pub fn all() -> [ScenarioKind; 4] {
+    pub fn all() -> [ScenarioKind; 5] {
         [
             ScenarioKind::PhaseShift,
             ScenarioKind::Burst,
             ScenarioKind::SlowDrift,
             ScenarioKind::AbruptFlip,
+            ScenarioKind::PriorityMix,
         ]
     }
 }
@@ -263,6 +286,25 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
                     } else {
                         ph.with_mu_scale(p.drift_to.clone())
                     }
+                })
+                .collect()
+        }
+        ScenarioKind::PriorityMix => {
+            if p.phases < 2 {
+                return Err(Error::Config(
+                    "priority_mix needs ≥ 2 phases (one per load tier)".into(),
+                ));
+            }
+            // First half: the high-priority class is the minority
+            // (low_eta share); second half it flips to the majority.
+            // Rates never change — the interesting axis is who owns the
+            // contended fast device as the tiers' offered load swaps.
+            let flip = p.phases / 2;
+            (0..p.phases)
+                .map(|i| {
+                    let eta = if i < flip { p.low_eta } else { p.high_eta };
+                    let (n1, n2) = split_populations(p.n, eta);
+                    Phase::new(vec![n1, n2], p.warmup, p.completions)
                 })
                 .collect()
         }
@@ -436,6 +478,26 @@ mod tests {
     }
 
     #[test]
+    fn priority_mix_flips_offered_load_mid_run() {
+        let p = ScenarioParams::default();
+        let phases = scenario_phases(ScenarioKind::PriorityMix, &p).unwrap();
+        assert_eq!(phases.len(), 6);
+        let (lo1, lo2) = split_populations(20, 0.2);
+        let (hi1, hi2) = split_populations(20, 0.8);
+        // First half: class 0 is the minority tier; second half the
+        // majority.  Rates and distributions never change.
+        for (i, ph) in phases.iter().enumerate() {
+            let want = if i < 3 { vec![lo1, lo2] } else { vec![hi1, hi2] };
+            assert_eq!(ph.populations, want, "phase {i}");
+            assert!(ph.mu_scale.is_empty() && ph.dist.is_none());
+        }
+        // The companion matrix is the contended-fast-device system:
+        // class 1 is (marginally) faster everywhere, so the unweighted
+        // optimum is accelerate-the-fastest and crowds P1.
+        assert_eq!(priority_mu().classify().unwrap(), Regime::P2Biased);
+    }
+
+    #[test]
     fn scenario_validation_rejects_bad_params() {
         let ok = ScenarioParams::default();
         let cases: Vec<(ScenarioKind, ScenarioParams)> = vec![
@@ -451,6 +513,7 @@ mod tests {
             (ScenarioKind::SlowDrift, ScenarioParams { drift_to: vec![-1.0], ..ok.clone() }),
             (ScenarioKind::AbruptFlip, ScenarioParams { phases: 1, ..ok.clone() }),
             (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![], ..ok.clone() }),
+            (ScenarioKind::PriorityMix, ScenarioParams { phases: 1, ..ok.clone() }),
             (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![0.0], ..ok }),
         ];
         for (kind, p) in cases {

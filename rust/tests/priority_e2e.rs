@@ -1,0 +1,198 @@
+//! Priority/deadline subsystem end-to-end gates.
+//!
+//! The canned `priority_mix` scenario runs two priority tiers whose
+//! offered load flips mid-run over the contended-fast-device matrix
+//! ([`workload::priority_mu`]): both classes prefer P1, so the
+//! unweighted optimum crowds the low-priority majority onto it and
+//! dilutes the high-priority class, while the 4:1 weighted solve
+//! reserves P1 — at a small, bounded total-throughput cost.  Gates:
+//!
+//! * equal-priority weighted solve ≡ unweighted solve (≤ 1e-9);
+//! * weighted evaluator ≡ unweighted evaluator at unit weights across
+//!   random k×l instances;
+//! * on the flip scenario, priority-aware adaptive ≥ 1.15× the
+//!   high-priority-class throughput of unweighted adaptive at ≤ 5%
+//!   total-throughput cost — in both single-leader and sharded modes;
+//! * high-priority deadline-miss rate strictly below unweighted;
+//! * the priority arm replicates bit-identically across thread counts.
+
+use hetsched::model::affinity::AffinityMatrix;
+use hetsched::model::state::StateMatrix;
+use hetsched::model::throughput::{x_of_state, IncrementalX, WeightedIncrementalX};
+use hetsched::policy::grin;
+use hetsched::policy::PolicyKind;
+use hetsched::sim::dynamic::{
+    run_dynamic_report, DynamicConfig, DynamicReport, ResolveMode,
+};
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload::{self, scenario_phases, ScenarioKind, ScenarioParams};
+
+/// The gate scenario: 4 phases of the canned priority_mix flip
+/// ((4, 16) → (16, 4) at the midpoint) with a 1-second soft deadline on
+/// the high-priority class.  The drift threshold is raised so estimator
+/// sampling noise cannot flap either arm's target mid-comparison — the
+/// axis under test is the weighting, not the change detector.
+fn gate_cfg(resolve: ResolveMode, priorities: Vec<u32>) -> DynamicConfig {
+    let params = ScenarioParams {
+        phases: 4,
+        completions: 4_000,
+        warmup: 400,
+        ..Default::default()
+    };
+    let mut cfg =
+        DynamicConfig::new(scenario_phases(ScenarioKind::PriorityMix, &params).unwrap());
+    cfg.resolve = resolve;
+    cfg.seed = 0x9817;
+    cfg.drift.threshold = 0.4;
+    cfg.shard.shards = 2;
+    cfg.shard.sync_every = 250;
+    cfg.priorities = priorities;
+    cfg.deadlines = vec![1.0, 0.0];
+    cfg
+}
+
+fn run_gate(resolve: ResolveMode, priorities: Vec<u32>) -> DynamicReport {
+    let mu = workload::priority_mu();
+    let cfg = gate_cfg(resolve, priorities);
+    let mut policy = PolicyKind::GrIn.build();
+    run_dynamic_report(&mu, &cfg, policy.as_mut()).unwrap()
+}
+
+/// Weighted vs unweighted gates for one resolve mode.
+fn assert_priority_gates(resolve: ResolveMode, label: &str) {
+    let unweighted = run_gate(resolve, Vec::new());
+    let weighted = run_gate(resolve, vec![4, 1]);
+    let (ux, wx) = (unweighted.mean_throughput(), weighted.mean_throughput());
+    let (u0, w0) = (unweighted.class_throughput(0), weighted.class_throughput(0));
+    assert!(
+        w0 >= 1.15 * u0,
+        "{label}: high-priority X {w0:.3} < 1.15× unweighted {u0:.3}"
+    );
+    assert!(
+        wx >= 0.95 * ux,
+        "{label}: total X {wx:.3} costs more than 5% of unweighted {ux:.3}"
+    );
+    let (um, wm) = (
+        unweighted.deadline_miss_rate(0),
+        weighted.deadline_miss_rate(0),
+    );
+    assert!(
+        wm < um,
+        "{label}: weighted miss rate {wm:.4} not strictly below unweighted {um:.4}"
+    );
+    // The low-priority class pays, but keeps flowing.
+    assert!(weighted.class_throughput(1) > 0.0);
+}
+
+#[test]
+fn equal_priority_weighted_solve_matches_unweighted_within_1e9() {
+    // Random k×l instances: with all priorities equal (any absolute
+    // level) and full confidence, the weighted solve is the unweighted
+    // solve — state for state, within 1e-9 on throughput.
+    let mut rng = Rng::new(0x0E9A);
+    for _ in 0..40 {
+        let k = 2 + rng.index(3);
+        let l = 2 + rng.index(3);
+        let rows: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+            .collect();
+        let mu = AffinityMatrix::from_rows(&rows).unwrap();
+        let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(10) as u32).collect();
+        let pri = vec![1 + rng.below(6) as u32; k];
+        let weights = grin::priority_weights(&pri, &vec![1.0; k * l], l).unwrap();
+        let plain = grin::solve(&mu, &pops).unwrap();
+        let weighted = grin::solve_weighted(&mu, &pops, &weights).unwrap();
+        assert!(
+            (plain.throughput - weighted.throughput).abs() < 1e-9,
+            "weighted {} vs unweighted {} on a {k}x{l} instance",
+            weighted.throughput,
+            plain.throughput
+        );
+        assert_eq!(plain.state, weighted.state);
+    }
+}
+
+#[test]
+fn weighted_evaluator_matches_incremental_x_at_unit_weights() {
+    // WeightedIncrementalX with all-ones weights must agree with
+    // IncrementalX within 1e-9 (bitwise, in fact) on X and on every
+    // move delta, across random k×l instances and random states.
+    let mut rng = Rng::new(0x11AC);
+    for _ in 0..40 {
+        let k = 2 + rng.index(3);
+        let l = 2 + rng.index(4);
+        let rows: Vec<Vec<f64>> = (0..k)
+            .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+            .collect();
+        let mu = AffinityMatrix::from_rows(&rows).unwrap();
+        let mut n = StateMatrix::zeros(k, l);
+        for i in 0..k {
+            for j in 0..l {
+                n.set(i, j, rng.below(5) as u32);
+            }
+        }
+        let inc = IncrementalX::new(&mu, &n);
+        let w = WeightedIncrementalX::new(&mu, &n, &vec![1.0; k * l]).unwrap();
+        assert!((w.x() - inc.x()).abs() < 1e-9);
+        assert!((w.x() - x_of_state(&mu, &n)).abs() < 1e-9);
+        let mut wp = vec![0.0f64; l];
+        let mut up = vec![0.0f64; l];
+        for p in 0..k {
+            w.delta_plus_row(p, &mut wp);
+            inc.delta_plus_row(p, &mut up);
+            for j in 0..l {
+                assert!((wp[j] - up[j]).abs() < 1e-9, "Δ+ row {p} col {j}");
+                assert!((w.delta_plus(p, j) - inc.delta_plus(p, j)).abs() < 1e-9);
+                if n.get(p, j) > 0 {
+                    assert!((w.delta_minus(p, j) - inc.delta_minus(p, j)).abs() < 1e-9);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_mix_single_leader_beats_unweighted_for_the_high_class() {
+    assert_priority_gates(ResolveMode::Adaptive, "single-leader adaptive");
+}
+
+#[test]
+fn priority_mix_sharded_beats_unweighted_for_the_high_class() {
+    assert_priority_gates(ResolveMode::Sharded, "sharded");
+}
+
+#[test]
+fn priority_arm_replicates_bit_identically_across_thread_counts() {
+    // The priority-aware arm through the replication runner: R seeded
+    // replications at 1 vs 4 worker threads must agree bit for bit on
+    // every aggregate, per-class stats included.
+    let cells = vec![DynCell {
+        label: "priority".to_string(),
+        mu: workload::priority_mu(),
+        cfg: {
+            let mut cfg = gate_cfg(ResolveMode::Adaptive, vec![4, 1]);
+            // Replication-sized runs: the property is determinism, not
+            // throughput quality.
+            for ph in &mut cfg.phases {
+                ph.completions = 600;
+                ph.warmup = 60;
+            }
+            cfg
+        },
+        policy: PolicyKind::GrIn,
+    }];
+    let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 0xBEE };
+    let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+    let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+    let (a, b) = (&one[0], &four[0]);
+    assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits());
+    assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits());
+    for (x, y) in a.mean_class_x.iter().zip(&b.mean_class_x) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in a.mean_miss_rate.iter().zip(&b.mean_miss_rate) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert!(a.mean_x > 0.0 && a.mean_class_x[0] > 0.0);
+}

@@ -181,6 +181,68 @@ fn sharded_serving_covers_the_fleet_and_reports_mu_hat() {
 }
 
 #[test]
+fn priority_weighted_serving_reports_class_accounting() {
+    // Priority-weighted GrIn serving on the native backend: every
+    // request completes, both classes are accounted, and the deadline
+    // counters obey their definitions (a 0 deadline never misses; an
+    // absurdly generous one never misses either).
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        total: 120,
+        inflight: 8,
+        adaptive: true,
+        resolve_check: 32,
+        priorities: vec![4, 1],
+        deadlines: vec![3600.0, 0.0],
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 120);
+    assert_eq!(r.class_served[0] + r.class_served[1], 120);
+    assert!(r.class_served[0] > 0 && r.class_served[1] > 0);
+    // nn has no deadline (0) and sort's is an hour: zero misses.
+    assert_eq!(r.deadline_misses, [0, 0]);
+    assert_eq!(r.deadline_miss_rate(0), 0.0);
+    // A microscopic (but non-zero) deadline flags everything for the
+    // class that carries it.
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        total: 120,
+        inflight: 8,
+        priorities: vec![4, 1],
+        deadlines: vec![1e-9, 0.0],
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.deadline_misses[0], r.class_served[0]);
+    assert_eq!(r.deadline_misses[1], 0);
+    assert!(r.deadline_miss_rate(0) > 0.99);
+}
+
+#[test]
+fn sharded_priority_serving_runs_end_to_end() {
+    // Priorities through the sharded plane: set_priorities installs the
+    // weighted targets at boot and every request still completes.
+    let cfg = ServeConfig {
+        policy: PolicyKind::GrIn,
+        devices: 4,
+        shards: 2,
+        total: 160,
+        inflight: 12,
+        sync_every: 48,
+        priorities: vec![4, 1],
+        deadlines: vec![0.25, 0.5],
+        ..Default::default()
+    };
+    let r = Coordinator::run(&cfg).unwrap();
+    assert_eq!(r.served, 160);
+    assert_eq!(r.class_served[0] + r.class_served[1], 160);
+    // Misses are bounded by what each class served.
+    assert!(r.deadline_misses[0] <= r.class_served[0]);
+    assert!(r.deadline_misses[1] <= r.class_served[1]);
+}
+
+#[test]
 fn all_policies_drive_the_server() {
     if !have_artifacts() {
         return;
