@@ -11,7 +11,10 @@ use std::time::Instant;
 
 use hetsched::model::affinity::Regime;
 use hetsched::model::throughput::x_max_theoretical;
-use hetsched::policy::{cab::Cab, grin, target::TargetSteering, Policy, PolicyKind, SystemView};
+use hetsched::policy::{
+    cab::Cab, grin, target::TargetSteering, Policy, PolicyKind, PreparedTarget, SolveRequest,
+    SystemView,
+};
 use hetsched::report::Table;
 use hetsched::sim::distribution::Distribution;
 use hetsched::sim::dynamic::{run_dynamic, DynamicConfig, Phase};
@@ -30,16 +33,13 @@ impl Policy for FrozenCab {
         "CAB-frozen"
     }
 
-    fn prepare(
-        &mut self,
-        mu: &hetsched::model::affinity::AffinityMatrix,
-        populations: &[u32],
-    ) -> hetsched::Result<()> {
+    fn prepare(&mut self, req: &SolveRequest<'_>) -> hetsched::Result<PreparedTarget> {
+        req.ensure_baseline(self.name())?;
         if self.steering.is_none() {
-            let (_, target) = Cab::target_state(mu, populations)?;
+            let (_, target) = Cab::target_state(req.mu, req.populations)?;
             self.steering = Some(TargetSteering::new(target));
         }
-        Ok(())
+        Ok(PreparedTarget::default())
     }
 
     fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {

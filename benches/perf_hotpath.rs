@@ -15,7 +15,7 @@ use std::time::Instant;
 use hetsched::cli::Args;
 use hetsched::config::json::Json;
 use hetsched::model::throughput::{x_of_state, IncrementalX};
-use hetsched::policy::{grin, PolicyKind, SystemView};
+use hetsched::policy::{grin, PolicyKind, SolveRequest, SystemView};
 use hetsched::report::{Stopwatch, Table};
 use hetsched::sim::distribution::Distribution;
 use hetsched::sim::engine::{ClosedNetwork, SimConfig};
@@ -109,7 +109,7 @@ fn main() {
     let mut rng = Rng::new(1);
     for kind in PolicyKind::five_two_type() {
         let mut p = kind.build();
-        p.prepare(&mu, &pops).unwrap();
+        p.prepare(&SolveRequest::new(&mu, &pops)).unwrap();
         let view = SystemView { mu: &mu, state: &state, work: &work, populations: &pops };
         let n = scale(2_000_000, 200_000);
         let t0 = Instant::now();

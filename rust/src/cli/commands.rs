@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! hetsched simulate  --config spec.json | --policy cab --eta 0.5 ...
+//!                    [--objective energy --power-scenario exponent:0.5
+//!                     --power-coeff k --idle-power f]
 //! hetsched sweep     --dist exp --n 20 [--policies cab,bf,rd,jsq,lb]
 //!                    [--reps 16 --threads 0 --quick --json out.json]
 //! hetsched solve     --mu "20,15;3,8" --populations 10,10 [--solver grin]
@@ -9,11 +11,13 @@
 //!                    [--resolve sharded --shards N --sync-every M]
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //!                    [--priorities 4,1 --deadlines 1.0,0 --threads T]
+//!                    [--objective energy|edp|tpw:0.9 --power-scenario S]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //!                    [--devices L --shards N --sync-every M]
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //!                    [--priorities 4,1 --deadlines 0.05,0.1]
+//!                    [--objective energy|edp|tpw:0.9 --power-scenario S]
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
@@ -21,6 +25,8 @@ use crate::config::schema::{ExperimentSpec, ScenarioSpec};
 use crate::coordinator::{Coordinator, ServeConfig};
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::energy::PowerScenario;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::throughput::{x_max_theoretical, x_of_state};
 use crate::platform::bench_rig::{cases, run_platform, PlatformConfig};
 use crate::platform::measure_rates;
@@ -32,7 +38,57 @@ use crate::sim::workload;
 use crate::solver::exhaustive::ExhaustiveSolver;
 use crate::solver::slsqp::Slsqp;
 
-use super::parser::Args;
+use super::parser::{Args, Knob, Knobs};
+
+/// The declarative knob registry: every conditionally-valid flag is
+/// declared once, bound to the capability that makes it meaningful.
+/// Commands build a [`Knobs`] view over this table and enable the
+/// capabilities of the current invocation; a flag whose capability is
+/// disabled stays unconsumed, so [`Args::finish`] produces the exact
+/// unknown-flag error the old hand-rolled per-command gating did.
+const KNOBS: &[Knob] = &[
+    // Objective/power axis: needs a solve that can score it.
+    Knob { flag: "objective", cap: "objective" },
+    Knob { flag: "power-scenario", cap: "objective" },
+    Knob { flag: "power-coeff", cap: "objective" },
+    Knob { flag: "idle-power", cap: "objective" },
+    // Change detection: only the estimating resolve/serve loops.
+    Knob { flag: "trigger", cap: "estimating" },
+    Knob { flag: "stale-after", cap: "estimating" },
+    // CUSUM tuning: only when a CUSUM arm runs.
+    Knob { flag: "cusum-h", cap: "cusum" },
+    Knob { flag: "cusum-delta", cap: "cusum" },
+    // Sharded control plane.
+    Knob { flag: "shards", cap: "sharded" },
+    Knob { flag: "sync-every", cap: "sharded" },
+    // Priority weighting: needs a weighted-GrIn consumer.
+    Knob { flag: "priorities", cap: "weighted" },
+    // Replication fan-out of `scenario --compare`.
+    Knob { flag: "reps", cap: "compare" },
+    Knob { flag: "threads", cap: "compare" },
+];
+
+/// Read the four energy knobs (`--objective`, `--power-scenario`,
+/// `--power-coeff`, `--idle-power`) through a gated [`Knobs`] view and
+/// validate the result.  When the view's "objective" capability is
+/// disabled every knob reads as its default — and a stray flag surfaces
+/// through `finish()`.
+fn parse_power_knobs(knobs: &Knobs<'_>) -> Result<(Objective, PowerProfile)> {
+    let objective = match knobs.get("objective") {
+        Some(name) => Objective::parse(name)?,
+        None => Objective::Throughput,
+    };
+    let scenario = match knobs.get("power-scenario") {
+        Some(name) => PowerScenario::parse(name)?,
+        None => PowerScenario::Proportional,
+    };
+    let coeff: f64 = knobs.get_parse("power-coeff", 1.0)?;
+    let idle: f64 = knobs.get_parse("idle-power", 0.0)?;
+    let profile = PowerProfile::new(coeff, scenario).with_idle(idle);
+    profile.validate()?;
+    objective.validate()?;
+    Ok((objective, profile))
+}
 
 /// Top-level usage text.
 pub const USAGE: &str = "\
@@ -41,7 +97,12 @@ hetsched — task scheduling for heterogeneous multicore systems (CAB + GrIn)
 USAGE: hetsched <COMMAND> [FLAGS]
 
 COMMANDS:
-  simulate   run one closed-network simulation (JSON spec or flags)
+  simulate   run one closed-network simulation (JSON spec or flags;
+             --objective energy|edp|tpw:<frac> switches the GrIn solve
+             off the throughput axis, --power-scenario
+             constant|proportional|exponent:<alpha> with --power-coeff k
+             sets the 𝒫 = k·μ^α model and --idle-power f adds a
+             per-processor idle floor)
   sweep      η-sweep of all policies (the Figs. 4–7 experiment) with R
              seeded replications per cell fanned across cores; reports
              mean X ± 95% CI (--reps, --threads, --quick, --json FILE
@@ -50,14 +111,17 @@ COMMANDS:
   scenario   run a non-stationary scenario (phase_shift | burst |
              slow_drift | abrupt_flip | priority_mix) under a resolve
              mode (static | every_phase | adaptive | sharded), or
-             --compare all modes side by side plus CUSUM-triggered and
-             priority-weighted adaptive arms
+             --compare all modes side by side plus CUSUM-triggered,
+             priority-weighted and energy-objective adaptive arms
              (--reps/--threads replicate each arm; --shards/--sync-every
              tune the sharded control plane; --trigger threshold|cusum
              with --cusum-h/--cusum-delta picks the change detector,
              --stale-after tunes stale-cell demotion; --priorities a,b
              weights the GrIn solve per class, --deadlines x,y adds
-             soft-deadline miss accounting, 0 = none)
+             soft-deadline miss accounting, 0 = none; --objective
+             energy|edp|tpw:<frac> re-aims the GrIn solve with
+             --power-scenario/--power-coeff/--idle-power setting the
+             power model)
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
   serve      run the serving coordinator demo (--adaptive for live
@@ -65,7 +129,9 @@ COMMANDS:
              change-point-triggered re-solves; --devices L --shards N
              for the sharded multi-leader plane; --priorities a,b for
              priority-weighted GrIn serving, --deadlines x,y for
-             per-class latency-deadline miss rates)
+             per-class latency-deadline miss rates; --objective
+             energy|edp|tpw:<frac> re-aims the GrIn-backed solve, with
+             --power-scenario/--power-coeff/--idle-power as in simulate)
   help       show this text
 
 Run `hetsched <COMMAND> --help` for per-command flags.";
@@ -152,6 +218,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         sim.seed = args.get_parse("seed", sim.seed)?;
         sim.warmup = args.get_parse("warmup", sim.warmup)?;
         sim.measure = args.get_parse("measure", sim.measure)?;
+        // The energy knobs are always consumable here: metering applies
+        // under every policy, and a non-throughput --objective on a
+        // policy that cannot score it fails loudly at prepare time.
+        let mut knobs = args.knobs(KNOBS);
+        knobs.enable("objective");
+        let (objective, power) = parse_power_knobs(&knobs)?;
+        sim.objective = objective;
+        sim.power = power.scenario;
+        sim.power_coeff = power.coeff;
+        sim.idle_power = power.idle_power;
         ExperimentSpec { mu, policy, sim }
     };
     args.finish()?;
@@ -169,6 +245,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     t.row(vec!["EDP".into(), format!("{:.4}", r.edp)]);
     t.row(vec!["X·E[T] (≈N)".into(), format!("{:.4}", r.little_product)]);
     t.row(vec!["completions".into(), r.completed.to_string()]);
+    if !spec.sim.objective.is_throughput() {
+        t.row(vec!["objective".into(), spec.sim.objective.name().into()]);
+    }
     t.print();
     Ok(())
 }
@@ -264,6 +343,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                     ("mean_x_bits".to_string(), Json::Str(format!("{:016x}", s.mean_x.to_bits()))),
                     ("ci95_x".to_string(), Json::Num(s.ci95_x)),
                     ("ci95_x_bits".to_string(), Json::Str(format!("{:016x}", s.ci95_x.to_bits()))),
+                    ("mean_energy".to_string(), Json::Num(s.mean_energy)),
+                    (
+                        "mean_energy_bits".to_string(),
+                        Json::Str(format!("{:016x}", s.mean_energy.to_bits())),
+                    ),
+                    ("mean_edp".to_string(), Json::Num(s.mean_edp)),
+                    (
+                        "mean_edp_bits".to_string(),
+                        Json::Str(format!("{:016x}", s.mean_edp.to_bits())),
+                    ),
                 ])
             })
             .collect();
@@ -338,6 +427,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode, Trigger};
     use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
 
+    let compare = args.switch("compare");
+    let mut knobs = args.knobs(KNOBS);
     let (mu, policy, kind, dynamic) = if let Some(path) = args.get("config") {
         let spec = ScenarioSpec::from_file(path)?;
         (spec.mu, spec.policy, spec.kind, spec.dynamic)
@@ -373,52 +464,58 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         dynamic.seed = args.get_parse("seed", dynamic.seed)?;
         dynamic.drift.threshold = args.get_parse("drift-threshold", dynamic.drift.threshold)?;
         dynamic.drift.check_every = args.get_parse("check-every", dynamic.drift.check_every)?;
+        // The capability gating lives in the KNOBS registry: enable
+        // what this invocation supports and the gated lookups below
+        // leave everything else unconsumed, so `finish()` flags stray
+        // knobs instead of silently ignoring them.
+        //
         // The trigger and staleness knobs only drive the estimating
         // resolve modes (adaptive/sharded, or any --compare, which runs
-        // both); on static/every_phase they are left unconsumed so
-        // `finish()` flags them instead of silently ignoring them.
+        // both).
         let estimating = matches!(
             dynamic.resolve,
             ResolveMode::Adaptive | ResolveMode::Sharded
-        ) || args.switch("compare");
+        ) || compare;
+        knobs.enable_if(estimating, "estimating");
         if estimating {
             dynamic.drift.trigger =
-                Trigger::parse(args.get("trigger").unwrap_or("threshold"))?;
+                Trigger::parse(knobs.get("trigger").unwrap_or("threshold"))?;
             dynamic.drift.stale_after =
-                args.get_parse("stale-after", dynamic.drift.stale_after)?;
+                knobs.get_parse("stale-after", dynamic.drift.stale_after)?;
         }
         // Same rule, one level down, for the CUSUM knobs: they need a
         // CUSUM arm (--trigger cusum, or the --compare cusum arm).
-        if dynamic.drift.trigger == Trigger::Cusum || args.switch("compare") {
-            dynamic.drift.cusum_h = args.get_parse("cusum-h", dynamic.drift.cusum_h)?;
-            dynamic.drift.cusum_delta = args.get_parse("cusum-delta", dynamic.drift.cusum_delta)?;
-        }
+        knobs.enable_if(dynamic.drift.trigger == Trigger::Cusum || compare, "cusum");
+        dynamic.drift.cusum_h = knobs.get_parse("cusum-h", dynamic.drift.cusum_h)?;
+        dynamic.drift.cusum_delta =
+            knobs.get_parse("cusum-delta", dynamic.drift.cusum_delta)?;
         // Sharded knobs only apply when a sharded arm runs (--resolve
-        // sharded or --compare); otherwise leave them unconsumed so
-        // `finish()` flags them instead of silently ignoring them.
-        if dynamic.resolve == ResolveMode::Sharded || args.switch("compare") {
-            dynamic.shard.shards = args.get_parse("shards", dynamic.shard.shards)?;
-            dynamic.shard.sync_every =
-                args.get_parse("sync-every", dynamic.shard.sync_every)?;
-        }
-        // --priorities needs a consumer of the weighted GrIn solve —
-        // the GrIn policy (directly, or via the --compare priority arm,
-        // which only exists under GrIn), or a non-compare sharded run
-        // (the sharded plane always steers by batched GrIn; under
-        // --compare the sharded arm is deliberately unweighted).
-        // Anywhere else the flag stays unconsumed so `finish()` flags
-        // it instead of silently ignoring it.  The priority_mix
-        // scenario defaults to the 4:1 split its canned schedule is
-        // designed around.
-        let weighted_capable = policy == PolicyKind::GrIn
-            || (dynamic.resolve == ResolveMode::Sharded && !args.switch("compare"));
-        if weighted_capable {
+        // sharded or --compare).
+        knobs.enable_if(dynamic.resolve == ResolveMode::Sharded || compare, "sharded");
+        dynamic.shard.shards = knobs.get_parse("shards", dynamic.shard.shards)?;
+        dynamic.shard.sync_every =
+            knobs.get_parse("sync-every", dynamic.shard.sync_every)?;
+        // --priorities and the objective knobs need a consumer of the
+        // extended GrIn solve — the GrIn policy (directly, or via the
+        // --compare priority/energy arms, which only exist under GrIn),
+        // or a non-compare sharded run (the sharded plane always steers
+        // by batched GrIn; under --compare the sharded arm is
+        // deliberately plain).  The priority_mix scenario defaults to
+        // the 4:1 split its canned schedule is designed around.
+        let grin_backed = policy == PolicyKind::GrIn
+            || (dynamic.resolve == ResolveMode::Sharded && !compare);
+        knobs.enable_if(grin_backed, "weighted");
+        knobs.enable_if(grin_backed, "objective");
+        if grin_backed {
             let default_pri = if kind == ScenarioKind::PriorityMix { "4,1" } else { "" };
-            let text = args.get("priorities").unwrap_or(default_pri);
+            let text = knobs.get("priorities").unwrap_or(default_pri);
             if !text.is_empty() {
                 dynamic.priorities = parse_priorities(text)?;
             }
         }
+        let (objective, power) = parse_power_knobs(&knobs)?;
+        dynamic.objective = objective;
+        dynamic.power = power;
         // Deadlines are pure accounting and apply under every resolve
         // mode/policy.
         if let Some(text) = args.get("deadlines") {
@@ -426,12 +523,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         (mu, policy, kind, dynamic)
     };
-    let compare = args.switch("compare");
-    // Only meaningful with --compare: leaving them unconsumed otherwise
-    // lets `finish()` flag stray `--reps`/`--threads` instead of
-    // ignoring them.
-    let reps: u32 = if compare { args.get_parse("reps", 4u32)? } else { 4 };
-    let threads: usize = if compare { args.get_parse("threads", 0usize)? } else { 0 };
+    // Only meaningful with --compare: the registry leaves stray
+    // `--reps`/`--threads` unconsumed otherwise.
+    knobs.enable_if(compare, "compare");
+    let reps: u32 = knobs.get_parse("reps", 4u32)?;
+    let threads: usize = knobs.get_parse("threads", 0usize)?;
     args.finish()?;
 
     // The class whose throughput/miss lines are reported: the
@@ -441,59 +537,103 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         let top = pri.iter().copied().max().unwrap_or(0);
         pri.iter().position(|&p| p == top).unwrap_or(0)
     };
-    // (per-phase X, mean X, re-solves, per-class X, per-class miss rate)
-    type ArmResult = (Vec<f64>, f64, u64, Vec<f64>, Vec<f64>);
-    let run_arm =
-        |mode: ResolveMode, trigger: Trigger, priorities: Vec<u32>| -> Result<ArmResult> {
-            let mut cfg = dynamic.clone();
-            cfg.resolve = mode;
-            cfg.drift.trigger = trigger;
-            cfg.priorities = priorities;
-            let mut p = policy.build();
-            let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
-            let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
-            let k = mu.types();
-            Ok((
-                per_phase,
-                report.mean_throughput(),
-                report.resolves,
-                (0..k).map(|i| report.class_throughput(i)).collect(),
-                (0..k).map(|i| report.deadline_miss_rate(i)).collect(),
-            ))
-        };
+    // (per-phase X, mean X, re-solves, per-class X, per-class miss rate,
+    //  E[ℰ]/task, EDP)
+    type ArmResult = (Vec<f64>, f64, u64, Vec<f64>, Vec<f64>, f64, f64);
+    let run_arm = |mode: ResolveMode,
+                   trigger: Trigger,
+                   objective: Objective,
+                   priorities: Vec<u32>|
+     -> Result<ArmResult> {
+        let mut cfg = dynamic.clone();
+        cfg.resolve = mode;
+        cfg.drift.trigger = trigger;
+        cfg.objective = objective;
+        cfg.priorities = priorities;
+        let mut p = policy.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut())?;
+        let per_phase: Vec<f64> = report.phases.iter().map(|r| r.throughput).collect();
+        let k = mu.types();
+        Ok((
+            per_phase,
+            report.mean_throughput(),
+            report.resolves,
+            (0..k).map(|i| report.class_throughput(i)).collect(),
+            (0..k).map(|i| report.deadline_miss_rate(i)).collect(),
+            report.mean_energy(),
+            report.mean_edp(),
+        ))
+    };
 
     if compare {
-        // Six arms: the four resolve modes (adaptive under the polled
-        // threshold trigger), the CUSUM-triggered adaptive arm, and the
-        // priority-weighted adaptive arm (configured --priorities, or
-        // 4:1 by default); the sharded arm follows the configured
-        // --trigger.  Independent runs, fanned across cores through the
-        // replication runner's worker pool.
+        // The comparison arms: the four resolve modes (adaptive under
+        // the polled threshold trigger), the CUSUM-triggered adaptive
+        // arm, and — under GrIn — the priority-weighted and
+        // energy-objective adaptive arms; the sharded arm follows the
+        // configured --trigger.  Independent runs, fanned across cores
+        // through the replication runner's worker pool.
+        struct Arm {
+            mode: ResolveMode,
+            trigger: Trigger,
+            weighted: bool,
+            objective: Objective,
+            label: &'static str,
+        }
+        let arm = |mode, trigger, weighted, objective, label| Arm {
+            mode,
+            trigger,
+            weighted,
+            objective,
+            label,
+        };
         let arm_pri = if dynamic.priorities.is_empty() {
             vec![4, 1]
         } else {
             dynamic.priorities.clone()
         };
-        let mut arms: Vec<(ResolveMode, Trigger, bool, &str)> = vec![
-            (ResolveMode::Static, Trigger::Threshold, false, "static"),
-            (ResolveMode::EveryPhase, Trigger::Threshold, false, "every_phase"),
-            (ResolveMode::Adaptive, Trigger::Threshold, false, "adaptive"),
-            (ResolveMode::Adaptive, Trigger::Cusum, false, "cusum"),
-            (ResolveMode::Sharded, dynamic.drift.trigger, false, "sharded"),
+        let x = Objective::Throughput;
+        let mut arms: Vec<Arm> = vec![
+            arm(ResolveMode::Static, Trigger::Threshold, false, x, "static"),
+            arm(ResolveMode::EveryPhase, Trigger::Threshold, false, x, "every_phase"),
+            arm(ResolveMode::Adaptive, Trigger::Threshold, false, x, "adaptive"),
+            arm(ResolveMode::Adaptive, Trigger::Cusum, false, x, "cusum"),
+            arm(ResolveMode::Sharded, dynamic.drift.trigger, false, x, "sharded"),
         ];
-        // The weighted solve is a GrIn extension: under any other
-        // --policy the comparison stays at the five unweighted arms.
+        // The weighted solve and the objective axis are GrIn
+        // extensions: under any other --policy the comparison stays at
+        // the five plain arms.  An explicit --objective picks the
+        // energy arm's axis; plain --compare defaults it to
+        // energy-per-task.
         if policy == PolicyKind::GrIn {
-            arms.push((ResolveMode::Adaptive, Trigger::Threshold, true, "priority"));
+            arms.push(arm(ResolveMode::Adaptive, Trigger::Threshold, true, x, "priority"));
+            let energy_objective = if dynamic.objective.is_throughput() {
+                Objective::EnergyPerTask
+            } else {
+                dynamic.objective
+            };
+            arms.push(arm(
+                ResolveMode::Adaptive,
+                Trigger::Threshold,
+                false,
+                energy_objective,
+                "energy",
+            ));
         }
-        let results =
-            crate::sim::replicate::parallel_map(&arms, 0, |_, &(mode, trig, weighted, _)| {
-                run_arm(mode, trig, if weighted { arm_pri.clone() } else { Vec::new() })
-            })
-            .into_iter()
-            .collect::<Result<Vec<_>>>()?;
+        let results = crate::sim::replicate::parallel_map(&arms, 0, |_, a: &Arm| {
+            run_arm(
+                a.mode,
+                a.trigger,
+                a.objective,
+                if a.weighted { arm_pri.clone() } else { Vec::new() },
+            )
+        })
+        .into_iter()
+        .collect::<Result<Vec<_>>>()?;
+        // Label-addressed lookup: the optional GrIn arms keep their
+        // position only relative to the five fixed leading arms.
+        let pos = |label: &str| arms.iter().position(|a| a.label == label);
         let mut headers: Vec<&str> = vec!["phase"];
-        headers.extend(arms.iter().map(|&(_, _, _, label)| label));
+        headers.extend(arms.iter().map(|a| a.label));
         let mut t = Table::new(
             format!("scenario {} ({}): per-phase X by resolve mode", kind.name(), policy.name()),
             &headers,
@@ -510,7 +650,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         let resolve_list: Vec<String> = arms
             .iter()
             .zip(&results)
-            .map(|(&(_, _, _, label), r)| format!("{label} {}", r.2))
+            .map(|(a, r)| format!("{} {}", a.label, r.2))
             .collect();
         println!("re-solves: {}", resolve_list.join(" / "));
         let mut summary = format!(
@@ -519,15 +659,18 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             results[3].1 / results[0].1,
             results[4].1 / results[0].1,
         );
-        if let Some(pri) = results.get(5) {
+        if let Some(pri) = pos("priority").map(|i| &results[i]) {
             summary.push_str(&format!(", priority {:.2}x", pri.1 / results[0].1));
+        }
+        if let Some(en) = pos("energy").map(|i| &results[i]) {
+            summary.push_str(&format!(", energy {:.2}x", en.1 / results[0].1));
         }
         summary.push_str(&format!(
             " (oracle every_phase: {:.2}x)",
             results[1].1 / results[0].1
         ));
         println!("{summary}");
-        if let Some(pri) = results.get(5) {
+        if let Some(pri) = pos("priority").map(|i| &results[i]) {
             let h = hi_class(&arm_pri);
             let mut hi = format!(
                 "high-priority class (class {h}) X: priority {:.4} vs adaptive {:.4} \
@@ -546,20 +689,38 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             }
             println!("{hi}");
         }
+        if let Some(i) = pos("energy") {
+            // The energy arm trades throughput for joules: report both
+            // sides against the plain adaptive arm it forked from.
+            let (en, ad) = (&results[i], &results[2]);
+            println!(
+                "energy objective ({}): E[ℰ] {:.4}/task vs adaptive {:.4} ({:.2}x), \
+                 X {:.4} vs {:.4}, EDP {:.4} vs {:.4}",
+                arms[i].objective.name(),
+                en.5,
+                ad.5,
+                ad.5 / en.5.max(1e-12),
+                en.1,
+                ad.1,
+                en.6,
+                ad.6,
+            );
+        }
         if reps > 1 {
             // Replicated A/B: R seeded replications per arm through the
             // replication runner (thread-count-independent aggregates).
             use crate::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
             let cells: Vec<DynCell> = arms
                 .iter()
-                .map(|&(mode, trig, weighted, label)| {
+                .map(|a| {
                     let mut cfg = dynamic.clone();
-                    cfg.resolve = mode;
-                    cfg.drift.trigger = trig;
+                    cfg.resolve = a.mode;
+                    cfg.drift.trigger = a.trigger;
+                    cfg.objective = a.objective;
                     cfg.priorities =
-                        if weighted { arm_pri.clone() } else { Vec::new() };
+                        if a.weighted { arm_pri.clone() } else { Vec::new() };
                     DynCell {
-                        label: label.to_string(),
+                        label: a.label.to_string(),
                         mu: mu.clone(),
                         cfg,
                         policy,
@@ -576,6 +737,7 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             if with_miss {
                 headers.push(miss_col.as_str());
             }
+            headers.push("E[ℰ]/task");
             headers.push("re-solves/run");
             let mut t = Table::new(
                 format!("replicated comparison (R = {reps}, mean ± t-corrected 95% CI)"),
@@ -590,14 +752,19 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 if with_miss {
                     row.push(format!("{:.1}%", s.mean_miss_rate[h] * 100.0));
                 }
+                row.push(format!("{:.4}", s.mean_energy));
                 row.push(format!("{:.1}", s.mean_resolves));
                 t.row(row);
             }
             t.print();
         }
     } else {
-        let (per_phase, mean, resolves, class_x, class_miss) =
-            run_arm(dynamic.resolve, dynamic.drift.trigger, dynamic.priorities.clone())?;
+        let (per_phase, mean, resolves, class_x, class_miss, energy, edp) = run_arm(
+            dynamic.resolve,
+            dynamic.drift.trigger,
+            dynamic.objective,
+            dynamic.priorities.clone(),
+        )?;
         let mut t = Table::new(
             format!(
                 "scenario {} ({}, resolve {}, trigger {})",
@@ -617,6 +784,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         t.print();
         println!("mean X = {mean:.4} tasks/s, {resolves} re-solves");
+        if !dynamic.objective.is_throughput() {
+            println!(
+                "objective {}: E[ℰ] = {energy:.4}/task, EDP = {edp:.4}",
+                dynamic.objective.name()
+            );
+        }
         if !dynamic.priorities.is_empty() || !dynamic.deadlines.is_empty() {
             let h = hi_class(&dynamic.priorities);
             let mut line = format!("class-{h} X = {:.4} tasks/s", class_x[h]);
@@ -725,38 +898,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ));
     }
     let adaptive = args.switch("adaptive");
-    // The trigger and staleness knobs only drive the adaptive/sharded
-    // estimation loops; leaving the flags unconsumed otherwise lets
-    // `finish()` flag them instead of silently ignoring them.
-    let (trigger, stale_after) = if adaptive || shards > 1 {
-        (
-            crate::sim::dynamic::Trigger::parse(args.get("trigger").unwrap_or("threshold"))?,
-            args.get_parse("stale-after", d.stale_after)?,
-        )
-    } else {
-        (d.trigger, d.stale_after)
+    // Conditional knobs route through the KNOBS registry: --trigger and
+    // --stale-after only drive the adaptive/sharded estimation loops,
+    // the CUSUM pair needs a CUSUM trigger, and --priorities plus the
+    // objective knobs need the GrIn-backed solve (GrIn policy or the
+    // sharded plane, which always steers by batched GrIn).  A knob
+    // whose capability is off stays unconsumed, so `finish()` flags it
+    // instead of silently ignoring it.  --shards/--sync-every and
+    // --deadlines are unconditional here and bypass the registry.
+    let mut knobs = args.knobs(KNOBS);
+    knobs.enable_if(adaptive || shards > 1, "estimating");
+    let trigger = match knobs.get("trigger") {
+        Some(t) => crate::sim::dynamic::Trigger::parse(t)?,
+        None => d.trigger,
     };
-    let (cusum_delta, cusum_h) = if trigger == crate::sim::dynamic::Trigger::Cusum {
-        (
-            args.get_parse("cusum-delta", d.cusum_delta)?,
-            args.get_parse("cusum-h", d.cusum_h)?,
-        )
-    } else {
-        (d.cusum_delta, d.cusum_h)
+    let stale_after = knobs.get_parse("stale-after", d.stale_after)?;
+    knobs.enable_if(trigger == crate::sim::dynamic::Trigger::Cusum, "cusum");
+    let cusum_delta = knobs.get_parse("cusum-delta", d.cusum_delta)?;
+    let cusum_h = knobs.get_parse("cusum-h", d.cusum_h)?;
+    let grin_backed = policy == PolicyKind::GrIn || shards > 1;
+    knobs.enable_if(grin_backed, "weighted");
+    knobs.enable_if(grin_backed, "objective");
+    let priorities = match knobs.get("priorities") {
+        Some(text) => parse_priorities(text)?,
+        None => Vec::new(),
     };
-    // --priorities needs the weighted GrIn solve (GrIn policy or the
-    // sharded plane, which always steers by batched GrIn); elsewhere it
-    // stays unconsumed so `finish()` flags it instead of silently
-    // serving unweighted.  --deadlines is pure latency accounting and
-    // applies to every mode.
-    let priorities = if policy == PolicyKind::GrIn || shards > 1 {
-        match args.get("priorities") {
-            Some(text) => parse_priorities(text)?,
-            None => Vec::new(),
-        }
-    } else {
-        Vec::new()
-    };
+    let (objective, power) = parse_power_knobs(&knobs)?;
+    // --deadlines is pure latency accounting and applies to every mode.
     let deadlines = match args.get("deadlines") {
         Some(text) => parse_deadlines(text)?,
         None => Vec::new(),
@@ -779,6 +947,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sync_every: args.get_parse("sync-every", d.sync_every)?,
         priorities,
         deadlines,
+        objective,
+        power,
         ..d
     };
     args.finish()?;
@@ -817,6 +987,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     if !cfg.priorities.is_empty() {
         t.row(vec!["priorities [sort, nn]".into(), format!("{:?}", cfg.priorities)]);
+    }
+    if !cfg.objective.is_throughput() {
+        t.row(vec!["objective".into(), cfg.objective.name().into()]);
+        t.row(vec!["E[ℰ] (J/req)".into(), format!("{:.4}", r.mean_energy)]);
+        t.row(vec!["EDP".into(), format!("{:.4}", r.edp)]);
     }
     if !cfg.deadlines.is_empty() {
         t.row(vec![
@@ -1054,6 +1229,88 @@ mod tests {
         .unwrap();
         let msg = run(&args).unwrap_err().to_string();
         assert!(msg.contains("unknown flag"), "{msg}");
+    }
+
+    #[test]
+    fn objective_flags_gate_and_run_on_simulate_and_scenario() {
+        // simulate: the full energy-knob set threads through under GrIn.
+        let line = "simulate --policy grin --objective energy \
+                    --power-scenario exponent:0.5 --power-coeff 2.0 \
+                    --idle-power 0.5 --measure 300 --warmup 30";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // A bad objective name is a parse error, not an unknown flag.
+        let args = Args::parse(
+            "simulate --policy grin --objective vibes"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(!msg.contains("unknown flag"), "{msg}");
+        // scenario: the EDP objective drives an adaptive GrIn run.
+        let line = "scenario --kind slow_drift --policy grin --phases 3 \
+                    --completions 150 --warmup 20 --resolve adaptive \
+                    --objective edp --power-scenario exponent:0.5";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // scenario: --objective without a GrIn-backed solve is flagged
+        // as unknown, not silently ignored.
+        let args = Args::parse(
+            "scenario --kind burst --policy cab --phases 3 --completions 100 \
+             --warmup 10 --resolve every_phase --objective energy"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+    }
+
+    #[test]
+    fn scenario_compare_runs_the_energy_arm_under_grin() {
+        // --compare under GrIn adds the energy-objective arm; an
+        // explicit --objective picks its axis.
+        let line = "scenario --kind slow_drift --policy grin --phases 3 \
+                    --completions 120 --warmup 20 --n 8 --compare --reps 2 \
+                    --objective energy --power-scenario exponent:0.5";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // Under a non-GrIn policy there is no energy arm, so the
+        // objective knobs are flagged.
+        let args = Args::parse(
+            "scenario --kind burst --policy cab --phases 3 --completions 100 \
+             --warmup 10 --compare --reps 1 --power-coeff 2.0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+    }
+
+    #[test]
+    fn serve_objective_flags_gate_on_the_grin_backed_paths() {
+        // Default policy is CAB: the objective knobs are flagged.
+        let args = Args::parse(
+            "serve --total 10 --objective energy"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // On GrIn they are consumed: the error here is the total-0
+        // validation, not an unknown flag.
+        let args = Args::parse(
+            "serve --policy grin --objective edp --power-scenario constant \
+             --power-coeff 2.0 --total 0"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(!msg.contains("unknown flag"), "{msg}");
     }
 
     #[test]

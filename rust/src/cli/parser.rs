@@ -106,6 +106,11 @@ impl Args {
         }
     }
 
+    /// Build a capability-gated [`Knobs`] view over these arguments.
+    pub fn knobs<'a>(&'a self, table: &'static [Knob]) -> Knobs<'a> {
+        Knobs { args: self, table, caps: Vec::new() }
+    }
+
     /// Error on flags that were never consumed (typo protection),
     /// naming every offender at once so a multi-typo invocation is fixed
     /// in one round trip — and appending the flags the command *does*
@@ -138,6 +143,89 @@ impl Args {
             msg.push_str(&format!("; accepted flags: {}", known.join(", ")));
         }
         Err(Error::Config(msg))
+    }
+}
+
+/// One declared knob: a flag that is only meaningful when a named
+/// capability of the current invocation is enabled.
+#[derive(Debug, Clone, Copy)]
+pub struct Knob {
+    /// Flag name, without the `--` prefix.
+    pub flag: &'static str,
+    /// Capability that must be enabled for the flag to be consumable.
+    pub cap: &'static str,
+}
+
+/// Declarative, capability-gated view over [`Args`].
+///
+/// Commands declare each conditional knob once in a static [`Knob`]
+/// table, then enable the capabilities the current invocation actually
+/// supports (`--compare` runs a sharded arm, the GrIn policy consumes a
+/// weighted solve, …).  Lookups on a knob whose capability is disabled
+/// return the default *without consuming the flag*, so a stray use still
+/// surfaces through [`Args::finish`] with the exact unknown-flag error
+/// the hand-rolled per-command gating used to produce.  Flags absent
+/// from the table are unconditional and pass straight through.
+#[derive(Debug)]
+pub struct Knobs<'a> {
+    args: &'a Args,
+    table: &'static [Knob],
+    caps: Vec<&'static str>,
+}
+
+impl<'a> Knobs<'a> {
+    /// Enable a capability (idempotent).
+    pub fn enable(&mut self, cap: &'static str) {
+        if !self.caps.contains(&cap) {
+            self.caps.push(cap);
+        }
+    }
+
+    /// Enable a capability iff `on` holds.
+    pub fn enable_if(&mut self, on: bool, cap: &'static str) {
+        if on {
+            self.enable(cap);
+        }
+    }
+
+    /// Is a capability enabled?
+    pub fn enabled(&self, cap: &str) -> bool {
+        self.caps.iter().any(|c| *c == cap)
+    }
+
+    /// May `key` be consumed under the enabled capabilities?
+    fn open(&self, key: &str) -> bool {
+        match self.table.iter().find(|k| k.flag == key) {
+            None => true,
+            Some(k) => self.enabled(k.cap),
+        }
+    }
+
+    /// Gated [`Args::get`]: `None` (unconsumed) when the knob is closed.
+    pub fn get(&self, key: &str) -> Option<&'a str> {
+        if self.open(key) {
+            self.args.get(key)
+        } else {
+            None
+        }
+    }
+
+    /// Gated [`Args::get_parse`]: the default when the knob is closed.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        if self.open(key) {
+            self.args.get_parse(key, default)
+        } else {
+            Ok(default)
+        }
+    }
+
+    /// Gated [`Args::switch`]: `false` when the knob is closed.
+    pub fn switch(&self, key: &str) -> bool {
+        if self.open(key) {
+            self.args.switch(key)
+        } else {
+            false
+        }
     }
 }
 
@@ -203,6 +291,37 @@ mod tests {
         let a = args("run --oops 1");
         let msg = a.finish().unwrap_err().to_string();
         assert!(!msg.contains("accepted"), "{msg}");
+    }
+
+    #[test]
+    fn knobs_gate_consumption_by_capability() {
+        static TABLE: &[Knob] = &[
+            Knob { flag: "trigger", cap: "estimating" },
+            Knob { flag: "shards", cap: "sharded" },
+        ];
+        // Closed knob: the lookup returns the default and leaves the
+        // flag unconsumed, so finish() flags it with the exact error.
+        let a = args("scenario --trigger cusum --n 9");
+        let k = a.knobs(TABLE);
+        assert_eq!(k.get("trigger"), None);
+        assert_eq!(k.get_parse("n", 0u32).unwrap(), 9); // undeclared = open
+        let msg = a.finish().unwrap_err().to_string();
+        assert!(msg.contains("unknown flag(s) --trigger"), "{msg}");
+        // Open knob: consumed as usual.
+        let a = args("scenario --trigger cusum --shards 2");
+        let mut k = a.knobs(TABLE);
+        k.enable("estimating");
+        k.enable_if(true, "sharded");
+        k.enable("estimating"); // idempotent
+        assert!(k.enabled("estimating") && k.enabled("sharded"));
+        assert_eq!(k.get("trigger"), Some("cusum"));
+        assert_eq!(k.get_parse("shards", 1usize).unwrap(), 2);
+        a.finish().unwrap();
+        // Closed switches read as absent.
+        let a = args("scenario --compare");
+        let k = a.knobs(&[Knob { flag: "compare", cap: "never" }]);
+        assert!(!k.switch("compare"));
+        assert!(a.finish().is_err());
     }
 
     #[test]

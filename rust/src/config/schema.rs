@@ -9,7 +9,8 @@
 //!   "policy": "cab",
 //!   "distribution": "exp",
 //!   "discipline": "ps",
-//!   "power": {"scenario": "proportional", "coeff": 1.0},
+//!   "power": {"scenario": "proportional", "coeff": 1.0, "idle": 0.0},
+//!   "objective": "throughput",
 //!   "warmup": 2000,
 //!   "measure": 20000,
 //!   "seed": 7
@@ -19,6 +20,7 @@
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::energy::PowerScenario;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::policy::PolicyKind;
 use crate::sim::distribution::Distribution;
 use crate::sim::dynamic::{DynamicConfig, ResolveMode, Trigger};
@@ -68,25 +70,17 @@ impl ExperimentSpec {
             Some(v) => Discipline::parse(v.as_str()?)?,
             None => Discipline::Ps,
         };
-        let (power, power_coeff) = match j.get("power") {
-            Some(p) => {
-                let coeff = match p.get("coeff") {
-                    Some(c) => c.as_f64()?,
-                    None => 1.0,
-                };
-                let scenario = match p.req("scenario")?.as_str()? {
-                    "constant" => PowerScenario::Constant,
-                    "proportional" => PowerScenario::Proportional,
-                    "exponent" => PowerScenario::Exponent(p.req("alpha")?.as_f64()?),
-                    other => {
-                        return Err(Error::Parse(format!(
-                            "unknown power scenario '{other}'"
-                        )))
-                    }
-                };
-                (scenario, coeff)
+        let (power, power_coeff, idle_power) = match j.get("power") {
+            Some(p) => parse_power_block(p)?,
+            None => (PowerScenario::Proportional, 1.0, 0.0),
+        };
+        let objective = match j.get("objective") {
+            Some(v) => {
+                let o = Objective::parse(v.as_str()?)?;
+                o.validate()?;
+                o
             }
-            None => (PowerScenario::Proportional, 1.0),
+            None => Objective::Throughput,
         };
 
         let mut sim = SimConfig::paper_default(populations);
@@ -94,6 +88,8 @@ impl ExperimentSpec {
         sim.discipline = discipline;
         sim.power = power;
         sim.power_coeff = power_coeff;
+        sim.idle_power = idle_power;
+        sim.objective = objective;
         if let Some(v) = j.get("warmup") {
             sim.warmup = v.as_u64()?;
         }
@@ -121,6 +117,27 @@ impl ExperimentSpec {
     }
 }
 
+/// Parse a `"power"` block — `{"scenario": "constant" | "proportional" |
+/// "exponent", "alpha": α, "coeff": k, "idle": f}` — into
+/// `(scenario, coeff, idle floor)`; `coeff` defaults to 1, `idle` to 0.
+fn parse_power_block(p: &Json) -> Result<(PowerScenario, f64, f64)> {
+    let coeff = match p.get("coeff") {
+        Some(c) => c.as_f64()?,
+        None => 1.0,
+    };
+    let idle = match p.get("idle") {
+        Some(c) => c.as_f64()?,
+        None => 0.0,
+    };
+    let scenario = match p.req("scenario")?.as_str()? {
+        // The JSON shape keeps α in its own key; `exponent:<alpha>` is
+        // the CLI spelling, also accepted by [`PowerScenario::parse`].
+        "exponent" => PowerScenario::Exponent(p.req("alpha")?.as_f64()?),
+        name => PowerScenario::parse(name)?,
+    };
+    Ok((scenario, coeff, idle))
+}
+
 /// One fully specified non-stationary scenario experiment
 /// (`hetsched scenario --config <file>`).
 ///
@@ -141,7 +158,9 @@ impl ExperimentSpec {
 ///     "trigger": "cusum", "cusum_h": 2.5, "cusum_delta": 0.25,
 ///     "stale_after": 1000,
 ///     "shards": 2, "sync_every": 250,
-///     "priorities": [4, 1], "deadlines": [1.0, 0]
+///     "priorities": [4, 1], "deadlines": [1.0, 0],
+///     "objective": "energy",
+///     "power": {"scenario": "exponent", "alpha": 0.5, "coeff": 1.0, "idle": 0.0}
 ///   },
 ///   "distribution": "exp", "discipline": "ps", "seed": 7
 /// }
@@ -245,6 +264,16 @@ impl ScenarioSpec {
         if let Some(v) = s.get("deadlines") {
             dynamic.deadlines =
                 v.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?;
+        }
+        if let Some(v) = s.get("objective") {
+            dynamic.objective = Objective::parse(v.as_str()?)?;
+            dynamic.objective.validate()?;
+        }
+        if let Some(p) = s.get("power") {
+            let (scenario, coeff, idle) = parse_power_block(p)?;
+            let profile = PowerProfile::new(coeff, scenario).with_idle(idle);
+            profile.validate()?;
+            dynamic.power = profile;
         }
         if let Some(v) = j.get("distribution") {
             dynamic.dist = Distribution::parse(v.as_str()?)?;
@@ -463,6 +492,69 @@ mod tests {
         assert!(ScenarioSpec::from_json(
             r#"{"mu": [[2,1],[1,2],[3,3]], "policy": "grin",
                 "scenario": {"kind": "burst"}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn energy_keys_round_trip_through_both_specs() {
+        // ExperimentSpec: objective + full power block (idle included).
+        let s = ExperimentSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]], "populations": [10, 10], "policy": "grin",
+            "objective": "edp",
+            "power": {"scenario": "exponent", "alpha": 0.5, "coeff": 2.0, "idle": 0.25}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.sim.objective, Objective::Edp);
+        assert_eq!(s.sim.power, PowerScenario::Exponent(0.5));
+        assert_eq!(s.sim.power_coeff, 2.0);
+        assert_eq!(s.sim.idle_power, 0.25);
+        // The parsed spec reassembles into the exact profile the engine
+        // will meter with.
+        assert_eq!(
+            s.sim.power_profile(),
+            PowerProfile::new(2.0, PowerScenario::Exponent(0.5)).with_idle(0.25)
+        );
+        // ScenarioSpec: the scenario block carries the same axes.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]], "policy": "grin",
+            "scenario": {"kind": "slow_drift", "phases": 2,
+                         "objective": "energy",
+                         "power": {"scenario": "constant", "coeff": 3.0, "idle": 0.5}}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.dynamic.objective, Objective::EnergyPerTask);
+        assert_eq!(
+            s.dynamic.power,
+            PowerProfile::new(3.0, PowerScenario::Constant).with_idle(0.5)
+        );
+        // Omitted keys default to the pre-objective behavior.
+        let s = ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst"}}"#,
+        )
+        .unwrap();
+        assert_eq!(s.dynamic.objective, Objective::Throughput);
+        assert_eq!(s.dynamic.power, PowerProfile::default());
+        // Bad values are rejected loudly.
+        assert!(ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3,3], "policy": "grin",
+                "objective": "vibes"}"#
+        )
+        .is_err());
+        assert!(ExperimentSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "populations": [3,3], "policy": "grin",
+                "objective": "tpw:1.5"}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst",
+                             "power": {"scenario": "exponent", "alpha": 1.5}}}"#
         )
         .is_err());
     }

@@ -27,6 +27,7 @@
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
 use crate::policy::grin::{self, GrInSolution};
 use crate::policy::target::{pick_by_deficit, pick_by_weighted_deficit};
@@ -56,6 +57,13 @@ pub struct ShardedControl {
     /// through the public API of this single-threaded object, and the
     /// guard keeps it that way as the plane grows concurrency).
     weight_epoch: u64,
+    /// What the batched re-solves optimize.  [`Objective::Throughput`]
+    /// keeps every solve on the unweighted/weighted GrIn paths bit for
+    /// bit; other objectives swap in the objective-scored greedy
+    /// ([`grin::solve_objective`]) and exclude non-trivial priorities.
+    objective: Objective,
+    /// Power model the objective-scored solves evaluate against.
+    power: PowerProfile,
     sync_every: u64,
     since_sync: u64,
     epoch: u64,
@@ -97,6 +105,8 @@ impl ShardedControl {
             populations: populations.to_vec(),
             priorities: Vec::new(),
             weight_epoch: 0,
+            objective: Objective::Throughput,
+            power: PowerProfile::default(),
             sync_every,
             since_sync: 0,
             epoch: 0,
@@ -150,6 +160,11 @@ impl ShardedControl {
     /// Priority-vector changes performed so far (the weight epoch).
     pub fn weight_epoch(&self) -> u64 {
         self.weight_epoch
+    }
+
+    /// The objective the batched re-solves optimize.
+    pub fn objective(&self) -> Objective {
+        self.objective
     }
 
     /// Route one `class` arrival: shard with the largest class deficit
@@ -216,7 +231,17 @@ impl ShardedControl {
         // alarms first so a persistently bad μ̂ cannot re-run the full
         // batched solve on every sync — the CUSUM must re-accumulate,
         // the same back-off the single-leader paths get.
-        let warm = if grin::trivial_priorities(&self.priorities) {
+        let warm = if !self.objective.is_throughput() {
+            // Non-trivial priorities are excluded by construction
+            // (set_priorities / set_objective reject the combination).
+            grin::solve_objective_from_snapshot(
+                &mu_hat,
+                &self.populations,
+                self.objective,
+                &self.power,
+                &start,
+            )
+        } else if grin::trivial_priorities(&self.priorities) {
             grin::solve_from_snapshot(&mu_hat, &self.populations, &start)
         } else {
             grin::priority_weights(&self.priorities, &confidence, mu_hat.procs()).and_then(
@@ -280,6 +305,11 @@ impl ShardedControl {
             if priorities.iter().any(|&p| p == 0) {
                 return Err(Error::Config("class priorities must be ≥ 1".into()));
             }
+            if !self.objective.is_throughput() && !grin::trivial_priorities(priorities) {
+                return Err(Error::Config(
+                    "priority weights combine only with the throughput objective".into(),
+                ));
+            }
         }
         if priorities == self.priorities.as_slice() {
             return Ok(());
@@ -290,12 +320,43 @@ impl ShardedControl {
         self.install_global(sol.state)
     }
 
+    /// Swap the objective the batched re-solves optimize: validates,
+    /// rejects the combination with a non-trivial priority vector
+    /// (weights are a throughput-surface concept), re-solves against
+    /// the believed rates and pushes the re-solved targets to every
+    /// shard under one incremented epoch.  A no-op when nothing
+    /// changed.
+    pub fn set_objective(&mut self, objective: Objective, power: PowerProfile) -> Result<()> {
+        objective.validate()?;
+        power.validate()?;
+        if !objective.is_throughput() && !grin::trivial_priorities(&self.priorities) {
+            return Err(Error::Config(
+                "priority weights combine only with the throughput objective".into(),
+            ));
+        }
+        if objective == self.objective && power == self.power {
+            return Ok(());
+        }
+        self.objective = objective;
+        self.power = power;
+        let sol = self.resolve_full()?;
+        self.install_global(sol.state)
+    }
+
     /// Full (Algorithm-1-seeded) batched solve against the believed
-    /// rates under the current priority vector — the population/
-    /// priority-swap path.  Non-trivial vectors gather the live
-    /// confidence grid for the weights; trivial ones skip the gather
-    /// (and its per-shard snapshot clones) entirely.
+    /// rates under the current priority vector and objective — the
+    /// population/priority/objective-swap path.  Non-trivial vectors
+    /// gather the live confidence grid for the weights; trivial ones
+    /// skip the gather (and its per-shard snapshot clones) entirely.
     fn resolve_full(&self) -> Result<GrInSolution> {
+        if !self.objective.is_throughput() {
+            return grin::solve_objective(
+                &self.believed,
+                &self.populations,
+                self.objective,
+                &self.power,
+            );
+        }
         if grin::trivial_priorities(&self.priorities) {
             return grin::solve(&self.believed, &self.populations);
         }
@@ -567,6 +628,34 @@ mod tests {
             assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after weighted sync");
             assert!((leader.norm_priorities()[0] - 1.6).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn objective_flip_reinstalls_targets_atomically() {
+        use crate::model::energy::PowerScenario;
+        let mut ctl = control(3);
+        let e0 = ctl.epoch();
+        let power = PowerProfile::new(1.0, PowerScenario::Exponent(0.5));
+        ctl.set_objective(Objective::EnergyPerTask, power).unwrap();
+        assert_eq!(ctl.epoch(), e0 + 1);
+        assert_eq!(ctl.objective(), Objective::EnergyPerTask);
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after objective flip");
+        }
+        // The re-assembled targets still hold the populations.
+        let per_class: Vec<u32> = (0..3)
+            .map(|i| ctl.shards().iter().map(|s| s.target().row_sum(i)).sum())
+            .collect();
+        assert_eq!(per_class, vec![8, 8, 8]);
+        // Re-installing the same objective is a no-op (no epoch churn).
+        ctl.set_objective(Objective::EnergyPerTask, power).unwrap();
+        assert_eq!(ctl.epoch(), e0 + 1);
+        // Priorities and non-throughput objectives are mutually
+        // exclusive, in both orders.
+        assert!(ctl.set_priorities(&[4, 1, 1]).is_err());
+        ctl.set_objective(Objective::Throughput, PowerProfile::default()).unwrap();
+        ctl.set_priorities(&[4, 1, 1]).unwrap();
+        assert!(ctl.set_objective(Objective::Edp, PowerProfile::default()).is_err());
     }
 
     #[test]

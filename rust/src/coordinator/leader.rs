@@ -12,6 +12,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::policy::PolicyKind;
 use crate::runtime::Engine;
 use crate::sim::dynamic::{DriftConfig, Trigger};
@@ -87,6 +88,14 @@ pub struct ServeConfig {
     /// Misses are counted against request latency and reported in
     /// [`ServeReport::deadline_misses`].
     pub deadlines: Vec<f64>,
+    /// What every target solve optimizes.  [`Objective::Throughput`]
+    /// keeps the pre-objective serving paths bit for bit; other
+    /// objectives are GrIn/sharded-only and exclude non-trivial
+    /// priorities.
+    pub objective: Objective,
+    /// Power model: scores non-throughput solves and meters the modeled
+    /// per-request energy in [`ServeReport`].
+    pub power: PowerProfile,
 }
 
 impl Default for ServeConfig {
@@ -111,6 +120,8 @@ impl Default for ServeConfig {
             sync_every: 128,
             priorities: Vec::new(),
             deadlines: Vec::new(),
+            objective: Objective::Throughput,
+            power: PowerProfile::default(),
         }
     }
 }
@@ -143,6 +154,12 @@ pub struct ServeReport {
     /// Soft-deadline misses per class `[sort, nn]` (all zero unless
     /// [`ServeConfig::deadlines`] is set).
     pub deadline_misses: [u64; 2],
+    /// Modeled joules per request under [`ServeConfig::power`]:
+    /// 𝒫(μ̂(class, device)) × measured kernel seconds, averaged over
+    /// every served request.
+    pub mean_energy: f64,
+    /// Modeled energy–delay product: mean energy × mean request latency.
+    pub edp: f64,
 }
 
 impl ServeReport {
@@ -247,6 +264,15 @@ impl Coordinator {
                 )));
             }
         }
+        cfg.objective.validate()?;
+        cfg.power.validate()?;
+        if !cfg.objective.is_throughput()
+            && !crate::policy::grin::trivial_priorities(&cfg.priorities)
+        {
+            return Err(Error::Config(
+                "priority weights combine only with the throughput objective".into(),
+            ));
+        }
         if !cfg.deadlines.is_empty() {
             if cfg.deadlines.len() != 2 {
                 return Err(Error::Config(format!(
@@ -313,16 +339,25 @@ impl Coordinator {
                 // the boot target under one epoch.
                 ctl.set_priorities(&cfg.priorities)?;
             }
+            if !cfg.objective.is_throughput() {
+                // Objective-scored batched re-solves, one re-install
+                // over the boot target.
+                ctl.set_objective(cfg.objective, cfg.power)?;
+            }
             Steering::Sharded(ctl)
         } else if crate::policy::grin::trivial_priorities(&cfg.priorities) {
-            // Empty or all-equal priorities: the plain unweighted
-            // router, exactly.
-            Steering::Single(Router::new(
+            // Empty or all-equal priorities: the plain router, solving
+            // for the configured objective (throughput reproduces the
+            // pre-objective router exactly).
+            Steering::Single(Router::with_objective(
                 mu,
                 omega,
                 populations,
                 cfg.policy.build(),
                 cfg.seed,
+                Vec::new(),
+                cfg.objective,
+                cfg.power,
             )?)
         } else {
             // The boot solve runs under the estimator's (cold, uniform)
@@ -418,6 +453,8 @@ impl Coordinator {
         let mut resolves = 0u64;
         let mut class_served = [0u64; 2];
         let mut deadline_misses = [0u64; 2];
+        let mut energy_sum = 0f64;
+        let mut latency_sum = 0f64;
 
         let submit_batch = |j: usize, batch: Batch,
                                 batches: &mut u64,
@@ -505,6 +542,18 @@ impl Coordinator {
                         }
                     }
                     let lat = done.arrived.elapsed().as_secs_f64();
+                    // Modeled energy: power at the believed rate of the
+                    // serving cell × the kernel seconds it actually ran.
+                    let rate = match &steering {
+                        Steering::Single(router) => {
+                            router.mu().rate(done.class, done.device)
+                        }
+                        Steering::Sharded(ctl) => {
+                            ctl.believed().rate(done.class, done.device)
+                        }
+                    };
+                    energy_sum += cfg.power.task_power(rate) * done.service_s;
+                    latency_sum += lat;
                     if done.class == 0 {
                         sort_latency.record_s(lat);
                     } else {
@@ -620,6 +669,12 @@ impl Coordinator {
             },
             class_served,
             deadline_misses,
+            mean_energy: if served > 0 { energy_sum / served as f64 } else { 0.0 },
+            edp: if served > 0 {
+                (energy_sum / served as f64) * (latency_sum / served as f64)
+            } else {
+                0.0
+            },
         })
     }
 }
@@ -675,6 +730,23 @@ mod tests {
         };
         assert!(Coordinator::run(&cfg).is_err());
         let cfg = ServeConfig { deadlines: vec![0.5], total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        // Objective rules: weights exclude non-throughput objectives,
+        // and objective-blind policies are rejected up front.
+        let cfg = ServeConfig {
+            priorities: vec![4, 1],
+            policy: PolicyKind::GrIn,
+            objective: Objective::EnergyPerTask,
+            total: 10,
+            ..Default::default()
+        };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig {
+            policy: PolicyKind::Cab,
+            objective: Objective::Edp,
+            total: 10,
+            ..Default::default()
+        };
         assert!(Coordinator::run(&cfg).is_err());
         let cfg =
             ServeConfig { deadlines: vec![-0.5, 0.0], total: 10, ..Default::default() };

@@ -8,8 +8,9 @@
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SystemView};
+use crate::policy::{Policy, SolveRequest, SystemView};
 use crate::sim::rng::Rng;
 
 /// The router.
@@ -23,25 +24,30 @@ pub struct Router {
     /// (empty = unweighted); swapped together with the target in
     /// [`retarget_weighted`](Self::retarget_weighted).
     weights: Vec<f64>,
+    /// Objective every solve (initial and retarget) optimizes.
+    objective: Objective,
+    /// Power model the objective is scored against.
+    power: PowerProfile,
     work: Vec<f64>,
     policy: Box<dyn Policy>,
     rng: Rng,
     routed: u64,
 }
 
-/// Run the policy's solve: plain [`Policy::prepare`] without weights,
-/// [`Policy::prepare_weighted`] with them.
+/// Run the policy's solve through one [`SolveRequest`] carrying the
+/// router's weight vector and objective.
 fn prepare_policy(
     policy: &mut dyn Policy,
     mu: &AffinityMatrix,
     populations: &[u32],
     weights: &[f64],
+    objective: Objective,
+    power: PowerProfile,
 ) -> Result<()> {
-    if weights.is_empty() {
-        policy.prepare(mu, populations)
-    } else {
-        policy.prepare_weighted(mu, populations, weights)
-    }
+    let req = SolveRequest::new(mu, populations)
+        .with_objective(objective, power)
+        .with_weights(weights);
+    policy.prepare(&req).map(|_| ())
 }
 
 impl Router {
@@ -59,17 +65,45 @@ impl Router {
 
     /// [`new`](Self::new) with per-cell priority weights (row-major k×l,
     /// [`crate::policy::grin::priority_weights`]): the initial target is
-    /// solved through [`Policy::prepare_weighted`].  An empty vector is
+    /// solved through a weighted [`SolveRequest`].  An empty vector is
     /// the unweighted router.
     pub fn with_weights(
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        expected_inflight: Vec<u32>,
+        policy: Box<dyn Policy>,
+        seed: u64,
+        weights: Vec<f64>,
+    ) -> Result<Self> {
+        Self::with_objective(
+            mu,
+            omega,
+            expected_inflight,
+            policy,
+            seed,
+            weights,
+            Objective::Throughput,
+            PowerProfile::default(),
+        )
+    }
+
+    /// [`with_weights`](Self::with_weights) under an explicit scheduling
+    /// objective: the initial target (and every retarget) is solved for
+    /// `objective` against `power`.  Non-throughput objectives are
+    /// GrIn-only and exclude non-trivial weight vectors, exactly as
+    /// [`crate::policy::grin::solve_request`] enforces.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_objective(
         mu: AffinityMatrix,
         omega: Vec<f64>,
         expected_inflight: Vec<u32>,
         mut policy: Box<dyn Policy>,
         seed: u64,
         weights: Vec<f64>,
+        objective: Objective,
+        power: PowerProfile,
     ) -> Result<Self> {
-        prepare_policy(policy.as_mut(), &mu, &expected_inflight, &weights)?;
+        prepare_policy(policy.as_mut(), &mu, &expected_inflight, &weights, objective, power)?;
         let (k, l) = (mu.types(), mu.procs());
         Ok(Self {
             state: StateMatrix::zeros(k, l),
@@ -78,6 +112,8 @@ impl Router {
             populations: expected_inflight,
             omega,
             weights,
+            objective,
+            power,
             policy,
             rng: Rng::new(seed),
             routed: 0,
@@ -149,7 +185,14 @@ impl Router {
         if omega.len() != mu.types() * mu.procs() {
             return Err(Error::Shape("retarget ω arity".into()));
         }
-        prepare_policy(self.policy.as_mut(), &mu, &self.populations, &weights)?;
+        prepare_policy(
+            self.policy.as_mut(),
+            &mu,
+            &self.populations,
+            &weights,
+            self.objective,
+            self.power,
+        )?;
         self.mu = mu;
         self.omega = omega;
         self.weights = weights;
@@ -286,6 +329,39 @@ mod tests {
             PolicyKind::Cab.build(),
             7,
             w2
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn objective_router_solves_under_energy() {
+        use crate::model::energy::PowerScenario;
+        let mu = workload::table3::general_symmetric();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        let power = PowerProfile::new(1.0, PowerScenario::Exponent(0.5));
+        let mut r = Router::with_objective(
+            mu.clone(),
+            omega.clone(),
+            vec![10, 10],
+            PolicyKind::GrIn.build(),
+            7,
+            Vec::new(),
+            Objective::EnergyPerTask,
+            power,
+        )
+        .unwrap();
+        assert!(r.route(0) < 2);
+        // Objective-blind policies reject loudly instead of silently
+        // solving for throughput.
+        assert!(Router::with_objective(
+            mu,
+            omega,
+            vec![10, 10],
+            PolicyKind::Cab.build(),
+            7,
+            Vec::new(),
+            Objective::EnergyPerTask,
+            power,
         )
         .is_err());
     }

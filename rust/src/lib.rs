@@ -8,7 +8,9 @@
 //!
 //! * **Model** ([`model`]): the closed-batch-network throughput function
 //!   X(S) (Eq. 4 / Eq. 28), the affinity/power matrices and the six-regime
-//!   classification of Table 1, energy & EDP (Eqs. 19–23).
+//!   classification of Table 1, energy & EDP (Eqs. 19–23), and the unified
+//!   scheduling-objective axis ([`model::objective`]: throughput, energy,
+//!   EDP, throughput-per-watt with an X floor).
 //! * **CAB** ([`policy::cab`]): the analytically optimal
 //!   Choose-between-Accelerate-the-fastest-and-Best-fit policy for two
 //!   processor types (Lemma 4 / Table 1).
@@ -56,9 +58,10 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::model::affinity::{AffinityMatrix, Regime};
     pub use crate::model::energy::{EnergyModel, PowerScenario};
+    pub use crate::model::objective::{Objective, PowerProfile};
     pub use crate::model::state::StateMatrix;
     pub use crate::model::throughput;
-    pub use crate::policy::{self, Policy, PolicyKind};
+    pub use crate::policy::{self, Policy, PolicyKind, PreparedTarget, SolveRequest};
     pub use crate::sim::distribution::Distribution;
     pub use crate::sim::engine::{ClosedNetwork, SimConfig};
     pub use crate::sim::metrics::SimResult;

@@ -29,6 +29,36 @@ impl PowerScenario {
             PowerScenario::Exponent(a) => a,
         }
     }
+
+    /// Parse a CLI/config name: `constant`, `proportional`, or
+    /// `exponent:<alpha>` (e.g. `exponent:0.5`); α ≤ 1 enforced by the
+    /// consumer ([`EnergyModel::new`] /
+    /// [`crate::model::objective::PowerProfile::validate`]).
+    pub fn parse(name: &str) -> Result<Self> {
+        match name {
+            "constant" => Ok(PowerScenario::Constant),
+            "proportional" => Ok(PowerScenario::Proportional),
+            other => match other.strip_prefix("exponent:") {
+                Some(a) => a
+                    .parse::<f64>()
+                    .map(PowerScenario::Exponent)
+                    .map_err(|_| Error::Parse(format!("bad power exponent '{a}'"))),
+                None => Err(Error::Parse(format!(
+                    "unknown power scenario '{other}' \
+                     (constant|proportional|exponent:<alpha>)"
+                ))),
+            },
+        }
+    }
+
+    /// Canonical name (the exponent's α is not encoded).
+    pub fn name(self) -> &'static str {
+        match self {
+            PowerScenario::Constant => "constant",
+            PowerScenario::Proportional => "proportional",
+            PowerScenario::Exponent(_) => "exponent",
+        }
+    }
 }
 
 /// Energy model bound to an affinity matrix: 𝒫_ij = coeff·μ_ij^α.
@@ -102,13 +132,19 @@ impl EnergyModel {
         self.energy_per_task(mu, s) * self.delay_per_task(mu, s)
     }
 
-    /// Scenario closed forms (Eqs. 22–23) for an l=2 system with both
-    /// processors occupied; returns `(E[ℰ], EDP)` or None when the
-    /// closed form does not apply (general α).
-    pub fn closed_form(&self, x: f64, n_total: u32) -> Option<(f64, f64)> {
+    /// Scenario closed forms (Eqs. 22–23) for a state with every
+    /// processor occupied; returns `(E[ℰ], EDP)` or None when the closed
+    /// form does not apply — general α, or a state violating the
+    /// Eqs. 22–23 precondition that all processors are busy (an empty
+    /// column draws no task power, so the l·k/X sum overcounts it).
+    pub fn closed_form(&self, x: f64, s: &StateMatrix) -> Option<(f64, f64)> {
+        if (0..s.procs()).any(|j| s.col_sum(j) == 0) {
+            return None;
+        }
+        let n_total = s.total();
         match self.scenario {
             PowerScenario::Constant => {
-                let e = 2.0 * self.coeff / x;
+                let e = s.procs() as f64 * self.coeff / x;
                 Some((e, e * n_total as f64 / x))
             }
             PowerScenario::Proportional => {
@@ -160,7 +196,7 @@ mod tests {
         let x = x_of_state(&mu, &s);
         let e = em.energy_per_task(&mu, &s);
         assert!((e - 6.0 / x).abs() < 1e-12);
-        let (ec, edpc) = em.closed_form(x, s.total()).unwrap();
+        let (ec, edpc) = em.closed_form(x, &s).unwrap();
         assert!((e - ec).abs() < 1e-12);
         assert!((em.edp(&mu, &s) - edpc).abs() < 1e-12);
     }
@@ -201,6 +237,45 @@ mod tests {
             let (lo, hi) = em.lemma7_energy_bounds(x, 2);
             assert!(e >= lo - 1e-9 && e <= hi + 1e-9, "α={alpha}: {lo} ≤ {e} ≤ {hi}");
         }
+    }
+
+    #[test]
+    fn closed_form_rejects_states_with_an_empty_column() {
+        // Regression: Eqs. 22–23 assume every processor is busy.  A state
+        // that drains a column used to get Some(2k/X) back even though
+        // the true Eq. 19 energy only counts the busy processor.
+        let (mu, _) = setup();
+        let em = EnergyModel::new(&mu, 3.0, PowerScenario::Constant).unwrap();
+        // All 20 programs on processor 0; column 1 empty.
+        let s = StateMatrix::from_two_type(10, 0, 10, 10).unwrap();
+        assert_eq!(s.col_sum(1), 0);
+        let x = x_of_state(&mu, &s);
+        assert!(em.closed_form(x, &s).is_none());
+        // The closed form still matches Eq. 19 exactly when the
+        // precondition holds (both columns busy).
+        let s_busy = StateMatrix::from_two_type(1, 10, 10, 10).unwrap();
+        let xb = x_of_state(&mu, &s_busy);
+        let (ec, _) = em.closed_form(xb, &s_busy).unwrap();
+        assert!((em.energy_per_task(&mu, &s_busy) - ec).abs() < 1e-12);
+    }
+
+    #[test]
+    fn power_scenario_parses_cli_names() {
+        assert_eq!(PowerScenario::parse("constant").unwrap(), PowerScenario::Constant);
+        assert_eq!(
+            PowerScenario::parse("proportional").unwrap(),
+            PowerScenario::Proportional
+        );
+        assert_eq!(
+            PowerScenario::parse("exponent:0.5").unwrap(),
+            PowerScenario::Exponent(0.5)
+        );
+        assert!(PowerScenario::parse("exponent:x").is_err());
+        assert!(PowerScenario::parse("quadratic").is_err());
+        for s in [PowerScenario::Constant, PowerScenario::Proportional] {
+            assert_eq!(PowerScenario::parse(s.name()).unwrap(), s);
+        }
+        assert_eq!(PowerScenario::Exponent(0.5).name(), "exponent");
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //!   GrIn (Eqs. 34, 36).
 //! * [`energy`] — expected energy per task (Eq. 19), EDP (Eq. 21) and the
 //!   Scenario-1/2 closed forms (Eqs. 22–23) plus the Lemma-7 α-bounds.
+//! * [`objective`] — the solve [`objective::Objective`] (throughput, energy,
+//!   EDP, throughput-per-watt), the per-device [`objective::PowerProfile`]
+//!   and the O(1)-probe objective evaluator driving GrIn's greedy loop.
 
 //! * [`ctmc`] — the §3.3 CTMC (Fig. 3): balance equations → limiting
 //!   probabilities → Eq. 9 throughput, for any stationary routing rule.
@@ -15,5 +18,6 @@
 pub mod affinity;
 pub mod ctmc;
 pub mod energy;
+pub mod objective;
 pub mod state;
 pub mod throughput;

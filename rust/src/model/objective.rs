@@ -1,0 +1,565 @@
+//! The scheduling objective axis: what a solve optimizes (§3.4 × §4.2).
+//!
+//! PRs 1–5 optimized throughput only, leaving the §3.4 energy model
+//! ([`crate::model::energy`]) dormant.  This module turns Eq. 19
+//! (energy per task) and Eq. 21 (EDP) into first-class solve objectives
+//! behind one enum, consumed by GrIn's greedy loop through
+//! [`ObjectiveEval`] — the objective-scored sibling of
+//! [`IncrementalX`]:
+//!
+//! * [`Objective::Throughput`] — maximize X_sys (Eq. 28), the original
+//!   axis; bit-identical to the pre-objective solve paths.
+//! * [`Objective::EnergyPerTask`] — minimize E[ℰ] (Eq. 19).
+//! * [`Objective::Edp`] — minimize E[ℰ]·N/X (Eq. 21).
+//! * [`Objective::ThroughputPerWatt`] — maximize X/𝒫_sys subject to
+//!   X ≥ `min_x_frac`·X*, the constrained perf-per-watt mode (the
+//!   energy-aware-under-throughput-constraint formulation).
+//!
+//! [`ObjectiveEval`] keeps per-column power numerators Σ_i N_ij·𝒫_ij
+//! alongside the [`IncrementalX`] throughput caches, so a GrIn move
+//! probe stays O(1) (only the two touched columns change) and a full
+//! objective evaluation is O(l) — the same bounds as the throughput
+//! greedy loop.
+//!
+//! [`PowerProfile`] bundles the §3.2 power model (𝒫_ij = coeff·μ_ij^α)
+//! with an *idle-power floor*: an empty device still draws
+//! `idle_power`, so energy per task is not trivially minimized by
+//! draining devices (with zero idle power, parking every task on the
+//! single most efficient cell minimizes Eq. 19 outright at a huge
+//! throughput cost).
+
+use super::affinity::AffinityMatrix;
+use super::energy::PowerScenario;
+use super::state::StateMatrix;
+use super::throughput::IncrementalX;
+use crate::error::{Error, Result};
+
+/// Default throughput floor for [`Objective::ThroughputPerWatt`] when
+/// the CLI spelling `tpw` carries no explicit fraction.
+pub const DEFAULT_MIN_X_FRAC: f64 = 0.9;
+
+/// What a solve optimizes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Objective {
+    /// Maximize system throughput X (Eq. 28) — the default.
+    Throughput,
+    /// Minimize expected energy per task E[ℰ] (Eq. 19).
+    EnergyPerTask,
+    /// Minimize the energy-delay product E[ℰ]·N/X (Eq. 21).
+    Edp,
+    /// Maximize X/𝒫_sys subject to X ≥ `min_x_frac`·X*, where X* is the
+    /// unconstrained throughput optimum.
+    ThroughputPerWatt {
+        /// Throughput floor as a fraction of X*, in (0, 1].
+        min_x_frac: f64,
+    },
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Objective::Throughput
+    }
+}
+
+impl Objective {
+    /// Parse a CLI/config name: `throughput`, `energy`, `edp`, `tpw`
+    /// or `tpw:<frac>` (e.g. `tpw:0.85`).
+    pub fn parse(name: &str) -> Result<Self> {
+        let lower = name.to_ascii_lowercase();
+        let (head, frac) = match lower.split_once(':') {
+            Some((h, f)) => (h, Some(f)),
+            None => (lower.as_str(), None),
+        };
+        let obj = match head {
+            "throughput" | "x" => Objective::Throughput,
+            "energy" | "energy_per_task" => Objective::EnergyPerTask,
+            "edp" => Objective::Edp,
+            "tpw" | "throughput_per_watt" => {
+                let min_x_frac = match frac {
+                    Some(s) => s.parse::<f64>().map_err(|_| {
+                        Error::Parse(format!("bad min-X fraction '{s}' in objective '{name}'"))
+                    })?,
+                    None => DEFAULT_MIN_X_FRAC,
+                };
+                Objective::ThroughputPerWatt { min_x_frac }
+            }
+            other => {
+                return Err(Error::Parse(format!(
+                    "unknown objective '{other}' (throughput|energy|edp|tpw[:frac])"
+                )))
+            }
+        };
+        if frac.is_some() && !matches!(obj, Objective::ThroughputPerWatt { .. }) {
+            return Err(Error::Parse(format!(
+                "objective '{head}' takes no ':' argument"
+            )));
+        }
+        obj.validate()?;
+        Ok(obj)
+    }
+
+    /// Canonical name (the TPW fraction is not encoded).
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Throughput => "throughput",
+            Objective::EnergyPerTask => "energy",
+            Objective::Edp => "edp",
+            Objective::ThroughputPerWatt { .. } => "tpw",
+        }
+    }
+
+    /// Is this the plain throughput axis (every pre-objective path)?
+    pub fn is_throughput(self) -> bool {
+        matches!(self, Objective::Throughput)
+    }
+
+    /// Reject out-of-range parameters.
+    pub fn validate(self) -> Result<()> {
+        if let Objective::ThroughputPerWatt { min_x_frac } = self {
+            if !min_x_frac.is_finite() || min_x_frac <= 0.0 || min_x_frac > 1.0 {
+                return Err(Error::Config(format!(
+                    "min-X fraction {min_x_frac} outside (0, 1]"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The per-device power model a solve and a simulation share:
+/// 𝒫_ij = `coeff`·μ_ij^α for a busy device (the §3.2 exponential
+/// power/performance relation) plus an `idle_power` floor drawn by an
+/// *empty* device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerProfile {
+    /// Power coefficient k of Def. 4 (must be finite and > 0).
+    pub coeff: f64,
+    /// Power scenario (α ≤ 1).
+    pub scenario: PowerScenario,
+    /// Power drawn by an idle (empty) device; ≥ 0, default 0 — the
+    /// pre-objective behavior, where empty devices cost nothing.
+    pub idle_power: f64,
+}
+
+impl Default for PowerProfile {
+    fn default() -> Self {
+        Self {
+            coeff: 1.0,
+            scenario: PowerScenario::Proportional,
+            idle_power: 0.0,
+        }
+    }
+}
+
+impl PowerProfile {
+    /// Profile with the given dynamic-power model and no idle floor.
+    pub fn new(coeff: f64, scenario: PowerScenario) -> Self {
+        Self { coeff, scenario, idle_power: 0.0 }
+    }
+
+    /// Builder: attach an idle-power floor.
+    pub fn with_idle(mut self, idle_power: f64) -> Self {
+        self.idle_power = idle_power;
+        self
+    }
+
+    /// The α exponent of the scenario.
+    pub fn alpha(&self) -> f64 {
+        self.scenario.alpha()
+    }
+
+    /// Dynamic power of a task executing at `rate`: coeff·rate^α — the
+    /// same formula as [`AffinityMatrix::power_matrix`], usable on
+    /// drifted physical rates the matrix does not know about.
+    pub fn task_power(&self, rate: f64) -> f64 {
+        self.coeff * rate.powf(self.alpha())
+    }
+
+    /// Reject invalid parameters (same envelope as
+    /// [`crate::model::energy::EnergyModel::new`], plus the idle floor).
+    pub fn validate(&self) -> Result<()> {
+        if self.coeff <= 0.0 || !self.coeff.is_finite() {
+            return Err(Error::Config(format!("power coefficient {}", self.coeff)));
+        }
+        if self.alpha() > 1.0 {
+            return Err(Error::Config(format!(
+                "α = {} > 1 is outside the paper's power model",
+                self.alpha()
+            )));
+        }
+        if self.idle_power < 0.0 || !self.idle_power.is_finite() {
+            return Err(Error::Config(format!("idle power {}", self.idle_power)));
+        }
+        Ok(())
+    }
+}
+
+/// Objective-scored incremental evaluator: [`IncrementalX`] plus
+/// per-column power numerators, scoring any [`Objective`] with the same
+/// probe complexity the throughput greedy loop enjoys.
+///
+/// System power is 𝒫_sys = Σ_j 𝒫_col(j), where a busy column
+/// contributes its Eq.-19 term Σ_i (N_ij/occ_j)·𝒫_ij and an empty
+/// column contributes the idle floor.  Then
+///
+/// * E[ℰ] = 𝒫_sys / X (Eq. 19, extended by the idle floor),
+/// * EDP  = E[ℰ]·N/X (Eq. 21),
+/// * perf-per-watt = X / 𝒫_sys.
+///
+/// A move touches exactly two columns, so given the current
+/// [`base`](Self::base) pair, [`probe`](Self::probe) is O(1).
+#[derive(Debug, Clone)]
+pub struct ObjectiveEval {
+    inc: IncrementalX,
+    /// Row-major k×l power matrix 𝒫_ij.
+    power: Vec<f64>,
+    /// Per-column Σ_i N_ij·𝒫_ij.
+    pnum: Vec<f64>,
+    l: usize,
+    idle: f64,
+    /// Total tasks N (constant across moves).
+    n_total: f64,
+    objective: Objective,
+    /// Unconstrained throughput optimum X* (only read by the
+    /// ThroughputPerWatt feasibility check).
+    x_ref: f64,
+}
+
+impl ObjectiveEval {
+    /// Build the caches from a full state (O(k·l), once).  `x_ref` is
+    /// the unconstrained throughput optimum for the
+    /// [`Objective::ThroughputPerWatt`] floor; pass 0.0 for the other
+    /// objectives.
+    pub fn new(
+        mu: &AffinityMatrix,
+        n: &StateMatrix,
+        profile: &PowerProfile,
+        objective: Objective,
+        x_ref: f64,
+    ) -> Result<Self> {
+        profile.validate()?;
+        objective.validate()?;
+        let (k, l) = (mu.types(), mu.procs());
+        let power = mu.power_matrix(profile.coeff, profile.alpha());
+        let mut pnum = vec![0.0f64; l];
+        for j in 0..l {
+            for i in 0..k {
+                pnum[j] += n.get(i, j) as f64 * power[i * l + j];
+            }
+        }
+        Ok(Self {
+            inc: IncrementalX::new(mu, n),
+            power,
+            pnum,
+            l,
+            idle: profile.idle_power,
+            n_total: n.total() as f64,
+            objective,
+            x_ref,
+        })
+    }
+
+    /// The objective being scored.
+    pub fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    /// Column j's contribution to 𝒫_sys: the Eq.-19 term when busy,
+    /// the idle floor when empty.
+    #[inline]
+    fn col_power(&self, j: usize) -> f64 {
+        let occ = self.inc.occupancy(j);
+        if occ == 0.0 {
+            self.idle
+        } else {
+            self.pnum[j] / occ
+        }
+    }
+
+    /// System throughput X (Eq. 28), O(l) from the caches.
+    pub fn x(&self) -> f64 {
+        self.inc.x()
+    }
+
+    /// System power 𝒫_sys, O(l) from the caches.
+    pub fn total_power(&self) -> f64 {
+        (0..self.l).map(|j| self.col_power(j)).sum()
+    }
+
+    /// E[ℰ] (Eq. 19 + idle floor); +∞ on a drained system.
+    pub fn energy_per_task(&self) -> f64 {
+        let x = self.x();
+        if x <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.total_power() / x
+    }
+
+    /// EDP (Eq. 21); +∞ on a drained system.
+    pub fn edp(&self) -> f64 {
+        let x = self.x();
+        if x <= 0.0 {
+            return f64::INFINITY;
+        }
+        self.energy_per_task() * (self.n_total / x)
+    }
+
+    /// Current (X, 𝒫_sys) pair — the probe baseline, O(l).
+    pub fn base(&self) -> (f64, f64) {
+        (self.x(), self.total_power())
+    }
+
+    /// O(1) probe: the (X, 𝒫_sys) pair after moving one p-type task
+    /// from column `from` to column `to`, given the current
+    /// [`base`](Self::base).  Defined for `from ≠ to` and
+    /// `N[p][from] > 0` (caller-checked, as with
+    /// [`IncrementalX::delta_minus`]).
+    pub fn probe(&self, p: usize, from: usize, to: usize, base: (f64, f64)) -> (f64, f64) {
+        debug_assert_ne!(from, to);
+        let (x0, p0) = base;
+        let x2 = x0 + self.inc.delta_minus(p, from) + self.inc.delta_plus(p, to);
+        // Column `from` loses the task …
+        let occ_f = self.inc.occupancy(from);
+        let occ_f2 = occ_f - 1.0;
+        let cf_new = if occ_f2 <= 0.0 {
+            self.idle
+        } else {
+            (self.pnum[from] - self.power[p * self.l + from]) / occ_f2
+        };
+        // … and column `to` gains it.
+        let occ_t = self.inc.occupancy(to);
+        let ct_new = (self.pnum[to] + self.power[p * self.l + to]) / (occ_t + 1.0);
+        let p2 = p0 - self.col_power(from) - self.col_power(to) + cf_new + ct_new;
+        (x2, p2)
+    }
+
+    /// Score an (X, 𝒫_sys) pair under the objective; higher is better
+    /// for every objective (minimized quantities are negated).
+    pub fn score_of(&self, x: f64, power: f64) -> f64 {
+        match self.objective {
+            Objective::Throughput => x,
+            Objective::EnergyPerTask => {
+                if x <= 0.0 {
+                    f64::NEG_INFINITY
+                } else {
+                    -(power / x)
+                }
+            }
+            Objective::Edp => {
+                if x <= 0.0 {
+                    f64::NEG_INFINITY
+                } else {
+                    -(power / x * (self.n_total / x))
+                }
+            }
+            Objective::ThroughputPerWatt { .. } => {
+                if power <= 0.0 {
+                    0.0
+                } else {
+                    x / power
+                }
+            }
+        }
+    }
+
+    /// May the solver stand at throughput `x`?  Always true except under
+    /// the ThroughputPerWatt floor X ≥ min_x_frac·X*.
+    pub fn feasible(&self, x: f64) -> bool {
+        match self.objective {
+            Objective::ThroughputPerWatt { min_x_frac } => {
+                x >= min_x_frac * self.x_ref - 1e-12
+            }
+            _ => true,
+        }
+    }
+
+    /// Score at the current state.
+    pub fn score(&self) -> f64 {
+        let (x, p) = self.base();
+        self.score_of(x, p)
+    }
+
+    /// The objective's reported magnitude at the current state (X, E,
+    /// EDP or X/𝒫 — *not* sign-flipped like [`score`](Self::score)).
+    pub fn objective_value(&self) -> f64 {
+        match self.objective {
+            Objective::Throughput => self.x(),
+            Objective::EnergyPerTask => self.energy_per_task(),
+            Objective::Edp => self.edp(),
+            Objective::ThroughputPerWatt { .. } => {
+                let (x, p) = self.base();
+                if p <= 0.0 {
+                    0.0
+                } else {
+                    x / p
+                }
+            }
+        }
+    }
+
+    /// Apply a GrIn move (one p-type task from `from` to `to`) to the
+    /// caches, O(1).
+    pub fn apply_move(&mut self, p: usize, from: usize, to: usize) {
+        self.inc.apply_move(p, from, to);
+        self.pnum[from] -= self.power[p * self.l + from];
+        if self.inc.occupancy(from) == 0.0 {
+            // Cancel rounding dust on emptied columns, mirroring
+            // IncrementalX::recache.
+            self.pnum[from] = 0.0;
+        }
+        self.pnum[to] += self.power[p * self.l + to];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::energy::EnergyModel;
+    use crate::model::throughput::x_of_state;
+    use crate::sim::rng::Rng;
+
+    #[test]
+    fn objective_parsing_round_trips_and_validates() {
+        assert_eq!(Objective::parse("throughput").unwrap(), Objective::Throughput);
+        assert_eq!(Objective::parse("x").unwrap(), Objective::Throughput);
+        assert_eq!(Objective::parse("energy").unwrap(), Objective::EnergyPerTask);
+        assert_eq!(Objective::parse("energy_per_task").unwrap(), Objective::EnergyPerTask);
+        assert_eq!(Objective::parse("EDP").unwrap(), Objective::Edp);
+        assert_eq!(
+            Objective::parse("tpw").unwrap(),
+            Objective::ThroughputPerWatt { min_x_frac: DEFAULT_MIN_X_FRAC }
+        );
+        assert_eq!(
+            Objective::parse("tpw:0.75").unwrap(),
+            Objective::ThroughputPerWatt { min_x_frac: 0.75 }
+        );
+        assert!(Objective::parse("tpw:1.5").is_err());
+        assert!(Objective::parse("tpw:zero").is_err());
+        assert!(Objective::parse("energy:0.5").is_err());
+        assert!(Objective::parse("latency").is_err());
+        assert!(Objective::ThroughputPerWatt { min_x_frac: 0.0 }.validate().is_err());
+        for o in [Objective::Throughput, Objective::EnergyPerTask, Objective::Edp] {
+            assert_eq!(Objective::parse(o.name()).unwrap(), o);
+        }
+        assert!(Objective::default().is_throughput());
+    }
+
+    #[test]
+    fn power_profile_validates_and_scales() {
+        assert!(PowerProfile::default().validate().is_ok());
+        assert!(PowerProfile::new(0.0, PowerScenario::Constant).validate().is_err());
+        assert!(PowerProfile::new(1.0, PowerScenario::Exponent(1.5)).validate().is_err());
+        assert!(PowerProfile::default().with_idle(-1.0).validate().is_err());
+        let p = PowerProfile::new(2.0, PowerScenario::Exponent(0.5));
+        assert!((p.task_power(4.0) - 4.0).abs() < 1e-12); // 2·4^0.5
+        assert!((PowerProfile::default().task_power(7.0) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eval_matches_energy_model_without_idle_floor() {
+        // With idle_power = 0 the evaluator is exactly Eq. 19/21.
+        let mut rng = Rng::new(1312);
+        for _ in 0..30 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let mut s = StateMatrix::zeros(k, l);
+            for i in 0..k {
+                for j in 0..l {
+                    s.set(i, j, rng.below(4) as u32);
+                }
+            }
+            if s.total() == 0 {
+                s.set(0, 0, 1);
+            }
+            for scenario in [
+                PowerScenario::Constant,
+                PowerScenario::Proportional,
+                PowerScenario::Exponent(0.5),
+            ] {
+                let profile = PowerProfile::new(1.7, scenario);
+                let em = EnergyModel::new(&mu, profile.coeff, scenario).unwrap();
+                let eval =
+                    ObjectiveEval::new(&mu, &s, &profile, Objective::EnergyPerTask, 0.0).unwrap();
+                assert!(
+                    (eval.energy_per_task() - em.energy_per_task(&mu, &s)).abs() < 1e-9,
+                    "energy mismatch"
+                );
+                assert!((eval.edp() - em.edp(&mu, &s)).abs() < 1e-9, "edp mismatch");
+                assert!((eval.x() - x_of_state(&mu, &s)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn probe_and_apply_match_full_rebuild() {
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0],
+            vec![1.0, 8.0, 3.0],
+            vec![5.0, 5.0, 9.0],
+        ])
+        .unwrap();
+        let mut s = StateMatrix::new(3, 3, vec![3, 1, 0, 2, 4, 1, 0, 2, 5]).unwrap();
+        let profile = PowerProfile::new(1.0, PowerScenario::Exponent(0.5)).with_idle(0.3);
+        for objective in [
+            Objective::EnergyPerTask,
+            Objective::Edp,
+            Objective::ThroughputPerWatt { min_x_frac: 0.5 },
+        ] {
+            let mut eval = ObjectiveEval::new(&mu, &s.clone(), &profile, objective, 10.0).unwrap();
+            let moves = [(0usize, 0usize, 1usize), (1, 1, 2), (2, 2, 0), (0, 0, 2), (1, 2, 0)];
+            for &(p, from, to) in &moves {
+                if s.get(p, from) == 0 {
+                    continue;
+                }
+                let base = eval.base();
+                let (x2, p2) = eval.probe(p, from, to, base);
+                s.move_task(p, from, to).unwrap();
+                eval.apply_move(p, from, to);
+                let fresh = ObjectiveEval::new(&mu, &s, &profile, objective, 10.0).unwrap();
+                let (xf, pf) = fresh.base();
+                assert!((x2 - xf).abs() < 1e-9, "probe X {x2} vs fresh {xf}");
+                assert!((p2 - pf).abs() < 1e-9, "probe 𝒫 {p2} vs fresh {pf}");
+                assert!((eval.score() - fresh.score()).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn idle_floor_charges_empty_columns() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        // Everything on processor 0 — processor 1 is drained.
+        let s = StateMatrix::new(2, 2, vec![4, 0, 4, 0]).unwrap();
+        let hot = PowerProfile::new(1.0, PowerScenario::Constant).with_idle(2.5);
+        let cold = PowerProfile::new(1.0, PowerScenario::Constant);
+        let with_idle = ObjectiveEval::new(&mu, &s, &hot, Objective::EnergyPerTask, 0.0).unwrap();
+        let without = ObjectiveEval::new(&mu, &s, &cold, Objective::EnergyPerTask, 0.0).unwrap();
+        assert!((with_idle.total_power() - without.total_power() - 2.5).abs() < 1e-12);
+        // The drained column's idle draw lands in E[ℰ].
+        let x = x_of_state(&mu, &s);
+        assert!((with_idle.energy_per_task() - without.energy_per_task() - 2.5 / x).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpw_feasibility_floors_throughput() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let s = StateMatrix::new(2, 2, vec![1, 9, 0, 10]).unwrap();
+        let profile = PowerProfile::default();
+        let eval = ObjectiveEval::new(
+            &mu,
+            &s,
+            &profile,
+            Objective::ThroughputPerWatt { min_x_frac: 0.9 },
+            30.0,
+        )
+        .unwrap();
+        assert!(eval.feasible(27.0));
+        assert!(!eval.feasible(26.9));
+        // Other objectives have no floor.
+        let free = ObjectiveEval::new(&mu, &s, &profile, Objective::Edp, 30.0).unwrap();
+        assert!(free.feasible(0.0));
+    }
+}

@@ -154,6 +154,14 @@ impl IncrementalX {
         self.l
     }
 
+    /// Cached occupancy of column j (Σ_i N_ij) — exposed for the
+    /// objective-scored evaluator ([`crate::model::objective::ObjectiveEval`]),
+    /// which rides its power caches on these occupancies.
+    #[inline]
+    pub fn occupancy(&self, j: usize) -> f64 {
+        self.occ[j]
+    }
+
     /// Cached per-processor throughput X_j (Eq. 26/27).
     #[inline]
     pub fn x_of_proc(&self, j: usize) -> f64 {

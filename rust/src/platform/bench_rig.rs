@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SystemView};
+use crate::policy::{Policy, SolveRequest, SystemView};
 use crate::sim::rng::Rng;
 
 use super::measure::MeasuredRates;
@@ -58,7 +58,7 @@ pub fn run_platform(
     if mu.types() != k || mu.procs() != l {
         return Err(Error::Shape("measured rates don't match config".into()));
     }
-    policy.prepare(mu, &cfg.populations)?;
+    policy.prepare(&SolveRequest::new(mu, &cfg.populations))?;
 
     let (done_tx, done_rx) = channel::<Completion>();
     let mut devices = Vec::with_capacity(l);

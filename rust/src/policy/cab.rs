@@ -15,7 +15,7 @@
 //! Dispatch then just steers deficits toward S_max ([`super::target`]).
 
 use super::target::TargetSteering;
-use super::{Policy, SystemView};
+use super::{Policy, PreparedTarget, SolveRequest, SystemView};
 use crate::error::{Error, Result};
 use crate::model::affinity::{AffinityMatrix, Regime};
 use crate::model::state::StateMatrix;
@@ -67,11 +67,16 @@ impl Policy for Cab {
         "CAB"
     }
 
-    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
-        let (regime, target) = Self::target_state(mu, populations)?;
+    /// CAB is objective- and weight-blind: only baseline requests
+    /// (throughput, no effective weights) are accepted — anything else
+    /// fails loudly via [`SolveRequest::ensure_baseline`].
+    fn prepare(&mut self, req: &SolveRequest<'_>) -> Result<PreparedTarget> {
+        req.ensure_baseline(self.name())?;
+        let (regime, target) = Self::target_state(req.mu, req.populations)?;
         self.regime = Some(regime);
-        self.steering = Some(TargetSteering::new(target));
-        Ok(())
+        let x = crate::model::throughput::x_of_state(req.mu, &target);
+        self.steering = Some(TargetSteering::new(target.clone()));
+        Ok(PreparedTarget { target: Some(target), objective_value: Some(x) })
     }
 
     fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {

@@ -17,9 +17,10 @@
 //!    `benches/fig9_12_multitype.rs --gap`).
 
 use super::target::TargetSteering;
-use super::{Policy, SystemView};
+use super::{Policy, PreparedTarget, SolveRequest, SystemView};
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, ObjectiveEval, PowerProfile};
 use crate::model::state::StateMatrix;
 use crate::model::throughput::{x_df_minus, x_df_plus, x_of_state, IncrementalX};
 use crate::sim::rng::Rng;
@@ -296,6 +297,165 @@ pub fn solve_weighted_from_snapshot(
     Ok(GrInSolution { state: sol.state, throughput, moves: sol.moves })
 }
 
+/// Dispatch a full [`SolveRequest`] to the matching GrIn solve: plain,
+/// weighted, objective-scored, cold or warm-started.  This is the one
+/// entry point behind [`GrInPolicy::prepare`] — GrIn honors every
+/// request shape except the (so far undefined) combination of priority
+/// weights with a non-throughput objective, which errors loudly.
+pub fn solve_request(req: &SolveRequest<'_>) -> Result<GrInSolution> {
+    if !req.weights.is_empty()
+        && req.weights.len() != req.mu.types() * req.mu.procs()
+    {
+        return Err(Error::Shape(format!(
+            "{} weights for a {}×{} system",
+            req.weights.len(),
+            req.mu.types(),
+            req.mu.procs()
+        )));
+    }
+    match (req.weights_trivial(), req.objective.is_throughput()) {
+        (true, true) => match req.start {
+            Some(s) => solve_from_snapshot(req.mu, req.populations, s),
+            None => solve(req.mu, req.populations),
+        },
+        (false, true) => match req.start {
+            Some(s) => {
+                solve_weighted_from_snapshot(req.mu, req.populations, req.weights, s)
+            }
+            None => solve_weighted(req.mu, req.populations, req.weights),
+        },
+        (true, false) => match req.start {
+            Some(s) => solve_objective_from_snapshot(
+                req.mu,
+                req.populations,
+                req.objective,
+                &req.power,
+                s,
+            ),
+            None => {
+                solve_objective(req.mu, req.populations, req.objective, &req.power)
+            }
+        },
+        (false, false) => Err(Error::Config(
+            "priority weights combine only with the throughput objective".into(),
+        )),
+    }
+}
+
+/// Objective-scored GrIn solve: run the throughput solve first (it
+/// yields the unconstrained optimum X*, the
+/// [`Objective::ThroughputPerWatt`] reference), then descend the
+/// energy/EDP/perf-per-watt surface with the same greedy move loop,
+/// scored by [`ObjectiveEval`] instead of raw ΔX.
+/// `GrInSolution::throughput` reports the true X at the solved state,
+/// directly comparable across objectives.
+pub fn solve_objective(
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    objective: Objective,
+    power: &PowerProfile,
+) -> Result<GrInSolution> {
+    if objective.is_throughput() {
+        return solve(mu, populations);
+    }
+    let base = solve(mu, populations)?;
+    greedy_objective(mu, base.state, populations, objective, power, base.throughput)
+}
+
+/// Warm-started sibling of [`solve_objective`] (the adaptive/sharded
+/// re-solve path).  [`Objective::ThroughputPerWatt`] ignores the
+/// snapshot and re-solves cold: its feasibility floor references the
+/// unconstrained optimum X*, and an arbitrary snapshot may sit below
+/// the floor with no single feasible move back inside — the cold path
+/// starts at X* and is feasible by construction.
+pub fn solve_objective_from_snapshot(
+    mu: &AffinityMatrix,
+    populations: &[u32],
+    objective: Objective,
+    power: &PowerProfile,
+    start: &StateMatrix,
+) -> Result<GrInSolution> {
+    if objective.is_throughput() {
+        return solve_from_snapshot(mu, populations, start);
+    }
+    if matches!(objective, Objective::ThroughputPerWatt { .. }) {
+        return solve_objective(mu, populations, objective, power);
+    }
+    if start.types() != mu.types() || start.procs() != mu.procs() {
+        return Err(Error::Shape(format!(
+            "snapshot is {}×{}, μ is {}×{}",
+            start.types(),
+            start.procs(),
+            mu.types(),
+            mu.procs()
+        )));
+    }
+    start.check_populations(populations)?;
+    greedy_objective(mu, start.clone(), populations, objective, power, 0.0)
+}
+
+/// The objective-scored greedy loop (shared by [`solve_objective`] and
+/// [`solve_objective_from_snapshot`]): identical structure to
+/// [`greedy_increase`], but each candidate move is probed through
+/// [`ObjectiveEval::probe`] (O(1) given the cached base pair) and
+/// accepted on objective-score gain, subject to the
+/// [`ObjectiveEval::feasible`] throughput floor.  Every accepted move
+/// strictly increases the score, so the loop terminates at a local
+/// optimum of the requested objective.
+fn greedy_objective(
+    mu: &AffinityMatrix,
+    mut n: StateMatrix,
+    populations: &[u32],
+    objective: Objective,
+    power: &PowerProfile,
+    x_ref: f64,
+) -> Result<GrInSolution> {
+    let (k, l) = (mu.types(), mu.procs());
+    let mut eval = ObjectiveEval::new(mu, &n, power, objective, x_ref)?;
+    let mut moves = 0usize;
+    // Same hard cap as the throughput loop: monotone score increase
+    // guarantees termination, but guard regardless.
+    let cap = 64 + (populations.iter().sum::<u32>() as usize) * l * k * 4;
+    loop {
+        let mut improved = false;
+        for row in 0..k {
+            let base = eval.base();
+            let score0 = eval.score_of(base.0, base.1);
+            let mut best: Option<(usize, usize, f64)> = None;
+            for from in 0..l {
+                if n.get(row, from) == 0 {
+                    continue;
+                }
+                for to in 0..l {
+                    if to == from {
+                        continue;
+                    }
+                    let (x2, p2) = eval.probe(row, from, to, base);
+                    if !eval.feasible(x2) {
+                        continue;
+                    }
+                    let gain = eval.score_of(x2, p2) - score0;
+                    if gain > GAIN_EPS && best.map_or(true, |(_, _, g)| gain > g) {
+                        best = Some((from, to, gain));
+                    }
+                }
+            }
+            if let Some((from, to, _)) = best {
+                n.move_task(row, from, to)?;
+                eval.apply_move(row, from, to);
+                moves += 1;
+                improved = true;
+            }
+        }
+        if !improved || moves >= cap {
+            break;
+        }
+    }
+    let throughput = x_of_state(mu, &n);
+    n.check_populations(populations)?;
+    Ok(GrInSolution { state: n, throughput, moves })
+}
+
 /// The Algorithm-2 greedy loop from an arbitrary feasible start state
 /// (shared by [`solve`] and [`solve_from_snapshot`]).
 fn greedy_increase(
@@ -359,27 +519,26 @@ impl Policy for GrInPolicy {
         "GrIn"
     }
 
-    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
-        let sol = solve(mu, populations)?;
-        self.steering = Some(TargetSteering::new(sol.state.clone()));
+    /// GrIn honors the full [`SolveRequest`] surface: plain, weighted
+    /// and objective-scored solves, cold or warm-started (see
+    /// [`solve_request`]).  Steering carries the request's weights when
+    /// they are effective, so target and weight vector swap as one unit.
+    fn prepare(&mut self, req: &SolveRequest<'_>) -> Result<PreparedTarget> {
+        let sol = solve_request(req)?;
+        let objective_value = if req.objective.is_throughput() {
+            sol.throughput
+        } else {
+            ObjectiveEval::new(req.mu, &sol.state, &req.power, req.objective, sol.throughput)?
+                .objective_value()
+        };
+        self.steering = Some(if req.weights_trivial() {
+            TargetSteering::new(sol.state.clone())
+        } else {
+            TargetSteering::with_weights(sol.state.clone(), req.weights.to_vec())
+        });
+        let target = sol.state.clone();
         self.solution = Some(sol);
-        Ok(())
-    }
-
-    /// The weighted solve: target from [`solve_weighted`], steering with
-    /// the same per-cell weights so target and weight vector swap as one
-    /// unit.
-    fn prepare_weighted(
-        &mut self,
-        mu: &AffinityMatrix,
-        populations: &[u32],
-        weights: &[f64],
-    ) -> Result<()> {
-        let sol = solve_weighted(mu, populations, weights)?;
-        self.steering =
-            Some(TargetSteering::with_weights(sol.state.clone(), weights.to_vec()));
-        self.solution = Some(sol);
-        Ok(())
+        Ok(PreparedTarget { target: Some(target), objective_value: Some(objective_value) })
     }
 
     fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
@@ -637,8 +796,13 @@ mod tests {
     fn policy_wrapper_steers_to_solution() {
         let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
         let mut p = GrInPolicy::new();
-        p.prepare(&mu, &[4, 4]).unwrap();
+        let prepared = p.prepare(&SolveRequest::new(&mu, &[4, 4])).unwrap();
         let sol_state = p.solution().unwrap().state.clone();
+        assert_eq!(prepared.target.as_ref(), Some(&sol_state));
+        assert!(
+            (prepared.objective_value.unwrap() - p.solution().unwrap().throughput).abs()
+                < 1e-12
+        );
         // Remove one task and let the policy re-place it.
         let mut state = sol_state.clone();
         state.dec(1, 1).unwrap();
@@ -647,5 +811,103 @@ mod tests {
         let j = p.dispatch(1, &view, &mut Rng::new(0));
         state.inc(1, j);
         assert_eq!(state, sol_state);
+    }
+
+    #[test]
+    fn solve_request_routes_to_matching_solver() {
+        let mu = crate::sim::workload::priority_mu();
+        let pops = [4u32, 16];
+        // Baseline request ≡ plain solve, bit-identical.
+        let plain = solve(&mu, &pops).unwrap();
+        let via_req = solve_request(&SolveRequest::new(&mu, &pops)).unwrap();
+        assert_eq!(plain.state, via_req.state);
+        assert_eq!(plain.throughput.to_bits(), via_req.throughput.to_bits());
+        // Weighted request ≡ solve_weighted.
+        let w = priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        let weighted = solve_weighted(&mu, &pops, &w).unwrap();
+        let via_req =
+            solve_request(&SolveRequest::new(&mu, &pops).with_weights(&w)).unwrap();
+        assert_eq!(weighted.state, via_req.state);
+        // Warm-started request ≡ solve_from_snapshot.
+        let warm = solve_from_snapshot(&mu, &pops, &plain.state).unwrap();
+        let via_req =
+            solve_request(&SolveRequest::new(&mu, &pops).with_start(&plain.state))
+                .unwrap();
+        assert_eq!(warm.state, via_req.state);
+        // Bad weight shapes and weight×energy combinations error.
+        assert!(solve_request(
+            &SolveRequest::new(&mu, &pops).with_weights(&[1.0, 2.0, 3.0])
+        )
+        .is_err());
+        assert!(solve_request(
+            &SolveRequest::new(&mu, &pops)
+                .with_weights(&w)
+                .with_objective(Objective::EnergyPerTask, PowerProfile::default())
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn energy_solve_never_worse_than_throughput_solve_on_energy() {
+        use crate::model::energy::PowerScenario;
+        let mut rng = Rng::new(606);
+        for _ in 0..25 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(8) as u32).collect();
+            let power =
+                PowerProfile::new(1.3, PowerScenario::Exponent(0.5)).with_idle(0.2);
+            let xsol = solve(&mu, &pops).unwrap();
+            for objective in [Objective::EnergyPerTask, Objective::Edp] {
+                let esol = solve_objective(&mu, &pops, objective, &power).unwrap();
+                esol.state.check_populations(&pops).unwrap();
+                let at = |s: &StateMatrix| {
+                    let ev =
+                        ObjectiveEval::new(&mu, s, &power, objective, 0.0).unwrap();
+                    ev.objective_value()
+                };
+                // The energy descent starts from the throughput solution
+                // and only accepts improving moves.
+                assert!(
+                    at(&esol.state) <= at(&xsol.state) + 1e-9,
+                    "{objective:?} solve worse than its start"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tpw_solve_respects_throughput_floor() {
+        use crate::model::energy::PowerScenario;
+        let mut rng = Rng::new(909);
+        for _ in 0..25 {
+            let k = 2 + rng.index(3);
+            let l = 2 + rng.index(3);
+            let rows: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..l).map(|_| rng.range_f64(0.5, 30.0)).collect())
+                .collect();
+            let mu = AffinityMatrix::from_rows(&rows).unwrap();
+            let pops: Vec<u32> = (0..k).map(|_| 1 + rng.below(8) as u32).collect();
+            let power = PowerProfile::new(1.0, PowerScenario::Exponent(0.5));
+            let min_x_frac = 0.85;
+            let xstar = solve(&mu, &pops).unwrap().throughput;
+            let sol = solve_objective(
+                &mu,
+                &pops,
+                Objective::ThroughputPerWatt { min_x_frac },
+                &power,
+            )
+            .unwrap();
+            assert!(
+                sol.throughput >= min_x_frac * xstar - 1e-9,
+                "TPW X {} below floor {}",
+                sol.throughput,
+                min_x_frac * xstar
+            );
+        }
     }
 }

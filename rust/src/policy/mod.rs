@@ -28,6 +28,7 @@ pub mod target;
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
 use crate::sim::rng::Rng;
 
@@ -45,47 +46,131 @@ pub struct SystemView<'a> {
     pub populations: &'a [u32],
 }
 
+/// Everything a solve needs, in one request: the (estimated) affinity
+/// matrix and populations, the scheduling [`Objective`] with its
+/// [`PowerProfile`], optional per-cell priority weights, and an optional
+/// occupancy snapshot to warm-start from (the adaptive re-solve path).
+///
+/// This is the single argument of [`Policy::prepare`] — the former
+/// `prepare`/`prepare_weighted` pair collapsed into one surface, so a
+/// new solve axis extends this struct instead of growing a third trait
+/// hook.
+#[derive(Debug, Clone, Copy)]
+pub struct SolveRequest<'a> {
+    /// Affinity matrix μ (or the μ̂ estimate on adaptive paths).
+    pub mu: &'a AffinityMatrix,
+    /// Per-type populations N_i.
+    pub populations: &'a [u32],
+    /// What the solve optimizes (default [`Objective::Throughput`]).
+    pub objective: Objective,
+    /// Power model backing the energy objectives (ignored under
+    /// [`Objective::Throughput`]).
+    pub power: PowerProfile,
+    /// Per-cell steering weights, row-major k×l (priority × estimate
+    /// confidence — see [`grin::priority_weights`]); empty = unweighted.
+    pub weights: &'a [f64],
+    /// Occupancy snapshot to warm-start the solve from; None = solve
+    /// from scratch.
+    pub start: Option<&'a StateMatrix>,
+}
+
+impl<'a> SolveRequest<'a> {
+    /// Baseline request: throughput objective, default power model, no
+    /// weights, no snapshot — the exact pre-redesign `prepare(mu, pops)`.
+    pub fn new(mu: &'a AffinityMatrix, populations: &'a [u32]) -> Self {
+        Self {
+            mu,
+            populations,
+            objective: Objective::Throughput,
+            power: PowerProfile::default(),
+            weights: &[],
+            start: None,
+        }
+    }
+
+    /// Builder: solve for `objective` under `power`.
+    pub fn with_objective(mut self, objective: Objective, power: PowerProfile) -> Self {
+        self.objective = objective;
+        self.power = power;
+        self
+    }
+
+    /// Builder: attach per-cell priority weights.
+    pub fn with_weights(mut self, weights: &'a [f64]) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Builder: warm-start from an occupancy snapshot.
+    pub fn with_start(mut self, start: &'a StateMatrix) -> Self {
+        self.start = Some(start);
+        self
+    }
+
+    /// Are the weights absent or uniform (i.e. the request reduces to an
+    /// unweighted solve)?
+    pub fn weights_trivial(&self) -> bool {
+        self.weights.is_empty()
+            || self.weights.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12)
+    }
+
+    /// Guard for objective-/weight-blind policies: validate the weight
+    /// shape, then reject any request this policy cannot honor — a
+    /// priority- or energy-configured run on such a policy fails loudly
+    /// instead of silently solving the wrong problem.  GrIn never calls
+    /// this; it handles every objective and weighting.
+    pub fn ensure_baseline(&self, policy_name: &str) -> Result<()> {
+        if !self.weights.is_empty()
+            && self.weights.len() != self.mu.types() * self.mu.procs()
+        {
+            return Err(Error::Shape(format!(
+                "{} weights for a {}×{} system",
+                self.weights.len(),
+                self.mu.types(),
+                self.mu.procs()
+            )));
+        }
+        if !self.weights_trivial() {
+            return Err(Error::Config(format!(
+                "policy {policy_name} does not support priority weights (use grin)"
+            )));
+        }
+        if !self.objective.is_throughput() {
+            return Err(Error::Config(format!(
+                "policy {policy_name} does not support objective '{}' (use grin)",
+                self.objective.name()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// What a [`Policy::prepare`] solve produced: the target state the
+/// policy will steer toward (None for stateless policies) and the
+/// solver's objective value at that target (X, E[ℰ], EDP or X/𝒫,
+/// matching the request's objective).
+#[derive(Debug, Clone, Default)]
+pub struct PreparedTarget {
+    /// The solved target state S_max (None: nothing to steer toward).
+    pub target: Option<StateMatrix>,
+    /// Objective magnitude at the target (None: no solve happened).
+    pub objective_value: Option<f64>,
+}
+
 /// A task-to-processor dispatch policy.
 pub trait Policy: Send {
     /// Display name (figure legends).
     fn name(&self) -> &'static str;
 
-    /// Called once before a run with the system parameters; state-target
-    /// policies solve for S_max here.
-    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
-        let _ = (mu, populations);
-        Ok(())
-    }
-
-    /// Priority-aware [`prepare`](Self::prepare): solve under per-cell
-    /// steering weights (row-major k×l, priority × estimate confidence —
-    /// see [`grin::priority_weights`]).  The default accepts only a
-    /// *uniform* weight vector (it reduces to the unweighted solve) and
-    /// rejects anything else, so a priority-configured run on a policy
-    /// that cannot honor weights fails loudly instead of silently
-    /// scheduling unweighted.  GrIn overrides this with the real
-    /// weighted solve ([`grin::solve_weighted`]).
-    fn prepare_weighted(
-        &mut self,
-        mu: &AffinityMatrix,
-        populations: &[u32],
-        weights: &[f64],
-    ) -> Result<()> {
-        if weights.len() != mu.types() * mu.procs() {
-            return Err(Error::Shape(format!(
-                "{} weights for a {}×{} system",
-                weights.len(),
-                mu.types(),
-                mu.procs()
-            )));
-        }
-        if weights.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12) {
-            return self.prepare(mu, populations);
-        }
-        Err(Error::Config(format!(
-            "policy {} does not support priority weights (use grin)",
-            self.name()
-        )))
+    /// Called once before a run (and again on every re-solve) with the
+    /// full [`SolveRequest`]; state-target policies solve for their
+    /// target here and report it back.  The default — for stateless
+    /// baselines — accepts only baseline requests (throughput objective,
+    /// no effective weights; see [`SolveRequest::ensure_baseline`]) and
+    /// returns an empty [`PreparedTarget`].
+    fn prepare(&mut self, req: &SolveRequest<'_>) -> Result<PreparedTarget> {
+        req.ensure_baseline(self.name())?;
+        Ok(PreparedTarget::default())
     }
 
     /// Does this policy read `SystemView::work`?  The engine skips the
@@ -212,5 +297,41 @@ mod tests {
             assert_eq!(p.name(), kind.name());
         }
         assert!(PolicyKind::parse("fifo").is_err());
+    }
+
+    #[test]
+    fn default_prepare_rejects_non_baseline_requests() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let pops = [4u32, 4];
+        let mut lb = PolicyKind::LoadBalance.build();
+        // Baseline and uniform-weight requests pass (uniform weights
+        // reduce to the unweighted solve, the documented contract).
+        assert!(lb.prepare(&SolveRequest::new(&mu, &pops)).is_ok());
+        let uniform = [2.0; 4];
+        assert!(lb
+            .prepare(&SolveRequest::new(&mu, &pops).with_weights(&uniform))
+            .is_ok());
+        // Wrong-shape weights → Shape error, even when uniform.
+        let bad = [1.0, 1.0, 1.0];
+        assert!(lb.prepare(&SolveRequest::new(&mu, &pops).with_weights(&bad)).is_err());
+        // Non-trivial weights and energy objectives fail loudly on a
+        // weight-/objective-blind policy …
+        let w = [2.0, 1.0, 1.0, 1.0];
+        assert!(lb.prepare(&SolveRequest::new(&mu, &pops).with_weights(&w)).is_err());
+        assert!(lb
+            .prepare(
+                &SolveRequest::new(&mu, &pops)
+                    .with_objective(Objective::EnergyPerTask, PowerProfile::default())
+            )
+            .is_err());
+        // … while GrIn honors both.
+        let mut grin = PolicyKind::GrIn.build();
+        assert!(grin
+            .prepare(
+                &SolveRequest::new(&mu, &pops)
+                    .with_objective(Objective::Edp, PowerProfile::default())
+            )
+            .is_ok());
+        assert!(grin.prepare(&SolveRequest::new(&mu, &pops).with_weights(&w)).is_ok());
     }
 }

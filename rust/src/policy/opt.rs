@@ -5,7 +5,7 @@
 //! optimum thereafter.
 
 use super::target::TargetSteering;
-use super::{Policy, SystemView};
+use super::{Policy, PreparedTarget, SolveRequest, SystemView};
 use crate::error::Result;
 use crate::model::affinity::AffinityMatrix;
 use crate::sim::rng::Rng;
@@ -35,11 +35,16 @@ impl Policy for OptPolicy {
         "Opt"
     }
 
-    fn prepare(&mut self, mu: &AffinityMatrix, populations: &[u32]) -> Result<()> {
-        let sol = ExhaustiveSolver.solve(mu, populations)?;
+    /// Opt is objective- and weight-blind (the oracle enumerates the
+    /// throughput surface only); non-baseline requests fail loudly.
+    fn prepare(&mut self, req: &SolveRequest<'_>) -> Result<PreparedTarget> {
+        req.ensure_baseline(self.name())?;
+        let sol = ExhaustiveSolver.solve(req.mu, req.populations)?;
         self.steering = Some(TargetSteering::new(sol.state.clone()));
+        let target = sol.state.clone();
+        let x = sol.throughput;
         self.solution = Some(sol);
-        Ok(())
+        Ok(PreparedTarget { target: Some(target), objective_value: Some(x) })
     }
 
     fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
@@ -67,7 +72,7 @@ mod tests {
         .unwrap();
         let pops = [4u32, 5, 3];
         let mut p = OptPolicy::new();
-        p.prepare(&mu, &pops).unwrap();
+        p.prepare(&SolveRequest::new(&mu, &pops)).unwrap();
         let opt_x = p.solution().unwrap().throughput;
         let grin_x = grin::solve(&mu, &pops).unwrap().throughput;
         assert!(opt_x >= grin_x - 1e-12);
@@ -78,7 +83,7 @@ mod tests {
         let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
         let pops = [5u32, 5];
         let mut p = OptPolicy::new();
-        p.prepare(&mu, &pops).unwrap();
+        p.prepare(&SolveRequest::new(&mu, &pops)).unwrap();
         let target = p.solution().unwrap().state.clone();
         let mut state = target.clone();
         state.dec(0, 0).unwrap();
@@ -95,7 +100,7 @@ mod tests {
         let mu = AffinityMatrix::two_type(9.0, 5.0, 2.0, 7.0).unwrap();
         let pops = [3u32, 3];
         let mut p = OptPolicy::new();
-        p.prepare(&mu, &pops).unwrap();
+        p.prepare(&SolveRequest::new(&mu, &pops)).unwrap();
         let best = p.solution().unwrap().throughput;
         for n11 in 0..=3 {
             for n22 in 0..=3 {

@@ -29,8 +29,9 @@ use crate::coordinator::global::ShardedControl;
 use crate::coordinator::stats::RateEstimator;
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SystemView};
+use crate::policy::{Policy, SolveRequest, SystemView};
 
 use super::distribution::Distribution;
 use super::eventq::EventQueue;
@@ -261,13 +262,24 @@ pub struct DynamicConfig {
     /// priorities steer every solve through the weighted objective
     /// ([`crate::policy::grin::solve_weighted`]) with weights =
     /// normalized priority × per-cell estimator confidence — GrIn only;
-    /// other policies reject them ([`Policy::prepare_weighted`]).
+    /// other policies reject them through the baseline
+    /// [`Policy::prepare`] default.
     pub priorities: Vec<u32>,
     /// Per-class soft deadlines in simulated seconds (0 = no deadline
     /// for that class; empty = deadline accounting off).  Misses and
     /// per-class p99 land in each phase's
     /// [`SimResult`](crate::sim::metrics::SimResult).
     pub deadlines: Vec<f64>,
+    /// Scheduling objective every re-solve optimizes
+    /// ([`Objective::Throughput`] reproduces the pre-objective runs bit
+    /// for bit; other objectives are GrIn-only and reject non-trivial
+    /// priorities).
+    pub objective: Objective,
+    /// Power model: drives objective scoring, per-task energy metering
+    /// (completions are charged 𝒫(μ)·ω at the rate they were pushed
+    /// with), and — when `idle_power > 0` — a per-phase idle-floor
+    /// charge over each measurement window.
+    pub power: PowerProfile,
 }
 
 impl DynamicConfig {
@@ -284,6 +296,8 @@ impl DynamicConfig {
             shard: ShardConfig::default(),
             priorities: Vec::new(),
             deadlines: Vec::new(),
+            objective: Objective::Throughput,
+            power: PowerProfile::default(),
         }
     }
 }
@@ -354,26 +368,62 @@ impl DynamicReport {
             0.0
         }
     }
+
+    /// Completion-weighted mean per-task energy across measured phases
+    /// (Eq. 20 metering at each task's push-time rate, plus any
+    /// idle-floor amortization).
+    pub fn mean_energy(&self) -> f64 {
+        let mut completed = 0u64;
+        let mut joules = 0.0f64;
+        for r in &self.phases {
+            completed += r.completed;
+            joules += r.mean_energy * r.completed as f64;
+        }
+        if completed > 0 {
+            joules / completed as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Run-level energy–delay product: completion-weighted mean energy
+    /// × completion-weighted mean response.
+    pub fn mean_edp(&self) -> f64 {
+        let mut completed = 0u64;
+        let mut resp = 0.0f64;
+        for r in &self.phases {
+            completed += r.completed;
+            resp += r.mean_response * r.completed as f64;
+        }
+        if completed > 0 {
+            self.mean_energy() * resp / completed as f64
+        } else {
+            0.0
+        }
+    }
 }
 
-/// Run the configured prepare for `policy`: the plain solve when the
-/// priority vector is trivial (empty or all-equal — see
-/// [`crate::policy::grin::trivial_priorities`]), otherwise the
-/// weighted solve under weights = normalized priority × per-cell
-/// confidence ([`crate::policy::grin::priority_weights`]).
-/// `estimator` supplies the confidence grid on the adaptive path;
-/// `None` (oracle paths: static, every-phase, and population-only
-/// boundaries before any observation-driven re-solve) means full
-/// confidence everywhere.
+/// Run the configured prepare for `policy` through one
+/// [`SolveRequest`]: the plain request when the priority vector is
+/// trivial (empty or all-equal — see
+/// [`crate::policy::grin::trivial_priorities`]), otherwise with
+/// weights = normalized priority × per-cell confidence
+/// ([`crate::policy::grin::priority_weights`]).  `estimator` supplies
+/// the confidence grid on the adaptive path; `None` (oracle paths:
+/// static, every-phase, and population-only boundaries before any
+/// observation-driven re-solve) means full confidence everywhere.
 fn prepare_policy(
     policy: &mut dyn Policy,
     mu: &AffinityMatrix,
     populations: &[u32],
     priorities: &[u32],
     estimator: Option<&RateEstimator>,
+    objective: Objective,
+    power: PowerProfile,
 ) -> Result<()> {
+    let req = SolveRequest::new(mu, populations).with_objective(objective, power);
     if crate::policy::grin::trivial_priorities(priorities) {
-        return policy.prepare(mu, populations);
+        return policy.prepare(&req).map(|_| ());
     }
     let (k, l) = (mu.types(), mu.procs());
     let confidence = match estimator {
@@ -381,7 +431,7 @@ fn prepare_policy(
         None => vec![1.0; k * l],
     };
     let weights = crate::policy::grin::priority_weights(priorities, &confidence, l)?;
-    policy.prepare_weighted(mu, populations, &weights)
+    policy.prepare(&req.with_weights(&weights)).map(|_| ())
 }
 
 /// Per-phase results of a dynamic run (thin wrapper over
@@ -435,6 +485,19 @@ pub fn run_dynamic_report(
             return Err(Error::Config("deadlines must be finite and ≥ 0".into()));
         }
     }
+    cfg.objective.validate()?;
+    cfg.power.validate()?;
+    // The sharded plane never routes through `Policy::prepare`, so the
+    // weights-×-objective conflict is rejected here with the same
+    // message `grin::solve_request` uses on the single-leader paths.
+    if cfg.resolve == ResolveMode::Sharded
+        && !cfg.objective.is_throughput()
+        && !crate::policy::grin::trivial_priorities(&cfg.priorities)
+    {
+        return Err(Error::Config(
+            "priority weights combine only with the throughput objective".into(),
+        ));
+    }
 
     let needs_work = policy.needs_work_estimate();
     let mut rng = Rng::new(cfg.seed);
@@ -457,6 +520,10 @@ pub fn run_dynamic_report(
     // Observed service times feed an estimator in both the single-leader
     // adaptive mode and (per shard) the sharded mode.
     let observes = adaptive || sharded;
+    // The idle-power floor perturbs nothing unless it is switched on:
+    // the advance-all sweeps it needs change floating-point
+    // accumulation order, and default runs must stay bit-identical.
+    let track_idle = cfg.power.idle_power > 0.0;
     let mut control: Option<ShardedControl> = if sharded {
         let mut ctl = ShardedControl::new(
             mu,
@@ -470,16 +537,20 @@ pub fn run_dynamic_report(
             // (one weighted re-install over the boot target).
             ctl.set_priorities(&cfg.priorities)?;
         }
+        if !cfg.objective.is_throughput() {
+            // Swaps the batched re-solves onto the objective-scored
+            // greedy (one re-install over the boot target).
+            ctl.set_objective(cfg.objective, cfg.power)?;
+        }
         Some(ctl)
     } else {
         None
     };
     // (task id, rate it was pushed at) for the ≤N in-flight tasks — so
-    // the estimator observes the service time the task really
-    // experienced, even when it straddles a phase boundary's rate
-    // change.  Only the estimator reads it, so non-adaptive runs skip
-    // the bookkeeping; entries are reclaimed at completion, keeping it
-    // O(in-flight), not O(completions).
+    // the energy meter and the estimator both see the service time the
+    // task really experienced, even when it straddles a phase
+    // boundary's rate change.  Entries are reclaimed at completion,
+    // keeping it O(in-flight), not O(completions).
     let mut inflight_rates: Vec<(u64, f64)> = Vec::new();
 
     // Program table: alive[i] = ids of active programs per type.
@@ -500,12 +571,28 @@ pub fn run_dynamic_report(
         match cfg.resolve {
             ResolveMode::Static => {
                 if phase_idx == 0 {
-                    prepare_policy(policy, &believed, &phase.populations, &cfg.priorities, None)?;
+                    prepare_policy(
+                        policy,
+                        &believed,
+                        &phase.populations,
+                        &cfg.priorities,
+                        None,
+                        cfg.objective,
+                        cfg.power,
+                    )?;
                 }
             }
             ResolveMode::EveryPhase => {
                 believed = actual.clone();
-                prepare_policy(policy, &believed, &phase.populations, &cfg.priorities, None)?;
+                prepare_policy(
+                    policy,
+                    &believed,
+                    &phase.populations,
+                    &cfg.priorities,
+                    None,
+                    cfg.objective,
+                    cfg.power,
+                )?;
                 if phase_idx > 0 {
                     resolves += 1;
                 }
@@ -522,6 +609,8 @@ pub fn run_dynamic_report(
                     &phase.populations,
                     &cfg.priorities,
                     Some(&estimator),
+                    cfg.objective,
+                    cfg.power,
                 )?;
             }
             ResolveMode::Sharded => {
@@ -568,9 +657,7 @@ pub fn run_dynamic_report(
                     };
                     procs[j].advance(now);
                     let rate = actual.rate(ttype, j);
-                    if observes {
-                        inflight_rates.push((task.id, rate));
-                    }
+                    inflight_rates.push((task.id, rate));
                     procs[j].push(task, rate, now);
                     state.inc(ttype, j);
                 }
@@ -599,6 +686,15 @@ pub fn run_dynamic_report(
         };
         let mut metrics = new_metrics(now);
         let mut measuring = phase.warmup == 0;
+        // Busy-time snapshot at this phase's measurement start; the
+        // idle floor is charged over the window at phase end.
+        let mut busy_at_start: Vec<f64> = Vec::new();
+        if measuring && track_idle {
+            for p in procs.iter_mut() {
+                p.advance(now);
+            }
+            busy_at_start.extend(procs.iter().map(|p| p.busy_time()));
+        }
         let mut completions = 0u64;
         while completions < total {
             let (j, t) = events
@@ -610,22 +706,32 @@ pub fn run_dynamic_report(
             events.update(j, procs[j].next_completion());
             state.dec(done.ttype, j)?;
             completions += 1;
+            // The meter and the estimator both see what a real system
+            // would measure: the task's execution at the rate it was
+            // actually pushed with (tasks straddling a rate change keep
+            // their old rate).
+            let pos = inflight_rates
+                .iter()
+                .position(|&(id, _)| id == done.id)
+                .expect("completed task has a recorded in-flight rate");
+            let (_, rate) = inflight_rates.swap_remove(pos);
             if !measuring && completions > phase.warmup {
                 measuring = true;
                 metrics = new_metrics(now);
+                if track_idle {
+                    for p in procs.iter_mut() {
+                        p.advance(now);
+                    }
+                    busy_at_start.extend(procs.iter().map(|p| p.busy_time()));
+                }
             }
             if measuring {
-                metrics.record(now, now - done.arrive, 0.0, done.ttype, j);
+                // Per-task energy at the push-time physics rate:
+                // 𝒫(μ)·ω = coeff·μ^α · (size/μ), Eq. 20's integrand.
+                let e = cfg.power.task_power(rate) * done.size / rate;
+                metrics.record(now, now - done.arrive, e, done.ttype, j);
             }
-            // The estimator sees what a real system would measure: the
-            // task's execution time at the rate it was actually pushed
-            // with (tasks straddling a rate change keep their old rate).
             if observes {
-                let pos = inflight_rates
-                    .iter()
-                    .position(|&(id, _)| id == done.id)
-                    .expect("completed task has a recorded in-flight rate");
-                let (_, rate) = inflight_rates.swap_remove(pos);
                 let service_s = done.size / rate;
                 match control.as_mut() {
                     // The sharded plane syncs (gather + batched
@@ -676,6 +782,8 @@ pub fn run_dynamic_report(
                         &phase.populations,
                         &cfg.priorities,
                         Some(&estimator),
+                        cfg.objective,
+                        cfg.power,
                     )
                     .is_ok()
                     {
@@ -713,12 +821,24 @@ pub fn run_dynamic_report(
             };
             procs[dest].advance(now);
             let rate = actual.rate(ttype, dest);
-            if observes {
-                inflight_rates.push((task.id, rate));
-            }
+            inflight_rates.push((task.id, rate));
             procs[dest].push(task, rate, now);
             events.update(dest, procs[dest].next_completion());
             state.inc(ttype, dest);
+        }
+        if track_idle && !busy_at_start.is_empty() {
+            // Charge the idle floor for each processor's idle share of
+            // this phase's measurement window.
+            for p in procs.iter_mut() {
+                p.advance(now);
+            }
+            let elapsed = metrics.elapsed();
+            let mut idle_e = 0.0;
+            for (j, p) in procs.iter().enumerate() {
+                let busy = p.busy_time() - busy_at_start[j];
+                idle_e += (elapsed - busy).max(0.0) * cfg.power.idle_power;
+            }
+            metrics.add_idle_energy(idle_e);
         }
         results.push(metrics.finalize(phase.populations.iter().sum()));
         // Retired programs that still hold an in-flight task will drain
@@ -996,6 +1116,53 @@ mod tests {
             throttled[1].throughput,
             flat[1].throughput
         );
+    }
+
+    #[test]
+    fn dynamic_runs_meter_real_task_energy() {
+        // Proportional power at coeff 1: a task's energy is its size
+        // (𝒫·ω = μ·(size/μ)), so E[ℰ] ≈ E[size] = 1 wherever tasks
+        // land; the idle floor can only add on top.
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 300, 4_000)]);
+        cfg.seed = 7;
+        let mut p = PolicyKind::GrIn.build();
+        let base = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert!(
+            (base.mean_energy() - 1.0).abs() < 0.05,
+            "E[ℰ] = {}",
+            base.mean_energy()
+        );
+        assert!(base.mean_edp() > 0.0);
+        let mut cfg_idle = cfg.clone();
+        cfg_idle.power = PowerProfile::default().with_idle(0.5);
+        let mut p = PolicyKind::GrIn.build();
+        let idled = run_dynamic_report(&mu, &cfg_idle, p.as_mut()).unwrap();
+        assert!(idled.mean_energy() >= base.mean_energy() - 1e-9);
+    }
+
+    #[test]
+    fn energy_objective_threads_through_the_dynamic_loop() {
+        use crate::model::energy::PowerScenario;
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 100, 1_500)]);
+        cfg.objective = Objective::EnergyPerTask;
+        cfg.power = PowerProfile::new(1.0, PowerScenario::Exponent(0.5));
+        cfg.seed = 11;
+        let mut p = PolicyKind::GrIn.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert!(report.phases[0].throughput > 0.0);
+        assert!(report.mean_energy() > 0.0);
+        // Objective-blind policies reject the energy objective loudly.
+        let mut p = PolicyKind::Cab.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
+        // Non-trivial priorities cannot combine with a non-throughput
+        // objective — even on the sharded plane, which bypasses
+        // `Policy::prepare`.
+        cfg.priorities = vec![4, 1];
+        cfg.resolve = ResolveMode::Sharded;
+        let mut p = PolicyKind::GrIn.build();
+        assert!(run_dynamic_report(&mu, &cfg, p.as_mut()).is_err());
     }
 
     #[test]

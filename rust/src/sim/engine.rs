@@ -21,8 +21,9 @@
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::energy::{EnergyModel, PowerScenario};
+use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SystemView};
+use crate::policy::{Policy, SolveRequest, SystemView};
 
 use super::distribution::Distribution;
 use super::eventq::EventQueue;
@@ -44,6 +45,13 @@ pub struct SimConfig {
     pub power_coeff: f64,
     /// Power scenario (α).
     pub power: PowerScenario,
+    /// Power drawn by an idle processor (the idle-power floor); 0 keeps
+    /// the exact pre-objective energy accounting.
+    pub idle_power: f64,
+    /// What the policy's solve optimizes (threaded into
+    /// [`Policy::prepare`]; [`Objective::Throughput`] reproduces every
+    /// pre-objective run bit-for-bit).
+    pub objective: Objective,
     /// Completions to discard before measuring.
     pub warmup: u64,
     /// Completions to measure.
@@ -62,6 +70,8 @@ impl SimConfig {
             dist: Distribution::Exponential,
             power_coeff: 1.0,
             power: PowerScenario::Proportional,
+            idle_power: 0.0,
+            objective: Objective::Throughput,
             warmup: 2_000,
             measure: 20_000,
             seed: 0xC_A_B,
@@ -71,6 +81,11 @@ impl SimConfig {
     /// Total programs N.
     pub fn n_programs(&self) -> u32 {
         self.populations.iter().sum()
+    }
+
+    /// The [`PowerProfile`] this run's solve and energy accounting share.
+    pub fn power_profile(&self) -> PowerProfile {
+        PowerProfile::new(self.power_coeff, self.power).with_idle(self.idle_power)
     }
 }
 
@@ -178,7 +193,11 @@ impl<'a> ClosedNetwork<'a> {
         let cfg = &self.cfg;
         let (k, l) = (mu.types(), mu.procs());
         let energy = EnergyModel::new(mu, cfg.power_coeff, cfg.power)?;
-        policy.prepare(mu, &cfg.populations)?;
+        let profile = cfg.power_profile();
+        profile.validate()?;
+        policy.prepare(
+            &SolveRequest::new(mu, &cfg.populations).with_objective(cfg.objective, profile),
+        )?;
 
         let needs_work = policy.needs_work_estimate();
         let mut rng = Rng::new(cfg.seed);
@@ -227,6 +246,11 @@ impl<'a> ClosedNetwork<'a> {
         let mut measuring = false;
         let mut now = 0.0f64;
         let mut completions = 0u64;
+        // Idle-power accounting is strictly gated on a non-zero floor:
+        // the mid-run advance-all it needs perturbs the floating-point
+        // accumulation order, and default runs must stay bit-identical.
+        let track_idle = cfg.idle_power > 0.0;
+        let mut busy_at_start: Vec<f64> = Vec::new();
 
         while completions < total {
             // Next completion across processors: O(1) peek instead of the
@@ -246,6 +270,12 @@ impl<'a> ClosedNetwork<'a> {
             if !measuring && completions > cfg.warmup {
                 measuring = true;
                 arena.metrics.reset(k, l, now);
+                if track_idle {
+                    for p in arena.procs.iter_mut() {
+                        p.advance(now);
+                    }
+                    busy_at_start.extend(arena.procs.iter().map(|p| p.busy_time()));
+                }
             }
             if measuring {
                 let omega = done.size / mu.rate(done.ttype, j);
@@ -284,6 +314,22 @@ impl<'a> ClosedNetwork<'a> {
             // Invariant: the closed system always holds exactly N tasks
             // (debug builds only; the O(k·l) scan vanishes in release).
             debug_assert_eq!(state.total(), cfg.n_programs());
+        }
+
+        if track_idle && !busy_at_start.is_empty() {
+            // Charge the idle floor for each processor's idle share of
+            // the measurement window: window length minus its busy-time
+            // delta across it.
+            for p in arena.procs.iter_mut() {
+                p.advance(now);
+            }
+            let elapsed = arena.metrics.elapsed();
+            let mut idle_e = 0.0;
+            for (j, p) in arena.procs.iter().enumerate() {
+                let busy = p.busy_time() - busy_at_start[j];
+                idle_e += (elapsed - busy).max(0.0) * cfg.idle_power;
+            }
+            arena.metrics.add_idle_energy(idle_e);
         }
 
         Ok(arena.metrics.finalize(cfg.n_programs()))
@@ -412,6 +458,63 @@ mod tests {
         }
         let rel = (xs[0] - xs[1]).abs() / xs[0];
         assert!(rel < 0.08, "PS vs FCFS gap too large: {xs:?}");
+    }
+
+    #[test]
+    fn idle_power_floor_charges_the_drained_processor() {
+        // One task type, best-fit on processor 0: processor 1 never
+        // receives a task, so with an idle floor E[ℰ] grows by exactly
+        // idle_power/X (its whole-window idle draw amortized per task).
+        let mu = AffinityMatrix::from_rows(&[vec![10.0, 1.0]]).unwrap();
+        let mut cfg = quick_cfg(vec![6]);
+        cfg.dist = Distribution::Constant;
+        let base = ClosedNetwork::new(&mu, cfg.clone())
+            .unwrap()
+            .run(PolicyKind::BestFit.build().as_mut())
+            .unwrap();
+        cfg.idle_power = 2.0;
+        let idled = ClosedNetwork::new(&mu, cfg)
+            .unwrap()
+            .run(PolicyKind::BestFit.build().as_mut())
+            .unwrap();
+        assert_eq!(base.throughput.to_bits(), idled.throughput.to_bits());
+        let delta = idled.mean_energy - base.mean_energy;
+        assert!(
+            (delta - 2.0 / idled.throughput).abs() < 1e-9,
+            "idle charge {delta} vs {}",
+            2.0 / idled.throughput
+        );
+    }
+
+    #[test]
+    fn energy_objective_threads_through_the_engine() {
+        // An energy-objective run solves and simulates end to end; with
+        // the throughput objective the config reproduces the default
+        // run bit-for-bit (the API-redesign compatibility gate).
+        let mu = crate::sim::workload::table3::general_symmetric();
+        let mut cfg = quick_cfg(vec![10, 10]);
+        cfg.power = PowerScenario::Exponent(0.5);
+        let plain = ClosedNetwork::new(&mu, cfg.clone())
+            .unwrap()
+            .run(PolicyKind::GrIn.build().as_mut())
+            .unwrap();
+        cfg.objective = Objective::Throughput;
+        let explicit = ClosedNetwork::new(&mu, cfg.clone())
+            .unwrap()
+            .run(PolicyKind::GrIn.build().as_mut())
+            .unwrap();
+        assert_eq!(plain.throughput.to_bits(), explicit.throughput.to_bits());
+        cfg.objective = Objective::EnergyPerTask;
+        let energy = ClosedNetwork::new(&mu, cfg.clone())
+            .unwrap()
+            .run(PolicyKind::GrIn.build().as_mut())
+            .unwrap();
+        assert!(energy.mean_energy > 0.0 && energy.throughput > 0.0);
+        // Objective-blind policies reject the energy objective loudly.
+        assert!(ClosedNetwork::new(&mu, cfg)
+            .unwrap()
+            .run(PolicyKind::Cab.build().as_mut())
+            .is_err());
     }
 
     #[test]

@@ -98,6 +98,16 @@ impl Metrics {
         }
     }
 
+    /// Charge idle-floor energy accrued over the measurement window
+    /// (Σ_j idle_power·idle_time_j); it amortizes into E[ℰ_sim] across
+    /// the window's completions.  Call once, before
+    /// [`finalize`](Self::finalize); runs without an idle-power floor
+    /// never call it and keep the exact pre-objective energy accounting.
+    pub fn add_idle_energy(&mut self, energy: f64) {
+        debug_assert!(energy >= 0.0);
+        self.sum_energy += energy;
+    }
+
     /// Elapsed measurement time.
     pub fn elapsed(&self) -> f64 {
         self.t_last - self.t_start
@@ -233,6 +243,18 @@ mod tests {
         assert!((r.mean_energy - 1.0).abs() < 1e-12);
         assert!((r.edp - 3.0).abs() < 1e-12);
         assert!((r.little_product - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_energy_amortizes_into_mean_energy() {
+        let mut m = Metrics::new(1, 2, 0.0);
+        m.record(1.0, 1.0, 0.5, 0, 0);
+        m.record(2.0, 1.0, 0.5, 0, 1);
+        m.add_idle_energy(3.0);
+        let r = m.finalize(2);
+        // (0.5 + 0.5 + 3.0) / 2 completions.
+        assert!((r.mean_energy - 2.0).abs() < 1e-12);
+        assert!((r.edp - r.mean_energy * r.mean_response).abs() < 1e-12);
     }
 
     #[test]

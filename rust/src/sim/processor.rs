@@ -102,6 +102,9 @@ pub struct Processor {
     last_update: f64,
     /// Σ remaining/rate over residents, as of `last_update`.
     work_time: f64,
+    /// Cumulative time this processor spent busy (occupancy > 0), as of
+    /// `last_update` — the idle-power accounting signal.
+    busy_time: f64,
     seq: u64,
 }
 
@@ -116,6 +119,7 @@ impl Processor {
             vtime: 0.0,
             last_update: 0.0,
             work_time: 0.0,
+            busy_time: 0.0,
             seq: 0,
         }
     }
@@ -129,6 +133,7 @@ impl Processor {
         self.vtime = 0.0;
         self.last_update = 0.0;
         self.work_time = 0.0;
+        self.busy_time = 0.0;
         self.seq = 0;
     }
 
@@ -144,6 +149,14 @@ impl Processor {
     #[inline]
     pub fn remaining_work_time(&self) -> f64 {
         self.work_time
+    }
+
+    /// Cumulative busy time (occupancy > 0) as of the last `advance` —
+    /// idle time over a window is the window length minus the busy-time
+    /// delta across it (the idle-power floor's accounting signal).
+    #[inline]
+    pub fn busy_time(&self) -> f64 {
+        self.busy_time
     }
 
     /// Progress all active residents to time `now` — O(1) for every
@@ -182,6 +195,7 @@ impl Processor {
                 if self.work_time < 0.0 {
                     self.work_time = 0.0;
                 }
+                self.busy_time += dt;
             }
         }
         self.last_update = now;
@@ -594,6 +608,28 @@ mod tests {
         // The aggregate drains at exactly 1 per unit busy time.
         p.advance(0.5);
         assert!((p.remaining_work_time() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn busy_time_accumulates_only_while_occupied() {
+        let mut p = Processor::new(0, Discipline::Fcfs);
+        assert_eq!(p.busy_time(), 0.0);
+        // Idle gap: no busy time accrues.
+        p.advance(1.0);
+        assert_eq!(p.busy_time(), 0.0);
+        p.push(task(1, 0, 2.0), 1.0, 1.0);
+        p.advance(2.5);
+        assert!((p.busy_time() - 1.5).abs() < 1e-12);
+        let t = p.next_completion().unwrap();
+        p.advance(t);
+        p.pop_completed(t).unwrap();
+        assert!((p.busy_time() - 2.0).abs() < 1e-12);
+        // Idle again after the queue drains.
+        p.advance(t + 3.0);
+        assert!((p.busy_time() - 2.0).abs() < 1e-12);
+        // reset clears the accumulator.
+        p.reset(Discipline::Fcfs);
+        assert_eq!(p.busy_time(), 0.0);
     }
 
     #[test]

@@ -94,6 +94,13 @@ pub struct CellStats {
     pub mean_response: f64,
     /// 95% CI half-width for E[T] (t-corrected like `ci95_x`).
     pub ci95_response: f64,
+    /// Mean per-task energy E[ℰ] across replications (Eq. 19 metering
+    /// under the cell's power profile).
+    pub mean_energy: f64,
+    /// 95% CI half-width for E[ℰ] (t-corrected like `ci95_x`).
+    pub ci95_energy: f64,
+    /// Mean energy–delay product (Eq. 21) across replications.
+    pub mean_edp: f64,
 }
 
 /// Deterministic replication seed: depends only on (base, cell salt,
@@ -114,9 +121,10 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
     let jobs = cells.len() * reps;
     let threads = plan.effective_threads().clamp(1, jobs);
     let next = AtomicUsize::new(0);
-    // (throughput, mean response) per job, slot-addressed so aggregation
-    // order — and therefore every fp sum — is independent of scheduling.
-    let results: Mutex<Vec<Option<(f64, f64)>>> = Mutex::new(vec![None; jobs]);
+    // (throughput, mean response, energy/task, EDP) per job,
+    // slot-addressed so aggregation order — and therefore every fp sum
+    // — is independent of scheduling.
+    let results: Mutex<Vec<Option<(f64, f64, f64, f64)>>> = Mutex::new(vec![None; jobs]);
     let failure: Mutex<Option<Error>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
@@ -141,8 +149,12 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
                     });
                     match run {
                         Ok(res) => {
-                            results.lock().expect("results lock")[i] =
-                                Some((res.throughput, res.mean_response));
+                            results.lock().expect("results lock")[i] = Some((
+                                res.throughput,
+                                res.mean_response,
+                                res.mean_energy,
+                                res.edp,
+                            ));
                         }
                         Err(e) => {
                             *failure.lock().expect("failure lock") = Some(e);
@@ -163,15 +175,21 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
         let slice = &results[c * reps..(c + 1) * reps];
         let mut xs = Vec::with_capacity(reps);
         let mut ts = Vec::with_capacity(reps);
+        let mut es = Vec::with_capacity(reps);
+        let mut ds = Vec::with_capacity(reps);
         for slot in slice {
-            let (x, t) = slot.ok_or_else(|| {
+            let (x, t, e, dp) = slot.ok_or_else(|| {
                 Error::Runtime(format!("cell '{}' missing a replication", cell.label))
             })?;
             xs.push(x);
             ts.push(t);
+            es.push(e);
+            ds.push(dp);
         }
         let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
         let (mean_response, _, ci95_response) = mean_sd_ci(&ts);
+        let (mean_energy, _, ci95_energy) = mean_sd_ci(&es);
+        let (mean_edp, _, _) = mean_sd_ci(&ds);
         out.push(CellStats {
             label: cell.label.clone(),
             reps: plan.reps,
@@ -180,6 +198,9 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
             ci95_x,
             mean_response,
             ci95_response,
+            mean_energy,
+            ci95_energy,
+            mean_edp,
         });
     }
     Ok(out)
@@ -227,6 +248,10 @@ pub struct DynCellStats {
     /// Mean per-class deadline-miss rate across replications (all zero
     /// when the cell configures no deadlines).
     pub mean_miss_rate: Vec<f64>,
+    /// Mean per-task energy across replications
+    /// ([`super::dynamic::DynamicReport::mean_energy`] per run) — the
+    /// A/B signal of the energy-objective arm.
+    pub mean_energy: f64,
 }
 
 /// Fan R seeded replications of each dynamic cell across the worker
@@ -241,7 +266,7 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
     let jobs: Vec<(usize, u32)> = (0..cells.len())
         .flat_map(|c| (0..plan.reps).map(move |r| (c, r)))
         .collect();
-    type RunStats = (f64, u64, Vec<f64>, Vec<f64>);
+    type RunStats = (f64, u64, Vec<f64>, Vec<f64>, f64);
     let runs: Vec<Result<RunStats>> = parallel_map(&jobs, plan.threads, |_, &(c, r)| {
         let cell = &cells[c];
         let mut cfg = cell.cfg.clone();
@@ -251,7 +276,13 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
             let k = cell.mu.types();
             let class_x: Vec<f64> = (0..k).map(|i| report.class_throughput(i)).collect();
             let miss: Vec<f64> = (0..k).map(|i| report.deadline_miss_rate(i)).collect();
-            (report.mean_throughput(), report.resolves, class_x, miss)
+            (
+                report.mean_throughput(),
+                report.resolves,
+                class_x,
+                miss,
+                report.mean_energy(),
+            )
         })
     });
     let mut it = runs.into_iter();
@@ -259,12 +290,15 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
     for cell in cells {
         let k = cell.mu.types();
         let mut xs = Vec::with_capacity(reps);
+        let mut es = Vec::with_capacity(reps);
         let mut resolve_total = 0u64;
         let mut class_x_sum = vec![0.0f64; k];
         let mut miss_sum = vec![0.0f64; k];
         for _ in 0..reps {
-            let (x, resolves, class_x, miss) = it.next().expect("one slot per job")?;
+            let (x, resolves, class_x, miss, energy) =
+                it.next().expect("one slot per job")?;
             xs.push(x);
+            es.push(energy);
             resolve_total += resolves;
             for (acc, v) in class_x_sum.iter_mut().zip(&class_x) {
                 *acc += v;
@@ -274,6 +308,7 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
             }
         }
         let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
+        let (mean_energy, _, _) = mean_sd_ci(&es);
         out.push(DynCellStats {
             label: cell.label.clone(),
             reps: plan.reps,
@@ -283,6 +318,7 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
             mean_resolves: resolve_total as f64 / reps as f64,
             mean_class_x: class_x_sum.iter().map(|s| s / reps as f64).collect(),
             mean_miss_rate: miss_sum.iter().map(|s| s / reps as f64).collect(),
+            mean_energy,
         });
     }
     Ok(out)
@@ -392,6 +428,11 @@ mod tests {
         for (a, b) in one.iter().zip(&four) {
             assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits(), "{}", a.label);
             assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits(), "{}", a.label);
+            // The energy aggregates are slot-ordered too.
+            assert_eq!(a.mean_energy.to_bits(), b.mean_energy.to_bits(), "{}", a.label);
+            assert_eq!(a.ci95_energy.to_bits(), b.ci95_energy.to_bits(), "{}", a.label);
+            assert_eq!(a.mean_edp.to_bits(), b.mean_edp.to_bits(), "{}", a.label);
+            assert!(a.mean_energy > 0.0 && a.mean_edp > 0.0, "{}", a.label);
         }
     }
 
@@ -480,6 +521,8 @@ mod tests {
                 assert_eq!(ax.to_bits(), bx.to_bits(), "{}", a.label);
             }
             assert!(a.mean_miss_rate.iter().all(|&m| m == 0.0));
+            assert_eq!(a.mean_energy.to_bits(), b.mean_energy.to_bits(), "{}", a.label);
+            assert!(a.mean_energy > 0.0, "{}", a.label);
         }
         assert!(run_dynamic_cells(&[], &mk(1)).is_err());
     }

@@ -1,0 +1,280 @@
+//! Energy/EDP objective-axis end-to-end gates (the PR-6 acceptance
+//! suite).
+//!
+//! The unified solve surface ([`SolveRequest`] → [`Policy::prepare`] →
+//! [`PreparedTarget`]) must be a strict superset of the pre-redesign
+//! throughput paths, and the energy axis must actually buy energy:
+//!
+//! * throughput-objective `prepare` is bit-identical to the plain
+//!   `grin::solve` on random k×l instances;
+//! * the incremental [`ObjectiveEval`] agrees with a from-scratch
+//!   rebuild within 1e-9 along random greedy-style move walks;
+//! * energy-mode GrIn beats the load-balancing split by ≥ 1.08× on
+//!   energy per task over the Table-3 general-symmetric system;
+//! * the throughput-per-watt objective holds X ≥ min_x_frac·X*;
+//! * Eq. 19 energy respects the Lemma-7 α-bounds on random instances;
+//! * greedy EDP lands within 5% of the exhaustive two-type optimum;
+//! * the energy-objective arm replicates bit-identically across worker
+//!   thread counts.
+
+use hetsched::model::energy::{EnergyModel, PowerScenario};
+use hetsched::model::objective::{Objective, ObjectiveEval, PowerProfile};
+use hetsched::model::state::StateMatrix;
+use hetsched::model::throughput::x_of_state;
+use hetsched::policy::{grin, Policy, PolicyKind, SolveRequest};
+use hetsched::sim::dynamic::{DynamicConfig, ResolveMode};
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload::{self, scenario_phases, ScenarioKind, ScenarioParams};
+use hetsched::testkit::prop::forall;
+
+#[test]
+fn throughput_objective_prepare_is_bit_identical_to_plain_solve() {
+    // The api_redesign invariant: routing the default request through
+    // the unified surface changes nothing — state for state, bit for
+    // bit on the objective value — across random k×l instances.
+    let mut rng = Rng::new(0xE6E1);
+    for _ in 0..40 {
+        let k = 2 + rng.index(3);
+        let l = 2 + rng.index(3);
+        let mu = workload::random_mu(&mut rng, k, l, 0.5, 30.0).unwrap();
+        let pops = workload::random_populations(&mut rng, k, 12);
+        let plain = grin::solve(&mu, &pops).unwrap();
+        let mut policy = PolicyKind::GrIn.build();
+        let prepared = policy
+            .prepare(&SolveRequest::new(&mu, &pops))
+            .unwrap();
+        assert_eq!(prepared.target.as_ref(), Some(&plain.state));
+        assert_eq!(
+            prepared.objective_value.unwrap().to_bits(),
+            plain.throughput.to_bits(),
+            "prepare() drifted from grin::solve on a {k}x{l} instance"
+        );
+        // The explicit-throughput spelling is the same request.
+        let explicit = grin::solve_request(
+            &SolveRequest::new(&mu, &pops)
+                .with_objective(Objective::Throughput, PowerProfile::default()),
+        )
+        .unwrap();
+        assert_eq!(explicit.state, plain.state);
+        assert_eq!(explicit.throughput.to_bits(), plain.throughput.to_bits());
+    }
+}
+
+#[test]
+fn incremental_objective_eval_tracks_full_recompute_within_1e9() {
+    // Probe/apply along random move walks vs a from-scratch evaluator
+    // and the Eq. 19/21 EnergyModel: ≤ 1e-9 everywhere.
+    forall(0xE6E2, 60, |g| {
+        let k = g.usize_in(2, 4);
+        let l = g.usize_in(2, 4);
+        let mu = workload::random_mu(g.rng, k, l, 0.5, 30.0)
+            .map_err(|e| e.to_string())?;
+        let pops = g.populations(k, 6);
+        let mut s = g.state(&pops, l);
+        if s.total() == 0 {
+            s.set(0, 0, 1);
+        }
+        let profile = PowerProfile::new(
+            g.f64_in(0.5, 3.0),
+            PowerScenario::Exponent(g.f64_in(-1.0, 1.0)),
+        )
+        .with_idle(g.f64_in(0.0, 1.0));
+        let objective = match g.usize_in(0, 2) {
+            0 => Objective::EnergyPerTask,
+            1 => Objective::Edp,
+            _ => Objective::ThroughputPerWatt { min_x_frac: 0.5 },
+        };
+        let mut eval = ObjectiveEval::new(&mu, &s, &profile, objective, 1.0)
+            .map_err(|e| e.to_string())?;
+        for _ in 0..12 {
+            // Random legal move: a populated (p, from) to some other column.
+            let p = g.usize_in(0, k - 1);
+            let from = g.usize_in(0, l - 1);
+            let to = (from + g.usize_in(1, l - 1)) % l;
+            if s.get(p, from) == 0 {
+                continue;
+            }
+            let base = eval.base();
+            let (px, pp) = eval.probe(p, from, to, base);
+            s.move_task(p, from, to).map_err(|e| e.to_string())?;
+            eval.apply_move(p, from, to);
+            let fresh = ObjectiveEval::new(&mu, &s, &profile, objective, 1.0)
+                .map_err(|e| e.to_string())?;
+            let (fx, fp) = fresh.base();
+            if (px - fx).abs() > 1e-9 || (pp - fp).abs() > 1e-9 {
+                return Err(format!(
+                    "probe ({px}, {pp}) vs fresh ({fx}, {fp}) after a move"
+                ));
+            }
+            if (eval.score() - fresh.score()).abs() > 1e-9 {
+                return Err("incremental score drifted from rebuild".into());
+            }
+            // With no idle floor the evaluator is exactly Eq. 19/21.
+            if profile.idle_power == 0.0 {
+                let em = EnergyModel::new(&mu, profile.coeff, profile.scenario)
+                    .map_err(|e| e.to_string())?;
+                let want = em.energy_per_task(&mu, &s);
+                if want.is_finite() && (eval.energy_per_task() - want).abs() > 1e-9 {
+                    return Err("evaluator energy drifted from EnergyModel".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn energy_mode_grin_beats_load_balancing_on_energy_per_task() {
+    // Table-3 general-symmetric (§7.4) under the α = 0.5 power model:
+    // each type is markedly more energy-efficient on its own device
+    // (energy per task on a solo cell is μ^{α−1}), so the even
+    // load-balancing split wastes ≥ 8% energy vs the energy-mode solve.
+    let mu = workload::table3::general_symmetric();
+    let pops = [10u32, 10u32];
+    let profile = PowerProfile::new(1.0, PowerScenario::Exponent(0.5));
+    let em = EnergyModel::new(&mu, profile.coeff, profile.scenario).unwrap();
+    let sol =
+        grin::solve_objective(&mu, &pops, Objective::EnergyPerTask, &profile).unwrap();
+    let e_grin = em.energy_per_task(&mu, &sol.state);
+    // Load balancing: each type split evenly across the two devices.
+    let balanced = StateMatrix::from_two_type(5, 5, 10, 10).unwrap();
+    let e_balanced = em.energy_per_task(&mu, &balanced);
+    assert!(
+        e_balanced >= 1.08 * e_grin,
+        "energy-mode GrIn {e_grin:.5} J/task vs load balancing \
+         {e_balanced:.5}: ratio {:.3} < 1.08",
+        e_balanced / e_grin
+    );
+    // And the energy solve never beats itself on throughput for free —
+    // sanity: both states carry the full population.
+    assert_eq!(sol.state.total(), 20);
+    assert!(x_of_state(&mu, &sol.state) > 0.0);
+}
+
+#[test]
+fn tpw_objective_holds_the_throughput_floor() {
+    let mu = workload::table3::general_symmetric();
+    let pops = [10u32, 10u32];
+    let profile = PowerProfile::new(1.0, PowerScenario::Constant).with_idle(0.5);
+    let x_star = grin::solve(&mu, &pops).unwrap().throughput;
+    for &frac in &[0.8, 0.9, 1.0] {
+        let sol = grin::solve_objective(
+            &mu,
+            &pops,
+            Objective::ThroughputPerWatt { min_x_frac: frac },
+            &profile,
+        )
+        .unwrap();
+        let x = x_of_state(&mu, &sol.state);
+        assert!(
+            x >= frac * x_star - 1e-9,
+            "tpw:{frac} landed at X {x:.4} below the floor {:.4}",
+            frac * x_star
+        );
+        assert_eq!(sol.state.total(), 20);
+    }
+}
+
+#[test]
+fn eq19_energy_respects_lemma7_bounds_on_random_instances() {
+    // Lemma 7 (μ ≥ 1, α ≤ 1): for α ≤ 0, 0 ≤ E[ℰ] ≤ n_busy·k/X; for
+    // 0 < α ≤ 1, n_busy·k/X ≤ E[ℰ] ≤ k.
+    forall(0xE6E7, 80, |g| {
+        let k = g.usize_in(2, 4);
+        let l = g.usize_in(2, 4);
+        let mu = workload::random_mu(g.rng, k, l, 1.0, 30.0)
+            .map_err(|e| e.to_string())?;
+        let pops = g.populations(k, 6);
+        let mut s = g.state(&pops, l);
+        if s.total() == 0 {
+            s.set(0, 0, 1);
+        }
+        let alpha = g.f64_in(-1.0, 1.0);
+        let coeff = g.f64_in(0.5, 4.0);
+        let em = EnergyModel::new(&mu, coeff, PowerScenario::Exponent(alpha))
+            .map_err(|e| e.to_string())?;
+        let x = x_of_state(&mu, &s);
+        if x <= 0.0 {
+            return Ok(());
+        }
+        let n_busy = (0..l).filter(|&j| s.col_sum(j) > 0).count();
+        let e = em.energy_per_task(&mu, &s);
+        let (lo, hi) = em.lemma7_energy_bounds(x, n_busy);
+        if e < lo - 1e-9 || e > hi + 1e-9 {
+            return Err(format!(
+                "α={alpha:.3}, k-coeff={coeff:.3}: E[ℰ]={e:.6} outside [{lo:.6}, {hi:.6}]"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn greedy_edp_matches_the_exhaustive_two_type_optimum() {
+    // Small two-type systems admit exhaustive enumeration of every
+    // (n11, n22) split; the greedy EDP solve must land within 5% of
+    // that optimum (the greedy loop is a heuristic, not an oracle —
+    // Lemma 8 guarantees monotone improvement, not global optimality).
+    for (mu, label) in [
+        (workload::paper_two_type_mu(), "paper §5"),
+        (workload::table3::general_symmetric(), "table-3 general-symmetric"),
+    ] {
+        for scenario in [PowerScenario::Constant, PowerScenario::Exponent(0.5)] {
+            let (n1, n2) = (6u32, 6u32);
+            let profile = PowerProfile::new(1.0, scenario);
+            let em = EnergyModel::new(&mu, profile.coeff, scenario).unwrap();
+            let mut best = f64::INFINITY;
+            for n11 in 0..=n1 {
+                for n22 in 0..=n2 {
+                    let s = StateMatrix::from_two_type(n11, n22, n1, n2).unwrap();
+                    if x_of_state(&mu, &s) <= 0.0 {
+                        continue;
+                    }
+                    best = best.min(em.edp(&mu, &s));
+                }
+            }
+            let sol =
+                grin::solve_objective(&mu, &[n1, n2], Objective::Edp, &profile).unwrap();
+            let got = em.edp(&mu, &sol.state);
+            assert!(
+                got <= 1.05 * best,
+                "{label} / {}: greedy EDP {got:.5} vs exhaustive {best:.5}",
+                scenario.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn energy_objective_cells_replicate_bit_identically_across_thread_counts() {
+    // The energy arm through the replication runner: seeded
+    // replications at 1 vs 4 worker threads agree bit for bit on every
+    // aggregate, the new energy means included.
+    let params = ScenarioParams {
+        phases: 3,
+        completions: 600,
+        warmup: 60,
+        ..Default::default()
+    };
+    let mut cfg =
+        DynamicConfig::new(scenario_phases(ScenarioKind::SlowDrift, &params).unwrap());
+    cfg.resolve = ResolveMode::Adaptive;
+    cfg.seed = 0xE6E9;
+    cfg.objective = Objective::EnergyPerTask;
+    cfg.power = PowerProfile::new(1.0, PowerScenario::Exponent(0.5)).with_idle(0.2);
+    let cells = vec![DynCell {
+        label: "energy".to_string(),
+        mu: workload::paper_two_type_mu(),
+        cfg,
+        policy: PolicyKind::GrIn,
+    }];
+    let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 0xACDC };
+    let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+    let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+    let (a, b) = (&one[0], &four[0]);
+    assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits());
+    assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits());
+    assert_eq!(a.mean_energy.to_bits(), b.mean_energy.to_bits());
+    assert!(a.mean_x > 0.0 && a.mean_energy > 0.0);
+}

@@ -10,7 +10,7 @@
 
 use hetsched::model::affinity::AffinityMatrix;
 use hetsched::model::state::StateMatrix;
-use hetsched::policy::{Policy, PolicyKind, SystemView};
+use hetsched::policy::{Policy, PolicyKind, SolveRequest, SystemView};
 use hetsched::sim::distribution::Distribution;
 use hetsched::sim::engine::{ClosedNetwork, Completion, SimArena, SimConfig};
 use hetsched::sim::eventq::EventQueue;
@@ -28,7 +28,7 @@ fn run_reference(
     policy: &mut dyn Policy,
 ) -> Vec<Completion> {
     let (k, l) = (mu.types(), mu.procs());
-    policy.prepare(mu, &cfg.populations).unwrap();
+    policy.prepare(&SolveRequest::new(mu, &cfg.populations)).unwrap();
     let needs_work = policy.needs_work_estimate();
     let mut rng = Rng::new(cfg.seed);
     let mut procs: Vec<ScalarProcessor> =
