@@ -12,6 +12,8 @@
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //!                    [--priorities 4,1 --deadlines 1.0,0 --threads T]
 //!                    [--objective energy|edp|tpw:0.9 --power-scenario S]
+//!                    [--kind churn --churn 0.3 --churn-limp 0.25]
+//!                    [--fault-plan "down:0@5;up:0@25" --backup-budget B]
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //!                    [--devices L --shards N --sync-every M]
@@ -63,6 +65,14 @@ const KNOBS: &[Knob] = &[
     Knob { flag: "sync-every", cap: "sharded" },
     // Priority weighting: needs a weighted-GrIn consumer.
     Knob { flag: "priorities", cap: "weighted" },
+    // Churn-shape knobs: only the churn scenario builds a schedule
+    // from them.
+    Knob { flag: "churn", cap: "churn" },
+    Knob { flag: "churn-limp", cap: "churn" },
+    // Fault injection: any scenario kind can carry an explicit plan
+    // (commands without a fault path leave these unconsumed).
+    Knob { flag: "fault-plan", cap: "faults" },
+    Knob { flag: "backup-budget", cap: "faults" },
     // Replication fan-out of `scenario --compare`.
     Knob { flag: "reps", cap: "compare" },
     Knob { flag: "threads", cap: "compare" },
@@ -109,9 +119,9 @@ COMMANDS:
              writes a bit-exact snapshot for the CI determinism gate)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
-             slow_drift | abrupt_flip | priority_mix) under a resolve
-             mode (static | every_phase | adaptive | sharded), or
-             --compare all modes side by side plus CUSUM-triggered,
+             slow_drift | abrupt_flip | priority_mix | churn) under a
+             resolve mode (static | every_phase | adaptive | sharded),
+             or --compare all modes side by side plus CUSUM-triggered,
              priority-weighted and energy-objective adaptive arms
              (--reps/--threads replicate each arm; --shards/--sync-every
              tune the sharded control plane; --trigger threshold|cusum
@@ -121,7 +131,11 @@ COMMANDS:
              soft-deadline miss accounting, 0 = none; --objective
              energy|edp|tpw:<frac> re-aims the GrIn solve with
              --power-scenario/--power-coeff/--idle-power setting the
-             power model)
+             power model; --kind churn injects device failures with
+             --churn <outage frac> and --churn-limp <slow-node factor>,
+             or give any kind an explicit --fault-plan
+             \"down:J@T;up:J@T;limp:JxF@T\" schedule, with
+             --backup-budget B capping re-dispatch backups)
   classify   classify a 2×2 μ matrix into its Table-1 regime
   platform   run the §7 platform emulation (needs `make artifacts`)
   serve      run the serving coordinator demo (--adaptive for live
@@ -424,8 +438,8 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_scenario(args: &Args) -> Result<()> {
-    use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, ResolveMode, Trigger};
-    use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
+    use crate::sim::dynamic::{run_dynamic_report, DynamicConfig, FaultPlan, ResolveMode, Trigger};
+    use crate::sim::workload::{churn_fault_plan, scenario_phases, ScenarioKind, ScenarioParams};
 
     let compare = args.switch("compare");
     let mut knobs = args.knobs(KNOBS);
@@ -448,6 +462,11 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                 .collect::<Result<_>>()?,
             None => d.drift_to,
         };
+        // The churn-shape knobs only feed the churn schedule builder;
+        // any kind can carry an explicit fault plan.  Elsewhere both
+        // sets surface as unknown flags.
+        knobs.enable_if(kind == ScenarioKind::Churn, "churn");
+        knobs.enable("faults");
         let p = ScenarioParams {
             n: args.get_parse("n", d.n)?,
             phases: args.get_parse("phases", d.phases)?,
@@ -457,8 +476,25 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             high_eta: args.get_parse("high-eta", d.high_eta)?,
             burst_factor: args.get_parse("burst-factor", d.burst_factor)?,
             drift_to,
+            churn_down: knobs.get_parse("churn", d.churn_down)?,
+            churn_limp: knobs.get_parse("churn-limp", d.churn_limp)?,
+            backup_budget: knobs.get_parse("backup-budget", d.backup_budget)?,
         };
         let mut dynamic = DynamicConfig::new(scenario_phases(kind, &p)?);
+        // Failure/recovery schedule: an explicit --fault-plan wins; a
+        // churn scenario without one gets the auto-built schedule that
+        // matches its phases.  A nonzero --backup-budget overrides the
+        // spec's own budget clause.
+        if let Some(spec) = knobs.get("fault-plan") {
+            let mut plan = FaultPlan::parse_spec(spec)?;
+            plan.validate(mu.procs())?;
+            if p.backup_budget > 0 {
+                plan.backup_budget = p.backup_budget;
+            }
+            dynamic.faults = plan;
+        } else if kind == ScenarioKind::Churn {
+            dynamic.faults = churn_fault_plan(&mu, &p)?;
+        }
         dynamic.resolve = ResolveMode::parse(args.get("resolve").unwrap_or("adaptive"))?;
         dynamic.dist = Distribution::parse(args.get("dist").unwrap_or("exp"))?;
         dynamic.seed = args.get_parse("seed", dynamic.seed)?;
@@ -538,8 +574,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         pri.iter().position(|&p| p == top).unwrap_or(0)
     };
     // (per-phase X, mean X, re-solves, per-class X, per-class miss rate,
-    //  E[ℰ]/task, EDP)
-    type ArmResult = (Vec<f64>, f64, u64, Vec<f64>, Vec<f64>, f64, f64);
+    //  E[ℰ]/task, EDP, tasks re-dispatched, downtime fraction)
+    type ArmResult = (Vec<f64>, f64, u64, Vec<f64>, Vec<f64>, f64, f64, u64, f64);
     let run_arm = |mode: ResolveMode,
                    trigger: Trigger,
                    objective: Objective,
@@ -562,6 +598,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             (0..k).map(|i| report.deadline_miss_rate(i)).collect(),
             report.mean_energy(),
             report.mean_edp(),
+            report.tasks_redispatched,
+            report.mean_downtime_frac(),
         ))
     };
 
@@ -653,6 +691,16 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             .map(|(a, r)| format!("{} {}", a.label, r.2))
             .collect();
         println!("re-solves: {}", resolve_list.join(" / "));
+        if !dynamic.faults.is_empty() {
+            // Per-arm fault response: how much work each mode had to
+            // evacuate and how much device-time the plan took away.
+            let churn_list: Vec<String> = arms
+                .iter()
+                .zip(&results)
+                .map(|(a, r)| format!("{} {} @ {:.1}%", a.label, r.7, r.8 * 100.0))
+                .collect();
+            println!("re-dispatched @ downtime: {}", churn_list.join(" / "));
+        }
         let mut summary = format!(
             "vs static mean X: adaptive {:.2}x, cusum {:.2}x, sharded {:.2}x",
             results[2].1 / results[0].1,
@@ -733,11 +781,16 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             let with_miss = !dynamic.deadlines.is_empty();
             let x_col = format!("X(class {h})");
             let miss_col = format!("miss(class {h})");
+            let with_faults = !dynamic.faults.is_empty();
             let mut headers = vec!["mode", "mean X", x_col.as_str()];
             if with_miss {
                 headers.push(miss_col.as_str());
             }
             headers.push("E[ℰ]/task");
+            if with_faults {
+                headers.push("redisp/run");
+                headers.push("down%");
+            }
             headers.push("re-solves/run");
             let mut t = Table::new(
                 format!("replicated comparison (R = {reps}, mean ± t-corrected 95% CI)"),
@@ -753,18 +806,23 @@ fn cmd_scenario(args: &Args) -> Result<()> {
                     row.push(format!("{:.1}%", s.mean_miss_rate[h] * 100.0));
                 }
                 row.push(format!("{:.4}", s.mean_energy));
+                if with_faults {
+                    row.push(format!("{:.1}", s.mean_redispatched));
+                    row.push(format!("{:.1}%", s.mean_downtime_frac * 100.0));
+                }
                 row.push(format!("{:.1}", s.mean_resolves));
                 t.row(row);
             }
             t.print();
         }
     } else {
-        let (per_phase, mean, resolves, class_x, class_miss, energy, edp) = run_arm(
-            dynamic.resolve,
-            dynamic.drift.trigger,
-            dynamic.objective,
-            dynamic.priorities.clone(),
-        )?;
+        let (per_phase, mean, resolves, class_x, class_miss, energy, edp, redispatched, downtime) =
+            run_arm(
+                dynamic.resolve,
+                dynamic.drift.trigger,
+                dynamic.objective,
+                dynamic.priorities.clone(),
+            )?;
         let mut t = Table::new(
             format!(
                 "scenario {} ({}, resolve {}, trigger {})",
@@ -784,6 +842,14 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         }
         t.print();
         println!("mean X = {mean:.4} tasks/s, {resolves} re-solves");
+        if !dynamic.faults.is_empty() {
+            println!(
+                "fault plan: {} events, {redispatched} task(s) re-dispatched, \
+                 downtime {:.1}%",
+                dynamic.faults.events.len(),
+                downtime * 100.0
+            );
+        }
         if !dynamic.objective.is_throughput() {
             println!(
                 "objective {}: E[ℰ] = {energy:.4}/task, EDP = {edp:.4}",
@@ -1040,7 +1106,7 @@ mod tests {
 
     #[test]
     fn scenario_command_runs_all_kinds_quickly() {
-        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip", "priority_mix"] {
+        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip", "priority_mix", "churn"] {
             let line = format!(
                 "scenario --kind {kind} --policy grin --phases 3 \
                  --completions 150 --warmup 20 --resolve every_phase"
@@ -1146,6 +1212,67 @@ mod tests {
                     --warmup 10 --resolve every_phase --deadlines 5.0,0";
         let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
         run(&args).unwrap();
+    }
+
+    #[test]
+    fn scenario_churn_flags_gate_and_run() {
+        // The churn kind runs end to end with its shape knobs and a
+        // re-dispatch budget cap.
+        let line = "scenario --kind churn --policy grin --phases 3 \
+                    --completions 150 --warmup 20 --resolve adaptive \
+                    --churn 0.4 --churn-limp 0.5 --backup-budget 2";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // An explicit fault plan rides on any kind.
+        let line = "scenario --kind burst --policy grin --phases 3 \
+                    --completions 150 --warmup 20 --resolve every_phase \
+                    --fault-plan down:0@2;up:0@8";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // --compare on churn reports the re-dispatch/downtime columns.
+        let line = "scenario --kind churn --policy grin --phases 2 \
+                    --completions 120 --warmup 20 --n 8 --compare --reps 2";
+        let args = Args::parse(line.split_whitespace().map(String::from)).unwrap();
+        run(&args).unwrap();
+        // Churn-shape knobs without the churn kind are flagged, not
+        // silently ignored.
+        let args = Args::parse(
+            "scenario --kind burst --phases 3 --completions 100 --warmup 10 \
+             --resolve every_phase --churn 0.4"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
+        // Malformed plans are rejected, as are events addressing
+        // devices the fleet doesn't have.
+        let args = Args::parse(
+            "scenario --kind burst --phases 3 --completions 100 --warmup 10 \
+             --fault-plan explode:0@5"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+        let args = Args::parse(
+            "scenario --kind burst --phases 3 --completions 100 --warmup 10 \
+             --fault-plan down:7@5"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        assert!(run(&args).is_err());
+        // serve has no fault-injection path: --fault-plan is flagged
+        // there, not silently ignored.
+        let args = Args::parse(
+            "serve --total 10 --fault-plan down:0@1"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let msg = run(&args).unwrap_err().to_string();
+        assert!(msg.contains("unknown flag"), "{msg}");
     }
 
     #[test]

@@ -23,10 +23,10 @@ use crate::model::energy::PowerScenario;
 use crate::model::objective::{Objective, PowerProfile};
 use crate::policy::PolicyKind;
 use crate::sim::distribution::Distribution;
-use crate::sim::dynamic::{DynamicConfig, ResolveMode, Trigger};
+use crate::sim::dynamic::{DynamicConfig, FaultPlan, ResolveMode, Trigger};
 use crate::sim::engine::SimConfig;
 use crate::sim::processor::Discipline;
-use crate::sim::workload::{scenario_phases, ScenarioKind, ScenarioParams};
+use crate::sim::workload::{churn_fault_plan, scenario_phases, ScenarioKind, ScenarioParams};
 
 use super::json::Json;
 
@@ -159,6 +159,8 @@ fn parse_power_block(p: &Json) -> Result<(PowerScenario, f64, f64)> {
 ///     "stale_after": 1000,
 ///     "shards": 2, "sync_every": 250,
 ///     "priorities": [4, 1], "deadlines": [1.0, 0],
+///     "churn_down": 0.3, "churn_limp": 0.25, "backup_budget": 4,
+///     "fault_plan": "down:0@5;up:0@25;limp:1x0.25@40",
 ///     "objective": "energy",
 ///     "power": {"scenario": "exponent", "alpha": 0.5, "coeff": 1.0, "idle": 0.0}
 ///   },
@@ -221,6 +223,15 @@ impl ScenarioSpec {
             params.drift_to =
                 v.as_arr()?.iter().map(Json::as_f64).collect::<Result<_>>()?;
         }
+        if let Some(v) = s.get("churn_down") {
+            params.churn_down = v.as_f64()?;
+        }
+        if let Some(v) = s.get("churn_limp") {
+            params.churn_limp = v.as_f64()?;
+        }
+        if let Some(v) = s.get("backup_budget") {
+            params.backup_budget = v.as_u64()? as u32;
+        }
 
         let mut dynamic = DynamicConfig::new(scenario_phases(kind, &params)?);
         // Scenario surfaces (JSON and `hetsched scenario` flags) default
@@ -274,6 +285,19 @@ impl ScenarioSpec {
             let profile = PowerProfile::new(coeff, scenario).with_idle(idle);
             profile.validate()?;
             dynamic.power = profile;
+        }
+        // Failure/recovery schedule: an explicit spec wins; a churn
+        // scenario without one gets the auto-built schedule that
+        // matches its phases.
+        if let Some(v) = s.get("fault_plan") {
+            let mut plan = FaultPlan::parse_spec(v.as_str()?)?;
+            plan.validate(mu.procs())?;
+            if s.get("backup_budget").is_some() {
+                plan.backup_budget = params.backup_budget;
+            }
+            dynamic.faults = plan;
+        } else if kind == ScenarioKind::Churn {
+            dynamic.faults = churn_fault_plan(&mu, &params)?;
         }
         if let Some(v) = j.get("distribution") {
             dynamic.dist = Distribution::parse(v.as_str()?)?;
@@ -461,6 +485,88 @@ mod tests {
         .unwrap();
         assert!(s.dynamic.priorities.is_empty());
         assert!(s.dynamic.deadlines.is_empty());
+    }
+
+    #[test]
+    fn scenario_spec_parses_churn_and_fault_plans() {
+        use crate::sim::dynamic::FaultKind;
+        // A churn scenario auto-builds its matching fault plan from the
+        // churn knobs.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "churn", "phases": 4,
+                         "churn_down": 0.4, "churn_limp": 0.5,
+                         "backup_budget": 6}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::Churn);
+        assert!((s.params.churn_down - 0.4).abs() < 1e-12);
+        assert!((s.params.churn_limp - 0.5).abs() < 1e-12);
+        assert_eq!(s.params.backup_budget, 6);
+        assert!(!s.dynamic.faults.is_empty());
+        assert_eq!(s.dynamic.faults.backup_budget, 6);
+        assert_eq!(s.dynamic.faults, churn_fault_plan(&s.mu, &s.params).unwrap());
+        // The auto plan round-trips through the spec grammar.
+        let spec = s.dynamic.faults.to_spec();
+        assert_eq!(FaultPlan::parse_spec(&spec).unwrap(), s.dynamic.faults);
+
+        // An explicit fault_plan overrides the auto schedule, and the
+        // scenario-level backup_budget overrides the spec's.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "churn", "phases": 2,
+                         "fault_plan": "down:0@5;up:0@25;limp:1x0.25@40;budget:1",
+                         "backup_budget": 9}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.dynamic.faults.events.len(), 3);
+        assert_eq!(s.dynamic.faults.events[0].kind, FaultKind::Down);
+        assert_eq!(s.dynamic.faults.events[2].kind, FaultKind::Limp(0.25));
+        assert_eq!(s.dynamic.faults.backup_budget, 9);
+
+        // Explicit plans also attach to non-churn kinds (fault-injected
+        // variants of any canned regime)...
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "phase_shift", "fault_plan": "down:1@10;up:1@20"}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::PhaseShift);
+        assert_eq!(s.dynamic.faults.events.len(), 2);
+        // ...while non-churn kinds without one stay fault-free.
+        let s = ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst"}}"#,
+        )
+        .unwrap();
+        assert!(s.dynamic.faults.is_empty());
+
+        // Bad documents are rejected loudly: unparseable specs, events
+        // addressing devices the fleet doesn't have, bad churn knobs.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst", "fault_plan": "explode:0@5"}}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[2,1],[1,2]], "policy": "grin",
+                "scenario": {"kind": "burst", "fault_plan": "down:7@5"}}"#
+        )
+        .is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[20,15],[3,8]], "policy": "grin",
+                "scenario": {"kind": "churn", "churn_down": 0.95}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -173,21 +173,38 @@ impl ShardedControl {
     /// priorities the shard pick uses the confidence-weighted deficits
     /// ([`ShardLeader::weighted_class_deficit`]), so a shard whose
     /// estimates for this class went quiet competes at a discount.
-    /// Returns the global device index.
-    pub fn route(&mut self, class: usize) -> usize {
+    /// Shards with no alive device are masked out of the pick with
+    /// sentinel scores (the deficit enumeration must stay index-aligned
+    /// with `self.shards`); with every device in the fleet down this is
+    /// [`Error::NoCapacity`], never a panic.  Returns the global device
+    /// index.
+    pub fn route(&mut self, class: usize) -> Result<usize> {
         let best = if grin::trivial_priorities(&self.priorities) {
-            pick_by_deficit(
-                self.shards
-                    .iter()
-                    .map(|leader| (leader.class_deficit(class), leader.best_rate(class))),
-            )
+            pick_by_deficit(self.shards.iter().map(|leader| {
+                if leader.has_alive() {
+                    (leader.class_deficit(class), leader.best_rate(class))
+                } else {
+                    (i64::MIN, f64::NEG_INFINITY)
+                }
+            }))
         } else {
             pick_by_weighted_deficit(self.shards.iter().map(|leader| {
-                (leader.weighted_class_deficit(class), leader.best_rate(class))
+                if leader.has_alive() {
+                    (leader.weighted_class_deficit(class), leader.best_rate(class))
+                } else {
+                    (f64::NEG_INFINITY, f64::NEG_INFINITY)
+                }
             }))
         }
         .expect("control plane has at least one shard");
-        self.shards[best].route(class)
+        if !self.shards[best].has_alive() {
+            return Err(Error::NoCapacity(
+                "every device in the sharded fleet is down".into(),
+            ));
+        }
+        self.shards[best].route(class).ok_or_else(|| {
+            Error::NoCapacity("chosen shard lost its last device mid-route".into())
+        })
     }
 
     /// Completion callback: updates the owning shard and, every
@@ -204,6 +221,65 @@ impl ShardedControl {
         }
         self.since_sync = 0;
         self.sync()
+    }
+
+    /// Completion callback for a backup (re-dispatched) task: balances
+    /// the owning shard's occupancy but feeds neither the estimator nor
+    /// the sync cadence.  A backup's service sample is the *remaining*
+    /// work of an evacuated task served at the survivor's rate — not a
+    /// unit-mean size draw — so letting it into μ̂ would bias the very
+    /// estimates churn steering depends on.
+    pub fn on_complete_silent(&mut self, class: usize, device: usize) -> Result<()> {
+        let s = *self.dev_shard.get(device).ok_or_else(|| {
+            Error::Config(format!("unknown device {device} in sharded fleet"))
+        })?;
+        self.shards[s].complete_silent(class, device)
+    }
+
+    /// Explicit down-signal: mark `device` dead in its shard (freezing
+    /// its estimator cells and clearing its occupancy column), mask the
+    /// dead column out of the believed rates, and re-solve + re-install
+    /// the shrunken target under one new epoch.  Returns `true` when the
+    /// re-solve installed new targets; `Ok(false)` when the shrunken
+    /// fleet is momentarily unsolvable (the old targets stand — routing
+    /// still avoids the dead device via the liveness masks, and the next
+    /// drift sync retries).  Idempotent.
+    pub fn mark_down(&mut self, device: usize) -> Result<bool> {
+        let s = *self.dev_shard.get(device).ok_or_else(|| {
+            Error::Config(format!("unknown device {device} in sharded fleet"))
+        })?;
+        self.shards[s].mark_down(device)?;
+        self.believed = self.believed.masked_column(device)?;
+        match self.resolve_full() {
+            Ok(sol) => {
+                self.install_global(sol.state)?;
+                self.resolves += 1;
+                Ok(true)
+            }
+            Err(_) => Ok(false),
+        }
+    }
+
+    /// Recovery signal: revive `device` in its shard (unfreezing and
+    /// resetting its estimator cells), restore its believed column from
+    /// `prior_col` (the boot prior — the estimator re-learns the live
+    /// rates from scratch), and re-solve + re-install so the recovered
+    /// capacity is put back to work.  Same graceful `Ok(false)` contract
+    /// as [`mark_down`](Self::mark_down).  Idempotent.
+    pub fn mark_up(&mut self, device: usize, prior_col: &[f64]) -> Result<bool> {
+        let s = *self.dev_shard.get(device).ok_or_else(|| {
+            Error::Config(format!("unknown device {device} in sharded fleet"))
+        })?;
+        self.shards[s].mark_up(device)?;
+        self.believed = self.believed.with_column(device, prior_col)?;
+        match self.resolve_full() {
+            Ok(sol) => {
+                self.install_global(sol.state)?;
+                self.resolves += 1;
+                Ok(true)
+            }
+            Err(_) => Ok(false),
+        }
     }
 
     /// Gather snapshots and, if any shard's change detector fired
@@ -476,7 +552,7 @@ mod tests {
         let mut placements = Vec::new();
         for class in 0..3 {
             for _ in 0..8 {
-                let j = ctl.route(class);
+                let j = ctl.route(class).unwrap();
                 assert!(j < 3);
                 routed[j] += 1;
                 placements.push((class, j));
@@ -508,7 +584,7 @@ mod tests {
             .unwrap();
         for _ in 0..64 {
             for class in 0..3 {
-                let j = ctl.route(class);
+                let j = ctl.route(class).unwrap();
                 ctl.on_complete(class, j, 1.0 / flipped.rate(class, j)).unwrap();
             }
         }
@@ -536,7 +612,7 @@ mod tests {
         // alarms, no re-solves.
         for _ in 0..30 {
             for class in 0..3 {
-                let j = ctl.route(class);
+                let j = ctl.route(class).unwrap();
                 ctl.on_complete(class, j, 1.0 / mu.rate(class, j)).unwrap();
             }
         }
@@ -546,7 +622,7 @@ mod tests {
         let flipped = mu.scaled(&workload::three_class_flip_scale()).unwrap();
         for _ in 0..40 {
             for class in 0..3 {
-                let j = ctl.route(class);
+                let j = ctl.route(class).unwrap();
                 ctl.on_complete(class, j, 1.0 / flipped.rate(class, j)).unwrap();
             }
         }
@@ -618,7 +694,7 @@ mod tests {
         // polled drift threshold, no change in who is fastest.
         for _ in 0..40 {
             for class in 0..2 {
-                let j = ctl.route(class);
+                let j = ctl.route(class).unwrap();
                 ctl.on_complete(class, j, 1.5 / mu.rate(class, j)).unwrap();
             }
         }
@@ -669,6 +745,62 @@ mod tests {
             .collect();
         assert_eq!(per_class, vec![2, 2, 20]);
         assert!(ctl.set_populations(&[1, 1]).is_err());
+    }
+
+    #[test]
+    fn mark_down_masks_routes_and_reinstalls_shrunken_target() {
+        let mut ctl = control(3);
+        let e0 = ctl.epoch();
+        // Down-signal: re-solve installs a new epoch and no route ever
+        // lands on the dead device again.
+        assert!(ctl.mark_down(1).unwrap());
+        assert_eq!(ctl.epoch(), e0 + 1);
+        assert!(ctl.believed().rate(0, 1) < 1e-6, "dead column not masked from belief");
+        for leader in ctl.shards() {
+            assert_eq!(leader.epoch(), ctl.epoch(), "torn epoch after mark_down");
+        }
+        let per_class: Vec<u32> = (0..3)
+            .map(|i| ctl.shards().iter().map(|s| s.target().row_sum(i)).sum())
+            .collect();
+        assert_eq!(per_class, vec![8, 8, 8], "shrunken target lost population");
+        for class in 0..3 {
+            for _ in 0..8 {
+                let j = ctl.route(class).unwrap();
+                assert_ne!(j, 1, "routed a task to a dead device");
+                ctl.on_complete_silent(class, j).unwrap();
+            }
+        }
+        // Recovery restores the believed column and routes flow back.
+        let mu = workload::three_class_mu();
+        let col: Vec<f64> = (0..3).map(|i| mu.rate(i, 1)).collect();
+        assert!(ctl.mark_up(1, &col).unwrap());
+        assert!((ctl.believed().rate(0, 1) - mu.rate(0, 1)).abs() < 1e-12);
+        let mut hit = false;
+        for _ in 0..24 {
+            if ctl.route(0).unwrap() == 1 {
+                hit = true;
+            }
+        }
+        assert!(hit, "recovered device never routed to");
+        // Unknown devices are rejected.
+        assert!(ctl.mark_down(99).is_err());
+    }
+
+    #[test]
+    fn all_devices_down_is_no_capacity_not_a_panic() {
+        let mut ctl = control(3);
+        for dev in 0..3 {
+            ctl.mark_down(dev).ok();
+        }
+        match ctl.route(0) {
+            Err(Error::NoCapacity(_)) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        // One recovery is enough to serve again — on the boot prior.
+        let mu = workload::three_class_mu();
+        let col: Vec<f64> = (0..3).map(|i| mu.rate(i, 2)).collect();
+        ctl.mark_up(2, &col).unwrap();
+        assert_eq!(ctl.route(0).unwrap(), 2);
     }
 
     #[test]

@@ -201,7 +201,7 @@ enum Steering {
 }
 
 impl Steering {
-    fn route(&mut self, class: usize) -> usize {
+    fn route(&mut self, class: usize) -> Result<usize> {
         match self {
             Steering::Single(router) => router.route(class),
             Steering::Sharded(ctl) => ctl.route(class),
@@ -484,7 +484,7 @@ impl Coordinator {
             let class = usize::from(!rng.bool_with(cfg.sort_fraction));
             let id = *next_id;
             *next_id += 1;
-            let j = steering.route(class);
+            let j = steering.route(class)?;
             if class == 0 {
                 work_txs[j]
                     .send(Work::Sort { id, class, arrived: Instant::now() })

@@ -29,6 +29,9 @@ pub struct Router {
     /// Power model the objective is scored against.
     power: PowerProfile,
     work: Vec<f64>,
+    /// Per-device liveness: routes never land on a device marked down
+    /// ([`mark_down`](Self::mark_down)), whatever the policy says.
+    alive: Vec<bool>,
     policy: Box<dyn Policy>,
     rng: Rng,
     routed: u64,
@@ -108,6 +111,7 @@ impl Router {
         Ok(Self {
             state: StateMatrix::zeros(k, l),
             work: vec![0.0; l],
+            alive: vec![true; l],
             mu,
             populations: expected_inflight,
             omega,
@@ -120,8 +124,11 @@ impl Router {
         })
     }
 
-    /// Route one request of `class`; returns the chosen device.
-    pub fn route(&mut self, class: usize) -> usize {
+    /// Route one request of `class`; returns the chosen device.  A
+    /// policy pick that lands on a downed device is redirected to the
+    /// least-loaded alive device; with every device down this is
+    /// [`Error::NoCapacity`], never a panic.
+    pub fn route(&mut self, class: usize) -> Result<usize> {
         let l = self.mu.procs();
         for j in 0..l {
             self.work[j] = (0..self.mu.types())
@@ -134,10 +141,50 @@ impl Router {
             work: &self.work,
             populations: &self.populations,
         };
-        let j = self.policy.dispatch(class, &view, &mut self.rng);
+        let mut j = self.policy.dispatch(class, &view, &mut self.rng);
+        if !self.alive[j] {
+            let mut fallback: Option<usize> = None;
+            for (cand, &up) in self.alive.iter().enumerate() {
+                if up && fallback.map_or(true, |f| self.work[cand] < self.work[f]) {
+                    fallback = Some(cand);
+                }
+            }
+            j = fallback.ok_or_else(|| {
+                Error::NoCapacity("every serving device is down".into())
+            })?;
+        }
         self.state.inc(class, j);
         self.routed += 1;
-        j
+        Ok(j)
+    }
+
+    /// Mark `device` down: no further route lands on it.  In-flight
+    /// requests keep draining through [`complete`](Self::complete) —
+    /// only new placements are masked.  Pair with
+    /// [`retarget`](Self::retarget) on a dead-column-masked μ̂ to move
+    /// the solved target off the device too.  Idempotent.
+    pub fn mark_down(&mut self, device: usize) -> Result<()> {
+        self.liveness_slot(device).map(|j| self.alive[j] = false)
+    }
+
+    /// Revive `device`; routes may land on it again.  Idempotent.
+    pub fn mark_up(&mut self, device: usize) -> Result<()> {
+        self.liveness_slot(device).map(|j| self.alive[j] = true)
+    }
+
+    /// Is `device` currently routable?
+    pub fn is_alive(&self, device: usize) -> Result<bool> {
+        self.liveness_slot(device).map(|j| self.alive[j])
+    }
+
+    fn liveness_slot(&self, device: usize) -> Result<usize> {
+        if device >= self.alive.len() {
+            return Err(Error::Config(format!(
+                "unknown device {device} in a {}-device fleet",
+                self.alive.len()
+            )));
+        }
+        Ok(device)
     }
 
     /// Completion callback.
@@ -235,8 +282,8 @@ mod tests {
     #[test]
     fn tracks_inflight_state() {
         let mut r = router(PolicyKind::Cab);
-        let d0 = r.route(0);
-        let d1 = r.route(1);
+        let d0 = r.route(0).unwrap();
+        let d1 = r.route(1).unwrap();
         assert_eq!(r.inflight(), 2);
         assert_eq!(r.routed(), 2);
         r.complete(0, d0).unwrap();
@@ -251,12 +298,12 @@ mod tests {
         // class-1 slots on the CPU, exactly one class-1 slot on the GPU.
         let mut r = router(PolicyKind::Cab);
         for _ in 0..10 {
-            assert_eq!(r.route(0), 0);
+            assert_eq!(r.route(0).unwrap(), 0);
         }
         // Class-1: the CPU deficit (9) dominates until it fills …
         let mut placements = Vec::new();
         for _ in 0..10 {
-            placements.push(r.route(1));
+            placements.push(r.route(1).unwrap());
         }
         assert_eq!(placements.iter().filter(|&&d| d == 0).count(), 9);
         assert_eq!(placements.iter().filter(|&&d| d == 1).count(), 1);
@@ -272,13 +319,13 @@ mod tests {
         // general-symmetric matrix: CAB flips from AF (N1, 1) to BF.
         let mut r = router(PolicyKind::Cab);
         for _ in 0..4 {
-            assert_eq!(r.route(0), 0); // AF sends class-0 to the CPU
+            assert_eq!(r.route(0).unwrap(), 0); // AF sends class-0 to the CPU
         }
         let mu2 = workload::table3::general_symmetric();
         let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
         r.retarget(mu2, omega2).unwrap();
         // BF target: class-1 deficit now sits on the GPU.
-        assert_eq!(r.route(1), 1);
+        assert_eq!(r.route(1).unwrap(), 1);
         assert!((r.mu().rate(0, 0) - 928.0).abs() < 1e-12);
         // Shape mismatches are rejected.
         let bad = crate::model::affinity::AffinityMatrix::from_rows(&[
@@ -308,16 +355,16 @@ mod tests {
         // high-priority arrival lands there, all low-priority traffic
         // keeps off it.
         for _ in 0..4 {
-            assert_eq!(r.route(0), 0);
+            assert_eq!(r.route(0).unwrap(), 0);
         }
         for _ in 0..16 {
-            assert_eq!(r.route(1), 1);
+            assert_eq!(r.route(1).unwrap(), 1);
         }
         // A plain retarget keeps the weight vector: the re-solved
         // target still reserves device 0.
         r.retarget(mu, omega).unwrap();
         r.complete(0, 0).unwrap();
-        assert_eq!(r.route(0), 0);
+        assert_eq!(r.route(0).unwrap(), 0);
         // Non-uniform weights on a weight-blind policy are rejected.
         let mu2 = workload::priority_mu();
         let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
@@ -350,7 +397,7 @@ mod tests {
             power,
         )
         .unwrap();
-        assert!(r.route(0) < 2);
+        assert!(r.route(0).unwrap() < 2);
         // Objective-blind policies reject loudly instead of silently
         // solving for throughput.
         assert!(Router::with_objective(
@@ -382,8 +429,36 @@ mod tests {
         .unwrap();
         let mut counts = [0usize; 2];
         for _ in 0..20 {
-            counts[r.route(0)] += 1;
+            counts[r.route(0).unwrap()] += 1;
         }
         assert!(counts[0] > 0 && counts[1] > 0, "{counts:?}");
+    }
+
+    #[test]
+    fn down_device_is_masked_and_all_down_is_no_capacity() {
+        // CAB's AF target sends every class-0 request to device 0; once
+        // it's down they must redirect, and an all-down fleet is a typed
+        // error rather than a panic.
+        let mut r = router(PolicyKind::Cab);
+        r.mark_down(0).unwrap();
+        assert!(!r.is_alive(0).unwrap());
+        for _ in 0..5 {
+            assert_eq!(r.route(0).unwrap(), 1, "routed to a dead device");
+        }
+        r.mark_down(1).unwrap();
+        match r.route(0) {
+            Err(Error::NoCapacity(_)) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        // In-flight requests on the dead device still complete.
+        r.complete(0, 1).unwrap();
+        // Recovery restores the policy's preferred placement; double
+        // mark_up is a no-op.
+        r.mark_up(0).unwrap();
+        r.mark_up(0).unwrap();
+        assert_eq!(r.route(0).unwrap(), 0);
+        // Out-of-range devices are rejected.
+        assert!(r.mark_down(5).is_err());
+        assert!(r.is_alive(5).is_err());
     }
 }

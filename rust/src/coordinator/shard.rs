@@ -117,6 +117,10 @@ pub struct ShardLeader {
     /// in [`install`](Self::install), so weighted deficit steering and
     /// the target always agree on the weight vector.
     norm_pri: Vec<f64>,
+    /// Per-local-device liveness (churn): routing never picks a dead
+    /// column, and snapshots mask dead columns so the global re-solve
+    /// cannot place load on them.
+    alive: Vec<bool>,
 }
 
 impl ShardLeader {
@@ -151,7 +155,52 @@ impl ShardLeader {
             epoch: 0,
             drift: drift.clone(),
             norm_pri: Vec::new(),
+            alive: vec![true; ll],
         })
+    }
+
+    /// Does the shard own at least one live device?
+    pub fn has_alive(&self) -> bool {
+        self.alive.iter().any(|&a| a)
+    }
+
+    /// Is this (global) device currently live?  Errors when the shard
+    /// does not own it.
+    pub fn is_alive(&self, device: usize) -> Result<bool> {
+        Ok(self.alive[self.local_index(device)?])
+    }
+
+    /// Device-churn down signal: the (global) device stops routing, its
+    /// estimator cells freeze ([`RateEstimator::mark_down`]), and its
+    /// occupancy column clears — the simulator evacuates the resident
+    /// tasks and re-routes them through [`route`](Self::route), which
+    /// re-increments wherever they land, so completions keep balancing.
+    pub fn mark_down(&mut self, device: usize) -> Result<()> {
+        let lj = self.local_index(device)?;
+        if !self.alive[lj] {
+            return Ok(());
+        }
+        self.alive[lj] = false;
+        self.estimator.mark_down(lj);
+        for class in 0..self.occupancy.types() {
+            while self.occupancy.get(class, lj) > 0 {
+                self.occupancy.dec(class, lj)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Device-churn recovery signal: the (global) device routes again
+    /// and its estimator cells unfreeze with a clean CUSUM
+    /// ([`RateEstimator::mark_up`]).
+    pub fn mark_up(&mut self, device: usize) -> Result<()> {
+        let lj = self.local_index(device)?;
+        if self.alive[lj] {
+            return Ok(());
+        }
+        self.alive[lj] = true;
+        self.estimator.mark_up(lj);
+        Ok(())
     }
 
     /// Shard id.
@@ -245,25 +294,38 @@ impl ShardLeader {
     /// index.  Under installed priorities both deficit and rate are
     /// scaled by w_ij = normalized priority × confidence discount, so a
     /// deficit on a cell whose estimate went quiet is discounted
-    /// against one the estimator actually trusts.  Returns the chosen
-    /// *global* device index.
-    pub fn route(&mut self, class: usize) -> usize {
+    /// against one the estimator actually trusts.  Down devices never
+    /// win (sentinel scores no live column can lose to); `None` means
+    /// every device in the shard is down — the caller routes elsewhere
+    /// or surfaces [`crate::error::Error::NoCapacity`], never panics.
+    /// Returns the chosen *global* device index.
+    pub fn route(&mut self, class: usize) -> Option<usize> {
         let ll = self.devices.len();
         let deficit = |lj: usize| {
             self.target.get(class, lj) as i64 - self.occupancy.get(class, lj) as i64
         };
         let best = if self.norm_pri.is_empty() {
-            pick_by_deficit((0..ll).map(|lj| (deficit(lj), self.solved_mu.rate(class, lj))))
+            pick_by_deficit((0..ll).map(|lj| {
+                if self.alive[lj] {
+                    (deficit(lj), self.solved_mu.rate(class, lj))
+                } else {
+                    (i64::MIN, f64::NEG_INFINITY)
+                }
+            }))
         } else {
             let pri = self.norm_pri[class];
             pick_by_weighted_deficit((0..ll).map(|lj| {
-                let w = pri * (1.0 + self.estimator.confidence(class, lj)) / 2.0;
-                (weighted_deficit(w, deficit(lj)), w * self.solved_mu.rate(class, lj))
+                if self.alive[lj] {
+                    let w = pri * (1.0 + self.estimator.confidence(class, lj)) / 2.0;
+                    (weighted_deficit(w, deficit(lj)), w * self.solved_mu.rate(class, lj))
+                } else {
+                    (f64::NEG_INFINITY, f64::NEG_INFINITY)
+                }
             }))
         }
-        .expect("shard owns at least one device");
+        .filter(|&lj| self.alive[lj])?;
         self.occupancy.inc(class, best);
-        self.devices[best]
+        Some(self.devices[best])
     }
 
     /// Completion callback: `device` is the global index the task ran
@@ -273,6 +335,15 @@ impl ShardLeader {
         self.occupancy.dec(class, lj)?;
         self.estimator.observe(class, lj, service_s);
         Ok(())
+    }
+
+    /// Completion of a re-dispatched (backup) task: occupancy
+    /// bookkeeping only.  Its service time is remaining-work at the new
+    /// device's rate — a systematically short, biased sample the
+    /// estimator must not learn from.
+    pub fn complete_silent(&mut self, class: usize, device: usize) -> Result<()> {
+        let lj = self.local_index(device)?;
+        self.occupancy.dec(class, lj)
     }
 
     /// Atomically swap the shard's routing policy: the (epoch, target,
@@ -353,14 +424,23 @@ impl ShardLeader {
     }
 
     /// The shard's report to the global gather.  `mu_hat` is
-    /// confidence-gated: stale cells report the solved rates instead of
-    /// their frozen estimates.
+    /// confidence-gated (stale cells report the solved rates instead of
+    /// their frozen estimates) and availability-masked: down columns
+    /// report [`crate::model::affinity::DEAD_RATE`], so the batched
+    /// re-solve keeps steering the fleet around dead devices on every
+    /// sync, not just the one that reacted to the down signal.
     pub fn snapshot(&self) -> Result<ShardSnapshot> {
+        let mut mu_hat = self.estimator.mu_hat_gated()?;
+        for (lj, &a) in self.alive.iter().enumerate() {
+            if !a {
+                mu_hat = mu_hat.masked_column(lj)?;
+            }
+        }
         Ok(ShardSnapshot {
             shard: self.id,
             epoch: self.epoch,
             devices: self.devices.clone(),
-            mu_hat: self.estimator.mu_hat_gated()?,
+            mu_hat,
             occupancy: self.occupancy.clone(),
             drifted: self.drifted(),
             stale: self.estimator.stale_cells(),
@@ -411,9 +491,9 @@ mod tests {
         leader.install(1, target, mu_columns(&mu, &[2, 3]).unwrap(), &[]).unwrap();
         assert_eq!(leader.epoch(), 1);
         // Equal deficits: the tie goes to the faster column (μ(0,3)=7).
-        assert_eq!(leader.route(0), 3);
+        assert_eq!(leader.route(0), Some(3));
         // Now only local device 0 (global 2) is under target.
-        assert_eq!(leader.route(0), 2);
+        assert_eq!(leader.route(0), Some(2));
         assert_eq!(leader.class_deficit(0), 0);
         assert_eq!(leader.occupancy().get(0, 0), 1);
         leader.complete(0, 2, 0.25).unwrap();
@@ -566,7 +646,7 @@ mod tests {
         assert!((leader.norm_priorities()[1] - 0.5).abs() < 1e-12);
         // With uniform (cold) confidence the weighted tie-break agrees
         // with the unweighted one: equal deficits → faster device (3).
-        assert_eq!(leader.route(0), 3);
+        assert_eq!(leader.route(0), Some(3));
         // Weighted shard deficit scales by the class priority: one
         // class-0 slot left, w = 1.5 × (1 + 0)/2.
         assert!((leader.weighted_class_deficit(0) - 0.75).abs() < 1e-12);
@@ -595,7 +675,68 @@ mod tests {
             leader.occupancy.inc(0, 1);
             leader.complete(0, 1, 0.1).unwrap();
         }
-        assert_eq!(leader.route(0), 1, "weighted route ignored confidence");
+        assert_eq!(leader.route(0), Some(1), "weighted route ignored confidence");
+    }
+
+    #[test]
+    fn down_devices_never_route_and_all_down_returns_none() {
+        // Satellite gate: an all-down shard yields None (routed
+        // elsewhere by the global layer), never a panic — and a dead
+        // column never wins even with the largest deficit.
+        let mu = AffinityMatrix::from_rows(&[
+            vec![10.0, 2.0, 4.0, 7.0],
+            vec![1.0, 8.0, 3.0, 2.0],
+        ])
+        .unwrap();
+        let mut leader = ShardLeader::new(1, vec![2, 3], &mu, &drift_cfg()).unwrap();
+        let target = StateMatrix::new(2, 2, vec![3, 1, 0, 0]).unwrap();
+        leader.install(1, target, mu_columns(&mu, &[2, 3]).unwrap(), &[]).unwrap();
+        // Device 2 (local 0) has the larger deficit but is down: routes
+        // land on 3.
+        leader.mark_down(2).unwrap();
+        assert!(!leader.is_alive(2).unwrap());
+        assert!(leader.has_alive());
+        assert_eq!(leader.route(0), Some(3));
+        // Whole shard down → None, and the snapshot masks both columns.
+        leader.mark_down(3).unwrap();
+        assert!(!leader.has_alive());
+        assert_eq!(leader.route(0), None);
+        assert_eq!(leader.route(1), None);
+        let snap = leader.snapshot().unwrap();
+        assert!(snap.mu_hat.rate(0, 0) < 1e-6, "dead column not masked in snapshot");
+        assert!(snap.mu_hat.rate(0, 1) < 1e-6, "dead column not masked in snapshot");
+        // Weighted steering honors liveness the same way.
+        let target = StateMatrix::new(2, 2, vec![3, 1, 0, 0]).unwrap();
+        leader.install(2, target, mu_columns(&mu, &[2, 3]).unwrap(), &[3, 1]).unwrap();
+        assert_eq!(leader.route(0), None, "weighted route picked a dead device");
+        // Recovery restores routing; re-marking up is idempotent.
+        leader.mark_up(2).unwrap();
+        leader.mark_up(2).unwrap();
+        assert_eq!(leader.route(0), Some(2));
+        // Devices the shard does not own are rejected, not ignored.
+        assert!(leader.mark_down(0).is_err());
+        assert!(leader.is_alive(7).is_err());
+    }
+
+    #[test]
+    fn mark_down_clears_occupancy_so_evacuated_work_rebalances() {
+        // The simulator drains a dead device and re-routes the residents
+        // through route(); if the shard kept the dead column's
+        // occupancy, those tasks would be double-counted and completions
+        // would underflow the balance.
+        let mu = AffinityMatrix::two_type(10.0, 8.0, 3.0, 9.0).unwrap();
+        let mut leader = ShardLeader::new(0, vec![0, 1], &mu, &drift_cfg()).unwrap();
+        let target = StateMatrix::new(2, 2, vec![2, 2, 0, 0]).unwrap();
+        leader.install(1, target, mu_columns(&mu, &[0, 1]).unwrap(), &[]).unwrap();
+        for _ in 0..4 {
+            leader.route(0).unwrap();
+        }
+        assert_eq!(leader.occupancy().row_sum(0), 4);
+        leader.mark_down(0).unwrap();
+        assert_eq!(leader.occupancy().get(0, 0), 0, "dead column kept occupancy");
+        // Evacuated tasks re-route to the survivor and complete cleanly.
+        assert_eq!(leader.route(0), Some(1));
+        leader.complete(0, 1, 0.1).unwrap();
     }
 
     #[test]

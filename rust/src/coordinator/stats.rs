@@ -105,6 +105,15 @@ pub struct RateEstimator {
     /// Estimator-wide completions without a fresh sample before a warm
     /// cell demotes to stale; 0 disables demotion.
     stale_after: u64,
+    /// Devices explicitly marked down ([`mark_down`](Self::mark_down)).
+    /// Their cells are *frozen*, not stale: a dead device produces no
+    /// samples by definition, so letting the staleness clock run would
+    /// decay perfectly good estimates and let half-built mini-batches
+    /// re-alarm on zero evidence.
+    down: Vec<bool>,
+    /// Staleness-clock value captured when each device went down; the
+    /// effective clock for a down device's cells.
+    down_tick: Vec<u64>,
 }
 
 impl RateEstimator {
@@ -171,7 +180,70 @@ impl RateEstimator {
             tick: 0,
             last_obs: vec![0; k * l],
             stale_after,
+            down: vec![false; l],
+            down_tick: vec![0; l],
         })
+    }
+
+    /// Staleness clock a cell experiences: global for a live device,
+    /// frozen at the failure instant for a down one.
+    fn eff_tick(&self, c: usize) -> u64 {
+        let dev = c % self.l;
+        if self.down[dev] {
+            self.down_tick[dev]
+        } else {
+            self.tick
+        }
+    }
+
+    /// Clear one device's per-cell CUSUM state: accumulated evidence and
+    /// half-built mini-batches describe the *previous* availability
+    /// regime and must not alarm across a down/up transition.
+    fn reset_cusum_column(&mut self, device: usize) {
+        for class in 0..self.k {
+            let c = class * self.l + device;
+            self.g_plus[c] = 0.0;
+            self.g_minus[c] = 0.0;
+            self.batch_sum[c] = 0.0;
+            self.batch_n[c] = 0;
+            self.alarmed[c] = false;
+        }
+        self.alarm_pending = self.alarmed.iter().any(|&a| a);
+    }
+
+    /// Mark a device down: its cells freeze (no staleness decay, no
+    /// drift signal, samples ignored) and its CUSUM column resets so a
+    /// half-built batch cannot re-alarm on zero evidence.
+    pub fn mark_down(&mut self, device: usize) {
+        if self.down[device] {
+            return;
+        }
+        self.down[device] = true;
+        self.down_tick[device] = self.tick;
+        self.reset_cusum_column(device);
+    }
+
+    /// Mark a device up again: cells unfreeze with their pre-failure
+    /// estimates treated as fresh (the rejoining device must earn a new
+    /// CUSUM excursion before it can alarm — recovery is a regime
+    /// change, not evidence of drift).
+    pub fn mark_up(&mut self, device: usize) {
+        if !self.down[device] {
+            return;
+        }
+        self.down[device] = false;
+        self.reset_cusum_column(device);
+        for class in 0..self.k {
+            let c = class * self.l + device;
+            if self.counts[c] > 0 {
+                self.last_obs[c] = self.tick;
+            }
+        }
+    }
+
+    /// Is this device currently marked down?
+    pub fn is_down(&self, device: usize) -> bool {
+        self.down[device]
     }
 
     /// Record one observed service time (seconds of pure execution, not
@@ -179,6 +251,11 @@ impl RateEstimator {
     pub fn observe(&mut self, class: usize, device: usize, service_s: f64) {
         if !(service_s.is_finite() && service_s > 0.0) {
             return; // ignore clock glitches rather than poisoning μ̂
+        }
+        if self.down[device] {
+            // A straggler completion racing the down-mark: a dead
+            // device has no service rate to estimate.
+            return;
         }
         let c = class * self.l + device;
         self.ewma[c] = (1.0 - self.alpha) * self.ewma[c] + self.alpha * service_s;
@@ -230,14 +307,18 @@ impl RateEstimator {
     /// abandoned must not keep steering on its frozen pre-flip data).
     pub fn is_warm(&self, class: usize, device: usize) -> bool {
         let c = class * self.l + device;
-        self.counts[c] >= self.min_obs && !self.cell_is_stale(c)
+        !self.down[device] && self.counts[c] >= self.min_obs && !self.cell_is_stale(c)
     }
 
     /// Number of warm cells ([`is_warm`](Self::is_warm)): observed past
-    /// `min_obs` and not demoted for staleness.
+    /// `min_obs`, not demoted for staleness, and on a live device.
     pub fn warm_cells(&self) -> usize {
         (0..self.k * self.l)
-            .filter(|&c| self.counts[c] >= self.min_obs && !self.cell_is_stale(c))
+            .filter(|&c| {
+                !self.down[c % self.l]
+                    && self.counts[c] >= self.min_obs
+                    && !self.cell_is_stale(c)
+            })
             .count()
     }
 
@@ -248,7 +329,7 @@ impl RateEstimator {
         if self.counts[c] == 0 {
             0
         } else {
-            self.tick - self.last_obs[c]
+            self.eff_tick(c) - self.last_obs[c]
         }
     }
 
@@ -260,7 +341,7 @@ impl RateEstimator {
         // comparison put the boundary off by one against the docs.
         self.stale_after > 0
             && self.counts[c] > 0
-            && self.tick - self.last_obs[c] >= self.stale_after
+            && self.eff_tick(c) - self.last_obs[c] >= self.stale_after
     }
 
     /// Has this once-observed cell gone `stale_after` estimator-wide
@@ -293,7 +374,7 @@ impl RateEstimator {
         let recency = if self.stale_after == 0 {
             1.0
         } else {
-            let staleness = (self.tick - self.last_obs[c]) as f64;
+            let staleness = (self.eff_tick(c) - self.last_obs[c]) as f64;
             0.5f64.powf(staleness / self.stale_after as f64)
         };
         count_factor * recency
@@ -803,6 +884,94 @@ mod tests {
         e.observe(0, 0, 1.0);
         assert!(!e.is_stale(0, 0));
         assert!(e.is_warm(0, 0));
+    }
+
+    #[test]
+    fn down_device_cells_freeze_instead_of_going_stale() {
+        // Satellite regression gate (down transition): once a device is
+        // explicitly marked down, its warm cells must neither decay to
+        // stale nor lose confidence while other cells' completions run
+        // the estimator-wide clock — a dead device produces no samples
+        // by definition, so absence of samples is not evidence.
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig { min_obs: 8, stale_after: 50, ..Default::default() };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        for _ in 0..16 {
+            e.observe(0, 0, 0.1);
+        }
+        // Build a half-finished slow mini-batch on the device too: the
+        // down-mark must discard it, not let it alarm on recovery.
+        for _ in 0..4 {
+            e.observe(1, 0, 0.9);
+        }
+        let conf_before = e.confidence(0, 0);
+        e.mark_down(0);
+        assert!(e.is_down(0));
+        assert!(!e.is_warm(0, 0), "down device still signalling drift");
+        // Far past stale_after on the global clock...
+        for _ in 0..200 {
+            e.observe(0, 1, 0.1);
+        }
+        // ...the frozen cell is neither stale nor decayed: staleness
+        // holds at its value when the device went down (4 completions).
+        assert!(!e.is_stale(0, 0), "frozen cell decayed to stale");
+        assert_eq!(e.staleness(0, 0), 4);
+        assert!((e.confidence(0, 0) - conf_before).abs() < 1e-12);
+        // Samples racing the down-mark are ignored.
+        e.observe(0, 0, 5.0);
+        assert_eq!(e.count(0, 0), 16);
+        assert!(!e.alarm_pending());
+    }
+
+    #[test]
+    fn recovered_device_resumes_fresh_without_re_alarming() {
+        // Satellite regression gate (up transition): recovery restarts
+        // the column with a clean CUSUM — no alarm from pre-failure
+        // residue or zero-sample batches — and the cells come back warm
+        // (fresh staleness clock) rather than instantly demoted.
+        use crate::sim::dynamic::DriftConfig;
+        let prior = AffinityMatrix::two_type(10.0, 10.0, 10.0, 10.0).unwrap();
+        let drift = DriftConfig {
+            min_obs: 4,
+            cusum_h: 2.0,
+            stale_after: 50,
+            ..Default::default()
+        };
+        let mut e = RateEstimator::from_drift(&prior, &drift).unwrap();
+        // Accumulate most of an excursion (2 batches of 2× slowdown:
+        // g⁺ = 1.5 of h = 2), then lose the device.
+        for _ in 0..8 {
+            e.observe(0, 0, 0.2);
+        }
+        assert!(!e.alarm_pending());
+        e.mark_down(0);
+        // A long outage elsewhere, then recovery.
+        for _ in 0..120 {
+            e.observe(0, 1, 0.1);
+        }
+        e.mark_up(0);
+        assert!(!e.is_down(0));
+        assert!(!e.alarm_pending(), "recovery itself alarmed");
+        assert!(!e.is_stale(0, 0), "rejoined cell instantly stale");
+        assert!(e.is_warm(0, 0), "rejoined cell lost its warm status");
+        // The pre-failure excursion was discarded: one at-reference
+        // batch after recovery stays quiet, and a *sustained* deviation
+        // must re-earn the full excursion from zero.
+        for _ in 0..4 {
+            e.observe(0, 0, 0.1);
+        }
+        assert!(!e.alarm_pending(), "pre-failure CUSUM residue leaked through");
+        for _ in 0..12 {
+            e.observe(0, 0, 0.2);
+        }
+        assert!(e.alarm_pending(), "fresh post-recovery drift went undetected");
+        assert_eq!(e.take_alarms(), vec![(0, 0)]);
+        // Idempotence: double marks are no-ops.
+        e.mark_up(0);
+        e.mark_down(1);
+        e.mark_down(1);
+        assert!(e.is_down(1));
     }
 
     #[test]

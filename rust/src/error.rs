@@ -18,6 +18,12 @@ pub enum Error {
     /// Artifact missing / runtime failure around the execution layer.
     Runtime(String),
 
+    /// No routable capacity: every candidate device (or every shard)
+    /// is marked down, so a routing decision cannot be made.  Callers
+    /// either surface this as a typed error or park the work until a
+    /// recovery event restores capacity — never a panic.
+    NoCapacity(String),
+
     /// Underlying XLA/PJRT error (only produced with `--features pjrt`).
     Xla(String),
 
@@ -33,6 +39,7 @@ impl std::fmt::Display for Error {
             Error::Parse(m) => write!(f, "parse error: {m}"),
             Error::Solver(m) => write!(f, "solver error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::NoCapacity(m) => write!(f, "no capacity: {m}"),
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -77,5 +84,8 @@ mod tests {
         use std::error::Error as _;
         assert!(io.source().is_some());
         assert!(Error::Parse("x".into()).source().is_none());
+        let nc = Error::NoCapacity("all devices down".into());
+        assert!(nc.to_string().contains("no capacity"));
+        assert!(nc.source().is_none());
     }
 }

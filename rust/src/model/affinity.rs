@@ -8,6 +8,13 @@
 
 use crate::error::{Error, Result};
 
+/// Rate assigned to every cell of a dead device's column when masking it
+/// out of a believed μ matrix.  [`AffinityMatrix::new`] (correctly)
+/// rejects non-positive rates, so "down" is modelled as an ε-rate column:
+/// any solver sees essentially zero throughput gain from placing work
+/// there, while every matrix invariant (finite, > 0) still holds.
+pub const DEAD_RATE: f64 = 1e-9;
+
 /// Dense k×l affinity matrix, row = task type, column = processor type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct AffinityMatrix {
@@ -194,6 +201,44 @@ impl AffinityMatrix {
         };
         Self::new(self.k, self.l, data)
     }
+
+    /// Copy with column `j` replaced by `col` (one rate per task type).
+    /// The churn path uses this to restore a recovered device's column
+    /// to its boot-time prior.
+    pub fn with_column(&self, j: usize, col: &[f64]) -> Result<AffinityMatrix> {
+        if j >= self.l {
+            return Err(Error::Shape(format!(
+                "column {} out of range for {} processors",
+                j, self.l
+            )));
+        }
+        if col.len() != self.k {
+            return Err(Error::Shape(format!(
+                "column has {} rates; need one per task type ({})",
+                col.len(),
+                self.k
+            )));
+        }
+        let mut data = self.mu.clone();
+        for (i, &r) in col.iter().enumerate() {
+            data[i * self.l + j] = r;
+        }
+        Self::new(self.k, self.l, data)
+    }
+
+    /// Copy with column `j` masked to [`DEAD_RATE`]: the believed-μ view
+    /// of a device marked down.  Re-solving against the masked matrix
+    /// steers all traffic to the survivors without violating the
+    /// positive-rate invariant.
+    pub fn masked_column(&self, j: usize) -> Result<AffinityMatrix> {
+        self.with_column(j, &vec![DEAD_RATE; self.k])
+    }
+
+    /// Rates of column `j` (one per task type).
+    pub fn column(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.l);
+        (0..self.k).map(|i| self.rate(i, j)).collect()
+    }
 }
 
 /// The six system regimes of Table 1.
@@ -325,6 +370,23 @@ mod tests {
         assert!(a.scaled(&[1.0, 2.0, 3.0]).is_err());
         assert!(a.scaled(&[0.0, 1.0]).is_err());
         assert!(a.scaled(&[f64::NAN, 1.0]).is_err());
+    }
+
+    #[test]
+    fn masked_column_is_dead_but_valid() {
+        let a = m(20.0, 15.0, 3.0, 8.0);
+        let masked = a.masked_column(0).unwrap();
+        assert_eq!(masked.rate(0, 0), DEAD_RATE);
+        assert_eq!(masked.rate(1, 0), DEAD_RATE);
+        assert_eq!(masked.rate(0, 1), 15.0);
+        assert_eq!(masked.rate(1, 1), 8.0);
+        // Restoring the column round-trips to the original matrix.
+        let restored = masked.with_column(0, &a.column(0)).unwrap();
+        assert_eq!(restored, a);
+        // Bounds and arity are enforced.
+        assert!(a.masked_column(2).is_err());
+        assert!(a.with_column(0, &[1.0]).is_err());
+        assert!(a.with_column(0, &[1.0, f64::NAN]).is_err());
     }
 
     #[test]

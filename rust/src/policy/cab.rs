@@ -84,6 +84,7 @@ impl Policy for Cab {
             .as_ref()
             .expect("CAB::prepare must be called before dispatch")
             .dispatch(ttype, view)
+            .expect("steering over the full fleet always yields a device")
     }
 }
 

@@ -546,6 +546,7 @@ impl Policy for GrInPolicy {
             .as_ref()
             .expect("GrInPolicy::prepare must be called before dispatch")
             .dispatch(ttype, view)
+            .expect("steering over the full fleet always yields a device")
     }
 }
 

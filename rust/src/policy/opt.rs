@@ -52,6 +52,7 @@ impl Policy for OptPolicy {
             .as_ref()
             .expect("OptPolicy::prepare must be called before dispatch")
             .dispatch(ttype, view)
+            .expect("steering over the full fleet always yields a device")
     }
 }
 

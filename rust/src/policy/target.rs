@@ -19,8 +19,10 @@ use super::SystemView;
 /// [`crate::coordinator::ShardedControl`] shard pick).
 ///
 /// Returns `None` only for an empty iterator (no devices/shards to pick
-/// from) — every call site holds a non-empty fleet by construction and
-/// unwraps with a message, instead of the old silent index-0 fallback.
+/// from).  Call sites propagate the `None` — as a routed-elsewhere
+/// decision or a typed [`crate::error::Error::NoCapacity`] when every
+/// candidate is down — instead of the old silent index-0 fallback (or,
+/// worse, a panic while the fleet is churning).
 /// The rate tie-break uses [`f64::total_cmp`], so a NaN rate orders
 /// deterministically (above +∞ in IEEE total order) rather than being
 /// silently unbeatable-yet-never-winning as with a `>` comparison; the
@@ -123,21 +125,53 @@ impl TargetSteering {
     /// population mix drifts from what the target was solved for), fall
     /// back to the fastest processor for the type among the
     /// least-overfull cells.
-    pub fn dispatch(&self, ttype: usize, view: &SystemView<'_>) -> usize {
+    ///
+    /// Returns `None` only when there is no routable processor at all —
+    /// impossible for a full fleet (targets always have ≥ 1 column) but
+    /// reachable through [`Self::dispatch_among`] when every device is
+    /// marked down.  Callers propagate the `None` as a routed-elsewhere
+    /// decision or a typed [`crate::error::Error::NoCapacity`]; never a
+    /// panic.
+    pub fn dispatch(&self, ttype: usize, view: &SystemView<'_>) -> Option<usize> {
+        self.dispatch_among(ttype, view, None)
+    }
+
+    /// [`Self::dispatch`] restricted to processors whose `alive` flag is
+    /// set.  Dead columns are assigned a sentinel (`i64::MIN` deficit,
+    /// `-∞` rate) so any live column dominates them without allocating a
+    /// filtered candidate list on the dispatch hot path; if the winner is
+    /// itself dead, the whole fleet is down and the pick is `None`.
+    pub fn dispatch_among(
+        &self,
+        ttype: usize,
+        view: &SystemView<'_>,
+        alive: Option<&[bool]>,
+    ) -> Option<usize> {
         let l = self.target.procs();
         debug_assert_eq!(view.state.procs(), l);
+        let up = |j: usize| alive.map_or(true, |a| a[j]);
         let deficit = |j: usize| {
             self.target.get(ttype, j) as i64 - view.state.get(ttype, j) as i64
         };
         if self.weights.is_empty() {
-            pick_by_deficit((0..l).map(|j| (deficit(j), view.mu.rate(ttype, j))))
+            pick_by_deficit((0..l).map(|j| {
+                if up(j) {
+                    (deficit(j), view.mu.rate(ttype, j))
+                } else {
+                    (i64::MIN, f64::NEG_INFINITY)
+                }
+            }))
         } else {
             pick_by_weighted_deficit((0..l).map(|j| {
-                let w = self.weights[ttype * l + j];
-                (weighted_deficit(w, deficit(j)), w * view.mu.rate(ttype, j))
+                if up(j) {
+                    let w = self.weights[ttype * l + j];
+                    (weighted_deficit(w, deficit(j)), w * view.mu.rate(ttype, j))
+                } else {
+                    (f64::NEG_INFINITY, f64::NEG_INFINITY)
+                }
             }))
         }
-        .expect("steering target has at least one processor")
+        .filter(|&j| up(j))
     }
 }
 
@@ -202,12 +236,12 @@ mod tests {
         let work = vec![0.0; 2];
         let view = SystemView { mu: &mu, state: &state, work: &work, populations: &[2, 2] };
         // Unweighted: equal deficits, tie to the faster device (0).
-        assert_eq!(TargetSteering::new(target.clone()).dispatch(0, &view), 0);
+        assert_eq!(TargetSteering::new(target.clone()).dispatch(0, &view), Some(0));
         // Device 0's estimate has low confidence: its weighted deficit
         // (0.5·1) loses to device 1's (1.0·1) despite the faster rate.
         let weights = vec![0.5, 1.0, 1.0, 1.0];
         let steer = TargetSteering::with_weights(target, weights);
-        assert_eq!(steer.dispatch(0, &view), 1);
+        assert_eq!(steer.dispatch(0, &view), Some(1));
     }
 
     #[test]
@@ -225,7 +259,7 @@ mod tests {
         let v = view(&mu, &state, &work, &[6, 2]);
         let steer =
             TargetSteering::with_weights(target, vec![1.0, 0.25, 1.0, 1.0]);
-        assert_eq!(steer.dispatch(0, &v), 0, "overflow comparison must stay unweighted");
+        assert_eq!(steer.dispatch(0, &v), Some(0), "overflow comparison must stay unweighted");
         // The scalar rule itself: claims scale, overflow does not.
         assert_eq!(weighted_deficit(0.25, 4), 1.0);
         assert_eq!(weighted_deficit(0.25, -4), -4.0);
@@ -242,11 +276,11 @@ mod tests {
         let state = StateMatrix::new(2, 2, vec![0, 1, 0, 18]).unwrap();
         let work = vec![0.0; 2];
         let v = view(&mu, &state, &work, &[2, 18]);
-        assert_eq!(steer.dispatch(0, &v), 0);
+        assert_eq!(steer.dispatch(0, &v), Some(0));
         // And minus a type-2 task from P2 instead.
         let state = StateMatrix::new(2, 2, vec![1, 1, 0, 17]).unwrap();
         let v = view(&mu, &state, &work, &[2, 18]);
-        assert_eq!(steer.dispatch(1, &v), 1);
+        assert_eq!(steer.dispatch(1, &v), Some(1));
     }
 
     #[test]
@@ -259,7 +293,42 @@ mod tests {
         let work = vec![0.0; 2];
         let v = view(&mu, &state, &work, &[1, 1]);
         // deficit (0,0) = 0, (0,1) = 0: tie → faster rate wins (μ11=20).
-        assert_eq!(steer.dispatch(0, &v), 0);
+        assert_eq!(steer.dispatch(0, &v), Some(0));
+    }
+
+    #[test]
+    fn all_down_fleet_dispatches_none_not_panic() {
+        // Regression for the churn work: dispatch used to `expect` a
+        // non-empty candidate set; with every device down the pick must
+        // propagate as `None`, never a panic.
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        let target = StateMatrix::from_two_type(1, 10, 10, 10).unwrap();
+        let state = StateMatrix::new(2, 2, vec![0, 10, 0, 10]).unwrap();
+        let work = vec![0.0; 2];
+        let v = view(&mu, &state, &work, &[10, 10]);
+        let steer = TargetSteering::new(target.clone());
+        assert_eq!(steer.dispatch_among(0, &v, Some(&[false, false])), None);
+        // Weighted steering propagates the same way.
+        let weighted =
+            TargetSteering::with_weights(target, vec![1.0, 0.5, 1.0, 1.0]);
+        assert_eq!(weighted.dispatch_among(0, &v, Some(&[false, false])), None);
+    }
+
+    #[test]
+    fn dispatch_among_skips_down_devices() {
+        let mu = AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).unwrap();
+        // Deficit row 0: device 0 has the larger deficit AND the faster
+        // rate — it would win every unfiltered pick.
+        let target = StateMatrix::new(2, 2, vec![3, 1, 0, 2]).unwrap();
+        let state = StateMatrix::new(2, 2, vec![0, 0, 0, 2]).unwrap();
+        let work = vec![0.0; 2];
+        let v = view(&mu, &state, &work, &[4, 2]);
+        let steer = TargetSteering::new(target);
+        assert_eq!(steer.dispatch_among(0, &v, None), Some(0));
+        // Down-masking device 0 reroutes the pick to the survivor.
+        assert_eq!(steer.dispatch_among(0, &v, Some(&[false, true])), Some(1));
+        // An all-true mask is exactly the unfiltered pick.
+        assert_eq!(steer.dispatch_among(0, &v, Some(&[true, true])), Some(0));
     }
 
     #[test]
@@ -284,7 +353,7 @@ mod tests {
             }
             state.dec(i, j).unwrap();
             let v = SystemView { mu: &mu, state: &state, work: &work, populations: &[10, 10] };
-            let dest = steer.dispatch(i, &v);
+            let dest = steer.dispatch(i, &v).expect("full fleet always routes");
             state.inc(i, dest);
             assert_eq!(state, target, "drifted from S_max");
         }

@@ -38,7 +38,7 @@ use super::eventq::EventQueue;
 use super::metrics::{Metrics, SimResult};
 use super::processor::{Discipline, Processor};
 use super::rng::Rng;
-use super::task::Program;
+use super::task::{Program, Task};
 
 /// One phase of a piece-wise closed run.
 #[derive(Debug, Clone)]
@@ -240,6 +240,176 @@ impl Default for ShardConfig {
     }
 }
 
+/// What happens to a device at a [`FaultEvent`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The device vanishes: its event-queue entry is removed, resident
+    /// tasks are evacuated and re-dispatched to survivors (under the
+    /// [`FaultPlan::backup_budget`]), and churn-aware control planes
+    /// mask its μ column and re-solve.
+    Down,
+    /// The device rejoins empty.  Parked work re-dispatches, and
+    /// churn-aware control planes restore the column to the boot-time
+    /// prior and re-solve (the estimator restarts the column with fresh
+    /// CUSUM evidence).
+    Up,
+    /// Slow-node "limping": the device keeps serving but new pushes run
+    /// at `factor ×` the true rate (in-flight tasks keep the rate they
+    /// started with, like a real DVFS transition).  Deliberately *not*
+    /// signalled to any control plane — detecting the collapse is the
+    /// CUSUM machinery's job.  `Limp(1.0)` restores full speed.
+    Limp(f64),
+}
+
+/// One scheduled fault: `device` changes state at absolute simulation
+/// time `time` (seconds since the start of the run, across phases).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Absolute simulation time of the event.
+    pub time: f64,
+    /// Device (processor column) affected.
+    pub device: usize,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A failure/recovery schedule injected into a dynamic run.
+///
+/// Events interleave deterministically with the completion stream: a
+/// fault at time t fires before any completion at time ≥ t, and if the
+/// event queue drains while devices are down the clock jumps to the
+/// next recovery event instead of erroring.  `backup_budget` is the
+/// FEST-style bound on *concurrently in-flight* re-dispatched (backup)
+/// tasks: evacuated work beyond the budget parks and dispatches as
+/// earlier backups complete, so re-dispatch is metered, never free —
+/// and no task is ever dropped.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Schedule, non-decreasing in time.
+    pub events: Vec<FaultEvent>,
+    /// Max concurrent re-dispatched tasks (0 = unmetered).
+    pub backup_budget: u32,
+}
+
+impl FaultPlan {
+    /// The empty plan (fault-free run).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Is this the empty plan?
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Validate against a fleet of `l` devices: events must be sorted by
+    /// time, times finite and ≥ 0, devices in range, limp factors finite
+    /// and > 0.
+    pub fn validate(&self, l: usize) -> Result<()> {
+        let mut last = 0.0f64;
+        for ev in &self.events {
+            if !ev.time.is_finite() || ev.time < 0.0 {
+                return Err(Error::Config(format!("fault time {} invalid", ev.time)));
+            }
+            if ev.time < last {
+                return Err(Error::Config(
+                    "fault events must be sorted by time".into(),
+                ));
+            }
+            last = ev.time;
+            if ev.device >= l {
+                return Err(Error::Config(format!(
+                    "fault device {} out of range for {} processors",
+                    ev.device, l
+                )));
+            }
+            if let FaultKind::Limp(f) = ev.kind {
+                if !f.is_finite() || f <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "limp factor {f} must be finite and > 0"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI/scenario spec format: `;`-separated entries, each
+    /// `down:<dev>@<time>`, `up:<dev>@<time>`, `limp:<dev>x<factor>@<time>`
+    /// or `budget:<n>`.  Events are sorted by time (stable, so same-time
+    /// events keep spec order).
+    ///
+    /// Example: `down:0@5;up:0@12;limp:1x0.25@20;budget:4`.
+    pub fn parse_spec(spec: &str) -> Result<Self> {
+        let mut plan = FaultPlan::none();
+        for entry in spec.split(';').filter(|e| !e.trim().is_empty()) {
+            let entry = entry.trim();
+            let (kind, rest) = entry.split_once(':').ok_or_else(|| {
+                Error::Parse(format!("fault entry '{entry}' needs kind:…"))
+            })?;
+            if kind == "budget" {
+                plan.backup_budget = rest.parse().map_err(|_| {
+                    Error::Parse(format!("bad backup budget '{rest}'"))
+                })?;
+                continue;
+            }
+            let (dev_part, time_part) = rest.split_once('@').ok_or_else(|| {
+                Error::Parse(format!("fault entry '{entry}' needs …@time"))
+            })?;
+            let time: f64 = time_part.parse().map_err(|_| {
+                Error::Parse(format!("bad fault time '{time_part}'"))
+            })?;
+            let (device, fkind) = match kind {
+                "down" | "up" => {
+                    let d: usize = dev_part.parse().map_err(|_| {
+                        Error::Parse(format!("bad fault device '{dev_part}'"))
+                    })?;
+                    (d, if kind == "down" { FaultKind::Down } else { FaultKind::Up })
+                }
+                "limp" => {
+                    let (d, f) = dev_part.split_once('x').ok_or_else(|| {
+                        Error::Parse(format!(
+                            "limp entry '{entry}' needs dev x factor"
+                        ))
+                    })?;
+                    let d: usize = d.parse().map_err(|_| {
+                        Error::Parse(format!("bad fault device '{d}'"))
+                    })?;
+                    let f: f64 = f.parse().map_err(|_| {
+                        Error::Parse(format!("bad limp factor '{f}'"))
+                    })?;
+                    (d, FaultKind::Limp(f))
+                }
+                other => {
+                    return Err(Error::Parse(format!(
+                        "unknown fault kind '{other}' (down|up|limp|budget)"
+                    )))
+                }
+            };
+            plan.events.push(FaultEvent { time, device, kind: fkind });
+        }
+        plan.events.sort_by(|a, b| a.time.total_cmp(&b.time));
+        Ok(plan)
+    }
+
+    /// Canonical spec string ([`Self::parse_spec`] round-trips it).
+    pub fn to_spec(&self) -> String {
+        let mut parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|ev| match ev.kind {
+                FaultKind::Down => format!("down:{}@{}", ev.device, ev.time),
+                FaultKind::Up => format!("up:{}@{}", ev.device, ev.time),
+                FaultKind::Limp(f) => format!("limp:{}x{}@{}", ev.device, f, ev.time),
+            })
+            .collect();
+        if self.backup_budget > 0 {
+            parts.push(format!("budget:{}", self.backup_budget));
+        }
+        parts.join(";")
+    }
+}
+
 /// Configuration of a dynamic run.
 #[derive(Debug, Clone)]
 pub struct DynamicConfig {
@@ -280,6 +450,9 @@ pub struct DynamicConfig {
     /// with), and — when `idle_power > 0` — a per-phase idle-floor
     /// charge over each measurement window.
     pub power: PowerProfile,
+    /// Failure/recovery schedule (empty = fault-free, the pre-churn
+    /// runs bit for bit).  See [`FaultPlan`].
+    pub faults: FaultPlan,
 }
 
 impl DynamicConfig {
@@ -298,6 +471,7 @@ impl DynamicConfig {
             deadlines: Vec::new(),
             objective: Objective::Throughput,
             power: PowerProfile::default(),
+            faults: FaultPlan::none(),
         }
     }
 }
@@ -310,6 +484,13 @@ pub struct DynamicReport {
     /// Re-solves performed (EveryPhase counts phase boundaries after the
     /// first; Adaptive counts drift-triggered target swaps).
     pub resolves: u64,
+    /// Tasks evacuated from failed devices and re-dispatched to
+    /// survivors over the whole run (warmup included — unlike the
+    /// per-phase window counts in [`SimResult`]).
+    pub tasks_redispatched: u64,
+    /// Conservation residual |emitted − completed − in-system| at run
+    /// end; always 0 — re-dispatch never loses or duplicates a task.
+    pub tasks_lost: u64,
 }
 
 impl DynamicReport {
@@ -386,6 +567,25 @@ impl DynamicReport {
         }
     }
 
+    /// Time-weighted mean fraction of fleet capacity lost to downtime
+    /// across measured phases (Σ downtime-seconds / Σ device-seconds).
+    pub fn mean_downtime_frac(&self) -> f64 {
+        let mut down = 0.0f64;
+        let mut time = 0.0f64;
+        for r in &self.phases {
+            if r.throughput > 0.0 {
+                let el = r.completed as f64 / r.throughput;
+                down += r.downtime_frac * el;
+                time += el;
+            }
+        }
+        if time > 0.0 {
+            down / time
+        } else {
+            0.0
+        }
+    }
+
     /// Run-level energy–delay product: completion-weighted mean energy
     /// × completion-weighted mean response.
     pub fn mean_edp(&self) -> f64 {
@@ -432,6 +632,86 @@ fn prepare_policy(
     };
     let weights = crate::policy::grin::priority_weights(priorities, &confidence, l)?;
     policy.prepare(&req.with_weights(&weights)).map(|_| ())
+}
+
+/// Physical fallback when routing targets a down device: the up device
+/// with the smallest occupancy, ties to the lowest index.  Mirrors what
+/// a node-local dispatcher does when its assigned backend stops
+/// answering — deterministic, and independent of control-plane state.
+fn fallback_device(procs: &[Processor], up: &[bool]) -> Option<usize> {
+    let mut best: Option<(usize, usize)> = None;
+    for (j, p) in procs.iter().enumerate() {
+        if up[j] && best.map_or(true, |(_, occ)| p.occupancy() < occ) {
+            best = Some((j, p.occupancy()));
+        }
+    }
+    best.map(|(j, _)| j)
+}
+
+/// The true surviving-rate matrix: per-device limp factors applied,
+/// then every down column masked to
+/// [`DEAD_RATE`](crate::model::affinity::DEAD_RATE) — what the
+/// failure-schedule oracle re-solves against.
+fn effective_actual(
+    actual: &AffinityMatrix,
+    up: &[bool],
+    limp: &[f64],
+) -> Result<AffinityMatrix> {
+    let mut m = actual.scaled(limp)?;
+    for (j, &u) in up.iter().enumerate() {
+        if !u {
+            m = m.masked_column(j)?;
+        }
+    }
+    Ok(m)
+}
+
+/// Cumulative fleet downtime in device-seconds as of `now`: closed
+/// intervals (`acc`) plus the open interval of every still-down device.
+fn cum_downtime(acc: f64, now: f64, up: &[bool], down_since: &[f64]) -> f64 {
+    let mut d = acc;
+    for (j, &u) in up.iter().enumerate() {
+        if !u {
+            d += now - down_since[j];
+        }
+    }
+    d
+}
+
+/// One routing decision, fault-aware: the control plane (which filters
+/// dead devices itself) or the policy, with a physical fallback reroute
+/// when the policy's believed matrix still points at a down device.
+/// `None` means the whole fleet is down — the caller parks the task.
+#[allow(clippy::too_many_arguments)]
+fn choose_dest(
+    control: &mut Option<ShardedControl>,
+    policy: &mut dyn Policy,
+    needs_work: bool,
+    work: &mut [f64],
+    procs: &[Processor],
+    believed: &AffinityMatrix,
+    state: &StateMatrix,
+    populations: &[u32],
+    ttype: usize,
+    rng: &mut Rng,
+    up: &[bool],
+    faults_on: bool,
+) -> Option<usize> {
+    if let Some(ctl) = control.as_mut() {
+        return ctl.route(ttype).ok();
+    }
+    if needs_work {
+        for (jj, pr) in procs.iter().enumerate() {
+            work[jj] = pr.remaining_work_time();
+        }
+    }
+    let view = SystemView { mu: believed, state, work, populations };
+    let j = policy.dispatch(ttype, &view, rng);
+    if !faults_on || up[j] {
+        Some(j)
+    } else {
+        fallback_device(procs, up)
+    }
 }
 
 /// Per-phase results of a dynamic run (thin wrapper over
@@ -487,6 +767,7 @@ pub fn run_dynamic_report(
     }
     cfg.objective.validate()?;
     cfg.power.validate()?;
+    cfg.faults.validate(l)?;
     // The sharded plane never routes through `Policy::prepare`, so the
     // weights-×-objective conflict is rejected here with the same
     // message `grin::solve_request` uses on the single-leader paths.
@@ -553,6 +834,22 @@ pub fn run_dynamic_report(
     // keeping it O(in-flight), not O(completions).
     let mut inflight_rates: Vec<(u64, f64)> = Vec::new();
 
+    // --- fault-injection state (inert when the plan is empty) ---
+    let faults_on = !cfg.faults.is_empty();
+    let mut fault_idx = 0usize;
+    let mut up = vec![true; l];
+    let mut limp = vec![1.0f64; l];
+    let mut down_since = vec![0.0f64; l];
+    let mut downtime_acc = 0.0f64;
+    let mut redispatched_total = 0u64;
+    let mut completed_all = 0u64;
+    // FEST-style backup budget: ids of in-flight re-dispatched tasks.
+    let mut backup_ids: Vec<u64> = Vec::new();
+    // Tasks waiting for capacity, FIFO: evacuated work blocked on the
+    // backup budget (flag `true`), or anything emitted while the whole
+    // fleet is down.  Nothing is ever dropped.
+    let mut parked: Vec<(Task, bool)> = Vec::new();
+
     // Program table: alive[i] = ids of active programs per type.
     let mut programs: Vec<Program> = Vec::new();
     let mut retiring: Vec<bool> = Vec::new();
@@ -583,18 +880,43 @@ pub fn run_dynamic_report(
                 }
             }
             ResolveMode::EveryPhase => {
-                believed = actual.clone();
-                prepare_policy(
-                    policy,
-                    &believed,
-                    &phase.populations,
-                    &cfg.priorities,
-                    None,
-                    cfg.objective,
-                    cfg.power,
-                )?;
-                if phase_idx > 0 {
-                    resolves += 1;
+                if faults_on {
+                    // The oracle re-solves with the *surviving* rates:
+                    // down columns masked, limp factors applied.  Past
+                    // the first phase a failed solve (masked matrix can
+                    // be outside a policy's feasible regime) keeps the
+                    // old target — fallback routing covers.
+                    let oracle = effective_actual(&actual, &up, &limp)?;
+                    let prepared = prepare_policy(
+                        policy,
+                        &oracle,
+                        &phase.populations,
+                        &cfg.priorities,
+                        None,
+                        cfg.objective,
+                        cfg.power,
+                    );
+                    if phase_idx == 0 {
+                        prepared?;
+                        believed = oracle;
+                    } else if prepared.is_ok() {
+                        believed = oracle;
+                        resolves += 1;
+                    }
+                } else {
+                    believed = actual.clone();
+                    prepare_policy(
+                        policy,
+                        &believed,
+                        &phase.populations,
+                        &cfg.priorities,
+                        None,
+                        cfg.objective,
+                        cfg.power,
+                    )?;
+                    if phase_idx > 0 {
+                        resolves += 1;
+                    }
                 }
             }
             ResolveMode::Adaptive => {
@@ -638,28 +960,30 @@ pub fn run_dynamic_report(
                     let size = dist.sample(&mut rng);
                     let task = programs[pid].emit(next_id, now, size);
                     next_id += 1;
-                    let j = match control.as_mut() {
-                        Some(ctl) => ctl.route(ttype),
-                        None => {
-                            if needs_work {
-                                for (jj, pr) in procs.iter().enumerate() {
-                                    work[jj] = pr.remaining_work_time();
-                                }
-                            }
-                            let view = SystemView {
-                                mu: &believed,
-                                state: &state,
-                                work: &work,
-                                populations: &phase.populations,
-                            };
-                            policy.dispatch(ttype, &view, &mut rng)
+                    match choose_dest(
+                        &mut control,
+                        policy,
+                        needs_work,
+                        &mut work,
+                        &procs,
+                        &believed,
+                        &state,
+                        &phase.populations,
+                        ttype,
+                        &mut rng,
+                        &up,
+                        faults_on,
+                    ) {
+                        Some(j) => {
+                            procs[j].advance(now);
+                            let rate = actual.rate(ttype, j) * limp[j];
+                            inflight_rates.push((task.id, rate));
+                            procs[j].push(task, rate, now);
+                            state.inc(ttype, j);
                         }
-                    };
-                    procs[j].advance(now);
-                    let rate = actual.rate(ttype, j);
-                    inflight_rates.push((task.id, rate));
-                    procs[j].push(task, rate, now);
-                    state.inc(ttype, j);
+                        // Whole fleet down: park until a recovery event.
+                        None => parked.push((task, false)),
+                    }
                 }
             } else if want < have {
                 // Retire the newest surplus programs gracefully.
@@ -685,6 +1009,9 @@ pub fn run_dynamic_report(
             m
         };
         let mut metrics = new_metrics(now);
+        // Fleet downtime already accrued when this phase's measurement
+        // window opens; the delta is charged at phase end.
+        let mut down_at_start = cum_downtime(downtime_acc, now, &up, &down_since);
         let mut measuring = phase.warmup == 0;
         // Busy-time snapshot at this phase's measurement start; the
         // idle floor is charged over the window at phase end.
@@ -697,9 +1024,248 @@ pub fn run_dynamic_report(
         }
         let mut completions = 0u64;
         while completions < total {
-            let (j, t) = events
-                .peek()
-                .ok_or_else(|| Error::Solver("dynamic system drained".into()))?;
+            // --- scheduled faults interleave with the completion
+            // stream: a fault at time t fires before any completion at
+            // ≥ t, and an empty event queue jumps the clock forward to
+            // the next fault instead of erroring.
+            while fault_idx < cfg.faults.events.len()
+                && events
+                    .peek()
+                    .map_or(true, |(_, t)| cfg.faults.events[fault_idx].time <= t)
+            {
+                let ev = cfg.faults.events[fault_idx].clone();
+                fault_idx += 1;
+                // The clock is monotone: a fault whose scheduled time
+                // already passed (earlier phases ran long) fires now.
+                now = now.max(ev.time);
+                match ev.kind {
+                    FaultKind::Down if up[ev.device] => {
+                        let dev = ev.device;
+                        up[dev] = false;
+                        down_since[dev] = now;
+                        procs[dev].advance(now);
+                        let evacuated = procs[dev].drain_residents(now);
+                        events.update(dev, None);
+                        // Churn-aware control reacts *before* the
+                        // evacuated work re-routes, so re-dispatch
+                        // already sees the shrunken target.
+                        match cfg.resolve {
+                            // Frozen: only the physical fallback saves
+                            // the frozen target's traffic.
+                            ResolveMode::Static => {}
+                            ResolveMode::EveryPhase => {
+                                let oracle =
+                                    effective_actual(&actual, &up, &limp)?;
+                                if prepare_policy(
+                                    policy,
+                                    &oracle,
+                                    &phase.populations,
+                                    &cfg.priorities,
+                                    None,
+                                    cfg.objective,
+                                    cfg.power,
+                                )
+                                .is_ok()
+                                {
+                                    believed = oracle;
+                                    resolves += 1;
+                                }
+                            }
+                            ResolveMode::Adaptive => {
+                                // Down is directly observable (the
+                                // device stops answering), unlike
+                                // limping: mask the column, freeze its
+                                // estimator cells, re-solve.
+                                let cand = believed.masked_column(dev)?;
+                                estimator.mark_down(dev);
+                                if prepare_policy(
+                                    policy,
+                                    &cand,
+                                    &phase.populations,
+                                    &cfg.priorities,
+                                    Some(&estimator),
+                                    cfg.objective,
+                                    cfg.power,
+                                )
+                                .is_ok()
+                                {
+                                    believed = cand;
+                                    estimator.set_reference(&believed)?;
+                                    resolves += 1;
+                                }
+                            }
+                            ResolveMode::Sharded => {
+                                let ctl = control
+                                    .as_mut()
+                                    .expect("sharded mode constructs its control plane");
+                                if ctl.mark_down(dev)? {
+                                    resolves += 1;
+                                }
+                            }
+                        }
+                        // Evacuate residents: remaining work preserved,
+                        // re-dispatched to survivors under the budget
+                        // (the parked-drain below dispatches them).
+                        for (mut task, rem) in evacuated {
+                            state.dec(task.ttype, dev)?;
+                            let pos = inflight_rates
+                                .iter()
+                                .position(|&(id, _)| id == task.id)
+                                .expect("evacuated task has a recorded in-flight rate");
+                            inflight_rates.swap_remove(pos);
+                            task.size = rem;
+                            parked.push((task, true));
+                        }
+                    }
+                    FaultKind::Up if !up[ev.device] => {
+                        let dev = ev.device;
+                        up[dev] = true;
+                        downtime_acc += now - down_since[dev];
+                        procs[dev].advance(now);
+                        match cfg.resolve {
+                            ResolveMode::Static => {}
+                            ResolveMode::EveryPhase => {
+                                let oracle =
+                                    effective_actual(&actual, &up, &limp)?;
+                                if prepare_policy(
+                                    policy,
+                                    &oracle,
+                                    &phase.populations,
+                                    &cfg.priorities,
+                                    None,
+                                    cfg.objective,
+                                    cfg.power,
+                                )
+                                .is_ok()
+                                {
+                                    believed = oracle;
+                                    resolves += 1;
+                                }
+                            }
+                            ResolveMode::Adaptive => {
+                                // Rejoin at the boot-time prior; the
+                                // estimator restarts the column with
+                                // fresh CUSUM evidence.
+                                let cand =
+                                    believed.with_column(dev, &mu.column(dev))?;
+                                estimator.mark_up(dev);
+                                if prepare_policy(
+                                    policy,
+                                    &cand,
+                                    &phase.populations,
+                                    &cfg.priorities,
+                                    Some(&estimator),
+                                    cfg.objective,
+                                    cfg.power,
+                                )
+                                .is_ok()
+                                {
+                                    believed = cand;
+                                    estimator.set_reference(&believed)?;
+                                    resolves += 1;
+                                }
+                            }
+                            ResolveMode::Sharded => {
+                                let ctl = control
+                                    .as_mut()
+                                    .expect("sharded mode constructs its control plane");
+                                if ctl.mark_up(dev, &mu.column(dev))? {
+                                    resolves += 1;
+                                }
+                            }
+                        }
+                    }
+                    FaultKind::Limp(f) => {
+                        limp[ev.device] = f;
+                        // Only the oracle is told; every other mode must
+                        // *detect* the slow node (CUSUM) or eat it.
+                        if cfg.resolve == ResolveMode::EveryPhase {
+                            let oracle = effective_actual(&actual, &up, &limp)?;
+                            if prepare_policy(
+                                policy,
+                                &oracle,
+                                &phase.populations,
+                                &cfg.priorities,
+                                None,
+                                cfg.objective,
+                                cfg.power,
+                            )
+                            .is_ok()
+                            {
+                                believed = oracle;
+                                resolves += 1;
+                            }
+                        }
+                    }
+                    // Down on a down device / Up on an up one: no-op.
+                    _ => {}
+                }
+                // A drained queue with dispatchable parked work: stop
+                // consuming future faults and let the parked-drain below
+                // refill the queue, so the interval between a recovery
+                // and the next fault is actually simulated.
+                if events.peek().is_none()
+                    && !parked.is_empty()
+                    && up.iter().any(|&u| u)
+                {
+                    break;
+                }
+            }
+            // --- dispatch whatever parked work the budget and the
+            // fleet now admit (FIFO; budget-blocked backups hold their
+            // place while later non-backup tasks may pass).
+            if faults_on && !parked.is_empty() {
+                let budget = cfg.faults.backup_budget as usize;
+                let mut idx = 0;
+                while idx < parked.len() {
+                    if parked[idx].1 && budget > 0 && backup_ids.len() >= budget {
+                        idx += 1;
+                        continue;
+                    }
+                    let ttype = parked[idx].0.ttype;
+                    let j = match choose_dest(
+                        &mut control,
+                        policy,
+                        needs_work,
+                        &mut work,
+                        &procs,
+                        &believed,
+                        &state,
+                        &phase.populations,
+                        ttype,
+                        &mut rng,
+                        &up,
+                        faults_on,
+                    ) {
+                        Some(j) => j,
+                        None => break,
+                    };
+                    let (task, counts) = parked.remove(idx);
+                    if counts {
+                        backup_ids.push(task.id);
+                        redispatched_total += 1;
+                        metrics.record_redispatch();
+                    }
+                    procs[j].advance(now);
+                    let rate = actual.rate(ttype, j) * limp[j];
+                    inflight_rates.push((task.id, rate));
+                    procs[j].push(task, rate, now);
+                    events.update(j, procs[j].next_completion());
+                    state.inc(ttype, j);
+                }
+            }
+            let (j, t) = match events.peek() {
+                Some(e) => e,
+                None => {
+                    return Err(if up.iter().any(|&u| !u) {
+                        Error::NoCapacity(
+                            "all devices down with no recovery scheduled".into(),
+                        )
+                    } else {
+                        Error::Solver("dynamic system drained".into())
+                    })
+                }
+            };
             now = t;
             procs[j].advance(now);
             let done = procs[j].pop_completed(now)?;
@@ -715,9 +1281,22 @@ pub fn run_dynamic_report(
                 .position(|&(id, _)| id == done.id)
                 .expect("completed task has a recorded in-flight rate");
             let (_, rate) = inflight_rates.swap_remove(pos);
+            completed_all += 1;
+            // A finished backup frees a budget slot.  Its service time
+            // is remaining-work at the new device's rate — not a
+            // unit-mean size draw — so it is kept out of the estimator
+            // (a systematically short, biased sample).
+            let mut was_backup = false;
+            if faults_on {
+                if let Some(p) = backup_ids.iter().position(|&id| id == done.id) {
+                    backup_ids.swap_remove(p);
+                    was_backup = true;
+                }
+            }
             if !measuring && completions > phase.warmup {
                 measuring = true;
                 metrics = new_metrics(now);
+                down_at_start = cum_downtime(downtime_acc, now, &up, &down_since);
                 if track_idle {
                     for p in procs.iter_mut() {
                         p.advance(now);
@@ -737,13 +1316,18 @@ pub fn run_dynamic_report(
                     // The sharded plane syncs (gather + batched
                     // re-solve) on its own cadence inside on_complete.
                     Some(ctl) => {
-                        if ctl.on_complete(done.ttype, j, service_s)? {
+                        if was_backup {
+                            // Occupancy bookkeeping only, no sample.
+                            ctl.on_complete_silent(done.ttype, j)?;
+                        } else if ctl.on_complete(done.ttype, j, service_s)? {
                             resolves += 1;
                         }
                     }
                     None => {
-                        estimator.observe(done.ttype, j, service_s);
-                        since_check += 1;
+                        if !was_backup {
+                            estimator.observe(done.ttype, j, service_s);
+                            since_check += 1;
+                        }
                     }
                 }
             }
@@ -802,29 +1386,31 @@ pub fn run_dynamic_report(
             let size = dist.sample(&mut rng);
             let task = programs[pid].emit(next_id, now, size);
             next_id += 1;
-            let dest = match control.as_mut() {
-                Some(ctl) => ctl.route(ttype),
-                None => {
-                    if needs_work {
-                        for (jj, pr) in procs.iter().enumerate() {
-                            work[jj] = pr.remaining_work_time();
-                        }
-                    }
-                    let view = SystemView {
-                        mu: &believed,
-                        state: &state,
-                        work: &work,
-                        populations: &phase.populations,
-                    };
-                    policy.dispatch(ttype, &view, &mut rng)
+            match choose_dest(
+                &mut control,
+                policy,
+                needs_work,
+                &mut work,
+                &procs,
+                &believed,
+                &state,
+                &phase.populations,
+                ttype,
+                &mut rng,
+                &up,
+                faults_on,
+            ) {
+                Some(dest) => {
+                    procs[dest].advance(now);
+                    let rate = actual.rate(ttype, dest) * limp[dest];
+                    inflight_rates.push((task.id, rate));
+                    procs[dest].push(task, rate, now);
+                    events.update(dest, procs[dest].next_completion());
+                    state.inc(ttype, dest);
                 }
-            };
-            procs[dest].advance(now);
-            let rate = actual.rate(ttype, dest);
-            inflight_rates.push((task.id, rate));
-            procs[dest].push(task, rate, now);
-            events.update(dest, procs[dest].next_completion());
-            state.inc(ttype, dest);
+                // Whole fleet down: park until a recovery event.
+                None => parked.push((task, false)),
+            }
         }
         if track_idle && !busy_at_start.is_empty() {
             // Charge the idle floor for each processor's idle share of
@@ -840,11 +1426,27 @@ pub fn run_dynamic_report(
             }
             metrics.add_idle_energy(idle_e);
         }
+        metrics.add_downtime(
+            cum_downtime(downtime_acc, now, &up, &down_since) - down_at_start,
+        );
         results.push(metrics.finalize(phase.populations.iter().sum()));
         // Retired programs that still hold an in-flight task will drain
         // during the next phase; the state matrix tracks them naturally.
     }
-    Ok(DynamicReport { phases: results, resolves })
+    // Conservation audit: every emitted task either completed or is
+    // still in the system (resident on a device or parked) — device
+    // churn must never lose or duplicate work.
+    let residue = procs.iter().map(|p| p.occupancy() as u64).sum::<u64>()
+        + parked.len() as u64;
+    let tasks_lost =
+        (next_id as i64 - completed_all as i64 - residue as i64).unsigned_abs();
+    debug_assert_eq!(tasks_lost, 0, "task conservation violated");
+    Ok(DynamicReport {
+        phases: results,
+        resolves,
+        tasks_redispatched: redispatched_total,
+        tasks_lost,
+    })
 }
 
 #[cfg(test)]
@@ -1186,5 +1788,123 @@ mod tests {
         let checks = 6_300 / cfg.drift.check_every;
         assert!(report.resolves < checks, "{} resolves", report.resolves);
         assert!(report.mean_throughput() > 0.0);
+    }
+
+    #[test]
+    fn fault_plan_spec_round_trips_and_validates() {
+        let plan = FaultPlan::parse_spec("down:0@5;up:0@12;limp:1x0.25@20;budget:4").unwrap();
+        assert_eq!(plan.events.len(), 3);
+        assert_eq!(plan.backup_budget, 4);
+        assert_eq!(plan.events[0], FaultEvent { time: 5.0, device: 0, kind: FaultKind::Down });
+        assert_eq!(plan.events[1], FaultEvent { time: 12.0, device: 0, kind: FaultKind::Up });
+        assert_eq!(
+            plan.events[2],
+            FaultEvent { time: 20.0, device: 1, kind: FaultKind::Limp(0.25) }
+        );
+        // Canonical spec round-trips; entries sort by time on parse.
+        assert_eq!(FaultPlan::parse_spec(&plan.to_spec()).unwrap(), plan);
+        let shuffled = FaultPlan::parse_spec("up:0@12;down:0@5").unwrap();
+        assert_eq!(shuffled.events[0].kind, FaultKind::Down);
+        plan.validate(2).unwrap();
+        // Device out of range for a 1-proc fleet.
+        assert!(plan.validate(1).is_err());
+        // Unsorted hand-built plans, bad times, bad limp factors.
+        let unsorted = FaultPlan {
+            events: vec![
+                FaultEvent { time: 9.0, device: 0, kind: FaultKind::Down },
+                FaultEvent { time: 3.0, device: 0, kind: FaultKind::Up },
+            ],
+            backup_budget: 0,
+        };
+        assert!(unsorted.validate(2).is_err());
+        let bad_time = FaultPlan {
+            events: vec![FaultEvent { time: -1.0, device: 0, kind: FaultKind::Down }],
+            backup_budget: 0,
+        };
+        assert!(bad_time.validate(2).is_err());
+        let bad_limp = FaultPlan {
+            events: vec![FaultEvent { time: 1.0, device: 0, kind: FaultKind::Limp(0.0) }],
+            backup_budget: 0,
+        };
+        assert!(bad_limp.validate(2).is_err());
+        // Parser rejections.
+        assert!(FaultPlan::parse_spec("explode:0@5").is_err());
+        assert!(FaultPlan::parse_spec("down:0").is_err());
+        assert!(FaultPlan::parse_spec("limp:1@5").is_err());
+        assert!(FaultPlan::parse_spec("budget:lots").is_err());
+        assert!(FaultPlan::parse_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_injection_conserves_tasks_and_meters_downtime() {
+        // One device dies mid-run and recovers later: residents are
+        // evacuated and re-dispatched (never lost), and the measured
+        // window charges the outage as downtime.
+        let mu =
+            crate::model::affinity::AffinityMatrix::two_type(10.0, 8.0, 3.0, 9.0).unwrap();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 100, 2_000)]);
+        cfg.resolve = ResolveMode::Static;
+        cfg.seed = 3;
+        cfg.faults = FaultPlan::parse_spec("down:0@5;up:0@25").unwrap();
+        let mut p = PolicyKind::Jsq.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(report.tasks_lost, 0);
+        assert!(report.tasks_redispatched > 0, "nothing was evacuated");
+        assert!(
+            report.mean_downtime_frac() > 0.0,
+            "outage not metered: {}",
+            report.mean_downtime_frac()
+        );
+        assert!(report.phases[0].throughput > 0.0);
+        // The same schedule with a backup budget completes with the
+        // same conservation guarantee (evacuations are metered, not
+        // dropped).
+        cfg.faults = FaultPlan::parse_spec("down:0@5;up:0@25;budget:2").unwrap();
+        let mut p = PolicyKind::Jsq.build();
+        let budgeted = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(budgeted.tasks_lost, 0);
+        assert!(budgeted.tasks_redispatched > 0);
+    }
+
+    #[test]
+    fn all_devices_down_without_recovery_is_no_capacity() {
+        let mu =
+            crate::model::affinity::AffinityMatrix::two_type(10.0, 8.0, 3.0, 9.0).unwrap();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![5, 5], 0, 5_000)]);
+        cfg.resolve = ResolveMode::Static;
+        cfg.seed = 4;
+        cfg.faults = FaultPlan::parse_spec("down:0@1;down:1@1").unwrap();
+        let mut p = PolicyKind::Jsq.build();
+        match run_dynamic_report(&mu, &cfg, p.as_mut()) {
+            Err(Error::NoCapacity(_)) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        // With a recovery scheduled, the clock jumps the outage and the
+        // run completes — nothing lost.
+        cfg.faults = FaultPlan::parse_spec("down:0@1;down:1@1;up:1@3").unwrap();
+        let mut p = PolicyKind::Jsq.build();
+        let report = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(report.tasks_lost, 0);
+        assert!(report.tasks_redispatched > 0);
+    }
+
+    #[test]
+    fn fault_free_runs_are_unchanged_by_the_fault_machinery() {
+        // The inert-plan guarantee: an empty FaultPlan must reproduce
+        // the pre-churn runs bit for bit (same completions, throughput,
+        // and resolve count).
+        let mu = workload::paper_two_type_mu();
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 100, 2_000)]);
+        cfg.seed = 9;
+        let mut p = PolicyKind::Cab.build();
+        let base = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        cfg.faults = FaultPlan::none();
+        let mut p = PolicyKind::Cab.build();
+        let again = run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap();
+        assert_eq!(base.phases[0].completed, again.phases[0].completed);
+        assert_eq!(base.phases[0].throughput.to_bits(), again.phases[0].throughput.to_bits());
+        assert_eq!(base.resolves, again.resolves);
+        assert_eq!(again.tasks_redispatched, 0);
+        assert_eq!(again.phases[0].downtime_frac, 0.0);
     }
 }

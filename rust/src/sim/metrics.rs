@@ -37,6 +37,12 @@ pub struct Metrics {
     /// Per-class response histograms (p99 reporting); sized k only
     /// while tracking.
     class_hist: Vec<LatencyHistogram>,
+    /// Tasks evacuated from a failed device and re-dispatched to a
+    /// survivor during this window (the FEST-style backup counter).
+    tasks_redispatched: u64,
+    /// Σ_j device-seconds spent down over this window (the fault
+    /// injector's accounting; 0 for fault-free runs).
+    downtime: f64,
     k: usize,
     l: usize,
 }
@@ -63,8 +69,25 @@ impl Metrics {
         self.deadlines.clear();
         self.misses_by_class.clear();
         self.class_hist.clear();
+        self.tasks_redispatched = 0;
+        self.downtime = 0.0;
         self.k = k;
         self.l = l;
+    }
+
+    /// Count one task evacuated from a failed device and re-dispatched
+    /// to a survivor.
+    pub fn record_redispatch(&mut self) {
+        self.tasks_redispatched += 1;
+    }
+
+    /// Charge `device_seconds` of accumulated device downtime to this
+    /// window (Σ over devices of time spent down).  Call once before
+    /// [`finalize`](Self::finalize); fault-free runs never call it and
+    /// report a zero `downtime_frac`.
+    pub fn add_downtime(&mut self, device_seconds: f64) {
+        debug_assert!(device_seconds >= 0.0);
+        self.downtime += device_seconds;
     }
 
     /// Switch on per-class deadline/percentile accounting for this
@@ -127,6 +150,14 @@ impl Metrics {
         } else {
             0.0
         };
+        // Fraction of fleet capacity-time lost to downtime: Σ down
+        // device-seconds over l·elapsed (clamped: a device can be down
+        // for at most the whole window).
+        let downtime_frac = if el > 0.0 && self.l > 0 {
+            (self.downtime / (self.l as f64 * el)).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
         SimResult {
             throughput: x,
             mean_response: mean_t,
@@ -135,6 +166,8 @@ impl Metrics {
             little_product: x * mean_t,
             n_programs,
             completed: self.completed,
+            tasks_redispatched: self.tasks_redispatched,
+            downtime_frac,
             completions_by_cell: self.completions_by_cell.clone(),
             deadline_misses: self.misses_by_class.clone(),
             p99_by_class: self
@@ -165,6 +198,12 @@ pub struct SimResult {
     pub n_programs: u32,
     /// Completions measured.
     pub completed: u64,
+    /// Tasks evacuated from failed devices and re-dispatched to
+    /// survivors during this window (0 for fault-free runs).
+    pub tasks_redispatched: u64,
+    /// Fraction of fleet capacity-time lost to device downtime over
+    /// this window: Σ_j down-seconds / (l · elapsed); 0 when fault-free.
+    pub downtime_frac: f64,
     /// Per-(type, proc) completion counts (row-major k×l) — the observed
     /// ρ_ij routing fractions.
     pub completions_by_cell: Vec<u64>,
@@ -255,6 +294,25 @@ mod tests {
         // (0.5 + 0.5 + 3.0) / 2 completions.
         assert!((r.mean_energy - 2.0).abs() < 1e-12);
         assert!((r.edp - r.mean_energy * r.mean_response).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_stats_flow_into_the_result() {
+        let mut m = Metrics::new(2, 2, 0.0);
+        m.record(4.0, 1.0, 0.0, 0, 0);
+        m.record_redispatch();
+        m.record_redispatch();
+        // One of two devices down for 2 of the 4 elapsed seconds.
+        m.add_downtime(2.0);
+        let r = m.finalize(4);
+        assert_eq!(r.tasks_redispatched, 2);
+        assert!((r.downtime_frac - 0.25).abs() < 1e-12);
+        // reset zeroes both fault accumulators.
+        m.reset(2, 2, 0.0);
+        m.record(1.0, 1.0, 0.0, 0, 0);
+        let r = m.finalize(4);
+        assert_eq!(r.tasks_redispatched, 0);
+        assert_eq!(r.downtime_frac, 0.0);
     }
 
     #[test]

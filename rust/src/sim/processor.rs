@@ -301,6 +301,41 @@ impl Processor {
         Ok(resident.task)
     }
 
+    /// Evacuate every resident task with its remaining work — the
+    /// device-failure path.  Caller must `advance(now)` first; the
+    /// processor is left empty (but keeps its cumulative `busy_time`
+    /// and clock, so downtime accounting stays consistent).
+    ///
+    /// Remaining work per discipline: PS residents carry a constant
+    /// virtual finish time F, so remaining = (F − V)·rate; FCFS/LCFS
+    /// keys *are* the remaining work (only the served head/top is ever
+    /// decremented, and `advance` already brought it current).  Tasks
+    /// are returned in arrival (seq) order so re-dispatch is
+    /// deterministic and discipline-independent.
+    pub fn drain_residents(&mut self, now: f64) -> Vec<(Task, f64)> {
+        debug_assert!((now - self.last_update).abs() < 1e-9);
+        let mut order: Vec<usize> = (self.head..self.items.len()).collect();
+        order.sort_by_key(|&i| self.items[i].seq);
+        let drained: Vec<(Task, f64)> = order
+            .into_iter()
+            .map(|i| {
+                let r = &self.items[i];
+                let rem = match self.discipline {
+                    Discipline::Ps => (r.key - self.vtime) * r.rate,
+                    Discipline::Fcfs | Discipline::Lcfs => r.key,
+                };
+                // Numerical dust only; a resident at exactly zero work
+                // re-dispatches as an (immediately completing) ε-task.
+                (r.task.clone(), rem.max(1e-12))
+            })
+            .collect();
+        self.items.clear();
+        self.head = 0;
+        self.vtime = 0.0;
+        self.work_time = 0.0;
+        drained
+    }
+
     /// Tasks of each type currently resident (invariant checks; compiled
     /// only with debug assertions so release builds pay nothing).
     #[cfg(debug_assertions)]
@@ -630,6 +665,44 @@ mod tests {
         // reset clears the accumulator.
         p.reset(Discipline::Fcfs);
         assert_eq!(p.busy_time(), 0.0);
+    }
+
+    #[test]
+    fn drain_residents_returns_remaining_work_in_arrival_order() {
+        for d in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut p = Processor::new(0, d);
+            p.push(task(1, 0, 2.0), 1.0, 0.0);
+            p.push(task(2, 1, 3.0), 1.0, 0.0);
+            p.advance(1.0);
+            let drained = p.drain_residents(1.0);
+            assert_eq!(p.occupancy(), 0);
+            assert!(p.next_completion().is_none());
+            assert_eq!(p.remaining_work_time(), 0.0);
+            let ids: Vec<u64> = drained.iter().map(|(t, _)| t.id).collect();
+            assert_eq!(ids, vec![1, 2], "{d:?}: arrival order");
+            // One unit of capacity was spent by t=1, split per discipline,
+            // but the total remaining work is discipline-independent
+            // (work conservation): 5 − 1 = 4.
+            let total: f64 = drained.iter().map(|(_, r)| r).sum();
+            assert!((total - 4.0).abs() < 1e-9, "{d:?}: {total}");
+            // Busy-time accounting survives the drain.
+            assert!((p.busy_time() - 1.0).abs() < 1e-12);
+            // The emptied processor accepts fresh work normally.
+            p.push(task(9, 0, 2.0), 2.0, 1.0);
+            assert!((p.next_completion().unwrap() - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn drain_residents_ps_remaining_matches_shares() {
+        let mut p = Processor::new(0, Discipline::Ps);
+        p.push(task(1, 0, 4.0), 2.0, 0.0); // drains at 2·(1/2)=1 per s
+        p.push(task(2, 0, 6.0), 1.0, 0.0); // drains at 0.5 per s
+        p.advance(2.0);
+        let drained = p.drain_residents(2.0);
+        let rem: Vec<f64> = drained.iter().map(|(_, r)| *r).collect();
+        assert!((rem[0] - 2.0).abs() < 1e-9, "{rem:?}");
+        assert!((rem[1] - 5.0).abs() < 1e-9, "{rem:?}");
     }
 
     #[test]

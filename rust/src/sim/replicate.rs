@@ -252,6 +252,12 @@ pub struct DynCellStats {
     /// ([`super::dynamic::DynamicReport::mean_energy`] per run) — the
     /// A/B signal of the energy-objective arm.
     pub mean_energy: f64,
+    /// Mean count of tasks re-dispatched off failed devices per
+    /// replication (0 outside fault-injected cells).
+    pub mean_redispatched: f64,
+    /// Mean fraction of device-time lost to injected faults
+    /// ([`super::dynamic::DynamicReport::mean_downtime_frac`] per run).
+    pub mean_downtime_frac: f64,
 }
 
 /// Fan R seeded replications of each dynamic cell across the worker
@@ -266,23 +272,34 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
     let jobs: Vec<(usize, u32)> = (0..cells.len())
         .flat_map(|c| (0..plan.reps).map(move |r| (c, r)))
         .collect();
-    type RunStats = (f64, u64, Vec<f64>, Vec<f64>, f64);
+    type RunStats = (f64, u64, Vec<f64>, Vec<f64>, f64, u64, f64);
     let runs: Vec<Result<RunStats>> = parallel_map(&jobs, plan.threads, |_, &(c, r)| {
         let cell = &cells[c];
         let mut cfg = cell.cfg.clone();
         cfg.seed = rep_seed(plan.base_seed, cell.cfg.seed, c, r);
         let mut policy = cell.policy.build();
-        run_dynamic_report(&cell.mu, &cfg, policy.as_mut()).map(|report| {
+        run_dynamic_report(&cell.mu, &cfg, policy.as_mut()).and_then(|report| {
+            // Conservation is a hard invariant of the fault machinery,
+            // not a statistic: a replication that lost a task poisons
+            // the whole sweep.
+            if report.tasks_lost > 0 {
+                return Err(Error::Runtime(format!(
+                    "cell '{}' rep {r} lost {} task(s) under its fault plan",
+                    cell.label, report.tasks_lost
+                )));
+            }
             let k = cell.mu.types();
             let class_x: Vec<f64> = (0..k).map(|i| report.class_throughput(i)).collect();
             let miss: Vec<f64> = (0..k).map(|i| report.deadline_miss_rate(i)).collect();
-            (
+            Ok((
                 report.mean_throughput(),
                 report.resolves,
                 class_x,
                 miss,
                 report.mean_energy(),
-            )
+                report.tasks_redispatched,
+                report.mean_downtime_frac(),
+            ))
         })
     });
     let mut it = runs.into_iter();
@@ -291,15 +308,19 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
         let k = cell.mu.types();
         let mut xs = Vec::with_capacity(reps);
         let mut es = Vec::with_capacity(reps);
+        let mut downs = Vec::with_capacity(reps);
         let mut resolve_total = 0u64;
+        let mut redispatch_total = 0u64;
         let mut class_x_sum = vec![0.0f64; k];
         let mut miss_sum = vec![0.0f64; k];
         for _ in 0..reps {
-            let (x, resolves, class_x, miss, energy) =
+            let (x, resolves, class_x, miss, energy, redispatched, downtime) =
                 it.next().expect("one slot per job")?;
             xs.push(x);
             es.push(energy);
+            downs.push(downtime);
             resolve_total += resolves;
+            redispatch_total += redispatched;
             for (acc, v) in class_x_sum.iter_mut().zip(&class_x) {
                 *acc += v;
             }
@@ -309,6 +330,7 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
         }
         let (mean_x, sd_x, ci95_x) = mean_sd_ci(&xs);
         let (mean_energy, _, _) = mean_sd_ci(&es);
+        let (mean_downtime_frac, _, _) = mean_sd_ci(&downs);
         out.push(DynCellStats {
             label: cell.label.clone(),
             reps: plan.reps,
@@ -319,6 +341,8 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
             mean_class_x: class_x_sum.iter().map(|s| s / reps as f64).collect(),
             mean_miss_rate: miss_sum.iter().map(|s| s / reps as f64).collect(),
             mean_energy,
+            mean_redispatched: redispatch_total as f64 / reps as f64,
+            mean_downtime_frac,
         });
     }
     Ok(out)
@@ -523,8 +547,44 @@ mod tests {
             assert!(a.mean_miss_rate.iter().all(|&m| m == 0.0));
             assert_eq!(a.mean_energy.to_bits(), b.mean_energy.to_bits(), "{}", a.label);
             assert!(a.mean_energy > 0.0, "{}", a.label);
+            // No fault plan ⇒ the churn metrics stay exactly zero.
+            assert_eq!(a.mean_redispatched, 0.0, "{}", a.label);
+            assert_eq!(a.mean_downtime_frac, 0.0, "{}", a.label);
         }
         assert!(run_dynamic_cells(&[], &mk(1)).is_err());
+    }
+
+    #[test]
+    fn churn_cells_aggregate_fault_metrics_and_stay_deterministic() {
+        use crate::sim::dynamic::{DynamicConfig, ResolveMode};
+        use crate::sim::workload::{churn_fault_plan, scenario_phases, ScenarioKind, ScenarioParams};
+        let mu = workload::paper_two_type_mu();
+        let p = ScenarioParams { phases: 3, completions: 600, warmup: 50, ..Default::default() };
+        let mut cfg = DynamicConfig::new(scenario_phases(ScenarioKind::Churn, &p).unwrap());
+        cfg.resolve = ResolveMode::Adaptive;
+        cfg.faults = churn_fault_plan(&mu, &p).unwrap();
+        cfg.seed = 23;
+        let cells = vec![DynCell {
+            label: "churn".into(),
+            mu: mu.clone(),
+            cfg,
+            policy: PolicyKind::GrIn,
+        }];
+        let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 5 };
+        let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+        let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+        let (a, b) = (&one[0], &four[0]);
+        // The churn aggregates are slot-ordered like everything else:
+        // bit-identical regardless of worker count.
+        assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits());
+        assert_eq!(a.mean_redispatched.to_bits(), b.mean_redispatched.to_bits());
+        assert_eq!(a.mean_downtime_frac.to_bits(), b.mean_downtime_frac.to_bits());
+        // The plan's outage really bites: downtime is metered and the
+        // evacuated work re-dispatched, never lost (run_dynamic_cells
+        // fails the sweep on any lost task).
+        assert!(a.mean_downtime_frac > 0.0);
+        assert!(a.mean_redispatched > 0.0);
+        assert!(a.mean_x > 0.0);
     }
 
     #[test]

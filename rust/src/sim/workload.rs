@@ -13,9 +13,10 @@
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
+use crate::model::throughput::x_max_theoretical;
 
 use super::distribution::Distribution;
-use super::dynamic::Phase;
+use super::dynamic::{FaultEvent, FaultKind, FaultPlan, Phase};
 use super::rng::Rng;
 
 /// The paper's η grid: 0.1, 0.2, …, 0.9 (§5).
@@ -132,6 +133,15 @@ pub enum ScenarioKind {
     /// fixed; pair with [`priority_mu`] and `DynamicConfig::priorities`
     /// so the weighted solve has a fast device to reserve).
     PriorityMix,
+    /// Device churn: stationary populations and rates, but the fleet
+    /// itself is unreliable — long slow-node ("limping") windows on the
+    /// class-0 fast device, each ending just before a short full outage
+    /// of a rotating survivor, driven by the [`FaultPlan`] that
+    /// [`churn_fault_plan`] builds to match the schedule.  The regime
+    /// where a frozen target keeps feeding a crippled device and only
+    /// churn-aware control (CUSUM limp detection + down-signal
+    /// re-solves) holds throughput.
+    Churn,
 }
 
 impl ScenarioKind {
@@ -143,9 +153,10 @@ impl ScenarioKind {
             "slow_drift" | "drift" => Ok(ScenarioKind::SlowDrift),
             "abrupt_flip" | "flip" => Ok(ScenarioKind::AbruptFlip),
             "priority_mix" | "priority" => Ok(ScenarioKind::PriorityMix),
+            "churn" => Ok(ScenarioKind::Churn),
             other => Err(Error::Parse(format!(
                 "unknown scenario '{other}' \
-                 (phase_shift|burst|slow_drift|abrupt_flip|priority_mix)"
+                 (phase_shift|burst|slow_drift|abrupt_flip|priority_mix|churn)"
             ))),
         }
     }
@@ -158,17 +169,19 @@ impl ScenarioKind {
             ScenarioKind::SlowDrift => "slow_drift",
             ScenarioKind::AbruptFlip => "abrupt_flip",
             ScenarioKind::PriorityMix => "priority_mix",
+            ScenarioKind::Churn => "churn",
         }
     }
 
     /// All canned regimes.
-    pub fn all() -> [ScenarioKind; 5] {
+    pub fn all() -> [ScenarioKind; 6] {
         [
             ScenarioKind::PhaseShift,
             ScenarioKind::Burst,
             ScenarioKind::SlowDrift,
             ScenarioKind::AbruptFlip,
             ScenarioKind::PriorityMix,
+            ScenarioKind::Churn,
         ]
     }
 }
@@ -195,6 +208,16 @@ pub struct ScenarioParams {
     /// default drifts the paper's P1-biased matrix into a P2-biased one
     /// — the regime flip a frozen solve cannot see.
     pub drift_to: Vec<f64>,
+    /// Fraction of a phase each churn outage lasts
+    /// ([`ScenarioKind::Churn`]; 0 < f ≤ 0.8 so the device recovers
+    /// before the next cycle starts).
+    pub churn_down: f64,
+    /// Rate factor of churn slow-node cycles (0 < f ≤ 1; 0.25 = the
+    /// limping device serves at quarter speed).
+    pub churn_limp: f64,
+    /// [`FaultPlan::backup_budget`] of churn runs (0 = unmetered
+    /// re-dispatch).
+    pub backup_budget: u32,
 }
 
 impl Default for ScenarioParams {
@@ -208,6 +231,9 @@ impl Default for ScenarioParams {
             high_eta: 0.8,
             burst_factor: 2.0,
             drift_to: vec![0.4, 0.2, 5.0, 2.5],
+            churn_down: 0.3,
+            churn_limp: 0.25,
+            backup_budget: 0,
         }
     }
 }
@@ -308,6 +334,20 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
                 })
                 .collect()
         }
+        ScenarioKind::Churn => {
+            if p.phases < 2 {
+                return Err(Error::Config(
+                    "churn needs ≥ 2 phases (one clean, then fault cycles)".into(),
+                ));
+            }
+            validate_churn_params(p)?;
+            // Stationary balanced mix: the only non-stationarity is the
+            // fleet itself, injected via the matching fault plan.
+            let (n1, n2) = split_populations(p.n, 0.5);
+            (0..p.phases)
+                .map(|_| Phase::new(vec![n1, n2], p.warmup, p.completions))
+                .collect()
+        }
         ScenarioKind::SlowDrift => {
             if p.drift_to.is_empty() {
                 return Err(Error::Config("slow_drift needs drift_to factors".into()));
@@ -332,6 +372,117 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
         }
     };
     Ok(phases)
+}
+
+fn validate_churn_params(p: &ScenarioParams) -> Result<()> {
+    if !(p.churn_down > 0.0 && p.churn_down <= 0.8) {
+        return Err(Error::Config(format!(
+            "churn_down must lie in (0, 0.8], got {}",
+            p.churn_down
+        )));
+    }
+    if !(p.churn_limp > 0.0 && p.churn_limp <= 1.0) {
+        return Err(Error::Config(format!(
+            "churn_limp must lie in (0, 1], got {}",
+            p.churn_limp
+        )));
+    }
+    Ok(())
+}
+
+/// Build the failure/recovery schedule that pairs with
+/// [`ScenarioKind::Churn`]'s phase schedule for the fleet `mu`.
+///
+/// Phase wall time T is estimated from the theoretical throughput bound
+/// (completions arrive at ≈ X_max under any decent policy), and each
+/// fault super-cycle spans two phase estimates:
+///
+/// * a long limp window on device 0 — the class-0 fast device, where a
+///   frozen target hurts most — at factor `churn_limp` from `0.10·T`
+///   after the cycle start until just before the outage (`Limp(1.0)`
+///   restores speed; the device never left the fleet, so detecting both
+///   edges is the CUSUM machinery's job);
+/// * immediately after the restore, a full outage of one of the other
+///   devices for a `churn_down` fraction of T, rotating across the
+///   fleet so every survivor eventually fails.  The evacuation floods
+///   the remaining devices with full-rate work, so stale beliefs about
+///   the just-healed device flush within a few seconds of service;
+/// * a short clean tail before the next cycle.
+///
+/// Cycles start after one clean phase estimate and are tiled to ~3× the
+/// nominal schedule length: arms slowed down by the faults themselves
+/// (the frozen baseline most of all) stay under churn for their entire
+/// run instead of coasting through an accidentally fault-free tail, and
+/// events past a run's actual end simply never fire.
+///
+/// The plan carries `p.backup_budget` and validates against `mu`, so a
+/// returned plan is always installable in `DynamicConfig::faults`.
+pub fn churn_fault_plan(mu: &AffinityMatrix, p: &ScenarioParams) -> Result<FaultPlan> {
+    validate_churn_params(p)?;
+    let l = mu.procs();
+    if l < 2 {
+        return Err(Error::Config(
+            "churn needs ≥ 2 devices so survivors can absorb a failure".into(),
+        ));
+    }
+    if p.phases < 2 {
+        return Err(Error::Config(
+            "churn needs ≥ 2 phases (one clean, then fault cycles)".into(),
+        ));
+    }
+    let (n1, n2) = split_populations(p.n, 0.5);
+    let x = match mu.classify() {
+        Ok(regime) => x_max_theoretical(mu, regime, n1, n2),
+        // Wider-than-2×2 fleets have no closed-form bound; cap
+        // throughput by every device serving its fastest class.  An
+        // overestimate shortens the time estimate, so fault cycles land
+        // early within the run rather than past its end.
+        Err(_) => (0..l)
+            .map(|j| {
+                (0..mu.types())
+                    .map(|i| mu.rate(i, j))
+                    .fold(f64::NEG_INFINITY, f64::max)
+            })
+            .sum(),
+    };
+    if !(x.is_finite() && x > 0.0) {
+        return Err(Error::Config(format!(
+            "cannot estimate churn phase length: X_max = {x}"
+        )));
+    }
+    let t_phase = (p.warmup + p.completions) as f64 / x;
+    // Each super-cycle covers 2·T: limp [0.10, 1.90 − churn_down],
+    // outage [1.92 − churn_down, 1.92], clean tail to 2.10 (the next
+    // cycle's limp onset).  churn_down ≤ 0.8 keeps every window ordered.
+    let cycles = (3 * p.phases + 1) / 2;
+    let mut events = Vec::new();
+    for m in 0..cycles {
+        let base = (1 + 2 * m) as f64 * t_phase;
+        events.push(FaultEvent {
+            time: base + 0.10 * t_phase,
+            device: 0,
+            kind: FaultKind::Limp(p.churn_limp),
+        });
+        events.push(FaultEvent {
+            time: base + (1.90 - p.churn_down) * t_phase,
+            device: 0,
+            kind: FaultKind::Limp(1.0),
+        });
+        let device = 1 + m % (l - 1);
+        events.push(FaultEvent {
+            time: base + (1.92 - p.churn_down) * t_phase,
+            device,
+            kind: FaultKind::Down,
+        });
+        events.push(FaultEvent {
+            time: base + 1.92 * t_phase,
+            device,
+            kind: FaultKind::Up,
+        });
+    }
+    let plan = FaultPlan { events, backup_budget: p.backup_budget };
+    plan.validate(l)?;
+    Ok(plan)
 }
 
 #[cfg(test)]
@@ -498,6 +649,90 @@ mod tests {
     }
 
     #[test]
+    fn churn_schedule_is_stationary_with_a_matching_fault_plan() {
+        let p = ScenarioParams::default();
+        let phases = scenario_phases(ScenarioKind::Churn, &p).unwrap();
+        assert_eq!(phases.len(), 6);
+        let (n1, n2) = split_populations(20, 0.5);
+        for ph in &phases {
+            assert_eq!(ph.populations, vec![n1, n2]);
+            assert!(ph.mu_scale.is_empty() && ph.dist.is_none());
+        }
+
+        let mu = paper_two_type_mu();
+        let plan = churn_fault_plan(&mu, &p).unwrap();
+        assert!(plan.validate(mu.procs()).is_ok());
+        assert!(!plan.is_empty());
+        // Four events per super-cycle (limp on/off, down, up), cycles
+        // tiled to ~3× the nominal schedule, times sorted.
+        let cycles = (3 * p.phases + 1) / 2;
+        assert_eq!(plan.events.len(), 4 * cycles);
+        for w in plan.events.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        // Both failure modes appear: limp windows on device 0 (each one
+        // restored), full outages (with recovery) on the other device.
+        let limps = plan
+            .events
+            .iter()
+            .filter(|e| e.device == 0 && e.kind == FaultKind::Limp(p.churn_limp))
+            .count();
+        let restores = plan
+            .events
+            .iter()
+            .filter(|e| e.device == 0 && e.kind == FaultKind::Limp(1.0))
+            .count();
+        assert_eq!(limps, cycles);
+        assert_eq!(restores, cycles, "every limp window is restored");
+        assert!(plan
+            .events
+            .iter()
+            .any(|e| e.device == 1 && e.kind == FaultKind::Down));
+        let downs = plan.events.iter().filter(|e| e.kind == FaultKind::Down).count();
+        let ups = plan.events.iter().filter(|e| e.kind == FaultKind::Up).count();
+        assert_eq!(downs, ups, "every outage recovers");
+        assert_eq!(downs, cycles);
+        assert_eq!(plan.backup_budget, p.backup_budget);
+
+        // Down cycles rotate across the non-limping devices of a wider
+        // fleet; device 0 (the limping one) never goes down.
+        let wide = three_class_mu();
+        let plan3 = churn_fault_plan(&wide, &ScenarioParams { phases: 8, ..p.clone() }).unwrap();
+        let downed: Vec<usize> = plan3
+            .events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Down)
+            .map(|e| e.device)
+            .collect();
+        assert_eq!(downed.len(), (3 * 8 + 1) / 2);
+        assert_eq!(&downed[..4], &[1, 2, 1, 2]);
+        assert!(downed.iter().all(|&d| d != 0));
+
+        // Budget is carried through.
+        let budgeted = churn_fault_plan(&mu, &ScenarioParams { backup_budget: 3, ..p }).unwrap();
+        assert_eq!(budgeted.backup_budget, 3);
+    }
+
+    #[test]
+    fn churn_fault_plan_rejects_bad_params() {
+        let mu = paper_two_type_mu();
+        let ok = ScenarioParams::default();
+        let bad: Vec<ScenarioParams> = vec![
+            ScenarioParams { churn_down: 0.0, ..ok.clone() },
+            ScenarioParams { churn_down: 0.9, ..ok.clone() },
+            ScenarioParams { churn_limp: 0.0, ..ok.clone() },
+            ScenarioParams { churn_limp: 1.5, ..ok.clone() },
+            ScenarioParams { phases: 1, ..ok.clone() },
+        ];
+        for p in bad {
+            assert!(churn_fault_plan(&mu, &p).is_err(), "{p:?}");
+        }
+        // Single-device fleets have no survivors to absorb a failure.
+        let solo = AffinityMatrix::from_rows(&[vec![5.0], vec![3.0]]).unwrap();
+        assert!(churn_fault_plan(&solo, &ok).is_err());
+    }
+
+    #[test]
     fn scenario_validation_rejects_bad_params() {
         let ok = ScenarioParams::default();
         let cases: Vec<(ScenarioKind, ScenarioParams)> = vec![
@@ -514,7 +749,10 @@ mod tests {
             (ScenarioKind::AbruptFlip, ScenarioParams { phases: 1, ..ok.clone() }),
             (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![], ..ok.clone() }),
             (ScenarioKind::PriorityMix, ScenarioParams { phases: 1, ..ok.clone() }),
-            (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![0.0], ..ok }),
+            (ScenarioKind::AbruptFlip, ScenarioParams { drift_to: vec![0.0], ..ok.clone() }),
+            (ScenarioKind::Churn, ScenarioParams { phases: 1, ..ok.clone() }),
+            (ScenarioKind::Churn, ScenarioParams { churn_down: 0.0, ..ok.clone() }),
+            (ScenarioKind::Churn, ScenarioParams { churn_limp: -0.5, ..ok }),
         ];
         for (kind, p) in cases {
             assert!(scenario_phases(kind, &p).is_err(), "{kind:?} {p:?}");

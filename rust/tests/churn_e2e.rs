@@ -1,0 +1,305 @@
+//! Fault-tolerant serving under device churn — the PR acceptance gates:
+//!
+//! * **conservation gate** (property test): under random fault plans —
+//!   outages with recovery and limp windows — every run completes its
+//!   configured completion count with zero lost tasks, across seeds,
+//!   all three service disciplines and all single-leader resolve modes;
+//! * **margin gate**: on the churn scenario the churn-aware adaptive
+//!   and sharded control planes stay within 15% of the
+//!   failure-schedule oracle and beat the frozen-target baseline by
+//!   ≥ 1.2×;
+//! * **limp gate**: a slow-node degradation is never signalled — the
+//!   per-cell CUSUM must detect it and the re-solve must steer around
+//!   the limping device;
+//! * **determinism gate**: churn-cell replications aggregate
+//!   bit-identically regardless of worker thread count;
+//! * **no-capacity gate**: a fleet with every device down and no
+//!   recovery scheduled degrades to a typed [`Error::NoCapacity`],
+//!   never a panic or a hang.
+
+use hetsched::error::Error;
+use hetsched::model::affinity::AffinityMatrix;
+use hetsched::policy::PolicyKind;
+use hetsched::sim::dynamic::{
+    run_dynamic_report, DynamicConfig, FaultEvent, FaultKind, FaultPlan, Phase,
+    ResolveMode, Trigger,
+};
+use hetsched::sim::processor::Discipline;
+use hetsched::sim::replicate::{run_dynamic_cells, DynCell, ReplicationPlan};
+use hetsched::sim::workload::{
+    self, churn_fault_plan, scenario_phases, ScenarioKind, ScenarioParams,
+};
+use hetsched::testkit::forall;
+
+/// A fleet where churn-aware re-solves matter: device 0 is fast for
+/// both classes, but the clean optimum keeps only a sliver of class-0
+/// work there (mixing the near-stalled class 1 into device 1's queue
+/// costs less than idling device 0).  When device 0 limps, the optimal
+/// response is a full swap — class 0 evacuates to device 1, class 1
+/// hides on the crippled device — which a frozen target never finds.
+fn churn_sensitive_mu() -> AffinityMatrix {
+    AffinityMatrix::two_type(30.0, 22.0, 1.0, 2.0).unwrap()
+}
+
+fn churn_params() -> ScenarioParams {
+    ScenarioParams {
+        phases: 5,
+        completions: 2_500,
+        warmup: 300,
+        churn_down: 0.3,
+        churn_limp: 0.1,
+        backup_budget: 4,
+        ..Default::default()
+    }
+}
+
+fn churn_cell(label: &str, resolve: ResolveMode, params: &ScenarioParams) -> DynCell {
+    let mu = churn_sensitive_mu();
+    let mut cfg =
+        DynamicConfig::new(scenario_phases(ScenarioKind::Churn, params).unwrap());
+    cfg.resolve = resolve;
+    cfg.drift.trigger = Trigger::Cusum;
+    cfg.seed = 0xC1C;
+    cfg.faults = churn_fault_plan(&mu, params).unwrap();
+    DynCell { label: label.to_string(), mu, cfg, policy: PolicyKind::GrIn }
+}
+
+#[test]
+fn prop_no_task_lost_under_random_fault_plans() {
+    // Conservation gate: completions = arrivals − residue, i.e. the
+    // run-end residual `tasks_lost` is zero and every phase delivers
+    // exactly its configured completion count, for random fleets ×
+    // random failure/recovery schedules × {PS, FCFS, LCFS} × every
+    // single-leader resolve mode.
+    forall(0xFA17, 15, |g| {
+        let mu = g.affinity((2, 3), (2, 3));
+        let l = mu.procs();
+        let populations = g.populations(mu.types(), 6);
+        let phases =
+            vec![Phase::new(populations.clone(), 40, 150), Phase::new(populations, 40, 150)];
+
+        // Sequential non-overlapping fault windows (at most one device
+        // degraded at a time, so survivors always exist), each either a
+        // full outage with recovery or a limp/restore pair, placed via
+        // the optimistic wall-clock estimate so they land mid-run.
+        let x_ub: f64 = (0..l)
+            .map(|j| {
+                (0..mu.types())
+                    .map(|i| mu.rate(i, j))
+                    .fold(f64::NEG_INFINITY, f64::max)
+            })
+            .sum();
+        let t_total = (2 * (40 + 150)) as f64 / x_ub;
+        let mut events = Vec::new();
+        let mut cursor = 0.05 * t_total;
+        for _ in 0..3 {
+            let start = cursor + g.f64_in(0.0, 0.05) * t_total;
+            let end = start + g.f64_in(0.05, 0.20) * t_total;
+            let device = g.usize_in(0, l - 1);
+            if g.usize_in(0, 1) == 0 {
+                events.push(FaultEvent { time: start, device, kind: FaultKind::Down });
+                events.push(FaultEvent { time: end, device, kind: FaultKind::Up });
+            } else {
+                let factor = g.f64_in(0.05, 0.5);
+                events.push(FaultEvent {
+                    time: start,
+                    device,
+                    kind: FaultKind::Limp(factor),
+                });
+                events.push(FaultEvent { time: end, device, kind: FaultKind::Limp(1.0) });
+            }
+            cursor = end + 0.02 * t_total;
+        }
+        let plan = FaultPlan { events, backup_budget: g.u32_in(0, 3) };
+        plan.validate(l).map_err(|e| e.to_string())?;
+
+        let resolve = [ResolveMode::Static, ResolveMode::EveryPhase, ResolveMode::Adaptive]
+            [g.usize_in(0, 2)];
+        let seed = g.u32_in(1, 1 << 30) as u64;
+        for discipline in [Discipline::Ps, Discipline::Fcfs, Discipline::Lcfs] {
+            let mut cfg = DynamicConfig::new(phases.clone());
+            cfg.discipline = discipline;
+            cfg.resolve = resolve;
+            cfg.seed = seed;
+            cfg.faults = plan.clone();
+            let mut p = PolicyKind::GrIn.build();
+            let report = run_dynamic_report(&mu, &cfg, p.as_mut())
+                .map_err(|e| format!("{discipline:?}/{resolve:?}: {e}"))?;
+            if report.tasks_lost != 0 {
+                return Err(format!(
+                    "{discipline:?}/{resolve:?}: lost {} task(s) under {:?}",
+                    report.tasks_lost, plan
+                ));
+            }
+            for (i, r) in report.phases.iter().enumerate() {
+                if r.completed != 150 {
+                    return Err(format!(
+                        "{discipline:?}/{resolve:?}: phase {i} completed {} ≠ 150",
+                        r.completed
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn churn_aware_control_tracks_oracle_and_beats_frozen() {
+    // Margin gate: frozen / adaptive / sharded / oracle on the same
+    // churn schedule.  `run_dynamic_cells` hard-errors if any
+    // replication loses a task, so the unwrap doubles as the zero-loss
+    // assertion for every arm.
+    let params = churn_params();
+    let cells = vec![
+        churn_cell("frozen", ResolveMode::Static, &params),
+        churn_cell("adaptive", ResolveMode::Adaptive, &params),
+        churn_cell("sharded", ResolveMode::Sharded, &params),
+        churn_cell("oracle", ResolveMode::EveryPhase, &params),
+    ];
+    let plan = ReplicationPlan { reps: 3, threads: 0, base_seed: 0xFA11 };
+    let stats = run_dynamic_cells(&cells, &plan).unwrap();
+    let (frozen, adaptive, sharded, oracle) =
+        (&stats[0], &stats[1], &stats[2], &stats[3]);
+
+    for (name, arm) in [("adaptive", adaptive), ("sharded", sharded)] {
+        assert!(
+            arm.mean_x >= 0.85 * oracle.mean_x,
+            "{name} {} vs oracle {} — more than 15% behind the \
+             failure-schedule oracle",
+            arm.mean_x,
+            oracle.mean_x
+        );
+        assert!(
+            arm.mean_x >= 1.2 * frozen.mean_x,
+            "{name} {} vs frozen {} — no ≥1.2× churn-adaptation win",
+            arm.mean_x,
+            frozen.mean_x
+        );
+    }
+    // The win came from actual churn reactions: the frozen arm never
+    // re-solved, the adaptive arm did, and outages forced re-dispatch
+    // and metered downtime on every arm.
+    assert_eq!(frozen.mean_resolves, 0.0);
+    assert!(adaptive.mean_resolves >= 1.0, "{}", adaptive.mean_resolves);
+    assert!(adaptive.mean_redispatched > 0.0, "no task was ever evacuated");
+    for arm in &stats {
+        assert!(
+            arm.mean_downtime_frac > 0.0,
+            "{}: outages scheduled but no downtime metered",
+            arm.label
+        );
+    }
+}
+
+#[test]
+fn cusum_detects_and_steers_around_a_limping_device() {
+    // Limp gate: the degradation is deliberately *not* signalled to the
+    // control plane — a permanent 10× slow-down of device 0 must be
+    // caught by the per-cell CUSUM (resolves ≥ 1) and steered around
+    // (≥ 1.2× the frozen throughput).  Limp never evacuates anything,
+    // so the re-dispatch counter stays zero.
+    let mu = churn_sensitive_mu();
+    let faults = FaultPlan::parse_spec("limp:0x0.1@20").unwrap();
+    let run = |resolve: ResolveMode| {
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![10, 10], 300, 6_000)]);
+        cfg.resolve = resolve;
+        cfg.drift.trigger = Trigger::Cusum;
+        cfg.seed = 71;
+        cfg.faults = faults.clone();
+        let mut p = PolicyKind::GrIn.build();
+        run_dynamic_report(&mu, &cfg, p.as_mut()).unwrap()
+    };
+    let frozen = run(ResolveMode::Static);
+    let adaptive = run(ResolveMode::Adaptive);
+    assert_eq!(frozen.resolves, 0);
+    assert!(
+        adaptive.resolves >= 1,
+        "CUSUM never fired on a 10× limped device"
+    );
+    assert!(
+        adaptive.mean_throughput() >= 1.2 * frozen.mean_throughput(),
+        "adaptive {} vs frozen {} — limp detected but not steered around",
+        adaptive.mean_throughput(),
+        frozen.mean_throughput()
+    );
+    for r in [&frozen, &adaptive] {
+        assert_eq!(r.tasks_lost, 0);
+        assert_eq!(r.tasks_redispatched, 0, "limp must not evacuate tasks");
+    }
+}
+
+#[test]
+fn churn_replications_are_thread_count_independent() {
+    // Determinism gate: slot-addressed replication keeps churn-cell
+    // aggregates — throughput, re-dispatch and downtime metering —
+    // bit-identical across worker thread counts.
+    let params = ScenarioParams {
+        phases: 3,
+        completions: 800,
+        warmup: 100,
+        ..churn_params()
+    };
+    let cells = vec![
+        churn_cell("adaptive", ResolveMode::Adaptive, &params),
+        churn_cell("sharded", ResolveMode::Sharded, &params),
+    ];
+    let mk = |threads| ReplicationPlan { reps: 3, threads, base_seed: 5 };
+    let one = run_dynamic_cells(&cells, &mk(1)).unwrap();
+    let four = run_dynamic_cells(&cells, &mk(4)).unwrap();
+    for (a, b) in one.iter().zip(&four) {
+        assert_eq!(a.mean_x.to_bits(), b.mean_x.to_bits(), "{}", a.label);
+        assert_eq!(a.ci95_x.to_bits(), b.ci95_x.to_bits(), "{}", a.label);
+        assert_eq!(
+            a.mean_redispatched.to_bits(),
+            b.mean_redispatched.to_bits(),
+            "{}",
+            a.label
+        );
+        assert_eq!(
+            a.mean_downtime_frac.to_bits(),
+            b.mean_downtime_frac.to_bits(),
+            "{}",
+            a.label
+        );
+    }
+    // The schedule actually exercised the fault machinery.
+    assert!(one[0].mean_downtime_frac > 0.0);
+}
+
+#[test]
+fn all_devices_down_degrades_to_a_typed_error() {
+    // No-capacity gate: both devices fail with no recovery scheduled.
+    // Every resolve mode must surface `Error::NoCapacity` — not panic,
+    // not spin on an empty event queue.
+    let mu = workload::paper_two_type_mu();
+    let faults = FaultPlan::parse_spec("down:0@1;down:1@1").unwrap();
+    for resolve in [
+        ResolveMode::Static,
+        ResolveMode::EveryPhase,
+        ResolveMode::Adaptive,
+        ResolveMode::Sharded,
+    ] {
+        let mut cfg = DynamicConfig::new(vec![Phase::new(vec![5, 5], 0, 500)]);
+        cfg.resolve = resolve;
+        cfg.seed = 9;
+        cfg.faults = faults.clone();
+        let mut p = PolicyKind::GrIn.build();
+        match run_dynamic_report(&mu, &cfg, p.as_mut()) {
+            Err(Error::NoCapacity(_)) => {}
+            other => panic!("{resolve:?}: expected NoCapacity, got {other:?}"),
+        }
+    }
+    // The replication runner propagates the same typed failure.
+    let mut cfg = DynamicConfig::new(vec![Phase::new(vec![5, 5], 0, 500)]);
+    cfg.resolve = ResolveMode::Static;
+    cfg.faults = faults;
+    let cells = vec![DynCell {
+        label: "doomed".into(),
+        mu,
+        cfg,
+        policy: PolicyKind::GrIn,
+    }];
+    let plan = ReplicationPlan { reps: 2, threads: 0, base_seed: 1 };
+    assert!(run_dynamic_cells(&cells, &plan).is_err());
+}
