@@ -1,0 +1,217 @@
+//! §Perf — serving front-end microbenchmarks feeding EXPERIMENTS.md §Perf.
+//!
+//! Measures routing decisions/sec through the lock-free
+//! `ConcurrentRouter`: the exact-mode (CAS-validated) single-thread
+//! cost, reconciled-mode scaling at 1/2/4 threads, router-level batch
+//! amortization via `route_batch`, and a saturation arm where offered
+//! load exceeds routing capacity — batched routing must sustain
+//! strictly higher served throughput because one steering decision
+//! admits a whole same-class batch.
+//!
+//! All arms are route-only: completions are off the decision hot path
+//! (see the module docs in `coordinator/frontend.rs`), so the numbers
+//! here isolate the per-decision cost that `serve --frontend-threads N`
+//! pays per request.
+//!
+//! Flags: `--quick` shrinks every loop for CI smoke runs; `--json PATH`
+//! writes a `BENCH_*.json`-style document.  CI merges these metrics
+//! into `BENCH_perf_hotpath.json`, so `routing_decisions_per_s_4t`
+//! rides the same regression gate as `sim_events_per_s`.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use hetsched::cli::Args;
+use hetsched::config::json::Json;
+use hetsched::coordinator::{ConcurrentRouter, RouterConfig};
+use hetsched::policy::PolicyKind;
+use hetsched::report::Table;
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+
+/// A fresh front end on the Table-3 general-symmetric affinity: CAB
+/// solves the boot target, two classes steer across two devices.
+fn frontend() -> Arc<ConcurrentRouter> {
+    let mu = workload::table3::general_symmetric();
+    let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+    let mut policy = PolicyKind::Cab.build();
+    Arc::new(
+        ConcurrentRouter::new(
+            RouterConfig::new(mu, omega, vec![64, 64]).with_seed(7),
+            policy.as_mut(),
+        )
+        .expect("front end"),
+    )
+}
+
+/// Drive `per_thread` seeded decisions of batch size `batch` from each
+/// of `threads` routing threads; returns elapsed seconds.
+fn run_arm(
+    front: &Arc<ConcurrentRouter>,
+    threads: usize,
+    per_thread: u64,
+    batch: u32,
+    reconcile: u32,
+) -> f64 {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let front = Arc::clone(front);
+            s.spawn(move || {
+                let mut handle = front.handle_with_reconcile(reconcile);
+                let mut rng = Rng::new(0xF00D ^ t as u64);
+                for _ in 0..per_thread {
+                    let class = rng.index(2);
+                    handle.route_batch(class, batch).expect("route");
+                }
+                handle.flush();
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Saturation: route as many requests as fit in `budget_s` seconds of
+/// wall clock on one thread.  The request generator is never the
+/// bottleneck, so served count measures routing capacity alone.
+fn saturate(budget_s: f64, batch: u32) -> u64 {
+    let front = frontend();
+    let mut handle = front.handle_with_reconcile(64);
+    let mut rng = Rng::new(3);
+    let t0 = Instant::now();
+    let mut served = 0u64;
+    while t0.elapsed().as_secs_f64() < budget_s {
+        for _ in 0..512 {
+            let class = rng.index(2);
+            handle.route_batch(class, batch).expect("route");
+            served += batch as u64;
+        }
+    }
+    handle.flush();
+    served
+}
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    args.ignore_harness_flags();
+    let quick = args.switch("quick");
+    let json_path = args.get("json").map(str::to_string);
+    args.finish().expect("flags");
+
+    let scale = |full: u64, quick_n: u64| if quick { quick_n } else { full };
+    let mut t = Table::new("perf_routing", &["metric", "value"]);
+    // (key, value) pairs mirrored into the JSON artifact.
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // --- exact mode: every decision CAS-validates its cell ---------------
+    let n = scale(2_000_000, 200_000);
+    let mut exact_per_s = 0.0f64;
+    for _ in 0..3 {
+        let front = frontend();
+        let secs = run_arm(&front, 1, n, 1, 1);
+        assert_eq!(front.decisions(), n);
+        exact_per_s = exact_per_s.max(n as f64 / secs);
+    }
+    t.row(vec![
+        "decisions/s (exact CAS, 1 thread)".into(),
+        format!("{:.2}M", exact_per_s / 1e6),
+    ]);
+    metrics.push(("routing_exact_decisions_per_s_1t".into(), exact_per_s));
+
+    // --- reconciled mode scaling: 1 / 2 / 4 threads ----------------------
+    // Best-of-3 per arm on fresh front ends so the occupancy history of
+    // one rep never steers the next.
+    let mut per_s = [0.0f64; 3];
+    for (slot, threads) in [(0usize, 1usize), (1, 2), (2, 4)] {
+        for _ in 0..3 {
+            let front = frontend();
+            let secs = run_arm(&front, threads, n, 1, 64);
+            let total = threads as u64 * n;
+            assert_eq!(front.decisions(), total);
+            assert_eq!(front.routed(), total);
+            per_s[slot] = per_s[slot].max(total as f64 / secs);
+        }
+        t.row(vec![
+            format!("decisions/s (reconciled, {threads} thread(s))"),
+            format!("{:.2}M", per_s[slot] / 1e6),
+        ]);
+        metrics.push((format!("routing_decisions_per_s_{threads}t"), per_s[slot]));
+    }
+    let scaling = per_s[2] / per_s[0].max(1e-9);
+    t.row(vec!["scaling 4t vs 1t".into(), format!("{scaling:.2}x")]);
+    metrics.push(("routing_scaling_4t".into(), scaling));
+
+    // --- router-level batching: requests/s at batch 8 --------------------
+    let decisions = scale(500_000, 50_000);
+    for (label, threads) in [("1t", 1usize), ("4t", 4)] {
+        let mut req_per_s = 0.0f64;
+        for _ in 0..3 {
+            let front = frontend();
+            let secs = run_arm(&front, threads, decisions, 8, 64);
+            let requests = threads as u64 * decisions * 8;
+            assert_eq!(front.routed(), requests);
+            assert_eq!(front.decisions(), threads as u64 * decisions);
+            req_per_s = req_per_s.max(requests as f64 / secs);
+        }
+        t.row(vec![
+            format!("requests/s (batch 8, {threads} thread(s))"),
+            format!("{:.2}M", req_per_s / 1e6),
+        ]);
+        metrics.push((format!("routing_requests_per_s_batch8_{label}"), req_per_s));
+    }
+
+    // --- saturation: offered load beyond routing capacity ----------------
+    // Fixed wall budget, unbatched vs batch-8.  One steering decision
+    // per 8 requests must serve strictly more — the amortization that
+    // `serve --frontend-threads N --batch 8` exploits on the Saturation
+    // scenario's geometric load ramp.
+    let budget = if quick { 0.04 } else { 0.2 };
+    let served_1 = saturate(budget, 1);
+    let served_8 = saturate(budget, 8);
+    assert!(
+        served_8 > served_1,
+        "batched routing must out-serve unbatched at overload ({served_8} vs {served_1})"
+    );
+    let gain = served_8 as f64 / served_1 as f64;
+    t.row(vec![
+        "saturation served/s (unbatched)".into(),
+        format!("{:.2}M", served_1 as f64 / budget / 1e6),
+    ]);
+    metrics.push((
+        "saturation_served_per_s_unbatched".into(),
+        served_1 as f64 / budget,
+    ));
+    t.row(vec![
+        "saturation served/s (batch 8)".into(),
+        format!("{:.2}M", served_8 as f64 / budget / 1e6),
+    ]);
+    metrics.push((
+        "saturation_served_per_s_batch8".into(),
+        served_8 as f64 / budget,
+    ));
+    t.row(vec!["saturation batch gain".into(), format!("{gain:.2}x")]);
+    metrics.push(("saturation_batch_gain".into(), gain));
+
+    t.print();
+    if !quick && scaling < 3.0 {
+        println!("WARN: 4-thread routing below the 3x scaling target ({scaling:.2}x)");
+    }
+
+    if let Some(path) = json_path {
+        let doc = Json::Obj(vec![
+            ("bench".to_string(), Json::Str("perf_routing".to_string())),
+            ("quick".to_string(), Json::Bool(quick)),
+            (
+                "metrics".to_string(),
+                Json::Obj(
+                    metrics
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::Num(v)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write(&path, doc.to_string_compact()).expect("write --json output");
+        println!("wrote {path}");
+    }
+}

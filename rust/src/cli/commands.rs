@@ -17,6 +17,7 @@
 //! hetsched platform  --case p2_biased --eta 0.5 --policy cab
 //! hetsched serve     --policy cab --inflight 16 --total 400 [--adaptive]
 //!                    [--devices L --shards N --sync-every M]
+//!                    [--frontend-threads N --batch B --batch-deadline MS]
 //!                    [--trigger cusum --cusum-h 4.0 --cusum-delta 0.25]
 //!                    [--priorities 4,1 --deadlines 0.05,0.1]
 //!                    [--objective energy|edp|tpw:0.9 --power-scenario S]
@@ -76,6 +77,10 @@ const KNOBS: &[Knob] = &[
     // Replication fan-out of `scenario --compare`.
     Knob { flag: "reps", cap: "compare" },
     Knob { flag: "threads", cap: "compare" },
+    // Concurrent serving front end: router-level batching knobs only
+    // mean something once --frontend-threads turns the front end on.
+    Knob { flag: "batch", cap: "frontend" },
+    Knob { flag: "batch-deadline", cap: "frontend" },
 ];
 
 /// Read the four energy knobs (`--objective`, `--power-scenario`,
@@ -119,7 +124,8 @@ COMMANDS:
              writes a bit-exact snapshot for the CI determinism gate)
   solve      solve Eq. 28 for a μ matrix (grin | opt | slsqp | cab)
   scenario   run a non-stationary scenario (phase_shift | burst |
-             slow_drift | abrupt_flip | priority_mix | churn) under a
+             slow_drift | abrupt_flip | priority_mix | churn |
+             saturation) under a
              resolve mode (static | every_phase | adaptive | sharded),
              or --compare all modes side by side plus CUSUM-triggered,
              priority-weighted and energy-objective adaptive arms
@@ -141,8 +147,11 @@ COMMANDS:
   serve      run the serving coordinator demo (--adaptive for live
              re-solve against estimated rates, --trigger cusum for
              change-point-triggered re-solves; --devices L --shards N
-             for the sharded multi-leader plane; --priorities a,b for
-             priority-weighted GrIn serving, --deadlines x,y for
+             for the sharded multi-leader plane; --frontend-threads N
+             for the lock-free concurrent router front end with
+             --batch B/--batch-deadline MS coalescing same-class
+             requests behind one steering decision; --priorities a,b
+             for priority-weighted GrIn serving, --deadlines x,y for
              per-class latency-deadline miss rates; --objective
              energy|edp|tpw:<frac> re-aims the GrIn-backed solve, with
              --power-scenario/--power-coeff/--idle-power as in simulate)
@@ -990,6 +999,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => Vec::new(),
     };
     let (objective, power) = parse_power_knobs(&knobs)?;
+    // The concurrent front end: --frontend-threads is unconditional
+    // (like --shards), its batching knobs are gated on it.
+    let frontend_threads: usize = args.get_parse("frontend-threads", d.frontend_threads)?;
+    knobs.enable_if(frontend_threads > 0, "frontend");
+    let router_batch: usize = knobs.get_parse("batch", d.router_batch)?;
+    let batch_deadline = match knobs.get("batch-deadline") {
+        Some(text) => {
+            let ms: f64 = text
+                .parse()
+                .map_err(|_| Error::Parse(format!("bad batch-deadline '{text}'")))?;
+            std::time::Duration::try_from_secs_f64(ms / 1e3)
+                .map_err(|_| Error::Config(format!("batch-deadline {ms} ms out of range")))?
+        }
+        None => d.batch_deadline,
+    };
     // --deadlines is pure latency accounting and applies to every mode.
     let deadlines = match args.get("deadlines") {
         Some(text) => parse_deadlines(text)?,
@@ -1015,6 +1039,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadlines,
         objective,
         power,
+        frontend_threads,
+        router_batch,
+        batch_deadline,
         ..d
     };
     args.finish()?;
@@ -1028,6 +1055,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.devices,
             if cfg.shards > 1 {
                 format!(", {} shards", cfg.shards)
+            } else if cfg.frontend_threads > 0 {
+                format!(", {} frontend threads", cfg.frontend_threads)
             } else {
                 String::new()
             }
@@ -1050,6 +1079,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         t.row(vec!["batched re-solves".into(), r.resolves.to_string()]);
     } else if cfg.adaptive {
         t.row(vec!["adaptive re-solves".into(), r.resolves.to_string()]);
+    }
+    if cfg.frontend_threads > 0 {
+        t.row(vec!["route decisions".into(), r.route_decisions.to_string()]);
+        if cfg.router_batch > 1 {
+            t.row(vec![
+                "decision amortization".into(),
+                format!("{:.2}", r.served as f64 / r.route_decisions.max(1) as f64),
+            ]);
+        }
     }
     if !cfg.priorities.is_empty() {
         t.row(vec!["priorities [sort, nn]".into(), format!("{:?}", cfg.priorities)]);
@@ -1106,7 +1144,15 @@ mod tests {
 
     #[test]
     fn scenario_command_runs_all_kinds_quickly() {
-        for kind in ["phase_shift", "burst", "slow_drift", "abrupt_flip", "priority_mix", "churn"] {
+        for kind in [
+            "phase_shift",
+            "burst",
+            "slow_drift",
+            "abrupt_flip",
+            "priority_mix",
+            "churn",
+            "saturation",
+        ] {
             let line = format!(
                 "scenario --kind {kind} --policy grin --phases 3 \
                  --completions 150 --warmup 20 --resolve every_phase"

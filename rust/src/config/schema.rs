@@ -570,6 +570,33 @@ mod tests {
     }
 
     #[test]
+    fn scenario_spec_parses_saturation() {
+        // The overload ramp rides the generic scenario grammar: the
+        // burst_factor key doubles as the per-phase load multiplier.
+        let s = ScenarioSpec::from_json(
+            r#"{
+            "mu": [[20, 15], [3, 8]],
+            "policy": "grin",
+            "scenario": {"kind": "saturation", "n": 8, "phases": 3,
+                         "burst_factor": 4.0}
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(s.kind, ScenarioKind::Saturation);
+        let phases = scenario_phases(s.kind, &s.params).unwrap();
+        let totals: Vec<u32> =
+            phases.iter().map(|p| p.populations.iter().sum()).collect();
+        assert_eq!(totals, vec![8, 32, 128]);
+        // A non-ramping factor fails the phase builder, which from_json
+        // runs eagerly — the document is rejected at parse time.
+        assert!(ScenarioSpec::from_json(
+            r#"{"mu": [[20, 15], [3, 8]], "policy": "grin",
+                "scenario": {"kind": "saturation", "burst_factor": 1.0}}"#,
+        )
+        .is_err());
+    }
+
+    #[test]
     fn scenario_spec_rejects_bad_documents() {
         // Unknown kind.
         assert!(ScenarioSpec::from_json(

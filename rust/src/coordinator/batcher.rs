@@ -1,12 +1,90 @@
-//! Dynamic batching of NN requests into PJRT-batch-sized launches.
+//! Dynamic batching of requests into fixed-size launches.
 //!
-//! The `nn_small` artifact executes a fixed 8-row batch per call; single
-//! NN requests (one row each) are coalesced until either the batch fills
-//! or the oldest request exceeds the batching deadline — the classic
-//! serving throughput/latency knob (vLLM-style).  Unfilled slots are
-//! zero-padded (the kernel is shape-static).
+//! Two serving layers share this batcher:
+//!
+//! * the NN kernel path — the `nn_small` artifact executes a fixed
+//!   8-row batch per call, so single NN requests (one row each) are
+//!   coalesced until either the batch fills or the oldest request
+//!   exceeds the batching deadline — the classic serving
+//!   throughput/latency knob (vLLM-style).  Unfilled slots are
+//!   zero-padded (the kernel is shape-static).
+//! * the router front end ([`crate::coordinator::ConcurrentRouter`]) —
+//!   class-keyed request coalescing so one steering decision covers a
+//!   whole batch (`serve --batch N --batch-deadline`).
+//!
+//! Deadlines are measured on an injected [`Clock`], not wall-clock
+//! `Instant`: serving runs on the [`MonotonicClock`], while tests, the
+//! simulator and the routing bench drive a [`VirtualClock`] so flush
+//! order (`Full` vs `Deadline` vs `Drain`) is deterministic and
+//! replayable under load.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Time source for batching deadlines, in seconds from an arbitrary
+/// origin.  Monotone non-decreasing; only differences are meaningful.
+pub trait Clock {
+    /// Current time in seconds.
+    fn now_s(&self) -> f64;
+}
+
+/// Real time: seconds since the clock was created (monotonic, never
+/// wall-clock — immune to NTP steps).
+#[derive(Debug, Clone)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl MonotonicClock {
+    /// A clock whose origin is now.
+    pub fn new() -> Self {
+        Self { origin: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now_s(&self) -> f64 {
+        self.origin.elapsed().as_secs_f64()
+    }
+}
+
+/// Simulated time: a shared, manually advanced clock.  Clones share
+/// the same instant (an `Arc` over the f64 bits), so every batcher in
+/// a test or sim run observes one consistent virtual now.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now_bits: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    /// A virtual clock at t = 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jump to an absolute virtual time (seconds).
+    pub fn set(&self, now_s: f64) {
+        self.now_bits.store(now_s.to_bits(), Ordering::Release);
+    }
+
+    /// Advance by `dt` seconds.
+    pub fn advance(&self, dt: f64) {
+        self.set(self.now_s() + dt);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        f64::from_bits(self.now_bits.load(Ordering::Acquire))
+    }
+}
 
 /// One pending request inside the batcher.
 #[derive(Debug, Clone)]
@@ -15,7 +93,7 @@ pub struct Pending {
     pub id: u64,
     /// One row of activations (length = row width).
     pub row: Vec<f32>,
-    /// Arrival time.
+    /// Arrival time (wall latency accounting in the serving leader).
     pub arrived: Instant,
 }
 
@@ -41,21 +119,42 @@ pub enum FlushReason {
     Drain,
 }
 
-/// Size/deadline-driven batcher.
+/// Size/deadline-driven batcher over an injected [`Clock`].  The
+/// default clock is the monotonic one, so `DynamicBatcher::new` keeps
+/// its serving semantics; [`with_clock`](DynamicBatcher::with_clock)
+/// swaps in a [`VirtualClock`] for deterministic tests and sims.
 #[derive(Debug)]
-pub struct DynamicBatcher {
+pub struct DynamicBatcher<C: Clock = MonotonicClock> {
     capacity: usize,
     width: usize,
     deadline: Duration,
     pending: Vec<Pending>,
+    clock: C,
+    /// Clock stamp of the oldest pending request (the deadline anchor);
+    /// `None` when empty.  FIFO: only the head can hit the deadline.
+    oldest_s: Option<f64>,
 }
 
-impl DynamicBatcher {
+impl DynamicBatcher<MonotonicClock> {
     /// `capacity` rows of `width` f32 each; flush after `deadline` at the
-    /// latest.
+    /// latest, measured on a fresh monotonic clock.
     pub fn new(capacity: usize, width: usize, deadline: Duration) -> Self {
+        Self::with_clock(capacity, width, deadline, MonotonicClock::new())
+    }
+}
+
+impl<C: Clock> DynamicBatcher<C> {
+    /// [`new`](DynamicBatcher::new) on an explicit time source.
+    pub fn with_clock(capacity: usize, width: usize, deadline: Duration, clock: C) -> Self {
         assert!(capacity >= 1 && width >= 1);
-        Self { capacity, width, deadline, pending: Vec::with_capacity(capacity) }
+        Self {
+            capacity,
+            width,
+            deadline,
+            pending: Vec::with_capacity(capacity),
+            clock,
+            oldest_s: None,
+        }
     }
 
     /// Number of pending requests.
@@ -71,6 +170,9 @@ impl DynamicBatcher {
     /// Offer a request; returns a batch if this push filled it.
     pub fn push(&mut self, p: Pending) -> Option<Batch> {
         debug_assert_eq!(p.row.len(), self.width);
+        if self.pending.is_empty() {
+            self.oldest_s = Some(self.clock.now_s());
+        }
         self.pending.push(p);
         if self.pending.len() >= self.capacity {
             Some(self.flush(FlushReason::Full))
@@ -80,9 +182,9 @@ impl DynamicBatcher {
     }
 
     /// Flush if the oldest pending request is past the deadline.
-    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
-        match self.pending.first() {
-            Some(oldest) if now.duration_since(oldest.arrived) >= self.deadline => {
+    pub fn poll(&mut self) -> Option<Batch> {
+        match self.oldest_s {
+            Some(t0) if self.clock.now_s() - t0 >= self.deadline.as_secs_f64() => {
                 Some(self.flush(FlushReason::Deadline))
             }
             _ => None,
@@ -90,11 +192,10 @@ impl DynamicBatcher {
     }
 
     /// Time until the current oldest request hits the deadline.
-    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
-        self.pending.first().map(|p| {
-            self.deadline
-                .checked_sub(now.duration_since(p.arrived))
-                .unwrap_or(Duration::ZERO)
+    pub fn time_to_deadline(&self) -> Option<Duration> {
+        self.oldest_s.map(|t0| {
+            let left = self.deadline.as_secs_f64() - (self.clock.now_s() - t0);
+            Duration::try_from_secs_f64(left.max(0.0)).unwrap_or(Duration::ZERO)
         })
     }
 
@@ -108,6 +209,7 @@ impl DynamicBatcher {
     }
 
     fn flush(&mut self, reason: FlushReason) -> Batch {
+        self.oldest_s = None;
         let requests: Vec<Pending> = self.pending.drain(..).collect();
         let mut input = vec![0f32; self.capacity * self.width];
         for (i, r) in requests.iter().enumerate() {
@@ -135,7 +237,7 @@ mod tests {
         assert_eq!(batch.reason, FlushReason::Full);
         assert_eq!(batch.requests.len(), 4);
         assert!(b.is_empty());
-        // Row placement: request i occupies rows i.
+        // Row placement: request i occupies row i.
         assert_eq!(batch.input[0], 0.0);
         assert_eq!(batch.input[8], 1.0);
         assert_eq!(batch.input[3 * 8], 3.0);
@@ -145,7 +247,7 @@ mod tests {
     fn deadline_flushes_partial_with_padding() {
         let mut b = DynamicBatcher::new(4, 2, Duration::from_millis(0));
         b.push(pending(7, 2));
-        let batch = b.poll(Instant::now()).expect("deadline hit");
+        let batch = b.poll().expect("deadline hit");
         assert_eq!(batch.reason, FlushReason::Deadline);
         assert_eq!(batch.requests.len(), 1);
         assert_eq!(batch.input, vec![7.0, 7.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
@@ -155,8 +257,8 @@ mod tests {
     fn poll_respects_deadline() {
         let mut b = DynamicBatcher::new(4, 2, Duration::from_secs(60));
         b.push(pending(1, 2));
-        assert!(b.poll(Instant::now()).is_none());
-        assert!(b.time_to_deadline(Instant::now()).unwrap() > Duration::from_secs(59));
+        assert!(b.poll().is_none());
+        assert!(b.time_to_deadline().unwrap() > Duration::from_secs(59));
     }
 
     #[test]
@@ -167,5 +269,86 @@ mod tests {
         let batch = b.drain().expect("drain");
         assert_eq!(batch.reason, FlushReason::Drain);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn virtual_deadline_is_deterministic() {
+        // On the virtual clock the deadline boundary is exact — no
+        // wall-clock slop.  Dyadic instants (powers of two) make every
+        // f64 step representable, so the assertions are equalities.
+        let clock = VirtualClock::new();
+        let mut b =
+            DynamicBatcher::with_clock(4, 2, Duration::from_millis(500), clock.clone());
+        clock.set(1.0);
+        b.push(pending(1, 2));
+        assert!(b.poll().is_none());
+        clock.advance(0.25);
+        assert!(b.poll().is_none(), "250ms early must not flush");
+        assert_eq!(b.time_to_deadline().unwrap(), Duration::from_millis(250));
+        clock.advance(0.25);
+        let batch = b.poll().expect("exact deadline flushes");
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(b.time_to_deadline(), None);
+    }
+
+    #[test]
+    fn deadline_anchors_to_oldest_across_pushes() {
+        // Later pushes must not reset the deadline anchor: the oldest
+        // request's age decides, FIFO.
+        let clock = VirtualClock::new();
+        let mut b =
+            DynamicBatcher::with_clock(4, 2, Duration::from_millis(500), clock.clone());
+        b.push(pending(1, 2));
+        clock.advance(0.375);
+        b.push(pending(2, 2)); // young, but the head is 375ms old
+        clock.advance(0.125);
+        let batch = b.poll().expect("head aged out");
+        assert_eq!(batch.reason, FlushReason::Deadline);
+        assert_eq!(batch.requests.len(), 2);
+        // A flush re-anchors: the next push starts a fresh deadline.
+        b.push(pending(3, 2));
+        assert!(b.poll().is_none());
+        assert_eq!(b.time_to_deadline().unwrap(), Duration::from_millis(500));
+    }
+
+    #[test]
+    fn flush_reason_ordering_full_deadline_drain() {
+        // The canonical lifecycle order under load: a filling push wins
+        // over an elapsed deadline (push is checked at arrival, before
+        // any poll), the next partial batch ages out as Deadline, and
+        // shutdown drains the remainder — [Full, Deadline, Drain],
+        // deterministically, because time only moves when advanced.
+        let clock = VirtualClock::new();
+        let mut b =
+            DynamicBatcher::with_clock(2, 1, Duration::from_millis(1), clock.clone());
+        let mut reasons = Vec::new();
+        b.push(pending(1, 1));
+        clock.advance(1.0); // way past the deadline …
+        if let Some(batch) = b.push(pending(2, 1)) {
+            reasons.push(batch.reason); // … but the fill flushes first
+        }
+        b.push(pending(3, 1));
+        clock.advance(1.0);
+        if let Some(batch) = b.poll() {
+            reasons.push(batch.reason);
+        }
+        b.push(pending(4, 1));
+        if let Some(batch) = b.drain() {
+            reasons.push(batch.reason);
+        }
+        assert_eq!(
+            reasons,
+            vec![FlushReason::Full, FlushReason::Deadline, FlushReason::Drain]
+        );
+    }
+
+    #[test]
+    fn virtual_clock_is_shared_across_clones() {
+        let clock = VirtualClock::new();
+        let handle = clock.clone();
+        clock.set(42.0);
+        assert_eq!(handle.now_s(), 42.0);
+        handle.advance(8.0);
+        assert_eq!(clock.now_s(), 50.0);
     }
 }

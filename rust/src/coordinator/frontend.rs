@@ -1,0 +1,712 @@
+//! Lock-free serving front end: concurrent routing against an
+//! epoch-versioned target snapshot.
+//!
+//! The single-threaded [`Router`](crate::coordinator::Router) funnels
+//! every routing decision through one `&mut self` — fine for one
+//! leader thread, a wall for a million-user front end.  The
+//! [`ConcurrentRouter`] removes the wall:
+//!
+//! * **Snapshot reads are wait-free in the steady state.**  The
+//!   `(epoch, target, solved_mu, weights)` tuple — the same atomic
+//!   install unit as [`crate::coordinator::ShardLeader::install`] and
+//!   the same payload as [`TargetUpdate`] — lives in one immutable
+//!   [`TargetSnapshot`] behind an `Arc`.  Routing threads keep a
+//!   cached `Arc` and compare one atomic epoch load against it per
+//!   decision; only when an install actually happened do they take the
+//!   snapshot mutex for the pointer clone (the installer holds it only
+//!   for the pointer swap).  A torn read — new target with old
+//!   weights — is impossible by construction: both live in the same
+//!   immutable allocation.
+//! * **Occupancy is a grid of atomics.**  Deficit steering
+//!   ([`crate::policy::target::TargetSteering`] semantics, same
+//!   tie-breaks) runs against per-cell `AtomicI64` counters.  In
+//!   **exact** mode every decision validates its chosen cell with a
+//!   compare-and-swap; in **reconciled** mode
+//!   ([`RouteHandle`] with `reconcile_every > 1`) each thread batches
+//!   its own deltas locally and publishes them every N decisions —
+//!   relaxed per-decision cost, bounded staleness.
+//!
+//! Why exact mode replays the single-threaded router bit for bit
+//! (route-only): a thread's view of the occupancy row can only
+//! *understate* other cells (concurrent routes only increment), while
+//! the chosen cell's value is CAS-validated at the linearization
+//! point.  Understating a competitor overstates its deficit — so if
+//! the chosen cell wins against the inflated competition it also wins
+//! against the true row, and both [`pick_by_deficit`] tie-breaks
+//! (rate, then index) are interleaving-independent.  Failed CAS means
+//! the chosen cell itself moved; the decision retries on fresh state.
+//! Completions (decrements) break the monotonicity argument, which is
+//! why the equivalence gate in `tests/frontend_concurrency.rs` is
+//! route-only and mixed traffic is reconciled-mode territory.
+
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::model::affinity::AffinityMatrix;
+use crate::model::objective::{Objective, PowerProfile};
+use crate::model::state::StateMatrix;
+use crate::policy::target::{pick_by_deficit, pick_by_weighted_deficit, weighted_deficit};
+use crate::policy::Policy;
+
+use super::router::{prepare_policy, RouterConfig, TargetUpdate};
+
+/// One immutable epoch of routing truth: everything a decision needs,
+/// swapped as a unit.  Readers hold it through an `Arc`, so an install
+/// never mutates what a routing thread is looking at.
+#[derive(Debug)]
+pub struct TargetSnapshot {
+    /// Install version (0 = the boot solve).
+    pub epoch: u64,
+    /// Solved target state S_max the front end steers toward.
+    pub target: StateMatrix,
+    /// The μ the target was solved for — its rates break steering ties.
+    pub solved_mu: AffinityMatrix,
+    /// Per-cell steering weights of the solve (row-major k×l; empty =
+    /// unweighted).  Travels inside the snapshot so weights can never
+    /// be observed with a different epoch's target.
+    pub weights: Vec<f64>,
+}
+
+/// State shared by the router handle, every routing thread, and the
+/// install path.
+struct Shared {
+    k: usize,
+    l: usize,
+    /// Last installed epoch; readers poll this (one `Acquire` load per
+    /// decision) and refresh their cached snapshot only on change.
+    epoch: AtomicU64,
+    /// The current snapshot.  The mutex guards only the `Arc` swap /
+    /// clone — never a solve, never a decision.
+    snapshot: Mutex<Arc<TargetSnapshot>>,
+    /// Global occupancy grid, row-major k×l.  Signed: reconciled-mode
+    /// completions may transiently land before their route's delta is
+    /// published.
+    occupancy: Vec<AtomicI64>,
+    /// Per-device liveness (see [`ConcurrentRouter::mark_down`]).
+    alive: Vec<AtomicBool>,
+    /// Total requests routed across all handles.
+    routed: AtomicU64,
+    /// Total steering decisions (a router-level batch counts once).
+    decisions: AtomicU64,
+}
+
+impl Shared {
+    fn cell(&self, class: usize, device: usize) -> &AtomicI64 {
+        &self.occupancy[class * self.l + device]
+    }
+}
+
+/// The deficit-steering pick against a snapshot row — exactly
+/// [`crate::policy::target::TargetSteering::dispatch_among`]: largest
+/// (weighted) deficit, ties to the faster (weighted) rate, then the
+/// lower index; dead devices are sentinel-masked and an all-dead fleet
+/// is `None`.
+fn steer(snap: &TargetSnapshot, class: usize, occ: &[i64], alive: &[bool]) -> Option<usize> {
+    let l = snap.target.procs();
+    let deficit = |j: usize| snap.target.get(class, j) as i64 - occ[j];
+    if snap.weights.is_empty() {
+        pick_by_deficit((0..l).map(|j| {
+            if alive[j] {
+                (deficit(j), snap.solved_mu.rate(class, j))
+            } else {
+                (i64::MIN, f64::NEG_INFINITY)
+            }
+        }))
+    } else {
+        pick_by_weighted_deficit((0..l).map(|j| {
+            if alive[j] {
+                let w = snap.weights[class * l + j];
+                (weighted_deficit(w, deficit(j)), w * snap.solved_mu.rate(class, j))
+            } else {
+                (f64::NEG_INFINITY, f64::NEG_INFINITY)
+            }
+        }))
+    }
+    .filter(|&j| alive[j])
+}
+
+/// Snapshot weights, with the trivial (absent-or-uniform) case
+/// collapsed to "unweighted" — the same reduction GrIn's own steering
+/// applies ([`crate::policy::SolveRequest::weights_trivial`]), so the
+/// front end and the single-threaded router pick identically under a
+/// uniform weight vector.
+fn effective_weights(weights: &[f64]) -> Vec<f64> {
+    let trivial = weights.is_empty()
+        || weights.windows(2).all(|w| (w[0] - w[1]).abs() <= 1e-12);
+    if trivial {
+        Vec::new()
+    } else {
+        weights.to_vec()
+    }
+}
+
+/// Concurrent router: the owner side.  Lives on the leader thread;
+/// hands out [`RouteHandle`]s to routing threads, applies
+/// [`TargetUpdate`]s, and books completions.
+pub struct ConcurrentRouter {
+    shared: Arc<Shared>,
+    populations: Vec<u32>,
+    objective: Objective,
+    power: PowerProfile,
+}
+
+impl ConcurrentRouter {
+    /// Build the front end from one [`RouterConfig`] (the same value
+    /// [`Router::build`](crate::coordinator::Router::build) takes): the
+    /// policy solves its initial target, which becomes snapshot epoch 0.
+    ///
+    /// Stateless policies (load balancing, random — anything whose
+    /// [`Policy::prepare`] yields no target) are rejected: without a
+    /// solved target there is nothing to steer toward lock-free.
+    pub fn new(cfg: RouterConfig, policy: &mut dyn Policy) -> Result<Self> {
+        let prepared = prepare_policy(
+            policy,
+            &cfg.mu,
+            &cfg.expected_inflight,
+            &cfg.weights,
+            cfg.objective,
+            cfg.power,
+        )?;
+        let target = prepared.target.ok_or_else(|| {
+            Error::Config(format!(
+                "policy {} solves no target state; the concurrent front end \
+                 steers by target deficit and needs a target-solving policy",
+                policy.name()
+            ))
+        })?;
+        let (k, l) = (cfg.mu.types(), cfg.mu.procs());
+        if target.types() != k || target.procs() != l {
+            return Err(Error::Shape(format!(
+                "solved target is {}×{}, config μ is {k}×{l}",
+                target.types(),
+                target.procs(),
+            )));
+        }
+        let snapshot = TargetSnapshot {
+            epoch: 0,
+            target,
+            solved_mu: cfg.mu,
+            weights: effective_weights(&cfg.weights),
+        };
+        Ok(Self {
+            shared: Arc::new(Shared {
+                k,
+                l,
+                epoch: AtomicU64::new(0),
+                snapshot: Mutex::new(Arc::new(snapshot)),
+                occupancy: (0..k * l).map(|_| AtomicI64::new(0)).collect(),
+                alive: (0..l).map(|_| AtomicBool::new(true)).collect(),
+                routed: AtomicU64::new(0),
+                decisions: AtomicU64::new(0),
+            }),
+            populations: cfg.expected_inflight,
+            objective: cfg.objective,
+            power: cfg.power,
+        })
+    }
+
+    /// Install one [`TargetUpdate`] without blocking routing: the
+    /// policy re-solves against the update's μ under its weights (and
+    /// the router's objective), and the resulting
+    /// `(epoch, target, solved_mu, weights)` snapshot swaps in as a
+    /// unit.  Routing threads keep deciding on the old snapshot until
+    /// their next epoch check — they never wait on the solve.
+    ///
+    /// Epochs must strictly increase; a stale or replayed install is a
+    /// typed error, so readers can assert monotonicity.  Returns the
+    /// installed epoch.
+    pub fn install(&self, policy: &mut dyn Policy, update: &TargetUpdate) -> Result<u64> {
+        update.validate_shape(self.shared.k, self.shared.l)?;
+        let prepared = prepare_policy(
+            policy,
+            &update.mu,
+            &self.populations,
+            &update.weights,
+            self.objective,
+            self.power,
+        )?;
+        let target = prepared.target.ok_or_else(|| {
+            Error::Config(format!("policy {} solves no target state", policy.name()))
+        })?;
+        if target.types() != self.shared.k || target.procs() != self.shared.l {
+            return Err(Error::Shape(format!(
+                "solved target is {}×{}, front end runs {}×{}",
+                target.types(),
+                target.procs(),
+                self.shared.k,
+                self.shared.l,
+            )));
+        }
+        let snapshot = Arc::new(TargetSnapshot {
+            epoch: update.epoch,
+            target,
+            solved_mu: update.mu.clone(),
+            weights: effective_weights(&update.weights),
+        });
+        let mut slot = self.shared.snapshot.lock().expect("snapshot lock poisoned");
+        if update.epoch <= slot.epoch {
+            return Err(Error::Config(format!(
+                "target update epoch {} does not advance installed epoch {}",
+                update.epoch, slot.epoch
+            )));
+        }
+        *slot = snapshot;
+        // Publish while still holding the lock: any reader that
+        // observes the new epoch and locks is guaranteed this (or a
+        // newer) snapshot.
+        self.shared.epoch.store(update.epoch, Ordering::Release);
+        Ok(update.epoch)
+    }
+
+    /// A routing handle in exact mode: every decision CAS-validates its
+    /// cell, replaying the single-threaded router (see module docs).
+    pub fn handle(&self) -> RouteHandle {
+        self.handle_with_reconcile(1)
+    }
+
+    /// A routing handle that publishes its occupancy deltas every
+    /// `reconcile_every` decisions (1 = exact).  Decisions between
+    /// flushes steer on (last published global state + own local
+    /// deltas) — other threads' newest routes are invisible until the
+    /// next reconcile, trading strict equivalence for an uncontended
+    /// hot path.
+    pub fn handle_with_reconcile(&self, reconcile_every: u32) -> RouteHandle {
+        let shared = Arc::clone(&self.shared);
+        let snap = Arc::clone(&shared.snapshot.lock().expect("snapshot lock poisoned"));
+        let cells = shared.k * shared.l;
+        let mut handle = RouteHandle {
+            snap,
+            reconcile_every: reconcile_every.max(1),
+            base: vec![0; cells],
+            local: vec![0; cells],
+            pending: 0,
+            routed_pending: 0,
+            decisions_pending: 0,
+            occ_buf: vec![0; shared.l],
+            alive_buf: vec![true; shared.l],
+            shared,
+        };
+        handle.resync_base();
+        handle
+    }
+
+    /// Completion callback (leader thread): the request routed to
+    /// `(class, device)` finished.  Decrements the global cell; in
+    /// reconciled mode the decrement may transiently race ahead of the
+    /// route's unpublished delta, which is exactly why cells are
+    /// signed.
+    pub fn complete(&self, class: usize, device: usize) -> Result<()> {
+        self.check_cell(class, device)?;
+        self.shared.cell(class, device).fetch_sub(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Mark `device` down: no further route lands on it (same contract
+    /// as [`Router::mark_down`](crate::coordinator::Router::mark_down);
+    /// in-flight work keeps draining through
+    /// [`complete`](Self::complete)).  Takes effect on a routing
+    /// thread's very next decision — liveness is read per pick, not
+    /// cached in the snapshot.  Idempotent.
+    pub fn mark_down(&self, device: usize) -> Result<()> {
+        self.check_device(device)?;
+        self.shared.alive[device].store(false, Ordering::Release);
+        Ok(())
+    }
+
+    /// Revive `device`.  Idempotent.
+    pub fn mark_up(&self, device: usize) -> Result<()> {
+        self.check_device(device)?;
+        self.shared.alive[device].store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Is `device` currently routable?
+    pub fn is_alive(&self, device: usize) -> Result<bool> {
+        self.check_device(device)?;
+        Ok(self.shared.alive[device].load(Ordering::Acquire))
+    }
+
+    /// Last installed epoch.
+    pub fn epoch(&self) -> u64 {
+        self.shared.epoch.load(Ordering::Acquire)
+    }
+
+    /// Total requests routed across every handle (published ones in
+    /// reconciled mode).
+    pub fn routed(&self) -> u64 {
+        self.shared.routed.load(Ordering::Acquire)
+    }
+
+    /// Steering decisions made across every handle (published ones in
+    /// reconciled mode).  A router-level batch
+    /// ([`RouteHandle::route_batch`]) counts once here while all of its
+    /// requests count in [`routed`](Self::routed) — the ratio is the
+    /// front end's decision amortization.
+    pub fn decisions(&self) -> u64 {
+        self.shared.decisions.load(Ordering::Acquire)
+    }
+
+    /// The current snapshot (leader-side introspection).
+    pub fn snapshot(&self) -> Arc<TargetSnapshot> {
+        Arc::clone(&self.shared.snapshot.lock().expect("snapshot lock poisoned"))
+    }
+
+    /// Published global occupancy of `(class, device)`.  Exact once
+    /// every handle has flushed; may lag unpublished deltas otherwise.
+    pub fn occupancy(&self, class: usize, device: usize) -> Result<i64> {
+        self.check_cell(class, device)?;
+        Ok(self.shared.cell(class, device).load(Ordering::Acquire))
+    }
+
+    /// Published in-flight total (Σ occupancy).
+    pub fn inflight(&self) -> i64 {
+        self.shared.occupancy.iter().map(|c| c.load(Ordering::Acquire)).sum()
+    }
+
+    fn check_device(&self, device: usize) -> Result<()> {
+        if device >= self.shared.l {
+            return Err(Error::Config(format!(
+                "unknown device {device} in a {}-device fleet",
+                self.shared.l
+            )));
+        }
+        Ok(())
+    }
+
+    fn check_cell(&self, class: usize, device: usize) -> Result<()> {
+        self.check_device(device)?;
+        if class >= self.shared.k {
+            return Err(Error::Config(format!(
+                "unknown class {class} among {} classes",
+                self.shared.k
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A per-thread routing handle.  `Send` (move one into each frontend
+/// thread); decisions need `&mut self` only for the handle's own
+/// scratch and local deltas — nothing a decision touches is shared
+/// mutable state under a lock.
+pub struct RouteHandle {
+    shared: Arc<Shared>,
+    /// Cached snapshot; refreshed only when the shared epoch moves.
+    snap: Arc<TargetSnapshot>,
+    reconcile_every: u32,
+    /// Global occupancy as of the last reconcile (reconciled mode).
+    base: Vec<i64>,
+    /// Own unpublished deltas since the last reconcile.
+    local: Vec<i64>,
+    /// Decisions since the last reconcile.
+    pending: u32,
+    /// Requests / decisions not yet published to the shared stats
+    /// counters (reconciled mode only; exact mode publishes inline).
+    routed_pending: u64,
+    decisions_pending: u64,
+    /// Scratch: the occupancy row a decision steers on.
+    occ_buf: Vec<i64>,
+    /// Scratch: liveness observed for this decision.
+    alive_buf: Vec<bool>,
+}
+
+impl RouteHandle {
+    /// Route one request of `class`; returns the chosen device, or
+    /// [`Error::NoCapacity`] when every device is down.
+    pub fn route(&mut self, class: usize) -> Result<usize> {
+        self.route_batch(class, 1)
+    }
+
+    /// Route a router-level batch: ONE steering decision covers `count`
+    /// coalesced same-class requests, and the chosen cell's occupancy
+    /// advances by `count` in the same atomic step — so per-request
+    /// completions balance the books exactly.  This is the amortization
+    /// `serve --batch N` buys; `count = 1` is the plain route.
+    pub fn route_batch(&mut self, class: usize, count: u32) -> Result<usize> {
+        if count == 0 {
+            return Err(Error::Config("a routed batch needs ≥ 1 request".into()));
+        }
+        if class >= self.shared.k {
+            return Err(Error::Config(format!(
+                "unknown class {class} among {} classes",
+                self.shared.k
+            )));
+        }
+        self.refresh_snapshot();
+        let l = self.shared.l;
+        let row = class * l;
+        for j in 0..l {
+            self.alive_buf[j] = self.shared.alive[j].load(Ordering::Acquire);
+        }
+        if self.reconcile_every == 1 {
+            // Exact mode: validate the chosen cell with a CAS; retry
+            // the whole decision when it moved underneath us.
+            loop {
+                for j in 0..l {
+                    self.occ_buf[j] = self.shared.occupancy[row + j].load(Ordering::Acquire);
+                }
+                let j = steer(&self.snap, class, &self.occ_buf, &self.alive_buf)
+                    .ok_or_else(no_capacity)?;
+                let seen = self.occ_buf[j];
+                if self.shared.occupancy[row + j]
+                    .compare_exchange(
+                        seen,
+                        seen + count as i64,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    self.shared.routed.fetch_add(count as u64, Ordering::Relaxed);
+                    self.shared.decisions.fetch_add(1, Ordering::Relaxed);
+                    return Ok(j);
+                }
+            }
+        } else {
+            // Reconciled mode: steer on base + own deltas, publish
+            // every `reconcile_every` decisions.
+            for j in 0..l {
+                self.occ_buf[j] = self.base[row + j] + self.local[row + j];
+            }
+            let j = steer(&self.snap, class, &self.occ_buf, &self.alive_buf)
+                .ok_or_else(no_capacity)?;
+            self.local[row + j] += count as i64;
+            self.pending += 1;
+            // Stats ride the reconcile cadence too: even a relaxed
+            // fetch_add per decision is a contended cache line, which is
+            // exactly what this mode exists to avoid.
+            self.routed_pending += count as u64;
+            self.decisions_pending += 1;
+            if self.pending >= self.reconcile_every {
+                self.flush();
+            }
+            Ok(j)
+        }
+    }
+
+    /// Completion callback from this thread: decrement goes straight to
+    /// the global grid (completions are off the decision hot path).
+    pub fn complete(&self, class: usize, device: usize) -> Result<()> {
+        if class >= self.shared.k || device >= self.shared.l {
+            return Err(Error::Config(format!(
+                "unknown cell ({class}, {device}) in a {}×{} front end",
+                self.shared.k, self.shared.l
+            )));
+        }
+        self.shared.cell(class, device).fetch_sub(1, Ordering::AcqRel);
+        Ok(())
+    }
+
+    /// Publish local deltas into the global grid and re-base on it.
+    /// After every handle flushes, the global grid is exact:
+    /// Σ cell = routes − completes.
+    pub fn flush(&mut self) {
+        for (c, d) in self.local.iter_mut().enumerate() {
+            if *d != 0 {
+                self.shared.occupancy[c].fetch_add(*d, Ordering::AcqRel);
+                *d = 0;
+            }
+        }
+        if self.routed_pending != 0 {
+            self.shared.routed.fetch_add(self.routed_pending, Ordering::Relaxed);
+            self.routed_pending = 0;
+        }
+        if self.decisions_pending != 0 {
+            self.shared.decisions.fetch_add(self.decisions_pending, Ordering::Relaxed);
+            self.decisions_pending = 0;
+        }
+        self.pending = 0;
+        self.resync_base();
+    }
+
+    /// Epoch of the snapshot this handle last decided on — the value
+    /// the monotonicity property test watches.
+    pub fn epoch(&self) -> u64 {
+        self.snap.epoch
+    }
+
+    /// The snapshot this handle currently steers by.
+    pub fn snapshot(&self) -> &TargetSnapshot {
+        &self.snap
+    }
+
+    fn refresh_snapshot(&mut self) {
+        if self.shared.epoch.load(Ordering::Acquire) != self.snap.epoch {
+            self.snap =
+                Arc::clone(&self.shared.snapshot.lock().expect("snapshot lock poisoned"));
+        }
+    }
+
+    fn resync_base(&mut self) {
+        for (c, b) in self.base.iter_mut().enumerate() {
+            *b = self.shared.occupancy[c].load(Ordering::Acquire);
+        }
+    }
+}
+
+fn no_capacity() -> Error {
+    Error::NoCapacity("every serving device is down".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Router;
+    use crate::policy::PolicyKind;
+    use crate::sim::workload;
+
+    fn config() -> RouterConfig {
+        let mu = workload::table3::p2_biased();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        RouterConfig::new(mu, omega, vec![10, 10]).with_seed(7)
+    }
+
+    #[test]
+    fn rejects_stateless_policies() {
+        let mut policy = PolicyKind::LoadBalance.build();
+        match ConcurrentRouter::new(config(), policy.as_mut()) {
+            Err(Error::Config(msg)) => assert!(msg.contains("no target"), "{msg}"),
+            other => panic!("expected Config rejection, got {:?}", other.map(|_| ())),
+        }
+    }
+
+    #[test]
+    fn exact_mode_replays_single_threaded_router() {
+        // One handle, one thread: the concurrent path must place a
+        // seeded request sequence exactly like the Router steering the
+        // same target (both are TargetSteering semantics).
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let mut handle = front.handle();
+        let mut router = Router::build(config(), PolicyKind::Cab.build()).unwrap();
+        let mut rng = crate::sim::rng::Rng::new(11);
+        for _ in 0..40 {
+            let class = rng.index(2);
+            assert_eq!(handle.route(class).unwrap(), router.route(class).unwrap());
+        }
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(
+                    front.occupancy(i, j).unwrap(),
+                    router.state().get(i, j) as i64
+                );
+            }
+        }
+        assert_eq!(front.routed(), router.routed());
+        assert_eq!(front.inflight(), router.inflight() as i64);
+    }
+
+    #[test]
+    fn install_swaps_target_and_enforces_monotone_epochs() {
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let mut handle = front.handle();
+        // Boot target (P2-biased AF): class-0 goes to the CPU.
+        assert_eq!(handle.route(0).unwrap(), 0);
+        assert_eq!(handle.epoch(), 0);
+        let mu2 = workload::table3::general_symmetric();
+        let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
+        let update = TargetUpdate::new(mu2.clone(), omega2.clone()).with_epoch(1);
+        assert_eq!(front.install(policy.as_mut(), &update).unwrap(), 1);
+        assert_eq!(front.epoch(), 1);
+        // The handle picks the new epoch up on its next decision; the
+        // BF target sends class-1 deficit to the GPU.
+        assert_eq!(handle.route(1).unwrap(), 1);
+        assert_eq!(handle.epoch(), 1);
+        // Replayed and stale epochs are rejected.
+        let replay = TargetUpdate::new(mu2.clone(), omega2.clone()).with_epoch(1);
+        assert!(front.install(policy.as_mut(), &replay).is_err());
+        let stale = TargetUpdate::new(mu2, omega2).with_epoch(0);
+        assert!(front.install(policy.as_mut(), &stale).is_err());
+        // Shape mismatches are rejected before any solve.
+        let bad = crate::model::affinity::AffinityMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![3.0, 2.0, 1.0],
+        ])
+        .unwrap();
+        let upd = TargetUpdate::new(bad, vec![1.0; 6]).with_epoch(2);
+        assert!(front.install(policy.as_mut(), &upd).is_err());
+    }
+
+    #[test]
+    fn failed_install_keeps_old_snapshot() {
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let before = front.snapshot();
+        let mu2 = workload::table3::general_symmetric();
+        let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
+        let stale = TargetUpdate::new(mu2, omega2).with_epoch(0);
+        assert!(front.install(policy.as_mut(), &stale).is_err());
+        let after = front.snapshot();
+        assert!(Arc::ptr_eq(&before, &after), "failed install must not swap");
+    }
+
+    #[test]
+    fn down_devices_are_masked_and_all_down_is_no_capacity() {
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let mut handle = front.handle();
+        front.mark_down(0).unwrap();
+        assert!(!front.is_alive(0).unwrap());
+        for _ in 0..5 {
+            assert_eq!(handle.route(0).unwrap(), 1, "routed to a dead device");
+        }
+        front.mark_down(1).unwrap();
+        match handle.route(0) {
+            Err(Error::NoCapacity(_)) => {}
+            other => panic!("expected NoCapacity, got {other:?}"),
+        }
+        // Drain + revive restores steering.
+        front.complete(0, 1).unwrap();
+        front.mark_up(0).unwrap();
+        assert_eq!(handle.route(0).unwrap(), 0);
+        // Out-of-range devices/classes are typed errors.
+        assert!(front.mark_down(9).is_err());
+        assert!(front.occupancy(5, 0).is_err());
+        assert!(handle.route(7).is_err());
+        assert!(handle.complete(0, 9).is_err());
+    }
+
+    #[test]
+    fn batched_route_advances_occupancy_by_count() {
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let mut handle = front.handle();
+        let j = handle.route_batch(0, 5).unwrap();
+        assert_eq!(front.occupancy(0, j).unwrap(), 5);
+        assert_eq!(front.routed(), 5);
+        assert_eq!(front.decisions(), 1, "one decision covered the batch");
+        for _ in 0..5 {
+            front.complete(0, j).unwrap();
+        }
+        assert_eq!(front.inflight(), 0);
+        assert!(handle.route_batch(0, 0).is_err(), "empty batches are rejected");
+    }
+
+    #[test]
+    fn reconciled_mode_conserves_counts_after_flush() {
+        let mut policy = PolicyKind::Cab.build();
+        let front = ConcurrentRouter::new(config(), policy.as_mut()).unwrap();
+        let mut handle = front.handle_with_reconcile(8);
+        let mut routes = Vec::new();
+        for i in 0..11 {
+            routes.push((i % 2, handle.route(i % 2).unwrap()));
+        }
+        // 11 decisions at reconcile_every = 8: one auto-flush happened,
+        // 3 deltas are still local.
+        let published: i64 = (0..2)
+            .flat_map(|i| (0..2).map(move |j| (i, j)))
+            .map(|(i, j)| front.occupancy(i, j).unwrap())
+            .sum();
+        assert_eq!(published, 8);
+        handle.flush();
+        // Exact after flush: Σ occupancy == routes − completes.
+        assert_eq!(front.inflight(), 11);
+        for &(class, device) in routes.iter().take(4) {
+            front.complete(class, device).unwrap();
+        }
+        assert_eq!(front.inflight(), 7);
+        assert_eq!(front.routed(), 11);
+    }
+}

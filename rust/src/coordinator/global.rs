@@ -24,6 +24,13 @@
 //!    split into per-shard slices and installed under a single
 //!    incremented epoch, so no arrival anywhere can observe a mix of
 //!    old and new targets.
+//!
+//! The "no global lock in a real deployment" claim in step 1 is made
+//! literal by the lock-free front end
+//! ([`super::frontend::ConcurrentRouter`], `serve --frontend-threads
+//! N`): it publishes the same epoch-versioned install unit as an
+//! immutable snapshot behind one atomic epoch, so routing threads
+//! never wait on a re-solve at all.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;

@@ -8,6 +8,8 @@
 //! all compute through per-device PJRT engines on worker threads.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
@@ -19,8 +21,9 @@ use crate::sim::dynamic::{DriftConfig, Trigger};
 use crate::sim::rng::Rng;
 
 use super::batcher::{Batch, DynamicBatcher, FlushReason, Pending};
+use super::frontend::{ConcurrentRouter, RouteHandle};
 use super::global::ShardedControl;
-use super::router::Router;
+use super::router::{Router, RouterConfig, TargetUpdate};
 use super::stats::{LatencyHistogram, RateEstimator};
 
 /// NN row width of the `nn_small` artifact.
@@ -96,6 +99,18 @@ pub struct ServeConfig {
     /// Power model: scores non-throughput solves and meters the modeled
     /// per-request energy in [`ServeReport`].
     pub power: PowerProfile,
+    /// Concurrent front-end routing threads (0 = the single-threaded
+    /// leader routes inline).  ≥ 1 serves through the lock-free
+    /// [`ConcurrentRouter`]: routing threads steer against
+    /// epoch-versioned target snapshots over atomic occupancy, so
+    /// adaptive target installs never block routing.  Needs a
+    /// target-solving policy (CAB/GrIn/Opt) and excludes sharding.
+    pub frontend_threads: usize,
+    /// Router-level batch size (front-end mode): coalesce up to this
+    /// many same-class requests behind ONE steering decision, flushed
+    /// by [`ServeConfig::batch_deadline`].  0 or 1 routes every request
+    /// individually.
+    pub router_batch: usize,
 }
 
 impl Default for ServeConfig {
@@ -122,6 +137,8 @@ impl Default for ServeConfig {
             deadlines: Vec::new(),
             objective: Objective::Throughput,
             power: PowerProfile::default(),
+            frontend_threads: 0,
+            router_batch: 0,
         }
     }
 }
@@ -160,6 +177,11 @@ pub struct ServeReport {
     pub mean_energy: f64,
     /// Modeled energy–delay product: mean energy × mean request latency.
     pub edp: f64,
+    /// Steering decisions made.  One per request on the single-leader
+    /// path; on the concurrent front end a router-level batch spends
+    /// one decision for all of its requests, so `served /
+    /// route_decisions` is the decision amortization batching bought.
+    pub route_decisions: u64,
 }
 
 impl ServeReport {
@@ -230,6 +252,20 @@ impl Coordinator {
             // leader estimator/re-solve path is not the one running.
             return Err(Error::Config(
                 "sharded mode implies per-shard adaptive estimation; drop `adaptive`".into(),
+            ));
+        }
+        if cfg.frontend_threads > 0 && cfg.shards > 1 {
+            return Err(Error::Config(
+                "the concurrent front end drives a single routing plane; \
+                 drop either frontend_threads or shards"
+                    .into(),
+            ));
+        }
+        if cfg.router_batch > 1 && cfg.frontend_threads == 0 {
+            return Err(Error::Config(
+                "router-level batching rides the concurrent front end; \
+                 set frontend_threads ≥ 1"
+                    .into(),
             ));
         }
         if cfg.shards > 1 && cfg.policy != PolicyKind::GrIn {
@@ -316,6 +352,9 @@ impl Coordinator {
         let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
             .clamp(1, cfg.inflight - 1);
         let populations = vec![n_sort, cfg.inflight - n_sort];
+        if cfg.frontend_threads > 0 {
+            return Self::run_frontend(cfg, mu, omega, populations, estimator);
+        }
         let mut steering = if cfg.shards > 1 {
             // check_every is the single-leader cadence knob; the sharded
             // plane syncs on `sync_every` completions instead.
@@ -349,15 +388,11 @@ impl Coordinator {
             // Empty or all-equal priorities: the plain router, solving
             // for the configured objective (throughput reproduces the
             // pre-objective router exactly).
-            Steering::Single(Router::with_objective(
-                mu,
-                omega,
-                populations,
+            Steering::Single(Router::build(
+                RouterConfig::new(mu, omega, populations)
+                    .with_seed(cfg.seed)
+                    .with_objective(cfg.objective, cfg.power),
                 cfg.policy.build(),
-                cfg.seed,
-                Vec::new(),
-                cfg.objective,
-                cfg.power,
             )?)
         } else {
             // The boot solve runs under the estimator's (cold, uniform)
@@ -368,75 +403,16 @@ impl Coordinator {
                 &estimator.confidences(),
                 mu.procs(),
             )?;
-            Steering::Single(Router::with_weights(
-                mu,
-                omega,
-                populations,
+            Steering::Single(Router::build(
+                RouterConfig::new(mu, omega, populations)
+                    .with_seed(cfg.seed)
+                    .with_weights(weights),
                 cfg.policy.build(),
-                cfg.seed,
-                weights,
             )?)
         };
 
         // Device workers.
-        let (done_tx, done_rx): (Sender<Done>, Receiver<Done>) = channel();
-        let mut work_txs: Vec<Sender<Work>> = Vec::new();
-        let mut handles = Vec::new();
-        for d in 0..cfg.devices {
-            let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
-            work_txs.push(tx);
-            let done = done_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("serve-dev{d}"))
-                    .spawn(move || -> Result<()> {
-                        let engine = Engine::open_default()?;
-                        let mut rng = Rng::new(0xD0 + d as u64);
-                        let sort_in: Vec<f32> = (0..SORT_ELEMS)
-                            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
-                            .collect();
-                        let mut w = vec![0f32; NN_WIDTH * NN_WIDTH];
-                        for i in 0..NN_WIDTH {
-                            w[i * NN_WIDTH + i] = 0.5;
-                        }
-                        let b = vec![0.1f32; NN_WIDTH];
-                        while let Ok(work) = rx.recv() {
-                            match work {
-                                Work::Sort { id, class, arrived } => {
-                                    let t0 = Instant::now();
-                                    engine.sort_task("sort_small", &sort_in)?;
-                                    let service_s = t0.elapsed().as_secs_f64();
-                                    let _ = done.send(Done {
-                                        id,
-                                        class,
-                                        device: d,
-                                        arrived,
-                                        service_s,
-                                    });
-                                }
-                                Work::Nn(batch) => {
-                                    let t0 = Instant::now();
-                                    engine.nn_task("nn_small", &batch.input, &w, &b)?;
-                                    let service_s = t0.elapsed().as_secs_f64()
-                                        / batch.requests.len().max(1) as f64;
-                                    for r in batch.requests {
-                                        let _ = done.send(Done {
-                                            id: r.id,
-                                            class: 1,
-                                            device: d,
-                                            arrived: r.arrived,
-                                            service_s,
-                                        });
-                                    }
-                                }
-                            }
-                        }
-                        Ok(())
-                    })
-                    .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?,
-            );
-        }
-        drop(done_tx);
+        let (done_rx, work_txs, handles) = Self::spawn_workers(cfg.devices)?;
 
         let mut batchers: Vec<DynamicBatcher> = (0..cfg.devices)
             .map(|_| DynamicBatcher::new(NN_BATCH, NN_WIDTH, cfg.batch_deadline))
@@ -512,15 +488,14 @@ impl Coordinator {
 
         while served < cfg.total {
             // Poll deadline flushes.
-            let now = Instant::now();
             for j in 0..cfg.devices {
-                if let Some(batch) = batchers[j].poll(now) {
+                if let Some(batch) = batchers[j].poll() {
                     submit_batch(j, batch, &mut batches, &mut batch_fill_sum, &mut flushes)?;
                 }
             }
             let wait = batchers
                 .iter()
-                .filter_map(|b| b.time_to_deadline(now))
+                .filter_map(|b| b.time_to_deadline())
                 .min()
                 .unwrap_or(Duration::from_millis(50));
             match done_rx.recv_timeout(wait.max(Duration::from_micros(100))) {
@@ -600,18 +575,23 @@ impl Coordinator {
                                 let swapped = if crate::policy::grin::trivial_priorities(
                                     &cfg.priorities,
                                 ) {
-                                    router.retarget(mu_hat, omega_hat).is_ok()
+                                    let update = TargetUpdate::new(mu_hat, omega_hat)
+                                        .with_epoch(router.epoch() + 1);
+                                    router.apply(&update).is_ok()
                                 } else {
                                     // Weights refresh from the live
                                     // confidence grid and swap with the
-                                    // target in one call.
+                                    // target under one epoch.
                                     crate::policy::grin::priority_weights(
                                         &cfg.priorities,
                                         &estimator.confidences(),
                                         mu_hat.procs(),
                                     )
                                     .and_then(|w| {
-                                        router.retarget_weighted(mu_hat, omega_hat, w)
+                                        let update = TargetUpdate::new(mu_hat, omega_hat)
+                                            .with_weights(w)
+                                            .with_epoch(router.epoch() + 1);
+                                        router.apply(&update)
                                     })
                                     .is_ok()
                                 };
@@ -675,7 +655,470 @@ impl Coordinator {
             } else {
                 0.0
             },
+            // The single leader spends one steering decision per request.
+            route_decisions: served,
         })
+    }
+
+    /// Spawn one PJRT worker thread per device; returns the completion
+    /// stream, the per-device work queues, and the join handles.
+    fn spawn_workers(
+        devices: usize,
+    ) -> Result<(Receiver<Done>, Vec<Sender<Work>>, Vec<JoinHandle<Result<()>>>)> {
+        let (done_tx, done_rx): (Sender<Done>, Receiver<Done>) = channel();
+        let mut work_txs: Vec<Sender<Work>> = Vec::new();
+        let mut handles = Vec::new();
+        for d in 0..devices {
+            let (tx, rx): (Sender<Work>, Receiver<Work>) = channel();
+            work_txs.push(tx);
+            let done = done_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-dev{d}"))
+                    .spawn(move || -> Result<()> {
+                        let engine = Engine::open_default()?;
+                        let mut rng = Rng::new(0xD0 + d as u64);
+                        let sort_in: Vec<f32> = (0..SORT_ELEMS)
+                            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+                            .collect();
+                        let mut w = vec![0f32; NN_WIDTH * NN_WIDTH];
+                        for i in 0..NN_WIDTH {
+                            w[i * NN_WIDTH + i] = 0.5;
+                        }
+                        let b = vec![0.1f32; NN_WIDTH];
+                        while let Ok(work) = rx.recv() {
+                            match work {
+                                Work::Sort { id, class, arrived } => {
+                                    let t0 = Instant::now();
+                                    engine.sort_task("sort_small", &sort_in)?;
+                                    let service_s = t0.elapsed().as_secs_f64();
+                                    let _ = done.send(Done {
+                                        id,
+                                        class,
+                                        device: d,
+                                        arrived,
+                                        service_s,
+                                    });
+                                }
+                                Work::Nn(batch) => {
+                                    let t0 = Instant::now();
+                                    engine.nn_task("nn_small", &batch.input, &w, &b)?;
+                                    let service_s = t0.elapsed().as_secs_f64()
+                                        / batch.requests.len().max(1) as f64;
+                                    for r in batch.requests {
+                                        let _ = done.send(Done {
+                                            id: r.id,
+                                            class: 1,
+                                            device: d,
+                                            arrived: r.arrived,
+                                            service_s,
+                                        });
+                                    }
+                                }
+                            }
+                        }
+                        Ok(())
+                    })
+                    .map_err(|e| Error::Runtime(format!("spawn worker: {e}")))?,
+            );
+        }
+        drop(done_tx);
+        Ok((done_rx, work_txs, handles))
+    }
+
+    /// The concurrent-front-end serving path (`frontend_threads ≥ 1`):
+    /// the same device workers as the single-leader loop, but routing
+    /// moves into N front-end threads holding lock-free
+    /// [`RouteHandle`]s.  Each thread coalesces same-class requests
+    /// into router-level batches (`router_batch`, flushed by
+    /// `batch_deadline`) and spends ONE steering decision per batch;
+    /// NN rows then fill that thread's per-device kernel batchers at
+    /// the chosen device.  The main thread only accounts completions,
+    /// feeds the estimator, and lands adaptive re-targets through
+    /// [`ConcurrentRouter::install`] — which never blocks routing.
+    fn run_frontend(
+        cfg: &ServeConfig,
+        mu: AffinityMatrix,
+        omega: Vec<f64>,
+        populations: Vec<u32>,
+        mut estimator: RateEstimator,
+    ) -> Result<ServeReport> {
+        let weights = if crate::policy::grin::trivial_priorities(&cfg.priorities) {
+            Vec::new()
+        } else {
+            crate::policy::grin::priority_weights(
+                &cfg.priorities,
+                &estimator.confidences(),
+                mu.procs(),
+            )?
+        };
+        // The leader keeps the policy: installs re-solve here, off the
+        // routing hot path.
+        let mut policy = cfg.policy.build();
+        let front = Arc::new(ConcurrentRouter::new(
+            RouterConfig::new(mu, omega, populations)
+                .with_seed(cfg.seed)
+                .with_weights(weights)
+                .with_objective(cfg.objective, cfg.power),
+            policy.as_mut(),
+        )?);
+        // The μ the energy meter believes; refreshed on every install.
+        let mut believed = front.snapshot().solved_mu.clone();
+
+        let (done_rx, work_txs, workers) = Self::spawn_workers(cfg.devices)?;
+        let credits = Arc::new(CreditQueue::new());
+        let batch_cap = cfg.router_batch.max(1);
+
+        let mut routers = Vec::new();
+        for t in 0..cfg.frontend_threads {
+            let mut handle = front.handle();
+            let credits = Arc::clone(&credits);
+            let work_txs = work_txs.clone();
+            let devices = cfg.devices;
+            let deadline = cfg.batch_deadline;
+            let sort_fraction = cfg.sort_fraction;
+            let mut rng = Rng::new(cfg.seed ^ (0xF0E0 + t as u64));
+            routers.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-fe{t}"))
+                    .spawn(move || -> Result<FrontStats> {
+                        // Router-level batchers, one per class.  Sort
+                        // rows are 1-wide placeholders (the batch exists
+                        // only to share the steering decision); NN rows
+                        // are the real activations.
+                        let mut class_batchers: Vec<DynamicBatcher> = vec![
+                            DynamicBatcher::new(batch_cap, 1, deadline),
+                            DynamicBatcher::new(batch_cap, NN_WIDTH, deadline),
+                        ];
+                        // This thread's per-device NN kernel batchers.
+                        let mut nn_batchers: Vec<DynamicBatcher> = (0..devices)
+                            .map(|_| DynamicBatcher::new(NN_BATCH, NN_WIDTH, deadline))
+                            .collect();
+                        let mut stats = FrontStats::default();
+                        // Ids are namespaced per thread (tracing only).
+                        let mut next_id = (t as u64) << 40;
+                        loop {
+                            // Deadline flushes: router-level first (they
+                            // feed the kernel batchers), then kernels.
+                            for class in 0..2 {
+                                if let Some(batch) = class_batchers[class].poll() {
+                                    dispatch_router_batch(
+                                        class, batch, &mut handle, &mut nn_batchers,
+                                        &work_txs, &mut stats,
+                                    )?;
+                                }
+                            }
+                            for j in 0..devices {
+                                if let Some(batch) = nn_batchers[j].poll() {
+                                    submit_nn(j, batch, &work_txs, &mut stats)?;
+                                }
+                            }
+                            let wait = class_batchers
+                                .iter()
+                                .chain(nn_batchers.iter())
+                                .filter_map(|b| b.time_to_deadline())
+                                .min()
+                                .unwrap_or(Duration::from_millis(50));
+                            match credits.pop(wait.max(Duration::from_micros(100))) {
+                                CreditPop::Credit => {
+                                    let class =
+                                        usize::from(!rng.bool_with(sort_fraction));
+                                    let id = next_id;
+                                    next_id += 1;
+                                    let row = if class == 0 {
+                                        vec![0.0]
+                                    } else {
+                                        (0..NN_WIDTH)
+                                            .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+                                            .collect()
+                                    };
+                                    let p = Pending { id, row, arrived: Instant::now() };
+                                    if let Some(batch) = class_batchers[class].push(p) {
+                                        dispatch_router_batch(
+                                            class, batch, &mut handle, &mut nn_batchers,
+                                            &work_txs, &mut stats,
+                                        )?;
+                                    }
+                                }
+                                CreditPop::Timeout => {}
+                                CreditPop::Closed => break,
+                            }
+                        }
+                        // Shutdown: drain partial router batches into the
+                        // kernels, then the partial kernels.
+                        for class in 0..2 {
+                            if let Some(batch) = class_batchers[class].drain() {
+                                dispatch_router_batch(
+                                    class, batch, &mut handle, &mut nn_batchers,
+                                    &work_txs, &mut stats,
+                                )?;
+                            }
+                        }
+                        for j in 0..devices {
+                            if let Some(batch) = nn_batchers[j].drain() {
+                                submit_nn(j, batch, &work_txs, &mut stats)?;
+                            }
+                        }
+                        Ok(stats)
+                    })
+                    .map_err(|e| Error::Runtime(format!("spawn frontend: {e}")))?,
+            );
+        }
+        // Only the front-end threads submit work.
+        drop(work_txs);
+
+        let mut issued = 0u64;
+        let mut served = 0u64;
+        let mut sort_latency = LatencyHistogram::new();
+        let mut nn_latency = LatencyHistogram::new();
+        let mut resolves = 0u64;
+        let mut class_served = [0u64; 2];
+        let mut deadline_misses = [0u64; 2];
+        let mut energy_sum = 0f64;
+        let mut latency_sum = 0f64;
+
+        let t0 = Instant::now();
+        // Fill the pipe: one credit per in-flight slot.
+        while issued < cfg.inflight as u64 && issued < cfg.total {
+            credits.push();
+            issued += 1;
+        }
+        while served < cfg.total {
+            match done_rx.recv_timeout(Duration::from_millis(5)) {
+                Ok(done) => {
+                    front.complete(done.class, done.device)?;
+                    if cfg.adaptive {
+                        estimator.observe(done.class, done.device, done.service_s);
+                    }
+                    let lat = done.arrived.elapsed().as_secs_f64();
+                    energy_sum +=
+                        cfg.power.task_power(believed.rate(done.class, done.device))
+                            * done.service_s;
+                    latency_sum += lat;
+                    if done.class == 0 {
+                        sort_latency.record_s(lat);
+                    } else {
+                        nn_latency.record_s(lat);
+                    }
+                    class_served[done.class] += 1;
+                    if let Some(&deadline) = cfg.deadlines.get(done.class) {
+                        if deadline > 0.0 && lat > deadline {
+                            deadline_misses[done.class] += 1;
+                        }
+                    }
+                    served += 1;
+                    // Adaptive re-solve: same triggers as the single
+                    // leader, but the swap is a lock-free install — the
+                    // routing threads keep deciding on the old snapshot
+                    // while the solve runs, and a failed solve keeps
+                    // the old target (natural back-off).
+                    if cfg.adaptive {
+                        let fire = match cfg.trigger {
+                            Trigger::Threshold => {
+                                served % cfg.resolve_check == 0
+                                    && estimator.drift(&believed) > cfg.drift_threshold
+                            }
+                            Trigger::Cusum => estimator.alarm_pending(),
+                        };
+                        if fire {
+                            if cfg.trigger == Trigger::Cusum {
+                                estimator.take_alarms();
+                            }
+                            let mu_hat = estimator.mu_hat_gated()?;
+                            let omega_hat: Vec<f64> =
+                                mu_hat.data().iter().map(|&m| 1.0 / m).collect();
+                            let weights_res =
+                                if crate::policy::grin::trivial_priorities(&cfg.priorities) {
+                                    Ok(Vec::new())
+                                } else {
+                                    crate::policy::grin::priority_weights(
+                                        &cfg.priorities,
+                                        &estimator.confidences(),
+                                        mu_hat.procs(),
+                                    )
+                                };
+                            let installed = weights_res
+                                .and_then(|w| {
+                                    let update = TargetUpdate::new(mu_hat, omega_hat)
+                                        .with_weights(w)
+                                        .with_epoch(front.epoch() + 1);
+                                    front.install(policy.as_mut(), &update)
+                                })
+                                .is_ok();
+                            if installed {
+                                believed = front.snapshot().solved_mu.clone();
+                                estimator.set_reference(&believed)?;
+                                resolves += 1;
+                            }
+                        }
+                    }
+                    if issued < cfg.total {
+                        credits.push();
+                        issued += 1;
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Runtime("all device workers exited".into()));
+                }
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        // Shutdown: retire the front end (its work senders drop), then
+        // the workers.
+        credits.close();
+        let mut batches = 0u64;
+        let mut batch_fill_sum = 0f64;
+        let mut flushes = [0u64; 3];
+        for r in routers {
+            let fs = r
+                .join()
+                .map_err(|_| Error::Runtime("frontend thread panicked".into()))??;
+            batches += fs.batches;
+            batch_fill_sum += fs.fill_sum;
+            for (agg, n) in flushes.iter_mut().zip(fs.flushes) {
+                *agg += n;
+            }
+        }
+        for h in workers {
+            h.join().map_err(|_| Error::Runtime("worker panicked".into()))??;
+        }
+
+        Ok(ServeReport {
+            served,
+            elapsed_s: elapsed,
+            rps: served as f64 / elapsed,
+            sort_latency,
+            nn_latency,
+            batches,
+            batch_fill: if batches > 0 { batch_fill_sum / batches as f64 } else { 0.0 },
+            flushes,
+            resolves,
+            mu_hat: if cfg.adaptive { estimator.mu_hat().ok() } else { None },
+            class_served,
+            deadline_misses,
+            mean_energy: if served > 0 { energy_sum / served as f64 } else { 0.0 },
+            edp: if served > 0 {
+                (energy_sum / served as f64) * (latency_sum / served as f64)
+            } else {
+                0.0
+            },
+            route_decisions: front.decisions(),
+        })
+    }
+}
+
+/// Counters a front-end routing thread hands back at shutdown
+/// (NN kernel batches it launched).
+#[derive(Default)]
+struct FrontStats {
+    batches: u64,
+    fill_sum: f64,
+    flushes: [u64; 3],
+}
+
+/// Launch one NN kernel batch on device `j`.
+fn submit_nn(
+    j: usize,
+    batch: Batch,
+    work_txs: &[Sender<Work>],
+    stats: &mut FrontStats,
+) -> Result<()> {
+    stats.batches += 1;
+    stats.fill_sum += batch.requests.len() as f64 / NN_BATCH as f64;
+    stats.flushes[match batch.reason {
+        FlushReason::Full => 0,
+        FlushReason::Deadline => 1,
+        FlushReason::Drain => 2,
+    }] += 1;
+    work_txs[j]
+        .send(Work::Nn(batch))
+        .map_err(|_| Error::Runtime("device worker gone".into()))
+}
+
+/// Spend ONE steering decision on a router-level batch and dispatch
+/// its requests to the chosen device: sorts go straight to the worker,
+/// NN rows fill this thread's kernel batcher there.
+fn dispatch_router_batch(
+    class: usize,
+    batch: Batch,
+    handle: &mut RouteHandle,
+    nn_batchers: &mut [DynamicBatcher],
+    work_txs: &[Sender<Work>],
+    stats: &mut FrontStats,
+) -> Result<()> {
+    let j = handle.route_batch(class, batch.requests.len() as u32)?;
+    if class == 0 {
+        for p in batch.requests {
+            work_txs[j]
+                .send(Work::Sort { id: p.id, class: 0, arrived: p.arrived })
+                .map_err(|_| Error::Runtime("device worker gone".into()))?;
+        }
+    } else {
+        for p in batch.requests {
+            if let Some(kernel) = nn_batchers[j].push(p) {
+                submit_nn(j, kernel, work_txs, stats)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Closed-loop admission: the main thread deposits one credit per
+/// completion (plus the initial in-flight window), front-end threads
+/// withdraw one per generated request.  A condvar queue rather than an
+/// mpsc channel so N threads can block on it concurrently without
+/// serializing behind one receiver.
+struct CreditQueue {
+    /// (available credits, closed).
+    state: Mutex<(u64, bool)>,
+    ready: Condvar,
+}
+
+enum CreditPop {
+    Credit,
+    Timeout,
+    Closed,
+}
+
+impl CreditQueue {
+    fn new() -> Self {
+        Self { state: Mutex::new((0, false)), ready: Condvar::new() }
+    }
+
+    fn push(&self) {
+        let mut s = self.state.lock().expect("credit lock poisoned");
+        s.0 += 1;
+        self.ready.notify_one();
+    }
+
+    fn close(&self) {
+        let mut s = self.state.lock().expect("credit lock poisoned");
+        s.1 = true;
+        self.ready.notify_all();
+    }
+
+    /// Withdraw a credit, waiting at most `wait`.  Remaining credits
+    /// drain even after close; `Closed` means closed AND empty.
+    fn pop(&self, wait: Duration) -> CreditPop {
+        let mut s = self.state.lock().expect("credit lock poisoned");
+        if s.0 > 0 {
+            s.0 -= 1;
+            return CreditPop::Credit;
+        }
+        if s.1 {
+            return CreditPop::Closed;
+        }
+        let (mut s, _) = self.ready.wait_timeout(s, wait).expect("credit lock poisoned");
+        if s.0 > 0 {
+            s.0 -= 1;
+            CreditPop::Credit
+        } else if s.1 {
+            CreditPop::Closed
+        } else {
+            CreditPop::Timeout
+        }
     }
 }
 
@@ -750,6 +1193,26 @@ mod tests {
         assert!(Coordinator::run(&cfg).is_err());
         let cfg =
             ServeConfig { deadlines: vec![-0.5, 0.0], total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        // Front-end rules: no sharding underneath it, router-level
+        // batching needs it, and a stateless policy cannot drive its
+        // deficit steering (rejected before any worker spawns).
+        let cfg = ServeConfig {
+            frontend_threads: 2,
+            shards: 2,
+            policy: PolicyKind::GrIn,
+            total: 10,
+            ..Default::default()
+        };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig { router_batch: 8, total: 10, ..Default::default() };
+        assert!(Coordinator::run(&cfg).is_err());
+        let cfg = ServeConfig {
+            frontend_threads: 1,
+            policy: PolicyKind::LoadBalance,
+            total: 10,
+            ..Default::default()
+        };
         assert!(Coordinator::run(&cfg).is_err());
     }
 

@@ -17,17 +17,30 @@
 //! gather / batched-GrIn-re-solve / epoch-versioned push-back loop that
 //! steers them ([`ShardedControl`]), used by both `hetsched serve
 //! --shards N` and the simulator's `sharded` resolve mode.
+//!
+//! For heavy front-end traffic the routing hot path itself goes
+//! concurrent: [`frontend`] holds the [`ConcurrentRouter`] — routing
+//! threads steer against epoch-versioned [`TargetSnapshot`]s (the
+//! `(epoch, target, solved_mu, weights)` tuple swapped as one unit,
+//! exactly the [`router::TargetUpdate`] payload the single-threaded
+//! [`Router`] applies) over a grid of atomic occupancy counters, so
+//! target installs never block routing (`serve --frontend-threads N`).
+//! [`batcher`] doubles as the router-level request coalescer
+//! (`serve --batch N --batch-deadline`), deadline-driven by an injected
+//! [`batcher::Clock`].
 
 pub mod batcher;
+pub mod frontend;
 pub mod global;
 pub mod leader;
 pub mod router;
 pub mod shard;
 pub mod stats;
 
-pub use batcher::{Batch, DynamicBatcher};
+pub use batcher::{Batch, Clock, DynamicBatcher, MonotonicClock, VirtualClock};
+pub use frontend::{ConcurrentRouter, RouteHandle, TargetSnapshot};
 pub use global::ShardedControl;
 pub use leader::{Coordinator, ServeConfig, ServeReport};
-pub use router::Router;
+pub use router::{Router, RouterConfig, TargetUpdate};
 pub use shard::{ShardLeader, ShardSnapshot};
 pub use stats::{LatencyHistogram, RateEstimator};

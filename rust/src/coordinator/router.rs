@@ -5,13 +5,144 @@
 //! [`SystemView`] to the configured [`Policy`] for every request, and
 //! updates state on completion callbacks — the same contract the
 //! simulator and the platform rig use, so any policy drops in unchanged.
+//!
+//! Construction and retargeting go through one surface each, mirroring
+//! the [`SolveRequest`] redesign of the solve API:
+//!
+//! * [`RouterConfig`] + [`Router::build`] replace the old
+//!   `new`/`with_weights`/`with_objective` constructor ladder (the old
+//!   shapes remain as thin wrappers and route through it bit for bit).
+//! * [`TargetUpdate`] + [`Router::apply`] replace the
+//!   `retarget`/`retarget_weighted` split: one epoch-stamped payload
+//!   `{μ, ω, weights, epoch}` carries every live target swap.  The same
+//!   payload is what [`crate::coordinator::ConcurrentRouter`] snapshots
+//!   on its lock-free path, so the single-threaded and concurrent front
+//!   ends share one update type (and the atomicity contract of
+//!   [`crate::coordinator::ShardLeader::install`]: everything in the
+//!   tuple changes together, or not at all).
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SolveRequest, SystemView};
+use crate::policy::{Policy, PreparedTarget, SolveRequest, SystemView};
 use crate::sim::rng::Rng;
+
+/// One live routing-target swap: the payload a leader installs and a
+/// router (single-threaded or concurrent) applies atomically.  Mirrors
+/// the `(epoch, target, solved_mu, priorities)` tuple of
+/// [`crate::coordinator::ShardLeader::install`]: μ, ω, the weight
+/// vector and the epoch only ever change together.
+#[derive(Debug, Clone)]
+pub struct TargetUpdate {
+    /// The (estimated) affinity matrix the new target is solved for.
+    pub mu: AffinityMatrix,
+    /// Matching mean service seconds per (class, device), row-major k×l.
+    pub omega: Vec<f64>,
+    /// Per-cell priority weights the solve runs under (row-major k×l;
+    /// empty = unweighted).
+    pub weights: Vec<f64>,
+    /// Version of this install.  Routers record it; concurrent readers
+    /// use it to detect a swap without locking.
+    pub epoch: u64,
+}
+
+impl TargetUpdate {
+    /// An unweighted update at epoch 0; stamp with
+    /// [`with_epoch`](Self::with_epoch) before installing.
+    pub fn new(mu: AffinityMatrix, omega: Vec<f64>) -> Self {
+        Self { mu, omega, weights: Vec::new(), epoch: 0 }
+    }
+
+    /// Builder: attach a refreshed per-cell weight vector.
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Builder: stamp the install version.
+    pub fn with_epoch(mut self, epoch: u64) -> Self {
+        self.epoch = epoch;
+        self
+    }
+
+    /// Shape-check μ against an expected k×l and ω against μ.
+    pub fn validate_shape(&self, k: usize, l: usize) -> Result<()> {
+        if self.mu.types() != k || self.mu.procs() != l {
+            return Err(Error::Shape(format!(
+                "target update matrix is {}×{}, router runs {k}×{l}",
+                self.mu.types(),
+                self.mu.procs(),
+            )));
+        }
+        if self.omega.len() != k * l {
+            return Err(Error::Shape("target update ω arity".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Everything a router needs at construction, in one value — the
+/// [`SolveRequest`] of the routing layer.  Defaults reproduce the old
+/// `Router::new` exactly; the builders layer weights and the objective
+/// axis on top without a constructor ladder.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Measured affinity matrix (class × device).
+    pub mu: AffinityMatrix,
+    /// Mean service seconds per (class, device), row-major k×l.
+    pub omega: Vec<f64>,
+    /// Expected in-flight split driving the policy's target solve.
+    pub expected_inflight: Vec<u32>,
+    /// Tie-break RNG seed.
+    pub seed: u64,
+    /// Per-cell priority weights of the initial solve (empty =
+    /// unweighted).
+    pub weights: Vec<f64>,
+    /// Objective every solve (initial and every applied update)
+    /// optimizes.
+    pub objective: Objective,
+    /// Power model the objective is scored against.
+    pub power: PowerProfile,
+}
+
+impl RouterConfig {
+    /// Baseline config: throughput objective, default power model, no
+    /// weights, seed 0.
+    pub fn new(mu: AffinityMatrix, omega: Vec<f64>, expected_inflight: Vec<u32>) -> Self {
+        Self {
+            mu,
+            omega,
+            expected_inflight,
+            seed: 0,
+            weights: Vec::new(),
+            objective: Objective::Throughput,
+            power: PowerProfile::default(),
+        }
+    }
+
+    /// Builder: tie-break RNG seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Builder: per-cell priority weights (row-major k×l,
+    /// [`crate::policy::grin::priority_weights`]).
+    pub fn with_weights(mut self, weights: Vec<f64>) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Builder: solve for `objective` against `power`.  Non-throughput
+    /// objectives are GrIn-only and exclude non-trivial weight vectors,
+    /// exactly as [`crate::policy::grin::solve_request`] enforces.
+    pub fn with_objective(mut self, objective: Objective, power: PowerProfile) -> Self {
+        self.objective = objective;
+        self.power = power;
+        self
+    }
+}
 
 /// The router.
 pub struct Router {
@@ -22,9 +153,9 @@ pub struct Router {
     omega: Vec<f64>,
     /// Per-cell priority weights the current target was solved under
     /// (empty = unweighted); swapped together with the target in
-    /// [`retarget_weighted`](Self::retarget_weighted).
+    /// [`apply`](Self::apply).
     weights: Vec<f64>,
-    /// Objective every solve (initial and retarget) optimizes.
+    /// Objective every solve (initial and applied updates) optimizes.
     objective: Objective,
     /// Power model the objective is scored against.
     power: PowerProfile,
@@ -35,27 +166,62 @@ pub struct Router {
     policy: Box<dyn Policy>,
     rng: Rng,
     routed: u64,
+    /// Epoch of the last applied [`TargetUpdate`] (0 = the boot solve).
+    epoch: u64,
 }
 
 /// Run the policy's solve through one [`SolveRequest`] carrying the
-/// router's weight vector and objective.
-fn prepare_policy(
+/// update's weight vector and the router's objective axis — the single
+/// prepare path shared by [`Router::build`], [`Router::apply`], the
+/// concurrent front end and the simulator's dynamic resolve loop.
+pub(crate) fn prepare_policy(
     policy: &mut dyn Policy,
     mu: &AffinityMatrix,
     populations: &[u32],
     weights: &[f64],
     objective: Objective,
     power: PowerProfile,
-) -> Result<()> {
+) -> Result<PreparedTarget> {
     let req = SolveRequest::new(mu, populations)
         .with_objective(objective, power)
         .with_weights(weights);
-    policy.prepare(&req).map(|_| ())
+    policy.prepare(&req)
 }
 
 impl Router {
+    /// Build a router from one [`RouterConfig`]: the initial target is
+    /// solved through a [`SolveRequest`] assembled from the config.
+    pub fn build(cfg: RouterConfig, mut policy: Box<dyn Policy>) -> Result<Self> {
+        prepare_policy(
+            policy.as_mut(),
+            &cfg.mu,
+            &cfg.expected_inflight,
+            &cfg.weights,
+            cfg.objective,
+            cfg.power,
+        )?;
+        let (k, l) = (cfg.mu.types(), cfg.mu.procs());
+        Ok(Self {
+            state: StateMatrix::zeros(k, l),
+            work: vec![0.0; l],
+            alive: vec![true; l],
+            mu: cfg.mu,
+            populations: cfg.expected_inflight,
+            omega: cfg.omega,
+            weights: cfg.weights,
+            objective: cfg.objective,
+            power: cfg.power,
+            policy,
+            rng: Rng::new(cfg.seed),
+            routed: 0,
+            epoch: 0,
+        })
+    }
+
     /// Build a router; `omega[i*l + j]` is the measured mean service time
     /// of class i on device j (from [`crate::platform::measure`]).
+    /// Wrapper over [`build`](Self::build) with a baseline
+    /// [`RouterConfig`].
     pub fn new(
         mu: AffinityMatrix,
         omega: Vec<f64>,
@@ -63,13 +229,12 @@ impl Router {
         policy: Box<dyn Policy>,
         seed: u64,
     ) -> Result<Self> {
-        Self::with_weights(mu, omega, expected_inflight, policy, seed, Vec::new())
+        Self::build(RouterConfig::new(mu, omega, expected_inflight).with_seed(seed), policy)
     }
 
     /// [`new`](Self::new) with per-cell priority weights (row-major k×l,
-    /// [`crate::policy::grin::priority_weights`]): the initial target is
-    /// solved through a weighted [`SolveRequest`].  An empty vector is
-    /// the unweighted router.
+    /// [`crate::policy::grin::priority_weights`]).  Wrapper over
+    /// [`build`](Self::build).
     pub fn with_weights(
         mu: AffinityMatrix,
         omega: Vec<f64>,
@@ -78,50 +243,34 @@ impl Router {
         seed: u64,
         weights: Vec<f64>,
     ) -> Result<Self> {
-        Self::with_objective(
-            mu,
-            omega,
-            expected_inflight,
+        Self::build(
+            RouterConfig::new(mu, omega, expected_inflight)
+                .with_seed(seed)
+                .with_weights(weights),
             policy,
-            seed,
-            weights,
-            Objective::Throughput,
-            PowerProfile::default(),
         )
     }
 
     /// [`with_weights`](Self::with_weights) under an explicit scheduling
-    /// objective: the initial target (and every retarget) is solved for
-    /// `objective` against `power`.  Non-throughput objectives are
-    /// GrIn-only and exclude non-trivial weight vectors, exactly as
-    /// [`crate::policy::grin::solve_request`] enforces.
+    /// objective.  Wrapper over [`build`](Self::build).
     #[allow(clippy::too_many_arguments)]
     pub fn with_objective(
         mu: AffinityMatrix,
         omega: Vec<f64>,
         expected_inflight: Vec<u32>,
-        mut policy: Box<dyn Policy>,
+        policy: Box<dyn Policy>,
         seed: u64,
         weights: Vec<f64>,
         objective: Objective,
         power: PowerProfile,
     ) -> Result<Self> {
-        prepare_policy(policy.as_mut(), &mu, &expected_inflight, &weights, objective, power)?;
-        let (k, l) = (mu.types(), mu.procs());
-        Ok(Self {
-            state: StateMatrix::zeros(k, l),
-            work: vec![0.0; l],
-            alive: vec![true; l],
-            mu,
-            populations: expected_inflight,
-            omega,
-            weights,
-            objective,
-            power,
+        Self::build(
+            RouterConfig::new(mu, omega, expected_inflight)
+                .with_seed(seed)
+                .with_weights(weights)
+                .with_objective(objective, power),
             policy,
-            rng: Rng::new(seed),
-            routed: 0,
-        })
+        )
     }
 
     /// Route one request of `class`; returns the chosen device.  A
@@ -161,8 +310,8 @@ impl Router {
     /// Mark `device` down: no further route lands on it.  In-flight
     /// requests keep draining through [`complete`](Self::complete) —
     /// only new placements are masked.  Pair with
-    /// [`retarget`](Self::retarget) on a dead-column-masked μ̂ to move
-    /// the solved target off the device too.  Idempotent.
+    /// [`apply`](Self::apply) on a dead-column-masked μ̂ to move the
+    /// solved target off the device too.  Idempotent.
     pub fn mark_down(&mut self, device: usize) -> Result<()> {
         self.liveness_slot(device).map(|j| self.alive[j] = false)
     }
@@ -192,63 +341,64 @@ impl Router {
         self.state.dec(class, device)
     }
 
-    /// Swap the routing target to a freshly estimated affinity matrix
-    /// without stopping traffic: the policy re-solves (`prepare`) against
-    /// μ̂ under the router's current weight vector, the work estimator
-    /// picks up the matching ω̂, and in-flight requests keep draining
-    /// under the live occupancy state.
+    /// Apply one [`TargetUpdate`] without stopping traffic: the policy
+    /// re-solves (`prepare`) against the update's μ under its weight
+    /// vector, the work estimator picks up the matching ω, and in-flight
+    /// requests keep draining under the live occupancy state.  The
+    /// (μ, ω, weights, epoch) tuple swaps together or not at all — a
+    /// failed solve leaves every field of the old target in place.
+    pub fn apply(&mut self, update: &TargetUpdate) -> Result<()> {
+        update.validate_shape(self.mu.types(), self.mu.procs())?;
+        prepare_policy(
+            self.policy.as_mut(),
+            &update.mu,
+            &self.populations,
+            &update.weights,
+            self.objective,
+            self.power,
+        )?;
+        self.mu = update.mu.clone();
+        self.omega = update.omega.clone();
+        self.weights = update.weights.clone();
+        self.epoch = update.epoch;
+        Ok(())
+    }
+
+    /// Swap the routing target to a freshly estimated affinity matrix,
+    /// keeping the current weight vector.  Wrapper over
+    /// [`apply`](Self::apply) at the next epoch.
     pub fn retarget(&mut self, mu: AffinityMatrix, omega: Vec<f64>) -> Result<()> {
-        let weights = self.weights.clone();
-        self.retarget_inner(mu, omega, weights)
+        let update = TargetUpdate::new(mu, omega)
+            .with_weights(self.weights.clone())
+            .with_epoch(self.epoch + 1);
+        self.apply(&update)
     }
 
     /// [`retarget`](Self::retarget) with a refreshed weight vector (the
     /// adaptive loop recomputes priority × live confidence at every
-    /// re-solve); target and weights swap in the same call.
+    /// re-solve); target and weights swap in the same call.  Wrapper
+    /// over [`apply`](Self::apply) at the next epoch.
     pub fn retarget_weighted(
         &mut self,
         mu: AffinityMatrix,
         omega: Vec<f64>,
         weights: Vec<f64>,
     ) -> Result<()> {
-        self.retarget_inner(mu, omega, weights)
-    }
-
-    fn retarget_inner(
-        &mut self,
-        mu: AffinityMatrix,
-        omega: Vec<f64>,
-        weights: Vec<f64>,
-    ) -> Result<()> {
-        if mu.types() != self.mu.types() || mu.procs() != self.mu.procs() {
-            return Err(Error::Shape(format!(
-                "retarget matrix is {}×{}, router runs {}×{}",
-                mu.types(),
-                mu.procs(),
-                self.mu.types(),
-                self.mu.procs()
-            )));
-        }
-        if omega.len() != mu.types() * mu.procs() {
-            return Err(Error::Shape("retarget ω arity".into()));
-        }
-        prepare_policy(
-            self.policy.as_mut(),
-            &mu,
-            &self.populations,
-            &weights,
-            self.objective,
-            self.power,
-        )?;
-        self.mu = mu;
-        self.omega = omega;
-        self.weights = weights;
-        Ok(())
+        let update = TargetUpdate::new(mu, omega)
+            .with_weights(weights)
+            .with_epoch(self.epoch + 1);
+        self.apply(&update)
     }
 
     /// The affinity matrix the current routing target was solved for.
     pub fn mu(&self) -> &AffinityMatrix {
         &self.mu
+    }
+
+    /// Epoch of the target currently steering routes (0 until the first
+    /// applied update).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
     }
 
     /// Requests currently in flight.
@@ -324,6 +474,7 @@ mod tests {
         let mu2 = workload::table3::general_symmetric();
         let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
         r.retarget(mu2, omega2).unwrap();
+        assert_eq!(r.epoch(), 1);
         // BF target: class-1 deficit now sits on the GPU.
         assert_eq!(r.route(1).unwrap(), 1);
         assert!((r.mu().rate(0, 0) - 928.0).abs() < 1e-12);
@@ -335,6 +486,61 @@ mod tests {
         .unwrap();
         let omega_bad = vec![1.0; 6];
         assert!(r.retarget(bad, omega_bad).is_err());
+    }
+
+    #[test]
+    fn legacy_shapes_route_identically_to_config_and_apply() {
+        // The constructor-ladder wrappers and the retarget pair must
+        // reproduce the RouterConfig/apply surface bit for bit: same
+        // placements for the same seeds and inputs.
+        let mu = workload::table3::p2_biased();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        let mut old =
+            Router::new(mu.clone(), omega.clone(), vec![10, 10], PolicyKind::Cab.build(), 7)
+                .unwrap();
+        let cfg = RouterConfig::new(mu.clone(), omega, vec![10, 10]).with_seed(7);
+        let mut new = Router::build(cfg, PolicyKind::Cab.build()).unwrap();
+        for i in 0..20 {
+            let class = i % 2;
+            assert_eq!(old.route(class).unwrap(), new.route(class).unwrap());
+        }
+        // retarget == apply at the next epoch with kept weights.
+        let mu2 = workload::table3::general_symmetric();
+        let omega2: Vec<f64> = mu2.data().iter().map(|&m| 1.0 / m).collect();
+        old.retarget(mu2.clone(), omega2.clone()).unwrap();
+        new.apply(&TargetUpdate::new(mu2, omega2).with_epoch(1)).unwrap();
+        assert_eq!(old.epoch(), new.epoch());
+        for i in 0..20 {
+            let class = i % 2;
+            assert_eq!(old.route(class).unwrap(), new.route(class).unwrap());
+        }
+        assert_eq!(old.state().data(), new.state().data());
+    }
+
+    #[test]
+    fn failed_apply_keeps_old_target_whole() {
+        // An update whose solve fails must not leave a half-swapped
+        // (μ from the new target, weights from the old) router behind.
+        let mu = workload::priority_mu();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        let w = crate::policy::grin::priority_weights(&[4, 1], &[1.0; 4], 2).unwrap();
+        let mut r = Router::with_weights(
+            mu.clone(),
+            omega.clone(),
+            vec![4, 16],
+            PolicyKind::GrIn.build(),
+            7,
+            w.clone(),
+        )
+        .unwrap();
+        // Wrong-arity weights fail the solve inside apply …
+        let bad = TargetUpdate::new(mu.clone(), omega)
+            .with_weights(vec![1.0; 3])
+            .with_epoch(9);
+        assert!(r.apply(&bad).is_err());
+        // … and nothing changed: epoch still boot, steering unchanged.
+        assert_eq!(r.epoch(), 0);
+        assert_eq!(r.route(0).unwrap(), 0);
     }
 
     #[test]

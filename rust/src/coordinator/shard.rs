@@ -32,6 +32,12 @@
 //! keyed by (class, device) alone, so completions of tasks routed under
 //! an earlier epoch still decrement correctly after any number of
 //! swaps.
+//!
+//! The lock-free front end ([`super::frontend::ConcurrentRouter`])
+//! reifies exactly this tuple as its immutable
+//! [`super::frontend::TargetSnapshot`] — same atomicity contract,
+//! enforced structurally (one `Arc` swap) instead of by a `&mut self`
+//! install, so concurrent routing threads get it for free.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;

@@ -31,7 +31,7 @@ use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::objective::{Objective, PowerProfile};
 use crate::model::state::StateMatrix;
-use crate::policy::{Policy, SolveRequest, SystemView};
+use crate::policy::{Policy, SystemView};
 
 use super::distribution::Distribution;
 use super::eventq::EventQueue;
@@ -603,15 +603,20 @@ impl DynamicReport {
     }
 }
 
-/// Run the configured prepare for `policy` through one
-/// [`SolveRequest`]: the plain request when the priority vector is
-/// trivial (empty or all-equal — see
-/// [`crate::policy::grin::trivial_priorities`]), otherwise with
-/// weights = normalized priority × per-cell confidence
-/// ([`crate::policy::grin::priority_weights`]).  `estimator` supplies
-/// the confidence grid on the adaptive path; `None` (oracle paths:
-/// static, every-phase, and population-only boundaries before any
-/// observation-driven re-solve) means full confidence everywhere.
+/// Resolve the priority vector into per-cell weights, then run the
+/// solve through the coordinator's shared prepare path
+/// ([`crate::coordinator::router::prepare_policy`] — the same
+/// [`crate::policy::SolveRequest`] assembly the router's
+/// `TargetUpdate::apply` and the
+/// concurrent front end's install use, so the simulator and the
+/// serving plane cannot drift apart).  Trivial priorities (empty or
+/// all-equal — see [`crate::policy::grin::trivial_priorities`]) solve
+/// unweighted; otherwise weights = normalized priority × per-cell
+/// confidence ([`crate::policy::grin::priority_weights`]).
+/// `estimator` supplies the confidence grid on the adaptive path;
+/// `None` (oracle paths: static, every-phase, and population-only
+/// boundaries before any observation-driven re-solve) means full
+/// confidence everywhere.
 fn prepare_policy(
     policy: &mut dyn Policy,
     mu: &AffinityMatrix,
@@ -621,17 +626,20 @@ fn prepare_policy(
     objective: Objective,
     power: PowerProfile,
 ) -> Result<()> {
-    let req = SolveRequest::new(mu, populations).with_objective(objective, power);
-    if crate::policy::grin::trivial_priorities(priorities) {
-        return policy.prepare(&req).map(|_| ());
-    }
-    let (k, l) = (mu.types(), mu.procs());
-    let confidence = match estimator {
-        Some(e) => e.confidences(),
-        None => vec![1.0; k * l],
+    let weights = if crate::policy::grin::trivial_priorities(priorities) {
+        Vec::new()
+    } else {
+        let (k, l) = (mu.types(), mu.procs());
+        let confidence = match estimator {
+            Some(e) => e.confidences(),
+            None => vec![1.0; k * l],
+        };
+        crate::policy::grin::priority_weights(priorities, &confidence, l)?
     };
-    let weights = crate::policy::grin::priority_weights(priorities, &confidence, l)?;
-    policy.prepare(&req.with_weights(&weights)).map(|_| ())
+    crate::coordinator::router::prepare_policy(
+        policy, mu, populations, &weights, objective, power,
+    )
+    .map(|_| ())
 }
 
 /// Physical fallback when routing targets a down device: the up device

@@ -142,6 +142,16 @@ pub enum ScenarioKind {
     /// churn-aware control (CUSUM limp detection + down-signal
     /// re-solves) holds throughput.
     Churn,
+    /// Offered-load ramp past capacity: every phase multiplies the
+    /// population by `burst_factor` (> 1), holding rates and the 50/50
+    /// mix fixed, until the system is saturated — queues grow, the
+    /// bottleneck becomes the dispatch path itself rather than the
+    /// placement.  The serving-front-end stress regime: batched routing
+    /// (one steering decision per coalesced batch) should sustain
+    /// strictly higher served throughput than per-request routing at
+    /// the overload point, which `benches/perf_routing.rs` measures and
+    /// CI gates.
+    Saturation,
 }
 
 impl ScenarioKind {
@@ -154,9 +164,10 @@ impl ScenarioKind {
             "abrupt_flip" | "flip" => Ok(ScenarioKind::AbruptFlip),
             "priority_mix" | "priority" => Ok(ScenarioKind::PriorityMix),
             "churn" => Ok(ScenarioKind::Churn),
+            "saturation" | "overload" => Ok(ScenarioKind::Saturation),
             other => Err(Error::Parse(format!(
                 "unknown scenario '{other}' \
-                 (phase_shift|burst|slow_drift|abrupt_flip|priority_mix|churn)"
+                 (phase_shift|burst|slow_drift|abrupt_flip|priority_mix|churn|saturation)"
             ))),
         }
     }
@@ -170,11 +181,12 @@ impl ScenarioKind {
             ScenarioKind::AbruptFlip => "abrupt_flip",
             ScenarioKind::PriorityMix => "priority_mix",
             ScenarioKind::Churn => "churn",
+            ScenarioKind::Saturation => "saturation",
         }
     }
 
     /// All canned regimes.
-    pub fn all() -> [ScenarioKind; 6] {
+    pub fn all() -> [ScenarioKind; 7] {
         [
             ScenarioKind::PhaseShift,
             ScenarioKind::Burst,
@@ -182,6 +194,7 @@ impl ScenarioKind {
             ScenarioKind::AbruptFlip,
             ScenarioKind::PriorityMix,
             ScenarioKind::Churn,
+            ScenarioKind::Saturation,
         ]
     }
 }
@@ -346,6 +359,34 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
             let (n1, n2) = split_populations(p.n, 0.5);
             (0..p.phases)
                 .map(|_| Phase::new(vec![n1, n2], p.warmup, p.completions))
+                .collect()
+        }
+        ScenarioKind::Saturation => {
+            if p.phases < 2 {
+                return Err(Error::Config(
+                    "saturation needs ≥ 2 phases (baseline, then the ramp)".into(),
+                ));
+            }
+            if p.burst_factor <= 1.0 {
+                return Err(Error::Config(format!(
+                    "saturation ramps load by burst_factor per phase; \
+                     need > 1, got {}",
+                    p.burst_factor
+                )));
+            }
+            // Geometric offered-load ramp at fixed rates and mix: phase
+            // i runs burst_factor^i × N programs, so by the last phase
+            // the fleet is past capacity and the dispatch path itself is
+            // the bottleneck.  Capped well under u32::MAX so a hot ramp
+            // cannot overflow the population arithmetic.
+            (0..p.phases)
+                .map(|i| {
+                    let n = (p.n as f64 * p.burst_factor.powi(i as i32))
+                        .min(10_000_000.0)
+                        .round() as u32;
+                    let (n1, n2) = split_populations(n.max(2), 0.5);
+                    Phase::new(vec![n1, n2], p.warmup, p.completions)
+                })
                 .collect()
         }
         ScenarioKind::SlowDrift => {
@@ -582,6 +623,27 @@ mod tests {
                 assert!(ph.dist.is_none());
             }
         }
+    }
+
+    #[test]
+    fn saturation_ramps_load_geometrically() {
+        let p = ScenarioParams { phases: 4, ..Default::default() };
+        let phases = scenario_phases(ScenarioKind::Saturation, &p).unwrap();
+        assert_eq!(phases.len(), 4);
+        // 20 → 40 → 80 → 160 at the default ×2 ramp; rates and the
+        // 50/50 mix never change — only offered load.
+        for (i, ph) in phases.iter().enumerate() {
+            let total: u32 = ph.populations.iter().sum();
+            assert_eq!(total, 20 << i, "phase {i}");
+            assert_eq!(ph.populations[0], total / 2);
+            assert!(ph.mu_scale.is_empty() && ph.dist.is_none());
+        }
+        // A flat "ramp" is rejected — saturation must actually ramp.
+        let flat = ScenarioParams { burst_factor: 1.0, ..Default::default() };
+        assert!(scenario_phases(ScenarioKind::Saturation, &flat).is_err());
+        // One phase is no ramp either.
+        let one = ScenarioParams { phases: 1, ..Default::default() };
+        assert!(scenario_phases(ScenarioKind::Saturation, &one).is_err());
     }
 
     #[test]

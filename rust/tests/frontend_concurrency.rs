@@ -1,0 +1,200 @@
+//! Concurrency properties of the lock-free serving front end — the PR
+//! acceptance gates:
+//!
+//! * snapshot epochs observed by routing threads never decrease, and a
+//!   torn read (one epoch's target with another epoch's weights) is
+//!   impossible — each install's weights encode its epoch, so any
+//!   mismatch would be caught on the very decision that saw it;
+//! * occupancy is conserved across concurrent reconciled handles: once
+//!   every handle flushes, each cell equals routes − completes;
+//! * exact mode is interleaving-independent route-only: N threads
+//!   routing a fixed request multiset land the same per-cell histogram
+//!   as one thread routing it sequentially (per-class rows steer
+//!   independently and same-class decisions commute, so the CAS
+//!   linearization order cannot change the final grid).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use hetsched::coordinator::{ConcurrentRouter, RouterConfig, TargetUpdate};
+use hetsched::model::affinity::AffinityMatrix;
+use hetsched::policy::PolicyKind;
+use hetsched::sim::rng::Rng;
+use hetsched::sim::workload;
+
+fn config(mu: AffinityMatrix) -> RouterConfig {
+    let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+    RouterConfig::new(mu, omega, vec![24, 24]).with_seed(7)
+}
+
+/// Epoch-encoding steering weights for the 2×2 fleet: cell `c` carries
+/// `1 + c + epoch`.  Non-uniform, so the front end keeps them verbatim
+/// instead of collapsing them to "unweighted".
+fn stamped_weights(epoch: u64) -> Vec<f64> {
+    (0..4).map(|c| 1.0 + c as f64 + epoch as f64).collect()
+}
+
+#[test]
+fn epochs_are_monotone_and_snapshots_never_tear() {
+    // GrIn: the only policy that honors non-trivial weights, which the
+    // torn-read check needs.
+    let mut policy = PolicyKind::GrIn.build();
+    let front =
+        ConcurrentRouter::new(config(workload::table3::p2_biased()), policy.as_mut()).unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for t in 0..3usize {
+            let mut handle = front.handle();
+            let stop = &stop;
+            s.spawn(move || {
+                let mut rng = Rng::new(0xE0 ^ t as u64);
+                let mut prev = 0u64;
+                while !stop.load(Ordering::Acquire) {
+                    handle.route(rng.index(2)).unwrap();
+                    let snap = handle.snapshot();
+                    let e = snap.epoch;
+                    assert!(e >= prev, "epoch went backwards: {prev} -> {e}");
+                    prev = e;
+                    if snap.weights.is_empty() {
+                        assert_eq!(e, 0, "only the boot snapshot is unweighted");
+                    } else {
+                        assert_eq!(
+                            snap.weights,
+                            stamped_weights(e),
+                            "torn snapshot at epoch {e}"
+                        );
+                    }
+                }
+            });
+        }
+        let mu = workload::table3::p2_biased();
+        let omega: Vec<f64> = mu.data().iter().map(|&m| 1.0 / m).collect();
+        for e in 1..=40u64 {
+            let update = TargetUpdate::new(mu.clone(), omega.clone())
+                .with_weights(stamped_weights(e))
+                .with_epoch(e);
+            assert_eq!(front.install(policy.as_mut(), &update).unwrap(), e);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        stop.store(true, Ordering::Release);
+    });
+    assert_eq!(front.epoch(), 40);
+    assert!(front.routed() > 0, "readers routed nothing under install churn");
+}
+
+#[test]
+fn reconciled_handles_conserve_occupancy_across_threads() {
+    let mut policy = PolicyKind::Cab.build();
+    let front = ConcurrentRouter::new(
+        config(workload::table3::general_symmetric()),
+        policy.as_mut(),
+    )
+    .unwrap();
+    let decisions_per_thread = 600u64;
+    let results: Vec<(Vec<i64>, u64)> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..4usize)
+            .map(|t| {
+                let mut handle = front.handle_with_reconcile(16);
+                s.spawn(move || {
+                    let mut rng = Rng::new(0xACE ^ t as u64);
+                    let mut net = vec![0i64; 4];
+                    let mut routed = 0u64;
+                    let mut backlog: Vec<(usize, usize)> = Vec::new();
+                    for i in 0..decisions_per_thread {
+                        let class = rng.index(2);
+                        let count = 1 + rng.index(3) as u32;
+                        let j = handle.route_batch(class, count).unwrap();
+                        net[class * 2 + j] += count as i64;
+                        routed += count as u64;
+                        backlog.push((class, j));
+                        // Complete a random earlier request every few
+                        // decisions: decrements race unpublished route
+                        // deltas, which the signed cells must absorb.
+                        if i % 7 == 6 {
+                            let pick = rng.index(backlog.len());
+                            let (c, d) = backlog.swap_remove(pick);
+                            handle.complete(c, d).unwrap();
+                            net[c * 2 + d] -= 1;
+                        }
+                    }
+                    handle.flush();
+                    (net, routed)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    let mut expected = vec![0i64; 4];
+    let mut routed = 0u64;
+    for (net, r) in &results {
+        for (cell, d) in expected.iter_mut().zip(net) {
+            *cell += d;
+        }
+        routed += r;
+    }
+    for i in 0..2 {
+        for j in 0..2 {
+            assert_eq!(
+                front.occupancy(i, j).unwrap(),
+                expected[i * 2 + j],
+                "cell ({i}, {j}) off after all handles flushed"
+            );
+        }
+    }
+    assert_eq!(front.inflight(), expected.iter().sum::<i64>());
+    assert_eq!(front.routed(), routed);
+    assert_eq!(front.decisions(), 4 * decisions_per_thread);
+    // Drain what is still in flight; the books must close at zero.
+    for i in 0..2 {
+        for j in 0..2 {
+            for _ in 0..expected[i * 2 + j] {
+                front.complete(i, j).unwrap();
+            }
+        }
+    }
+    assert_eq!(front.inflight(), 0);
+}
+
+#[test]
+fn exact_mode_histogram_is_thread_count_independent() {
+    let mut rng = Rng::new(42);
+    let seq: Vec<usize> = (0..2000).map(|_| rng.index(2)).collect();
+
+    let mut solo_policy = PolicyKind::Cab.build();
+    let solo = ConcurrentRouter::new(
+        config(workload::table3::general_symmetric()),
+        solo_policy.as_mut(),
+    )
+    .unwrap();
+    let mut handle = solo.handle();
+    for &class in &seq {
+        handle.route(class).unwrap();
+    }
+
+    let mut multi_policy = PolicyKind::Cab.build();
+    let multi = ConcurrentRouter::new(
+        config(workload::table3::general_symmetric()),
+        multi_policy.as_mut(),
+    )
+    .unwrap();
+    std::thread::scope(|s| {
+        for chunk in seq.chunks(500) {
+            let mut h = multi.handle();
+            s.spawn(move || {
+                for &class in chunk {
+                    h.route(class).unwrap();
+                }
+            });
+        }
+    });
+    for i in 0..2 {
+        for j in 0..2 {
+            assert_eq!(
+                multi.occupancy(i, j).unwrap(),
+                solo.occupancy(i, j).unwrap(),
+                "cell ({i}, {j}) differs between 4-thread and 1-thread routing"
+            );
+        }
+    }
+    assert_eq!(multi.routed(), solo.routed());
+    assert_eq!(multi.decisions(), seq.len() as u64);
+}
