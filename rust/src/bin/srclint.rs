@@ -1,0 +1,40 @@
+//! `srclint` — enforce repo source invariants over `rust/src/`.
+//!
+//! Usage: `cargo run --bin srclint [-- <src-root>]`
+//! Exits non-zero if any finding survives (suppressions need an inline
+//! justification: `// srclint: allow(<rule>) — <reason>`).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        // Work from either the workspace root or rust/.
+        let cands = ["rust/src", "src"];
+        for c in cands {
+            let p = PathBuf::from(c);
+            if p.join("lib.rs").is_file() {
+                return p;
+            }
+        }
+        PathBuf::from("rust/src")
+    });
+    match hetsched::lint::lint_tree(&root) {
+        Ok((findings, files)) => {
+            for f in &findings {
+                eprintln!("{f}");
+            }
+            if findings.is_empty() {
+                println!("srclint: {files} files clean ({})", root.display());
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("srclint: {} finding(s) in {files} files", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("srclint: cannot walk {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -321,6 +321,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
     }
     let plan = ReplicationPlan { reps, threads, base_seed: seed };
+    // srclint: allow(instant-now) — CLI reports real sweep wall time to the terminal user.
     let t0 = std::time::Instant::now();
     let stats = run_cells(&cells, &plan)?;
     let wall = t0.elapsed().as_secs_f64();

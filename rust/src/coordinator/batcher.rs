@@ -18,8 +18,7 @@
 //! order (`Full` vs `Deadline` vs `Drain`) is deterministic and
 //! replayable under load.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use crate::sync::{Arc, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Time source for batching deadlines, in seconds from an arbitrary
@@ -39,6 +38,7 @@ pub struct MonotonicClock {
 impl MonotonicClock {
     /// A clock whose origin is now.
     pub fn new() -> Self {
+        // srclint: allow(instant-now) — this constructor IS the real Clock origin; consumers inject a Clock.
         Self { origin: Instant::now() }
     }
 }
@@ -71,6 +71,9 @@ impl VirtualClock {
 
     /// Jump to an absolute virtual time (seconds).
     pub fn set(&self, now_s: f64) {
+        // ordering: Release pairs with the Acquire load in now_s — a
+        // reader that sees the new instant sees everything the advancer
+        // did before moving time.
         self.now_bits.store(now_s.to_bits(), Ordering::Release);
     }
 
@@ -82,6 +85,7 @@ impl VirtualClock {
 
 impl Clock for VirtualClock {
     fn now_s(&self) -> f64 {
+        // ordering: Acquire pairs with the Release store in set().
         f64::from_bits(self.now_bits.load(Ordering::Acquire))
     }
 }

@@ -39,8 +39,7 @@
 //! why the equivalence gate in `tests/frontend_concurrency.rs` is
 //! route-only and mixed traffic is reconciled-mode territory.
 
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::sync::{Arc, AtomicBool, AtomicI64, AtomicU64, Mutex, MutexGuard, Ordering};
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -94,6 +93,16 @@ struct Shared {
 impl Shared {
     fn cell(&self, class: usize, device: usize) -> &AtomicI64 {
         &self.occupancy[class * self.l + device]
+    }
+
+    /// The snapshot mutex, with poisoning collapsed to a panic in one
+    /// place.  Nothing panics while holding this lock (the guarded
+    /// section is a pointer clone/swap), so the lock cannot actually be
+    /// poisoned; every caller goes through here so the invariant has
+    /// exactly one witness.
+    fn snapshot_guard(&self) -> MutexGuard<'_, Arc<TargetSnapshot>> {
+        // srclint: allow(hot-path-panic) — poisoning is impossible: nothing panics inside the pointer-swap critical section.
+        self.snapshot.lock().expect("snapshot lock poisoned")
     }
 }
 
@@ -244,7 +253,7 @@ impl ConcurrentRouter {
             solved_mu: update.mu.clone(),
             weights: effective_weights(&update.weights),
         });
-        let mut slot = self.shared.snapshot.lock().expect("snapshot lock poisoned");
+        let mut slot = self.shared.snapshot_guard();
         if update.epoch <= slot.epoch {
             return Err(Error::Config(format!(
                 "target update epoch {} does not advance installed epoch {}",
@@ -255,6 +264,10 @@ impl ConcurrentRouter {
         // Publish while still holding the lock: any reader that
         // observes the new epoch and locks is guaranteed this (or a
         // newer) snapshot.
+        // ordering: Release pairs with the Acquire epoch load in
+        // RouteHandle::refresh_snapshot / ConcurrentRouter::epoch — a
+        // reader that observes the new epoch also observes the swapped
+        // snapshot pointer (the store happens-after the swap above).
         self.shared.epoch.store(update.epoch, Ordering::Release);
         Ok(update.epoch)
     }
@@ -273,7 +286,7 @@ impl ConcurrentRouter {
     /// hot path.
     pub fn handle_with_reconcile(&self, reconcile_every: u32) -> RouteHandle {
         let shared = Arc::clone(&self.shared);
-        let snap = Arc::clone(&shared.snapshot.lock().expect("snapshot lock poisoned"));
+        let snap = Arc::clone(&shared.snapshot_guard());
         let cells = shared.k * shared.l;
         let mut handle = RouteHandle {
             snap,
@@ -298,6 +311,9 @@ impl ConcurrentRouter {
     /// signed.
     pub fn complete(&self, class: usize, device: usize) -> Result<()> {
         self.check_cell(class, device)?;
+        // ordering: AcqRel — the decrement must be visible to the next
+        // Acquire row read / CAS on this cell (Release), and must not
+        // move before the completion that caused it (Acquire).
         self.shared.cell(class, device).fetch_sub(1, Ordering::AcqRel);
         Ok(())
     }
@@ -310,6 +326,9 @@ impl ConcurrentRouter {
     /// cached in the snapshot.  Idempotent.
     pub fn mark_down(&self, device: usize) -> Result<()> {
         self.check_device(device)?;
+        // ordering: Release pairs with the Acquire liveness read at the
+        // top of route_batch — a decision that sees the flag down also
+        // sees everything the churn handler did before flipping it.
         self.shared.alive[device].store(false, Ordering::Release);
         Ok(())
     }
@@ -317,6 +336,7 @@ impl ConcurrentRouter {
     /// Revive `device`.  Idempotent.
     pub fn mark_up(&self, device: usize) -> Result<()> {
         self.check_device(device)?;
+        // ordering: Release — same pairing as mark_down.
         self.shared.alive[device].store(true, Ordering::Release);
         Ok(())
     }
@@ -324,18 +344,24 @@ impl ConcurrentRouter {
     /// Is `device` currently routable?
     pub fn is_alive(&self, device: usize) -> Result<bool> {
         self.check_device(device)?;
+        // ordering: Acquire pairs with the Release stores in
+        // mark_down / mark_up.
         Ok(self.shared.alive[device].load(Ordering::Acquire))
     }
 
     /// Last installed epoch.
     pub fn epoch(&self) -> u64 {
+        // ordering: Acquire pairs with the Release store in install().
         self.shared.epoch.load(Ordering::Acquire)
     }
 
     /// Total requests routed across every handle (published ones in
     /// reconciled mode).
     pub fn routed(&self) -> u64 {
-        self.shared.routed.load(Ordering::Acquire)
+        // ordering: Relaxed — pure statistics counter, written with
+        // Relaxed fetch_add; no payload is published through it, so an
+        // Acquire here would buy nothing (audit PR 9: downgraded).
+        self.shared.routed.load(Ordering::Relaxed)
     }
 
     /// Steering decisions made across every handle (published ones in
@@ -344,23 +370,27 @@ impl ConcurrentRouter {
     /// requests count in [`routed`](Self::routed) — the ratio is the
     /// front end's decision amortization.
     pub fn decisions(&self) -> u64 {
-        self.shared.decisions.load(Ordering::Acquire)
+        // ordering: Relaxed — statistics counter, same as routed().
+        self.shared.decisions.load(Ordering::Relaxed)
     }
 
     /// The current snapshot (leader-side introspection).
     pub fn snapshot(&self) -> Arc<TargetSnapshot> {
-        Arc::clone(&self.shared.snapshot.lock().expect("snapshot lock poisoned"))
+        Arc::clone(&self.shared.snapshot_guard())
     }
 
     /// Published global occupancy of `(class, device)`.  Exact once
     /// every handle has flushed; may lag unpublished deltas otherwise.
     pub fn occupancy(&self, class: usize, device: usize) -> Result<i64> {
         self.check_cell(class, device)?;
+        // ordering: Acquire pairs with the AcqRel RMWs (route CAS,
+        // flush fetch_add, complete fetch_sub) that publish the cell.
         Ok(self.shared.cell(class, device).load(Ordering::Acquire))
     }
 
     /// Published in-flight total (Σ occupancy).
     pub fn inflight(&self) -> i64 {
+        // ordering: Acquire — same pairing as occupancy().
         self.shared.occupancy.iter().map(|c| c.load(Ordering::Acquire)).sum()
     }
 
@@ -437,6 +467,8 @@ impl RouteHandle {
         let l = self.shared.l;
         let row = class * l;
         for j in 0..l {
+            // ordering: Acquire pairs with the Release liveness stores
+            // in mark_down / mark_up.
             self.alive_buf[j] = self.shared.alive[j].load(Ordering::Acquire);
         }
         if self.reconcile_every == 1 {
@@ -444,11 +476,18 @@ impl RouteHandle {
             // the whole decision when it moved underneath us.
             loop {
                 for j in 0..l {
+                    // ordering: Acquire pairs with the AcqRel RMWs that
+                    // publish cell updates (CAS / flush / complete).
                     self.occ_buf[j] = self.shared.occupancy[row + j].load(Ordering::Acquire);
                 }
                 let j = steer(&self.snap, class, &self.occ_buf, &self.alive_buf)
                     .ok_or_else(no_capacity)?;
                 let seen = self.occ_buf[j];
+                // ordering: AcqRel on success — the linearization point
+                // of the decision: Release publishes the increment to
+                // later Acquire row reads, Acquire keeps the steering
+                // reads above from sinking past it.  Acquire on failure
+                // feeds the retry's fresh row read.
                 if self.shared.occupancy[row + j]
                     .compare_exchange(
                         seen,
@@ -458,6 +497,8 @@ impl RouteHandle {
                     )
                     .is_ok()
                 {
+                    // ordering: Relaxed — statistics counters; readers
+                    // use Relaxed loads, no payload rides on them.
                     self.shared.routed.fetch_add(count as u64, Ordering::Relaxed);
                     self.shared.decisions.fetch_add(1, Ordering::Relaxed);
                     return Ok(j);
@@ -494,6 +535,7 @@ impl RouteHandle {
                 self.shared.k, self.shared.l
             )));
         }
+        // ordering: AcqRel — same contract as ConcurrentRouter::complete.
         self.shared.cell(class, device).fetch_sub(1, Ordering::AcqRel);
         Ok(())
     }
@@ -504,15 +546,19 @@ impl RouteHandle {
     pub fn flush(&mut self) {
         for (c, d) in self.local.iter_mut().enumerate() {
             if *d != 0 {
+                // ordering: AcqRel — publishes this handle's batched
+                // deltas to later Acquire row reads on other handles.
                 self.shared.occupancy[c].fetch_add(*d, Ordering::AcqRel);
                 *d = 0;
             }
         }
         if self.routed_pending != 0 {
+            // ordering: Relaxed — statistics counters (see route_batch).
             self.shared.routed.fetch_add(self.routed_pending, Ordering::Relaxed);
             self.routed_pending = 0;
         }
         if self.decisions_pending != 0 {
+            // ordering: Relaxed — statistics counters (see route_batch).
             self.shared.decisions.fetch_add(self.decisions_pending, Ordering::Relaxed);
             self.decisions_pending = 0;
         }
@@ -532,14 +578,18 @@ impl RouteHandle {
     }
 
     fn refresh_snapshot(&mut self) {
+        // ordering: Acquire pairs with the Release store in install();
+        // seeing a changed epoch guarantees the locked clone below
+        // yields that epoch's (or a newer) snapshot — never a stale one.
         if self.shared.epoch.load(Ordering::Acquire) != self.snap.epoch {
-            self.snap =
-                Arc::clone(&self.shared.snapshot.lock().expect("snapshot lock poisoned"));
+            self.snap = Arc::clone(&self.shared.snapshot_guard());
         }
     }
 
     fn resync_base(&mut self) {
         for (c, b) in self.base.iter_mut().enumerate() {
+            // ordering: Acquire — re-base on fully published cells
+            // (pairs with the AcqRel RMWs on the grid).
             *b = self.shared.occupancy[c].load(Ordering::Acquire);
         }
     }

@@ -31,6 +31,12 @@
 //! N`): it publishes the same epoch-versioned install unit as an
 //! immutable snapshot behind one atomic epoch, so routing threads
 //! never wait on a re-solve at all.
+//!
+//! Step 3's install/gather ordering (every shard installed before the
+//! new epoch becomes observable) is model-checked exhaustively over
+//! bounded interleavings in `tests/model_check.rs` (`--features
+//! model`), alongside the front end's snapshot-install and
+//! reconcile/complete protocols.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;

@@ -8,9 +8,10 @@
 //! all compute through per-device PJRT engines on worker threads.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+use crate::sync::{Arc, Condvar, Mutex};
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -32,6 +33,15 @@ pub const NN_WIDTH: usize = 256;
 pub const NN_BATCH: usize = 8;
 /// Sort row count × width of the `sort_small` artifact.
 const SORT_ELEMS: usize = 16 * 256;
+
+/// Wall-clock stamp for serving latency/throughput accounting.  The
+/// leader serves real traffic on real devices, so end-to-end latency is
+/// genuinely wall time; every `Instant::now` in this file funnels
+/// through here (simulation paths use an injected Clock instead).
+fn wall_now() -> Instant {
+    // srclint: allow(instant-now) — sole wall-time source of the serving leader; real latency is its job.
+    Instant::now()
+}
 
 /// Serving experiment configuration.
 #[derive(Debug, Clone)]
@@ -463,12 +473,12 @@ impl Coordinator {
             let j = steering.route(class)?;
             if class == 0 {
                 work_txs[j]
-                    .send(Work::Sort { id, class, arrived: Instant::now() })
+                    .send(Work::Sort { id, class, arrived: wall_now() })
                     .map_err(|_| Error::Runtime("device worker gone".into()))?;
             } else {
                 let row: Vec<f32> =
                     (0..NN_WIDTH).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
-                let p = Pending { id, row, arrived: Instant::now() };
+                let p = Pending { id, row, arrived: wall_now() };
                 if let Some(batch) = batchers[j].push(p) {
                     submit_batch(j, batch, batches, fill, flushes)?;
                 }
@@ -476,7 +486,7 @@ impl Coordinator {
             Ok(())
         };
 
-        let t0 = Instant::now();
+        let t0 = wall_now();
         // Fill the pipe.
         while issued < cfg.inflight as u64 && issued < cfg.total {
             issue(
@@ -689,7 +699,7 @@ impl Coordinator {
                         while let Ok(work) = rx.recv() {
                             match work {
                                 Work::Sort { id, class, arrived } => {
-                                    let t0 = Instant::now();
+                                    let t0 = wall_now();
                                     engine.sort_task("sort_small", &sort_in)?;
                                     let service_s = t0.elapsed().as_secs_f64();
                                     let _ = done.send(Done {
@@ -701,7 +711,7 @@ impl Coordinator {
                                     });
                                 }
                                 Work::Nn(batch) => {
-                                    let t0 = Instant::now();
+                                    let t0 = wall_now();
                                     engine.nn_task("nn_small", &batch.input, &w, &b)?;
                                     let service_s = t0.elapsed().as_secs_f64()
                                         / batch.requests.len().max(1) as f64;
@@ -832,7 +842,7 @@ impl Coordinator {
                                             .map(|_| rng.range_f64(-1.0, 1.0) as f32)
                                             .collect()
                                     };
-                                    let p = Pending { id, row, arrived: Instant::now() };
+                                    let p = Pending { id, row, arrived: wall_now() };
                                     if let Some(batch) = class_batchers[class].push(p) {
                                         dispatch_router_batch(
                                             class, batch, &mut handle, &mut nn_batchers,
@@ -877,7 +887,7 @@ impl Coordinator {
         let mut energy_sum = 0f64;
         let mut latency_sum = 0f64;
 
-        let t0 = Instant::now();
+        let t0 = wall_now();
         // Fill the pipe: one credit per in-flight slot.
         while issued < cfg.inflight as u64 && issued < cfg.total {
             credits.push();
@@ -1070,30 +1080,51 @@ fn dispatch_router_batch(
 /// withdraw one per generated request.  A condvar queue rather than an
 /// mpsc channel so N threads can block on it concurrently without
 /// serializing behind one receiver.
-struct CreditQueue {
+///
+/// Shutdown contract (deadlock freedom, gated by
+/// `deadlock-freedom` tests here and the bounded model in
+/// `tests/model_check.rs`): [`close`](CreditQueue::close) wakes *all*
+/// parked threads; a woken thread always re-reaches a terminal pop
+/// outcome because every wait is timed — remaining credits drain even
+/// after close, and `Closed` means closed AND empty.
+pub struct CreditQueue {
     /// (available credits, closed).
     state: Mutex<(u64, bool)>,
     ready: Condvar,
 }
 
-enum CreditPop {
+impl Default for CreditQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Outcome of one [`CreditQueue::pop`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CreditPop {
+    /// A credit was withdrawn.
     Credit,
+    /// The wait elapsed with no credit and the queue still open.
     Timeout,
+    /// Closed and fully drained — the consumer should exit.
     Closed,
 }
 
 impl CreditQueue {
-    fn new() -> Self {
+    /// An open queue with zero credits.
+    pub fn new() -> Self {
         Self { state: Mutex::new((0, false)), ready: Condvar::new() }
     }
 
-    fn push(&self) {
+    /// Deposit one credit and wake one waiter.
+    pub fn push(&self) {
         let mut s = self.state.lock().expect("credit lock poisoned");
         s.0 += 1;
         self.ready.notify_one();
     }
 
-    fn close(&self) {
+    /// Close the queue and wake every waiter (shutdown path).
+    pub fn close(&self) {
         let mut s = self.state.lock().expect("credit lock poisoned");
         s.1 = true;
         self.ready.notify_all();
@@ -1101,7 +1132,7 @@ impl CreditQueue {
 
     /// Withdraw a credit, waiting at most `wait`.  Remaining credits
     /// drain even after close; `Closed` means closed AND empty.
-    fn pop(&self, wait: Duration) -> CreditPop {
+    pub fn pop(&self, wait: Duration) -> CreditPop {
         let mut s = self.state.lock().expect("credit lock poisoned");
         if s.0 > 0 {
             s.0 -= 1;
@@ -1214,6 +1245,65 @@ mod tests {
             ..Default::default()
         };
         assert!(Coordinator::run(&cfg).is_err());
+    }
+
+    /// Deadlock freedom of the CreditQueue shutdown path: N consumer
+    /// threads parked on the condvar (long waits), producer deposits
+    /// some credits and closes while they sleep.  Every thread must
+    /// come back with `Closed` after draining exactly the deposited
+    /// credits — no thread may stay parked (the test would hang and
+    /// the harness time out).
+    #[test]
+    fn credit_queue_shutdown_unparks_all_waiters() {
+        let q = Arc::new(CreditQueue::new());
+        let consumers = 4;
+        let mut threads = Vec::new();
+        for _ in 0..consumers {
+            let q = Arc::clone(&q);
+            threads.push(std::thread::spawn(move || {
+                let mut credits = 0u64;
+                loop {
+                    // A wait far longer than the test: only push/close
+                    // wakeups can end it.
+                    match q.pop(Duration::from_secs(3600)) {
+                        CreditPop::Credit => credits += 1,
+                        CreditPop::Timeout => {}
+                        CreditPop::Closed => return credits,
+                    }
+                }
+            }));
+        }
+        // Let the consumers park, then deposit and close while parked.
+        std::thread::sleep(Duration::from_millis(20));
+        for _ in 0..7 {
+            q.push();
+        }
+        q.close();
+        let drained: u64 =
+            threads.into_iter().map(|t| t.join().expect("consumer panicked")).sum();
+        assert_eq!(drained, 7, "credits deposited before close must drain");
+        assert_eq!(q.pop(Duration::ZERO), CreditPop::Closed);
+    }
+
+    /// Credits deposited AFTER close still drain (the leader banks the
+    /// final completions while front-end threads are shutting down).
+    #[test]
+    fn credit_queue_drains_after_close() {
+        let q = CreditQueue::new();
+        q.close();
+        q.push();
+        q.push();
+        assert_eq!(q.pop(Duration::ZERO), CreditPop::Credit);
+        assert_eq!(q.pop(Duration::ZERO), CreditPop::Credit);
+        assert_eq!(q.pop(Duration::ZERO), CreditPop::Closed);
+        assert_eq!(q.pop(Duration::ZERO), CreditPop::Closed, "Closed is terminal");
+    }
+
+    /// An open, empty queue times out rather than blocking forever.
+    #[test]
+    fn credit_queue_times_out_when_open_and_empty() {
+        let q = CreditQueue::new();
+        assert_eq!(q.pop(Duration::from_millis(1)), CreditPop::Timeout);
     }
 
     // Full serving runs need artifacts: see `tests/serving_e2e.rs` and

@@ -40,7 +40,7 @@ pub mod stats;
 pub use batcher::{Batch, Clock, DynamicBatcher, MonotonicClock, VirtualClock};
 pub use frontend::{ConcurrentRouter, RouteHandle, TargetSnapshot};
 pub use global::ShardedControl;
-pub use leader::{Coordinator, ServeConfig, ServeReport};
+pub use leader::{Coordinator, CreditPop, CreditQueue, ServeConfig, ServeReport};
 pub use router::{Router, RouterConfig, TargetUpdate};
 pub use shard::{ShardLeader, ShardSnapshot};
 pub use stats::{LatencyHistogram, RateEstimator};

@@ -38,6 +38,13 @@
 //! [`super::frontend::TargetSnapshot`] — same atomicity contract,
 //! enforced structurally (one `Arc` swap) instead of by a `&mut self`
 //! install, so concurrent routing threads get it for free.
+//!
+//! The install-before-publish ordering this module's epoch semantics
+//! rely on is model-checked: `tests/model_check.rs`
+//! (`--features model`) exhaustively explores bounded interleavings of
+//! shard installs against a concurrent gather and proves a gatherer
+//! that observes the new global epoch never sees a stale shard — and
+//! that inverting the publish order IS caught by the explorer.
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;

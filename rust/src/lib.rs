@@ -42,6 +42,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod lint;
 pub mod model;
 pub mod platform;
 pub mod policy;
@@ -49,6 +50,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod solver;
+pub mod sync;
 pub mod testkit;
 
 pub use error::{Error, Result};

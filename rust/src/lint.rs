@@ -1,0 +1,555 @@
+//! In-repo source lint engine behind the `srclint` bin (`cargo run
+//! --bin srclint`).  Zero dependencies, like every other substrate in
+//! the crate: a small hand-rolled lexer masks comments, strings and
+//! char literals out of each source file, and a handful of textual
+//! rules then enforce repo invariants that `rustc`/clippy cannot see:
+//!
+//! | rule                 | invariant                                              |
+//! |----------------------|--------------------------------------------------------|
+//! | `raw-sync`           | no `std::sync::` outside `src/sync/` (use `crate::sync`; `std::sync::mpsc` exempt) |
+//! | `hot-path-panic`     | no `unwrap`/`expect`/`panic!`/`unreachable!` in hot-path modules (`sim/`, `coordinator/frontend.rs`, `policy/target.rs`) |
+//! | `partial-cmp`        | no `partial_cmp` (floats must use `total_cmp`)         |
+//! | `instant-now`        | no `Instant::now` outside `impl ... Clock for` blocks  |
+//! | `ordering-rationale` | every memory-`Ordering` use carries an `// ordering:` rationale comment |
+//!
+//! `#[cfg(test)]` modules are exempt from every rule.  Individual
+//! sites are suppressed with `// srclint: allow(<rule>) — <reason>`
+//! on the same line or the line above; the reason is mandatory (an
+//! allow without a justification is itself a finding).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One rule violation at a source location.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the lint root (e.g. `coordinator/frontend.rs`).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Hot-path modules where panicking is banned (prefix match on the
+/// path relative to `src/`).
+const HOT_PATHS: &[&str] = &["sim/", "coordinator/frontend.rs", "policy/target.rs"];
+
+/// Memory-ordering variants that require a rationale comment.
+const ORDERINGS: &[&str] = &[
+    "Ordering::Relaxed",
+    "Ordering::Acquire",
+    "Ordering::Release",
+    "Ordering::AcqRel",
+    "Ordering::SeqCst",
+];
+
+// ---------------------------------------------------------------------------
+// Lexer: mask comments / strings / char literals, keep comment text
+// ---------------------------------------------------------------------------
+
+/// Source split into a masked code view (comments, string and char
+/// literal *contents* blanked to spaces, line structure preserved) and
+/// the comment text per line.
+struct Masked {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn mask(src: &str) -> Masked {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut code: Vec<String> = vec![String::new()];
+    let mut comments: Vec<String> = vec![String::new()];
+    let push = |v: &mut Vec<String>, c: char| v.last_mut().expect("never empty").push(c);
+    let newline = |code: &mut Vec<String>, comments: &mut Vec<String>| {
+        code.push(String::new());
+        comments.push(String::new());
+    };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'\n' {
+            newline(&mut code, &mut comments);
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc comments).
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            while i < n && b[i] != b'\n' {
+                push(&mut comments, b[i] as char);
+                push(&mut code, ' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            push(&mut comments, '/');
+            push(&mut comments, '*');
+            push(&mut code, ' ');
+            push(&mut code, ' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    newline(&mut code, &mut comments);
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    push(&mut comments, '/');
+                    push(&mut comments, '*');
+                    push(&mut code, ' ');
+                    push(&mut code, ' ');
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    push(&mut comments, '*');
+                    push(&mut comments, '/');
+                    push(&mut code, ' ');
+                    push(&mut code, ' ');
+                    i += 2;
+                } else {
+                    push(&mut comments, b[i] as char);
+                    push(&mut code, ' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# / br#"..."# (not part of an identifier).
+        let prev_ident = i > 0 && is_ident(b[i - 1]);
+        if !prev_ident && (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r')) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && b[j] == b'#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == b'"' {
+                // Emit the opening tokens as spaces.
+                while i <= j {
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                }
+                // Scan for closing quote + hashes.
+                'raw: while i < n {
+                    if b[i] == b'\n' {
+                        newline(&mut code, &mut comments);
+                        i += 1;
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        let mut k = 0usize;
+                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == b'#' {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                push(&mut code, ' ');
+                                push(&mut comments, ' ');
+                                i += 1;
+                            }
+                            break 'raw;
+                        }
+                    }
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Ordinary string.
+        if c == b'"' {
+            push(&mut code, ' ');
+            push(&mut comments, ' ');
+            i += 1;
+            while i < n {
+                if b[i] == b'\n' {
+                    newline(&mut code, &mut comments);
+                    i += 1;
+                } else if b[i] == b'\\' && i + 1 < n {
+                    push(&mut code, ' ');
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    push(&mut comments, ' ');
+                    i += 2;
+                } else if b[i] == b'"' {
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                    break;
+                } else {
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime: only 'x' or '\...' are literals.
+        if c == b'\'' {
+            let is_escape = i + 1 < n && b[i + 1] == b'\\';
+            let is_short = i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\\';
+            if is_escape || is_short {
+                push(&mut code, ' ');
+                push(&mut comments, ' ');
+                i += 1;
+                while i < n && b[i] != b'\'' {
+                    if b[i] == b'\\' {
+                        i += 1;
+                        push(&mut code, ' ');
+                        push(&mut comments, ' ');
+                    }
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                }
+                if i < n {
+                    push(&mut code, ' ');
+                    push(&mut comments, ' ');
+                    i += 1;
+                }
+                continue;
+            }
+            // Lifetime: fall through as plain code.
+        }
+        push(&mut code, c as char);
+        push(&mut comments, ' ');
+        i += 1;
+    }
+    Masked { code, comments }
+}
+
+// ---------------------------------------------------------------------------
+// Region detection (test modules, Clock impls)
+// ---------------------------------------------------------------------------
+
+/// Mark the lines covered by a brace-delimited block that starts at (or
+/// just after) `start`, in `exempt`.
+fn mark_block(code: &[String], start: usize, exempt: &mut [bool]) {
+    let mut depth = 0i32;
+    let mut seen_open = false;
+    for (li, line) in code.iter().enumerate().skip(start) {
+        for ch in line.chars() {
+            if ch == '{' {
+                depth += 1;
+                seen_open = true;
+            } else if ch == '}' {
+                depth -= 1;
+            }
+        }
+        exempt[li] = true;
+        if seen_open && depth <= 0 {
+            return;
+        }
+    }
+}
+
+/// Lines inside `#[cfg(test)] mod` regions (all rules skip these).
+fn test_regions(code: &[String]) -> Vec<bool> {
+    let mut exempt = vec![false; code.len()];
+    for i in 0..code.len() {
+        if code[i].contains("#[cfg(") && code[i].contains("test") {
+            // The cfg may gate a `mod tests` a line or two below.
+            let lookahead = (i + 3).min(code.len());
+            if code[i..lookahead].iter().any(|l| {
+                l.split_whitespace().any(|w| w == "mod")
+                    || l.contains("mod tests")
+                    || l.contains("pub mod")
+            }) {
+                mark_block(code, i, &mut exempt);
+            }
+        }
+    }
+    exempt
+}
+
+/// Lines inside `impl ... Clock for ...` blocks (exempt from
+/// `instant-now`: a Clock impl is exactly where wall time belongs).
+fn clock_impl_regions(code: &[String]) -> Vec<bool> {
+    let mut exempt = vec![false; code.len()];
+    for i in 0..code.len() {
+        let l = &code[i];
+        if l.contains("impl") && l.contains("Clock for") {
+            mark_block(code, i, &mut exempt);
+        }
+    }
+    exempt
+}
+
+// ---------------------------------------------------------------------------
+// Suppressions
+// ---------------------------------------------------------------------------
+
+/// Returns `Some(justified)` if line `li` (0-based) or the line above
+/// carries `srclint: allow(<rule>)`; `justified` is false when the
+/// allow has no reason text after the closing paren.
+fn allow_at(comments: &[String], li: usize, rule: &str) -> Option<bool> {
+    let needle = format!("srclint: allow({rule})");
+    for cand in [Some(li), li.checked_sub(1)].into_iter().flatten() {
+        if let Some(pos) = comments[cand].find(&needle) {
+            let after = &comments[cand][pos + needle.len()..];
+            let reason: String =
+                after.chars().filter(|c| c.is_alphanumeric() || *c == ' ').collect();
+            return Some(reason.trim().len() >= 8);
+        }
+    }
+    None
+}
+
+/// True if an `ordering:` rationale comment covers line `li`: on the
+/// same line, or in the comment block above the enclosing statement
+/// (the search walks up through pure-comment lines and the lines of
+/// the statement itself, and stops at a blank line or after crossing
+/// one complete earlier statement).
+fn ordering_rationale_near(m: &Masked, li: usize) -> bool {
+    if m.comments[li].contains("ordering:") {
+        return true;
+    }
+    let mut i = li;
+    let mut crossed_stmt = false;
+    while i > 0 {
+        i -= 1;
+        if m.comments[i].contains("ordering:") {
+            return true;
+        }
+        let code = m.code[i].trim();
+        if code.is_empty() {
+            if m.comments[i].trim().is_empty() {
+                return false; // blank line ends the search
+            }
+            continue; // pure comment line
+        }
+        if code.contains(';') || code.contains('{') || code.contains('}') {
+            if crossed_stmt {
+                return false;
+            }
+            crossed_stmt = true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rules
+// ---------------------------------------------------------------------------
+
+fn check_line(
+    rel: &str,
+    li: usize,
+    m: &Masked,
+    in_test: bool,
+    in_clock_impl: bool,
+    out: &mut Vec<Finding>,
+) {
+    if in_test {
+        return;
+    }
+    let code = &m.code[li];
+    let in_sync = rel.starts_with("sync/");
+    let hot = HOT_PATHS.iter().any(|p| rel.starts_with(p));
+    let mut report = |rule: &'static str, message: String| match allow_at(&m.comments, li, rule) {
+        Some(true) => {}
+        Some(false) => out.push(Finding {
+            file: rel.to_string(),
+            line: li + 1,
+            rule,
+            message: format!("suppression without a justification: {message}"),
+        }),
+        None => out.push(Finding { file: rel.to_string(), line: li + 1, rule, message }),
+    };
+
+    if !in_sync && code.contains("std::sync::") && !code.contains("std::sync::mpsc") {
+        report(
+            "raw-sync",
+            "raw std::sync primitive — import from crate::sync so the model checker can \
+             instrument it"
+                .to_string(),
+        );
+    }
+    if hot {
+        for pat in [".unwrap(", ".expect(", "panic!(", "unreachable!("] {
+            if code.contains(pat) {
+                report(
+                    "hot-path-panic",
+                    format!("`{pat}` in a hot-path module — return Result or justify inline"),
+                );
+            }
+        }
+    }
+    if code.contains("partial_cmp") {
+        report(
+            "partial-cmp",
+            "partial_cmp on floats is NaN-unsound — use total_cmp".to_string(),
+        );
+    }
+    if code.contains("Instant::now") && !in_clock_impl {
+        report(
+            "instant-now",
+            "Instant::now outside a Clock impl breaks virtual-time determinism — inject a \
+             Clock or justify inline"
+                .to_string(),
+        );
+    }
+    if !in_sync {
+        for ord in ORDERINGS {
+            if code.contains(ord) && !ordering_rationale_near(m, li) {
+                report(
+                    "ordering-rationale",
+                    format!("{ord} without an `// ordering:` rationale comment nearby"),
+                );
+                break;
+            }
+        }
+    }
+}
+
+/// Lint one file's source text.  `rel` is the path relative to the
+/// `src/` root, with forward slashes.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let m = mask(src);
+    let tests = test_regions(&m.code);
+    let clocks = clock_impl_regions(&m.code);
+    let mut out = Vec::new();
+    for li in 0..m.code.len() {
+        check_line(rel, li, &m, tests[li], clocks[li], &mut out);
+    }
+    out
+}
+
+/// Recursively lint every `.rs` file under `src_root`.  Returns the
+/// findings and the number of files scanned.
+pub fn lint_tree(src_root: &Path) -> std::io::Result<(Vec<Finding>, usize)> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    collect_rs(src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for f in &files {
+        let rel = f
+            .strip_prefix(src_root)
+            .unwrap_or(f)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(f)?;
+        findings.extend(lint_source(&rel, &src));
+    }
+    Ok((findings, files.len()))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn flags_raw_sync_outside_sync_module() {
+        let src = "use std::sync::Mutex;\n";
+        assert_eq!(rules(&lint_source("coordinator/foo.rs", src)), ["raw-sync"]);
+        assert!(lint_source("sync/model.rs", src).is_empty());
+    }
+
+    #[test]
+    fn mpsc_is_exempt_from_raw_sync() {
+        let src = "use std::sync::mpsc::channel;\n";
+        assert!(lint_source("coordinator/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_hot_path_panics_only_in_hot_paths() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert_eq!(rules(&lint_source("sim/engine.rs", src)), ["hot-path-panic"]);
+        assert!(lint_source("report/table.rs", src).is_empty());
+    }
+
+    #[test]
+    fn flags_partial_cmp_and_instant_now() {
+        let src = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }\n";
+        assert_eq!(rules(&lint_source("policy/x.rs", src)), ["partial-cmp"]);
+        let src = "fn t() { let _ = Instant::now(); }\n";
+        assert_eq!(rules(&lint_source("policy/x.rs", src)), ["instant-now"]);
+    }
+
+    #[test]
+    fn clock_impls_may_read_wall_time() {
+        let src = "impl Clock for MonotonicClock {\n    fn now(&self) -> Instant { Instant::now() }\n}\n";
+        assert!(lint_source("coordinator/batcher.rs", src).is_empty());
+    }
+
+    #[test]
+    fn ordering_needs_rationale() {
+        let bad = "let v = x.load(Ordering::Acquire);\n";
+        assert_eq!(rules(&lint_source("coordinator/f.rs", bad)), ["ordering-rationale"]);
+        let good = "// ordering: pairs with the Release store in install().\nlet v = x.load(Ordering::Acquire);\n";
+        assert!(lint_source("coordinator/f.rs", good).is_empty());
+        let same_line = "let v = x.load(Ordering::Relaxed); // ordering: counter, no sync.\n";
+        assert!(lint_source("coordinator/f.rs", same_line).is_empty());
+    }
+
+    #[test]
+    fn allow_requires_justification() {
+        let justified =
+            "// srclint: allow(partial-cmp) — comparing non-float newtype keys here.\nlet c = a.partial_cmp(&b);\n";
+        assert!(lint_source("policy/x.rs", justified).is_empty());
+        let bare = "// srclint: allow(partial-cmp)\nlet c = a.partial_cmp(&b);\n";
+        let f = lint_source("policy/x.rs", bare);
+        assert_eq!(rules(&f), ["partial-cmp"]);
+        assert!(f[0].message.contains("justification"));
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { let _ = Instant::now(); x.unwrap(); }\n}\n";
+        assert!(lint_source("sim/engine.rs", src).is_empty());
+    }
+
+    #[test]
+    fn strings_and_comments_are_masked() {
+        let src = "// Instant::now in a comment is fine\nlet s = \"std::sync::Mutex partial_cmp\";\n";
+        assert!(lint_source("coordinator/f.rs", src).is_empty());
+        let raw = "let s = r#\"Instant::now() panic!(\"x\")\"#;\n";
+        assert!(lint_source("sim/engine.rs", raw).is_empty());
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_lex() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\''; let d = 'y'; d }\nlet v = q.partial_cmp(&w);\n";
+        assert_eq!(rules(&lint_source("policy/x.rs", src)), ["partial-cmp"]);
+    }
+
+    #[test]
+    fn self_lint_is_clean() {
+        // The lint engine's own source (full of rule-pattern strings)
+        // must not flag itself.
+        let src = include_str!("lint.rs");
+        assert!(lint_source("lint.rs", src).is_empty(), "{:?}", lint_source("lint.rs", src));
+    }
+}

@@ -84,6 +84,7 @@ pub fn calibrate(runs: u32) -> Result<Calibration> {
             Ok(())
         };
         once()?; // compile + warm
+        // srclint: allow(instant-now) — microbenchmark harness measuring real kernel wall time.
         let t0 = Instant::now();
         for _ in 0..runs {
             once()?;
@@ -149,6 +150,7 @@ pub fn measure_rates(devices: &[DeviceSpec], runs: u32) -> Result<MeasuredRates>
             let kind = dev.kernels[i];
             let reps = dev.reps[i];
             run_once(kind)?; // warm the executable cache
+            // srclint: allow(instant-now) — microbenchmark harness measuring real kernel wall time.
             let t0 = Instant::now();
             for _ in 0..runs {
                 for _ in 0..reps {

@@ -152,6 +152,7 @@ impl Device {
                 while let Ok(task) = rx.recv() {
                     let kind = spec_clone.kernels[task.ttype];
                     let reps = spec_clone.reps[task.ttype];
+                    // srclint: allow(instant-now) — worker thread times real kernel service on real devices.
                     let t0 = Instant::now();
                     let mut checksum = 0f32;
                     for _ in 0..reps {

@@ -68,9 +68,7 @@ pub fn initialize(mu: &AffinityMatrix, populations: &[u32]) -> Result<StateMatri
             1 => n.set(row, cols[0], ni),
             _ => {
                 // Sort claimed columns by this row's rate, descending.
-                cols.sort_by(|&a, &b| {
-                    mu.rate(row, b).partial_cmp(&mu.rate(row, a)).unwrap()
-                });
+                cols.sort_by(|&a, &b| mu.rate(row, b).total_cmp(&mu.rate(row, a)));
                 let mut left = ni;
                 for &j in &cols {
                     if left == 0 {

@@ -17,6 +17,7 @@ impl Stopwatch {
 
     /// Time one closure invocation and record it; returns its output.
     pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        // srclint: allow(instant-now) — wall-clock timer utility, the one abstraction reports time through.
         let t0 = Instant::now();
         let out = f();
         self.samples.push(t0.elapsed());

@@ -181,6 +181,7 @@ impl Processor {
                         }
                     }
                     Discipline::Lcfs => {
+                        // srclint: allow(hot-path-panic) — callers guard on occupancy before taking the last resident.
                         let r = self.items.last_mut().expect("occupancy > 0");
                         r.key -= dt * r.rate;
                         if r.key < 0.0 {
@@ -237,6 +238,7 @@ impl Processor {
                 self.last_update + r.key / r.rate
             }
             Discipline::Lcfs => {
+                // srclint: allow(hot-path-panic) — callers guard on occupancy before taking the last resident.
                 let r = self.items.last().expect("occupancy > 0");
                 self.last_update + r.key / r.rate
             }
@@ -264,6 +266,7 @@ impl Processor {
                 (r.key, r.rate)
             }
             Discipline::Lcfs => {
+                // srclint: allow(hot-path-panic) — callers guard on occupancy before taking the last resident.
                 let r = self.items.last().expect("occupancy > 0");
                 (r.key, r.rate)
             }
@@ -286,6 +289,7 @@ impl Processor {
                 }
                 r
             }
+            // srclint: allow(hot-path-panic) — callers guard on occupancy before taking the last resident.
             Discipline::Lcfs => self.items.pop().expect("occupancy > 0"),
         };
         self.work_time -= rem.max(0.0) / rate;

@@ -23,8 +23,7 @@
 //! counts (`--reps 5`) get honestly wide intervals instead of the
 //! normal approximation's overconfident ±1.96·se.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use crate::sync::{AtomicUsize, Mutex, MutexGuard, Ordering};
 
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
@@ -111,6 +110,12 @@ fn rep_seed(base: u64, cell_salt: u64, cell: usize, rep: u32) -> u64 {
     SplitMix64::new(salt).next()
 }
 
+/// Lock a replication-runner mutex, propagating worker panics.
+fn locked<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // srclint: allow(hot-path-panic) — poisoning re-raises a worker panic, the right failure mode for a sweep.
+    m.lock().expect("replication mutex poisoned")
+}
+
 /// Run every cell × replication across the plan's worker threads and
 /// aggregate per-cell statistics (in cell order).
 pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellStats>> {
@@ -132,11 +137,13 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
             scope.spawn(|| {
                 let mut arena = SimArena::new();
                 loop {
+                    // ordering: Relaxed — the counter only hands out unique job
+                    // indices; result slots are published by the Mutex below.
                     let i = next.fetch_add(1, Ordering::Relaxed);
                     if i >= jobs {
                         break;
                     }
-                    if failure.lock().expect("failure lock").is_some() {
+                    if locked(&failure).is_some() {
                         break;
                     }
                     let (c, r) = (i / reps, (i % reps) as u32);
@@ -149,7 +156,7 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
                     });
                     match run {
                         Ok(res) => {
-                            results.lock().expect("results lock")[i] = Some((
+                            locked(&results)[i] = Some((
                                 res.throughput,
                                 res.mean_response,
                                 res.mean_energy,
@@ -157,7 +164,7 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
                             ));
                         }
                         Err(e) => {
-                            *failure.lock().expect("failure lock") = Some(e);
+                            *locked(&failure) = Some(e);
                             break;
                         }
                     }
@@ -166,9 +173,11 @@ pub fn run_cells(cells: &[SimCell], plan: &ReplicationPlan) -> Result<Vec<CellSt
         }
     });
 
+    // srclint: allow(hot-path-panic) — into_inner after every worker joined; poisoning re-raises a worker panic.
     if let Some(e) = failure.into_inner().expect("failure lock") {
         return Err(e);
     }
+    // srclint: allow(hot-path-panic) — same join-then-unwrap pattern as the failure flag above.
     let results = results.into_inner().expect("results lock");
     let mut out = Vec::with_capacity(cells.len());
     for (c, cell) in cells.iter().enumerate() {
@@ -314,6 +323,7 @@ pub fn run_dynamic_cells(cells: &[DynCell], plan: &ReplicationPlan) -> Result<Ve
         let mut class_x_sum = vec![0.0f64; k];
         let mut miss_sum = vec![0.0f64; k];
         for _ in 0..reps {
+            // srclint: allow(hot-path-panic) — parallel_map returns exactly one slot per job by construction.
             let (x, resolves, class_x, miss, energy, redispatched, downtime) =
                 it.next().expect("one slot per job")?;
             xs.push(x);
@@ -403,18 +413,21 @@ where
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
+                // ordering: Relaxed — hands out unique indices only; slots publish via the Mutex.
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
                 let r = f(i, &items[i]);
-                out.lock().expect("parallel_map lock")[i] = Some(r);
+                locked(&out)[i] = Some(r);
             });
         }
     });
     out.into_inner()
+        // srclint: allow(hot-path-panic) — into_inner after every worker joined; poisoning re-raises a worker panic.
         .expect("parallel_map lock")
         .into_iter()
+        // srclint: allow(hot-path-panic) — every index below items len was handed out and filled.
         .map(|slot| slot.expect("worker filled every slot"))
         .collect()
 }

@@ -33,7 +33,9 @@ pub fn split_populations(n: u32, eta: f64) -> (u32, u32) {
 
 /// The §5 simulation affinity matrix (P1-biased): μ = [[20, 15], [3, 8]].
 pub fn paper_two_type_mu() -> AffinityMatrix {
-    AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0).expect("static matrix")
+    AffinityMatrix::two_type(20.0, 15.0, 3.0, 8.0)
+        // srclint: allow(hot-path-panic) — hard-coded paper constants are always a valid matrix.
+        .expect("static matrix")
 }
 
 /// Table-3 derived matrices for the §7 platform cases.
@@ -42,12 +44,16 @@ pub mod table3 {
 
     /// quicksort-500 + NN-2000 → general-symmetric (§7.4).
     pub fn general_symmetric() -> AffinityMatrix {
-        AffinityMatrix::two_type(928.0, 3.61, 587.0, 2398.0).expect("static matrix")
+        AffinityMatrix::two_type(928.0, 3.61, 587.0, 2398.0)
+        // srclint: allow(hot-path-panic) — hard-coded paper constants are always a valid matrix.
+        .expect("static matrix")
     }
 
     /// quicksort-1000 + NN-2000 → P2-biased (§7.3).
     pub fn p2_biased() -> AffinityMatrix {
-        AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0).expect("static matrix")
+        AffinityMatrix::two_type(253.0, 0.911, 587.0, 2398.0)
+        // srclint: allow(hot-path-panic) — hard-coded paper constants are always a valid matrix.
+        .expect("static matrix")
     }
 
     /// The general-symmetric rates tiled across `l` devices (device j
@@ -71,6 +77,7 @@ pub fn three_class_mu() -> AffinityMatrix {
         vec![5.0, 12.0, 3.0],
         vec![2.0, 4.0, 18.0],
     ])
+    // srclint: allow(hot-path-panic) — hard-coded paper constants are always a valid matrix.
     .expect("static matrix")
 }
 
@@ -91,7 +98,9 @@ pub fn three_class_flip_scale() -> Vec<f64> {
 /// cost — the trade `tests/priority_e2e.rs` and
 /// `benches/ablation_priority.rs` quantify.
 pub fn priority_mu() -> AffinityMatrix {
-    AffinityMatrix::two_type(30.0, 3.5, 31.0, 16.0).expect("static matrix")
+    AffinityMatrix::two_type(30.0, 3.5, 31.0, 16.0)
+        // srclint: allow(hot-path-panic) — hard-coded paper constants are always a valid matrix.
+        .expect("static matrix")
 }
 
 /// A random k×l system: μ entries uniform in [lo, hi).

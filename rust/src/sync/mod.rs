@@ -1,0 +1,95 @@
+//! Concurrency shim: the one gate between this crate and `std::sync`.
+//!
+//! Every concurrent data structure in the crate (the lock-free front
+//! end, the batcher clocks, the replication runner, the serving
+//! leader's credit queue) imports its atomics, locks and condvars from
+//! here instead of `std::sync` — a rule enforced mechanically by
+//! `srclint` (`raw-sync`: no `std::sync::` outside `src/sync/`, with
+//! `std::sync::mpsc` exempted since channels need no instrumentation
+//! for the protocols we check).
+//!
+//! * **Normal builds** (no `model` feature): every name below is a
+//!   plain re-export of the `std` type.  The shim compiles to nothing —
+//!   zero cost, byte-for-byte the types the code always used — which
+//!   `tests` in this module pin with `TypeId` equality assertions.
+//! * **`--features model` builds**: the same names resolve to the
+//!   instrumented wrappers in [`model`], whose every operation is a
+//!   scheduling point for the in-repo DFS model checker
+//!   ([`model::Checker`]).  Outside a checker run the wrappers fall
+//!   through to the real `std` primitives, so the full test suite still
+//!   passes under the feature.
+//!
+//! ## Shim rules
+//!
+//! 1. Import `Atomic*`, `Mutex`, `Condvar`, `Arc`, `Ordering` from
+//!    `crate::sync`, never from `std::sync` (lint: `raw-sync`).
+//! 2. Every explicit memory `Ordering::*` argument carries an
+//!    `// ordering:` rationale comment (lint: `ordering-rationale`) —
+//!    the proof obligation lives next to the code it justifies.
+//! 3. Protocols built on these types should have a bounded model in
+//!    `tests/model_check.rs`; the checker explores sequentially
+//!    consistent interleavings exhaustively (2–3 threads, preemption
+//!    bound), while the weak-memory axis is covered by the Miri and
+//!    ThreadSanitizer CI jobs.
+//!
+//! `Arc` is re-exported un-instrumented in both modes: the checker
+//! models interleavings of operations, and `Arc`'s own refcounting is
+//! `std`'s problem (Miri checks it).
+
+#[cfg(feature = "model")]
+pub mod model;
+
+#[cfg(feature = "model")]
+pub use model::{
+    AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Condvar, Mutex, MutexGuard,
+    WaitTimeoutResult,
+};
+
+#[cfg(not(feature = "model"))]
+pub use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize};
+#[cfg(not(feature = "model"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+pub use std::sync::atomic::Ordering;
+pub use std::sync::Arc;
+
+#[cfg(all(test, not(feature = "model")))]
+mod tests {
+    use std::any::TypeId;
+
+    /// Satellite gate (shim transparency): in a non-`model` build the
+    /// shim names ARE the `std` types — not newtypes, not wrappers —
+    /// so the normal-build hot paths cannot pay a single instruction
+    /// for the existence of the model checker.
+    #[test]
+    fn non_model_shim_is_exactly_std() {
+        assert_eq!(
+            TypeId::of::<crate::sync::AtomicU64>(),
+            TypeId::of::<std::sync::atomic::AtomicU64>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::AtomicI64>(),
+            TypeId::of::<std::sync::atomic::AtomicI64>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::AtomicBool>(),
+            TypeId::of::<std::sync::atomic::AtomicBool>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::AtomicUsize>(),
+            TypeId::of::<std::sync::atomic::AtomicUsize>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::Mutex<u64>>(),
+            TypeId::of::<std::sync::Mutex<u64>>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::Condvar>(),
+            TypeId::of::<std::sync::Condvar>()
+        );
+        assert_eq!(
+            TypeId::of::<crate::sync::Arc<u64>>(),
+            TypeId::of::<std::sync::Arc<u64>>()
+        );
+    }
+}

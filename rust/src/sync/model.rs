@@ -1,0 +1,1130 @@
+//! In-repo loom-style DFS model checker (compiled only with
+//! `--features model`).
+//!
+//! [`Checker::run`] executes a closure repeatedly, once per distinct
+//! bounded interleaving of its model threads, and reports the first
+//! schedule whose assertions fail (or that deadlocks).  The design is
+//! token-passing: model threads are real OS threads, but exactly one
+//! holds the *token* at any instant, and every instrumented operation
+//! (atomic access, mutex lock/unlock, condvar wait/notify, spawn,
+//! join) is a scheduling point where the token may move.  The explorer
+//! enumerates schedules depth-first over the recorded choice points —
+//! re-running the closure with a longer forced prefix each time — with
+//! two bounds to keep the state space finite: a step cap
+//! ([`Checker::max_steps`]) and a preemption bound
+//! ([`Checker::preemption_bound`], the classic CHESS-style bound: only
+//! so many involuntary context switches per execution).
+//!
+//! What the model covers, and what it does not:
+//!
+//! * **Covered:** all sequentially consistent interleavings of
+//!   instrumented operations within the bounds, mutex blocking,
+//!   condvar wait/notify (no spurious wakeups; `notify_one` wakes the
+//!   lowest-tid waiter), deadlock detection, and `wait_timeout`
+//!   modeled as *timeout-fires-only-at-quiescence*: a timed wait wakes
+//!   with `timed_out() == true` exactly when no other thread can run,
+//!   which keeps exploration bounded while still exercising both the
+//!   notified and timed-out paths.
+//! * **Not covered:** weak-memory reorderings (every access is
+//!   executed under the serializing token, so `Relaxed` behaves like
+//!   `SeqCst` here).  The relaxed-memory axis is delegated to the Miri
+//!   and ThreadSanitizer CI jobs — see `.github/workflows/sanitizers.yml`.
+//!
+//! Closures under test must be deterministic given the schedule
+//! (no wall-clock time, no OS randomness) and must create the shared
+//! state they exercise *inside* the closure, so each execution starts
+//! fresh.  Spawn model threads with [`spawn`]; everything they touch
+//! concurrently must go through the instrumented types below, which
+//! fall through to plain `std` behavior when used outside a
+//! [`Checker::run`] (so the ordinary test suite still passes when the
+//! crate is compiled with the feature enabled).
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{
+    AtomicU64 as StdAtomicU64, AtomicUsize as StdAtomicUsize, Ordering as AtomOrd,
+};
+use std::sync::{
+    Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard,
+    PoisonError,
+};
+use std::time::Duration;
+
+pub use std::sync::atomic::Ordering;
+
+// ---------------------------------------------------------------------------
+// Scheduler core
+// ---------------------------------------------------------------------------
+
+/// Panic payload used to unwind secondary threads once an execution has
+/// already failed; the thread wrapper recognizes it and does not record
+/// it as a violation of its own.
+struct Abort;
+
+#[derive(Clone, Debug, PartialEq)]
+enum TState {
+    Runnable,
+    BlockedMutex(usize),
+    BlockedCondvar { cv: usize, timed: bool },
+    BlockedJoin(usize),
+    Finished,
+}
+
+#[derive(Clone, Debug)]
+struct Slot {
+    state: TState,
+    /// Set when a `BlockedCondvar { timed: true }` thread was woken by
+    /// the quiescence rule rather than a notify.
+    timed_out: bool,
+}
+
+impl Slot {
+    fn runnable() -> Self {
+        Slot { state: TState::Runnable, timed_out: false }
+    }
+}
+
+struct State {
+    threads: Vec<Slot>,
+    /// Thread id currently holding the token.
+    current: usize,
+    /// Forced choice indices for this execution (DFS replay prefix).
+    prefix: Vec<usize>,
+    /// Recorded `(num_options, chosen_index)` per multi-option choice.
+    trace: Vec<(usize, usize)>,
+    /// Number of multi-option decisions taken so far.
+    decisions: usize,
+    steps: usize,
+    max_steps: usize,
+    preemptions: usize,
+    preemption_bound: usize,
+    mutex_owner: Vec<Option<usize>>,
+    condvars: usize,
+    failure: Option<String>,
+}
+
+struct Sched {
+    /// Execution generation, used to invalidate mutex/condvar ids that
+    /// leak across executions via captured state.
+    gen: u32,
+    m: StdMutex<State>,
+    cv: StdCondvar,
+    handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+static EXEC_GEN: StdAtomicU64 = StdAtomicU64::new(1);
+
+#[derive(Clone)]
+struct Ctx {
+    sched: Arc<Sched>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+fn current_ctx() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// Scheduling point for an instrumented operation performed outside any
+/// model run: a no-op.
+fn sched_op() {
+    if let Some(ctx) = current_ctx() {
+        ctx.sched.yield_now(ctx.tid);
+    }
+}
+
+impl Sched {
+    fn locked(&self) -> std::sync::MutexGuard<'_, State> {
+        match self.m.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    /// Pick the next thread to hold the token.  Called with the state
+    /// lock held; `yielder` has already updated its own slot.
+    fn reschedule(&self, s: &mut State, yielder: usize) {
+        if s.failure.is_some() {
+            self.cv.notify_all();
+            return;
+        }
+        s.steps += 1;
+        if s.steps > s.max_steps {
+            s.failure = Some(format!(
+                "model: exceeded max_steps ({}) — unbounded loop, or raise Checker.max_steps",
+                s.max_steps
+            ));
+            self.cv.notify_all();
+            return;
+        }
+        let mut runnable: Vec<usize> = (0..s.threads.len())
+            .filter(|&t| s.threads[t].state == TState::Runnable)
+            .collect();
+        if runnable.is_empty() {
+            // Quiescence: fire every pending wait_timeout at once.
+            let timed: Vec<usize> = (0..s.threads.len())
+                .filter(|&t| {
+                    matches!(s.threads[t].state, TState::BlockedCondvar { timed: true, .. })
+                })
+                .collect();
+            if !timed.is_empty() {
+                for &t in &timed {
+                    s.threads[t].state = TState::Runnable;
+                    s.threads[t].timed_out = true;
+                }
+                runnable = timed;
+            } else if s.threads.iter().all(|t| t.state == TState::Finished) {
+                self.cv.notify_all();
+                return;
+            } else {
+                s.failure = Some(format!(
+                    "model: deadlock — no runnable threads, states {:?}",
+                    s.threads.iter().map(|t| t.state.clone()).collect::<Vec<_>>()
+                ));
+                self.cv.notify_all();
+                return;
+            }
+        }
+        // Options ordered: the yielding thread first (continuing without a
+        // context switch), then the rest by tid — so execution 0 of every
+        // DFS is the fully sequential schedule.
+        let yielder_runnable = runnable.contains(&yielder);
+        let mut options: Vec<usize> = Vec::with_capacity(runnable.len());
+        if yielder_runnable {
+            options.push(yielder);
+        }
+        options.extend(runnable.iter().copied().filter(|&t| t != yielder));
+        if yielder_runnable && s.preemptions >= s.preemption_bound {
+            options.truncate(1);
+        }
+        let chosen = if options.len() == 1 {
+            options[0]
+        } else {
+            let idx = if s.decisions < s.prefix.len() { s.prefix[s.decisions] } else { 0 };
+            s.decisions += 1;
+            s.trace.push((options.len(), idx));
+            options[idx]
+        };
+        if yielder_runnable && chosen != yielder {
+            s.preemptions += 1;
+        }
+        s.current = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Voluntary scheduling point: the calling thread stays runnable and
+    /// may or may not keep the token.
+    fn yield_now(&self, tid: usize) {
+        let mut s = self.locked();
+        if s.failure.is_some() {
+            drop(s);
+            std::panic::panic_any(Abort);
+        }
+        self.reschedule(&mut s, tid);
+        while s.current != tid {
+            if s.failure.is_some() {
+                drop(s);
+                std::panic::panic_any(Abort);
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        if s.failure.is_some() {
+            drop(s);
+            std::panic::panic_any(Abort);
+        }
+    }
+
+    /// Block the calling thread in `state` until it is made runnable
+    /// again *and* scheduled.  Returns the slot's `timed_out` flag.
+    fn block(&self, tid: usize, state: TState) -> bool {
+        let mut s = self.locked();
+        if s.failure.is_some() {
+            drop(s);
+            std::panic::panic_any(Abort);
+        }
+        s.threads[tid].state = state;
+        s.threads[tid].timed_out = false;
+        self.reschedule(&mut s, tid);
+        while s.current != tid || s.threads[tid].state != TState::Runnable {
+            if s.failure.is_some() {
+                drop(s);
+                std::panic::panic_any(Abort);
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+        let timed_out = s.threads[tid].timed_out;
+        s.threads[tid].timed_out = false;
+        timed_out
+    }
+
+    fn register_mutex(&self) -> usize {
+        let mut s = self.locked();
+        s.mutex_owner.push(None);
+        s.mutex_owner.len() - 1
+    }
+
+    fn register_condvar(&self) -> usize {
+        let mut s = self.locked();
+        let id = s.condvars;
+        s.condvars += 1;
+        id
+    }
+
+    fn mutex_lock(&self, tid: usize, mid: usize) {
+        self.yield_now(tid);
+        loop {
+            {
+                let mut s = self.locked();
+                if s.failure.is_some() {
+                    drop(s);
+                    std::panic::panic_any(Abort);
+                }
+                if s.mutex_owner[mid].is_none() {
+                    s.mutex_owner[mid] = Some(tid);
+                    return;
+                }
+            }
+            self.block(tid, TState::BlockedMutex(mid));
+        }
+    }
+
+    fn mutex_unlock(&self, tid: usize, mid: usize) {
+        // Never panic out of a Drop that runs during unwinding.
+        if !std::thread::panicking() {
+            self.yield_now(tid);
+        }
+        let mut s = self.locked();
+        s.mutex_owner[mid] = None;
+        for t in 0..s.threads.len() {
+            if s.threads[t].state == TState::BlockedMutex(mid) {
+                s.threads[t].state = TState::Runnable;
+            }
+        }
+    }
+
+    /// Atomically release `mid`, wait on condvar `cvid`, then
+    /// re-acquire `mid`.  Returns true if woken by the quiescence
+    /// timeout rule rather than a notify.
+    fn condvar_wait(&self, tid: usize, cvid: usize, mid: usize, timed: bool) -> bool {
+        self.yield_now(tid);
+        {
+            let mut s = self.locked();
+            s.mutex_owner[mid] = None;
+            for t in 0..s.threads.len() {
+                if s.threads[t].state == TState::BlockedMutex(mid) {
+                    s.threads[t].state = TState::Runnable;
+                }
+            }
+        }
+        let timed_out = self.block(tid, TState::BlockedCondvar { cv: cvid, timed });
+        // Re-acquire the mutex; we hold the token coming out of block().
+        loop {
+            {
+                let mut s = self.locked();
+                if s.failure.is_some() {
+                    drop(s);
+                    std::panic::panic_any(Abort);
+                }
+                if s.mutex_owner[mid].is_none() {
+                    s.mutex_owner[mid] = Some(tid);
+                    return timed_out;
+                }
+            }
+            self.block(tid, TState::BlockedMutex(mid));
+        }
+    }
+
+    fn condvar_notify(&self, tid: usize, cvid: usize, all: bool) {
+        self.yield_now(tid);
+        let mut s = self.locked();
+        for t in 0..s.threads.len() {
+            if matches!(s.threads[t].state, TState::BlockedCondvar { cv, .. } if cv == cvid) {
+                s.threads[t].state = TState::Runnable;
+                s.threads[t].timed_out = false;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+
+    fn join_wait(&self, tid: usize, target: usize) {
+        self.yield_now(tid);
+        loop {
+            {
+                let s = self.locked();
+                if s.failure.is_some() {
+                    drop(s);
+                    std::panic::panic_any(Abort);
+                }
+                if s.threads[target].state == TState::Finished {
+                    return;
+                }
+            }
+            self.block(tid, TState::BlockedJoin(target));
+        }
+    }
+
+    fn wait_first_turn(&self, tid: usize) -> bool {
+        let mut s = self.locked();
+        loop {
+            if s.failure.is_some() {
+                return false;
+            }
+            if s.current == tid {
+                return true;
+            }
+            s = match self.cv.wait(s) {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+        }
+    }
+
+    fn thread_finish(&self, tid: usize, panic_msg: Option<String>) {
+        let mut s = self.locked();
+        s.threads[tid].state = TState::Finished;
+        for t in 0..s.threads.len() {
+            if s.threads[t].state == TState::BlockedJoin(tid) {
+                s.threads[t].state = TState::Runnable;
+            }
+        }
+        if let Some(msg) = panic_msg {
+            if s.failure.is_none() {
+                s.failure = Some(msg);
+            }
+        }
+        if s.failure.is_none() {
+            self.reschedule(&mut s, tid);
+        }
+        self.cv.notify_all();
+    }
+}
+
+fn payload_to_string(p: Box<dyn Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked (non-string payload)".to_string()
+    }
+}
+
+fn launch(sched: Arc<Sched>, tid: usize, body: Box<dyn FnOnce() + Send>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        CTX.with(|c| *c.borrow_mut() = Some(Ctx { sched: sched.clone(), tid }));
+        let panic_msg = if sched.wait_first_turn(tid) {
+            match catch_unwind(AssertUnwindSafe(body)) {
+                Ok(()) => None,
+                Err(p) if p.is::<Abort>() => None,
+                Err(p) => Some(payload_to_string(p)),
+            }
+        } else {
+            None
+        };
+        sched.thread_finish(tid, panic_msg);
+        CTX.with(|c| *c.borrow_mut() = None);
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Public checker API
+// ---------------------------------------------------------------------------
+
+/// One schedule that violated an assertion (or deadlocked).
+#[derive(Clone, Debug)]
+pub struct Violation {
+    /// Panic/deadlock message from the failing execution.
+    pub message: String,
+    /// Choice indices (one per multi-option scheduling decision) that
+    /// reproduce the failing schedule.
+    pub schedule: Vec<usize>,
+}
+
+/// Outcome of a [`Checker::run`].
+#[derive(Clone, Debug)]
+pub struct Report {
+    /// Number of distinct executions explored.
+    pub executions: usize,
+    /// First failing schedule, if any.
+    pub violation: Option<Violation>,
+    /// True iff the bounded schedule space was fully enumerated
+    /// (no violation, and `max_executions` was not hit).
+    pub complete: bool,
+}
+
+/// Bounded DFS explorer over thread interleavings.
+#[derive(Clone, Debug)]
+pub struct Checker {
+    /// Cap on scheduling points per execution; exceeding it is reported
+    /// as a violation (it means a loop the bounds cannot terminate).
+    pub max_steps: usize,
+    /// CHESS-style preemption bound: maximum involuntary context
+    /// switches per execution.
+    pub preemption_bound: usize,
+    /// Safety cap on the number of executions.
+    pub max_executions: usize,
+}
+
+impl Default for Checker {
+    fn default() -> Self {
+        Checker { max_steps: 5_000, preemption_bound: 2, max_executions: 200_000 }
+    }
+}
+
+impl Checker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn preemption_bound(mut self, b: usize) -> Self {
+        self.preemption_bound = b;
+        self
+    }
+
+    pub fn max_executions(mut self, n: usize) -> Self {
+        self.max_executions = n;
+        self
+    }
+
+    /// Explore every bounded interleaving of `f`.  Returns rather than
+    /// panics, so negative tests can assert that a violation *is* found.
+    pub fn run<F>(&self, f: F) -> Report
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+        let mut prefix: Vec<usize> = Vec::new();
+        let mut executions = 0usize;
+        loop {
+            executions += 1;
+            let (failure, trace) = self.run_once(prefix.clone(), Arc::clone(&f));
+            if let Some(message) = failure {
+                let schedule = trace.iter().map(|t| t.1).collect();
+                return Report { executions, violation: Some(Violation { message, schedule }), complete: false };
+            }
+            // DFS: advance the deepest choice that still has options left.
+            let mut next: Option<Vec<usize>> = None;
+            for i in (0..trace.len()).rev() {
+                let (n, c) = trace[i];
+                if c + 1 < n {
+                    let mut p: Vec<usize> = trace[..i].iter().map(|t| t.1).collect();
+                    p.push(c + 1);
+                    next = Some(p);
+                    break;
+                }
+            }
+            match next {
+                Some(p) if executions < self.max_executions => prefix = p,
+                Some(_) => return Report { executions, violation: None, complete: false },
+                None => return Report { executions, violation: None, complete: true },
+            }
+        }
+    }
+
+    fn run_once(
+        &self,
+        prefix: Vec<usize>,
+        f: Arc<dyn Fn() + Send + Sync>,
+    ) -> (Option<String>, Vec<(usize, usize)>) {
+        // ordering: generation counter only needs uniqueness, not ordering.
+        let gen = (EXEC_GEN.fetch_add(1, AtomOrd::Relaxed) & 0xffff_ffff) as u32;
+        let sched = Arc::new(Sched {
+            gen,
+            m: StdMutex::new(State {
+                threads: vec![Slot::runnable()],
+                current: 0,
+                prefix,
+                trace: Vec::new(),
+                decisions: 0,
+                steps: 0,
+                max_steps: self.max_steps,
+                preemptions: 0,
+                preemption_bound: self.preemption_bound,
+                mutex_owner: Vec::new(),
+                condvars: 0,
+                failure: None,
+            }),
+            cv: StdCondvar::new(),
+            handles: StdMutex::new(Vec::new()),
+        });
+        let root = launch(Arc::clone(&sched), 0, Box::new(move || f()));
+        {
+            let mut h = match sched.handles.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            h.push(root);
+        }
+        // Wait for every model thread (root + spawned) to finish.
+        {
+            let mut s = sched.locked();
+            while !s.threads.iter().all(|t| t.state == TState::Finished) {
+                s = match sched.cv.wait(s) {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+            }
+        }
+        loop {
+            let h = {
+                let mut hs = match sched.handles.lock() {
+                    Ok(g) => g,
+                    Err(p) => p.into_inner(),
+                };
+                hs.pop()
+            };
+            match h {
+                Some(h) => {
+                    let _ = h.join();
+                }
+                None => break,
+            }
+        }
+        let s = sched.locked();
+        (s.failure.clone(), s.trace.clone())
+    }
+}
+
+/// Convenience wrapper: run `f` under a default [`Checker`] and panic
+/// with the failing schedule if a violation is found.
+pub fn check<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let report = Checker::default().run(f);
+    if let Some(v) = report.violation {
+        panic!(
+            "model check failed after {} executions\n  schedule: {:?}\n  {}",
+            report.executions, v.schedule, v.message
+        );
+    }
+    assert!(report.complete, "model check hit max_executions without completing");
+}
+
+/// Spawn a model thread.  Must be called from inside a [`Checker::run`]
+/// closure (or another model thread).
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let ctx = current_ctx().expect("model::spawn called outside a Checker::run");
+    let sched = ctx.sched;
+    let tid = {
+        let mut s = sched.locked();
+        s.threads.push(Slot::runnable());
+        s.threads.len() - 1
+    };
+    let slot: Arc<StdMutex<Option<T>>> = Arc::new(StdMutex::new(None));
+    let slot2 = Arc::clone(&slot);
+    let h = launch(
+        Arc::clone(&sched),
+        tid,
+        Box::new(move || {
+            let r = f();
+            let mut g = match slot2.lock() {
+                Ok(g) => g,
+                Err(p) => p.into_inner(),
+            };
+            *g = Some(r);
+        }),
+    );
+    {
+        let mut hs = match sched.handles.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        hs.push(h);
+    }
+    // Spawning makes a new thread schedulable: that is an observable
+    // scheduling point.
+    sched.yield_now(ctx.tid);
+    JoinHandle { slot, target: tid }
+}
+
+/// Handle to a model thread; mirrors `std::thread::JoinHandle`.
+pub struct JoinHandle<T> {
+    slot: Arc<StdMutex<Option<T>>>,
+    target: usize,
+}
+
+impl<T> JoinHandle<T> {
+    pub fn join(self) -> std::thread::Result<T> {
+        let ctx = current_ctx().expect("JoinHandle::join called outside a Checker::run");
+        ctx.sched.join_wait(ctx.tid, self.target);
+        let mut g = match self.slot.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        match g.take() {
+            Some(v) => Ok(v),
+            None => Err(Box::new("model thread panicked".to_string()) as Box<dyn Any + Send>),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented primitives
+// ---------------------------------------------------------------------------
+
+macro_rules! instrumented_atomic {
+    ($name:ident, $std:path, $prim:ty) => {
+        /// Instrumented atomic: every operation is a model scheduling
+        /// point; outside a model run it is the plain `std` op.
+        #[derive(Debug, Default)]
+        pub struct $name($std);
+
+        impl $name {
+            pub const fn new(v: $prim) -> Self {
+                Self(<$std>::new(v))
+            }
+            pub fn load(&self, o: Ordering) -> $prim {
+                sched_op();
+                self.0.load(o)
+            }
+            pub fn store(&self, v: $prim, o: Ordering) {
+                sched_op();
+                self.0.store(v, o)
+            }
+            pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                sched_op();
+                self.0.swap(v, o)
+            }
+            pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                sched_op();
+                self.0.fetch_add(v, o)
+            }
+            pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                sched_op();
+                self.0.fetch_sub(v, o)
+            }
+            pub fn compare_exchange(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                sched_op();
+                self.0.compare_exchange(current, new, success, failure)
+            }
+            /// Under the serializing token a weak CAS cannot fail
+            /// spuriously, so this is the strong variant.
+            pub fn compare_exchange_weak(
+                &self,
+                current: $prim,
+                new: $prim,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$prim, $prim> {
+                self.compare_exchange(current, new, success, failure)
+            }
+            pub fn get_mut(&mut self) -> &mut $prim {
+                self.0.get_mut()
+            }
+            pub fn into_inner(self) -> $prim {
+                self.0.into_inner()
+            }
+        }
+    };
+}
+
+instrumented_atomic!(AtomicU64, std::sync::atomic::AtomicU64, u64);
+instrumented_atomic!(AtomicI64, std::sync::atomic::AtomicI64, i64);
+instrumented_atomic!(AtomicUsize, std::sync::atomic::AtomicUsize, usize);
+
+/// Instrumented `AtomicBool` (no fetch_add/fetch_sub).
+#[derive(Debug, Default)]
+pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+impl AtomicBool {
+    pub const fn new(v: bool) -> Self {
+        Self(std::sync::atomic::AtomicBool::new(v))
+    }
+    pub fn load(&self, o: Ordering) -> bool {
+        sched_op();
+        self.0.load(o)
+    }
+    pub fn store(&self, v: bool, o: Ordering) {
+        sched_op();
+        self.0.store(v, o)
+    }
+    pub fn swap(&self, v: bool, o: Ordering) -> bool {
+        sched_op();
+        self.0.swap(v, o)
+    }
+}
+
+/// Packed `(generation << 32) | id` lazy registration for mutexes and
+/// condvars; `u64::MAX` means "not yet registered in any execution".
+fn model_id(cell: &StdAtomicU64, ctx: &Ctx, register: impl FnOnce(&Sched) -> usize) -> usize {
+    // ordering: id cell is only touched by the token-holding thread,
+    // so Relaxed is already serialized.
+    let packed = cell.load(AtomOrd::Relaxed);
+    if packed != u64::MAX && (packed >> 32) as u32 == ctx.sched.gen {
+        return (packed & 0xffff_ffff) as usize;
+    }
+    let id = register(&ctx.sched);
+    cell.store(((ctx.sched.gen as u64) << 32) | id as u64, AtomOrd::Relaxed);
+    id
+}
+
+/// Instrumented mutex.  Model-level blocking is arbitrated by the
+/// scheduler; the inner `std` mutex only carries the data (it is never
+/// contended during a model run because the token serializes access).
+pub struct Mutex<T: ?Sized> {
+    id: StdAtomicU64,
+    inner: StdMutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(t: T) -> Self {
+        Mutex { id: StdAtomicU64::new(u64::MAX), inner: StdMutex::new(t) }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current_ctx() {
+            None => match self.inner.lock() {
+                Ok(real) => Ok(MutexGuard { lock: self, real: Some(real), model: None }),
+                Err(p) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    real: Some(p.into_inner()),
+                    model: None,
+                })),
+            },
+            Some(ctx) => {
+                let mid = model_id(&self.id, &ctx, |s| s.register_mutex());
+                ctx.sched.mutex_lock(ctx.tid, mid);
+                let model = Some((Arc::clone(&ctx.sched), ctx.tid, mid));
+                match self.inner.lock() {
+                    Ok(real) => Ok(MutexGuard { lock: self, real: Some(real), model }),
+                    Err(p) => Err(PoisonError::new(MutexGuard {
+                        lock: self,
+                        real: Some(p.into_inner()),
+                        model,
+                    })),
+                }
+            }
+        }
+    }
+
+    pub fn into_inner(self) -> LockResult<T> {
+        self.inner.into_inner()
+    }
+
+    pub fn get_mut(&mut self) -> LockResult<&mut T> {
+        self.inner.get_mut()
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for Mutex<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.inner.fmt(f)
+    }
+}
+
+/// Guard for the instrumented [`Mutex`]; releases the model-level lock
+/// on drop (after the real guard).
+pub struct MutexGuard<'a, T: ?Sized> {
+    lock: &'a Mutex<T>,
+    real: Option<StdMutexGuard<'a, T>>,
+    model: Option<(Arc<Sched>, usize, usize)>,
+}
+
+impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.real.as_deref().expect("model MutexGuard used after disarm")
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.real.as_deref_mut().expect("model MutexGuard used after disarm")
+    }
+}
+
+impl<T: ?Sized> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        drop(self.real.take());
+        if let Some((sched, tid, mid)) = self.model.take() {
+            sched.mutex_unlock(tid, mid);
+        }
+    }
+}
+
+/// Result of an instrumented `wait_timeout`; mirrors
+/// `std::sync::WaitTimeoutResult`.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitTimeoutResult {
+    timed: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed
+    }
+}
+
+/// Instrumented condvar.  In a model run, `wait_timeout` times out only
+/// at quiescence (when nothing else can run); outside a run it is the
+/// real condvar.
+pub struct Condvar {
+    id: StdAtomicU64,
+    real: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar { id: StdAtomicU64::new(u64::MAX), real: StdCondvar::new() }
+    }
+
+    pub fn notify_one(&self) {
+        match current_ctx() {
+            None => self.real.notify_one(),
+            Some(ctx) => {
+                let cvid = model_id(&self.id, &ctx, |s| s.register_condvar());
+                ctx.sched.condvar_notify(ctx.tid, cvid, false);
+            }
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match current_ctx() {
+            None => self.real.notify_all(),
+            Some(ctx) => {
+                let cvid = model_id(&self.id, &ctx, |s| s.register_condvar());
+                ctx.sched.condvar_notify(ctx.tid, cvid, true);
+            }
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        self.wait_inner(guard, None).map(|(g, _)| g).map_err(|p| {
+            let (g, _) = p.into_inner();
+            PoisonError::new(g)
+        })
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        self.wait_inner(guard, Some(dur))
+    }
+
+    fn wait_inner<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Option<Duration>,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match current_ctx() {
+            None => {
+                let real = guard.real.take().expect("model MutexGuard used after disarm");
+                match dur {
+                    Some(d) => match self.real.wait_timeout(real, d) {
+                        Ok((g, w)) => {
+                            guard.real = Some(g);
+                            Ok((guard, WaitTimeoutResult { timed: w.timed_out() }))
+                        }
+                        Err(p) => {
+                            let (g, w) = p.into_inner();
+                            guard.real = Some(g);
+                            Err(PoisonError::new((guard, WaitTimeoutResult {
+                                timed: w.timed_out(),
+                            })))
+                        }
+                    },
+                    None => match self.real.wait(real) {
+                        Ok(g) => {
+                            guard.real = Some(g);
+                            Ok((guard, WaitTimeoutResult { timed: false }))
+                        }
+                        Err(p) => {
+                            guard.real = Some(p.into_inner());
+                            Err(PoisonError::new((guard, WaitTimeoutResult { timed: false })))
+                        }
+                    },
+                }
+            }
+            Some(ctx) => {
+                let cvid = model_id(&self.id, &ctx, |s| s.register_condvar());
+                let lock = guard.lock;
+                let (_, tid, mid) = guard.model.take().expect(
+                    "model Condvar::wait on a guard locked outside the model run",
+                );
+                // Drop the real guard (scheduler owns exclusion from here).
+                drop(guard.real.take());
+                drop(guard);
+                let timed = ctx.sched.condvar_wait(tid, cvid, mid, dur.is_some());
+                let model = Some((Arc::clone(&ctx.sched), tid, mid));
+                let rebuilt = match lock.inner.lock() {
+                    Ok(real) => MutexGuard { lock, real: Some(real), model },
+                    Err(p) => MutexGuard { lock, real: Some(p.into_inner()), model },
+                };
+                Ok((rebuilt, WaitTimeoutResult { timed }))
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Condvar {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Condvar")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite gate (seeded-bug detection): a torn load-then-store
+    /// increment loses an update under some interleaving, and the
+    /// explorer must find it.
+    #[test]
+    fn finds_torn_counter_bug() {
+        let report = Checker::default().run(|| {
+            let c = Arc::new(AtomicU64::new(0));
+            let mk = |c: Arc<AtomicU64>| {
+                spawn(move || {
+                    // Deliberately torn read-modify-write.
+                    let v = c.load(Ordering::SeqCst);
+                    c.store(v + 1, Ordering::SeqCst);
+                })
+            };
+            let a = mk(Arc::clone(&c));
+            let b = mk(Arc::clone(&c));
+            a.join().unwrap();
+            b.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+        });
+        let v = report.violation.expect("explorer must find the torn counter");
+        assert!(v.message.contains("lost update"), "unexpected violation: {}", v.message);
+    }
+
+    /// The same counter with a real atomic RMW has no lost update in
+    /// any schedule, and the bounded space is fully enumerated.
+    #[test]
+    fn atomic_counter_is_clean() {
+        let report = Checker::default().run(|| {
+            let c = Arc::new(AtomicU64::new(0));
+            let mk = |c: Arc<AtomicU64>| spawn(move || c.fetch_add(1, Ordering::SeqCst));
+            let a = mk(Arc::clone(&c));
+            let b = mk(Arc::clone(&c));
+            a.join().unwrap();
+            b.join().unwrap();
+            assert_eq!(c.load(Ordering::SeqCst), 2);
+        });
+        assert!(report.violation.is_none(), "{:?}", report.violation);
+        assert!(report.complete);
+        assert!(report.executions > 1, "explorer found no nondeterminism to explore");
+    }
+
+    #[test]
+    fn mutex_counter_is_clean() {
+        check(|| {
+            let c = Arc::new(Mutex::new(0u64));
+            let mk = |c: Arc<Mutex<u64>>| {
+                spawn(move || {
+                    let mut g = c.lock().unwrap();
+                    *g += 1;
+                })
+            };
+            let a = mk(Arc::clone(&c));
+            let b = mk(Arc::clone(&c));
+            a.join().unwrap();
+            b.join().unwrap();
+            assert_eq!(*c.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn detects_abba_deadlock() {
+        let report = Checker::default().run(|| {
+            let m1 = Arc::new(Mutex::new(()));
+            let m2 = Arc::new(Mutex::new(()));
+            let (a1, a2) = (Arc::clone(&m1), Arc::clone(&m2));
+            let t1 = spawn(move || {
+                let _g1 = a1.lock().unwrap();
+                let _g2 = a2.lock().unwrap();
+            });
+            let (b1, b2) = (Arc::clone(&m1), Arc::clone(&m2));
+            let t2 = spawn(move || {
+                let _g2 = b2.lock().unwrap();
+                let _g1 = b1.lock().unwrap();
+            });
+            let _ = t1.join();
+            let _ = t2.join();
+        });
+        let v = report.violation.expect("ABBA lock order must deadlock in some schedule");
+        assert!(v.message.contains("deadlock"), "unexpected violation: {}", v.message);
+    }
+
+    /// `wait_timeout` wakes with `timed_out() == true` at quiescence
+    /// when nobody will ever notify.
+    #[test]
+    fn condvar_timeout_fires_at_quiescence() {
+        check(|| {
+            let q = Arc::new((Mutex::new(false), Condvar::new()));
+            let q2 = Arc::clone(&q);
+            let t = spawn(move || {
+                let (lock, cv) = &*q2;
+                let mut ready = lock.lock().unwrap();
+                let mut fired = false;
+                while !*ready {
+                    let (g, res) = cv.wait_timeout(ready, Duration::from_millis(1)).unwrap();
+                    ready = g;
+                    if res.timed_out() {
+                        fired = true;
+                        break;
+                    }
+                }
+                assert!(fired, "nobody notifies, so only the timeout can wake us");
+            });
+            t.join().unwrap();
+        });
+    }
+
+    /// Classic flag+condvar handoff: no lost wakeup in any schedule
+    /// (the notify may land before or after the wait).
+    #[test]
+    fn condvar_notify_handoff_is_clean() {
+        check(|| {
+            let q = Arc::new((Mutex::new(false), Condvar::new()));
+            let q2 = Arc::clone(&q);
+            let waiter = spawn(move || {
+                let (lock, cv) = &*q2;
+                let mut ready = lock.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            });
+            let (lock, cv) = &*q;
+            {
+                let mut ready = lock.lock().unwrap();
+                *ready = true;
+            }
+            cv.notify_one();
+            waiter.join().unwrap();
+        });
+    }
+}
