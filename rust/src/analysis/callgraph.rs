@@ -1,0 +1,428 @@
+//! Crate-wide call graph over the parsed items.
+//!
+//! Resolution is name-based and over-approximating: a call `a::b::f(…)`
+//! matches any fn named `f` whose enclosing path ends with the call's
+//! qualifier segments; a bare call `f(…)` prefers same-file fns; a
+//! method call `.m(…)` matches every impl fn named `m` anywhere in the
+//! crate.  Over-approximation is the right polarity for panic
+//! reachability — we must never miss a path — and the allow syntax
+//! absorbs the (rare) false positives.
+//!
+//! All maps are `BTreeMap`/`BTreeSet` so analysis output is
+//! byte-deterministic run to run — the same invariant detlint enforces
+//! on the rest of the crate.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+
+use super::parse::{FnBody, Item, ItemKind};
+
+/// One fn, flattened out of the item tree.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    /// Repo-relative file path, `/`-separated (`sim/engine.rs`).
+    pub file: String,
+    /// Fn name.
+    pub name: String,
+    /// Enclosing type name for impl fns (`ConcurrentRouter`), or the
+    /// enclosing mod chain's last segment, if any.
+    pub owner: Option<String>,
+    /// Trait being implemented, when the fn sits in a trait impl.
+    pub trait_name: Option<String>,
+    pub line: usize,
+    pub end_line: usize,
+    /// True when any enclosing item (or the fn itself) is `#[cfg(test)]`.
+    pub in_test: bool,
+    pub body: FnBody,
+}
+
+impl FnInfo {
+    /// `file::Owner::name` display label for findings.
+    pub fn label(&self) -> String {
+        match &self.owner {
+            Some(o) => format!("{}::{}::{}", self.file, o, self.name),
+            None => format!("{}::{}", self.file, self.name),
+        }
+    }
+}
+
+/// Node index into [`Graph::fns`].
+pub type FnId = usize;
+
+pub struct Graph {
+    pub fns: Vec<FnInfo>,
+    /// name → fn ids bearing that name.
+    by_name: BTreeMap<String, Vec<FnId>>,
+    /// Forward edges, resolved; parallel to `fns`.
+    pub callees: Vec<BTreeSet<FnId>>,
+    /// Reverse edges; parallel to `fns`.
+    pub callers: Vec<BTreeSet<FnId>>,
+}
+
+/// Whether a cfg gate admits this build.  `#[cfg(test)]` items are
+/// always excluded (detlint analyses shipping code); feature gates are
+/// included iff the feature is enabled; any other predicate is
+/// conservatively included.
+fn cfg_active(cfg: &str, features: &[String]) -> CfgState {
+    let c = cfg.trim();
+    if c == "test" {
+        return CfgState::Test;
+    }
+    if let Some(rest) = c.strip_prefix("feature") {
+        let rest = rest.trim_start().trim_start_matches('=').trim();
+        let feat = rest.trim_matches('"');
+        if features.iter().any(|f| f == feat) {
+            return CfgState::On;
+        }
+        return CfgState::Off;
+    }
+    if let Some(inner) = c.strip_prefix("not") {
+        let inner = inner.trim().trim_start_matches('(').trim_end_matches(')');
+        return match cfg_active(inner, features) {
+            CfgState::On => CfgState::Off,
+            CfgState::Off => CfgState::On,
+            CfgState::Test => CfgState::Off,
+        };
+    }
+    CfgState::On
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum CfgState {
+    On,
+    Off,
+    Test,
+}
+
+/// Flatten one file's item tree into `out`, tracking cfg context.
+pub fn flatten_fns(
+    file: &str,
+    items: &[Item],
+    features: &[String],
+    out: &mut Vec<FnInfo>,
+) {
+    fn walk(
+        file: &str,
+        items: &[Item],
+        owner: Option<&str>,
+        trait_name: Option<&str>,
+        in_test: bool,
+        features: &[String],
+        out: &mut Vec<FnInfo>,
+    ) {
+        for it in items {
+            let mut test = in_test;
+            let mut off = false;
+            for c in &it.cfg {
+                match cfg_active(c, features) {
+                    CfgState::Test => test = true,
+                    CfgState::Off => off = true,
+                    CfgState::On => {}
+                }
+            }
+            if off {
+                continue;
+            }
+            match it.kind {
+                ItemKind::Fn => {
+                    if let Some(body) = &it.body {
+                        out.push(FnInfo {
+                            file: file.to_string(),
+                            name: it.name.clone(),
+                            owner: owner.map(str::to_string),
+                            trait_name: trait_name.map(str::to_string),
+                            line: it.line,
+                            end_line: it.end_line,
+                            in_test: test,
+                            body: body.clone(),
+                        });
+                    }
+                }
+                ItemKind::Impl => walk(
+                    file,
+                    &it.children,
+                    Some(&it.name),
+                    it.trait_name.as_deref(),
+                    test,
+                    features,
+                    out,
+                ),
+                ItemKind::Mod => {
+                    walk(file, &it.children, owner, None, test, features, out)
+                }
+                _ => {}
+            }
+        }
+    }
+    walk(file, items, None, None, false, features, out);
+}
+
+impl Graph {
+    /// Build the graph from flattened fns, resolving every call and
+    /// method fact to candidate callees.
+    pub fn build(fns: Vec<FnInfo>) -> Graph {
+        let mut by_name: BTreeMap<String, Vec<FnId>> = BTreeMap::new();
+        for (id, f) in fns.iter().enumerate() {
+            by_name.entry(f.name.clone()).or_default().push(id);
+        }
+        let mut callees: Vec<BTreeSet<FnId>> = vec![BTreeSet::new(); fns.len()];
+        for (id, f) in fns.iter().enumerate() {
+            if f.in_test {
+                continue; // test fns are not analysis roots or edges
+            }
+            for call in &f.body.calls {
+                for target in resolve_call(&call.path, id, &fns, &by_name) {
+                    callees[id].insert(target);
+                }
+            }
+            for m in &f.body.methods {
+                // Method resolution: any non-test impl fn by that name.
+                if let Some(cands) = by_name.get(&m.name) {
+                    for &c in cands {
+                        if fns[c].owner.is_some() && !fns[c].in_test {
+                            callees[id].insert(c);
+                        }
+                    }
+                }
+            }
+        }
+        let mut callers: Vec<BTreeSet<FnId>> = vec![BTreeSet::new(); fns.len()];
+        for (id, cs) in callees.iter().enumerate() {
+            for &c in cs {
+                callers[c].insert(id);
+            }
+        }
+        Graph { fns, by_name, callees, callers }
+    }
+
+    /// Fns matching `(file_suffix, name_glob)` entry-point patterns.
+    /// `name_glob` supports one trailing `*` (`solve*`).
+    pub fn entry_points(&self, patterns: &[(&str, &str)]) -> Vec<FnId> {
+        let mut out = Vec::new();
+        for (id, f) in self.fns.iter().enumerate() {
+            if f.in_test {
+                continue;
+            }
+            for (file_suffix, glob) in patterns {
+                if f.file.ends_with(file_suffix) && glob_match(glob, &f.name) {
+                    out.push(id);
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Forward BFS from `roots`; returns, for each reached fn, one
+    /// sample call path (root-first list of fn ids).  Nodes for which
+    /// `skip` is true are neither visited nor traversed through.
+    pub fn reach_forward(
+        &self,
+        roots: &[FnId],
+        skip: &dyn Fn(&FnInfo) -> bool,
+    ) -> BTreeMap<FnId, Vec<FnId>> {
+        let mut paths: BTreeMap<FnId, Vec<FnId>> = BTreeMap::new();
+        let mut q: VecDeque<FnId> = VecDeque::new();
+        for &r in roots {
+            if !paths.contains_key(&r) && !skip(&self.fns[r]) {
+                paths.insert(r, vec![r]);
+                q.push_back(r);
+            }
+        }
+        while let Some(n) = q.pop_front() {
+            let base = paths[&n].clone();
+            for &c in &self.callees[n] {
+                if !paths.contains_key(&c) && !skip(&self.fns[c]) {
+                    let mut p = base.clone();
+                    p.push(c);
+                    paths.insert(c, p);
+                    q.push_back(c);
+                }
+            }
+        }
+        paths
+    }
+
+    /// Reverse BFS: every fn from which some fn in `sinks` is
+    /// reachable (inclusive).
+    pub fn reach_reverse(&self, sinks: &[FnId]) -> BTreeSet<FnId> {
+        let mut seen: BTreeSet<FnId> = sinks.iter().copied().collect();
+        let mut q: VecDeque<FnId> = sinks.iter().copied().collect();
+        while let Some(n) = q.pop_front() {
+            for &c in &self.callers[n] {
+                if seen.insert(c) {
+                    q.push_back(c);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Fn ids by bare name (all files).
+    pub fn named(&self, name: &str) -> &[FnId] {
+        self.by_name.get(name).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Render a sample path as `a -> b -> c` using fn labels.
+    pub fn path_label(&self, path: &[FnId]) -> String {
+        path.iter()
+            .map(|&id| self.fns[id].label())
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+/// Resolve a path call to candidate fn ids.
+fn resolve_call(
+    path: &str,
+    caller: FnId,
+    fns: &[FnInfo],
+    by_name: &BTreeMap<String, Vec<FnId>>,
+) -> Vec<FnId> {
+    let segs: Vec<&str> = path.split("::").collect();
+    let name = *segs.last().expect("non-empty path");
+    let quals = &segs[..segs.len() - 1];
+    let cands = match by_name.get(name) {
+        Some(c) => c,
+        None => return Vec::new(),
+    };
+    let live: Vec<FnId> = cands.iter().copied().filter(|&c| !fns[c].in_test).collect();
+    if quals.is_empty() {
+        // Bare call: same-file fns only — a bare name can't reach
+        // another module without a `use`, and over-matching here would
+        // wire every `new()` to every other `new()`.
+        let same: Vec<FnId> = live
+            .iter()
+            .copied()
+            .filter(|&c| fns[c].file == fns[caller].file)
+            .collect();
+        return same;
+    }
+    // Qualified: every qualifier segment must appear in the candidate's
+    // file path (module chain) or owner/type name.  `Self::f` and
+    // `<Type>::f` qualify by owner.
+    let filtered: Vec<FnId> = live
+        .iter()
+        .copied()
+        .filter(|&c| {
+            let f = &fns[c];
+            quals.iter().all(|q| {
+                if *q == "Self" {
+                    return f.file == fns[caller].file;
+                }
+                let in_file = f
+                    .file
+                    .trim_end_matches(".rs")
+                    .split('/')
+                    .any(|seg| seg == *q);
+                let in_owner = f.owner.as_deref() == Some(*q);
+                in_file || in_owner
+            })
+        })
+        .collect();
+    filtered
+}
+
+/// Glob with one optional trailing `*`.
+pub fn glob_match(glob: &str, name: &str) -> bool {
+    match glob.strip_suffix('*') {
+        Some(prefix) => name.starts_with(prefix),
+        None => glob == name,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::parse::parse_items;
+
+    fn graph(files: &[(&str, &str)]) -> Graph {
+        let mut fns = Vec::new();
+        for (path, src) in files {
+            let items = parse_items(&lex(src).tokens);
+            flatten_fns(path, &items, &[], &mut fns);
+        }
+        Graph::build(fns)
+    }
+
+    #[test]
+    fn qualified_and_bare_resolution() {
+        let g = graph(&[
+            (
+                "sim/engine.rs",
+                "pub fn run() { helper(); grin::solve(); }\nfn helper() {}\n",
+            ),
+            ("policy/grin.rs", "pub fn solve() { refine(); }\nfn refine() { data[0]; }\n"),
+            ("policy/other.rs", "pub fn solve() {}\n"),
+        ]);
+        let run = g.entry_points(&[("sim/engine.rs", "run*")]);
+        assert_eq!(run.len(), 1);
+        let reach = g.reach_forward(&run, &|_| false);
+        let names: Vec<&str> = reach.keys().map(|&id| g.fns[id].name.as_str()).collect();
+        assert!(names.contains(&"helper"));
+        assert!(names.contains(&"refine"));
+        // `grin::solve` must NOT resolve to policy/other.rs's solve.
+        let solves: Vec<&FnInfo> = reach
+            .keys()
+            .map(|&id| &g.fns[id])
+            .filter(|f| f.name == "solve")
+            .collect();
+        assert_eq!(solves.len(), 1);
+        assert_eq!(solves[0].file, "policy/grin.rs");
+    }
+
+    #[test]
+    fn method_calls_over_approximate() {
+        let g = graph(&[
+            (
+                "coordinator/frontend.rs",
+                "struct R;\nimpl R { pub fn route(&self) { self.pick(); } fn pick(&self) {} }\n",
+            ),
+        ]);
+        let entry = g.entry_points(&[("coordinator/frontend.rs", "route*")]);
+        let reach = g.reach_forward(&entry, &|_| false);
+        assert!(reach
+            .keys()
+            .any(|&id| g.fns[id].name == "pick"));
+    }
+
+    #[test]
+    fn test_cfg_items_excluded() {
+        let g = graph(&[(
+            "sim/engine.rs",
+            "pub fn run() {}\n#[cfg(test)]\nmod tests { fn run_helper() {} }\n",
+        )]);
+        assert_eq!(g.fns.iter().filter(|f| !f.in_test).count(), 1);
+    }
+
+    #[test]
+    fn feature_gating() {
+        let src = "#[cfg(feature = \"model\")]\npub fn gated() {}\npub fn always() {}\n";
+        let items = parse_items(&lex(src).tokens);
+        let mut off = Vec::new();
+        flatten_fns("x.rs", &items, &[], &mut off);
+        assert_eq!(off.len(), 1);
+        let mut on = Vec::new();
+        flatten_fns("x.rs", &items, &["model".to_string()], &mut on);
+        assert_eq!(on.len(), 2);
+    }
+
+    #[test]
+    fn reverse_reachability() {
+        let g = graph(&[(
+            "sim/metrics.rs",
+            "pub fn build() -> SimResult { helper(); SimResult { x: 1 } }\nfn helper() {}\npub fn unrelated() {}\n",
+        )]);
+        let sinks: Vec<FnId> = g
+            .fns
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| f.body.struct_lits.iter().any(|s| s.name == "SimResult"))
+            .map(|(id, _)| id)
+            .collect();
+        let up = g.reach_reverse(&sinks);
+        let names: Vec<&str> = up.iter().map(|&id| g.fns[id].name.as_str()).collect();
+        assert!(names.contains(&"build"));
+        assert!(!names.contains(&"unrelated"));
+    }
+}

@@ -1,0 +1,580 @@
+//! The three detlint analyses: panic reachability, determinism
+//! dataflow, and metric-plumbing consistency.
+//!
+//! Each check emits [`Finding`]s with a stable rule name; suppression
+//! (`// srclint: allow(<rule>) — why` on the line or the line above,
+//! or a file-scoped `// srclint: allow-file(<rule>) — why`) is applied
+//! by the driver in [`crate::analysis`], not here, so the checks stay
+//! pure functions from parsed sources to raw findings.
+
+use std::collections::BTreeMap;
+
+use super::callgraph::{FnId, Graph};
+use super::lexer::allow_at;
+use super::parse::{FieldDecl, Item, ItemKind};
+
+/// One analysis finding.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Rule names (kept as constants so tests and docs can't drift).
+pub const RULE_PANIC: &str = "panic-reachable";
+pub const RULE_INDEX: &str = "index-reachable";
+pub const RULE_TRUNCATION: &str = "as-truncation";
+pub const RULE_DISCARD: &str = "discarded-result";
+pub const RULE_HASH_ITER: &str = "hash-iteration";
+pub const RULE_FLOAT_SUM: &str = "float-sum-order";
+pub const RULE_SPAWN: &str = "raw-spawn";
+pub const RULE_CLOCK: &str = "clock-in-results";
+pub const RULE_PLUMBING: &str = "metric-plumbing";
+
+pub const ALL_RULES: &[&str] = &[
+    RULE_PANIC,
+    RULE_INDEX,
+    RULE_TRUNCATION,
+    RULE_DISCARD,
+    RULE_HASH_ITER,
+    RULE_FLOAT_SUM,
+    RULE_SPAWN,
+    RULE_CLOCK,
+    RULE_PLUMBING,
+];
+
+/// Hot-path entry points: `(file suffix, fn-name glob)`.  Panic and
+/// index reachability is computed from these roots.
+pub const ENTRY_POINTS: &[(&str, &str)] = &[
+    ("sim/engine.rs", "run*"),
+    ("sim/dynamic.rs", "run_dynamic*"),
+    ("coordinator/frontend.rs", "route*"),
+    ("policy/grin.rs", "solve*"),
+];
+
+/// Struct literals that count as "result" constructions; fns that can
+/// reach one of these feed the determinism-dataflow rules.
+pub const RESULT_SINKS: &[&str] =
+    &["SimResult", "DynCellStats", "CellStats", "DynamicReport"];
+
+/// Files where `thread::spawn` is legitimate: the replicated-run
+/// fan-out, the coordinator's worker pools, and the model checker's
+/// schedule explorer.
+pub const SPAWN_ALLOWED: &[&str] = &["sim/replicate.rs", "coordinator/", "sync/"];
+
+/// Host-side tooling modules: never linked into the sim/serving core,
+/// so they are excluded from the hot-path call graph (they would
+/// otherwise be pulled in through method-name over-approximation).
+pub const TOOLING: &[&str] = &["analysis/", "bin/", "lint.rs", "testkit/"];
+
+/// Integer targets for which an `as` cast can silently truncate.
+const NARROW_INTS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// Macros that unconditionally (or on failed invariant) panic.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Methods that panic on the error/none case.
+const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+pub fn is_tooling(file: &str) -> bool {
+    TOOLING.iter().any(|t| file.starts_with(t) || file == t.trim_end_matches('/'))
+}
+
+// ---------------------------------------------------------------------------
+// Analysis 1: panic reachability
+// ---------------------------------------------------------------------------
+
+/// Interprocedural may-panic: BFS the call graph from the hot-path
+/// entry points; every reached fn that contains a panic seed
+/// (`unwrap`/`expect`/`panic!`-family) yields one aggregated
+/// `panic-reachable` finding, and every reached fn with slice/array
+/// indexing yields one aggregated `index-reachable` finding.  The
+/// finding message carries a sample call path from an entry point.
+///
+/// Seeds are filtered per line before aggregation: a justified
+/// `allow(panic-reachable)` — or srclint's own `allow(hot-path-panic)`,
+/// which asserts the same "this cannot fire" invariant — on the seed
+/// line (or the line above) excludes that seed; likewise a justified
+/// `allow(index-reachable)` excludes an indexing site.  `comments`
+/// maps file path → per-line comment text.
+pub fn check_panic_reachability(
+    g: &Graph,
+    comments: &BTreeMap<String, Vec<String>>,
+) -> Vec<Finding> {
+    let roots: Vec<FnId> = g
+        .entry_points(ENTRY_POINTS)
+        .into_iter()
+        .filter(|&id| !is_tooling(&g.fns[id].file))
+        .collect();
+    let reach = g.reach_forward(&roots, &|f| is_tooling(&f.file));
+    let empty: Vec<String> = Vec::new();
+    let mut out = Vec::new();
+    for (&id, path) in &reach {
+        let f = &g.fns[id];
+        if is_tooling(&f.file) {
+            continue;
+        }
+        let cs = comments.get(&f.file).unwrap_or(&empty);
+        let seed_allowed = |line: usize, rules: &[&str]| {
+            let li = line.saturating_sub(1);
+            li < cs.len()
+                && rules.iter().any(|&r| allow_at(cs, li, r) == Some(true))
+        };
+        let via = if path.len() > 1 {
+            format!(" (via {})", g.path_label(path))
+        } else {
+            " (hot-path entry point)".to_string()
+        };
+        let mut seeds: Vec<usize> = Vec::new();
+        for m in &f.body.methods {
+            if PANIC_METHODS.contains(&m.name.as_str()) {
+                // `self.expect(…)` resolving to a same-file impl fn is a
+                // call to an in-repo helper (config/json.rs's parser has
+                // one), not Option/Result::expect — the callee is already
+                // an edge in the graph and is analyzed in its own right.
+                let own_method = m.base == "self"
+                    && g.named(&m.name).iter().any(|&c| {
+                        let cf = &g.fns[c];
+                        cf.file == f.file && cf.owner.is_some() && !cf.in_test
+                    });
+                if !own_method {
+                    seeds.push(m.line);
+                }
+            }
+        }
+        for mc in &f.body.macros {
+            if PANIC_MACROS.contains(&mc.name.as_str()) {
+                seeds.push(mc.line);
+            }
+        }
+        seeds.sort_unstable();
+        seeds.dedup();
+        seeds.retain(|&l| !seed_allowed(l, &[RULE_PANIC, "hot-path-panic"]));
+        if let Some(&first) = seeds.first() {
+            out.push(Finding {
+                file: f.file.clone(),
+                line: first,
+                rule: RULE_PANIC,
+                msg: format!(
+                    "{} may panic at {} site(s) (lines {}){}",
+                    f.label(),
+                    seeds.len(),
+                    fmt_lines(&seeds),
+                    via
+                ),
+            });
+        }
+        let mut idx: Vec<usize> = f.body.indexes.clone();
+        idx.sort_unstable();
+        idx.dedup();
+        idx.retain(|&l| !seed_allowed(l, &[RULE_INDEX]));
+        if let Some(&first) = idx.first() {
+            out.push(Finding {
+                file: f.file.clone(),
+                line: first,
+                rule: RULE_INDEX,
+                msg: format!(
+                    "{} has {} slice/array indexing site(s) reachable from a hot path \
+                     (lines {}){}",
+                    f.label(),
+                    idx.len(),
+                    fmt_lines(&idx),
+                    via
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn fmt_lines(lines: &[usize]) -> String {
+    const MAX: usize = 6;
+    let mut s: Vec<String> = lines.iter().take(MAX).map(|l| l.to_string()).collect();
+    if lines.len() > MAX {
+        s.push("…".to_string());
+    }
+    s.join(", ")
+}
+
+// ---------------------------------------------------------------------------
+// Analysis 2: determinism dataflow
+// ---------------------------------------------------------------------------
+
+/// Nondeterminism sources and discarded results, crate-wide (non-test
+/// fns), plus clock/thread-id calls restricted to fns that can reach a
+/// result-sink construction.
+pub fn check_determinism(g: &Graph) -> Vec<Finding> {
+    let mut out = Vec::new();
+
+    // Fns that can reach a result-sink constructor (for clock rule).
+    let sinks: Vec<FnId> = g
+        .fns
+        .iter()
+        .enumerate()
+        .filter(|(_, f)| {
+            !f.in_test
+                && f.body
+                    .struct_lits
+                    .iter()
+                    .any(|s| RESULT_SINKS.contains(&s.name.as_str()))
+        })
+        .map(|(id, _)| id)
+        .collect();
+    let feeds_results = g.reach_reverse(&sinks);
+
+    for (id, f) in g.fns.iter().enumerate() {
+        if f.in_test || is_tooling(&f.file) {
+            continue;
+        }
+        let hashy = |name: &str| f.body.hash_locals.iter().any(|h| h.as_str() == name);
+
+        // HashMap/HashSet iteration: `for … in <hash local>` or an
+        // iteration method on a hash-typed receiver.
+        for l in &f.body.loops {
+            if l.idents.iter().any(|i| hashy(i)) {
+                out.push(Finding {
+                    file: f.file.clone(),
+                    line: l.line,
+                    rule: RULE_HASH_ITER,
+                    msg: format!(
+                        "{} iterates a HashMap/HashSet (`for … in {}`): iteration order \
+                         is nondeterministic; use BTreeMap/BTreeSet or sort first",
+                        f.label(),
+                        l.text
+                    ),
+                });
+            }
+        }
+        for m in &f.body.methods {
+            let iterish = matches!(
+                m.name.as_str(),
+                "iter" | "iter_mut" | "into_iter" | "keys" | "values" | "values_mut" | "drain"
+            );
+            let base_head = m.base.split('.').next().unwrap_or("");
+            if iterish && (hashy(&m.base) || hashy(base_head)) {
+                out.push(Finding {
+                    file: f.file.clone(),
+                    line: m.line,
+                    rule: RULE_HASH_ITER,
+                    msg: format!(
+                        "{} calls .{}() on hash-typed `{}`: iteration order is \
+                         nondeterministic; use BTreeMap/BTreeSet or sort first",
+                        f.label(),
+                        m.name,
+                        m.base
+                    ),
+                });
+            }
+        }
+
+        // Unordered float reductions: `.sum::<f64>()` (or f32) over a
+        // hash-typed receiver chain — float addition is not
+        // associative, so unordered accumulation drifts bit-for-bit.
+        for m in &f.body.methods {
+            let reduces = m.name == "sum" || m.name == "product";
+            let floaty = m.turbofish.contains("f64") || m.turbofish.contains("f32");
+            let base_head = m.base.split('.').next().unwrap_or("");
+            if reduces && floaty && (hashy(&m.base) || hashy(base_head)) {
+                out.push(Finding {
+                    file: f.file.clone(),
+                    line: m.line,
+                    rule: RULE_FLOAT_SUM,
+                    msg: format!(
+                        "{} reduces floats over hash-ordered `{}` with .{}::<{}>(): \
+                         accumulation order varies run to run",
+                        f.label(),
+                        m.base,
+                        m.name,
+                        m.turbofish
+                    ),
+                });
+            }
+        }
+
+        // Raw thread spawns outside the sanctioned modules.
+        let spawn_ok = SPAWN_ALLOWED.iter().any(|p| f.file.starts_with(p));
+        if !spawn_ok {
+            for c in &f.body.calls {
+                if c.path == "thread::spawn" || c.path.ends_with("::thread::spawn") {
+                    out.push(Finding {
+                        file: f.file.clone(),
+                        line: c.line,
+                        rule: RULE_SPAWN,
+                        msg: format!(
+                            "{} spawns a raw thread outside {:?}: completion order is \
+                             unobservable to the deterministic engine",
+                            f.label(),
+                            SPAWN_ALLOWED
+                        ),
+                    });
+                }
+            }
+        }
+
+        // Discarded results: `let _ = call(…)` silently drops errors.
+        for d in &f.body.discards {
+            if d.has_call {
+                out.push(Finding {
+                    file: f.file.clone(),
+                    line: d.line,
+                    rule: RULE_DISCARD,
+                    msg: format!(
+                        "{} discards a call result with `let _ = …`: handle the \
+                         Result or document why it is ignorable",
+                        f.label()
+                    ),
+                });
+            }
+        }
+
+        // Wall-clock / thread-id flowing toward result structs.
+        if feeds_results.contains(&id) {
+            for c in &f.body.calls {
+                let clocky = c.path.ends_with("Instant::now")
+                    || c.path.ends_with("SystemTime::now")
+                    || c.path.ends_with("thread::current");
+                if clocky {
+                    out.push(Finding {
+                        file: f.file.clone(),
+                        line: c.line,
+                        rule: RULE_CLOCK,
+                        msg: format!(
+                            "{} calls {} and can reach a {:?} construction: wall-clock \
+                             or thread identity must not flow into results",
+                            f.label(),
+                            c.path,
+                            RESULT_SINKS
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // Narrow integer casts, crate-wide including tooling (silent
+    // truncation corrupts metrics and indices alike).
+    for f in g.fns.iter() {
+        if f.in_test {
+            continue;
+        }
+        for c in &f.body.casts {
+            if NARROW_INTS.contains(&c.to.as_str()) {
+                out.push(Finding {
+                    file: f.file.clone(),
+                    line: c.line,
+                    rule: RULE_TRUNCATION,
+                    msg: format!(
+                        "{} casts with `as {}`: silently truncates; use try_from or \
+                         justify the range",
+                        f.label(),
+                        c.to
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Analysis 3: metric-plumbing consistency
+// ---------------------------------------------------------------------------
+
+/// Where a `SimResult` metric must surface.
+pub enum Plumb {
+    /// A field or method with this name must exist on one of the
+    /// report-side types (`DynamicReport`, `DynCellStats`, `CellStats`).
+    Report(&'static str),
+    /// A string literal containing this key must appear in the CLI
+    /// sweep/JSON emitters (`cli/`).
+    Emit(&'static str),
+    /// Deliberately not plumbed; the rationale is part of the table.
+    Exempt(&'static str),
+}
+
+/// The plumbing registry: every `pub` field of `SimResult` must have a
+/// row here, and every row must still name a real field.  Adding a
+/// metric to `SimResult` without registering how it surfaces (or why
+/// it doesn't) is a CI failure — that is the point.
+pub const PLUMBING: &[(&str, &[Plumb])] = &[
+    ("throughput", &[Plumb::Report("mean_x"), Plumb::Emit("mean_x")]),
+    ("mean_response", &[Plumb::Report("mean_response")]),
+    ("mean_energy", &[Plumb::Report("mean_energy"), Plumb::Emit("mean_energy")]),
+    ("edp", &[Plumb::Report("mean_edp"), Plumb::Emit("mean_edp")]),
+    (
+        "little_product",
+        &[Plumb::Exempt(
+            "Little's-law residual X·E[T]≈N; diagnostic invariant shown in the \
+             scenario table and asserted in tests, not a sweep metric",
+        )],
+    ),
+    (
+        "n_programs",
+        &[Plumb::Exempt("workload-size echo of an input parameter, not a measurement")],
+    ),
+    (
+        "completed",
+        &[Plumb::Exempt(
+            "absolute completion count; throughput (completions per unit time) is \
+             the normalized, reported form",
+        )],
+    ),
+    (
+        "tasks_redispatched",
+        &[Plumb::Report("tasks_redispatched"), Plumb::Report("mean_redispatched")],
+    ),
+    ("downtime_frac", &[Plumb::Report("mean_downtime_frac")]),
+    (
+        "completions_by_cell",
+        &[Plumb::Report("mean_class_x")],
+    ),
+    ("deadline_misses", &[Plumb::Report("mean_miss_rate")]),
+    (
+        "p99_by_class",
+        &[Plumb::Exempt(
+            "per-class p99 response tail; surfaced through the dynamic phase \
+             records (DynamicReport.phases) rather than aggregated cells",
+        )],
+    ),
+];
+
+/// Inputs to the plumbing check, pre-extracted by the driver.
+pub struct PlumbingInputs {
+    /// `SimResult`'s field declarations and their source location.
+    pub sim_result_fields: Vec<FieldDecl>,
+    pub sim_result_file: String,
+    pub sim_result_line: usize,
+    /// Field and method names found on the report-side types.
+    pub report_names: Vec<String>,
+    /// String literals in `cli/` files.
+    pub cli_strings: Vec<String>,
+}
+
+/// Collect [`PlumbingInputs`] from parsed files.
+pub fn plumbing_inputs(files: &[(String, Vec<Item>)], cli_strings: Vec<String>) -> Option<PlumbingInputs> {
+    let mut inp = PlumbingInputs {
+        sim_result_fields: Vec::new(),
+        sim_result_file: String::new(),
+        sim_result_line: 0,
+        report_names: Vec::new(),
+        cli_strings,
+    };
+    let report_types = ["DynamicReport", "DynCellStats", "CellStats"];
+    fn walk(items: &[Item], f: &mut dyn FnMut(&Item)) {
+        for it in items {
+            f(it);
+            walk(&it.children, f);
+        }
+    }
+    for (path, items) in files {
+        walk(items, &mut |it| {
+            if it.kind == ItemKind::Struct && it.name == "SimResult" && path.ends_with("sim/metrics.rs")
+            {
+                inp.sim_result_fields = it.fields.clone();
+                inp.sim_result_file = path.clone();
+                inp.sim_result_line = it.line;
+            }
+            if it.kind == ItemKind::Struct && report_types.contains(&it.name.as_str()) {
+                for fd in &it.fields {
+                    inp.report_names.push(fd.name.clone());
+                }
+            }
+            if it.kind == ItemKind::Impl && report_types.contains(&it.name.as_str()) {
+                for c in &it.children {
+                    if c.kind == ItemKind::Fn {
+                        inp.report_names.push(c.name.clone());
+                    }
+                }
+            }
+        });
+    }
+    if inp.sim_result_fields.is_empty() {
+        return None;
+    }
+    Some(inp)
+}
+
+/// Every pub `SimResult` field registered; every registered needle
+/// still resolvable.
+pub fn check_plumbing(inp: &PlumbingInputs) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let table: BTreeMap<&str, &[Plumb]> = PLUMBING.iter().map(|(k, v)| (*k, *v)).collect();
+    for fd in &inp.sim_result_fields {
+        if !fd.public {
+            continue;
+        }
+        match table.get(fd.name.as_str()) {
+            None => out.push(Finding {
+                file: inp.sim_result_file.clone(),
+                line: fd.line,
+                rule: RULE_PLUMBING,
+                msg: format!(
+                    "SimResult field `{}` is not registered in the plumbing table \
+                     (analysis/checks.rs PLUMBING): add a Report/Emit/Exempt row \
+                     saying how it surfaces",
+                    fd.name
+                ),
+            }),
+            Some(plumbs) => {
+                for p in *plumbs {
+                    match p {
+                        Plumb::Report(needle) => {
+                            if !inp.report_names.iter().any(|n| n.as_str() == *needle) {
+                                out.push(Finding {
+                                    file: inp.sim_result_file.clone(),
+                                    line: fd.line,
+                                    rule: RULE_PLUMBING,
+                                    msg: format!(
+                                        "SimResult field `{}` claims report counterpart \
+                                         `{}`, but no such field/method exists on \
+                                         DynamicReport/DynCellStats/CellStats",
+                                        fd.name, needle
+                                    ),
+                                });
+                            }
+                        }
+                        Plumb::Emit(needle) => {
+                            if !inp.cli_strings.iter().any(|s| s.contains(*needle)) {
+                                out.push(Finding {
+                                    file: inp.sim_result_file.clone(),
+                                    line: fd.line,
+                                    rule: RULE_PLUMBING,
+                                    msg: format!(
+                                        "SimResult field `{}` claims sweep-JSON key \
+                                         `{}`, but no cli/ string literal mentions it",
+                                        fd.name, needle
+                                    ),
+                                });
+                            }
+                        }
+                        Plumb::Exempt(_) => {}
+                    }
+                }
+            }
+        }
+    }
+    // Stale rows: registered fields that no longer exist.
+    for (name, _) in PLUMBING {
+        if !inp.sim_result_fields.iter().any(|fd| fd.name == *name) {
+            out.push(Finding {
+                file: inp.sim_result_file.clone(),
+                line: inp.sim_result_line,
+                rule: RULE_PLUMBING,
+                msg: format!(
+                    "plumbing table registers `{}` but SimResult has no such field: \
+                     remove the stale row",
+                    name
+                ),
+            });
+        }
+    }
+    out
+}

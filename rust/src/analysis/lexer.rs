@@ -1,0 +1,683 @@
+//! Shared source lexer for the in-repo analyzers.
+//!
+//! One token-level pass over raw Rust source feeds two consumers:
+//!
+//! * [`crate::lint`] (srclint) keeps its original line-oriented view:
+//!   [`mask`] rebuilds the per-line masked code / comment split it has
+//!   always used, now derived from the token stream instead of a
+//!   private character scanner.
+//! * [`crate::analysis`] (detlint) consumes the [`Token`] stream
+//!   directly: identifiers, lifetimes, numbers, string *contents*
+//!   (needed by the metric-plumbing check, which looks for JSON keys),
+//!   and punctuation with exact line/column spans.
+//!
+//! `<` and `>` are always emitted as single-character punctuation —
+//! `Vec<Arc<Mutex<T>>>` lexes as three separate `>` tokens, so the
+//! parser never has to split a `>>` shift token inside nested
+//! generics.  Multi-character operators that the parser does rely on
+//! (`::`, `->`, `=>`, `..`, `..=`, `...`) stay glued.
+//!
+//! The suppression grammar is parsed here too ([`allow_at`],
+//! [`file_allow`]): both srclint and detlint accept
+//! `// srclint: allow(<rule>) — <justification>` on the finding line
+//! or the line above, and detlint additionally accepts a file-scoped
+//! `// srclint: allow-file(<rule>) — <justification>` on any line of
+//! the file.  A justification of fewer than 8 alphanumeric characters
+//! does not count.
+
+/// One lexical token.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    /// Identifier or keyword (`fn`, `foo`, `usize`, …).
+    Ident(String),
+    /// Lifetime (`'a`, `'static`), with the leading quote.
+    Lifetime(String),
+    /// Numeric literal, suffix included (`1_000u32`, `0x1f`, `2.5e-3`).
+    Num(String),
+    /// String literal *contents* (escapes unprocessed, quotes and any
+    /// raw-string hashes stripped).  Covers `"…"`, `r"…"`, `r#"…"#`
+    /// and their `b`-prefixed forms.
+    Str(String),
+    /// Character or byte literal (contents irrelevant to any analysis).
+    Char,
+    /// Punctuation; multi-character only for `::`, `->`, `=>`, `..`,
+    /// `..=`, `...`.
+    Punct(String),
+}
+
+impl Tok {
+    /// Identifier text, if this token is one.
+    pub fn ident(&self) -> Option<&str> {
+        match self {
+            Tok::Ident(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// True if this token is the punctuation `p`.
+    pub fn is_punct(&self, p: &str) -> bool {
+        matches!(self, Tok::Punct(s) if s == p)
+    }
+
+    /// True if this token is the identifier/keyword `k`.
+    pub fn is_ident(&self, k: &str) -> bool {
+        matches!(self, Tok::Ident(s) if s == k)
+    }
+}
+
+/// A token plus its source location (1-based line, 0-based char column).
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: usize,
+    pub col: usize,
+}
+
+/// Full lexer output: the token stream plus per-line comment text
+/// (comment characters at their original columns, everything else
+/// blanked — the view the suppression parser works on).
+#[derive(Clone, Debug)]
+pub struct Lexed {
+    pub tokens: Vec<Token>,
+    pub comments: Vec<String>,
+    /// Char length of each source line (for masked-view reconstruction).
+    line_lens: Vec<usize>,
+}
+
+/// Source split into a masked code view (comments, string and char
+/// literal *contents* blanked to spaces, line structure preserved) and
+/// the comment text per line — srclint's working representation.
+pub struct Masked {
+    pub code: Vec<String>,
+    pub comments: Vec<String>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Character-level cursor with line/column tracking and per-line
+/// comment accumulation.
+struct Scanner {
+    cs: Vec<char>,
+    i: usize,
+    line: usize, // 1-based
+    col: usize,  // 0-based, chars
+    comments: Vec<String>,
+    line_lens: Vec<usize>,
+}
+
+impl Scanner {
+    fn new(src: &str) -> Self {
+        let line_lens: Vec<usize> = src.split('\n').map(|l| l.chars().count()).collect();
+        let n_lines = line_lens.len();
+        Scanner {
+            cs: src.chars().collect(),
+            i: 0,
+            line: 1,
+            col: 0,
+            comments: vec![String::new(); n_lines],
+            line_lens,
+        }
+    }
+
+    fn peek(&self, k: usize) -> Option<char> {
+        self.cs.get(self.i + k).copied()
+    }
+
+    fn cur(&self) -> Option<char> {
+        self.peek(0)
+    }
+
+    /// Advance one char, maintaining line/col.
+    fn bump(&mut self) -> Option<char> {
+        let c = self.cur()?;
+        self.i += 1;
+        if c == '\n' {
+            self.line += 1;
+            self.col = 0;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    /// Record `c` (just consumed) as comment text at the position it
+    /// occupied.
+    fn note_comment(&mut self, c: char, line: usize, col: usize) {
+        if c == '\n' {
+            return;
+        }
+        let buf = &mut self.comments[line - 1];
+        while buf.chars().count() < col {
+            buf.push(' ');
+        }
+        buf.push(c);
+    }
+}
+
+/// Lex `src` into tokens + comment lines.  Never fails: unrecognized
+/// characters become single-char punctuation.
+pub fn lex(src: &str) -> Lexed {
+    let mut s = Scanner::new(src);
+    let mut tokens: Vec<Token> = Vec::new();
+    while let Some(c) = s.cur() {
+        let (line, col) = (s.line, s.col);
+        // Line comment (incl. doc comments).
+        if c == '/' && s.peek(1) == Some('/') {
+            while let Some(ch) = s.cur() {
+                if ch == '\n' {
+                    break;
+                }
+                let (l, co) = (s.line, s.col);
+                s.bump();
+                s.note_comment(ch, l, co);
+            }
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && s.peek(1) == Some('*') {
+            let mut depth = 0usize;
+            loop {
+                match (s.cur(), s.peek(1)) {
+                    (Some('/'), Some('*')) => {
+                        depth += 1;
+                        for _ in 0..2 {
+                            let (l, co, ch) = (s.line, s.col, s.cur().expect("peeked"));
+                            s.bump();
+                            s.note_comment(ch, l, co);
+                        }
+                    }
+                    (Some('*'), Some('/')) => {
+                        depth -= 1;
+                        for _ in 0..2 {
+                            let (l, co, ch) = (s.line, s.col, s.cur().expect("peeked"));
+                            s.bump();
+                            s.note_comment(ch, l, co);
+                        }
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    (Some(ch), _) => {
+                        let (l, co) = (s.line, s.col);
+                        s.bump();
+                        s.note_comment(ch, l, co);
+                    }
+                    (None, _) => break,
+                }
+            }
+            continue;
+        }
+        // Raw strings r"…" / r#"…"# / br#"…"# and byte strings b"…".
+        if c == 'r' || c == 'b' {
+            let prev_ident = s.i > 0 && is_ident_char(s.cs[s.i - 1]);
+            if !prev_ident {
+                if let Some(tok) = try_string_prefix(&mut s) {
+                    tokens.push(Token { tok, line, col });
+                    continue;
+                }
+            }
+        }
+        // Ordinary string.
+        if c == '"' {
+            s.bump();
+            let content = scan_string_body(&mut s);
+            tokens.push(Token { tok: Tok::Str(content), line, col });
+            continue;
+        }
+        // Char literal vs lifetime: only 'x' or '\…' are literals.
+        if c == '\'' {
+            let is_escape = s.peek(1) == Some('\\');
+            let is_short = s.peek(2) == Some('\'') && s.peek(1) != Some('\\');
+            if is_escape || is_short {
+                s.bump(); // opening quote
+                while let Some(ch) = s.cur() {
+                    if ch == '\\' {
+                        s.bump();
+                        s.bump();
+                        continue;
+                    }
+                    s.bump();
+                    if ch == '\'' {
+                        break;
+                    }
+                }
+                tokens.push(Token { tok: Tok::Char, line, col });
+                continue;
+            }
+            // Lifetime: quote + ident chars.
+            let mut text = String::from('\'');
+            s.bump();
+            while let Some(ch) = s.cur() {
+                if is_ident_char(ch) {
+                    text.push(ch);
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+            tokens.push(Token { tok: Tok::Lifetime(text), line, col });
+            continue;
+        }
+        // Identifier / keyword.
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while let Some(ch) = s.cur() {
+                if is_ident_char(ch) {
+                    text.push(ch);
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+            tokens.push(Token { tok: Tok::Ident(text), line, col });
+            continue;
+        }
+        // Number.
+        if c.is_ascii_digit() {
+            let text = scan_number(&mut s);
+            tokens.push(Token { tok: Tok::Num(text), line, col });
+            continue;
+        }
+        // Whitespace.
+        if c.is_whitespace() {
+            s.bump();
+            continue;
+        }
+        // Punctuation: glue only the operators the parser needs.
+        let tok = scan_punct(&mut s);
+        tokens.push(Token { tok, line, col });
+    }
+    Lexed { tokens, comments: s.comments, line_lens: s.line_lens }
+}
+
+/// Try to consume a `r"…"`/`r#"…"#`/`br#"…"#`/`b"…"`/`b'x'` literal at
+/// the cursor (which sits on `r` or `b`).  Returns the token, or None
+/// if this is a plain identifier.
+fn try_string_prefix(s: &mut Scanner) -> Option<Tok> {
+    let c = s.cur().expect("caller checked");
+    let mut j = 1usize; // offset past the prefix letter(s)
+    if c == 'b' {
+        match s.peek(1) {
+            Some('\'') => {
+                // Byte literal b'x'.
+                s.bump(); // b
+                s.bump(); // '
+                while let Some(ch) = s.cur() {
+                    if ch == '\\' {
+                        s.bump();
+                        s.bump();
+                        continue;
+                    }
+                    s.bump();
+                    if ch == '\'' {
+                        break;
+                    }
+                }
+                return Some(Tok::Char);
+            }
+            Some('"') => {
+                s.bump(); // b
+                s.bump(); // "
+                return Some(Tok::Str(scan_string_body(s)));
+            }
+            Some('r') => j = 2,
+            _ => return None,
+        }
+    }
+    // Raw string: r or br, then #*, then ".
+    let mut hashes = 0usize;
+    while s.peek(j + hashes) == Some('#') {
+        hashes += 1;
+    }
+    if s.peek(j + hashes) != Some('"') {
+        return None;
+    }
+    for _ in 0..j + hashes + 1 {
+        s.bump();
+    }
+    let mut content = String::new();
+    'raw: while let Some(ch) = s.cur() {
+        if ch == '"' {
+            let mut k = 0usize;
+            while k < hashes && s.peek(1 + k) == Some('#') {
+                k += 1;
+            }
+            if k == hashes {
+                for _ in 0..=hashes {
+                    s.bump();
+                }
+                break 'raw;
+            }
+        }
+        content.push(ch);
+        s.bump();
+    }
+    Some(Tok::Str(content))
+}
+
+/// Scan an ordinary (cooked) string body after the opening quote.
+fn scan_string_body(s: &mut Scanner) -> String {
+    let mut content = String::new();
+    while let Some(ch) = s.cur() {
+        if ch == '\\' {
+            content.push(ch);
+            s.bump();
+            if let Some(esc) = s.cur() {
+                content.push(esc);
+                s.bump();
+            }
+            continue;
+        }
+        if ch == '"' {
+            s.bump();
+            break;
+        }
+        content.push(ch);
+        s.bump();
+    }
+    content
+}
+
+/// Scan a numeric literal (cursor on the first digit).
+fn scan_number(s: &mut Scanner) -> String {
+    let mut text = String::new();
+    let radix_prefix = s.cur() == Some('0')
+        && matches!(s.peek(1), Some('x') | Some('o') | Some('b') | Some('X') | Some('O') | Some('B'));
+    if radix_prefix {
+        text.push(s.bump().expect("digit"));
+        text.push(s.bump().expect("radix"));
+        while let Some(ch) = s.cur() {
+            if ch.is_ascii_alphanumeric() || ch == '_' {
+                text.push(ch);
+                s.bump();
+            } else {
+                break;
+            }
+        }
+        return text;
+    }
+    while let Some(ch) = s.cur() {
+        if ch.is_ascii_digit() || ch == '_' {
+            text.push(ch);
+            s.bump();
+        } else {
+            break;
+        }
+    }
+    // Fractional part — but never eat `..` (range) or `.method()`.
+    if s.cur() == Some('.') && s.peek(1).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+        text.push('.');
+        s.bump();
+        while let Some(ch) = s.cur() {
+            if ch.is_ascii_digit() || ch == '_' {
+                text.push(ch);
+                s.bump();
+            } else {
+                break;
+            }
+        }
+    }
+    // Exponent.
+    if matches!(s.cur(), Some('e') | Some('E')) {
+        let sign = matches!(s.peek(1), Some('+') | Some('-'));
+        let digit_at = if sign { 2 } else { 1 };
+        if s.peek(digit_at).map(|c| c.is_ascii_digit()).unwrap_or(false) {
+            text.push(s.bump().expect("e"));
+            if sign {
+                text.push(s.bump().expect("sign"));
+            }
+            while let Some(ch) = s.cur() {
+                if ch.is_ascii_digit() || ch == '_' {
+                    text.push(ch);
+                    s.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    // Type suffix (u32, f64, usize, …).
+    while let Some(ch) = s.cur() {
+        if is_ident_char(ch) {
+            text.push(ch);
+            s.bump();
+        } else {
+            break;
+        }
+    }
+    text
+}
+
+/// Scan one punctuation token, gluing only parser-relevant operators.
+fn scan_punct(s: &mut Scanner) -> Tok {
+    let c = s.bump().expect("caller checked");
+    let next = s.cur();
+    let glued: Option<&str> = match (c, next) {
+        (':', Some(':')) => Some("::"),
+        ('-', Some('>')) => Some("->"),
+        ('=', Some('>')) => Some("=>"),
+        ('.', Some('.')) => {
+            s.bump();
+            return match s.cur() {
+                Some('=') => {
+                    s.bump();
+                    Tok::Punct("..=".to_string())
+                }
+                Some('.') => {
+                    s.bump();
+                    Tok::Punct("...".to_string())
+                }
+                _ => Tok::Punct("..".to_string()),
+            };
+        }
+        _ => None,
+    };
+    if let Some(op) = glued {
+        s.bump();
+        return Tok::Punct(op.to_string());
+    }
+    Tok::Punct(c.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// srclint's masked view, reconstructed from the token stream
+// ---------------------------------------------------------------------------
+
+/// Rebuild srclint's per-line masked code view from a lex: code tokens
+/// at their original columns, everything else (comments, string/char
+/// contents) blanked to spaces.
+pub fn mask(src: &str) -> Masked {
+    let lexed = lex(src);
+    let mut code: Vec<Vec<char>> =
+        lexed.line_lens.iter().map(|&n| vec![' '; n]).collect();
+    for t in &lexed.tokens {
+        let text: &str = match &t.tok {
+            Tok::Ident(s) => s,
+            Tok::Lifetime(s) => s,
+            Tok::Num(s) => s,
+            Tok::Punct(s) => s,
+            // String/char contents stay masked.
+            Tok::Str(_) | Tok::Char => continue,
+        };
+        let row = &mut code[t.line - 1];
+        for (k, ch) in text.chars().enumerate() {
+            if let Some(slot) = row.get_mut(t.col + k) {
+                *slot = ch;
+            }
+        }
+    }
+    let mut comments = lexed.comments;
+    // Pad comment lines to the source line length so column-aligned
+    // consumers see a stable shape.
+    for (li, buf) in comments.iter_mut().enumerate() {
+        let want = lexed.line_lens[li];
+        while buf.chars().count() < want {
+            buf.push(' ');
+        }
+    }
+    Masked { code: code.into_iter().map(|v| v.into_iter().collect()).collect(), comments }
+}
+
+// ---------------------------------------------------------------------------
+// Suppression parsing (shared grammar)
+// ---------------------------------------------------------------------------
+
+/// Minimum alphanumeric length for a justification to count.
+const MIN_JUSTIFICATION: usize = 8;
+
+fn justified(after: &str) -> bool {
+    let reason: String = after.chars().filter(|c| c.is_alphanumeric() || *c == ' ').collect();
+    reason.trim().len() >= MIN_JUSTIFICATION
+}
+
+/// Returns `Some(justified)` if line `li` (0-based) or the line above
+/// carries `srclint: allow(<rule>)`; `justified` is false when the
+/// allow has no reason text after the closing paren.
+pub fn allow_at(comments: &[String], li: usize, rule: &str) -> Option<bool> {
+    let needle = format!("srclint: allow({rule})");
+    for cand in [Some(li), li.checked_sub(1)].into_iter().flatten() {
+        if let Some(pos) = comments[cand].find(&needle) {
+            return Some(justified(&comments[cand][pos + needle.len()..]));
+        }
+    }
+    None
+}
+
+/// Returns `Some(justified)` if any comment line in the file carries a
+/// file-scoped `srclint: allow-file(<rule>)` — detlint's coarse-grained
+/// suppression for rules (like `index-reachable`) where a module-wide
+/// invariant covers every site.
+pub fn file_allow(comments: &[String], rule: &str) -> Option<bool> {
+    let needle = format!("srclint: allow-file({rule})");
+    for line in comments {
+        if let Some(pos) = line.find(&needle) {
+            return Some(justified(&line[pos + needle.len()..]));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.tok.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn splits_nested_generic_closers() {
+        let toks = lex("Vec<Arc<Mutex<T>>>").tokens;
+        let closers = toks.iter().filter(|t| t.tok.is_punct(">")).count();
+        assert_eq!(closers, 3, "{toks:?}");
+        // And `>>=`-style operators degrade to single '>' too.
+        let toks = lex("a >>= b").tokens;
+        assert_eq!(toks.iter().filter(|t| t.tok.is_punct(">")).count(), 2);
+    }
+
+    #[test]
+    fn raw_strings_keep_contents() {
+        let toks = lex(r####"let s = r#"panic!("x") "quoted""#;"####).tokens;
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, [r#"panic!("x") "quoted""#]);
+    }
+
+    #[test]
+    fn byte_and_cooked_strings() {
+        let toks = lex(r#"let a = b"bytes"; let c = "say \"hi\"";"#).tokens;
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Str(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(strs, ["bytes", r#"say \"hi\""#]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = '\\''; let d = 'y'; }").tokens;
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Lifetime(s) => Some(s.as_str()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lifetimes, ["'a", "'a"]);
+        assert_eq!(toks.iter().filter(|t| matches!(t.tok, Tok::Char)).count(), 2);
+    }
+
+    #[test]
+    fn numbers_with_suffixes_and_exponents() {
+        let src = "let a = 1_000u32 + 0x1f; let b = 2.5e-3f64; let r = 0..n; let t = x.0;";
+        let nums: Vec<String> = lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| match &t.tok {
+                Tok::Num(s) => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(nums, ["1_000u32", "0x1f", "2.5e-3f64", "0", "0"]);
+        assert!(lex(src).tokens.iter().any(|t| t.tok.is_punct("..")));
+    }
+
+    #[test]
+    fn comments_collected_per_line() {
+        let src = "let x = 1; // trailing note\n/* block\nspans lines */ let y = 2;\n";
+        let lx = lex(src);
+        assert!(lx.comments[0].contains("trailing note"));
+        assert!(lx.comments[1].contains("block"));
+        assert!(lx.comments[2].contains("spans lines"));
+        assert!(idents(src).contains(&"y".to_string()));
+    }
+
+    #[test]
+    fn spans_are_line_and_col_exact() {
+        let src = "fn foo() {\n    bar();\n}\n";
+        let lx = lex(src);
+        let bar = lx
+            .tokens
+            .iter()
+            .find(|t| t.tok.is_ident("bar"))
+            .expect("bar token");
+        assert_eq!((bar.line, bar.col), (2, 4));
+    }
+
+    #[test]
+    fn mask_matches_legacy_shape() {
+        let src = "let s = \"std::sync::Mutex\"; // note\nlet t = r#\"panic!(\"x\")\"#;\n";
+        let m = mask(src);
+        assert!(!m.code[0].contains("std::sync"));
+        assert!(m.code[0].contains("let s ="));
+        assert!(!m.code[1].contains("panic!"));
+        assert!(m.comments[0].contains("note"));
+    }
+
+    #[test]
+    fn file_allow_requires_justification() {
+        let ok = ["// srclint: allow-file(index-reachable) — dense kernel, dims checked".to_string()];
+        assert_eq!(file_allow(&ok, "index-reachable"), Some(true));
+        let bare = ["// srclint: allow-file(index-reachable)".to_string()];
+        assert_eq!(file_allow(&bare, "index-reachable"), Some(false));
+        assert_eq!(file_allow(&bare, "other-rule"), None);
+    }
+}

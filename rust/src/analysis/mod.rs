@@ -1,0 +1,247 @@
+//! detlint — AST-level determinism and panic-reachability analysis.
+//!
+//! Three analyses over a crate-wide parse of `rust/src`:
+//!
+//! 1. **Panic reachability** (`panic-reachable`, `index-reachable`) —
+//!    interprocedural may-panic propagation from the hot-path entry
+//!    points (`sim::engine::run*`, `sim::dynamic::run_dynamic*`,
+//!    `ConcurrentRouter`/`RouteHandle::route*`, `policy::grin::solve*`).
+//! 2. **Determinism dataflow** (`hash-iteration`, `float-sum-order`,
+//!    `raw-spawn`, `clock-in-results`, `discarded-result`,
+//!    `as-truncation`) — nondeterminism sources and silent data loss,
+//!    with wall-clock/thread-id checks scoped to fns that can reach a
+//!    result-struct construction.
+//! 3. **Metric plumbing** (`metric-plumbing`) — every `pub SimResult`
+//!    metric must be registered in [`checks::PLUMBING`] with its
+//!    report-side counterpart, sweep-JSON key, or an exemption
+//!    rationale.
+//!
+//! Findings are suppressed with the same grammar srclint uses —
+//! `// srclint: allow(<rule>) — <justification>` on the offending line
+//! or the line above — plus a file-scoped
+//! `// srclint: allow-file(<rule>) — <justification>` for rules where
+//! one module-wide invariant covers every site.  A suppression whose
+//! justification is shorter than 8 characters is itself a finding.
+//!
+//! Zero external dependencies, like everything else in this crate: the
+//! lexer, parser, call graph and checks are all in-repo.
+
+pub mod callgraph;
+pub mod checks;
+pub mod lexer;
+pub mod parse;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use callgraph::{flatten_fns, Graph};
+use checks::Finding;
+use lexer::{allow_at, file_allow, lex, Tok};
+use parse::parse_items;
+
+/// One lexed+parsed source file.
+pub struct SourceFile {
+    /// Repo-relative path, `/`-separated (`sim/engine.rs`).
+    pub path: String,
+    /// Per-line comment text (for allow parsing).
+    pub comments: Vec<String>,
+    pub items: Vec<parse::Item>,
+    /// Cooked string literals with their lines (for Emit needles).
+    pub strings: Vec<(String, usize)>,
+}
+
+/// Lex and parse in-memory sources: `(path, source)` pairs.
+pub fn load_sources(files: &[(String, String)]) -> Vec<SourceFile> {
+    let mut out: Vec<SourceFile> = files
+        .iter()
+        .map(|(path, src)| {
+            let lexed = lex(src);
+            let strings = lexed
+                .tokens
+                .iter()
+                .filter_map(|t| match &t.tok {
+                    Tok::Str(s) => Some((s.clone(), t.line)),
+                    _ => None,
+                })
+                .collect();
+            SourceFile {
+                path: path.clone(),
+                comments: lexed.comments.clone(),
+                items: parse_items(&lexed.tokens),
+                strings,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    out
+}
+
+/// Run all three analyses over parsed sources and apply suppressions.
+/// `features` lists enabled cargo features (for `#[cfg(feature)]`).
+pub fn analyze(sources: &[SourceFile], features: &[String]) -> Vec<Finding> {
+    let mut fns = Vec::new();
+    for s in sources {
+        flatten_fns(&s.path, &s.items, features, &mut fns);
+    }
+    let g = Graph::build(fns);
+
+    let comment_map: BTreeMap<String, Vec<String>> = sources
+        .iter()
+        .map(|s| (s.path.clone(), s.comments.clone()))
+        .collect();
+    let mut raw = Vec::new();
+    raw.extend(checks::check_panic_reachability(&g, &comment_map));
+    raw.extend(checks::check_determinism(&g));
+
+    let parsed: Vec<(String, Vec<parse::Item>)> = sources
+        .iter()
+        .map(|s| (s.path.clone(), s.items.clone()))
+        .collect();
+    let cli_strings: Vec<String> = sources
+        .iter()
+        .filter(|s| s.path.starts_with("cli/"))
+        .flat_map(|s| s.strings.iter().map(|(t, _)| t.clone()))
+        .collect();
+    if let Some(inp) = checks::plumbing_inputs(&parsed, cli_strings) {
+        raw.extend(checks::check_plumbing(&inp));
+    }
+
+    // Apply suppressions.
+    let comments: BTreeMap<&str, &Vec<String>> =
+        sources.iter().map(|s| (s.path.as_str(), &s.comments)).collect();
+    let mut out = Vec::new();
+    for mut f in raw {
+        let cs = match comments.get(f.file.as_str()) {
+            Some(c) => *c,
+            None => {
+                out.push(f);
+                continue;
+            }
+        };
+        // For aggregated per-fn rules the anchor line is the first
+        // seed; a line-level allow there covers the whole finding.
+        let li = f.line.saturating_sub(1); // comments are 0-indexed
+        let mut line_allow = if li < cs.len() { allow_at(cs, li, f.rule) } else { None };
+        // A justified srclint `allow(instant-now)` asserts the same
+        // invariant as `clock-in-results` — honor it at the same site.
+        if line_allow != Some(true) && f.rule == checks::RULE_CLOCK && li < cs.len() {
+            if allow_at(cs, li, "instant-now") == Some(true) {
+                line_allow = Some(true);
+            }
+        }
+        let verdict = line_allow.or_else(|| file_allow(cs, f.rule));
+        match verdict {
+            Some(true) => {} // justified: suppressed
+            Some(false) => {
+                f.msg = format!(
+                    "{} [suppression present but justification is too short — \
+                     write at least 8 characters of rationale]",
+                    f.msg
+                );
+                out.push(f);
+            }
+            None => out.push(f),
+        }
+    }
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    // A construct can trip the same rule through two detectors (e.g. a
+    // `for` loop over `m.iter()` hits hash-iteration via both the loop
+    // and the method call) — keep one finding per (file, line, rule).
+    out.dedup_by(|a, b| a.file == b.file && a.line == b.line && a.rule == b.rule);
+    out
+}
+
+/// Convenience for tests: analyze in-memory `(path, source)` pairs.
+pub fn analyze_sources(files: &[(String, String)], features: &[String]) -> Vec<Finding> {
+    analyze(&load_sources(files), features)
+}
+
+/// Walk `src_root` (the crate's `src/` directory), read every `.rs`
+/// file, and run the analyses.  Paths in findings are relative to
+/// `src_root`, `/`-separated.
+pub fn run(src_root: &Path, features: &[String]) -> io::Result<Vec<Finding>> {
+    let mut files: Vec<(String, String)> = Vec::new();
+    let mut stack: Vec<PathBuf> = vec![src_root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> =
+            fs::read_dir(&dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+                let rel = p
+                    .strip_prefix(src_root)
+                    .expect("walked path under root")
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                files.push((rel, fs::read_to_string(&p)?));
+            }
+        }
+    }
+    Ok(analyze_sources(&files, features))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::checks::{RULE_INDEX, RULE_PANIC};
+    use super::*;
+
+    fn src(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        files.iter().map(|(p, s)| (p.to_string(), s.to_string())).collect()
+    }
+
+    #[test]
+    fn allow_suppresses_justified_findings() {
+        let files = src(&[(
+            "sim/engine.rs",
+            "pub fn run() {\n    // srclint: allow(panic-reachable) — queue verified non-empty by caller\n    q.first().unwrap();\n}\n",
+        )]);
+        let findings = analyze_sources(&files, &[]);
+        assert!(
+            findings.iter().all(|f| f.rule != RULE_PANIC),
+            "justified allow should suppress: {findings:?}"
+        );
+    }
+
+    #[test]
+    fn unjustified_allow_still_fires() {
+        let files = src(&[(
+            "sim/engine.rs",
+            "pub fn run() {\n    // srclint: allow(panic-reachable) — no\n    q.first().unwrap();\n}\n",
+        )]);
+        let findings = analyze_sources(&files, &[]);
+        assert!(findings.iter().any(|f| f.rule == RULE_PANIC
+            && f.msg.contains("justification is too short")));
+    }
+
+    #[test]
+    fn file_allow_covers_all_sites() {
+        let files = src(&[(
+            "sim/engine.rs",
+            "// srclint: allow-file(index-reachable) — dense kernels, dims checked at build\npub fn run(v: &[u64]) {\n    let _x = v[0];\n    let _y = v[1];\n}\n",
+        )]);
+        let findings = analyze_sources(&files, &[]);
+        assert!(findings.iter().all(|f| f.rule != RULE_INDEX), "{findings:?}");
+    }
+
+    #[test]
+    fn findings_are_sorted_and_deterministic() {
+        let files = src(&[
+            ("sim/engine.rs", "pub fn run() { b::go(); x.unwrap(); }\n"),
+            ("sim/b.rs", "pub fn go() { y.unwrap(); }\n"),
+        ]);
+        let a = analyze_sources(&files, &[]);
+        let b = analyze_sources(&files, &[]);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_by(|x, y| {
+            (x.file.as_str(), x.line, x.rule).cmp(&(y.file.as_str(), y.line, y.rule))
+        });
+        assert_eq!(a, sorted);
+    }
+}

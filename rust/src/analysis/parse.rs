@@ -1,0 +1,1267 @@
+//! Recursive-descent item/fact parser over the shared token lexer.
+//!
+//! Produces a per-file AST that is deliberately shallow: items (fns,
+//! impls, structs, enums, mods, …) with names, line spans, `#[cfg]`
+//! gates and nesting, struct field declarations with their raw type
+//! text, and — for every fn — a flat list of *body facts*: calls,
+//! method chains, indexing ops, `as` casts, `for` loops, `let _ =`
+//! discards and struct-literal constructions.  No type inference; the
+//! analyses in [`crate::analysis::checks`] work on names, paths and
+//! declared types, which is exactly the level the repo's invariants
+//! are stated at.
+
+use super::lexer::{Tok, Token};
+
+/// Item kinds the parser distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ItemKind {
+    Fn,
+    Struct,
+    Enum,
+    Union,
+    Trait,
+    Impl,
+    Mod,
+    Use,
+    Const,
+    Static,
+    TypeAlias,
+    MacroDef,
+    ExternBlock,
+}
+
+/// One parsed item.
+#[derive(Clone, Debug)]
+pub struct Item {
+    pub kind: ItemKind,
+    /// Fn/struct/… name; for impls, the self-type name (generics
+    /// stripped): `impl<T> Foo<T> for Bar<T>` → `Bar`.
+    pub name: String,
+    /// Line of the introducing keyword (1-based).
+    pub line: usize,
+    /// Line of the item's closing token.
+    pub end_line: usize,
+    /// Raw `#[cfg(…)]` argument texts attached to this item.
+    pub cfg: Vec<String>,
+    /// For impls: the trait being implemented, if any (`Clock`,
+    /// `Policy for`, …; generics stripped).
+    pub trait_name: Option<String>,
+    /// Struct fields (named-struct items only).
+    pub fields: Vec<FieldDecl>,
+    /// Nested items (mod bodies, impl bodies).
+    pub children: Vec<Item>,
+    /// Body facts (fns with a body only).
+    pub body: Option<FnBody>,
+}
+
+/// One named struct field.
+#[derive(Clone, Debug)]
+pub struct FieldDecl {
+    pub name: String,
+    /// Raw type text, tokens joined with spaces (`Vec < u64 >`).
+    pub ty: String,
+    pub line: usize,
+    pub public: bool,
+}
+
+/// Facts extracted from one fn body.
+#[derive(Clone, Debug, Default)]
+pub struct FnBody {
+    /// Free/associated calls by path (`thread::spawn`, `grin::solve`).
+    pub calls: Vec<CallFact>,
+    /// Method calls with receiver/chain hints.
+    pub methods: Vec<MethodFact>,
+    /// Macro invocations (`panic`, `assert_eq`, `vec`, …).
+    pub macros: Vec<MacroFact>,
+    /// Lines with slice/array indexing expressions.
+    pub indexes: Vec<usize>,
+    /// `as` casts with their target type head.
+    pub casts: Vec<CastFact>,
+    /// `for … in <expr>` loops.
+    pub loops: Vec<ForFact>,
+    /// `let _ = …;` statements.
+    pub discards: Vec<DiscardFact>,
+    /// `Name { … }` struct-literal constructions (capitalized names).
+    pub struct_lits: Vec<StructLitFact>,
+    /// Locals/params whose declared or constructed type is a hash
+    /// collection (`HashMap`/`HashSet`).
+    pub hash_locals: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CallFact {
+    pub path: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MethodFact {
+    pub name: String,
+    /// Leftmost base of the postfix chain (`self.phases.iter().sum()`
+    /// → `self.phases`; `std::thread::Builder::new()…` → the path).
+    pub base: String,
+    /// Method names earlier in the same chain, left to right.
+    pub chain: Vec<String>,
+    /// Turbofish text, if any (`sum::<f64>()` → `f64`).
+    pub turbofish: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct MacroFact {
+    pub name: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct CastFact {
+    /// Head identifier of the target type (`u32`, `f64`, `usize`).
+    pub to: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ForFact {
+    /// Identifiers appearing in the iterated expression.
+    pub idents: Vec<String>,
+    /// Iterated expression, tokens joined with spaces.
+    pub text: String,
+    pub line: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct DiscardFact {
+    pub line: usize,
+    /// True when the discarded expression contains a call.
+    pub has_call: bool,
+}
+
+#[derive(Clone, Debug)]
+pub struct StructLitFact {
+    pub name: String,
+    pub line: usize,
+}
+
+/// Parse a token stream into top-level items.
+pub fn parse_items(toks: &[Token]) -> Vec<Item> {
+    let mut p = Parser { toks, i: 0 };
+    p.items(usize::MAX)
+}
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    // The cursor hands out owned tokens: a lint pass over a few
+    // hundred files doesn't need zero-copy, and owned tokens keep
+    // every `while let Some(t) = p.cur()` loop free to advance `p`.
+    fn peek(&self, k: usize) -> Option<Token> {
+        self.toks.get(self.i + k).cloned()
+    }
+
+    fn cur(&self) -> Option<Token> {
+        self.peek(0)
+    }
+
+    fn bump(&mut self) {
+        if self.i < self.toks.len() {
+            self.i += 1;
+        }
+    }
+
+    fn at_punct(&self, p: &str) -> bool {
+        self.cur().map(|t| t.tok.is_punct(p)).unwrap_or(false)
+    }
+
+    fn at_ident(&self, k: &str) -> bool {
+        self.cur().map(|t| t.tok.is_ident(k)).unwrap_or(false)
+    }
+
+    fn line(&self) -> usize {
+        self.cur().map(|t| t.line).unwrap_or_else(|| {
+            self.toks.last().map(|t| t.line).unwrap_or(1)
+        })
+    }
+
+    fn last_line(&self) -> usize {
+        self.toks[..self.i].last().map(|t| t.line).unwrap_or(1)
+    }
+
+    /// Skip a balanced group whose opener is at the cursor.  `open`
+    /// and `close` are single-char puncts (`{`/`}`, `(`/`)`, `[`/`]`,
+    /// `<`/`>`).  Returns the token range of the *interior*.
+    fn skip_balanced(&mut self, open: &str, close: &str) -> (usize, usize) {
+        debug_assert!(self.at_punct(open));
+        self.bump();
+        let start = self.i;
+        let mut depth = 1usize;
+        while let Some(t) = self.cur() {
+            if t.tok.is_punct(open) {
+                depth += 1;
+            } else if t.tok.is_punct(close) {
+                depth -= 1;
+                if depth == 0 {
+                    let end = self.i;
+                    self.bump();
+                    return (start, end);
+                }
+            }
+            self.bump();
+        }
+        (start, self.i)
+    }
+
+    /// Skip generics `<…>` if present.  Angle depth only — our lexer
+    /// never glues `>>`, so nested generics close one token at a time.
+    fn skip_generics(&mut self) {
+        if self.at_punct("<") {
+            self.skip_balanced("<", ">");
+        }
+    }
+
+    /// Collect attributes at the cursor; returns cfg argument texts.
+    /// Inner attributes (`#![…]`) are skipped without attachment.
+    fn attrs(&mut self) -> Vec<String> {
+        let mut cfgs = Vec::new();
+        loop {
+            if !self.at_punct("#") {
+                return cfgs;
+            }
+            let inner = self.peek(1).map(|t| t.tok.is_punct("!")).unwrap_or(false);
+            self.bump(); // '#'
+            if inner {
+                self.bump(); // '!'
+            }
+            if !self.at_punct("[") {
+                return cfgs;
+            }
+            let (s, e) = self.skip_balanced("[", "]");
+            if inner {
+                continue;
+            }
+            let body = &self.toks[s..e];
+            if body.first().map(|t| t.tok.is_ident("cfg")).unwrap_or(false) {
+                // `cfg ( … )` → the predicate text without the parens.
+                let inner = &body[1..];
+                let stripped = if inner.len() >= 2
+                    && inner[0].tok.is_punct("(")
+                    && inner[inner.len() - 1].tok.is_punct(")")
+                {
+                    &inner[1..inner.len() - 1]
+                } else {
+                    inner
+                };
+                cfgs.push(join(stripped));
+            }
+        }
+    }
+
+    /// Parse items until `end_depth` closing braces (or EOF for the
+    /// top level, `end_depth == usize::MAX`).
+    fn items(&mut self, stop_at: usize) -> Vec<Item> {
+        let mut out = Vec::new();
+        while self.i < self.toks.len() && self.i < stop_at {
+            let cfg = self.attrs();
+            // Visibility and modifiers.
+            if self.at_ident("pub") {
+                self.bump();
+                if self.at_punct("(") {
+                    self.skip_balanced("(", ")");
+                }
+            }
+            let mut is_const_item = false;
+            while self.at_ident("unsafe")
+                || self.at_ident("async")
+                || self.at_ident("default")
+                || self.at_ident("extern")
+                || self.at_ident("const")
+            {
+                if self.at_ident("const") {
+                    // `const fn f` is a modifier; `const X: T = …;` an item.
+                    let next_is_fn = self
+                        .peek(1)
+                        .map(|t| t.tok.is_ident("fn"))
+                        .unwrap_or(false);
+                    if !next_is_fn {
+                        is_const_item = true;
+                        break;
+                    }
+                }
+                if self.at_ident("extern") {
+                    // `extern "C" fn` / `extern crate` / extern block.
+                    let block = matches!(
+                        self.peek(1).map(|t| t.tok),
+                        Some(Tok::Str(_))
+                    ) && self
+                        .peek(2)
+                        .map(|t| t.tok.is_punct("{"))
+                        .unwrap_or(false);
+                    if block || self.peek(1).map(|t| t.tok.is_ident("crate")).unwrap_or(false) {
+                        break;
+                    }
+                }
+                self.bump();
+                if matches!(self.cur().map(|t| t.tok), Some(Tok::Str(_))) {
+                    self.bump(); // extern ABI string
+                }
+            }
+            if let Some(item) = self.item(cfg, is_const_item) {
+                out.push(item);
+            }
+            if stop_at != usize::MAX && self.i >= stop_at {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Parse one item at the cursor (modifiers already consumed).
+    fn item(&mut self, cfg: Vec<String>, is_const_item: bool) -> Option<Item> {
+        let line = self.line();
+        let kw = match self.cur().map(|t| t.tok.clone()) {
+            Some(Tok::Ident(k)) => k,
+            _ => {
+                self.bump(); // stray token: skip
+                return None;
+            }
+        };
+        let mk = |kind, name: String, line, end_line, cfg| Item {
+            kind,
+            name,
+            line,
+            end_line,
+            cfg,
+            trait_name: None,
+            fields: Vec::new(),
+            children: Vec::new(),
+            body: None,
+        };
+        match kw.as_str() {
+            "fn" => {
+                self.bump();
+                let name = self.ident_or("?");
+                self.skip_generics();
+                let params = if self.at_punct("(") {
+                    let (ps, pe) = self.skip_balanced("(", ")");
+                    Some((ps, pe))
+                } else {
+                    None
+                };
+                // Return type / where clause: scan to body `{` or `;`.
+                // Generic bounds may contain `<`…`>` but never a brace.
+                while let Some(t) = self.cur() {
+                    if t.tok.is_punct("{") || t.tok.is_punct(";") {
+                        break;
+                    }
+                    if t.tok.is_punct("<") {
+                        self.skip_balanced("<", ">");
+                    } else {
+                        self.bump();
+                    }
+                }
+                let mut item = mk(ItemKind::Fn, name, line, self.line(), cfg);
+                if self.at_punct("{") {
+                    let (s, e) = self.skip_balanced("{", "}");
+                    item.end_line = self.last_line();
+                    let mut body = scan_facts(&self.toks[s..e]);
+                    if let Some((ps, pe)) = params {
+                        // Hash-typed params count as hash locals too.
+                        body.hash_locals.extend(hash_params(&self.toks[ps..pe]));
+                    }
+                    item.body = Some(body);
+                } else {
+                    self.bump(); // ';'
+                }
+                Some(item)
+            }
+            "struct" | "union" => {
+                let kind = if kw == "struct" { ItemKind::Struct } else { ItemKind::Union };
+                self.bump();
+                let name = self.ident_or("?");
+                self.skip_generics();
+                // where clause before the body.
+                while let Some(t) = self.cur() {
+                    if t.tok.is_punct("{") || t.tok.is_punct("(") || t.tok.is_punct(";") {
+                        break;
+                    }
+                    if t.tok.is_punct("<") {
+                        self.skip_balanced("<", ">");
+                    } else {
+                        self.bump();
+                    }
+                }
+                let mut item = mk(kind, name, line, self.line(), cfg);
+                if self.at_punct("{") {
+                    let (s, e) = self.skip_balanced("{", "}");
+                    item.end_line = self.last_line();
+                    item.fields = parse_fields(&self.toks[s..e]);
+                } else if self.at_punct("(") {
+                    self.skip_balanced("(", ")");
+                    self.skip_semi();
+                    item.end_line = self.last_line();
+                } else {
+                    self.bump(); // unit struct ';'
+                }
+                Some(item)
+            }
+            "enum" | "trait" => {
+                let kind = if kw == "enum" { ItemKind::Enum } else { ItemKind::Trait };
+                self.bump();
+                let name = self.ident_or("?");
+                self.skip_generics();
+                while let Some(t) = self.cur() {
+                    if t.tok.is_punct("{") {
+                        break;
+                    }
+                    if t.tok.is_punct("<") {
+                        self.skip_balanced("<", ">");
+                    } else {
+                        self.bump();
+                    }
+                }
+                let mut item = mk(kind, name, line, self.line(), cfg);
+                if self.at_punct("{") {
+                    self.skip_balanced("{", "}");
+                }
+                item.end_line = self.last_line();
+                Some(item)
+            }
+            "impl" => {
+                self.bump();
+                self.skip_generics();
+                // Path (and possibly `Trait for Type`) up to the body.
+                let mut segs: Vec<String> = Vec::new();
+                let mut trait_name = None;
+                while let Some(t) = self.cur() {
+                    if t.tok.is_punct("{") {
+                        break;
+                    }
+                    if t.tok.is_ident("for") {
+                        trait_name = last_type_head(&segs);
+                        segs.clear();
+                        self.bump();
+                        continue;
+                    }
+                    if t.tok.is_ident("where") {
+                        // The self type is complete; skip bounds.
+                        while let Some(t) = self.cur() {
+                            if t.tok.is_punct("{") {
+                                break;
+                            }
+                            if t.tok.is_punct("<") {
+                                self.skip_balanced("<", ">");
+                            } else {
+                                self.bump();
+                            }
+                        }
+                        break;
+                    }
+                    if t.tok.is_punct("<") {
+                        self.skip_balanced("<", ">");
+                        continue;
+                    }
+                    if let Tok::Ident(s) = &t.tok {
+                        segs.push(s.clone());
+                    }
+                    self.bump();
+                }
+                let name = last_type_head(&segs).unwrap_or_else(|| "?".to_string());
+                let mut item = mk(ItemKind::Impl, name, line, self.line(), cfg);
+                item.trait_name = trait_name;
+                if self.at_punct("{") {
+                    let (s, e) = self.skip_balanced("{", "}");
+                    item.end_line = self.last_line();
+                    let mut inner = Parser { toks: &self.toks[s..e], i: 0 };
+                    item.children = inner.items(usize::MAX);
+                }
+                Some(item)
+            }
+            "mod" => {
+                self.bump();
+                let name = self.ident_or("?");
+                let mut item = mk(ItemKind::Mod, name, line, self.line(), cfg);
+                if self.at_punct("{") {
+                    let (s, e) = self.skip_balanced("{", "}");
+                    item.end_line = self.last_line();
+                    let mut inner = Parser { toks: &self.toks[s..e], i: 0 };
+                    item.children = inner.items(usize::MAX);
+                } else {
+                    self.bump(); // `mod foo;`
+                }
+                Some(item)
+            }
+            "use" => {
+                self.bump();
+                self.skip_semi();
+                Some(mk(ItemKind::Use, String::new(), line, self.last_line(), cfg))
+            }
+            "const" | "static" => {
+                let kind = if kw == "const" || is_const_item {
+                    ItemKind::Const
+                } else {
+                    ItemKind::Static
+                };
+                self.bump();
+                if self.at_ident("mut") {
+                    self.bump();
+                }
+                let name = self.ident_or("?");
+                self.skip_semi();
+                Some(mk(kind, name, line, self.last_line(), cfg))
+            }
+            "type" => {
+                self.bump();
+                let name = self.ident_or("?");
+                self.skip_semi();
+                Some(mk(ItemKind::TypeAlias, name, line, self.last_line(), cfg))
+            }
+            "macro_rules" => {
+                self.bump();
+                if self.at_punct("!") {
+                    self.bump();
+                }
+                let name = self.ident_or("?");
+                if self.at_punct("{") {
+                    self.skip_balanced("{", "}");
+                } else if self.at_punct("(") {
+                    self.skip_balanced("(", ")");
+                    self.skip_semi();
+                }
+                Some(mk(ItemKind::MacroDef, name, line, self.last_line(), cfg))
+            }
+            "extern" => {
+                self.bump();
+                if matches!(self.cur().map(|t| t.tok), Some(Tok::Str(_))) {
+                    self.bump();
+                }
+                if self.at_punct("{") {
+                    self.skip_balanced("{", "}");
+                } else {
+                    self.skip_semi(); // extern crate …;
+                }
+                Some(mk(ItemKind::ExternBlock, String::new(), line, self.last_line(), cfg))
+            }
+            _ => {
+                // Unknown construct (item macro invocation, stray
+                // ident): consume one token, stay in sync.
+                self.bump();
+                if self.at_punct("!") {
+                    self.bump();
+                    self.ident_or(""); // optional macro item name
+                    if self.at_punct("{") {
+                        self.skip_balanced("{", "}");
+                    } else if self.at_punct("(") {
+                        self.skip_balanced("(", ")");
+                        self.skip_semi();
+                    } else if self.at_punct("[") {
+                        self.skip_balanced("[", "]");
+                        self.skip_semi();
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    fn ident_or(&mut self, default: &str) -> String {
+        match self.cur().map(|t| t.tok.clone()) {
+            Some(Tok::Ident(s)) => {
+                self.bump();
+                s
+            }
+            _ => default.to_string(),
+        }
+    }
+
+    /// Skip to the `;` that terminates the current item, respecting
+    /// every bracket kind (array types carry interior `;`, initializer
+    /// expressions carry braces).
+    fn skip_semi(&mut self) {
+        let (mut braces, mut parens, mut brackets) = (0i32, 0i32, 0i32);
+        while let Some(t) = self.cur() {
+            match &t.tok {
+                Tok::Punct(p) => match p.as_str() {
+                    "{" => braces += 1,
+                    "}" => braces -= 1,
+                    "(" => parens += 1,
+                    ")" => parens -= 1,
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    ";" if braces == 0 && parens == 0 && brackets == 0 => {
+                        self.bump();
+                        return;
+                    }
+                    _ => {}
+                },
+                _ => {}
+            }
+            self.bump();
+        }
+    }
+}
+
+/// Join token texts with single spaces (for type/cfg/expr snippets).
+pub fn join(toks: &[Token]) -> String {
+    let mut out = String::new();
+    for t in toks {
+        let text: String = match &t.tok {
+            Tok::Ident(s) | Tok::Lifetime(s) | Tok::Num(s) | Tok::Punct(s) => s.clone(),
+            Tok::Str(s) => format!("\"{s}\""),
+            Tok::Char => "'_'".to_string(),
+        };
+        if !out.is_empty() {
+            out.push(' ');
+        }
+        out.push_str(&text);
+    }
+    out
+}
+
+/// Head of the last type path in `segs` (`policy :: grin :: Foo` style
+/// lists arrive pre-filtered to idents; the self-type head is the last
+/// segment).
+fn last_type_head(segs: &[String]) -> Option<String> {
+    segs.last().cloned()
+}
+
+/// Parse named struct fields from the interior tokens of a struct body.
+fn parse_fields(toks: &[Token]) -> Vec<FieldDecl> {
+    let mut out = Vec::new();
+    let mut p = Parser { toks, i: 0 };
+    loop {
+        p.attrs();
+        let public = if p.at_ident("pub") {
+            p.bump();
+            if p.at_punct("(") {
+                p.skip_balanced("(", ")");
+            }
+            true
+        } else {
+            false
+        };
+        let (name, line) = match p.cur() {
+            Some(t) => match &t.tok {
+                Tok::Ident(s) => {
+                    let v = (s.clone(), t.line);
+                    p.bump();
+                    v
+                }
+                _ => break,
+            },
+            None => break,
+        };
+        if !p.at_punct(":") {
+            break;
+        }
+        p.bump();
+        // Type runs to the next top-level comma.
+        let ty_start = p.i;
+        let (mut parens, mut brackets) = (0i32, 0i32);
+        while let Some(t) = p.cur() {
+            match &t.tok {
+                Tok::Punct(q) => match q.as_str() {
+                    "<" => {
+                        p.skip_balanced("<", ">");
+                        continue;
+                    }
+                    "(" => parens += 1,
+                    ")" => parens -= 1,
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    "," if parens == 0 && brackets == 0 => break,
+                    _ => {}
+                },
+                _ => {}
+            }
+            p.bump();
+        }
+        let ty = join(&toks[ty_start..p.i]);
+        out.push(FieldDecl { name, ty, line, public });
+        if p.at_punct(",") {
+            p.bump();
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fn-body fact extraction
+// ---------------------------------------------------------------------------
+
+const ITER_IDENT_KEYWORDS: &[&str] = &[
+    "if", "else", "match", "for", "while", "loop", "in", "let", "mut", "ref", "move", "as",
+    "return", "break", "continue", "self", "Self", "true", "false", "fn", "impl", "dyn",
+];
+
+/// Words excluded from struct-literal detection when they precede
+/// `Name {` (match scrutinees, `let`/`if let` destructuring patterns,
+/// iterated expressions, item keywords).
+const STRUCT_LIT_EXCLUDE_PREV: &[&str] = &[
+    "match", "in", "impl", "struct", "enum", "union", "trait", "mod", "fn", "dyn", "for", "let",
+];
+
+/// Extract body facts from the interior tokens of a fn body.
+pub fn scan_facts(toks: &[Token]) -> FnBody {
+    let mut b = FnBody::default();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        match &t.tok {
+            Tok::Ident(name) => {
+                // Macro invocation.
+                if toks.get(i + 1).map(|t| t.tok.is_punct("!")).unwrap_or(false)
+                    && toks
+                        .get(i + 2)
+                        .map(|t| {
+                            t.tok.is_punct("(") || t.tok.is_punct("[") || t.tok.is_punct("{")
+                        })
+                        .unwrap_or(false)
+                {
+                    b.macros.push(MacroFact { name: name.clone(), line: t.line });
+                    i += 2;
+                    continue;
+                }
+                // `for` loop: record the iterated expression.  Only
+                // advance past the keyword — the expression tokens are
+                // re-scanned by the main loop so method/call facts
+                // inside it (`.iter()` etc.) are still collected.
+                if name == "for"
+                    && !toks.get(i + 1).map(|t| t.tok.is_punct("<")).unwrap_or(false)
+                {
+                    if let Some(fact) = scan_for_loop(toks, i) {
+                        b.loops.push(fact);
+                        i += 1;
+                        continue;
+                    }
+                }
+                // `let` statements: `_ =` discards and hash-typed locals.
+                if name == "let" {
+                    scan_let(toks, i, &mut b);
+                    i += 1;
+                    continue;
+                }
+                // `as` casts.
+                if name == "as" {
+                    if let Some(Tok::Ident(ty)) = toks.get(i + 1).map(|t| &t.tok) {
+                        b.casts.push(CastFact { to: ty.clone(), line: t.line });
+                    }
+                    i += 1;
+                    continue;
+                }
+                // Path call `a::b::f(…)` (not a method: previous token
+                // isn't `.`; not a declaration: previous isn't `fn`).
+                let prev_dot = i > 0 && toks[i - 1].tok.is_punct(".");
+                let prev_fn = i > 0 && toks[i - 1].tok.is_ident("fn");
+                if !prev_dot && !prev_fn {
+                    let (path, after) = scan_path(toks, i);
+                    if after > i {
+                        let mut j = after;
+                        // Optional turbofish.
+                        if toks.get(j).map(|t| t.tok.is_punct("::")).unwrap_or(false)
+                            && toks.get(j + 1).map(|t| t.tok.is_punct("<")).unwrap_or(false)
+                        {
+                            j = skip_angle(toks, j + 1);
+                        }
+                        if toks.get(j).map(|t| t.tok.is_punct("(")).unwrap_or(false) {
+                            b.calls.push(CallFact { path: path.clone(), line: t.line });
+                        }
+                        // Struct literal `Name { … }`.
+                        if toks.get(j).map(|t| t.tok.is_punct("{")).unwrap_or(false) {
+                            let head = path.rsplit("::").next().unwrap_or("");
+                            let cap = head.chars().next().map(char::is_uppercase).unwrap_or(false);
+                            let prev_excluded = i > 0
+                                && STRUCT_LIT_EXCLUDE_PREV
+                                    .iter()
+                                    .any(|k| toks[i - 1].tok.is_ident(k));
+                            if cap && !prev_excluded {
+                                b.struct_lits
+                                    .push(StructLitFact { name: head.to_string(), line: t.line });
+                            }
+                        }
+                        i = after;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+            Tok::Punct(p) if p == "." => {
+                // Method call `.name(…)` (possibly with turbofish).
+                if let Some(Tok::Ident(m)) = toks.get(i + 1).map(|t| &t.tok) {
+                    let mut j = i + 2;
+                    let mut turbofish = String::new();
+                    if toks.get(j).map(|t| t.tok.is_punct("::")).unwrap_or(false)
+                        && toks.get(j + 1).map(|t| t.tok.is_punct("<")).unwrap_or(false)
+                    {
+                        let close = skip_angle(toks, j + 1);
+                        turbofish = join(&toks[j + 2..close.saturating_sub(1)]);
+                        j = close;
+                    }
+                    if toks.get(j).map(|t| t.tok.is_punct("(")).unwrap_or(false) {
+                        let (base, chain) = postfix_chain(toks, i);
+                        b.methods.push(MethodFact {
+                            name: m.clone(),
+                            base,
+                            chain,
+                            turbofish,
+                            line: toks[i + 1].line,
+                        });
+                    }
+                }
+                i += 1;
+            }
+            Tok::Punct(p) if p == "[" => {
+                // Indexing: `[` directly after a value (ident, `)`, `]`).
+                let is_index = i > 0
+                    && match &toks[i - 1].tok {
+                        Tok::Ident(name) => {
+                            !ITER_IDENT_KEYWORDS.contains(&name.as_str())
+                        }
+                        Tok::Punct(q) => q == ")" || q == "]",
+                        _ => false,
+                    };
+                if is_index {
+                    b.indexes.push(t.line);
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    b
+}
+
+/// Scan a `::`-joined ident path starting at `i`.  Returns the joined
+/// path and the index just past it (== `i` if `toks[i]` is no ident).
+fn scan_path(toks: &[Token], i: usize) -> (String, usize) {
+    let mut parts: Vec<String> = Vec::new();
+    let mut j = i;
+    loop {
+        match toks.get(j).map(|t| &t.tok) {
+            Some(Tok::Ident(s)) => parts.push(s.clone()),
+            _ => break,
+        }
+        if toks.get(j + 1).map(|t| t.tok.is_punct("::")).unwrap_or(false)
+            && matches!(toks.get(j + 2).map(|t| &t.tok), Some(Tok::Ident(_)))
+        {
+            j += 2;
+        } else {
+            j += 1;
+            break;
+        }
+    }
+    (parts.join("::"), j)
+}
+
+/// Skip an angle-bracket group opening at `open_idx`; returns the
+/// index just past the closing `>`.
+fn skip_angle(toks: &[Token], open_idx: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = open_idx;
+    while let Some(t) = toks.get(j) {
+        if t.tok.is_punct("<") {
+            depth += 1;
+        } else if t.tok.is_punct(">") {
+            depth -= 1;
+            if depth == 0 {
+                return j + 1;
+            }
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Walk left from the `.` at `dot` to reconstruct the postfix chain:
+/// returns (base text, method names left of this call).  Each link is
+/// tagged call-vs-field while walking; leading field links (`.phases`
+/// in `self.phases.iter()…`) extend the base, everything from the
+/// first call onward is the method chain.
+fn postfix_chain(toks: &[Token], dot: usize) -> (String, Vec<String>) {
+    let mut links: Vec<(String, bool)> = Vec::new(); // (name, is_call)
+    let mut base: Vec<String> = Vec::new();
+    let mut j = dot; // index of a '.' punct
+    loop {
+        if j == 0 {
+            break;
+        }
+        let prev = j - 1;
+        match &toks[prev].tok {
+            // `…)`: skip the group backwards; the ident before its
+            // opener is a call in the chain.
+            Tok::Punct(p) if p == ")" || p == "]" => {
+                let open = if p == ")" { "(" } else { "[" };
+                let mut depth = 1i32;
+                let mut k = prev;
+                while k > 0 && depth > 0 {
+                    k -= 1;
+                    if toks[k].tok.is_punct(p) {
+                        depth += 1;
+                    } else if toks[k].tok.is_punct(open) {
+                        depth -= 1;
+                    }
+                }
+                if k > 0 {
+                    if let Tok::Ident(name) = &toks[k - 1].tok {
+                        if k >= 2 && toks[k - 2].tok.is_punct(".") {
+                            links.insert(0, (name.clone(), true));
+                            j = k - 2;
+                            continue;
+                        }
+                        // Base is itself a call: collect its full path.
+                        let mut lo = k - 1;
+                        while lo >= 2
+                            && toks[lo - 1].tok.is_punct("::")
+                            && matches!(&toks[lo - 2].tok, Tok::Ident(_))
+                        {
+                            lo -= 2;
+                        }
+                        base = toks[lo..k]
+                            .iter()
+                            .filter_map(|t| t.tok.ident().map(str::to_string))
+                            .collect();
+                    }
+                }
+                break;
+            }
+            Tok::Ident(name) => {
+                // Field access or bare base.
+                if prev >= 1 && toks[prev - 1].tok.is_punct(".") {
+                    links.insert(0, (name.clone(), false));
+                    j = prev - 1;
+                    continue;
+                }
+                base = vec![name.clone()];
+                break;
+            }
+            _ => break,
+        }
+    }
+    let mut i = 0;
+    while i < links.len() && !links[i].1 {
+        base.push(links[i].0.clone());
+        i += 1;
+    }
+    let chain = links[i..].iter().map(|(n, _)| n.clone()).collect();
+    (base.join("."), chain)
+}
+
+/// Scan a `for <pat> in <expr> {` construct starting at the `for`.
+fn scan_for_loop(toks: &[Token], for_idx: usize) -> Option<ForFact> {
+    // Find `in` at paren/bracket depth 0.
+    let mut j = for_idx + 1;
+    let (mut parens, mut brackets) = (0i32, 0i32);
+    loop {
+        let t = toks.get(j)?;
+        match &t.tok {
+            Tok::Ident(s) if s == "in" && parens == 0 && brackets == 0 => break,
+            Tok::Punct(p) => match p.as_str() {
+                "(" => parens += 1,
+                ")" => parens -= 1,
+                "[" => brackets += 1,
+                "]" => brackets -= 1,
+                "{" => return None, // not a for-loop we understand
+                _ => {}
+            },
+            _ => {}
+        }
+        j += 1;
+    }
+    let expr_start = j + 1;
+    // Expression runs to the body `{` at depth 0.
+    let (mut parens, mut brackets, mut angles) = (0i32, 0i32, 0i32);
+    let mut k = expr_start;
+    loop {
+        let t = toks.get(k)?;
+        match &t.tok {
+            Tok::Punct(p) => match p.as_str() {
+                "(" => parens += 1,
+                ")" => parens -= 1,
+                "[" => brackets += 1,
+                "]" => brackets -= 1,
+                "<" => angles += 1,
+                ">" => angles -= 1,
+                "{" if parens == 0 && brackets == 0 && angles <= 0 => break,
+                _ => {}
+            },
+            _ => {}
+        }
+        k += 1;
+    }
+    let expr = &toks[expr_start..k];
+    let idents = expr
+        .iter()
+        .filter_map(|t| t.tok.ident())
+        .filter(|s| !ITER_IDENT_KEYWORDS.contains(s))
+        .map(str::to_string)
+        .collect();
+    Some(ForFact { idents, text: join(expr), line: toks[for_idx].line })
+}
+
+/// Handle a `let` statement starting at `let_idx`: record `_ =`
+/// discards and hash-typed local declarations.
+fn scan_let(toks: &[Token], let_idx: usize, b: &mut FnBody) {
+    let line = toks[let_idx].line;
+    let mut j = let_idx + 1;
+    if toks.get(j).map(|t| t.tok.is_ident("mut")).unwrap_or(false) {
+        j += 1;
+    }
+    // `let _ = …;`
+    if toks.get(j).map(|t| t.tok.is_ident("_")).unwrap_or(false)
+        && toks.get(j + 1).map(|t| t.tok.is_punct("=")).unwrap_or(false)
+    {
+        let mut has_call = false;
+        let mut k = j + 2;
+        let (mut braces, mut parens, mut brackets) = (0i32, 0i32, 0i32);
+        while let Some(t) = toks.get(k) {
+            match &t.tok {
+                Tok::Punct(p) => match p.as_str() {
+                    "(" => {
+                        has_call = has_call
+                            || matches!(toks.get(k - 1).map(|t| &t.tok), Some(Tok::Ident(_)));
+                        parens += 1;
+                    }
+                    ")" => parens -= 1,
+                    "{" => braces += 1,
+                    "}" => braces -= 1,
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    ";" if braces == 0 && parens == 0 && brackets == 0 => break,
+                    _ => {}
+                },
+                _ => {}
+            }
+            k += 1;
+        }
+        b.discards.push(DiscardFact { line, has_call });
+        return;
+    }
+    // `let [mut] name [: Type] [= expr]` — hash-typed local tracking.
+    let name = match toks.get(j).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) if s != "_" => s.clone(),
+        _ => return,
+    };
+    let mut k = j + 1;
+    let mut is_hash = false;
+    if toks.get(k).map(|t| t.tok.is_punct(":")).unwrap_or(false) {
+        // Type annotation up to `=` or `;`.
+        k += 1;
+        let ty_start = k;
+        while let Some(t) = toks.get(k) {
+            match &t.tok {
+                Tok::Punct(p) if p == "<" => {
+                    k = skip_angle(toks, k);
+                    continue;
+                }
+                Tok::Punct(p) if p == "=" || p == ";" => break,
+                _ => {}
+            }
+            k += 1;
+        }
+        is_hash = toks[ty_start..k]
+            .iter()
+            .any(|t| t.tok.is_ident("HashMap") || t.tok.is_ident("HashSet"));
+    }
+    if !is_hash && toks.get(k).map(|t| t.tok.is_punct("=")).unwrap_or(false) {
+        // Initializer up to `;` at depth 0: constructed-hash detection.
+        let mut m = k + 1;
+        let (mut braces, mut parens, mut brackets) = (0i32, 0i32, 0i32);
+        while let Some(t) = toks.get(m) {
+            match &t.tok {
+                Tok::Ident(s) if s == "HashMap" || s == "HashSet" => {
+                    is_hash = true;
+                }
+                Tok::Punct(p) => match p.as_str() {
+                    "(" => parens += 1,
+                    ")" => parens -= 1,
+                    "{" => braces += 1,
+                    "}" => braces -= 1,
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    ";" if braces == 0 && parens == 0 && brackets == 0 => break,
+                    _ => {}
+                },
+                _ => {}
+            }
+            m += 1;
+        }
+    }
+    if is_hash {
+        b.hash_locals.push(name);
+    }
+}
+
+/// Hash-typed fn parameters: parse `name: Type` pairs from a param
+/// list's interior tokens and return names with hash-collection types.
+pub fn hash_params(toks: &[Token]) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut p = Parser { toks, i: 0 };
+    loop {
+        // Skip pattern prefix tokens up to an ident followed by ':'.
+        let (name, _) = match p.cur() {
+            Some(t) => match &t.tok {
+                Tok::Ident(s) => {
+                    let v = (s.clone(), t.line);
+                    p.bump();
+                    v
+                }
+                _ => {
+                    p.bump();
+                    if p.cur().is_none() {
+                        break;
+                    }
+                    continue;
+                }
+            },
+            None => break,
+        };
+        if !p.at_punct(":") {
+            continue;
+        }
+        p.bump();
+        let ty_start = p.i;
+        let (mut parens, mut brackets) = (0i32, 0i32);
+        while let Some(t) = p.cur() {
+            match &t.tok {
+                Tok::Punct(q) => match q.as_str() {
+                    "<" => {
+                        p.skip_balanced("<", ">");
+                        continue;
+                    }
+                    "(" => parens += 1,
+                    ")" => parens -= 1,
+                    "[" => brackets += 1,
+                    "]" => brackets -= 1,
+                    "," if parens == 0 && brackets == 0 => break,
+                    _ => {}
+                },
+                _ => {}
+            }
+            p.bump();
+        }
+        let hash = p.toks[ty_start..p.i]
+            .iter()
+            .any(|t| t.tok.is_ident("HashMap") || t.tok.is_ident("HashSet"));
+        if hash {
+            out.push(name);
+        }
+        if p.at_punct(",") {
+            p.bump();
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn parse(src: &str) -> Vec<Item> {
+        parse_items(&lex(src).tokens)
+    }
+
+    #[test]
+    fn items_with_spans_and_cfg() {
+        let src = "\
+fn alpha() { beta(); }
+
+#[cfg(test)]
+mod tests {
+    fn inner() {}
+}
+
+#[cfg(feature = \"model\")]
+pub struct Gated { pub x: u64 }
+";
+        let items = parse(src);
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[0].name, "alpha");
+        assert_eq!((items[0].line, items[0].end_line), (1, 1));
+        assert_eq!(items[1].kind, ItemKind::Mod);
+        assert_eq!(items[1].cfg, ["test"]);
+        assert_eq!(items[1].children[0].name, "inner");
+        assert_eq!(items[2].cfg, ["feature = \"model\""]);
+        assert_eq!(items[2].fields[0].name, "x");
+    }
+
+    #[test]
+    fn impl_names_and_traits() {
+        let src = "impl<T: Clone> Foo<T> { fn m(&self) {} }\nimpl Clock for Wall { fn now(&self) {} }\n";
+        let items = parse(src);
+        assert_eq!(items[0].name, "Foo");
+        assert_eq!(items[0].children[0].name, "m");
+        assert_eq!(items[1].name, "Wall");
+        assert_eq!(items[1].trait_name.as_deref(), Some("Clock"));
+    }
+
+    #[test]
+    fn body_facts_calls_methods_index_cast() {
+        let src = "fn f(v: Vec<u64>) -> u32 {\n    let x = grin::solve(&v).unwrap();\n    let y = v[0] as u32;\n    std::thread::spawn(|| {});\n    y\n}\n";
+        let items = parse(src);
+        let b = items[0].body.as_ref().expect("body");
+        assert!(b.calls.iter().any(|c| c.path == "grin::solve"));
+        assert!(b.calls.iter().any(|c| c.path == "std::thread::spawn"));
+        assert!(b.methods.iter().any(|m| m.name == "unwrap"));
+        assert_eq!(b.indexes, [3]);
+        assert_eq!(b.casts[0].to, "u32");
+        assert_eq!(b.casts[0].line, 3);
+    }
+
+    #[test]
+    fn for_loops_and_hash_locals() {
+        let src = "fn f() {\n    let mut m = HashMap::new();\n    m.insert(1, 2);\n    for (k, v) in m.iter() { drop((k, v)); }\n    for x in &m { drop(x); }\n}\n";
+        let b = parse(src)[0].body.clone().expect("body");
+        assert_eq!(b.hash_locals, ["m"]);
+        assert_eq!(b.loops.len(), 2);
+        assert!(b.loops[0].text.contains("m . iter"));
+        assert!(b.loops[1].idents.contains(&"m".to_string()));
+        assert!(b.methods.iter().any(|mc| mc.name == "iter" && mc.base == "m"));
+    }
+
+    #[test]
+    fn discards_and_struct_lits() {
+        let src = "fn f() -> R {\n    let _ = fallible();\n    let _ = x;\n    R { a: 1 }\n}\n";
+        let b = parse(src)[0].body.clone().expect("body");
+        assert_eq!(b.discards.len(), 2);
+        assert!(b.discards[0].has_call);
+        assert!(!b.discards[1].has_call);
+        assert_eq!(b.struct_lits[0].name, "R");
+    }
+
+    #[test]
+    fn method_chain_bases() {
+        let src = "fn f(&self) -> f64 {\n    self.phases.iter().map(|r| r.x).sum::<f64>()\n}\n";
+        let b = parse(src)[0].body.clone().expect("body");
+        let sum = b.methods.iter().find(|m| m.name == "sum").expect("sum");
+        assert_eq!(sum.base, "self.phases");
+        assert!(sum.chain.contains(&"iter".to_string()));
+        assert!(sum.chain.contains(&"map".to_string()));
+        assert_eq!(sum.turbofish, "f64");
+    }
+
+    #[test]
+    fn nested_generics_fields() {
+        let src = "struct S {\n    pub inner: Vec<Arc<Mutex<T>>>,\n    flag: bool,\n}\n";
+        let items = parse(src);
+        assert_eq!(items[0].fields.len(), 2);
+        assert!(items[0].fields[0].public);
+        assert!(items[0].fields[0].ty.contains("Vec"));
+        assert!(!items[0].fields[1].public);
+    }
+
+    #[test]
+    fn hash_params_detected() {
+        let src = "fn f(a: &HashMap<String, u64>, b: u32) {}";
+        let toks = lex(src).tokens;
+        // Interior of the param list.
+        let open = toks.iter().position(|t| t.tok.is_punct("(")).expect("open");
+        let close = toks.iter().rposition(|t| t.tok.is_punct(")")).expect("close");
+        assert_eq!(hash_params(&toks[open + 1..close]), ["a"]);
+    }
+}

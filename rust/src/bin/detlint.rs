@@ -1,0 +1,70 @@
+//! `detlint` — AST-level determinism & panic-reachability analysis
+//! over `rust/src/`.
+//!
+//! Usage: `cargo run --bin detlint [-- [<src-root>] [--features a,b]]`
+//!
+//! Runs the three analyses in `hetsched::analysis` (panic
+//! reachability from the hot-path entry points, determinism dataflow,
+//! metric-plumbing consistency) and exits non-zero if any finding
+//! survives suppression.  `--features` mirrors cargo's flag so the
+//! feature-gated cfg (`--features model`) can be analyzed too.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut features: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--features" {
+            match args.next() {
+                Some(v) => features.extend(v.split(',').map(|s| s.trim().to_string())),
+                None => {
+                    eprintln!("detlint: --features needs a value (comma-separated)");
+                    return ExitCode::FAILURE;
+                }
+            }
+        } else if let Some(v) = a.strip_prefix("--features=") {
+            features.extend(v.split(',').map(|s| s.trim().to_string()));
+        } else if root.is_none() {
+            root = Some(PathBuf::from(a));
+        } else {
+            eprintln!("detlint: unexpected argument `{a}`");
+            return ExitCode::FAILURE;
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        // Work from either the workspace root or rust/.
+        for c in ["rust/src", "src"] {
+            let p = PathBuf::from(c);
+            if p.join("lib.rs").is_file() {
+                return p;
+            }
+        }
+        PathBuf::from("rust/src")
+    });
+    match hetsched::analysis::run(&root, &features) {
+        Ok(findings) => {
+            for f in &findings {
+                eprintln!("{f}");
+            }
+            if findings.is_empty() {
+                let feat = if features.is_empty() {
+                    String::new()
+                } else {
+                    format!(" [features: {}]", features.join(","))
+                };
+                println!("detlint: clean ({}){feat}", root.display());
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("detlint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("detlint: cannot walk {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

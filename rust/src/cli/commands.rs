@@ -24,6 +24,8 @@
 //! hetsched classify  --mu "20,15;3,8"
 //! ```
 
+// srclint: allow-file(index-reachable) — table rows are built and indexed in the same function over fixed column sets
+
 use crate::config::schema::{ExperimentSpec, ScenarioSpec};
 use crate::coordinator::{Coordinator, ServeConfig};
 use crate::error::{Error, Result};

@@ -1,7 +1,7 @@
 //! Typed flag parser: `--key value`, `--key=value`, boolean switches and
 //! positionals, with unknown-flag detection at `finish()`.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
@@ -9,7 +9,9 @@ use crate::error::{Error, Result};
 #[derive(Debug, Clone)]
 pub struct Args {
     positionals: Vec<String>,
-    flags: HashMap<String, Vec<String>>,
+    // BTreeMap, not HashMap: flag storage stays iteration-ordered so
+    // nothing downstream can pick up hash-order nondeterminism.
+    flags: BTreeMap<String, Vec<String>>,
     switches: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
 }
@@ -18,7 +20,7 @@ impl Args {
     /// Parse a raw argv tail (without the program name).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let mut positionals = Vec::new();
-        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut switches = Vec::new();
         let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
@@ -35,6 +37,7 @@ impl Args {
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
+                    // srclint: allow(panic-reachable) — peek() just returned Some, so next() cannot fail.
                     let v = it.next().unwrap();
                     flags.entry(rest.to_string()).or_default().push(v);
                 } else {
@@ -102,6 +105,7 @@ impl Args {
     /// (`--bench`, `--exact`, `--nocapture`) so `finish()` accepts them.
     pub fn ignore_harness_flags(&self) {
         for f in ["bench", "exact", "nocapture", "test-threads"] {
+            // srclint: allow(discarded-result) — switch() is called purely for its consume side effect.
             let _ = self.switch(f);
         }
     }

@@ -4,6 +4,8 @@
 //! escapes (rejected explicitly).  Numbers parse as f64 — ample for the
 //! manifest and experiment configs this crate reads.
 
+// srclint: allow-file(index-reachable) — byte indices are cursor positions already bounds-checked by the scanner
+
 use crate::error::{Error, Result};
 
 /// A JSON value.
@@ -145,6 +147,7 @@ fn write_escaped(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\r' => out.push_str("\\r"),
             '\t' => out.push_str("\\t"),
+            // srclint: allow(as-truncation) — char to u32 is value-preserving by definition
             c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
             c => out.push(c),
         }
@@ -263,7 +266,9 @@ impl<'a> Parser<'a> {
                     self.i -= 1;
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("invalid utf8"))?;
+                    // srclint: allow(panic-reachable) — the escape scanner only runs with bytes remaining, so a first char exists
                     let ch = rest.chars().next().unwrap();
+                    // srclint: allow(as-truncation) — char to u32 is value-preserving by definition
                     if (ch as u32) < 0x20 {
                         return Err(self.err("control character in string"));
                     }

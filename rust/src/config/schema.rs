@@ -58,6 +58,7 @@ impl ExperimentSpec {
             .req("populations")?
             .as_arr()?
             .iter()
+            // srclint: allow(as-truncation) — population counts are config-scale; a value beyond u32 is not a meaningful scenario
             .map(|v| Ok(v.as_u64()? as u32))
             .collect::<Result<_>>()?;
 
@@ -199,6 +200,7 @@ impl ScenarioSpec {
         let kind = ScenarioKind::parse(s.req("kind")?.as_str()?)?;
         let mut params = ScenarioParams::default();
         if let Some(v) = s.get("n") {
+            // srclint: allow(as-truncation) — population counts are config-scale; a value beyond u32 is not a meaningful scenario
             params.n = v.as_u64()? as u32;
         }
         if let Some(v) = s.get("phases") {
@@ -230,6 +232,7 @@ impl ScenarioSpec {
             params.churn_limp = v.as_f64()?;
         }
         if let Some(v) = s.get("backup_budget") {
+            // srclint: allow(as-truncation) — backup budgets are config-scale; a value beyond u32 is not a meaningful scenario
             params.backup_budget = v.as_u64()? as u32;
         }
 
@@ -269,6 +272,7 @@ impl ScenarioSpec {
             dynamic.priorities = v
                 .as_arr()?
                 .iter()
+                // srclint: allow(as-truncation) — population counts are config-scale; a value beyond u32 is not a meaningful scenario
                 .map(|x| Ok(x.as_u64()? as u32))
                 .collect::<Result<_>>()?;
         }

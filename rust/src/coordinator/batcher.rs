@@ -18,6 +18,8 @@
 //! order (`Full` vs `Deadline` vs `Drain`) is deterministic and
 //! replayable under load.
 
+// srclint: allow-file(index-reachable) — ring slots are addressed modulo the fixed capacity, always in range
+
 use crate::sync::{Arc, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 

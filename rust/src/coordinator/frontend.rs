@@ -39,6 +39,8 @@
 //! why the equivalence gate in `tests/frontend_concurrency.rs` is
 //! route-only and mixed traffic is reconciled-mode territory.
 
+// srclint: allow-file(index-reachable) — per-class tables are sized k and l at router build; class ids are validated at the API edge
+
 use crate::sync::{Arc, AtomicBool, AtomicI64, AtomicU64, Mutex, MutexGuard, Ordering};
 
 use crate::error::{Error, Result};

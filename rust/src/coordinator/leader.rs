@@ -7,6 +7,8 @@
 //! `nn_small` batches per device, and executes sort requests singly —
 //! all compute through per-device PJRT engines on worker threads.
 
+// srclint: allow-file(index-reachable) — queue and worker vectors are sized at spawn; indices are worker ids the leader handed out
+
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -359,6 +361,7 @@ impl Coordinator {
             },
         )?;
         // Expected in-flight split drives the policy's target solve.
+        // srclint: allow(as-truncation) — inflight is u32-scale and sort_fraction is in [0,1], so the product fits
         let n_sort = ((cfg.inflight as f64 * cfg.sort_fraction).round() as u32)
             .clamp(1, cfg.inflight - 1);
         let populations = vec![n_sort, cfg.inflight - n_sort];
@@ -702,6 +705,7 @@ impl Coordinator {
                                     let t0 = wall_now();
                                     engine.sort_task("sort_small", &sort_in)?;
                                     let service_s = t0.elapsed().as_secs_f64();
+                                    // srclint: allow(discarded-result) — send fails only if the collector hung up at shutdown; dropping the completion is correct then
                                     let _ = done.send(Done {
                                         id,
                                         class,
@@ -716,6 +720,7 @@ impl Coordinator {
                                     let service_s = t0.elapsed().as_secs_f64()
                                         / batch.requests.len().max(1) as f64;
                                     for r in batch.requests {
+                                        // srclint: allow(discarded-result) — send fails only if the collector hung up at shutdown; dropping the completion is correct then
                                         let _ = done.send(Done {
                                             id: r.id,
                                             class: 1,
@@ -1058,6 +1063,7 @@ fn dispatch_router_batch(
     work_txs: &[Sender<Work>],
     stats: &mut FrontStats,
 ) -> Result<()> {
+    // srclint: allow(as-truncation) — batch sizes are capped by max_batch, far below u32::MAX
     let j = handle.route_batch(class, batch.requests.len() as u32)?;
     if class == 0 {
         for p in batch.requests {
@@ -1118,6 +1124,7 @@ impl CreditQueue {
 
     /// Deposit one credit and wake one waiter.
     pub fn push(&self) {
+        // srclint: allow(panic-reachable) — lock poisoning means a worker panicked; propagating is the right failure mode
         let mut s = self.state.lock().expect("credit lock poisoned");
         s.0 += 1;
         self.ready.notify_one();
@@ -1125,6 +1132,7 @@ impl CreditQueue {
 
     /// Close the queue and wake every waiter (shutdown path).
     pub fn close(&self) {
+        // srclint: allow(panic-reachable) — lock poisoning means a worker panicked; propagating is the right failure mode
         let mut s = self.state.lock().expect("credit lock poisoned");
         s.1 = true;
         self.ready.notify_all();
@@ -1133,6 +1141,7 @@ impl CreditQueue {
     /// Withdraw a credit, waiting at most `wait`.  Remaining credits
     /// drain even after close; `Closed` means closed AND empty.
     pub fn pop(&self, wait: Duration) -> CreditPop {
+        // srclint: allow(panic-reachable) — lock poisoning means a worker panicked; propagating is the right failure mode
         let mut s = self.state.lock().expect("credit lock poisoned");
         if s.0 > 0 {
             s.0 -= 1;
@@ -1141,6 +1150,7 @@ impl CreditQueue {
         if s.1 {
             return CreditPop::Closed;
         }
+        // srclint: allow(panic-reachable) — lock poisoning means a worker panicked; propagating is the right failure mode
         let (mut s, _) = self.ready.wait_timeout(s, wait).expect("credit lock poisoned");
         if s.0 > 0 {
             s.0 -= 1;

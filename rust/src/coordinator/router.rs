@@ -21,6 +21,8 @@
 //!   [`crate::coordinator::ShardLeader::install`]: everything in the
 //!   tuple changes together, or not at all).
 
+// srclint: allow-file(index-reachable) — routing matrices are k by l, fixed at build; class ids are range-checked at the API edge
+
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::objective::{Objective, PowerProfile};

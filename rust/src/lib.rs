@@ -38,6 +38,7 @@
 //! parsing), [`report`] (bench tables/series), [`testkit`] (property
 //! testing), [`sim::rng`] (PCG64 + samplers).
 
+pub mod analysis;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

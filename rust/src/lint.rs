@@ -1,8 +1,10 @@
 //! In-repo source lint engine behind the `srclint` bin (`cargo run
 //! --bin srclint`).  Zero dependencies, like every other substrate in
-//! the crate: a small hand-rolled lexer masks comments, strings and
-//! char literals out of each source file, and a handful of textual
-//! rules then enforce repo invariants that `rustc`/clippy cannot see:
+//! the crate: the shared lexer ([`crate::analysis::lexer`]) masks
+//! comments, strings and char literals out of each source file, and a
+//! handful of textual rules then enforce repo invariants that
+//! `rustc`/clippy cannot see (the AST-level analyses live one layer
+//! up, in [`crate::analysis`] behind the `detlint` bin):
 //!
 //! | rule                 | invariant                                              |
 //! |----------------------|--------------------------------------------------------|
@@ -17,6 +19,7 @@
 //! on the same line or the line above; the reason is mandatory (an
 //! allow without a justification is itself a finding).
 
+use crate::analysis::lexer::{allow_at, mask, Masked};
 use std::fs;
 use std::path::{Path, PathBuf};
 
@@ -49,189 +52,6 @@ const ORDERINGS: &[&str] = &[
     "Ordering::AcqRel",
     "Ordering::SeqCst",
 ];
-
-// ---------------------------------------------------------------------------
-// Lexer: mask comments / strings / char literals, keep comment text
-// ---------------------------------------------------------------------------
-
-/// Source split into a masked code view (comments, string and char
-/// literal *contents* blanked to spaces, line structure preserved) and
-/// the comment text per line.
-struct Masked {
-    code: Vec<String>,
-    comments: Vec<String>,
-}
-
-fn is_ident(c: u8) -> bool {
-    c.is_ascii_alphanumeric() || c == b'_'
-}
-
-fn mask(src: &str) -> Masked {
-    let b = src.as_bytes();
-    let n = b.len();
-    let mut code: Vec<String> = vec![String::new()];
-    let mut comments: Vec<String> = vec![String::new()];
-    let push = |v: &mut Vec<String>, c: char| v.last_mut().expect("never empty").push(c);
-    let newline = |code: &mut Vec<String>, comments: &mut Vec<String>| {
-        code.push(String::new());
-        comments.push(String::new());
-    };
-    let mut i = 0usize;
-    while i < n {
-        let c = b[i];
-        if c == b'\n' {
-            newline(&mut code, &mut comments);
-            i += 1;
-            continue;
-        }
-        // Line comment (also doc comments).
-        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
-            while i < n && b[i] != b'\n' {
-                push(&mut comments, b[i] as char);
-                push(&mut code, ' ');
-                i += 1;
-            }
-            continue;
-        }
-        // Block comment, nested.
-        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
-            let mut depth = 1usize;
-            push(&mut comments, '/');
-            push(&mut comments, '*');
-            push(&mut code, ' ');
-            push(&mut code, ' ');
-            i += 2;
-            while i < n && depth > 0 {
-                if b[i] == b'\n' {
-                    newline(&mut code, &mut comments);
-                    i += 1;
-                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
-                    depth += 1;
-                    push(&mut comments, '/');
-                    push(&mut comments, '*');
-                    push(&mut code, ' ');
-                    push(&mut code, ' ');
-                    i += 2;
-                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
-                    depth -= 1;
-                    push(&mut comments, '*');
-                    push(&mut comments, '/');
-                    push(&mut code, ' ');
-                    push(&mut code, ' ');
-                    i += 2;
-                } else {
-                    push(&mut comments, b[i] as char);
-                    push(&mut code, ' ');
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // Raw string r"..." / r#"..."# / br#"..."# (not part of an identifier).
-        let prev_ident = i > 0 && is_ident(b[i - 1]);
-        if !prev_ident && (c == b'r' || (c == b'b' && i + 1 < n && b[i + 1] == b'r')) {
-            let mut j = i + if c == b'b' { 2 } else { 1 };
-            let mut hashes = 0usize;
-            while j < n && b[j] == b'#' {
-                hashes += 1;
-                j += 1;
-            }
-            if j < n && b[j] == b'"' {
-                // Emit the opening tokens as spaces.
-                while i <= j {
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                }
-                // Scan for closing quote + hashes.
-                'raw: while i < n {
-                    if b[i] == b'\n' {
-                        newline(&mut code, &mut comments);
-                        i += 1;
-                        continue;
-                    }
-                    if b[i] == b'"' {
-                        let mut k = 0usize;
-                        while k < hashes && i + 1 + k < n && b[i + 1 + k] == b'#' {
-                            k += 1;
-                        }
-                        if k == hashes {
-                            for _ in 0..=hashes {
-                                push(&mut code, ' ');
-                                push(&mut comments, ' ');
-                                i += 1;
-                            }
-                            break 'raw;
-                        }
-                    }
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                }
-                continue;
-            }
-        }
-        // Ordinary string.
-        if c == b'"' {
-            push(&mut code, ' ');
-            push(&mut comments, ' ');
-            i += 1;
-            while i < n {
-                if b[i] == b'\n' {
-                    newline(&mut code, &mut comments);
-                    i += 1;
-                } else if b[i] == b'\\' && i + 1 < n {
-                    push(&mut code, ' ');
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    push(&mut comments, ' ');
-                    i += 2;
-                } else if b[i] == b'"' {
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                    break;
-                } else {
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                }
-            }
-            continue;
-        }
-        // Char literal vs lifetime: only 'x' or '\...' are literals.
-        if c == b'\'' {
-            let is_escape = i + 1 < n && b[i + 1] == b'\\';
-            let is_short = i + 2 < n && b[i + 2] == b'\'' && b[i + 1] != b'\\';
-            if is_escape || is_short {
-                push(&mut code, ' ');
-                push(&mut comments, ' ');
-                i += 1;
-                while i < n && b[i] != b'\'' {
-                    if b[i] == b'\\' {
-                        i += 1;
-                        push(&mut code, ' ');
-                        push(&mut comments, ' ');
-                    }
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                }
-                if i < n {
-                    push(&mut code, ' ');
-                    push(&mut comments, ' ');
-                    i += 1;
-                }
-                continue;
-            }
-            // Lifetime: fall through as plain code.
-        }
-        push(&mut code, c as char);
-        push(&mut comments, ' ');
-        i += 1;
-    }
-    Masked { code, comments }
-}
 
 // ---------------------------------------------------------------------------
 // Region detection (test modules, Clock impls)
@@ -288,26 +108,6 @@ fn clock_impl_regions(code: &[String]) -> Vec<bool> {
         }
     }
     exempt
-}
-
-// ---------------------------------------------------------------------------
-// Suppressions
-// ---------------------------------------------------------------------------
-
-/// Returns `Some(justified)` if line `li` (0-based) or the line above
-/// carries `srclint: allow(<rule>)`; `justified` is false when the
-/// allow has no reason text after the closing paren.
-fn allow_at(comments: &[String], li: usize, rule: &str) -> Option<bool> {
-    let needle = format!("srclint: allow({rule})");
-    for cand in [Some(li), li.checked_sub(1)].into_iter().flatten() {
-        if let Some(pos) = comments[cand].find(&needle) {
-            let after = &comments[cand][pos + needle.len()..];
-            let reason: String =
-                after.chars().filter(|c| c.is_alphanumeric() || *c == ' ').collect();
-            return Some(reason.trim().len() >= 8);
-        }
-    }
-    None
 }
 
 /// True if an `ordering:` rationale comment covers line `li`: on the

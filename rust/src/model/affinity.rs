@@ -6,6 +6,8 @@
 //! `μ21 < μ22`; the *relative ordering* of the four entries — never their
 //! exact values — selects the optimal policy (Lemma 4).
 
+// srclint: allow-file(index-reachable) — dense k by l parameter matrices validated by the platform check at construction
+
 use crate::error::{Error, Result};
 
 /// Rate assigned to every cell of a dead device's column when masking it

@@ -20,6 +20,8 @@
 //! so a completion of (i, j) moves the system to the state with that
 //! task at policy(i, S′).
 
+// srclint: allow-file(index-reachable) — state vectors are sized by the enumerated state count; indices are enumerated states
+
 use super::affinity::AffinityMatrix;
 use super::state::StateMatrix;
 use super::throughput::x_of_state;

@@ -4,6 +4,8 @@
 //! (Eq. 20), EDP (Eq. 21), the Scenario-1/2 closed forms (Eqs. 22–23) and
 //! the Lemma-7 α-bounds.
 
+// srclint: allow-file(index-reachable) — dense k by l parameter matrices validated by the platform check at construction
+
 use super::affinity::AffinityMatrix;
 use super::state::StateMatrix;
 use super::throughput::x_of_state;

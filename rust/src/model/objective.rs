@@ -28,6 +28,8 @@
 //! single most efficient cell minimizes Eq. 19 outright at a huge
 //! throughput cost).
 
+// srclint: allow-file(index-reachable) — dense k by l parameter matrices validated by the platform check at construction
+
 use super::affinity::AffinityMatrix;
 use super::energy::PowerScenario;
 use super::state::StateMatrix;

@@ -1,6 +1,8 @@
 //! System state matrix N (Def. 5) — how many i-type tasks sit on each
 //! j-type processor — with the row-sum invariant of Eq. 3 / Eq. 29.
 
+// srclint: allow-file(index-reachable) — occupancy grids are k by l by construction
+
 use crate::error::{Error, Result};
 
 /// Dense k×l non-negative integer matrix; `n[i][j]` = number of i-type

@@ -10,6 +10,8 @@
 //! matching the Pallas `throughput_eval` kernel and the paper's
 //! work-conserving reading of Eq. 28.
 
+// srclint: allow-file(index-reachable) — dense k by l rate matrices validated at platform construction
+
 use super::affinity::{AffinityMatrix, Regime};
 use super::state::StateMatrix;
 use crate::error::{Error, Result};

@@ -5,6 +5,8 @@
 //! the policy under test to some device's FCFS queue.  Throughput is
 //! tasks/second of wall-clock over the post-warm-up window.
 
+// srclint: allow-file(index-reachable) — mu and kind tables are sized by the calibrated device set
+
 use std::sync::mpsc::channel;
 use std::time::Instant;
 
@@ -208,6 +210,7 @@ pub mod cases {
         }
         let rep = |i: usize, j: usize| -> u32 {
             let ideal = c / (mu_target[i][j] * cal.secs_of(kinds[i]));
+            // srclint: allow(as-truncation) — the result is clamped to [1, cap] immediately after
             (ideal.round() as u32).clamp(1, cap)
         };
         [vec![rep(0, 0), rep(1, 0)], vec![rep(0, 1), rep(1, 1)]]

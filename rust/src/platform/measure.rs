@@ -8,6 +8,8 @@
 //! (kernel kind + repetition count).  The measured matrix is what CAB /
 //! GrIn consume — the paper stresses only its *ordering* matters.
 
+// srclint: allow-file(index-reachable) — measurement buffers are preallocated to the sample count
+
 use std::time::Instant;
 
 use crate::error::Result;

@@ -50,8 +50,10 @@ impl Policy for OptPolicy {
     fn dispatch(&mut self, ttype: usize, view: &SystemView<'_>, _rng: &mut Rng) -> usize {
         self.steering
             .as_ref()
+            // srclint: allow(panic-reachable) — dispatch is specified to follow prepare(); violating that is a caller bug worth a loud stop
             .expect("OptPolicy::prepare must be called before dispatch")
             .dispatch(ttype, view)
+            // srclint: allow(panic-reachable) — steering spans the full fleet, so some device always matches
             .expect("steering over the full fleet always yields a device")
     }
 }

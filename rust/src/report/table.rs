@@ -1,5 +1,7 @@
 //! Aligned ASCII tables and figure-series blocks.
 
+// srclint: allow-file(index-reachable) — column widths are computed over the same rows being rendered
+
 /// A printable table.
 #[derive(Debug, Clone)]
 pub struct Table {

@@ -16,6 +16,8 @@
 //! Executables/engines are per worker thread in either mode
 //! (`xla::PjRtLoadedExecutable` is not `Sync`; engines share nothing).
 
+// srclint: allow-file(index-reachable) — kernel buffer shapes are fixed by the AOT artifact and checked at load
+
 use crate::error::{Error, Result};
 
 use super::artifacts::{ArtifactDir, EntryMeta};
@@ -284,6 +286,7 @@ impl Engine {
         }
         self.compiled(name)?;
         let cache = self.cache.borrow();
+        // srclint: allow(panic-reachable) — compiled(name) on the previous line just populated this cache entry
         let exe = cache.get(name).expect("just compiled");
         let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
         let tuple = result.to_tuple()?;
@@ -323,7 +326,9 @@ impl Engine {
     pub fn sort_task(&self, entry: &str, rows: &[f32]) -> Result<SortTaskResult> {
         let outs = self.run_f32(entry, &[rows])?;
         let mut it = outs.into_iter();
+        // srclint: allow(panic-reachable) — kernel output arity is fixed by the AOT artifact and checked at load
         let rows = it.next().expect("arity checked");
+        // srclint: allow(panic-reachable) — kernel output arity is fixed by the AOT artifact and checked at load
         let checksum = it.next().expect("arity checked")[0];
         Ok(SortTaskResult { rows, checksum })
     }
@@ -336,6 +341,7 @@ impl Engine {
     /// manifest is enforced.
     pub fn throughput_batch(&self, mu_padded: &[f32], batch: &[f32]) -> Result<Vec<f32>> {
         let outs = self.run_f32("throughput_eval", &[mu_padded, batch])?;
+        // srclint: allow(panic-reachable) — kernel output arity is fixed by the AOT artifact and checked at load
         Ok(outs.into_iter().next().expect("arity checked"))
     }
 }

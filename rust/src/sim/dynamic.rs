@@ -25,6 +25,8 @@
 //! the rate they started with (a real frequency switch drains in-flight
 //! work the same way).
 
+// srclint: allow-file(index-reachable) — cell grids, phase tables and per-class vectors are all sized at scenario build
+
 use crate::coordinator::global::ShardedControl;
 use crate::coordinator::stats::RateEstimator;
 use crate::error::{Error, Result};

@@ -18,6 +18,8 @@
 //! replication performs no net heap allocation (`tests/arena_alloc.rs`
 //! gates this with a counting allocator).
 
+// srclint: allow-file(index-reachable) — event and cell indices come from the validated platform dimensions
+
 use crate::error::{Error, Result};
 use crate::model::affinity::AffinityMatrix;
 use crate::model::energy::{EnergyModel, PowerScenario};

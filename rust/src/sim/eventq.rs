@@ -13,6 +13,8 @@
 //! engine event-for-event identical to the old one
 //! (`tests/hotpath_equiv.rs`).
 
+// srclint: allow-file(index-reachable) — heap parent and child arithmetic stays within the backing vec by construction
+
 /// Sentinel for "processor not in the heap" (idle processor).
 const ABSENT: usize = usize::MAX;
 

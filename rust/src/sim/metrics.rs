@@ -11,6 +11,8 @@
 //! soft-deadline miss counts, off the hot path — and allocation-free —
 //! unless a run configures deadlines.
 
+// srclint: allow-file(index-reachable) — the k by l cell grid is sized at Metrics::new; class ids are validated upstream
+
 use crate::coordinator::stats::LatencyHistogram;
 
 /// Online accumulator for one simulation run.

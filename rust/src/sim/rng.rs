@@ -44,6 +44,7 @@ impl Rng {
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
         let xored = ((self.state >> 64) ^ self.state) as u64;
+        // srclint: allow(as-truncation) — PCG rotate amount uses only the top 6 bits of state
         let rot = (self.state >> 122) as u32;
         xored.rotate_right(rot)
     }

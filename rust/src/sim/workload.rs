@@ -27,6 +27,7 @@ pub fn eta_grid() -> [f64; 9] {
 /// Split N programs into (N1, N2) with N1 = round(η·N), clamped so both
 /// types stay populated (the paper's η ∈ [0.1, 0.9] guarantees this).
 pub fn split_populations(n: u32, eta: f64) -> (u32, u32) {
+    // srclint: allow(as-truncation) — the rounded product is clamped to [1, n-1] on the same line
     let n1 = ((n as f64 * eta).round() as u32).clamp(1, n - 1);
     (n1, n - n1)
 }
@@ -113,6 +114,7 @@ pub fn random_mu(rng: &mut Rng, k: usize, l: usize, lo: f64, hi: f64) -> Result<
 
 /// Random populations: each N_i uniform in [1, max_per_type].
 pub fn random_populations(rng: &mut Rng, k: usize, max_per_type: u32) -> Vec<u32> {
+    // srclint: allow(as-truncation) — below(max as u64) is strictly less than a u32 argument
     (0..k).map(|_| 1 + rng.below(max_per_type as u64) as u32).collect()
 }
 
@@ -299,6 +301,7 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
                 .map(|i| {
                     if i % 3 == 2 {
                         // Surge: more programs, heavy-tailed sizes.
+                        // srclint: allow(as-truncation) — surge populations are config-scale, far below u32 range
                         let n = ((p.n as f64 * p.burst_factor).round() as u32).max(2);
                         let (n1, n2) = split_populations(n, 0.5);
                         Phase::new(vec![n1, n2], p.warmup, p.completions)
@@ -390,8 +393,10 @@ pub fn scenario_phases(kind: ScenarioKind, p: &ScenarioParams) -> Result<Vec<Pha
             // cannot overflow the population arithmetic.
             (0..p.phases)
                 .map(|i| {
+                    // srclint: allow(as-truncation) — the phase index is a small loop counter
                     let n = (p.n as f64 * p.burst_factor.powi(i as i32))
                         .min(10_000_000.0)
+                        // srclint: allow(as-truncation) — capped at 1e7 on the previous line before rounding
                         .round() as u32;
                     let (n1, n2) = split_populations(n.max(2), 0.5);
                     Phase::new(vec![n1, n2], p.warmup, p.completions)

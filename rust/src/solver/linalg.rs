@@ -4,6 +4,8 @@
 //! partial pivoting, and linear solves — sizes here are tiny (the KKT
 //! system of a k·l-variable QP), so simplicity beats blocking.
 
+// srclint: allow-file(index-reachable) — dense matrix kernels; dimensions agree by the caller contract
+
 use crate::error::{Error, Result};
 
 /// Dense row-major f64 matrix.

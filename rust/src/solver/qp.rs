@@ -16,6 +16,8 @@
 //! This is the QP engine inside [`super::slsqp`]; problem sizes are k·l
 //! variables (≤ a few hundred), so dense LU is the right tool.
 
+// srclint: allow-file(index-reachable) — KKT system blocks are sized n plus m by construction
+
 use crate::error::{Error, Result};
 
 use super::linalg::{dot, Mat};
@@ -155,6 +157,7 @@ pub fn solve(qp: &Qp<'_>, d0: &[f64]) -> Result<QpSolution> {
 
 /// Objective value ½dᵀBd + gᵀd (for tests and merit functions).
 pub fn objective(b: &Mat, g: &[f64], d: &[f64]) -> f64 {
+    // srclint: allow(panic-reachable) — B is square in d's dimension by the QP construction
     0.5 * dot(&b.matvec(d).expect("dim"), d) + dot(g, d)
 }
 

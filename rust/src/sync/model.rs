@@ -39,6 +39,8 @@
 //! [`Checker::run`] (so the ordinary test suite still passes when the
 //! crate is compiled with the feature enabled).
 
+// srclint: allow-file(index-reachable) — model-checker state vectors are indexed by thread ids it allocated
+
 use std::any::Any;
 use std::cell::RefCell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -539,6 +541,7 @@ impl Checker {
         f: Arc<dyn Fn() + Send + Sync>,
     ) -> (Option<String>, Vec<(usize, usize)>) {
         // ordering: generation counter only needs uniqueness, not ordering.
+        // srclint: allow(as-truncation) — the value is masked to 32 bits on the same line
         let gen = (EXEC_GEN.fetch_add(1, AtomOrd::Relaxed) & 0xffff_ffff) as u32;
         let sched = Arc::new(Sched {
             gen,
@@ -587,6 +590,7 @@ impl Checker {
             };
             match h {
                 Some(h) => {
+                    // srclint: allow(discarded-result) — a panicked schedule thread already recorded its violation; join's Err adds nothing
                     let _ = h.join();
                 }
                 None => break,
@@ -605,6 +609,7 @@ where
 {
     let report = Checker::default().run(f);
     if let Some(v) = report.violation {
+        // srclint: allow(panic-reachable) — aborting with the violation trace is the checker's reporting mechanism
         panic!(
             "model check failed after {} executions\n  schedule: {:?}\n  {}",
             report.executions, v.schedule, v.message
@@ -620,6 +625,7 @@ where
     F: FnOnce() -> T + Send + 'static,
     T: Send + 'static,
 {
+    // srclint: allow(panic-reachable) — model::spawn outside Checker::run is a test-harness misuse worth a loud stop
     let ctx = current_ctx().expect("model::spawn called outside a Checker::run");
     let sched = ctx.sched;
     let tid = {
@@ -662,6 +668,7 @@ pub struct JoinHandle<T> {
 
 impl<T> JoinHandle<T> {
     pub fn join(self) -> std::thread::Result<T> {
+        // srclint: allow(panic-reachable) — join outside Checker::run is a test-harness misuse worth a loud stop
         let ctx = current_ctx().expect("JoinHandle::join called outside a Checker::run");
         ctx.sched.join_wait(ctx.tid, self.target);
         let mut g = match self.slot.lock() {
@@ -773,6 +780,7 @@ fn model_id(cell: &StdAtomicU64, ctx: &Ctx, register: impl FnOnce(&Sched) -> usi
     // ordering: id cell is only touched by the token-holding thread,
     // so Relaxed is already serialized.
     let packed = cell.load(AtomOrd::Relaxed);
+    // srclint: allow(as-truncation) — upper-half extraction of a packed 32/32 word
     if packed != u64::MAX && (packed >> 32) as u32 == ctx.sched.gen {
         return (packed & 0xffff_ffff) as usize;
     }
@@ -846,12 +854,14 @@ pub struct MutexGuard<'a, T: ?Sized> {
 impl<T: ?Sized> std::ops::Deref for MutexGuard<'_, T> {
     type Target = T;
     fn deref(&self) -> &T {
+        // srclint: allow(panic-reachable) — guards are disarmed only on drop, so deref during life always has the value
         self.real.as_deref().expect("model MutexGuard used after disarm")
     }
 }
 
 impl<T: ?Sized> std::ops::DerefMut for MutexGuard<'_, T> {
     fn deref_mut(&mut self) -> &mut T {
+        // srclint: allow(panic-reachable) — guards are disarmed only on drop, so deref during life always has the value
         self.real.as_deref_mut().expect("model MutexGuard used after disarm")
     }
 }
@@ -939,6 +949,7 @@ impl Condvar {
     ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
         match current_ctx() {
             None => {
+                // srclint: allow(panic-reachable) — the guard is live here: disarm happens exactly once, below this take
                 let real = guard.real.take().expect("model MutexGuard used after disarm");
                 match dur {
                     Some(d) => match self.real.wait_timeout(real, d) {
@@ -969,6 +980,7 @@ impl Condvar {
             Some(ctx) => {
                 let cvid = model_id(&self.id, &ctx, |s| s.register_condvar());
                 let lock = guard.lock;
+                // srclint: allow(panic-reachable) — the guard is live here: disarm happens exactly once, below this take
                 let (_, tid, mid) = guard.model.take().expect(
                     "model Condvar::wait on a guard locked outside the model run",
                 );

@@ -23,6 +23,7 @@ impl<'a> Gen<'a> {
 
     /// Uniform u32 in [lo, hi].
     pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        // srclint: allow(as-truncation) — below(n) is strictly less than n, which was widened from u32
         lo + self.rng.below((hi - lo + 1) as u64) as u32
     }
 

@@ -1,0 +1,189 @@
+//! Golden tests for the detlint parser (`hetsched::analysis::parse`):
+//! feed small, syntactically tricky Rust sources through the shared
+//! lexer + item parser and assert exact names, spans, and extracted
+//! facts.  These are the constructs that break naive token scanners —
+//! raw strings, nested generics, closures, lifetimes, cfg-gated items.
+
+use hetsched::analysis::lexer::{lex, Tok};
+use hetsched::analysis::parse::{parse_items, Item, ItemKind};
+
+fn parse(src: &str) -> Vec<Item> {
+    parse_items(&lex(src).tokens)
+}
+
+fn find<'a>(items: &'a [Item], name: &str) -> &'a Item {
+    items
+        .iter()
+        .find(|it| it.name == name)
+        .unwrap_or_else(|| panic!("no item named `{name}` in {items:?}"))
+}
+
+#[test]
+fn raw_strings_do_not_confuse_item_boundaries() {
+    // The raw string contains braces, a fake `fn`, and an unbalanced
+    // quote — none of which may affect item structure or spans.
+    let src = r####"
+pub fn before() {
+    let s = r#"fn fake() { " unbalanced } }"#;
+    let t = "plain \" escaped";
+    s.len() + t.len()
+}
+
+pub fn after() {}
+"####;
+    let items = parse(src);
+    assert_eq!(items.len(), 2, "{items:?}");
+    let before = find(&items, "before");
+    assert_eq!((before.line, before.end_line), (2, 6));
+    let after = find(&items, "after");
+    assert_eq!(after.line, 8);
+    // The raw-string *contents* are still available to fact scans
+    // (the plumbing check needs string literals), quotes stripped.
+    let strs: Vec<String> = lex(src)
+        .tokens
+        .iter()
+        .filter_map(|t| match &t.tok {
+            Tok::Str(s) => Some(s.clone()),
+            _ => None,
+        })
+        .collect();
+    assert!(strs.iter().any(|s| s.contains("fn fake()")), "{strs:?}");
+}
+
+#[test]
+fn nested_generics_parse_without_shift_splitting() {
+    // `Vec<Arc<Mutex<T>>>` must not lex as `>>` — the field type and
+    // the following field must both round-trip exactly.
+    let src = "\
+pub struct Holder {
+    pub slots: Vec<Arc<Mutex<Vec<u64>>>>,
+    pub name: String,
+}
+";
+    let items = parse(src);
+    let holder = find(&items, "Holder");
+    assert_eq!(holder.kind, ItemKind::Struct);
+    assert_eq!(holder.fields.len(), 2, "{:?}", holder.fields);
+    let slots = &holder.fields[0];
+    assert_eq!(slots.name, "slots");
+    assert_eq!(slots.line, 2);
+    assert!(slots.public);
+    assert_eq!(slots.ty.replace(' ', ""), "Vec<Arc<Mutex<Vec<u64>>>>");
+    assert_eq!(holder.fields[1].name, "name");
+    assert_eq!(holder.fields[1].line, 3);
+}
+
+#[test]
+fn closures_and_lifetimes_stay_inside_their_fn() {
+    let src = "\
+pub fn outer<'a>(xs: &'a [u64]) -> u64 {
+    let f = |x: &u64| -> u64 { x.wrapping_add(1) };
+    xs.iter().map(|x| f(x)).sum::<u64>()
+}
+
+pub struct After<'a> {
+    pub r: &'a str,
+}
+";
+    let items = parse(src);
+    // The closure bodies must not open new items or shift spans.
+    assert_eq!(items.len(), 2, "{items:?}");
+    let outer = find(&items, "outer");
+    assert_eq!(outer.kind, ItemKind::Fn);
+    assert_eq!((outer.line, outer.end_line), (1, 4));
+    let body = outer.body.as_ref().expect("fn body");
+    // Method facts from inside the chain survive the closure args.
+    assert!(body.methods.iter().any(|m| m.name == "sum" && m.turbofish == "u64"));
+    assert!(body.methods.iter().any(|m| m.name == "map"));
+    let after = find(&items, "After");
+    assert_eq!(after.kind, ItemKind::Struct);
+    assert_eq!(after.line, 6);
+    assert_eq!(after.fields[0].name, "r");
+}
+
+#[test]
+fn cfg_gated_items_carry_their_predicate() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    pub fn helper() {}
+}
+
+#[cfg(feature = \"model\")]
+pub fn model_only() {}
+
+#[cfg(not(feature = \"model\"))]
+pub fn default_only() {}
+
+pub fn always() {}
+";
+    let items = parse(src);
+    assert_eq!(items.len(), 4, "{items:?}");
+    let tests = find(&items, "tests");
+    assert_eq!(tests.kind, ItemKind::Mod);
+    assert_eq!(tests.cfg, vec!["test".to_string()]);
+    assert_eq!(tests.children.len(), 1);
+    assert_eq!(tests.children[0].name, "helper");
+    let model = find(&items, "model_only");
+    assert_eq!(model.cfg, vec!["feature = \"model\"".to_string()]);
+    let not_model = find(&items, "default_only");
+    assert_eq!(not_model.cfg, vec!["not ( feature = \"model\" )".to_string()]);
+    assert!(find(&items, "always").cfg.is_empty());
+}
+
+#[test]
+fn impl_blocks_round_trip_names_and_traits() {
+    let src = "\
+impl Engine {
+    pub fn run(&mut self) -> u64 { self.step() }
+    fn step(&mut self) -> u64 { 0 }
+}
+
+impl Iterator for Queue {
+    type Item = u64;
+    fn next(&mut self) -> Option<u64> { None }
+}
+";
+    let items = parse(src);
+    let engine = &items[0];
+    assert_eq!(engine.kind, ItemKind::Impl);
+    assert_eq!(engine.name, "Engine");
+    assert_eq!(engine.trait_name, None);
+    let names: Vec<&str> =
+        engine.children.iter().map(|c| c.name.as_str()).collect();
+    assert_eq!(names, ["run", "step"]);
+    assert_eq!(engine.children[0].line, 2);
+    let iter = &items[1];
+    assert_eq!(iter.name, "Queue");
+    assert_eq!(iter.trait_name.as_deref(), Some("Iterator"));
+    assert!(iter.children.iter().any(|c| c.name == "next"));
+}
+
+#[test]
+fn body_facts_have_exact_spans() {
+    let src = "\
+pub fn work(m: &std::collections::HashMap<u64, f64>, v: &[f64]) -> f64 {
+    let first = v[0];
+    let small = first as u32;
+    for (k, x) in m.iter() {
+        log::note(*k);
+    }
+    first + small as f64
+}
+";
+    let items = parse(src);
+    let body = find(&items, "work").body.as_ref().expect("body");
+    assert_eq!(body.indexes, vec![2], "{:?}", body.indexes);
+    assert_eq!(body.casts.len(), 2);
+    assert_eq!((body.casts[0].to.as_str(), body.casts[0].line), ("u32", 3));
+    let it = body
+        .methods
+        .iter()
+        .find(|m| m.name == "iter")
+        .expect("iter fact");
+    assert_eq!((it.base.as_str(), it.line), ("m", 4));
+    assert_eq!(body.loops.len(), 1);
+    assert_eq!(body.loops[0].line, 4);
+    // The HashMap-typed parameter is recognized as a hash local.
+    assert!(body.hash_locals.contains(&"m".to_string()), "{:?}", body.hash_locals);
+}
